@@ -1,0 +1,139 @@
+//! Fig. 4 regenerator: steady-state total cost of SGP vs SPOO / LCOR / LPR
+//! on every Table II scenario (plus the SW-linear and SW-queue variants),
+//! normalized per scenario to the worst algorithm — the paper's bar chart
+//! in text form.
+//!
+//! Shape checks (paper claims, not absolute values):
+//!   * SGP produces the lowest cost in every scenario;
+//!   * the SGP-vs-LPR margin is large on congestible (queue) networks —
+//!     the paper reports "as much as 50%";
+//!   * LCOR is weakest where routing cannot help (Balanced-tree).
+//!
+//! Run: `cargo bench --bench fig4`   (CECFLOW_BENCH_FAST=1 skips SW)
+
+use cecflow::coordinator::report::{
+    figure_json, render_normalized_bars, write_csv, write_json, Series,
+};
+use cecflow::coordinator::{run_algorithm, Algorithm, RunConfig, ScenarioSpec};
+use cecflow::util::table::fnum;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("CECFLOW_BENCH_FAST").is_ok();
+    let seed = 2026;
+    let algos = [
+        Algorithm::Sgp,
+        Algorithm::Spoo,
+        Algorithm::Lcor,
+        Algorithm::Lpr,
+    ];
+
+    let mut specs: Vec<ScenarioSpec> = ScenarioSpec::table2()
+        .into_iter()
+        .filter(|s| !(fast && s.name == "sw"))
+        .collect();
+    // Fig. 4 shows SW twice: linear and queue cost families.
+    if let Some(sw) = ScenarioSpec::by_name("sw") {
+        if !fast {
+            specs.pop(); // replace plain "sw" with the two labelled variants
+            specs.push(sw.clone().sw_linear());
+            let mut swq = sw;
+            swq.name = "sw-queue";
+            specs.push(swq);
+        }
+    }
+
+    let cfg = RunConfig {
+        max_iters: 60,
+        tol: 1e-6,
+        patience: 4,
+    };
+
+    let mut scenario_names = Vec::new();
+    let mut costs: Vec<Vec<f64>> = Vec::new();
+    let mut rows = Vec::new();
+
+    for spec in &specs {
+        let sc = spec.build(seed);
+        eprintln!("[fig4] {} (|V|={} |S|={}) ...", spec.name, sc.net.n(), sc.net.s());
+        let mut per_algo = Vec::new();
+        for &algo in &algos {
+            let out = run_algorithm(&sc.net, algo, &cfg)?;
+            rows.push(vec![
+                spec.name.to_string(),
+                out.algorithm.clone(),
+                fnum(out.final_cost),
+                out.iterations.to_string(),
+                format!("{:.2}", out.wall_seconds),
+            ]);
+            per_algo.push(out.final_cost);
+        }
+        scenario_names.push(spec.name.to_string());
+        costs.push(per_algo);
+    }
+
+    let algo_names: Vec<String> = algos.iter().map(|a| a.name().to_string()).collect();
+    println!(
+        "{}",
+        render_normalized_bars(&scenario_names, &algo_names, &costs)
+    );
+
+    // ---- machine-readable outputs ----
+    write_csv(
+        "fig4.csv",
+        &["scenario", "algorithm", "total_cost", "iterations", "seconds"],
+        &rows,
+    )?;
+    let series: Vec<Series> = algos
+        .iter()
+        .enumerate()
+        .map(|(ai, a)| Series {
+            label: a.name().to_string(),
+            x: (0..costs.len()).map(|i| i as f64).collect(),
+            y: costs.iter().map(|c| c[ai]).collect(),
+        })
+        .collect();
+    write_json("fig4.json", &figure_json("fig4-normalized-cost", &series))?;
+    cecflow::coordinator::report::write_bars_svg(
+        "fig4.svg",
+        "Fig. 4 — normalized total cost (lower is better)",
+        &scenario_names,
+        &algo_names,
+        &costs,
+    )?;
+
+    // ---- shape assertions (paper claims) ----
+    let mut ok = true;
+    for (si, name) in scenario_names.iter().enumerate() {
+        let sgp = costs[si][0];
+        for (ai, aname) in algo_names.iter().enumerate().skip(1) {
+            if sgp > costs[si][ai] * 1.001 {
+                println!("SHAPE VIOLATION: {name}: sgp {sgp} > {aname} {}", costs[si][ai]);
+                ok = false;
+            }
+        }
+    }
+    // congested-network margin vs LPR: >= 30% somewhere (paper: up to 50%)
+    let best_margin = scenario_names
+        .iter()
+        .enumerate()
+        .map(|(si, _)| {
+            let sgp = costs[si][0];
+            let lpr = costs[si][3];
+            if lpr.is_finite() {
+                1.0 - sgp / lpr
+            } else {
+                1.0 // LPR saturated: unbounded margin
+            }
+        })
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "max SGP improvement over LPR across scenarios: {:.0}%  (paper: up to ~50%)",
+        100.0 * best_margin
+    );
+    if best_margin < 0.3 {
+        println!("SHAPE VIOLATION: expected >= 30% improvement over LPR somewhere");
+        ok = false;
+    }
+    println!("fig4 shape: {}", if ok { "OK" } else { "VIOLATIONS (see above)" });
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! Fig. 5b regenerator: convergence of GP vs SGP on the Connected-ER
+//! server instance (Fig. 5a), with server S1 failing at iteration 100.
+//!
+//! Shape checks: SGP needs markedly fewer iterations than GP both from the
+//! cold start and to re-converge after the failure.
+//!
+//! Run: `cargo bench --bench fig5b`
+
+use cecflow::algo::{Gp, Sgp};
+use cecflow::coordinator::connected_er_servers;
+use cecflow::coordinator::report::{figure_json, write_csv, write_json, Series};
+use cecflow::model::Strategy;
+use cecflow::sim::run_with_failure;
+use cecflow::util::table::{fnum, Table};
+
+fn iters_within(costs: &[f64], upto: usize, frac: f64) -> usize {
+    let steady = costs[upto - 1];
+    costs[..upto]
+        .iter()
+        .position(|&c| c <= steady * (1.0 + frac))
+        .map(|p| p + 1)
+        .unwrap_or(upto)
+}
+
+fn main() -> anyhow::Result<()> {
+    let fail_at = 100;
+    let total = 200;
+    let sc = connected_er_servers(42);
+    let s1 = sc.servers[0];
+    let fallback = sc.servers[1];
+    println!(
+        "Fig. 5a instance: Connected-ER |V|=20, servers {:?}; S1={} fails at iter {}",
+        sc.servers, s1, fail_at
+    );
+
+    let phi0 = Strategy::local_compute_init(&sc.net);
+    let sgp = run_with_failure(&sc.net, Sgp::new, &phi0, fail_at, total, s1, fallback, 0.001)?;
+    let gp = run_with_failure(
+        &sc.net,
+        || Gp::new(1.0),
+        &phi0,
+        fail_at,
+        total,
+        s1,
+        fallback,
+        0.001,
+    )?;
+
+    let mut t = Table::new(&["metric", "SGP", "GP"]);
+    let sgp_cold = iters_within(&sgp.costs, fail_at, 0.001);
+    let gp_cold = iters_within(&gp.costs, fail_at, 0.001);
+    t.row(vec![
+        "cold-start iters (0.1%)".into(),
+        sgp_cold.to_string(),
+        gp_cold.to_string(),
+    ]);
+    t.row(vec![
+        "post-failure iters (0.1%)".into(),
+        sgp.reconverge_iters.to_string(),
+        gp.reconverge_iters.to_string(),
+    ]);
+    t.row(vec![
+        "steady-state T (healthy)".into(),
+        fnum(sgp.costs[fail_at - 1]),
+        fnum(gp.costs[fail_at - 1]),
+    ]);
+    t.row(vec![
+        "steady-state T (degraded)".into(),
+        fnum(sgp.final_cost),
+        fnum(gp.final_cost),
+    ]);
+    t.print();
+
+    // trajectory dump
+    let rows: Vec<Vec<String>> = (0..total)
+        .map(|k| {
+            vec![
+                k.to_string(),
+                format!("{}", sgp.costs[k]),
+                format!("{}", gp.costs[k]),
+            ]
+        })
+        .collect();
+    write_csv("fig5b.csv", &["iteration", "sgp", "gp"], &rows)?;
+    let series = vec![
+        Series {
+            label: "sgp".into(),
+            x: (0..total).map(|k| k as f64).collect(),
+            y: sgp.costs.clone(),
+        },
+        Series {
+            label: "gp".into(),
+            x: (0..total).map(|k| k as f64).collect(),
+            y: gp.costs.clone(),
+        },
+    ];
+    write_json("fig5b.json", &figure_json("fig5b-convergence", &series))?;
+    cecflow::coordinator::report::write_series_svg(
+        "fig5b.svg",
+        "Fig. 5b — convergence with S1 failure at iteration 100",
+        "iteration",
+        "total cost T",
+        &series,
+    )?;
+
+    // shape checks
+    let mut ok = true;
+    if sgp_cold * 2 > gp_cold {
+        println!("SHAPE VIOLATION: SGP cold-start not >=2x faster ({sgp_cold} vs {gp_cold})");
+        ok = false;
+    }
+    if sgp.reconverge_iters > gp.reconverge_iters {
+        println!(
+            "SHAPE VIOLATION: SGP post-failure slower ({} vs {})",
+            sgp.reconverge_iters, gp.reconverge_iters
+        );
+        ok = false;
+    }
+    // both reach the same optima (within 0.5%)
+    for (a, b, tag) in [
+        (sgp.costs[fail_at - 1], gp.costs[fail_at - 1], "healthy"),
+        (sgp.final_cost, gp.final_cost, "degraded"),
+    ] {
+        if (a - b).abs() > 0.005 * a.abs() {
+            println!("SHAPE VIOLATION: {tag} steady states diverge: {a} vs {b}");
+            ok = false;
+        }
+    }
+    println!("fig5b shape: {}", if ok { "OK" } else { "VIOLATIONS" });
+    Ok(())
+}

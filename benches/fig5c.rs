@@ -1,0 +1,110 @@
+//! Fig. 5c regenerator: steady-state total cost vs exogenous-input scale
+//! factor on the Connected-ER instance, for SGP and all baselines.
+//!
+//! Shape checks: every algorithm's cost grows with load, and the
+//! SGP-advantage ratio (baseline/SGP) grows as the network congests —
+//! "the performance advantage of SGP has a quick growth as the network
+//! getting more congested, especially against LPR".
+//!
+//! Run: `cargo bench --bench fig5c`
+
+use cecflow::coordinator::report::{
+    figure_json, render_series_table, write_csv, write_json, Series,
+};
+use cecflow::coordinator::{run_algorithm, Algorithm, RunConfig, ScenarioSpec};
+use cecflow::util::stats::spearman;
+
+fn main() -> anyhow::Result<()> {
+    let scales = [0.6, 0.8, 1.0, 1.1, 1.2];
+    let algos = [
+        Algorithm::Sgp,
+        Algorithm::Spoo,
+        Algorithm::Lcor,
+        Algorithm::Lpr,
+    ];
+    let spec = ScenarioSpec::by_name("connected-er").unwrap();
+    let cfg = RunConfig {
+        max_iters: 60,
+        tol: 1e-6,
+        patience: 4,
+    };
+
+    // LPR can saturate (infinite true cost) at high loads; cap for the
+    // table/ratios and report the saturation explicitly.
+    let mut series: Vec<Series> = algos
+        .iter()
+        .map(|a| Series {
+            label: a.name().to_string(),
+            x: scales.to_vec(),
+            y: Vec::new(),
+        })
+        .collect();
+
+    let mut rows = Vec::new();
+    for &scale in &scales {
+        let mut sc = spec.build(2026);
+        sc.net.scale_rates(scale);
+        eprintln!("[fig5c] scale {scale} ...");
+        for (ai, &algo) in algos.iter().enumerate() {
+            let out = run_algorithm(&sc.net, algo, &cfg)?;
+            series[ai].y.push(out.final_cost);
+            rows.push(vec![
+                format!("{scale}"),
+                out.algorithm.clone(),
+                format!("{}", out.final_cost),
+            ]);
+        }
+    }
+
+    println!("{}", render_series_table("scale", &series));
+    write_csv("fig5c.csv", &["scale", "algorithm", "total_cost"], &rows)?;
+    write_json("fig5c.json", &figure_json("fig5c-cost-vs-load", &series))?;
+    cecflow::coordinator::report::write_series_svg(
+        "fig5c.svg",
+        "Fig. 5c — steady-state cost vs input-rate scale",
+        "rate scale",
+        "total cost T",
+        &series,
+    )?;
+
+    // ---- shape checks ----
+    let mut ok = true;
+    // monotone growth per algorithm (treat inf as "very large")
+    for s in &series {
+        let capped: Vec<f64> = s.y.iter().map(|&v| if v.is_finite() { v } else { 1e12 }).collect();
+        if spearman(&s.x, &capped) < 0.99 {
+            println!("SHAPE VIOLATION: {} cost not increasing with load: {:?}", s.label, s.y);
+            ok = false;
+        }
+    }
+    // advantage ratio grows with congestion for every baseline
+    for bi in 1..algos.len() {
+        let ratios: Vec<f64> = (0..scales.len())
+            .map(|k| {
+                let b = series[bi].y[k];
+                let s = series[0].y[k];
+                if b.is_finite() {
+                    b / s
+                } else {
+                    1e6 // saturated baseline: advantage unbounded
+                }
+            })
+            .collect();
+        let trend = spearman(&series[0].x, &ratios);
+        println!(
+            "{}/sgp ratio over load: {:?} (spearman {:.2})",
+            series[bi].label,
+            ratios.iter().map(|r| format!("{r:.2}")).collect::<Vec<_>>(),
+            trend
+        );
+        if ratios.last().unwrap() < ratios.first().unwrap() {
+            println!(
+                "SHAPE VIOLATION: {} advantage shrinks with congestion",
+                series[bi].label
+            );
+            ok = false;
+        }
+    }
+    println!("fig5c shape: {}", if ok { "OK" } else { "VIOLATIONS" });
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Fig. 5d regenerator: the average data / result travel distances
+//! `L_data`, `L_result` of the SGP optimum as the result-size ratio `a_m`
+//! sweeps from small to large, on the Connected-ER instance.
+//!
+//! Shape checks: `L_data` is (weakly) increasing and `L_result` (weakly)
+//! decreasing in `a_m` — the paper's "balance" phenomenon: tasks with big
+//! results are computed nearer the destination.
+//!
+//! Run: `cargo bench --bench fig5d`
+
+use cecflow::algo::{Optimizer, Sgp};
+use cecflow::coordinator::metrics::travel_distance;
+use cecflow::coordinator::report::{
+    figure_json, render_series_table, write_csv, write_json, Series,
+};
+use cecflow::coordinator::ScenarioSpec;
+use cecflow::model::{compute_flows, CostFn, Strategy};
+use cecflow::util::stats::spearman;
+
+fn main() -> anyhow::Result<()> {
+    let sweep = [0.1, 0.25, 0.5, 1.0, 2.0, 4.0];
+    let spec = ScenarioSpec::by_name("connected-er").unwrap();
+
+    let mut l_data = Vec::new();
+    let mut l_result = Vec::new();
+    let mut rows = Vec::new();
+
+    for &am in &sweep {
+        // one instance, all types forced to the sweep value (isolates the
+        // a_m effect exactly as the paper's sweep does)
+        let mut sc = spec.build(2026);
+        for a in sc.net.result_ratio.iter_mut() {
+            *a = am;
+        }
+        // feasibility head-room after the override (large a_m multiplies
+        // all result flows)
+        for _ in 0..40 {
+            let phi0 = Strategy::local_compute_init(&sc.net);
+            if compute_flows(&sc.net, &phi0)?.total_cost.is_finite() {
+                break;
+            }
+            for c in sc.net.link_cost.iter_mut() {
+                if let CostFn::Queue { cap } = c {
+                    *cap *= 1.3;
+                }
+            }
+        }
+
+        let mut phi = Strategy::local_compute_init(&sc.net);
+        let mut sgp = Sgp::new();
+        for _ in 0..60 {
+            sgp.step(&sc.net, &mut phi)?;
+        }
+        let flows = compute_flows(&sc.net, &phi)?;
+        let td = travel_distance(&sc.net, &flows);
+        eprintln!("[fig5d] a_m={am}: L_data={:.3} L_result={:.3}", td.l_data, td.l_result);
+        l_data.push(td.l_data);
+        l_result.push(td.l_result);
+        rows.push(vec![
+            format!("{am}"),
+            format!("{}", td.l_data),
+            format!("{}", td.l_result),
+        ]);
+    }
+
+    let series = vec![
+        Series {
+            label: "L_data".into(),
+            x: sweep.to_vec(),
+            y: l_data.clone(),
+        },
+        Series {
+            label: "L_result".into(),
+            x: sweep.to_vec(),
+            y: l_result.clone(),
+        },
+    ];
+    println!("{}", render_series_table("a_m", &series));
+    write_csv("fig5d.csv", &["a_m", "l_data", "l_result"], &rows)?;
+    write_json("fig5d.json", &figure_json("fig5d-travel-distance", &series))?;
+    cecflow::coordinator::report::write_series_svg(
+        "fig5d.svg",
+        "Fig. 5d — travel distances vs result-size ratio a_m",
+        "a_m",
+        "hops",
+        &series,
+    )?;
+
+    // ---- shape checks: monotone trends ----
+    let up = spearman(&sweep, &l_data);
+    let down = spearman(&sweep, &l_result);
+    println!("L_data trend (spearman): {up:.2} (expect > 0.6)");
+    println!("L_result trend (spearman): {down:.2} (expect < -0.6)");
+    let ok = up > 0.6 && down < -0.6;
+    println!("fig5d shape: {}", if ok { "OK" } else { "VIOLATIONS" });
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! Performance microbenches for the hot paths (EXPERIMENTS.md §Perf):
+//!
+//!  * flow computation (`model::flows`)
+//!  * marginal recursion (`model::marginals`)
+//!  * blocked-set construction
+//!  * per-node QP projection
+//!  * one full SGP Gauss–Seidel iteration
+//!  * XLA dense evaluation (small class) vs native, when artifacts exist
+//!
+//! Run: `cargo bench --bench perf_iteration`
+
+use std::time::Duration;
+
+use cecflow::algo::blocked::blocked_sets;
+use cecflow::algo::simplex_qp::scaled_simplex_qp;
+use cecflow::algo::{Optimizer, Sgp};
+use cecflow::coordinator::report::write_csv;
+use cecflow::coordinator::ScenarioSpec;
+use cecflow::model::{compute_flows, compute_marginals, Strategy};
+use cecflow::runtime::{default_artifacts_dir, DenseEvaluator, Engine};
+use cecflow::util::timer::{bench_fn, BenchReport};
+
+fn main() -> anyhow::Result<()> {
+    let budget = Duration::from_millis(400);
+    let mut report = BenchReport::new("cecflow hot paths");
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let record = |rows: &mut Vec<Vec<String>>, m: &cecflow::util::timer::Measurement| {
+        rows.push(vec![m.name.clone(), format!("{}", m.per_iter.mean)]);
+    };
+
+    for name in ["abilene", "geant", "sw"] {
+        let sc = ScenarioSpec::by_name(name).unwrap().build(2026);
+        let net = &sc.net;
+        // pre-optimize a few sweeps so flows are multi-path (realistic)
+        let mut phi = Strategy::local_compute_init(net);
+        let mut sgp = Sgp::new();
+        let warm = if name == "sw" { 2 } else { 5 };
+        for _ in 0..warm {
+            sgp.step(net, &mut phi)?;
+        }
+
+        let m = bench_fn(&format!("{name}: compute_flows"), budget, || {
+            let _ = compute_flows(net, &phi).unwrap();
+        });
+        report.add_measurement(&m);
+        record(&mut rows, &m);
+
+        let flows = compute_flows(net, &phi)?;
+        let m = bench_fn(&format!("{name}: compute_marginals"), budget, || {
+            let _ = compute_marginals(net, &phi, &flows).unwrap();
+        });
+        report.add_measurement(&m);
+        record(&mut rows, &m);
+
+        let marg = compute_marginals(net, &phi, &flows)?;
+        let m = bench_fn(&format!("{name}: blocked_sets (all tasks)"), budget, || {
+            for s in 0..net.s() {
+                let _ = blocked_sets(net, &phi, &marg, s);
+            }
+        });
+        report.add_measurement(&m);
+        record(&mut rows, &m);
+
+        let mut phi_iter = phi.clone();
+        let m = bench_fn(&format!("{name}: sgp full iteration"), budget, || {
+            let mut s = Sgp::new();
+            let _ = s.step(net, &mut phi_iter).unwrap();
+        });
+        report.add_measurement(&m);
+        record(&mut rows, &m);
+    }
+
+    // QP microbench
+    let phi_v = [0.4, 0.3, 0.2, 0.1, 0.0, 0.0];
+    let delta = [1.0, 0.5, 2.0, 0.1, 3.0, 0.7];
+    let scale = [0.5, 1.0, 0.2, 2.0, 1.0, 0.8];
+    let blocked = [false, false, false, false, true, false];
+    let m = bench_fn("qp: 6-slot projection", budget, || {
+        let _ = scaled_simplex_qp(&phi_v, &delta, &scale, &blocked);
+    });
+    report.add_measurement(&m);
+    record(&mut rows, &m);
+
+    // XLA dense evaluation vs native (small class)
+    match Engine::load_filtered(&default_artifacts_dir(), |c| c.name == "small") {
+        Ok(engine) => {
+            let sc = ScenarioSpec::by_name("abilene").unwrap().build(2026);
+            let net = &sc.net;
+            let phi = Strategy::local_compute_init(net);
+            let eval = DenseEvaluator::new(&engine);
+            let m = bench_fn("abilene: XLA dense_eval (N=32,S=48 padded)", budget, || {
+                let _ = eval.evaluate(net, &phi).unwrap();
+            });
+            report.add_measurement(&m);
+            record(&mut rows, &m);
+            let m = bench_fn("abilene: native flows+marginals", budget, || {
+                let f = compute_flows(net, &phi).unwrap();
+                let _ = compute_marginals(net, &phi, &f).unwrap();
+            });
+            report.add_measurement(&m);
+            record(&mut rows, &m);
+        }
+        Err(err) => {
+            report.add_row("xla", format!("skipped ({err})"));
+        }
+    }
+
+    report.print();
+    write_csv("perf_iteration.csv", &["path", "seconds_per_iter"], &rows)?;
+    Ok(())
+}

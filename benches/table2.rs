@@ -1,0 +1,99 @@
+//! Table II regenerator: instantiate every simulated network scenario,
+//! report its realized size against the paper's numbers, and measure the
+//! per-iteration cost of the SGP optimizer plus the distributed broadcast
+//! footprint (messages / completion time, §IV Complexity).
+//!
+//! Run: `cargo bench --bench table2`   (CECFLOW_BENCH_FAST=1 skips SW)
+
+use std::time::Instant;
+
+use cecflow::algo::{Optimizer, Sgp};
+use cecflow::coordinator::report::write_csv;
+use cecflow::coordinator::ScenarioSpec;
+use cecflow::model::{compute_flows, Strategy};
+use cecflow::sim::run_broadcast;
+use cecflow::util::table::Table;
+use cecflow::util::timer::fmt_duration;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("CECFLOW_BENCH_FAST").is_ok();
+    // paper's Table II (|V|, links, |S|, |R|)
+    let paper: &[(&str, usize, usize, usize, usize)] = &[
+        ("connected-er", 20, 40, 15, 5),
+        ("balanced-tree", 15, 14, 20, 5),
+        ("fog", 19, 30, 30, 5),
+        ("abilene", 11, 14, 10, 3),
+        ("lhc", 16, 31, 30, 5),
+        ("geant", 22, 33, 40, 7),
+        ("sw", 100, 320, 120, 10),
+    ];
+
+    let mut t = Table::new(&[
+        "scenario", "|V|", "links", "|S|", "paper(V/E/S)", "iter time", "bcast msgs",
+        "bcast time",
+    ]);
+    let mut rows = Vec::new();
+
+    for &(name, pv, pe, ps, _pr) in paper {
+        if fast && name == "sw" {
+            continue;
+        }
+        let spec = ScenarioSpec::by_name(name).unwrap();
+        let sc = spec.build(2026);
+        let net = &sc.net;
+
+        // one warm iteration + timed iterations
+        let mut phi = Strategy::local_compute_init(net);
+        let mut sgp = Sgp::new();
+        sgp.step(net, &mut phi)?;
+        let reps = if name == "sw" { 2 } else { 5 };
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            sgp.step(net, &mut phi)?;
+        }
+        let iter_time = t0.elapsed().as_secs_f64() / reps as f64;
+
+        // broadcast footprint on the current state
+        let flows = compute_flows(net, &phi)?;
+        let bc = run_broadcast(net, &phi, &flows, 1.0);
+
+        t.row(vec![
+            name.to_string(),
+            net.n().to_string(),
+            (net.e() / 2).to_string(),
+            net.s().to_string(),
+            format!("{pv}/{pe}/{ps}"),
+            fmt_duration(iter_time),
+            bc.messages.to_string(),
+            format!("{:.0} t_c", bc.completion_time),
+        ]);
+        rows.push(vec![
+            name.to_string(),
+            net.n().to_string(),
+            (net.e() / 2).to_string(),
+            net.s().to_string(),
+            format!("{iter_time}"),
+            bc.messages.to_string(),
+            format!("{}", bc.completion_time),
+        ]);
+
+        // size checks vs the paper (fog's link count documented as 33)
+        assert_eq!(net.n(), pv, "{name}: |V|");
+        assert_eq!(net.s(), ps, "{name}: |S|");
+        let links = net.e() / 2;
+        assert!(
+            links == pe || name == "fog",
+            "{name}: links {links} vs paper {pe}"
+        );
+        // §IV: message bound 2|S||E| per iteration
+        assert!(bc.messages <= 2 * (net.s() * net.e()) as u64);
+    }
+    t.print();
+    write_csv(
+        "table2.csv",
+        &["scenario", "V", "links", "S", "iter_seconds", "bcast_msgs", "bcast_time"],
+        &rows,
+    )?;
+    println!("table2: sizes match the paper (fog: 33 links vs paper 30 — see DESIGN.md §3.6)");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Fig. 5b narrative: a Connected-ER network with four major servers loses
+//! server S1 mid-run. SGP warm-start adapts and re-converges in a handful
+//! of iterations; the non-scaled GP baseline takes many more.
+//!
+//! ```bash
+//! cargo run --release --example failure_adaptation
+//! ```
+
+use cecflow::algo::{Gp, Sgp};
+use cecflow::coordinator::connected_er_servers;
+use cecflow::model::Strategy;
+use cecflow::sim::run_with_failure;
+use cecflow::util::table::{bar, fnum};
+
+fn main() -> anyhow::Result<()> {
+    let sc = connected_er_servers(42);
+    let s1 = sc.servers[0];
+    let fallback = sc.servers[1];
+    println!(
+        "Connected-ER (|V|=20, 40 links), servers at {:?}.\n\
+         Server S1 = node {s1} fails at iteration 100; its tasks fall back to node {fallback}.\n",
+        sc.servers
+    );
+
+    let phi0 = Strategy::local_compute_init(&sc.net);
+    let fail_at = 100;
+    let total = 200;
+
+    let sgp = run_with_failure(&sc.net, Sgp::new, &phi0, fail_at, total, s1, fallback, 0.001)?;
+    let gp = run_with_failure(
+        &sc.net,
+        || Gp::new(1.0),
+        &phi0,
+        fail_at,
+        total,
+        s1,
+        fallback,
+        0.001,
+    )?;
+
+    // cold-start convergence: first iteration within 0.1% of the
+    // pre-failure steady state
+    let cold = |costs: &[f64]| -> usize {
+        let steady = costs[fail_at - 1];
+        costs[..fail_at]
+            .iter()
+            .position(|&c| c <= steady * 1.001)
+            .map(|p| p + 1)
+            .unwrap_or(fail_at)
+    };
+    println!(
+        "cold-start convergence (to within 0.1% of pre-failure steady state):\n\
+         \x20 SGP: {} iterations    GP: {} iterations\n",
+        cold(&sgp.costs),
+        cold(&gp.costs)
+    );
+
+    println!("cost trajectory (… = failure point):");
+    let max_cost = sgp
+        .costs
+        .iter()
+        .chain(gp.costs.iter())
+        .cloned()
+        .fold(0.0f64, f64::max);
+    for k in (0..total).step_by(10) {
+        let marker = if k == fail_at { ">>" } else { "  " };
+        println!(
+            "{marker} iter {k:>3}  sgp |{}| {}   gp |{}| {}",
+            bar(sgp.costs[k], max_cost, 24),
+            fnum(sgp.costs[k]),
+            bar(gp.costs[k], max_cost, 24),
+            fnum(gp.costs[k]),
+        );
+    }
+
+    println!(
+        "\npost-failure re-convergence (to within 1% of the degraded optimum):\n\
+         \x20 SGP: {} iterations (cost {} -> {})\n\
+         \x20 GP : {} iterations (cost {} -> {})",
+        sgp.reconverge_iters,
+        fnum(sgp.cost_after_failure),
+        fnum(sgp.final_cost),
+        gp.reconverge_iters,
+        fnum(gp.cost_after_failure),
+        fnum(gp.final_cost),
+    );
+    println!(
+        "\nSGP's scaling matrices make it adapt to the topology change in far\n\
+         fewer iterations — the Fig. 5b claim."
+    );
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! Quickstart: build a small CEC network, run the paper's SGP optimizer,
+//! and watch the total cost descend to a Theorem-1 (globally optimal)
+//! point.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use cecflow::algo::{Optimizer, Sgp};
+use cecflow::coordinator::metrics::travel_distance;
+use cecflow::graph::from_undirected;
+use cecflow::model::{compute_flows, CostFn, Network, Strategy, Task};
+use cecflow::util::table::fnum;
+
+fn main() -> anyhow::Result<()> {
+    // An 8-node edge cluster: two rings of four bridged in the middle.
+    //
+    //   0 - 1        4 - 5
+    //   |   | — 3 —  |   |
+    //   2 --+        6 - 7
+    let links = [
+        (0, 1),
+        (0, 2),
+        (1, 3),
+        (2, 3),
+        (3, 4),
+        (3, 6),
+        (4, 5),
+        (4, 6),
+        (5, 7),
+        (6, 7),
+    ];
+    let graph = from_undirected(8, &links);
+    let e = graph.edge_count();
+
+    // Two task types: video compression (results half the input size) and
+    // super-resolution (results 3x the input).
+    let net = Network {
+        graph,
+        tasks: vec![
+            Task { dest: 7, ctype: 0 }, // compress sensor video, deliver to 7
+            Task { dest: 0, ctype: 1 }, // upscale thumbnails, deliver to 0
+        ],
+        num_types: 2,
+        input_rate: vec![
+            vec![1.2, 0.8, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0], // cameras at 0,1
+            vec![0.0, 0.0, 0.0, 0.0, 0.0, 0.6, 0.0, 0.9], // requests at 5,7
+        ],
+        result_ratio: vec![0.5, 3.0],
+        comp_weight: vec![vec![1.0, 2.0]; 8],
+        link_cost: vec![CostFn::Queue { cap: 8.0 }; e],
+        comp_cost: vec![
+            // node 3 is the beefy edge server
+            CostFn::Queue { cap: 10.0 },
+            CostFn::Queue { cap: 10.0 },
+            CostFn::Queue { cap: 10.0 },
+            CostFn::Queue { cap: 40.0 },
+            CostFn::Queue { cap: 10.0 },
+            CostFn::Queue { cap: 10.0 },
+            CostFn::Queue { cap: 10.0 },
+            CostFn::Queue { cap: 10.0 },
+        ],
+    };
+    net.assert_valid();
+
+    // Start from the always-feasible "compute where the data lands" point.
+    let mut phi = Strategy::local_compute_init(&net);
+    let t0 = compute_flows(&net, &phi)?.total_cost;
+    println!("initial (all-local) total cost: {}", fnum(t0));
+
+    let mut sgp = Sgp::new();
+    for iter in 1..=30 {
+        let st = sgp.step(&net, &mut phi)?;
+        if iter % 5 == 0 || iter == 1 {
+            println!(
+                "iter {iter:>3}: T = {}   Theorem-1 residual = {:.2e}",
+                fnum(st.total_cost),
+                st.residual
+            );
+        }
+    }
+
+    let flows = compute_flows(&net, &phi)?;
+    let td = travel_distance(&net, &flows);
+    println!("\nconverged: T = {}", fnum(flows.total_cost));
+    println!("improvement over all-local: {:.1}%", 100.0 * (1.0 - flows.total_cost / t0));
+    println!("avg data travel distance:   {:.2} hops", td.l_data);
+    println!("avg result travel distance: {:.2} hops", td.l_result);
+
+    // Where did the computation go?
+    println!("\ncomputation placement (workload per node):");
+    for (i, &g) in flows.workload.iter().enumerate() {
+        if g > 1e-6 {
+            println!("  node {i}: {:.3}", g);
+        }
+    }
+    println!("\n(the big server at node 3 should attract offloaded work)");
+    Ok(())
+}

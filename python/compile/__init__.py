@@ -1,0 +1,2 @@
+"""Build-time python package: L2 jax model + L1 pallas kernels + AOT
+lowering. Never imported at runtime — rust loads the emitted HLO text."""

@@ -1,0 +1,87 @@
+"""AOT lowering: jax (L2+L1) -> HLO text artifacts + manifest.json.
+
+HLO *text* is the interchange format (NOT serialized HloModuleProto): the
+xla crate's bundled xla_extension 0.5.1 rejects jax>=0.5 protos whose
+instruction ids exceed INT_MAX, while the text parser reassigns ids — see
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one artifact per size class:
+    dense_eval_small.hlo.txt   N=32,  S=48
+    dense_eval_large.hlo.txt   N=128, S=128
+plus manifest.json describing tensor shapes/order so the rust runtime can
+marshal without recompiling python knowledge.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import INPUT_NAMES, OUTPUT_NAMES, dense_eval, example_args
+
+# (name, N, S): padded size classes. N and S are upper bounds; the rust
+# side zero-pads any smaller network into the smallest fitting class.
+SIZE_CLASSES = [
+    ("small", 32, 48),
+    ("large", 128, 128),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_class(n: int, s: int) -> str:
+    fn = lambda *args: dense_eval(*args, iters=n, block_n=min(128, n))
+    lowered = jax.jit(fn).lower(*example_args(n, s))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    classes = []
+    for name, n, s in SIZE_CLASSES:
+        text = lower_class(n, s)
+        fname = f"dense_eval_{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"wrote {path}: {len(text)} chars (N={n}, S={s})")
+        classes.append(
+            {
+                "name": name,
+                "file": fname,
+                "n": n,
+                "s": s,
+                "iters": n,
+            }
+        )
+
+    manifest = {
+        "format": "hlo-text",
+        "entry": "dense_eval",
+        "inputs": INPUT_NAMES,
+        "outputs": OUTPUT_NAMES,
+        "sat_big": 1e30,
+        "classes": classes,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

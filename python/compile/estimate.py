@@ -1,0 +1,129 @@
+"""TPU resource estimation for the L1 kernels (DESIGN.md §7).
+
+Pallas kernels run under ``interpret=True`` here (CPU PJRT cannot execute
+Mosaic custom calls), so wallclock is meaningless as a TPU proxy. What CAN
+be derived exactly from the BlockSpecs is the *structure*: VMEM residency
+per program, MXU tile occupancy, arithmetic intensity, and the HBM traffic
+of one optimizer iteration. This module computes those numbers per size
+class and renders the §Perf table.
+
+Usage:  python -m compile.estimate            # print the table
+        (also imported by tests)
+"""
+
+from dataclasses import dataclass
+
+# TPU v4-ish reference envelope (per core) used for roofline ratios.
+VMEM_BYTES = 16 * 2**20
+MXU_DIM = 128
+HBM_BW_BYTES = 1.2e12  # 1.2 TB/s
+PEAK_F32_FLOPS = 70e12  # ~70 TF/s f32 (MXU)
+
+
+@dataclass
+class PropStepEstimate:
+    """One `prop_step` program instance: t'[s, block] = t[s,:] @ Φ[s,:,block] + r."""
+
+    n: int
+    s: int
+    block_n: int
+
+    @property
+    def grid(self):
+        return (self.s, self.n // self.block_n)
+
+    @property
+    def vmem_bytes(self) -> int:
+        # Φ tile [1, N, BN] + t row [1, N] + r block [1, BN] + out [1, BN]
+        return 4 * (self.n * self.block_n + self.n + 2 * self.block_n)
+
+    @property
+    def vmem_fraction(self) -> float:
+        return self.vmem_bytes / VMEM_BYTES
+
+    @property
+    def flops_per_program(self) -> int:
+        return 2 * self.n * self.block_n  # MAC = 2 flops
+
+    @property
+    def bytes_per_program(self) -> int:
+        # Φ tile streams from HBM; t/r/out are negligible next to it
+        return 4 * self.n * self.block_n
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops_per_program / self.bytes_per_program
+
+    @property
+    def mxu_utilization(self) -> float:
+        """Fraction of the 128x128 systolic array active per pass.
+
+        The contraction is [1, N] x [N, BN]: one row of the MXU's
+        stationary operand dimension is live -> 1/128 per-pass occupancy,
+        amortized over the N/128 passes needed for the K dimension. In
+        terms of *useful MACs vs the array's capacity over those passes*:
+        (1 * BN) / (128 * 128) per pass.
+        """
+        return min(self.block_n, MXU_DIM) / (MXU_DIM * MXU_DIM)
+
+    @property
+    def bandwidth_bound_time(self) -> float:
+        """Seconds per full wave (all programs), HBM-roofline."""
+        programs = self.grid[0] * self.grid[1]
+        return programs * self.bytes_per_program / HBM_BW_BYTES
+
+
+@dataclass
+class IterationEstimate:
+    """One dense_eval call: 4 recursions x N waves of prop_step + costs."""
+
+    n: int
+    s: int
+    block_n: int
+
+    @property
+    def total_flops(self) -> float:
+        # 4 propagations (t-, t+, dT/dt+, dT/dr) x N waves x S·N·BN-grid
+        wave = 2 * self.s * self.n * self.n
+        return 4 * self.n * wave
+
+    @property
+    def total_hbm_bytes(self) -> float:
+        # Φ tensors re-stream every wave unless resident: worst case
+        wave_bytes = 4 * self.s * self.n * self.n
+        return 4 * self.n * wave_bytes
+
+    @property
+    def roofline_seconds(self) -> float:
+        return max(
+            self.total_flops / PEAK_F32_FLOPS,
+            self.total_hbm_bytes / HBM_BW_BYTES,
+        )
+
+
+def size_classes():
+    from .aot import SIZE_CLASSES
+
+    return SIZE_CLASSES
+
+
+def render_table() -> str:
+    rows = [
+        "class   N    S    VMEM/prog  VMEM%   AI(flop/B)  MXU/pass  wave(BW-bound)  iter roofline",
+    ]
+    for name, n, s in size_classes():
+        p = PropStepEstimate(n=n, s=s, block_n=min(128, n))
+        it = IterationEstimate(n=n, s=s, block_n=min(128, n))
+        rows.append(
+            f"{name:<7}{n:<5}{s:<5}{p.vmem_bytes/1024:>7.0f}KiB"
+            f"{100*p.vmem_fraction:>7.2f}%"
+            f"{p.arithmetic_intensity:>10.2f}"
+            f"{100*p.mxu_utilization:>9.2f}%"
+            f"{1e6*p.bandwidth_bound_time:>13.2f}µs"
+            f"{1e3*it.roofline_seconds:>12.3f}ms"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(render_table())

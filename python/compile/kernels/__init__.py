@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for the per-iteration numeric hot-spots, plus their
+pure-jnp oracles (ref)."""
+
+from .link_cost import link_cost, SAT_BIG
+from .prop_step import prop_step
+from . import ref
+
+__all__ = ["link_cost", "prop_step", "ref", "SAT_BIG"]

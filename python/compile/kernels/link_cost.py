@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: congestion cost + derivative evaluation.
+
+Evaluates the paper's convex cost families elementwise over a flat array of
+flows (links and computation units share the same curve families, §II):
+
+  kind 0 (Linear): D  = param * F            D' = param
+  kind 1 (Queue):  D  = F / (param - F)      D' = param / (param - F)^2
+
+Entries with ``mask == 0`` (padding / non-edges) produce zeros. Saturated
+queue entries (F >= param) are clamped to a large finite value ``SAT_BIG``
+so the AOT artifact stays NaN-free; the rust coordinator treats any value
+>= ``SAT_BIG`` as infinite. (The artifact is only queried on feasible
+states, where saturation does not occur — the clamp is a safety rail.)
+
+TPU mapping (DESIGN.md §3.4): this is a pure VPU elementwise kernel. The
+flat array is tiled in ``BLOCK``-sized chunks via the grid; each tile is a
+single VMEM-resident vector op, last-dim aligned to the 128-lane registers.
+``interpret=True`` everywhere — the CPU PJRT client cannot execute Mosaic
+custom calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Value used to represent "saturated / infinite" inside the f32 artifact.
+SAT_BIG = 1e30
+# Keep-away margin from the queue pole.
+EPS = 1e-30
+
+
+def _kernel(f_ref, param_ref, kind_ref, mask_ref, d_ref, dp_ref):
+    f = f_ref[...]
+    param = param_ref[...]
+    kind = kind_ref[...]
+    mask = mask_ref[...]
+
+    # Linear family
+    d_lin = param * f
+    dp_lin = param
+
+    # Queue family (guard the pole; saturation clamps to SAT_BIG)
+    gap = param - f
+    safe_gap = jnp.maximum(gap, EPS)
+    d_que = f / safe_gap
+    dp_que = param / (safe_gap * safe_gap)
+    saturated = gap <= 0.0
+    d_que = jnp.where(saturated, SAT_BIG, d_que)
+    dp_que = jnp.where(saturated, SAT_BIG, dp_que)
+
+    is_queue = kind > 0.5
+    d = jnp.where(is_queue, d_que, d_lin)
+    dp = jnp.where(is_queue, dp_que, dp_lin)
+
+    on = mask > 0.5
+    d_ref[...] = jnp.where(on, d, 0.0)
+    dp_ref[...] = jnp.where(on, dp, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def link_cost(f, param, kind, mask, *, block=128):
+    """Evaluate (D(F), D'(F)) elementwise over flat f32 arrays.
+
+    All four inputs share one flat shape whose length must be divisible by
+    ``block``. Returns ``(d, dp)`` of the same shape.
+    """
+    (n,) = f.shape
+    if n % block != 0:
+        raise ValueError(f"length {n} not divisible by block {block}")
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    d, dp = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(f, param, kind, mask)
+    return d, dp

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: one flow-propagation wave.
+
+The loop-free fixed point ``t = t Φ + r`` (data traffic, eq. 1/3; result
+traffic, eq. 2/6; and the transposed marginal recursions 11/12) is solved
+by at most ``N-1`` exact waves of
+
+    t'[s, j] = sum_i t[s, i] * phi[s, i, j] + r[s, j]
+
+i.e. a batched vector-matrix product plus bias. This kernel computes one
+wave.
+
+TPU mapping (DESIGN.md §3.4): grid over (task, node-block); each program
+computes ``t[s, :] @ phi[s, :, BN-block] + r[s, block]`` as a
+``[1, N] x [N, BN]`` dot — an MXU-shaped contraction with the stationary
+operand resident in VMEM. VMEM per program: N*BN*4 bytes for the Φ tile
+(64 KiB at N=BN=128) plus two vectors; well under the ~16 MiB budget, so
+double-buffering the Φ tiles is available to the Mosaic pipeliner.
+``interpret=True`` for CPU-PJRT executability.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(t_ref, phi_ref, r_ref, out_ref):
+    # t_ref:   [1, N]      (full row for task s)
+    # phi_ref: [1, N, BN]  (column block of task s's routing matrix)
+    # r_ref:   [1, BN]
+    t = t_ref[0, :]
+    phi = phi_ref[0, :, :]
+    r = r_ref[0, :]
+    out_ref[0, :] = jnp.dot(t, phi, preferred_element_type=jnp.float32) + r
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def prop_step(t, phi, r, *, block_n=128):
+    """One propagation wave ``t' = t Φ + r`` batched over tasks.
+
+    t:   [S, N] f32
+    phi: [S, N, N] f32 (row-stochastic routing fractions per task)
+    r:   [S, N] f32 source term
+    """
+    s, n = t.shape
+    assert phi.shape == (s, n, n), phi.shape
+    assert r.shape == (s, n)
+    bn = min(block_n, n)
+    if n % bn != 0:
+        raise ValueError(f"N={n} not divisible by block_n={bn}")
+    grid = (s, n // bn)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n), lambda si, bi: (si, 0)),
+            pl.BlockSpec((1, n, bn), lambda si, bi: (si, 0, bi)),
+            pl.BlockSpec((1, bn), lambda si, bi: (si, bi)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda si, bi: (si, bi)),
+        out_shape=jax.ShapeDtypeStruct((s, n), jnp.float32),
+        interpret=True,
+    )(t, phi, r)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels and the dense evaluator.
+
+These are the correctness references: pytest sweeps shapes/values with
+hypothesis and asserts the kernels (and the composed ``model.dense_eval``)
+match to float32 tolerance. Nothing here is ever lowered into the
+artifacts.
+"""
+
+import jax.numpy as jnp
+
+from .link_cost import EPS, SAT_BIG
+
+
+def link_cost_ref(f, param, kind, mask):
+    """(D, D') under the Linear/Queue families, masked — see link_cost."""
+    f = jnp.asarray(f, jnp.float32)
+    param = jnp.asarray(param, jnp.float32)
+    kind = jnp.asarray(kind, jnp.float32)
+    mask = jnp.asarray(mask, jnp.float32)
+
+    d_lin = param * f
+    dp_lin = param
+    gap = param - f
+    safe_gap = jnp.maximum(gap, EPS)
+    d_que = jnp.where(gap <= 0.0, SAT_BIG, f / safe_gap)
+    dp_que = jnp.where(gap <= 0.0, SAT_BIG, param / (safe_gap * safe_gap))
+
+    is_queue = kind > 0.5
+    d = jnp.where(is_queue, d_que, d_lin)
+    dp = jnp.where(is_queue, dp_que, dp_lin)
+    on = mask > 0.5
+    return jnp.where(on, d, 0.0), jnp.where(on, dp, 0.0)
+
+
+def prop_step_ref(t, phi, r):
+    """t' = t Φ + r, batched over the leading (task) axis."""
+    return jnp.einsum("sn,snm->sm", t, phi) + r
+
+
+def propagate_ref(phi, r, iters):
+    """Run ``iters`` waves from t = 0 — the exact loop-free fixed point
+    when ``iters >= N - 1``."""
+    t = jnp.zeros_like(r)
+    for _ in range(iters):
+        t = prop_step_ref(t, phi, r)
+    return t

@@ -1,0 +1,178 @@
+"""L2: the dense per-iteration evaluation core, in JAX, calling the L1
+Pallas kernels.
+
+``dense_eval`` computes — for a whole network, all tasks at once, over
+dense padded tensors — everything one optimizer iteration needs from the
+flow model (§II) and the marginal recursions (§III):
+
+  forward:   t- (eq. 1/3), g (eq. 4), t+ (eq. 2/6), F, G
+  costs:     D(F), D'(F), C(G), C'(G), T (eq. 8)
+  backward:  dT/dt+ (eq. 12), dT/dr (eq. 11)
+
+The loop-free fixed points are solved exactly with ``iters`` propagation
+waves of the ``prop_step`` kernel (iters >= N-1 suffices; see
+kernels/prop_step.py). The backward recursions are the transposed
+propagation with bias terms built from D'/C' — the same kernel applied to
+the transposed routing tensors.
+
+This function is lowered ONCE per size class by ``aot.py`` into HLO text;
+the rust runtime (rust/src/runtime/) loads and executes it on the PJRT CPU
+client on its hot path. Python never runs at request time.
+
+Tensor layout (all float32):
+  phi_data   [S, N, N]  data routing fractions (row i -> col j)
+  phi_local  [S, N]     local-computation fractions (slot 0 of the paper)
+  phi_result [S, N, N]  result routing fractions
+  r          [S, N]     exogenous input rates
+  a          [S]        result-size ratio a_m per task
+  w          [S, N]     computation weight w_{i, m_s} per task x node
+  link_param [N, N]     cost parameter per directed edge (unit or capacity)
+  link_kind  [N, N]     0 = Linear, 1 = Queue
+  link_mask  [N, N]     1 where the edge exists
+  comp_param [N], comp_kind [N]   computation-cost curves per node
+
+Outputs (in order):
+  T [],  F [N,N],  G [N],  dp_link [N,N] (D'),  cp_node [N] (C'),
+  dt_plus [S,N],  dt_r [S,N],  t_minus [S,N],  t_plus [S,N]
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import link_cost, prop_step
+
+
+def _propagate(phi, bias, iters, block_n):
+    """Exact loop-free fixed point t = t phi + bias via `iters` waves."""
+
+    def body(_, t):
+        return prop_step(t, phi, bias, block_n=block_n)
+
+    t0 = jnp.zeros_like(bias)
+    return jax.lax.fori_loop(0, iters, body, t0)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "block_n"))
+def dense_eval(
+    phi_data,
+    phi_local,
+    phi_result,
+    r,
+    a,
+    w,
+    link_param,
+    link_kind,
+    link_mask,
+    comp_param,
+    comp_kind,
+    *,
+    iters,
+    block_n=128,
+):
+    s, n = r.shape
+
+    # ---- forward: data traffic (eq. 1/3), computational input (eq. 4) ----
+    t_minus = _propagate(phi_data, r, iters, block_n)
+    g = t_minus * phi_local  # [S, N]
+
+    # ---- forward: result traffic (eq. 2/6) ----
+    res_src = a[:, None] * g
+    t_plus = _propagate(phi_result, res_src, iters, block_n)
+
+    # ---- aggregate flows ----
+    f_data = t_minus[:, :, None] * phi_data      # [S, N, N]
+    f_res = t_plus[:, :, None] * phi_result
+    big_f = jnp.sum(f_data + f_res, axis=0)      # [N, N]
+    big_g = jnp.sum(w * g, axis=0)               # [N]
+
+    # ---- costs + first derivatives (L1 kernel) ----
+    d_link_flat, dp_link_flat = link_cost(
+        big_f.reshape(-1),
+        link_param.reshape(-1),
+        link_kind.reshape(-1),
+        link_mask.reshape(-1),
+        block=min(128, n * n),
+    )
+    d_link = d_link_flat.reshape(n, n)
+    dp_link = dp_link_flat.reshape(n, n)
+    c_node, cp_node = link_cost(
+        big_g,
+        comp_param,
+        comp_kind,
+        jnp.ones_like(big_g),
+        block=min(128, n),
+    )
+    total = jnp.sum(d_link) + jnp.sum(c_node)
+
+    # ---- backward: dT/dt+ (eq. 12) ----
+    # bias_plus[s, i] = sum_j phi_result[s,i,j] * D'_ij
+    bias_plus = jnp.einsum("sij,ij->si", phi_result, dp_link)
+    phi_result_t = jnp.transpose(phi_result, (0, 2, 1))
+    dt_plus = _propagate(phi_result_t, bias_plus, iters, block_n)
+
+    # ---- backward: dT/dr (eq. 11) ----
+    bias_r = phi_local * (w * cp_node[None, :] + a[:, None] * dt_plus) + jnp.einsum(
+        "sij,ij->si", phi_data, dp_link
+    )
+    phi_data_t = jnp.transpose(phi_data, (0, 2, 1))
+    dt_r = _propagate(phi_data_t, bias_r, iters, block_n)
+
+    return (
+        total,
+        big_f,
+        big_g,
+        dp_link,
+        cp_node,
+        dt_plus,
+        dt_r,
+        t_minus,
+        t_plus,
+    )
+
+
+def example_args(n, s):
+    """ShapeDtypeStructs for lowering at a given size class."""
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    return (
+        sd((s, n, n), f32),  # phi_data
+        sd((s, n), f32),     # phi_local
+        sd((s, n, n), f32),  # phi_result
+        sd((s, n), f32),     # r
+        sd((s,), f32),       # a
+        sd((s, n), f32),     # w
+        sd((n, n), f32),     # link_param
+        sd((n, n), f32),     # link_kind
+        sd((n, n), f32),     # link_mask
+        sd((n,), f32),       # comp_param
+        sd((n,), f32),       # comp_kind
+    )
+
+
+INPUT_NAMES = [
+    "phi_data",
+    "phi_local",
+    "phi_result",
+    "r",
+    "a",
+    "w",
+    "link_param",
+    "link_kind",
+    "link_mask",
+    "comp_param",
+    "comp_kind",
+]
+
+OUTPUT_NAMES = [
+    "total_cost",
+    "link_flow",
+    "workload",
+    "dp_link",
+    "cp_node",
+    "dt_plus",
+    "dt_r",
+    "t_minus",
+    "t_plus",
+]

@@ -1,0 +1,49 @@
+"""Structural sanity of the TPU resource estimates (DESIGN.md §7)."""
+
+from compile.estimate import (
+    IterationEstimate,
+    PropStepEstimate,
+    VMEM_BYTES,
+    render_table,
+)
+
+
+def test_vmem_within_budget_for_all_classes():
+    for n, s in [(32, 48), (128, 128)]:
+        p = PropStepEstimate(n=n, s=s, block_n=min(128, n))
+        assert p.vmem_bytes < 0.25 * VMEM_BYTES, (n, p.vmem_bytes)
+
+
+def test_large_class_matches_design_doc():
+    p = PropStepEstimate(n=128, s=128, block_n=128)
+    # 64 KiB phi tile dominates
+    assert abs(p.vmem_bytes - (4 * (128 * 128 + 128 + 256))) < 1
+    assert 0.003 < p.vmem_fraction < 0.005
+    # mat-vec: 0.5 flop/byte
+    assert abs(p.arithmetic_intensity - 0.5) < 1e-9
+    # [1,128]x[128,128] dot: 1/128 of the array per pass
+    assert abs(p.mxu_utilization - 1 / 128) < 1e-9
+
+
+def test_grid_covers_all_outputs():
+    p = PropStepEstimate(n=128, s=48, block_n=128)
+    gs, gb = p.grid
+    assert gs == 48 and gb == 1
+    p2 = PropStepEstimate(n=128, s=48, block_n=64)
+    assert p2.grid == (48, 2)
+
+
+def test_iteration_flops_scaling():
+    small = IterationEstimate(n=32, s=48, block_n=32)
+    large = IterationEstimate(n=128, s=128, block_n=128)
+    # flops scale as S * N^3 (4 recursions x N waves x S·N² per wave)
+    ratio = large.total_flops / small.total_flops
+    expect = (128 * 128**3) / (48 * 32**3)
+    assert abs(ratio - expect) / expect < 1e-9
+    assert large.roofline_seconds > small.roofline_seconds
+
+
+def test_render_table_mentions_classes():
+    text = render_table()
+    assert "small" in text and "large" in text
+    assert "KiB" in text

@@ -1,0 +1,145 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value ranges; fixed edge cases pin the
+saturation/masking semantics. This is the CORE correctness signal for the
+compute plane — the AOT artifacts contain exactly these kernels.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import SAT_BIG, link_cost, prop_step
+from compile.kernels.ref import link_cost_ref, prop_step_ref, propagate_ref
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------- link_cost
+@st.composite
+def cost_arrays(draw):
+    blocks = draw(st.integers(min_value=1, max_value=4))
+    n = 128 * blocks
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    f = rng.uniform(0.0, 8.0, n).astype(np.float32)
+    param = rng.uniform(0.5, 12.0, n).astype(np.float32)
+    kind = (rng.uniform(0, 1, n) > 0.5).astype(np.float32)
+    mask = (rng.uniform(0, 1, n) > 0.25).astype(np.float32)
+    return f, param, kind, mask
+
+
+@given(cost_arrays())
+def test_link_cost_matches_ref(arrays):
+    f, param, kind, mask = arrays
+    d, dp = link_cost(jnp.array(f), jnp.array(param), jnp.array(kind), jnp.array(mask))
+    d_ref, dp_ref = link_cost_ref(f, param, kind, mask)
+    np.testing.assert_allclose(d, d_ref, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(dp, dp_ref, rtol=1e-6, atol=1e-6)
+
+
+def test_link_cost_linear_family():
+    f = jnp.full((128,), 3.0, jnp.float32)
+    param = jnp.full((128,), 2.0, jnp.float32)
+    kind = jnp.zeros((128,), jnp.float32)
+    mask = jnp.ones((128,), jnp.float32)
+    d, dp = link_cost(f, param, kind, mask)
+    np.testing.assert_allclose(d, 6.0, rtol=1e-6)
+    np.testing.assert_allclose(dp, 2.0, rtol=1e-6)
+
+
+def test_link_cost_queue_family():
+    f = jnp.full((128,), 5.0, jnp.float32)
+    cap = jnp.full((128,), 10.0, jnp.float32)
+    kind = jnp.ones((128,), jnp.float32)
+    mask = jnp.ones((128,), jnp.float32)
+    d, dp = link_cost(f, cap, kind, mask)
+    np.testing.assert_allclose(d, 1.0, rtol=1e-6)       # 5/(10-5)
+    np.testing.assert_allclose(dp, 0.4, rtol=1e-6)      # 10/25
+
+
+def test_link_cost_saturation_clamps():
+    f = jnp.array([10.0, 11.0] + [0.0] * 126, jnp.float32)
+    cap = jnp.full((128,), 10.0, jnp.float32)
+    kind = jnp.ones((128,), jnp.float32)
+    mask = jnp.ones((128,), jnp.float32)
+    d, dp = link_cost(f, cap, kind, mask)
+    assert float(d[0]) >= SAT_BIG and float(d[1]) >= SAT_BIG
+    assert float(dp[0]) >= SAT_BIG
+    assert np.isfinite(np.asarray(d)).all()  # clamped, not inf/NaN
+
+
+def test_link_cost_mask_zeroes_padding():
+    f = jnp.full((128,), 3.0, jnp.float32)
+    param = jnp.full((128,), 1.0, jnp.float32)
+    kind = jnp.zeros((128,), jnp.float32)
+    mask = jnp.zeros((128,), jnp.float32)
+    d, dp = link_cost(f, param, kind, mask)
+    assert float(jnp.abs(d).sum()) == 0.0
+    assert float(jnp.abs(dp).sum()) == 0.0
+
+
+def test_link_cost_rejects_bad_block():
+    with pytest.raises(ValueError):
+        link_cost(
+            jnp.zeros(100, jnp.float32),
+            jnp.ones(100, jnp.float32),
+            jnp.zeros(100, jnp.float32),
+            jnp.ones(100, jnp.float32),
+            block=128,
+        )
+
+
+# ---------------------------------------------------------------- prop_step
+@st.composite
+def prop_arrays(draw):
+    s = draw(st.integers(min_value=1, max_value=5))
+    n_pow = draw(st.sampled_from([8, 16, 32, 64]))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    t = rng.uniform(0, 2, (s, n_pow)).astype(np.float32)
+    phi = rng.uniform(0, 1, (s, n_pow, n_pow)).astype(np.float32)
+    r = rng.uniform(0, 1, (s, n_pow)).astype(np.float32)
+    return t, phi, r
+
+
+@given(prop_arrays())
+def test_prop_step_matches_ref(arrays):
+    t, phi, r = arrays
+    out = prop_step(jnp.array(t), jnp.array(phi), jnp.array(r), block_n=min(128, t.shape[1]))
+    ref = prop_step_ref(t, phi, r)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_prop_step_block_invariance(seed):
+    # different BlockSpec tilings must give identical results
+    rng = np.random.default_rng(seed)
+    s, n = 2, 32
+    t = rng.uniform(0, 1, (s, n)).astype(np.float32)
+    phi = rng.uniform(0, 1, (s, n, n)).astype(np.float32)
+    r = rng.uniform(0, 1, (s, n)).astype(np.float32)
+    full = prop_step(jnp.array(t), jnp.array(phi), jnp.array(r), block_n=32)
+    tiled = prop_step(jnp.array(t), jnp.array(phi), jnp.array(r), block_n=8)
+    np.testing.assert_allclose(full, tiled, rtol=1e-6, atol=1e-6)
+
+
+def test_propagation_fixed_point_on_dag():
+    # chain 0 -> 1 -> 2 -> 3; after N waves, t must be the exact fixed point
+    s, n = 1, 8
+    phi = np.zeros((s, n, n), np.float32)
+    for i in range(3):
+        phi[0, i, i + 1] = 1.0
+    r = np.zeros((s, n), np.float32)
+    r[0, 0] = 2.0
+    t = propagate_ref(jnp.array(phi), jnp.array(r), n)
+    # every chain node accumulates the source rate
+    np.testing.assert_allclose(np.asarray(t)[0, :4], [2.0, 2.0, 2.0, 2.0], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(t)[0, 4:], 0.0)
+    # kernel-based propagation agrees
+    tk = jnp.zeros((s, n), jnp.float32)
+    for _ in range(n):
+        tk = prop_step(tk, jnp.array(phi), jnp.array(r), block_n=8)
+    np.testing.assert_allclose(tk, t, rtol=1e-6)

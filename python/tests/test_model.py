@@ -1,0 +1,155 @@
+"""L2 dense evaluator vs a straightforward NumPy oracle on random loop-free
+strategies over random small graphs."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.model import dense_eval
+
+settings.register_profile("ci", deadline=None, max_examples=15)
+settings.load_profile("ci")
+
+
+def numpy_oracle(pd, pl_, pr, r, a, w, lp, lk, lm, cp, ck):
+    """Direct NumPy evaluation of §II/§III on dense tensors."""
+    s, n = r.shape
+    inv = np.linalg.inv  # loop-free => (I - Phi^T) invertible with spectral radius < 1
+
+    t_minus = np.zeros((s, n))
+    t_plus = np.zeros((s, n))
+    dt_plus = np.zeros((s, n))
+    dt_r = np.zeros((s, n))
+
+    for si in range(s):
+        t_minus[si] = r[si] @ inv(np.eye(n) - pd[si])
+    g = t_minus * pl_
+    for si in range(s):
+        t_plus[si] = (a[si] * g[si]) @ inv(np.eye(n) - pr[si])
+
+    F = np.einsum("si,sij->ij", t_minus, pd) + np.einsum("si,sij->ij", t_plus, pr)
+    G = np.sum(w * g, axis=0)
+
+    def cost(f, param, kind, mask):
+        lin_d, lin_dp = param * f, param
+        gap = np.maximum(param - f, 1e-30)
+        que_d, que_dp = f / gap, param / gap**2
+        d = np.where(kind > 0.5, que_d, lin_d) * (mask > 0.5)
+        dp = np.where(kind > 0.5, que_dp, lin_dp) * (mask > 0.5)
+        return d, dp
+
+    D, Dp = cost(F, lp, lk, lm)
+    C, Cp = cost(G, cp, ck, np.ones_like(G))
+    T = D.sum() + C.sum()
+
+    for si in range(s):
+        bias = np.einsum("ij,ij->i", pr[si], Dp)
+        dt_plus[si] = bias @ inv(np.eye(n) - pr[si].T)
+    for si in range(s):
+        bias = pl_[si] * (w[si] * Cp + a[si] * dt_plus[si]) + np.einsum(
+            "ij,ij->i", pd[si], Dp
+        )
+        dt_r[si] = bias @ inv(np.eye(n) - pd[si].T)
+
+    return T, F, G, Dp, Cp, dt_plus, dt_r, t_minus, t_plus
+
+
+@st.composite
+def random_instance(draw):
+    """Random loop-free strategy over a random DAG-ordered graph."""
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    n = draw(st.sampled_from([8, 16]))
+    s = draw(st.integers(min_value=1, max_value=3))
+
+    # random permutation gives a topological order; route only "forward"
+    order = rng.permutation(n)
+    rank = np.empty(n, int)
+    rank[order] = np.arange(n)
+
+    lm = np.zeros((n, n), np.float32)
+    for i in range(n):
+        for j in range(n):
+            if i != j and rng.uniform() < 0.4:
+                lm[i, j] = 1.0
+    lp = rng.uniform(5, 15, (n, n)).astype(np.float32) * lm
+    lk = (rng.uniform(0, 1, (n, n)) > 0.5).astype(np.float32)
+
+    pd = np.zeros((s, n, n), np.float32)
+    pr = np.zeros((s, n, n), np.float32)
+    pl_ = np.zeros((s, n), np.float32)
+    r = np.zeros((s, n), np.float32)
+    dests = rng.integers(0, n, s)
+    for si in range(s):
+        for i in range(n):
+            fwd = [j for j in range(n) if lm[i, j] > 0 and rank[j] > rank[i]]
+            # data plane: split between local compute and forward edges
+            weights = rng.uniform(0.1, 1.0, len(fwd) + 1)
+            weights /= weights.sum()
+            pl_[si, i] = weights[0]
+            for k, j in enumerate(fwd):
+                pd[si, i, j] = weights[k + 1]
+            # result plane: forward-only split (dest row stays zero)
+            if i != dests[si] and fwd:
+                wts = rng.uniform(0.1, 1.0, len(fwd))
+                wts /= wts.sum()
+                for k, j in enumerate(fwd):
+                    pr[si, i, j] = wts[k]
+            elif i != dests[si]:
+                pl_[si, i] = 1.0  # no forward edges: everything local
+                pd[si, i, :] = 0.0
+        r[si] = rng.uniform(0, 1, n).astype(np.float32) * (rng.uniform(0, 1, n) < 0.4)
+    a = rng.uniform(0.2, 2.0, s).astype(np.float32)
+    w = rng.uniform(0.5, 2.0, (s, n)).astype(np.float32)
+    cp = rng.uniform(20, 40, n).astype(np.float32)
+    ck = (rng.uniform(0, 1, n) > 0.5).astype(np.float32)
+    return pd, pl_, pr, r, a, w, lp, lk, lm, cp, ck
+
+
+@given(random_instance())
+def test_dense_eval_matches_numpy_oracle(inst):
+    pd, pl_, pr, r, a, w, lp, lk, lm, cp, ck = inst
+    n = r.shape[1]
+    got = dense_eval(
+        *(jnp.array(x) for x in inst), iters=n, block_n=min(128, n)
+    )
+    want = numpy_oracle(*(np.asarray(x, np.float64) for x in inst))
+    names = [
+        "T", "F", "G", "Dp", "Cp", "dt_plus", "dt_r", "t_minus", "t_plus",
+    ]
+    for name, gv, wv in zip(names, got, want):
+        np.testing.assert_allclose(
+            np.asarray(gv), wv, rtol=2e-4, atol=2e-4, err_msg=name
+        )
+
+
+def test_shapes_and_dtypes():
+    n, s = 8, 2
+    zeros2 = jnp.zeros((s, n), jnp.float32)
+    zeros3 = jnp.zeros((s, n, n), jnp.float32)
+    eye_mask = jnp.ones((n, n), jnp.float32)
+    out = dense_eval(
+        zeros3, jnp.ones((s, n), jnp.float32), zeros3, zeros2,
+        jnp.ones((s,), jnp.float32), jnp.ones((s, n), jnp.float32),
+        jnp.ones((n, n), jnp.float32), jnp.zeros((n, n), jnp.float32), eye_mask,
+        jnp.ones((n,), jnp.float32), jnp.zeros((n,), jnp.float32),
+        iters=n, block_n=8,
+    )
+    t, f, g = out[0], out[1], out[2]
+    assert t.shape == ()
+    assert f.shape == (n, n)
+    assert g.shape == (n,)
+    assert all(o.dtype == jnp.float32 for o in out[1:])
+
+
+def test_zero_input_zero_cost():
+    n, s = 8, 1
+    out = dense_eval(
+        jnp.zeros((s, n, n), jnp.float32), jnp.ones((s, n), jnp.float32),
+        jnp.zeros((s, n, n), jnp.float32), jnp.zeros((s, n), jnp.float32),
+        jnp.ones((s,), jnp.float32), jnp.ones((s, n), jnp.float32),
+        jnp.ones((n, n), jnp.float32), jnp.ones((n, n), jnp.float32),
+        jnp.ones((n, n), jnp.float32), jnp.ones((n,), jnp.float32),
+        jnp.ones((n,), jnp.float32), iters=n, block_n=8,
+    )
+    assert float(out[0]) == 0.0

@@ -1,0 +1,282 @@
+//! Blocked-node sets (§IV "Blocked nodes"): the loop-freedom mechanism.
+//!
+//! For the result plane of task `(d,m)`: at a Theorem-1 point,
+//! `∂T/∂t⁺` decreases strictly along every active result path toward the
+//! destination. To keep every iterate loop-free, node `i` must not *start*
+//! forwarding results to a neighbor `j` when either
+//!
+//! 1. `∂T/∂t⁺_j ≥ ∂T/∂t⁺_i` (adding `(i,j)` could invert the ordering), or
+//! 2. `j` has an active result path containing an *improper* link `(p,q)`
+//!    with `∂T/∂t⁺_q ≥ ∂T/∂t⁺_p` (the ordering is already inverted
+//!    downstream of `j`, so new flow through `j` could close a cycle while
+//!    the inversion unwinds).
+//!
+//! Neighbors that already receive flow (`φ_ij > 0`) are never blocked —
+//! gradient descent shrinks them smoothly; forcibly zeroing them could
+//! *increase* cost and break Theorem 2 monotonicity. (Gallager 1977 uses
+//! the same convention.) The same construction applies to the data plane
+//! with `∂T/∂r` and data paths.
+//!
+//! In the distributed implementation the improper tag is piggybacked on
+//! the broadcast messages (§IV); here we compute it centrally with one
+//! reverse-topological sweep per task and plane.
+
+use crate::graph::DiGraph;
+use crate::model::marginals::Marginals;
+use crate::model::network::Network;
+use crate::model::strategy::Strategy;
+
+/// Blocked sets for one task: `data[i][slot]` / `result[i][slot]` are
+/// aligned with the strategy's slot layout (data slot 0 = local compute,
+/// never blocked).
+#[derive(Clone, Debug)]
+pub struct BlockedSets {
+    pub data: Vec<Vec<bool>>,
+    pub result: Vec<Vec<bool>>,
+}
+
+/// Improper-link tags for both planes of one task — the global O(N+E)
+/// part of blocked-set construction, computed once and shared by every
+/// node's row query (the per-node Gauss–Seidel sweep would otherwise pay
+/// O(N) full reconstructions per task per position).
+#[derive(Clone, Debug)]
+pub struct PlaneTags {
+    pub data_tag: Vec<bool>,
+    pub result_tag: Vec<bool>,
+}
+
+/// Compute the improper tags for `task` under the current marginals.
+pub fn plane_tags(net: &Network, phi: &Strategy, marg: &Marginals, task: usize) -> PlaneTags {
+    let g = &net.graph;
+    let rmask = phi.result_active_mask(net, task);
+    let result_tag = tagged_nodes(g, &rmask, &marg.dt_plus[task]);
+    let dmask = phi.data_active_mask(net, task);
+    let data_tag = tagged_nodes(g, &dmask, &marg.dt_r[task]);
+    PlaneTags {
+        data_tag,
+        result_tag,
+    }
+}
+
+/// Blocked slots of one node for one task (slot layouts match Strategy).
+#[derive(Clone, Debug)]
+pub struct NodeBlocked {
+    /// `[1 + out_degree]`, slot 0 = local computation (never blocked).
+    pub data: Vec<bool>,
+    /// `[out_degree]`.
+    pub result: Vec<bool>,
+}
+
+/// Per-node blocked rows given precomputed tags — O(out_degree).
+pub fn blocked_rows_for_node(
+    net: &Network,
+    phi: &Strategy,
+    marg: &Marginals,
+    tags: &PlaneTags,
+    task: usize,
+    i: usize,
+) -> NodeBlocked {
+    let g = &net.graph;
+    let deg = g.out_degree(i);
+
+    let mut result = vec![false; deg];
+    if i != net.tasks[task].dest {
+        for (k, &eid) in g.out_edge_ids(i).iter().enumerate() {
+            let j = g.edge(eid).dst;
+            if phi.result[task][i][k] > 0.0 {
+                continue; // active neighbors stay available
+            }
+            if marg.dt_plus[task][j] >= marg.dt_plus[task][i] || tags.result_tag[j] {
+                result[k] = true;
+            }
+        }
+        // never block every slot: keep the minimum-marginal neighbor
+        ensure_one_free(&mut result, || {
+            g.out_edge_ids(i)
+                .iter()
+                .enumerate()
+                .map(|(k, &eid)| (k, marg.d_link[eid] + marg.dt_plus[task][g.edge(eid).dst]))
+                .collect()
+        });
+    }
+
+    // slot 0 (local computation) is never blocked: it cannot create a
+    // routing loop.
+    let mut data = vec![false; deg + 1];
+    for (k, &eid) in g.out_edge_ids(i).iter().enumerate() {
+        let j = g.edge(eid).dst;
+        if phi.data[task][i][k + 1] > 0.0 {
+            continue;
+        }
+        if marg.dt_r[task][j] >= marg.dt_r[task][i] || tags.data_tag[j] {
+            data[k + 1] = true;
+        }
+    }
+
+    NodeBlocked { data, result }
+}
+
+/// Compute the per-task blocked sets (all nodes) from the current
+/// marginals — the Jacobi-style full construction used by `step_dense`.
+pub fn blocked_sets(
+    net: &Network,
+    phi: &Strategy,
+    marg: &Marginals,
+    task: usize,
+) -> BlockedSets {
+    let tags = plane_tags(net, phi, marg, task);
+    let n = net.n();
+    let mut data = Vec::with_capacity(n);
+    let mut result = Vec::with_capacity(n);
+    for i in 0..n {
+        let rows = blocked_rows_for_node(net, phi, marg, &tags, task, i);
+        data.push(rows.data);
+        result.push(rows.result);
+    }
+    BlockedSets { data, result }
+}
+
+/// Mark nodes having an active path to an *improper* link — a link `(p,q)`
+/// with `marginal[q] ≥ marginal[p]`. One reverse-topological sweep: node
+/// `p` is tagged if one of its active out-links is improper or leads to a
+/// tagged node.
+fn tagged_nodes(g: &DiGraph, active: &[bool], marginal: &[f64]) -> Vec<bool> {
+    let order = crate::graph::algorithms::topo_order_masked(g, active)
+        .expect("active subgraph must be loop-free");
+    let mut tag = vec![false; g.node_count()];
+    for &p in order.iter().rev() {
+        for &eid in g.out_edge_ids(p) {
+            if !active[eid] {
+                continue;
+            }
+            let q = g.edge(eid).dst;
+            if marginal[q] >= marginal[p] || tag[q] {
+                tag[p] = true;
+                break;
+            }
+        }
+    }
+    tag
+}
+
+/// If the heuristics blocked every slot, unblock the one with the lowest
+/// Theorem-1 marginal so the node always has a feasible strategy.
+fn ensure_one_free<F: FnOnce() -> Vec<(usize, f64)>>(slots: &mut [bool], candidates: F) {
+    if !slots.is_empty() && slots.iter().all(|&b| b) {
+        let cands = candidates();
+        if let Some((k, _)) = cands
+            .into_iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        {
+            slots[k] = false;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::flows::compute_flows;
+    use crate::model::marginals::compute_marginals;
+    use crate::model::network::testnet::diamond;
+    use crate::model::strategy::out_slot;
+
+    fn setup(net: &Network, phi: &Strategy) -> Marginals {
+        let fs = compute_flows(net, phi).unwrap();
+        compute_marginals(net, phi, &fs).unwrap()
+    }
+
+    #[test]
+    fn active_neighbors_never_blocked() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let m = setup(&net, &phi);
+        let b = blocked_sets(&net, &phi, &m, 0);
+        for i in 0..net.n() {
+            for (k, &frac) in phi.result[0][i].iter().enumerate() {
+                if frac > 0.0 {
+                    assert!(!b.result[i][k], "active result slot ({i},{k}) blocked");
+                }
+            }
+            for (k, &frac) in phi.data[0][i].iter().enumerate() {
+                if frac > 0.0 {
+                    assert!(!b.data[i][k], "active data slot ({i},{k}) blocked");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn local_compute_slot_never_blocked() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let m = setup(&net, &phi);
+        let b = blocked_sets(&net, &phi, &m, 0);
+        for i in 0..net.n() {
+            assert!(!b.data[i][0]);
+        }
+    }
+
+    #[test]
+    fn upstream_neighbor_blocked_on_result_plane() {
+        // With results flowing 0 -> (SP tree) -> 3, the marginal at 0 is the
+        // largest; 3's upstream neighbors must not route results to 0.
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let m = setup(&net, &phi);
+        let b = blocked_sets(&net, &phi, &m, 0);
+        // node 1 has out-neighbors 0 and 3; dt_plus[0] > dt_plus[1] so the
+        // slot toward 0 must be blocked (φ_10 = 0 on the result plane).
+        let s10 = out_slot(&net.graph, 1, 0).unwrap();
+        if phi.result[0][1][s10] == 0.0 {
+            assert!(
+                b.result[1][s10],
+                "slot 1->0 should be blocked: dt_plus[0]={} dt_plus[1]={}",
+                m.dt_plus[0][0], m.dt_plus[0][1]
+            );
+        }
+    }
+
+    #[test]
+    fn destination_has_no_result_blocks_needed() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let m = setup(&net, &phi);
+        let b = blocked_sets(&net, &phi, &m, 0);
+        // destination's result plane is identically zero; blocked set is
+        // all-false by construction
+        assert!(b.result[3].iter().all(|&x| !x));
+    }
+
+    #[test]
+    fn never_blocks_everything() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let m = setup(&net, &phi);
+        let b = blocked_sets(&net, &phi, &m, 0);
+        for i in 0..net.n() {
+            assert!(
+                b.data[i].iter().any(|&x| !x),
+                "node {i} data plane fully blocked"
+            );
+            if i != 3 && !b.result[i].is_empty() {
+                assert!(
+                    b.result[i].iter().any(|&x| !x),
+                    "node {i} result plane fully blocked"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tagging_detects_improper_downstream() {
+        // chain 0 -> 1 -> 2 active; marginals inverted on (1,2)
+        let g = crate::graph::DiGraph::new(3, &[(0, 1), (1, 2)]);
+        let active = vec![true, true];
+        let marginal = vec![3.0, 1.0, 2.0]; // (1,2) improper: m[2] >= m[1]
+        let tag = tagged_nodes(&g, &active, &marginal);
+        assert!(tag[1], "node 1 owns the improper link");
+        assert!(tag[0], "node 0 reaches it");
+        assert!(!tag[2], "node 2 has no outgoing active links");
+    }
+}

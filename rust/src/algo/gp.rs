@@ -1,0 +1,262 @@
+//! GP — the non-scaled gradient projection baseline (§V).
+//!
+//! The paper defines GP by replacing the SGP scaling matrices with
+//! `M_i = (t_i/β)·diag(1,…,1,0,1,…,1)` where the zero sits at the
+//! min-marginal slot. The induced projection step has the classic Gallager
+//! (1977) closed form: every non-minimal slot sheds
+//! `Δ_j = min(φ_j, β·(δ_j − δ_min)/t_i)` and the minimum-marginal slot
+//! collects the total. GP shares SGP's blocked sets and fixed points but
+//! converges markedly slower — Fig. 5b.
+
+use anyhow::{bail, Result};
+
+use crate::model::flows::compute_flows;
+use crate::model::marginals::{compute_marginals, theorem1_residual, Marginals};
+use crate::model::network::Network;
+use crate::model::strategy::Strategy;
+
+use super::blocked::{blocked_sets, BlockedSets};
+use super::{IterationStats, Optimizer};
+
+/// Non-scaled gradient projection with step parameter `β`.
+pub struct Gp {
+    /// Step size β (the paper leaves it unspecified; 1.0 with the descent
+    /// safeguard is a faithful, stable choice).
+    pub beta: f64,
+    /// Safeguard: shrink β on cost increase (keeps Theorem 2 descent).
+    pub safeguard: bool,
+    pub retries: usize,
+}
+
+impl Gp {
+    pub fn new(beta: f64) -> Gp {
+        Gp {
+            beta,
+            safeguard: true,
+            retries: 0,
+        }
+    }
+
+    /// Gallager-style shift on one simplex vector. `delta` and `blocked`
+    /// are slot-aligned with `phi_vec`; `traffic` is `t_i`.
+    fn shift(
+        phi_vec: &[f64],
+        delta: &[f64],
+        blocked: &[bool],
+        traffic: f64,
+        beta: f64,
+    ) -> Vec<f64> {
+        let mut v = phi_vec.to_vec();
+        // receiving slot: min marginal among unblocked
+        let jmin = match (0..v.len())
+            .filter(|&j| !blocked[j])
+            .min_by(|&a, &b| delta[a].partial_cmp(&delta[b]).unwrap())
+        {
+            Some(j) => j,
+            None => return v,
+        };
+        if traffic <= 0.0 {
+            // zero-traffic node: jump entirely to the best slot (needed to
+            // satisfy Theorem 1 where Lemma 1 is vacuous)
+            v.iter_mut().for_each(|x| *x = 0.0);
+            v[jmin] = 1.0;
+            return v;
+        }
+        let mut moved = 0.0;
+        for j in 0..v.len() {
+            if j == jmin || v[j] <= 0.0 {
+                continue;
+            }
+            let want = beta * (delta[j] - delta[jmin]).max(0.0) / traffic;
+            let take = want.min(v[j]);
+            v[j] -= take;
+            moved += take;
+        }
+        v[jmin] += moved;
+        v
+    }
+
+    fn propose(
+        &self,
+        net: &Network,
+        phi: &Strategy,
+        marg: &Marginals,
+        flows: &crate::model::flows::FlowState,
+        blocked_all: &[BlockedSets],
+        beta: f64,
+    ) -> Strategy {
+        let mut cand = phi.clone();
+        for s in 0..net.s() {
+            let blocked = &blocked_all[s];
+            for i in 0..net.n() {
+                let delta = marg.delta_minus(net, s, i);
+                cand.data[s][i] = Self::shift(
+                    &phi.data[s][i],
+                    &delta,
+                    &blocked.data[i],
+                    flows.t_minus[s][i],
+                    beta,
+                );
+                if i != net.tasks[s].dest && net.graph.out_degree(i) > 0 {
+                    let delta = marg.delta_plus(net, s, i);
+                    cand.result[s][i] = Self::shift(
+                        &phi.result[s][i],
+                        &delta,
+                        &blocked.result[i],
+                        flows.t_plus[s][i],
+                        beta,
+                    );
+                }
+            }
+        }
+        cand
+    }
+}
+
+impl Optimizer for Gp {
+    fn name(&self) -> &'static str {
+        "gp"
+    }
+
+    fn step(&mut self, net: &Network, phi: &mut Strategy) -> Result<IterationStats> {
+        let flows = compute_flows(net, phi).map_err(anyhow::Error::new)?;
+        if !flows.total_cost.is_finite() {
+            bail!("initial strategy has infinite cost");
+        }
+        let marg = compute_marginals(net, phi, &flows).map_err(anyhow::Error::new)?;
+        let blocked_all: Vec<BlockedSets> = (0..net.s())
+            .map(|s| blocked_sets(net, phi, &marg, s))
+            .collect();
+
+        let mut beta = self.beta;
+        for _attempt in 0..40 {
+            let cand = self.propose(net, phi, &marg, &flows, &blocked_all, beta);
+            if cand.is_loop_free(net) {
+                if let Ok(fs) = compute_flows(net, &cand) {
+                    if fs.total_cost.is_finite()
+                        && (!self.safeguard || fs.total_cost <= flows.total_cost + 1e-12)
+                    {
+                        *phi = cand;
+                        break;
+                    }
+                }
+            }
+            self.retries += 1;
+            beta *= 0.25;
+        }
+
+        let flows2 = compute_flows(net, phi).map_err(anyhow::Error::new)?;
+        let marg2 = compute_marginals(net, phi, &flows2).map_err(anyhow::Error::new)?;
+        Ok(IterationStats {
+            total_cost: flows2.total_cost,
+            residual: theorem1_residual(net, phi, &marg2),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::sgp::Sgp;
+    use crate::model::network::testnet::diamond;
+
+    #[test]
+    fn monotone_descent() {
+        let net = diamond(true);
+        let mut phi = Strategy::local_compute_init(&net);
+        let mut gp = Gp::new(1.0);
+        let mut last = f64::INFINITY;
+        for _ in 0..50 {
+            let st = gp.step(&net, &mut phi).unwrap();
+            assert!(st.total_cost <= last + 1e-9);
+            last = st.total_cost;
+            assert!(phi.is_loop_free(&net));
+        }
+    }
+
+    #[test]
+    fn same_fixed_point_as_sgp() {
+        // GP and SGP are "supposed to converge to the same global strategy
+        // with different convergence speed" (§V). Compare final costs.
+        let net = diamond(true);
+
+        let mut phi_s = Strategy::local_compute_init(&net);
+        let mut sgp = Sgp::new();
+        for _ in 0..80 {
+            sgp.step(&net, &mut phi_s).unwrap();
+        }
+        let ts = compute_flows(&net, &phi_s).unwrap().total_cost;
+
+        let mut phi_g = Strategy::local_compute_init(&net);
+        let mut gp = Gp::new(1.0);
+        for _ in 0..800 {
+            gp.step(&net, &mut phi_g).unwrap();
+        }
+        let tg = compute_flows(&net, &phi_g).unwrap().total_cost;
+
+        assert!(
+            (ts - tg).abs() < 5e-3 * ts.max(1e-9),
+            "SGP {ts} vs GP {tg} diverge"
+        );
+    }
+
+    #[test]
+    fn sgp_converges_faster() {
+        // Count iterations to reach within 1% of the (deep-run) optimum.
+        let net = diamond(true);
+        let target = {
+            let mut phi = Strategy::local_compute_init(&net);
+            let mut sgp = Sgp::new();
+            for _ in 0..200 {
+                sgp.step(&net, &mut phi).unwrap();
+            }
+            compute_flows(&net, &phi).unwrap().total_cost
+        };
+        let thresh = target * 1.01;
+
+        let count_iters = |mut opt: Box<dyn Optimizer>| -> usize {
+            let mut phi = Strategy::local_compute_init(&net);
+            for k in 1..=400 {
+                let st = opt.step(&net, &mut phi).unwrap();
+                if st.total_cost <= thresh {
+                    return k;
+                }
+            }
+            400
+        };
+        let sgp_iters = count_iters(Box::new(Sgp::new()));
+        let gp_iters = count_iters(Box::new(Gp::new(1.0)));
+        assert!(
+            sgp_iters <= gp_iters,
+            "SGP took {sgp_iters} vs GP {gp_iters}"
+        );
+    }
+
+    #[test]
+    fn zero_traffic_jumps_to_best() {
+        let v = Gp::shift(&[0.2, 0.8], &[5.0, 1.0], &[false, false], 0.0, 1.0);
+        assert_eq!(v, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn shift_respects_blocked_receiver() {
+        // best slot blocked -> second best receives
+        let v = Gp::shift(&[0.5, 0.5, 0.0], &[3.0, 2.0, 1.0], &[false, false, true], 1.0, 10.0);
+        assert_eq!(v[2], 0.0);
+        assert!(v[1] > 0.5);
+        assert!((v.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shift_preserves_simplex() {
+        let v = Gp::shift(
+            &[0.3, 0.3, 0.4],
+            &[2.0, 1.0, 3.0],
+            &[false, false, false],
+            2.0,
+            0.5,
+        );
+        assert!((v.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(v.iter().all(|&x| x >= 0.0));
+    }
+}

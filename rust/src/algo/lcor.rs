@@ -1,0 +1,85 @@
+//! LCOR — Local Computation Optimal Routing baseline (§V).
+//!
+//! All exogenous input is computed at its data source
+//! (`φ⁻_i0 ≡ 1`); only the *result* routing `φ⁺` is optimized, using the
+//! scaled-gradient-projection machinery of the paper's reference [25]
+//! (Bertsekas–Gafni–Gallager second-derivative routing). The paper
+//! simulates scenarios where pure-local computation is feasible, which the
+//! scenario builders guarantee.
+//!
+//! Implemented as SGP with the data plane frozen at the all-local
+//! strategy — the result-plane update then *is* the classic optimal-routing
+//! algorithm (no offloading interplay).
+
+use crate::model::network::Network;
+use crate::model::strategy::Strategy;
+
+use super::sgp::{Restriction, Sgp};
+
+/// Build the LCOR optimizer and its initial strategy.
+pub fn lcor_optimizer(net: &Network) -> (Sgp, Strategy) {
+    debug_assert!(
+        net.local_computation_feasible(),
+        "LCOR requires locally-feasible computation (paper §V)"
+    );
+    let phi = Strategy::local_compute_init(net);
+    let sgp = Sgp::with_restriction(Restriction {
+        freeze_data: true,
+        freeze_result: false,
+        extra_blocked_data: None,
+    });
+    (sgp, phi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::Optimizer;
+    use crate::model::flows::compute_flows;
+    use crate::model::network::testnet::{diamond, line3};
+
+    #[test]
+    fn data_plane_stays_local() {
+        let net = diamond(true);
+        let (mut opt, mut phi) = lcor_optimizer(&net);
+        for _ in 0..30 {
+            opt.step(&net, &mut phi).unwrap();
+        }
+        for s in 0..net.s() {
+            for i in 0..net.n() {
+                assert_eq!(phi.data[s][i][0], 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn result_routing_descends() {
+        let net = line3();
+        let (mut opt, mut phi) = lcor_optimizer(&net);
+        let mut last = f64::INFINITY;
+        for _ in 0..40 {
+            let st = opt.step(&net, &mut phi).unwrap();
+            assert!(st.total_cost <= last + 1e-9);
+            last = st.total_cost;
+            assert!(phi.is_loop_free(&net));
+        }
+    }
+
+    #[test]
+    fn lcor_never_beats_sgp() {
+        let net = diamond(true);
+        let (mut lcor, mut phi_l) = lcor_optimizer(&net);
+        for _ in 0..100 {
+            lcor.step(&net, &mut phi_l).unwrap();
+        }
+        let tl = compute_flows(&net, &phi_l).unwrap().total_cost;
+
+        let mut sgp = crate::algo::Sgp::new();
+        let mut phi_s = Strategy::local_compute_init(&net);
+        for _ in 0..100 {
+            sgp.step(&net, &mut phi_s).unwrap();
+        }
+        let ts = compute_flows(&net, &phi_s).unwrap().total_cost;
+        assert!(ts <= tl + 1e-6, "SGP {ts} vs LCOR {tl}");
+    }
+}

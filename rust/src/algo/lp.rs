@@ -1,0 +1,364 @@
+//! Dense two-phase primal simplex LP solver — the substrate for the LPR
+//! baseline (§V, paper ref [8]).
+//!
+//! Solves `min cᵀx  s.t.  A_le x ≤ b_le, A_eq x = b_eq, x ≥ 0` by the
+//! textbook tableau method with Bland's anti-cycling rule. Problem sizes in
+//! cecflow are small (tens of variables × tens of constraints per task), so
+//! a dense tableau is the simplest dependable choice; the solver is still
+//! written for general problems and brute-force-validated in tests.
+
+/// An LP in inequality/equality form (minimization).
+#[derive(Clone, Debug, Default)]
+pub struct LpProblem {
+    /// Objective coefficients (length = number of structural variables).
+    pub objective: Vec<f64>,
+    /// `row · x ≤ rhs` constraints.
+    pub le_rows: Vec<(Vec<f64>, f64)>,
+    /// `row · x = rhs` constraints.
+    pub eq_rows: Vec<(Vec<f64>, f64)>,
+}
+
+/// Solver outcome.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LpOutcome {
+    Optimal { x: Vec<f64>, value: f64 },
+    Infeasible,
+    Unbounded,
+}
+
+impl LpProblem {
+    pub fn new(num_vars: usize) -> LpProblem {
+        LpProblem {
+            objective: vec![0.0; num_vars],
+            le_rows: Vec::new(),
+            eq_rows: Vec::new(),
+        }
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.objective.len()
+    }
+
+    pub fn add_le(&mut self, row: Vec<f64>, rhs: f64) {
+        assert_eq!(row.len(), self.num_vars());
+        self.le_rows.push((row, rhs));
+    }
+
+    pub fn add_eq(&mut self, row: Vec<f64>, rhs: f64) {
+        assert_eq!(row.len(), self.num_vars());
+        self.eq_rows.push((row, rhs));
+    }
+
+    /// Solve with two-phase simplex.
+    pub fn solve(&self) -> LpOutcome {
+        let n = self.num_vars();
+        let m_le = self.le_rows.len();
+        let m = m_le + self.eq_rows.len();
+        if m == 0 {
+            // No constraints: optimum is 0 unless some c_j < 0 (unbounded).
+            if self.objective.iter().any(|&c| c < -1e-12) {
+                return LpOutcome::Unbounded;
+            }
+            return LpOutcome::Optimal {
+                x: vec![0.0; n],
+                value: 0.0,
+            };
+        }
+
+        // Columns: [structural n][slack m_le][artificial m].
+        let n_slack = m_le;
+        let total = n + n_slack + m;
+        // tableau rows: m constraint rows + 1 objective row (phase-dependent)
+        let mut tab = vec![vec![0.0f64; total + 1]; m + 1];
+        let mut basis = vec![0usize; m];
+
+        for (r, (row, rhs)) in self
+            .le_rows
+            .iter()
+            .chain(self.eq_rows.iter())
+            .enumerate()
+        {
+            let mut rhs = *rhs;
+            let mut coef = row.clone();
+            let is_le = r < m_le;
+            let mut slack_sign = 1.0;
+            if rhs < 0.0 {
+                // normalize to nonnegative rhs
+                rhs = -rhs;
+                coef.iter_mut().for_each(|c| *c = -*c);
+                slack_sign = -1.0;
+            }
+            for (j, &c) in coef.iter().enumerate() {
+                tab[r][j] = c;
+            }
+            if is_le {
+                tab[r][n + r] = slack_sign;
+            }
+            tab[r][n + n_slack + r] = 1.0; // artificial
+            tab[r][total] = rhs;
+            basis[r] = n + n_slack + r;
+        }
+
+        // ---- Phase I: minimize sum of artificials ----
+        // objective row = -Σ (constraint rows) restricted to non-artificials
+        for j in 0..=total {
+            let mut s = 0.0;
+            for r in 0..m {
+                s += tab[r][j];
+            }
+            tab[m][j] = -s;
+        }
+        for r in 0..m {
+            let a = n + n_slack + r;
+            tab[m][a] = 0.0;
+        }
+        if !simplex_iterate(&mut tab, &mut basis, total) {
+            return LpOutcome::Unbounded; // cannot happen in phase I
+        }
+        let phase1 = -tab[m][total];
+        if phase1 > 1e-7 {
+            return LpOutcome::Infeasible;
+        }
+        // Drive any artificial still in the basis out (degenerate rows).
+        for r in 0..m {
+            if basis[r] >= n + n_slack {
+                // pivot on any nonzero non-artificial column
+                if let Some(j) = (0..n + n_slack).find(|&j| tab[r][j].abs() > 1e-9) {
+                    pivot(&mut tab, &mut basis, r, j, total);
+                }
+                // else: the row is all-zero — redundant constraint; leave it.
+            }
+        }
+
+        // ---- Phase II: original objective ----
+        for j in 0..=total {
+            tab[m][j] = 0.0;
+        }
+        for j in 0..n {
+            tab[m][j] = self.objective[j];
+        }
+        // zero out artificial columns so they never re-enter
+        for r in 0..m {
+            for j in (n + n_slack)..total {
+                tab[r][j] = 0.0;
+            }
+        }
+        // express objective in terms of non-basic variables
+        for r in 0..m {
+            let b = basis[r];
+            if b < total {
+                let factor = tab[m][b];
+                if factor.abs() > 1e-12 {
+                    for j in 0..=total {
+                        tab[m][j] -= factor * tab[r][j];
+                    }
+                }
+            }
+        }
+        if !simplex_iterate(&mut tab, &mut basis, total) {
+            return LpOutcome::Unbounded;
+        }
+
+        let mut x = vec![0.0; n];
+        for r in 0..m {
+            if basis[r] < n {
+                x[basis[r]] = tab[r][total];
+            }
+        }
+        let value: f64 = self
+            .objective
+            .iter()
+            .zip(&x)
+            .map(|(c, v)| c * v)
+            .sum();
+        LpOutcome::Optimal { x, value }
+    }
+}
+
+/// Run simplex pivots until optimal. Returns false on unboundedness.
+/// Bland's rule: entering = smallest index with negative reduced cost;
+/// leaving = smallest ratio, ties by smallest basis index.
+fn simplex_iterate(tab: &mut [Vec<f64>], basis: &mut [usize], total: usize) -> bool {
+    let m = basis.len();
+    for _iter in 0..200_000 {
+        // entering column (Bland)
+        let enter = match (0..total).find(|&j| tab[m][j] < -1e-9) {
+            Some(j) => j,
+            None => return true, // optimal
+        };
+        // ratio test
+        let mut leave: Option<usize> = None;
+        let mut best = f64::INFINITY;
+        for r in 0..m {
+            if tab[r][enter] > 1e-9 {
+                let ratio = tab[r][total] / tab[r][enter];
+                if ratio < best - 1e-12
+                    || (ratio < best + 1e-12
+                        && leave.map(|l| basis[r] < basis[l]).unwrap_or(false))
+                {
+                    best = ratio;
+                    leave = Some(r);
+                }
+            }
+        }
+        let leave = match leave {
+            Some(r) => r,
+            None => return false, // unbounded
+        };
+        pivot(tab, basis, leave, enter, total);
+    }
+    panic!("simplex did not terminate (cycling?)");
+}
+
+fn pivot(tab: &mut [Vec<f64>], basis: &mut [usize], row: usize, col: usize, total: usize) {
+    let m = basis.len();
+    let p = tab[row][col];
+    debug_assert!(p.abs() > 1e-12);
+    for j in 0..=total {
+        tab[row][j] /= p;
+    }
+    for r in 0..=m {
+        if r != row {
+            let f = tab[r][col];
+            if f.abs() > 1e-12 {
+                for j in 0..=total {
+                    tab[r][j] -= f * tab[row][j];
+                }
+            }
+        }
+    }
+    basis[row] = col;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn assert_optimal(outcome: &LpOutcome, expect_value: f64, tol: f64) -> Vec<f64> {
+        match outcome {
+            LpOutcome::Optimal { x, value } => {
+                assert!(
+                    (value - expect_value).abs() < tol,
+                    "value {value} vs expected {expect_value}"
+                );
+                x.clone()
+            }
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn simple_2d() {
+        // min -x - y  s.t. x + y <= 1, x,y >= 0  → value -1 on the edge
+        let mut lp = LpProblem::new(2);
+        lp.objective = vec![-1.0, -1.0];
+        lp.add_le(vec![1.0, 1.0], 1.0);
+        let x = assert_optimal(&lp.solve(), -1.0, 1e-9);
+        assert!((x[0] + x[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn equality_constraint() {
+        // min x + 2y s.t. x + y = 1 → x=1
+        let mut lp = LpProblem::new(2);
+        lp.objective = vec![1.0, 2.0];
+        lp.add_eq(vec![1.0, 1.0], 1.0);
+        let x = assert_optimal(&lp.solve(), 1.0, 1e-9);
+        assert!((x[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transport_problem() {
+        // classic 2x2 transportation: supplies [3,2], demands [2,3]
+        // costs [[1,4],[2,1]] → optimal: x00=2, x01=1, x11=2 → 2+4+2=8
+        let mut lp = LpProblem::new(4); // x00 x01 x10 x11
+        lp.objective = vec![1.0, 4.0, 2.0, 1.0];
+        lp.add_eq(vec![1.0, 1.0, 0.0, 0.0], 3.0);
+        lp.add_eq(vec![0.0, 0.0, 1.0, 1.0], 2.0);
+        lp.add_eq(vec![1.0, 0.0, 1.0, 0.0], 2.0);
+        lp.add_eq(vec![0.0, 1.0, 0.0, 1.0], 3.0);
+        assert_optimal(&lp.solve(), 8.0, 1e-8);
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        let mut lp = LpProblem::new(1);
+        lp.objective = vec![1.0];
+        lp.add_eq(vec![1.0], 2.0);
+        lp.add_le(vec![1.0], 1.0);
+        assert_eq!(lp.solve(), LpOutcome::Infeasible);
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        let mut lp = LpProblem::new(2);
+        lp.objective = vec![-1.0, 0.0];
+        lp.add_le(vec![0.0, 1.0], 1.0); // x0 unconstrained above
+        assert_eq!(lp.solve(), LpOutcome::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalized() {
+        // x >= 2 written as -x <= -2; min x → 2
+        let mut lp = LpProblem::new(1);
+        lp.objective = vec![1.0];
+        lp.add_le(vec![-1.0], -2.0);
+        assert_optimal(&lp.solve(), 2.0, 1e-9);
+    }
+
+    #[test]
+    fn no_constraints() {
+        let lp = LpProblem::new(2);
+        assert_optimal(&lp.solve(), 0.0, 1e-12);
+        let mut lp2 = LpProblem::new(1);
+        lp2.objective = vec![-1.0];
+        assert_eq!(lp2.solve(), LpOutcome::Unbounded);
+    }
+
+    #[test]
+    fn degenerate_redundant_constraints() {
+        // duplicated equality rows must not break phase I
+        let mut lp = LpProblem::new(2);
+        lp.objective = vec![1.0, 1.0];
+        lp.add_eq(vec![1.0, 1.0], 1.0);
+        lp.add_eq(vec![1.0, 1.0], 1.0);
+        assert_optimal(&lp.solve(), 1.0, 1e-8);
+    }
+
+    /// Randomized cross-check against brute force over the vertices of
+    /// box+budget polytopes: min cᵀx s.t. x ≤ u (elementwise), Σx = b.
+    #[test]
+    fn random_budget_boxes_match_greedy() {
+        let mut rng = Pcg::new(31);
+        for trial in 0..40 {
+            let n = rng.int_range(2, 6);
+            let c: Vec<f64> = (0..n).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            let u: Vec<f64> = (0..n).map(|_| rng.uniform(0.5, 2.0)).collect();
+            let budget = rng.uniform(0.1, u.iter().sum::<f64>() * 0.9);
+            let mut lp = LpProblem::new(n);
+            lp.objective = c.clone();
+            for j in 0..n {
+                let mut row = vec![0.0; n];
+                row[j] = 1.0;
+                lp.add_le(row, u[j]);
+            }
+            lp.add_eq(vec![1.0; n], budget);
+            // greedy optimum: fill cheapest coordinates first
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| c[a].partial_cmp(&c[b]).unwrap());
+            let mut left = budget;
+            let mut best = 0.0;
+            for &j in &order {
+                let take = left.min(u[j]);
+                best += c[j] * take;
+                left -= take;
+                if left <= 0.0 {
+                    break;
+                }
+            }
+            assert_optimal(&lp.solve(), best, 1e-6 * (1.0 + best.abs()));
+            let _ = trial;
+        }
+    }
+}

@@ -1,0 +1,386 @@
+//! LPR — Linear Program Rounded baseline ([8], adapted per §V).
+//!
+//! The reference method jointly picks, for each (task, data source), a
+//! single compute node and a single path, without partial offloading,
+//! congestible links or result flows. The paper's adaptation, reproduced
+//! here:
+//!
+//! * costs are linearized at zero flow (`D'(0)`, `C'(0)`);
+//! * a *saturation factor* of 0.7 caps the data flow admitted onto each
+//!   queueing link (`data ≤ 0.7 · capacity`), giving headroom for result
+//!   flows;
+//! * result flows use shortest-path routing from the compute node to the
+//!   destination;
+//! * the fractional assignment LP is rounded to an integral compute-node
+//!   choice per source, largest fraction first, re-checking capacities.
+//!
+//! The LP couples all tasks through the link capacities; to keep the dense
+//! simplex tableau small we decompose it **sequentially by task** (each
+//! task's LP sees the capacity left by the previous ones — documented
+//! substitution, DESIGN.md §3.6). Candidate compute nodes per source are
+//! capped at the `K` cheapest under the linearized metric.
+//!
+//! Because LPR's decisions are path-based (per-source single paths), the
+//! evaluation builds link/computation loads directly instead of a per-node
+//! strategy `φ`, and prices them under the **true convex costs** — exactly
+//! the regime where Fig. 4/5c show LPR collapsing on congestible networks.
+
+use crate::graph::algorithms::{dijkstra_to, path_from_next};
+use crate::model::cost::CostFn;
+use crate::model::network::Network;
+
+use super::lp::{LpOutcome, LpProblem};
+
+/// One rounded assignment: all data of `(task, source)` is computed at
+/// `compute_node`.
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    pub task: usize,
+    pub source: usize,
+    pub compute_node: usize,
+    pub rate: f64,
+    /// Data path `source -> ... -> compute_node` (node ids).
+    pub data_path: Vec<usize>,
+    /// Result path `compute_node -> ... -> dest`.
+    pub result_path: Vec<usize>,
+}
+
+/// LPR solution: the loads it induces and their true-cost evaluation.
+#[derive(Clone, Debug)]
+pub struct LprSolution {
+    pub assignments: Vec<Assignment>,
+    pub link_flow: Vec<f64>,
+    pub workload: Vec<f64>,
+    /// Total cost under the true convex cost functions.
+    pub total_cost: f64,
+    /// Average data / result travel distance in hops (rate-weighted) —
+    /// the Fig. 5d metrics for this baseline.
+    pub l_data: f64,
+    pub l_result: f64,
+}
+
+/// LPR solver configuration.
+pub struct Lpr {
+    /// Saturation factor for queueing-link data-flow caps (paper: 0.7).
+    pub saturate: f64,
+    /// Candidate compute nodes per (task, source).
+    pub candidates: usize,
+}
+
+impl Default for Lpr {
+    fn default() -> Self {
+        Lpr {
+            saturate: 0.7,
+            candidates: 8,
+        }
+    }
+}
+
+impl Lpr {
+    pub fn solve(&self, net: &Network) -> LprSolution {
+        let n = net.n();
+        let e = net.e();
+        let w0: Vec<f64> = net.link_cost.iter().map(|c| c.deriv_at_zero()).collect();
+
+        // Remaining data capacity per link (∞ for non-capacitated links).
+        let mut cap_left: Vec<f64> = net
+            .link_cost
+            .iter()
+            .map(|c| match c.capacity() {
+                Some(cap) => self.saturate * cap,
+                None => f64::INFINITY,
+            })
+            .collect();
+
+        let mut assignments: Vec<Assignment> = Vec::new();
+
+        for (s, task) in net.tasks.iter().enumerate() {
+            let a_m = net.a_of(s);
+            let ctype = task.ctype;
+            // SP tree toward the destination for result flows
+            let (dist_to_dest, next_to_dest) = dijkstra_to(&net.graph, task.dest, &w0);
+
+            // sources of this task
+            let sources: Vec<(usize, f64)> = (0..n)
+                .filter(|&i| net.input_rate[s][i] > 0.0)
+                .map(|i| (i, net.input_rate[s][i]))
+                .collect();
+            if sources.is_empty() {
+                continue;
+            }
+
+            // SP trees toward every candidate compute node are needed;
+            // compute per-candidate on demand and cache.
+            let mut tree_cache: Vec<Option<(Vec<f64>, Vec<usize>)>> = vec![None; n];
+            let tree =
+                |v: usize, cache: &mut Vec<Option<(Vec<f64>, Vec<usize>)>>| -> (Vec<f64>, Vec<usize>) {
+                    if cache[v].is_none() {
+                        cache[v] = Some(dijkstra_to(&net.graph, v, &w0));
+                    }
+                    cache[v].clone().unwrap()
+                };
+
+            // candidate compute nodes per source: K cheapest by the
+            // linearized end-to-end cost
+            let mut cand: Vec<Vec<usize>> = Vec::with_capacity(sources.len());
+            for &(u, _) in &sources {
+                let mut scored: Vec<(f64, usize)> = (0..n)
+                    .map(|v| {
+                        let (du, _) = tree(v, &mut tree_cache);
+                        let comp = net.comp_weight[v][ctype] * net.comp_cost[v].deriv_at_zero();
+                        let cost = du[u] + comp + a_m * dist_to_dest[v];
+                        (cost, v)
+                    })
+                    .collect();
+                scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                let mut picks: Vec<usize> =
+                    scored.iter().take(self.candidates).map(|&(_, v)| v).collect();
+                // always allow computing at the source and at the destination
+                for must in [u, task.dest] {
+                    if !picks.contains(&must) {
+                        picks.push(must);
+                    }
+                }
+                cand.push(picks);
+            }
+
+            // ---- the per-task assignment LP ----
+            // variables x[q][k] = fraction of source q's data computed at
+            // candidate k; columns flattened in (q, k) order.
+            let cols: Vec<(usize, usize)> = cand
+                .iter()
+                .enumerate()
+                .flat_map(|(q, picks)| (0..picks.len()).map(move |k| (q, k)))
+                .collect();
+            let mut lp = LpProblem::new(cols.len());
+
+            // objective: linearized data + comp + result cost per unit,
+            // scaled by the source rate
+            for (col, &(q, k)) in cols.iter().enumerate() {
+                let (u, rate) = sources[q];
+                let v = cand[q][k];
+                let (du, _) = tree(v, &mut tree_cache);
+                let comp = net.comp_weight[v][ctype] * net.comp_cost[v].deriv_at_zero();
+                lp.objective[col] = rate * (du[u] + comp + a_m * dist_to_dest[v]);
+            }
+            // Σ_k x[q][k] = 1
+            for q in 0..sources.len() {
+                let row: Vec<f64> = cols
+                    .iter()
+                    .map(|&(qq, _)| if qq == q { 1.0 } else { 0.0 })
+                    .collect();
+                lp.add_eq(row, 1.0);
+            }
+            // link capacity rows: data flow over SP(u -> v) edges
+            // build usage map per column, then one row per capacitated link
+            let mut usage: Vec<Vec<f64>> = vec![vec![0.0; cols.len()]; e];
+            for (col, &(q, k)) in cols.iter().enumerate() {
+                let (u, rate) = sources[q];
+                let v = cand[q][k];
+                let (_, nxt) = tree(v, &mut tree_cache);
+                if let Some(path) = path_from_next(&nxt, u, v) {
+                    for hop in path.windows(2) {
+                        if let Some(eid) = net.graph.edge_id(hop[0], hop[1]) {
+                            usage[eid][col] += rate;
+                        }
+                    }
+                }
+            }
+            for eid in 0..e {
+                if cap_left[eid].is_finite() && usage[eid].iter().any(|&x| x > 0.0) {
+                    lp.add_le(usage[eid].clone(), cap_left[eid].max(0.0));
+                }
+            }
+
+            // solve; on infeasibility fall back to the unconstrained
+            // cheapest candidate per source (LPR then pays the congestion)
+            let x = match lp.solve() {
+                LpOutcome::Optimal { x, .. } => x,
+                _ => {
+                    let mut x = vec![0.0; cols.len()];
+                    for q in 0..sources.len() {
+                        let best = cols
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, &(qq, _))| qq == q)
+                            .min_by(|(a, _), (b, _)| {
+                                lp.objective[*a].partial_cmp(&lp.objective[*b]).unwrap()
+                            })
+                            .map(|(col, _)| col)
+                            .unwrap();
+                        x[best] = 1.0;
+                    }
+                    x
+                }
+            };
+
+            // ---- rounding: per source, largest fraction wins ----
+            for (q, &(u, rate)) in sources.iter().enumerate() {
+                let (best_col, _) = cols
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &(qq, _))| qq == q)
+                    .map(|(col, _)| (col, x[col]))
+                    .fold((usize::MAX, f64::NEG_INFINITY), |acc, cur| {
+                        if cur.1 > acc.1 {
+                            cur
+                        } else {
+                            acc
+                        }
+                    });
+                let (_, k) = cols[best_col];
+                let v = cand[q][k];
+                let (_, nxt) = tree(v, &mut tree_cache);
+                let data_path = path_from_next(&nxt, u, v).unwrap_or_else(|| vec![u]);
+                let result_path =
+                    path_from_next(&next_to_dest, v, task.dest).unwrap_or_else(|| vec![v]);
+                // consume data capacity
+                for hop in data_path.windows(2) {
+                    if let Some(eid) = net.graph.edge_id(hop[0], hop[1]) {
+                        cap_left[eid] -= rate;
+                    }
+                }
+                assignments.push(Assignment {
+                    task: s,
+                    source: u,
+                    compute_node: v,
+                    rate,
+                    data_path,
+                    result_path,
+                });
+            }
+        }
+
+        Self::evaluate(net, assignments)
+    }
+
+    /// Price a set of assignments under the true convex costs.
+    fn evaluate(net: &Network, assignments: Vec<Assignment>) -> LprSolution {
+        let mut link_flow = vec![0.0; net.e()];
+        let mut workload = vec![0.0; net.n()];
+        let mut data_hops = 0.0;
+        let mut res_hops = 0.0;
+        let mut data_rate = 0.0;
+        let mut res_rate = 0.0;
+        for a in &assignments {
+            let am = net.a_of(a.task);
+            let ctype = net.tasks[a.task].ctype;
+            for hop in a.data_path.windows(2) {
+                let eid = net.graph.edge_id(hop[0], hop[1]).unwrap();
+                link_flow[eid] += a.rate;
+            }
+            for hop in a.result_path.windows(2) {
+                let eid = net.graph.edge_id(hop[0], hop[1]).unwrap();
+                link_flow[eid] += am * a.rate;
+            }
+            workload[a.compute_node] += net.comp_weight[a.compute_node][ctype] * a.rate;
+            data_hops += a.rate * (a.data_path.len() - 1) as f64;
+            res_hops += am * a.rate * (a.result_path.len() - 1) as f64;
+            data_rate += a.rate;
+            res_rate += am * a.rate;
+        }
+        let mut total = 0.0;
+        for (eid, &f) in link_flow.iter().enumerate() {
+            total += net.link_cost[eid].value(f);
+        }
+        for (i, &g) in workload.iter().enumerate() {
+            total += net.comp_cost[i].value(g);
+        }
+        LprSolution {
+            assignments,
+            link_flow,
+            workload,
+            total_cost: total,
+            l_data: if data_rate > 0.0 { data_hops / data_rate } else { 0.0 },
+            l_result: if res_rate > 0.0 { res_hops / res_rate } else { 0.0 },
+        }
+    }
+}
+
+/// Convenience: capped true cost (∞ → a large finite number) so Fig. 4
+/// normalization stays renderable when LPR saturates a link.
+pub fn finite_or(cost: f64, cap: f64) -> f64 {
+    if cost.is_finite() {
+        cost
+    } else {
+        cap
+    }
+}
+
+// Re-exported for LPR tests / diagnostics.
+pub fn linearized_link_weights(net: &Network) -> Vec<f64> {
+    net.link_cost.iter().map(CostFn::deriv_at_zero).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::network::testnet::{diamond, line3};
+
+    #[test]
+    fn produces_assignment_per_source() {
+        let net = diamond(true);
+        let sol = Lpr::default().solve(&net);
+        assert_eq!(sol.assignments.len(), 1); // one task, one source
+        let a = &sol.assignments[0];
+        assert_eq!(a.task, 0);
+        assert_eq!(a.source, 0);
+        assert_eq!(*a.result_path.last().unwrap(), 3);
+        assert!(sol.total_cost.is_finite());
+    }
+
+    #[test]
+    fn paths_are_graph_paths() {
+        let net = line3();
+        let sol = Lpr::default().solve(&net);
+        for a in &sol.assignments {
+            for hop in a.data_path.windows(2) {
+                assert!(net.graph.has_edge(hop[0], hop[1]));
+            }
+            for hop in a.result_path.windows(2) {
+                assert!(net.graph.has_edge(hop[0], hop[1]));
+            }
+            assert_eq!(*a.data_path.first().unwrap(), a.source);
+            assert_eq!(*a.data_path.last().unwrap(), a.compute_node);
+            assert_eq!(*a.result_path.first().unwrap(), a.compute_node);
+        }
+    }
+
+    #[test]
+    fn respects_saturation_in_lp() {
+        // Link capacity 10, saturate 0.7: at most 7 units of data per link
+        // can be *planned*; with a 1.0-rate task this is never binding, so
+        // simply check the solve succeeds and loads stay below caps.
+        let net = diamond(true);
+        let sol = Lpr::default().solve(&net);
+        for (eid, &f) in sol.link_flow.iter().enumerate() {
+            if let Some(cap) = net.link_cost[eid].capacity() {
+                assert!(f < cap, "edge {eid} overloaded: {f} >= {cap}");
+            }
+        }
+    }
+
+    #[test]
+    fn workload_accounts_all_input() {
+        let net = line3();
+        let sol = Lpr::default().solve(&net);
+        // every unit of input is computed somewhere
+        let total_assigned: f64 = sol.assignments.iter().map(|a| a.rate).sum();
+        let total_input: f64 = (0..net.s()).map(|s| net.task_input(s)).sum();
+        assert!((total_assigned - total_input).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hop_metrics_nonnegative() {
+        let net = diamond(true);
+        let sol = Lpr::default().solve(&net);
+        assert!(sol.l_data >= 0.0);
+        assert!(sol.l_result >= 0.0);
+    }
+
+    #[test]
+    fn finite_or_caps() {
+        assert_eq!(finite_or(5.0, 100.0), 5.0);
+        assert_eq!(finite_or(f64::INFINITY, 100.0), 100.0);
+    }
+}

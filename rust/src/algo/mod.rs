@@ -1,0 +1,42 @@
+//! Optimization algorithms: the paper's SGP (Algorithm 1) and the §V
+//! baselines (GP, SPOO, LCOR, LPR), over a common [`Optimizer`] interface,
+//! plus the numerical substrates they need (simplex projection QP, blocked
+//! sets, a dense LP solver).
+
+pub mod blocked;
+pub mod gp;
+pub mod lcor;
+pub mod lp;
+pub mod lpr;
+pub mod sgp;
+pub mod simplex_qp;
+pub mod spoo;
+
+use anyhow::Result;
+
+use crate::model::network::Network;
+use crate::model::strategy::Strategy;
+
+/// Per-iteration progress of an optimizer.
+#[derive(Clone, Copy, Debug)]
+pub struct IterationStats {
+    /// Total cost `T` after the iteration.
+    pub total_cost: f64,
+    /// Theorem-1 complementarity residual after the iteration (0 ⇔ the
+    /// sufficient global-optimality conditions hold).
+    pub residual: f64,
+}
+
+/// A routing/offloading optimizer stepping a strategy in place.
+pub trait Optimizer {
+    fn name(&self) -> &'static str;
+
+    /// One synchronous network-wide iteration.
+    fn step(&mut self, net: &Network, phi: &mut Strategy) -> Result<IterationStats>;
+}
+
+pub use gp::Gp;
+pub use lcor::lcor_optimizer;
+pub use lpr::Lpr;
+pub use sgp::{Restriction, Sgp};
+pub use spoo::spoo_optimizer;

@@ -1,0 +1,917 @@
+//! Scaled Gradient Projection (Algorithm 1) — the paper's optimizer —
+//! plus the restriction hooks that turn it into the SPOO and LCOR
+//! baselines.
+//!
+//! Per synchronous iteration:
+//!
+//! 1. compute flows and marginals (`δ±`, `h±` — the centralized mirror of
+//!    the two-stage broadcast);
+//! 2. compute blocked sets per task/plane;
+//! 3. per node/task/plane, build the diagonal scaling matrix (16) and
+//!    solve the projection QP (15);
+//! 4. **descent safeguard**: accept the joint update only if it stays
+//!    loop-free and does not increase `T`; otherwise retry with the
+//!    scaling inflated (step shrunk), which preserves Theorem 2's
+//!    monotone descent even under the heuristic curvature bound used for
+//!    the local-computation slot (the paper's eq. 16 only covers link
+//!    entries; see DESIGN.md §3.3).
+//!
+//! Asynchronous (one node at a time) updates — Theorem 2's schedule — are
+//! driven by `sim::async_run` through [`Sgp::update_single_node`].
+
+use anyhow::{bail, Result};
+
+use crate::model::flows::{compute_flows, FlowState};
+use crate::model::marginals::{compute_marginals, theorem1_residual, Marginals};
+use crate::model::network::Network;
+use crate::model::strategy::Strategy;
+
+use super::blocked::{blocked_sets, BlockedSets};
+use super::simplex_qp::scaled_simplex_qp;
+use super::{IterationStats, Optimizer};
+
+/// Snapshot of one task's flow slices, for exact rollback of an
+/// incremental re-flow (the Gauss–Seidel safeguard's rejection path).
+struct TaskFlowSnap {
+    t_minus: Vec<f64>,
+    t_plus: Vec<f64>,
+    g: Vec<f64>,
+    f_minus: Vec<f64>,
+    f_plus: Vec<f64>,
+}
+
+impl TaskFlowSnap {
+    fn take(fs: &FlowState, s: usize) -> TaskFlowSnap {
+        TaskFlowSnap {
+            t_minus: fs.t_minus[s].clone(),
+            t_plus: fs.t_plus[s].clone(),
+            g: fs.g[s].clone(),
+            f_minus: fs.f_minus[s].clone(),
+            f_plus: fs.f_plus[s].clone(),
+        }
+    }
+
+    fn restore(&self, fs: &mut FlowState, s: usize) {
+        fs.t_minus[s].clone_from(&self.t_minus);
+        fs.t_plus[s].clone_from(&self.t_plus);
+        fs.g[s].clone_from(&self.g);
+        fs.f_minus[s].clone_from(&self.f_minus);
+        fs.f_plus[s].clone_from(&self.f_plus);
+    }
+}
+
+/// Which planes an optimizer instance may update — the restriction hook
+/// reused by the SPOO (data offloading only) and LCOR (result routing
+/// only) baselines.
+#[derive(Clone, Debug, Default)]
+pub struct Restriction {
+    /// Do not update the data plane at all.
+    pub freeze_data: bool,
+    /// Do not update the result plane at all.
+    pub freeze_result: bool,
+    /// Additional permanently-blocked data slots `[task][node][slot]`
+    /// (slot 0 = local computation).
+    pub extra_blocked_data: Option<Vec<Vec<Vec<bool>>>>,
+}
+
+/// Scaled gradient projection optimizer state.
+pub struct Sgp {
+    /// Floor for scaling-matrix diagonals (keeps the QP strictly convex on
+    /// linear-cost networks where `A ≡ 0`, and makes zero-traffic nodes
+    /// take the full jump to their min-marginal slot — the behaviour
+    /// Theorem 1 needs from zero-traffic nodes).
+    pub min_scale: f64,
+    /// Enable the descent safeguard (ablation switch).
+    pub safeguard: bool,
+    /// Plane restrictions (SPOO / LCOR reuse).
+    pub restriction: Restriction,
+    /// Count of safeguard step-shrink retries across the run.
+    pub retries: usize,
+    /// Count of loop-rollback events (should stay 0; tested).
+    pub rollbacks: usize,
+    /// Recompute marginals + improper tags every `marg_refresh` node
+    /// positions of the Gauss–Seidel sweep (1 = every position). The
+    /// distributed algorithm broadcasts once per iteration, so values a
+    /// few positions stale are faithful to the paper; the explicit cycle
+    /// check in the safeguard keeps loop-freedom sound regardless, and
+    /// the descent test keeps monotonicity. Values of 4–8 cut the sweep
+    /// cost substantially at SW scale (EXPERIMENTS.md §Perf).
+    /// `0` = auto: every position on small networks (where marginals move
+    /// fast and staleness costs retries), every `N/25` positions on large
+    /// ones.
+    pub marg_refresh: usize,
+    /// Adaptive trust factor multiplying the eq-16 scaling matrices.
+    ///
+    /// Eq. 16 is a *majorization* bound built from the worst-case global
+    /// curvature `A(T⁰)`; on heterogeneous-capacity networks (one
+    /// tiny-capacity link makes `A(T⁰)` enormous) it is severely
+    /// conservative and the projected steps all but vanish. Because the
+    /// descent safeguard independently guarantees `T^{t+1} ≤ T^t`, the
+    /// scaling only needs to be a good *step-size heuristic*: we start
+    /// each iteration at `trust × (eq-16 scale)` with `trust ≤ 1`, inflate
+    /// by 4× on each safeguard rejection (never exceeding the provably
+    /// safe eq-16 level and beyond), and let `trust` adapt between
+    /// iterations toward the largest step the safeguard accepts.
+    trust: f64,
+}
+
+impl Sgp {
+    pub fn new() -> Sgp {
+        Sgp {
+            min_scale: 1e-6,
+            safeguard: true,
+            restriction: Restriction::default(),
+            retries: 0,
+            rollbacks: 0,
+            marg_refresh: 0,
+            trust: 1e-2,
+        }
+    }
+
+    pub fn with_restriction(restriction: Restriction) -> Sgp {
+        Sgp {
+            restriction,
+            ..Sgp::new()
+        }
+    }
+
+    /// Does `cand` differ from `phi` in any block that currently carries
+    /// traffic? Equal-cost candidates are accepted only when this is
+    /// false: re-pointing zero-traffic blocks is free and *required* for
+    /// Theorem-1 optimality (zero-traffic nodes must aim at their
+    /// min-marginal neighbor — the Fig. 3 gap), while equal-cost changes
+    /// to loaded blocks are plateau swaps that would cycle forever (e.g.
+    /// flipping all result flow between two symmetric equal-cost paths).
+    fn positive_traffic_changed(
+        net: &Network,
+        flows: &FlowState,
+        phi: &Strategy,
+        cand: &Strategy,
+    ) -> bool {
+        const TRAFFIC_EPS: f64 = 1e-12;
+        for s in 0..net.s() {
+            for i in 0..net.n() {
+                if flows.t_minus[s][i] > TRAFFIC_EPS
+                    && phi.data[s][i] != cand.data[s][i]
+                {
+                    return true;
+                }
+                if flows.t_plus[s][i] > TRAFFIC_EPS
+                    && phi.result[s][i] != cand.result[s][i]
+                {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// The safeguard acceptance rule: strict descent for changes to
+    /// loaded blocks; free (equal-cost, within `slack`) moves allowed only
+    /// on zero-traffic blocks. With `safeguard` disabled (ablation), any
+    /// finite candidate is accepted.
+    fn accepts(
+        &self,
+        net: &Network,
+        flows: &FlowState,
+        phi: &Strategy,
+        cand: &Strategy,
+        cand_cost: f64,
+        slack: f64,
+    ) -> bool {
+        if !self.safeguard {
+            return true;
+        }
+        if cand_cost < flows.total_cost - slack {
+            return true;
+        }
+        cand_cost <= flows.total_cost + slack
+            && !Self::positive_traffic_changed(net, flows, phi, cand)
+    }
+
+    /// Scaling-matrix diagonal for the data plane of `(task, node)`,
+    /// aligned with the strategy slot layout.
+    ///
+    /// Eq. 16 builds the diagonal from worst-case curvature bounds
+    /// `A_ij(T⁰)`; we use the *current* second derivatives instead
+    /// (`D''(F_ij)`, `C''(G_i)` — the Bertsekas–Gafni–Gallager
+    /// second-derivative scaling the paper's reference [25] uses), with
+    /// the same `(1 + h)` path-length amplification to account for
+    /// curvature accumulated along downstream paths. The global `A(T⁰)`
+    /// bound is dramatically over-conservative on heterogeneous-capacity
+    /// networks (one tiny-capacity link dominates the max and freezes all
+    /// steps); the descent safeguard + trust adaptation supply the
+    /// convergence guarantee the bound was providing. See DESIGN.md §3.3.
+    fn data_scale(
+        &self,
+        net: &Network,
+        flows: &FlowState,
+        marg: &Marginals,
+        task: usize,
+        node: usize,
+        inflate: f64,
+    ) -> Vec<f64> {
+        let g = &net.graph;
+        let t_i = flows.t_minus[task][node];
+        let a_m = net.a_of(task);
+        let w_im = net.w_of(node, task);
+        let mut scale = Vec::with_capacity(g.out_degree(node) + 1);
+        // slot 0: local computation. Curvature from C'' (chain factor w²)
+        // plus the induced result-plane curvature (chain factor a_m²)
+        // accumulated along the node's result path.
+        let d2_comp = net.comp_cost[node].second_deriv(flows.workload[node]);
+        let out_d2_max = g
+            .out_edge_ids(node)
+            .iter()
+            .map(|&eid| net.link_cost[eid].second_deriv(flows.link_flow[eid]))
+            .fold(0.0f64, f64::max);
+        let comp_entry = w_im * w_im * d2_comp
+            + a_m * a_m * (1.0 + marg.h_plus[task][node] as f64) * out_d2_max;
+        scale.push(self.floor(t_i / 2.0 * inflate * comp_entry, inflate));
+        for &eid in g.out_edge_ids(node) {
+            let j = g.edge(eid).dst;
+            let d2 = net.link_cost[eid].second_deriv(flows.link_flow[eid]);
+            let entry = d2 * (1.0 + marg.h_minus[task][j] as f64);
+            scale.push(self.floor(t_i / 2.0 * inflate * entry, inflate));
+        }
+        scale
+    }
+
+    /// Scaling-matrix diagonal for the result plane (same construction on
+    /// `t⁺` and `h⁺`).
+    fn result_scale(
+        &self,
+        net: &Network,
+        flows: &FlowState,
+        marg: &Marginals,
+        task: usize,
+        node: usize,
+        inflate: f64,
+    ) -> Vec<f64> {
+        let g = &net.graph;
+        let t_i = flows.t_plus[task][node];
+        g.out_edge_ids(node)
+            .iter()
+            .map(|&eid| {
+                let j = g.edge(eid).dst;
+                let d2 = net.link_cost[eid].second_deriv(flows.link_flow[eid]);
+                let entry = d2 * (1.0 + marg.h_plus[task][j] as f64);
+                self.floor(t_i / 2.0 * inflate * entry, inflate)
+            })
+            .collect()
+    }
+
+    fn floor(&self, x: f64, inflate: f64) -> f64 {
+        // Upper clamp keeps the QP solvable when curvature blows up near
+        // a capacity pole (D'' → ∞ would zero the step *and* break the
+        // breakpoint arithmetic).
+        x.max(self.min_scale * inflate).min(1e12)
+    }
+
+    /// One tentative joint (all nodes, all tasks) update with the given
+    /// scaling inflation. Returns the candidate strategy.
+    fn propose(
+        &self,
+        net: &Network,
+        phi: &Strategy,
+        flows: &FlowState,
+        marg: &Marginals,
+        blocked_all: &[BlockedSets],
+        inflate: f64,
+    ) -> Strategy {
+        let mut cand = phi.clone();
+        for s in 0..net.s() {
+            let blocked = &blocked_all[s];
+            for i in 0..net.n() {
+                if !self.restriction.freeze_data {
+                    let mut blocked_slots = blocked.data[i].clone();
+                    if let Some(extra) = &self.restriction.extra_blocked_data {
+                        for (b, &x) in blocked_slots.iter_mut().zip(&extra[s][i]) {
+                            *b |= x;
+                        }
+                    }
+                    // keep currently-active slots available even under
+                    // extra restrictions (they hold mass)
+                    for (slot, b) in blocked_slots.iter_mut().enumerate() {
+                        if phi.data[s][i][slot] > 0.0 {
+                            *b = false;
+                        }
+                    }
+                    if blocked_slots.iter().any(|&b| !b) {
+                        let delta = marg.delta_minus(net, s, i);
+                        let scale =
+                            self.data_scale(net, flows, marg, s, i, inflate);
+                        cand.data[s][i] = scaled_simplex_qp(
+                            &phi.data[s][i],
+                            &delta,
+                            &scale,
+                            &blocked_slots,
+                        );
+                    }
+                }
+                if !self.restriction.freeze_result
+                    && i != net.tasks[s].dest
+                    && net.graph.out_degree(i) > 0
+                {
+                    let blocked_slots = &blocked.result[i];
+                    if blocked_slots.iter().any(|&b| !b) {
+                        let delta = marg.delta_plus(net, s, i);
+                        let scale =
+                            self.result_scale(net, flows, marg, s, i, inflate);
+                        cand.result[s][i] = scaled_simplex_qp(
+                            &phi.result[s][i],
+                            &delta,
+                            &scale,
+                            blocked_slots,
+                        );
+                    }
+                }
+            }
+        }
+        cand
+    }
+
+    /// Asynchronous single-node update (Theorem 2 schedule): recompute the
+    /// global state, then update only `(node, task, plane)`.
+    /// `plane_result=false` updates the data plane.
+    pub fn update_single_node(
+        &mut self,
+        net: &Network,
+        phi: &mut Strategy,
+        node: usize,
+        task: usize,
+        plane_result: bool,
+    ) -> Result<f64> {
+        let flows = compute_flows(net, phi).map_err(anyhow::Error::new)?;
+        if !flows.total_cost.is_finite() {
+            bail!("infinite cost at async update start");
+        }
+        let marg = compute_marginals(net, phi, &flows).map_err(anyhow::Error::new)?;
+        let blocked = blocked_sets(net, phi, &marg, task);
+
+        let mut inflate = self.trust;
+        for _attempt in 0..40 {
+            let mut cand = phi.clone();
+            if plane_result {
+                if node == net.tasks[task].dest || net.graph.out_degree(node) == 0 {
+                    return Ok(flows.total_cost);
+                }
+                let delta = marg.delta_plus(net, task, node);
+                let scale =
+                    self.result_scale(net, &flows, &marg, task, node, inflate);
+                cand.result[task][node] = scaled_simplex_qp(
+                    &phi.result[task][node],
+                    &delta,
+                    &scale,
+                    &blocked.result[node],
+                );
+            } else {
+                let delta = marg.delta_minus(net, task, node);
+                let scale =
+                    self.data_scale(net, &flows, &marg, task, node, inflate);
+                cand.data[task][node] = scaled_simplex_qp(
+                    &phi.data[task][node],
+                    &delta,
+                    &scale,
+                    &blocked.data[node],
+                );
+            }
+            match compute_flows(net, &cand) {
+                Ok(fs)
+                    if fs.total_cost.is_finite()
+                        && self.accepts(net, &flows, phi, &cand, fs.total_cost, 1e-12) =>
+                {
+                    *phi = cand;
+                    return Ok(fs.total_cost);
+                }
+                Ok(_) | Err(_) => {
+                    self.retries += 1;
+                    inflate *= 4.0;
+                }
+            }
+        }
+        // No improving step found: keep the current point.
+        Ok(flows.total_cost)
+    }
+}
+
+impl Sgp {
+    /// One synchronous iteration with flows + marginals evaluated on the
+    /// **XLA data plane** (the AOT `dense_eval` artifact) instead of the
+    /// native evaluator — the accelerated hot path. The control plane
+    /// (blocked sets, scaling, QP, safeguard) stays in rust; candidate
+    /// costs inside the safeguard are also priced by the artifact.
+    pub fn step_dense(
+        &mut self,
+        net: &Network,
+        phi: &mut Strategy,
+        evaluator: &crate::runtime::DenseEvaluator,
+    ) -> Result<IterationStats> {
+        use crate::graph::algorithms::longest_path_to_sink;
+
+        let assemble = |ev: crate::runtime::DenseEval,
+                        phi: &Strategy|
+         -> Result<(FlowState, Marginals)> {
+            // h± are pure graph DPs over the φ-active masks — cheap native.
+            let mut h_plus = Vec::with_capacity(net.s());
+            let mut h_minus = Vec::with_capacity(net.s());
+            for s in 0..net.s() {
+                h_plus.push(
+                    longest_path_to_sink(&net.graph, &phi.result_active_mask(net, s))
+                        .ok_or_else(|| anyhow::anyhow!("result loop in task {s}"))?,
+                );
+                h_minus.push(
+                    longest_path_to_sink(&net.graph, &phi.data_active_mask(net, s))
+                        .ok_or_else(|| anyhow::anyhow!("data loop in task {s}"))?,
+                );
+            }
+            let flows = FlowState {
+                t_minus: ev.t_minus,
+                t_plus: ev.t_plus,
+                // per-edge/per-task splits are implied by (t, φ) and not
+                // needed by the update; left empty in the dense path.
+                g: vec![],
+                f_minus: vec![],
+                f_plus: vec![],
+                link_flow: ev.link_flow,
+                workload: ev.workload,
+                total_cost: ev.total_cost,
+            };
+            let marg = Marginals {
+                d_link: ev.d_link,
+                c_node: ev.c_node,
+                dt_plus: ev.dt_plus,
+                dt_r: ev.dt_r,
+                h_plus,
+                h_minus,
+            };
+            Ok((flows, marg))
+        };
+
+        let (flows, marg) = assemble(evaluator.evaluate(net, phi)?, phi)?;
+        if !flows.total_cost.is_finite() {
+            bail!("initial strategy has infinite cost (dense path)");
+        }
+        let blocked_all: Vec<BlockedSets> = (0..net.s())
+            .map(|s| blocked_sets(net, phi, &marg, s))
+            .collect();
+
+        let mut inflate = self.trust;
+        let mut attempts = 0usize;
+        let mut accepted = false;
+        for _attempt in 0..40 {
+            attempts += 1;
+            let cand = self.propose(net, phi, &flows, &marg, &blocked_all, inflate);
+            if !cand.is_loop_free(net) {
+                self.rollbacks += 1;
+                inflate *= 4.0;
+                continue;
+            }
+            let cand_cost = evaluator.evaluate(net, &cand)?.total_cost;
+            // f32 data plane: allow relative rounding slack in the descent
+            // test (see DESIGN.md §3.7).
+            let slack = 1e-5 * flows.total_cost.abs().max(1.0);
+            if cand_cost.is_finite() && self.accepts(net, &flows, phi, &cand, cand_cost, slack)
+            {
+                *phi = cand;
+                accepted = true;
+                break;
+            }
+            self.retries += 1;
+            inflate *= 4.0;
+        }
+        if accepted {
+            self.trust = if attempts == 1 {
+                (self.trust * 0.5).max(1e-5)
+            } else {
+                (inflate * 0.25).min(1e6)
+            };
+        }
+
+        let final_eval = evaluator.evaluate(net, phi)?;
+        let total = final_eval.total_cost;
+        let (_, marg2) = assemble(final_eval, phi)?;
+        Ok(IterationStats {
+            total_cost: total,
+            residual: theorem1_residual(net, phi, &marg2),
+        })
+    }
+}
+
+impl Default for Sgp {
+    fn default() -> Self {
+        Sgp::new()
+    }
+}
+
+impl Optimizer for Sgp {
+    fn name(&self) -> &'static str {
+        "sgp"
+    }
+
+    /// One iteration = one **Gauss–Seidel sweep**: every node solves its
+    /// individual QP (15) against *fresh* flows and marginals (the
+    /// distributed algorithm re-broadcasts between individual updates —
+    /// Theorem 2's asynchronous schedule; a Jacobi all-at-once update is
+    /// only stable with far smaller steps). Each node's joint
+    /// (all tasks, both planes) update passes the descent safeguard
+    /// before the sweep moves on.
+    fn step(&mut self, net: &Network, phi: &mut Strategy) -> Result<IterationStats> {
+        use super::blocked::{blocked_rows_for_node, plane_tags};
+
+        let mut flows = compute_flows(net, phi).map_err(anyhow::Error::new)?;
+        if !flows.total_cost.is_finite() {
+            bail!("initial strategy has infinite cost");
+        }
+
+        // Reusable row-save buffers: a node's candidate differs from φ only
+        // in its own rows, so the safeguard swaps rows in place instead of
+        // cloning the whole strategy (a 100×+ memory-traffic saving at SW
+        // scale — EXPERIMENTS.md §Perf).
+        let mut saved_data: Vec<Vec<f64>> = vec![Vec::new(); net.s()];
+        let mut saved_result: Vec<Vec<f64>> = vec![Vec::new(); net.s()];
+
+        let refresh = if self.marg_refresh == 0 {
+            (net.n() / 25).max(1)
+        } else {
+            self.marg_refresh
+        };
+        let mut marg = compute_marginals(net, phi, &flows).map_err(anyhow::Error::new)?;
+        let mut tags_all: Vec<super::blocked::PlaneTags> =
+            (0..net.s()).map(|s| plane_tags(net, phi, &marg, s)).collect();
+        for node in 0..net.n() {
+            if node > 0 && node % refresh == 0 {
+                marg = compute_marginals(net, phi, &flows).map_err(anyhow::Error::new)?;
+                tags_all = (0..net.s())
+                    .map(|s| plane_tags(net, phi, &marg, s))
+                    .collect();
+            }
+            // Only this node's blocked rows are needed (O(deg) given tags).
+            let node_blocked: Vec<super::blocked::NodeBlocked> = (0..net.s())
+                .map(|s| blocked_rows_for_node(net, phi, &marg, &tags_all[s], s, node))
+                .collect();
+
+            for s in 0..net.s() {
+                saved_data[s].clone_from(&phi.data[s][node]);
+                saved_result[s].clone_from(&phi.result[s][node]);
+            }
+
+            let mut inflate = self.trust;
+            let mut attempts = 0usize;
+            let mut accepted = false;
+            for _attempt in 0..40 {
+                attempts += 1;
+                let mut changed_loaded = false;
+                // Which planes gained a previously-inactive edge? Only
+                // those can create a routing loop, so the (expensive)
+                // cycle re-check is restricted to them.
+                let mut added_data: Vec<bool> = vec![false; net.s()];
+                let mut added_result: Vec<bool> = vec![false; net.s()];
+                // Which tasks' flows are affected at all? (row changed AND
+                // the node carries traffic on that plane) — only those are
+                // re-flowed incrementally.
+                let mut task_dirty: Vec<bool> = vec![false; net.s()];
+                for s in 0..net.s() {
+                    let blocked = &node_blocked[s];
+                    if !self.restriction.freeze_data {
+                        let mut blocked_slots = blocked.data.clone();
+                        if let Some(extra) = &self.restriction.extra_blocked_data {
+                            for (b, &x) in blocked_slots.iter_mut().zip(&extra[s][node]) {
+                                *b |= x;
+                            }
+                        }
+                        for (slot, b) in blocked_slots.iter_mut().enumerate() {
+                            if saved_data[s][slot] > 0.0 {
+                                *b = false;
+                            }
+                        }
+                        if blocked_slots.iter().any(|&b| !b) {
+                            let delta = marg.delta_minus(net, s, node);
+                            let scale =
+                                self.data_scale(net, &flows, &marg, s, node, inflate);
+                            phi.data[s][node] = scaled_simplex_qp(
+                                &saved_data[s],
+                                &delta,
+                                &scale,
+                                &blocked_slots,
+                            );
+                            if flows.t_minus[s][node] > 1e-12
+                                && phi.data[s][node] != saved_data[s]
+                            {
+                                changed_loaded = true;
+                            }
+                            for (slot, &v) in phi.data[s][node].iter().enumerate().skip(1) {
+                                if v > 0.0 && saved_data[s][slot] <= 0.0 {
+                                    added_data[s] = true;
+                                }
+                            }
+                            if flows.t_minus[s][node] > 0.0
+                                && phi.data[s][node] != saved_data[s]
+                            {
+                                task_dirty[s] = true;
+                            }
+                        }
+                    }
+                    if !self.restriction.freeze_result
+                        && node != net.tasks[s].dest
+                        && net.graph.out_degree(node) > 0
+                        && blocked.result.iter().any(|&b| !b)
+                    {
+                        let delta = marg.delta_plus(net, s, node);
+                        let scale =
+                            self.result_scale(net, &flows, &marg, s, node, inflate);
+                        phi.result[s][node] = scaled_simplex_qp(
+                            &saved_result[s],
+                            &delta,
+                            &scale,
+                            &blocked.result,
+                        );
+                        if flows.t_plus[s][node] > 1e-12
+                            && phi.result[s][node] != saved_result[s]
+                        {
+                            changed_loaded = true;
+                        }
+                        for (slot, &v) in phi.result[s][node].iter().enumerate() {
+                            if v > 0.0 && saved_result[s][slot] <= 0.0 {
+                                added_result[s] = true;
+                            }
+                        }
+                        if flows.t_plus[s][node] > 0.0
+                            && phi.result[s][node] != saved_result[s]
+                        {
+                            task_dirty[s] = true;
+                        }
+                    }
+                }
+
+                let restore = |phi: &mut Strategy,
+                               saved_data: &[Vec<f64>],
+                               saved_result: &[Vec<f64>]| {
+                    for s in 0..net.s() {
+                        phi.data[s][node].clone_from(&saved_data[s]);
+                        phi.result[s][node].clone_from(&saved_result[s]);
+                    }
+                };
+
+                // Cycle re-check, restricted to planes that gained edges
+                // (mass removal/shifting among active edges cannot close a
+                // loop). With blocked sets this almost never fires.
+                let mut loop_found = false;
+                for s in 0..net.s() {
+                    if added_data[s]
+                        && crate::graph::algorithms::has_cycle_masked(
+                            &net.graph,
+                            &phi.data_active_mask(net, s),
+                        )
+                    {
+                        loop_found = true;
+                        break;
+                    }
+                    if added_result[s]
+                        && crate::graph::algorithms::has_cycle_masked(
+                            &net.graph,
+                            &phi.result_active_mask(net, s),
+                        )
+                    {
+                        loop_found = true;
+                        break;
+                    }
+                }
+                if loop_found {
+                    self.rollbacks += 1;
+                    restore(phi, &saved_data, &saved_result);
+                    inflate *= 4.0;
+                    continue;
+                }
+                // Incrementally re-flow only the dirty tasks; snapshot the
+                // previous state so a rejection can roll back exactly.
+                let dirty: Vec<usize> =
+                    (0..net.s()).filter(|&s| task_dirty[s]).collect();
+                if dirty.is_empty() {
+                    // zero-traffic re-pointing only: flows (and cost) are
+                    // unchanged; accept iff nothing loaded moved.
+                    if !self.safeguard || !changed_loaded {
+                        accepted = true;
+                        break;
+                    }
+                    restore(phi, &saved_data, &saved_result);
+                    inflate *= 4.0;
+                    self.retries += 1;
+                    continue;
+                }
+                let old_cost = flows.total_cost;
+                let snap: Vec<TaskFlowSnap> =
+                    dirty.iter().map(|&s| TaskFlowSnap::take(&flows, s)).collect();
+                let old_link_flow = flows.link_flow.clone();
+                let old_workload = flows.workload.clone();
+                let mut flow_err = false;
+                for &s in &dirty {
+                    if crate::model::flows::recompute_task_flows(net, phi, &mut flows, s)
+                        .is_err()
+                    {
+                        flow_err = true;
+                        break;
+                    }
+                }
+                let new_cost = if flow_err {
+                    f64::INFINITY
+                } else {
+                    crate::model::flows::refresh_total_cost(net, &mut flows)
+                };
+                if new_cost.is_finite()
+                    && (!self.safeguard
+                        || new_cost < old_cost - 1e-12
+                        || (new_cost <= old_cost + 1e-12 && !changed_loaded))
+                {
+                    accepted = true;
+                    break;
+                }
+                // rollback flows + rows
+                for (snap, &s) in snap.iter().zip(&dirty) {
+                    snap.restore(&mut flows, s);
+                }
+                flows.link_flow = old_link_flow;
+                flows.workload = old_workload;
+                flows.total_cost = old_cost;
+                restore(phi, &saved_data, &saved_result);
+                self.retries += 1;
+                inflate *= 4.0;
+            }
+            if accepted {
+                self.trust = if attempts == 1 {
+                    (self.trust * 0.5).max(1e-5)
+                } else {
+                    (inflate * 0.25).min(1e6)
+                };
+            }
+        }
+
+        let marg2 = compute_marginals(net, phi, &flows).map_err(anyhow::Error::new)?;
+        Ok(IterationStats {
+            total_cost: flows.total_cost,
+            residual: theorem1_residual(net, phi, &marg2),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::network::testnet::{diamond, line3};
+
+    fn run(net: &Network, iters: usize) -> (Strategy, Vec<IterationStats>) {
+        let mut phi = Strategy::local_compute_init(net);
+        let mut sgp = Sgp::new();
+        let mut hist = Vec::new();
+        for _ in 0..iters {
+            hist.push(sgp.step(net, &mut phi).unwrap());
+        }
+        (phi, hist)
+    }
+
+    #[test]
+    fn monotone_descent_diamond() {
+        let net = diamond(true);
+        let (_, hist) = run(&net, 30);
+        for w in hist.windows(2) {
+            assert!(
+                w[1].total_cost <= w[0].total_cost + 1e-9,
+                "cost increased: {} -> {}",
+                w[0].total_cost,
+                w[1].total_cost
+            );
+        }
+    }
+
+    #[test]
+    fn residual_shrinks_diamond() {
+        let net = diamond(true);
+        let (_, hist) = run(&net, 60);
+        let first = hist.first().unwrap().residual;
+        let last = hist.last().unwrap().residual;
+        assert!(
+            last < 1e-6 || last < first * 1e-3,
+            "residual did not shrink: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn loop_free_all_iterations() {
+        let net = line3();
+        let mut phi = Strategy::local_compute_init(&net);
+        let mut sgp = Sgp::new();
+        for _ in 0..40 {
+            sgp.step(&net, &mut phi).unwrap();
+            assert!(phi.is_loop_free(&net));
+            assert!(phi.is_feasible(&net), "{:?}", phi.feasibility_violations(&net));
+        }
+        assert_eq!(sgp.rollbacks, 0, "loop rollback fired");
+    }
+
+    #[test]
+    fn linear_costs_find_shortest_path_structure() {
+        // On the linear diamond, offloading everything at the cheapest
+        // place and shipping over shortest paths is optimal; SGP must reach
+        // a Theorem-1 point (residual ~ 0).
+        let net = diamond(false);
+        let (_, hist) = run(&net, 60);
+        assert!(hist.last().unwrap().residual < 1e-8);
+    }
+
+    #[test]
+    fn improves_over_initial_cost() {
+        let net = diamond(true);
+        let mut phi = Strategy::local_compute_init(&net);
+        let t0 = compute_flows(&net, &phi).unwrap().total_cost;
+        let mut sgp = Sgp::new();
+        for _ in 0..50 {
+            sgp.step(&net, &mut phi).unwrap();
+        }
+        let t1 = compute_flows(&net, &phi).unwrap().total_cost;
+        assert!(t1 < t0, "no improvement: {t0} -> {t1}");
+    }
+
+    #[test]
+    fn async_single_node_updates_descend() {
+        let net = diamond(true);
+        let mut phi = Strategy::local_compute_init(&net);
+        let mut sgp = Sgp::new();
+        let mut last = f64::INFINITY;
+        // sweep nodes round-robin, alternating planes
+        for round in 0..30 {
+            for i in 0..net.n() {
+                let t = sgp
+                    .update_single_node(&net, &mut phi, i, 0, round % 2 == 0)
+                    .unwrap();
+                assert!(t <= last + 1e-9, "async step increased cost");
+                last = t;
+                assert!(phi.is_loop_free(&net));
+            }
+        }
+    }
+
+    #[test]
+    fn restriction_freezes_planes() {
+        let net = diamond(true);
+        let mut phi = Strategy::local_compute_init(&net);
+        let before = phi.clone();
+        let mut sgp = Sgp::with_restriction(Restriction {
+            freeze_data: true,
+            freeze_result: false,
+            extra_blocked_data: None,
+        });
+        for _ in 0..5 {
+            sgp.step(&net, &mut phi).unwrap();
+        }
+        // data plane untouched
+        assert_eq!(phi.data, before.data);
+    }
+}
+
+#[cfg(test)]
+mod convergence_tests {
+    use super::*;
+    use crate::coordinator::build_scenario_network;
+    use crate::model::network::testnet::diamond;
+
+    #[test]
+    fn diamond_reaches_theorem1_point() {
+        let net = diamond(true);
+        let mut phi = Strategy::local_compute_init(&net);
+        let mut sgp = Sgp::new();
+        let mut last = f64::INFINITY;
+        let mut res = f64::INFINITY;
+        for _ in 0..40 {
+            let st = sgp.step(&net, &mut phi).unwrap();
+            assert!(st.total_cost <= last + 1e-9);
+            last = st.total_cost;
+            res = st.residual;
+        }
+        assert!(res < 1e-6, "residual {res}");
+        assert_eq!(sgp.rollbacks, 0);
+    }
+
+    #[test]
+    fn abilene_beats_gp_in_few_iterations() {
+        // Fig. 5b shape on a Table II instance: SGP must reach (or beat)
+        // GP's 80-iteration cost within 25 iterations.
+        let net = build_scenario_network("abilene", 3, 1.0).unwrap();
+        let mut phi_g = Strategy::local_compute_init(&net);
+        let mut gp = crate::algo::Gp::new(1.0);
+        let mut t_gp = f64::INFINITY;
+        for _ in 0..80 {
+            t_gp = gp.step(&net, &mut phi_g).unwrap().total_cost;
+        }
+
+        let mut phi_s = Strategy::local_compute_init(&net);
+        let mut sgp = Sgp::new();
+        let mut t_sgp = f64::INFINITY;
+        for _ in 0..25 {
+            t_sgp = sgp.step(&net, &mut phi_s).unwrap().total_cost;
+        }
+        assert!(
+            t_sgp <= t_gp * 1.001,
+            "SGP@25 {t_sgp} vs GP@80 {t_gp}"
+        );
+    }
+}

@@ -1,0 +1,373 @@
+//! The per-node QP (15): a diagonally-scaled projection onto the simplex.
+//!
+//! Each SGP iteration solves, for every node/task/plane,
+//!
+//! ```text
+//! min_v  δᵀ(v − φ) + (v − φ)ᵀ M (v − φ)
+//! s.t.   Σ v_j = 1,  v ≥ 0,  v_j = 0 ∀ j ∈ blocked
+//! ```
+//!
+//! with `M = diag(m)`, `m_j > 0`. Completing the square, this is the
+//! weighted projection of the unconstrained minimizer
+//! `y_j = φ_j − δ_j / (2 m_j)` onto the restricted simplex under the norm
+//! `‖·‖_M`. The KKT solution is `v_j = max(0, y_j − λ/(2 m_j))` with `λ`
+//! the multiplier of the sum constraint — a 1-D monotone root-finding
+//! problem solved *exactly* by sorting breakpoints (the classic weighted
+//! simplex-projection algorithm, cf. Held–Wolfe–Crowder), with a bisection
+//! fallback exercised in tests for cross-validation.
+
+/// Solve the scaled projection QP. `phi`, `delta`, `scale` are parallel
+/// slot vectors; `blocked[j]` forces `v_j = 0`. `scale` entries must be
+/// positive for unblocked slots (callers floor them at an epsilon).
+///
+/// Returns the new simplex vector `v` (sums to 1 over unblocked slots).
+///
+/// Panics if every slot is blocked.
+pub fn scaled_simplex_qp(
+    phi: &[f64],
+    delta: &[f64],
+    scale: &[f64],
+    blocked: &[bool],
+) -> Vec<f64> {
+    let n = phi.len();
+    assert_eq!(delta.len(), n);
+    assert_eq!(scale.len(), n);
+    assert_eq!(blocked.len(), n);
+    let free: Vec<usize> = (0..n).filter(|&j| !blocked[j]).collect();
+    assert!(!free.is_empty(), "all slots blocked");
+
+    // Unconstrained minimizer y_j and its inverse weights u_j = 1/(2 m_j).
+    // v_j(λ) = max(0, y_j − λ u_j) is non-increasing in λ; find λ* with
+    // Σ v_j(λ*) = 1.
+    let mut y = vec![0.0; n];
+    let mut u = vec![0.0; n];
+    for &j in &free {
+        debug_assert!(scale[j] > 0.0, "non-positive scale {} at slot {j}", scale[j]);
+        u[j] = 1.0 / (2.0 * scale[j]);
+        y[j] = phi[j] - delta[j] * u[j];
+    }
+
+    // Breakpoints: λ_j = y_j / u_j is where slot j hits zero.
+    // Sort descending; scan adding slots to the active set.
+    let mut bps: Vec<(f64, usize)> = free.iter().map(|&j| (y[j] / u[j], j)).collect();
+    bps.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    // With active set A: Σ_{j∈A} (y_j − λ u_j) = 1
+    //   ⇒ λ = (Σ_A y_j − 1) / Σ_A u_j.
+    // The correct active set is the largest prefix of the descending
+    // breakpoint order whose induced λ keeps all prefix slots positive.
+    let mut sum_y = 0.0;
+    let mut sum_u = 0.0;
+    let mut lambda = f64::NEG_INFINITY;
+    for (k, &(bp, j)) in bps.iter().enumerate() {
+        sum_y += y[j];
+        sum_u += u[j];
+        let cand = (sum_y - 1.0) / sum_u;
+        // slot j stays nonnegative iff cand <= bp; the next breakpoint
+        // (if any) must be <= cand for the prefix to be maximal.
+        let next_bp = bps.get(k + 1).map(|p| p.0).unwrap_or(f64::NEG_INFINITY);
+        if cand <= bp && cand >= next_bp {
+            lambda = cand;
+            break;
+        }
+    }
+    if !lambda.is_finite() {
+        // Breakpoint scan can miss a prefix under extreme scalings (ties,
+        // near-infinite diagonals from saturated curvature). Bisection is
+        // slower but unconditionally robust.
+        lambda = bisect_lambda(&y, &u, &free);
+    }
+
+    let mut v = vec![0.0; n];
+    let mut sum = 0.0;
+    for &j in &free {
+        v[j] = (y[j] - lambda * u[j]).max(0.0);
+        sum += v[j];
+    }
+    // Renormalize away accumulated floating-point error (sum ≈ 1).
+    if sum > 0.0 {
+        for &j in &free {
+            v[j] /= sum;
+        }
+    } else {
+        // Degenerate: put everything on the min-δ free slot.
+        let best = free
+            .iter()
+            .cloned()
+            .min_by(|&a, &b| delta[a].partial_cmp(&delta[b]).unwrap())
+            .unwrap();
+        v[best] = 1.0;
+    }
+    v
+}
+
+/// Bisection fallback for λ (cross-validation in tests + defensive path).
+fn bisect_lambda(y: &[f64], u: &[f64], free: &[usize]) -> f64 {
+    let total = |lam: f64| -> f64 {
+        free.iter()
+            .map(|&j| (y[j] - lam * u[j]).max(0.0))
+            .sum::<f64>()
+    };
+    let mut lo = -1.0;
+    let mut hi = 1.0;
+    while total(lo) < 1.0 {
+        lo *= 2.0;
+        if lo < -1e18 {
+            break;
+        }
+    }
+    while total(hi) > 1.0 {
+        hi *= 2.0;
+        if hi > 1e18 {
+            break;
+        }
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if total(mid) > 1.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Objective value of (15) at `v` — used by tests and the descent
+/// safeguard: `δᵀ(v − φ) + (v − φ)ᵀ M (v − φ)`.
+pub fn qp_objective(phi: &[f64], delta: &[f64], scale: &[f64], v: &[f64]) -> f64 {
+    let mut obj = 0.0;
+    for j in 0..phi.len() {
+        let d = v[j] - phi[j];
+        obj += delta[j] * d + scale[j] * d * d;
+    }
+    obj
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    /// Brute-force grid minimizer over the restricted simplex (tests only).
+    fn brute_force(
+        phi: &[f64],
+        delta: &[f64],
+        scale: &[f64],
+        blocked: &[bool],
+        grid: usize,
+    ) -> f64 {
+        let n = phi.len();
+        let free: Vec<usize> = (0..n).filter(|&j| !blocked[j]).collect();
+        let mut best = f64::INFINITY;
+        // enumerate compositions of `grid` over the free slots
+        fn rec(
+            free: &[usize],
+            k: usize,
+            left: usize,
+            grid: usize,
+            v: &mut Vec<f64>,
+            best: &mut f64,
+            phi: &[f64],
+            delta: &[f64],
+            scale: &[f64],
+        ) {
+            if k == free.len() - 1 {
+                v[free[k]] = left as f64 / grid as f64;
+                let obj = qp_objective(phi, delta, scale, v);
+                if obj < *best {
+                    *best = obj;
+                }
+                return;
+            }
+            for take in 0..=left {
+                v[free[k]] = take as f64 / grid as f64;
+                rec(free, k + 1, left - take, grid, v, best, phi, delta, scale);
+            }
+        }
+        let mut v = vec![0.0; n];
+        rec(
+            &free, 0, grid, grid, &mut v, &mut best, phi, delta, scale,
+        );
+        best
+    }
+
+    fn check_kkt(v: &[f64], phi: &[f64], delta: &[f64], scale: &[f64], blocked: &[bool]) {
+        // gradient of the QP at v: δ_j + 2 m_j (v_j − φ_j); optimality means
+        // equal for all v_j > 0, and ≥ that level for v_j = 0.
+        let grads: Vec<f64> = (0..v.len())
+            .map(|j| delta[j] + 2.0 * scale[j] * (v[j] - phi[j]))
+            .collect();
+        let level = (0..v.len())
+            .filter(|&j| !blocked[j] && v[j] > 1e-9)
+            .map(|j| grads[j])
+            .fold(f64::INFINITY, f64::min);
+        for j in 0..v.len() {
+            if blocked[j] {
+                assert_eq!(v[j], 0.0);
+            } else if v[j] > 1e-9 {
+                assert!(
+                    (grads[j] - level).abs() < 1e-6,
+                    "active slot {j} grad {} vs level {level}",
+                    grads[j]
+                );
+            } else {
+                assert!(
+                    grads[j] >= level - 1e-6,
+                    "inactive slot {j} grad {} below level {level}",
+                    grads[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stays_on_simplex() {
+        let phi = [0.5, 0.3, 0.2];
+        let delta = [1.0, 2.0, 0.5];
+        let scale = [1.0, 1.0, 1.0];
+        let blocked = [false, false, false];
+        let v = scaled_simplex_qp(&phi, &delta, &scale, &blocked);
+        assert!((v.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(v.iter().all(|&x| x >= 0.0));
+        check_kkt(&v, &phi, &delta, &scale, &blocked);
+    }
+
+    #[test]
+    fn blocked_slots_zeroed() {
+        let phi = [0.5, 0.5, 0.0];
+        let delta = [0.1, 5.0, -10.0];
+        let scale = [1.0, 1.0, 1.0];
+        let blocked = [false, false, true];
+        let v = scaled_simplex_qp(&phi, &delta, &scale, &blocked);
+        assert_eq!(v[2], 0.0);
+        assert!((v.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // strong pull toward slot 0 (lower δ)
+        assert!(v[0] > phi[0]);
+    }
+
+    #[test]
+    fn zero_step_when_already_optimal() {
+        // equal marginals: current point is optimal, v == φ
+        let phi = [0.25, 0.75];
+        let delta = [1.0, 1.0];
+        let scale = [2.0, 2.0];
+        let v = scaled_simplex_qp(&phi, &delta, &scale, &[false, false]);
+        assert!((v[0] - 0.25).abs() < 1e-9 && (v[1] - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_free_slot() {
+        let v = scaled_simplex_qp(
+            &[0.2, 0.8],
+            &[3.0, 1.0],
+            &[1.0, 1.0],
+            &[true, false],
+        );
+        assert_eq!(v, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn all_blocked_panics() {
+        scaled_simplex_qp(&[1.0], &[0.0], &[1.0], &[true]);
+    }
+
+    #[test]
+    fn matches_brute_force_small() {
+        let mut rng = Pcg::new(21);
+        for trial in 0..50 {
+            let n = rng.int_range(2, 4);
+            let mut phi: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let s: f64 = phi.iter().sum();
+            phi.iter_mut().for_each(|x| *x /= s);
+            let delta: Vec<f64> = (0..n).map(|_| rng.uniform(-2.0, 5.0)).collect();
+            let scale: Vec<f64> = (0..n).map(|_| rng.uniform(0.2, 3.0)).collect();
+            let blocked = vec![false; n];
+            let v = scaled_simplex_qp(&phi, &delta, &scale, &blocked);
+            let exact = qp_objective(&phi, &delta, &scale, &v);
+            let grid = brute_force(&phi, &delta, &scale, &blocked, 60);
+            assert!(
+                exact <= grid + 1e-3,
+                "trial {trial}: exact {exact} worse than grid {grid}"
+            );
+            check_kkt(&v, &phi, &delta, &scale, &blocked);
+        }
+    }
+
+    #[test]
+    fn matches_bisection_fallback() {
+        let mut rng = Pcg::new(22);
+        for _ in 0..200 {
+            let n = rng.int_range(2, 8);
+            let mut phi: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let s: f64 = phi.iter().sum();
+            phi.iter_mut().for_each(|x| *x /= s);
+            let delta: Vec<f64> = (0..n).map(|_| rng.uniform(-3.0, 6.0)).collect();
+            let scale: Vec<f64> = (0..n).map(|_| rng.uniform(0.05, 4.0)).collect();
+            let mut blocked = vec![false; n];
+            // randomly block some slots but keep at least one free
+            for b in blocked.iter_mut() {
+                *b = rng.chance(0.25);
+            }
+            if blocked.iter().all(|&b| b) {
+                blocked[0] = false;
+            }
+            // zero out blocked φ mass and renormalize onto free slots
+            let mut phi2 = phi.clone();
+            let mut free_mass = 0.0;
+            for j in 0..n {
+                if blocked[j] {
+                    phi2[j] = 0.0;
+                } else {
+                    free_mass += phi2[j];
+                }
+            }
+            if free_mass == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                phi2[j] /= free_mass;
+            }
+
+            let v = scaled_simplex_qp(&phi2, &delta, &scale, &blocked);
+
+            // cross-validate λ via bisection path
+            let free: Vec<usize> = (0..n).filter(|&j| !blocked[j]).collect();
+            let mut y = vec![0.0; n];
+            let mut u = vec![0.0; n];
+            for &j in &free {
+                u[j] = 1.0 / (2.0 * scale[j]);
+                y[j] = phi2[j] - delta[j] * u[j];
+            }
+            let lam = bisect_lambda(&y, &u, &free);
+            for &j in &free {
+                let vb = (y[j] - lam * u[j]).max(0.0);
+                assert!(
+                    (v[j] - vb).abs() < 1e-6,
+                    "slot {j}: exact {} vs bisect {vb}",
+                    v[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn descent_direction_property() {
+        // the QP solution never increases the local linear model δᵀ(v−φ)
+        // beyond zero: δᵀ(v−φ) + quadratic ≤ 0 at the optimum since v=φ is
+        // feasible with objective 0.
+        let mut rng = Pcg::new(23);
+        for _ in 0..100 {
+            let n = rng.int_range(2, 6);
+            let mut phi: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let s: f64 = phi.iter().sum();
+            phi.iter_mut().for_each(|x| *x /= s);
+            let delta: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 5.0)).collect();
+            let scale: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 2.0)).collect();
+            let v = scaled_simplex_qp(&phi, &delta, &scale, &vec![false; n]);
+            let obj = qp_objective(&phi, &delta, &scale, &v);
+            assert!(obj <= 1e-10, "objective {obj} should be ≤ 0");
+        }
+    }
+}

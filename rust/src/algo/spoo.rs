@@ -1,0 +1,138 @@
+//! SPOO — Shortest Path Optimal Offloading baseline (§V).
+//!
+//! Routing is frozen to shortest-path trees toward each destination,
+//! measured with the zero-flow marginal `D'(0)` ("propagation delay
+//! without queueing effect"); only the offloading split `φ⁻_i0 ∈ [0,1]`
+//! at each node on the path is optimized. Results follow the same
+//! shortest-path tree (`φ⁺ = 1` along it).
+//!
+//! Implemented as a *restricted* SGP: every data slot except
+//! `{local computation, SP next hop}` is permanently blocked, and the
+//! result plane is frozen at the SP tree — so the same projection/descent
+//! machinery optimizes exactly the paper's SPOO variable set. A similar
+//! restriction appears in the paper's reference [12] (linear topology
+//! partial offloading).
+
+use crate::graph::algorithms::dijkstra_to;
+use crate::model::network::Network;
+use crate::model::strategy::{out_slot, Strategy};
+
+use super::sgp::{Restriction, Sgp};
+
+/// Build the SPOO optimizer and its initial strategy (all-local
+/// computation on the SP trees).
+pub fn spoo_optimizer(net: &Network) -> (Sgp, Strategy) {
+    let n = net.n();
+    let w0: Vec<f64> = net.link_cost.iter().map(|c| c.deriv_at_zero()).collect();
+
+    // start from the all-local strategy whose result plane already follows
+    // the SP trees
+    let phi = Strategy::local_compute_init(net);
+
+    // Blocked mask: for each task, allow only {slot 0, SP next hop}.
+    let mut extra = Vec::with_capacity(net.s());
+    for task in net.tasks.iter() {
+        let (_, next) = dijkstra_to(&net.graph, task.dest, &w0);
+        let mut per_node = Vec::with_capacity(n);
+        for i in 0..n {
+            let deg = net.graph.out_degree(i);
+            let mut slots = vec![true; deg + 1];
+            slots[0] = false; // offloading split stays free
+            if i != task.dest {
+                let nxt = next[i];
+                if nxt != usize::MAX {
+                    if let Some(k) = out_slot(&net.graph, i, nxt) {
+                        slots[k + 1] = false; // SP next hop stays free
+                    }
+                }
+            }
+            per_node.push(slots);
+        }
+        extra.push(per_node);
+    }
+
+    let sgp = Sgp::with_restriction(Restriction {
+        freeze_data: false,
+        freeze_result: true,
+        extra_blocked_data: Some(extra),
+    });
+    (sgp, phi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::Optimizer;
+    use crate::model::flows::compute_flows;
+    use crate::model::network::testnet::diamond;
+    use crate::model::strategy::out_slot;
+
+    #[test]
+    fn only_path_slots_used() {
+        let net = diamond(true);
+        let (mut opt, mut phi) = spoo_optimizer(&net);
+        for _ in 0..40 {
+            opt.step(&net, &mut phi).unwrap();
+        }
+        // data plane of node 0 may only use {local, SP next hop}
+        let w0: Vec<f64> = net.link_cost.iter().map(|c| c.deriv_at_zero()).collect();
+        let (_, next) = dijkstra_to(&net.graph, 3, &w0);
+        let nxt = next[0];
+        let allowed = out_slot(&net.graph, 0, nxt).unwrap() + 1;
+        for (slot, &frac) in phi.data[0][0].iter().enumerate() {
+            if slot != 0 && slot != allowed {
+                assert!(
+                    frac < 1e-12,
+                    "slot {slot} carries data {frac} off the SP"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn result_plane_frozen_to_sp_tree() {
+        let net = diamond(true);
+        let (mut opt, mut phi) = spoo_optimizer(&net);
+        let before = phi.result.clone();
+        for _ in 0..20 {
+            opt.step(&net, &mut phi).unwrap();
+        }
+        assert_eq!(phi.result, before);
+    }
+
+    #[test]
+    fn improves_on_all_local_within_restriction() {
+        let net = diamond(true);
+        let (mut opt, mut phi) = spoo_optimizer(&net);
+        let t0 = compute_flows(&net, &phi).unwrap().total_cost;
+        let mut last = t0;
+        for _ in 0..60 {
+            let st = opt.step(&net, &mut phi).unwrap();
+            assert!(st.total_cost <= last + 1e-9);
+            last = st.total_cost;
+        }
+        assert!(phi.is_feasible(&net));
+        assert!(phi.is_loop_free(&net));
+        assert!(last <= t0);
+    }
+
+    #[test]
+    fn spoo_never_beats_sgp() {
+        // SPOO optimizes a subset of SGP's variables from the same start:
+        // its steady-state cost can't be lower.
+        let net = diamond(true);
+        let (mut spoo, mut phi_p) = spoo_optimizer(&net);
+        for _ in 0..100 {
+            spoo.step(&net, &mut phi_p).unwrap();
+        }
+        let tp = compute_flows(&net, &phi_p).unwrap().total_cost;
+
+        let mut sgp = crate::algo::Sgp::new();
+        let mut phi_s = Strategy::local_compute_init(&net);
+        for _ in 0..100 {
+            sgp.step(&net, &mut phi_s).unwrap();
+        }
+        let ts = compute_flows(&net, &phi_s).unwrap().total_cost;
+        assert!(ts <= tp + 1e-6, "SGP {ts} vs SPOO {tp}");
+    }
+}

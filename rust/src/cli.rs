@@ -1,0 +1,140 @@
+//! Hand-rolled command-line argument parser (clap is unavailable offline).
+//!
+//! Supports the shapes the `cecflow` binary and examples need:
+//! `prog SUBCOMMAND [--flag] [--key value] [--key=value] positional...`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand, options, flags and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable); `first_is_subcommand`
+    /// treats the first bare word as the subcommand.
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I, first_is_subcommand: bool) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.opts.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else if first_is_subcommand && args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env(first_is_subcommand: bool) -> Args {
+        Args::parse_from(std::env::args().skip(1), first_is_subcommand)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .map(|s| {
+                s.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .map(|s| {
+                s.parse::<usize>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name)
+            .map(|s| {
+                s.parse::<u64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str], sub: bool) -> Args {
+        Args::parse_from(words.iter().map(|s| s.to_string()), sub)
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["run", "--topology", "geant", "--iters=50"], true);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.opt("topology"), Some("geant"));
+        assert_eq!(a.opt_usize("iters", 0), 50);
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse(&["x", "--verbose", "--seed", "7"], true);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_u64("seed", 0), 7);
+        assert!(!a.flag("seed"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["--check"], false);
+        assert!(a.flag("check"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse(&["cmd", "one", "two", "--k", "v"], true);
+        assert_eq!(a.positional, vec!["one", "two"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], false);
+        assert_eq!(a.opt_or("missing", "d"), "d");
+        assert_eq!(a.opt_f64("scale", 1.5), 1.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_number_panics() {
+        let a = parse(&["--n", "abc"], false);
+        a.opt_usize("n", 0);
+    }
+}

@@ -1,0 +1,220 @@
+//! JSON experiment configuration for the `cecflow run` subcommand.
+//!
+//! Example:
+//! ```json
+//! {
+//!   "scenario": "geant",
+//!   "seed": 42,
+//!   "algorithm": "sgp",
+//!   "max_iters": 200,
+//!   "rate_scale": 1.0,
+//!   "schedule": "sync"
+//! }
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    Sgp,
+    Gp,
+    Spoo,
+    Lcor,
+    Lpr,
+}
+
+impl Algorithm {
+    pub fn parse(name: &str) -> Option<Algorithm> {
+        Some(match name.to_ascii_lowercase().as_str() {
+            "sgp" => Algorithm::Sgp,
+            "gp" => Algorithm::Gp,
+            "spoo" => Algorithm::Spoo,
+            "lcor" => Algorithm::Lcor,
+            "lpr" => Algorithm::Lpr,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Sgp => "sgp",
+            Algorithm::Gp => "gp",
+            Algorithm::Spoo => "spoo",
+            Algorithm::Lcor => "lcor",
+            Algorithm::Lpr => "lpr",
+        }
+    }
+
+    pub fn all() -> &'static [Algorithm] {
+        &[
+            Algorithm::Sgp,
+            Algorithm::Gp,
+            Algorithm::Spoo,
+            Algorithm::Lcor,
+            Algorithm::Lpr,
+        ]
+    }
+}
+
+/// Update schedule for the optimization loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// All nodes update each iteration (Algorithm 1's synchronized form).
+    Sync,
+    /// One random (node, task, plane) per update (Theorem 2).
+    Async,
+    /// Synchronous iterations with flows/marginals on the XLA data plane.
+    Accelerated,
+}
+
+impl Schedule {
+    pub fn parse(name: &str) -> Option<Schedule> {
+        Some(match name.to_ascii_lowercase().as_str() {
+            "sync" => Schedule::Sync,
+            "async" => Schedule::Async,
+            "accelerated" | "xla" => Schedule::Accelerated,
+            _ => return None,
+        })
+    }
+}
+
+/// A full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub scenario: String,
+    pub seed: u64,
+    pub algorithm: Algorithm,
+    pub max_iters: usize,
+    pub rate_scale: f64,
+    pub schedule: Schedule,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            scenario: "connected-er".to_string(),
+            seed: 42,
+            algorithm: Algorithm::Sgp,
+            max_iters: 200,
+            rate_scale: 1.0,
+            schedule: Schedule::Sync,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_json(doc: &Json) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(s) = doc.get("scenario").as_str() {
+            cfg.scenario = s.to_string();
+        }
+        if let Some(n) = doc.get("seed").as_num() {
+            cfg.seed = n as u64;
+        }
+        if let Some(a) = doc.get("algorithm").as_str() {
+            cfg.algorithm =
+                Algorithm::parse(a).with_context(|| format!("unknown algorithm '{a}'"))?;
+        }
+        if let Some(n) = doc.get("max_iters").as_usize() {
+            cfg.max_iters = n;
+        }
+        if let Some(x) = doc.get("rate_scale").as_num() {
+            if x <= 0.0 {
+                bail!("rate_scale must be positive");
+            }
+            cfg.rate_scale = x;
+        }
+        if let Some(s) = doc.get("schedule").as_str() {
+            cfg.schedule =
+                Schedule::parse(s).with_context(|| format!("unknown schedule '{s}'"))?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<ExperimentConfig> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        let doc = Json::parse(&text).context("parsing config JSON")?;
+        Self::from_json(&doc)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("scenario", Json::Str(self.scenario.clone()))
+            .set("seed", Json::Num(self.seed as f64))
+            .set("algorithm", Json::Str(self.algorithm.name().to_string()))
+            .set("max_iters", Json::Num(self.max_iters as f64))
+            .set("rate_scale", Json::Num(self.rate_scale))
+            .set(
+                "schedule",
+                Json::Str(
+                    match self.schedule {
+                        Schedule::Sync => "sync",
+                        Schedule::Async => "async",
+                        Schedule::Accelerated => "accelerated",
+                    }
+                    .to_string(),
+                ),
+            );
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let doc = Json::parse(
+            r#"{"scenario":"geant","seed":7,"algorithm":"lpr",
+                "max_iters":50,"rate_scale":1.2,"schedule":"async"}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.scenario, "geant");
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.algorithm, Algorithm::Lpr);
+        assert_eq!(cfg.max_iters, 50);
+        assert_eq!(cfg.rate_scale, 1.2);
+        assert_eq!(cfg.schedule, Schedule::Async);
+    }
+
+    #[test]
+    fn defaults_fill_missing() {
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.algorithm, Algorithm::Sgp);
+        assert_eq!(cfg.schedule, Schedule::Sync);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"algorithm":"zzz"}"#).unwrap()
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"rate_scale":-1}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ExperimentConfig::default();
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.scenario, cfg.scenario);
+        assert_eq!(back.algorithm, cfg.algorithm);
+    }
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for a in Algorithm::all() {
+            assert_eq!(Algorithm::parse(a.name()), Some(*a));
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Experiment metrics (§V): the travel-distance statistics `L_data` /
+//! `L_result` of Fig. 5d and cost decompositions.
+
+use crate::model::flows::FlowState;
+use crate::model::network::Network;
+
+/// Flow-weighted average hop counts.
+///
+/// Under the flow model, the average number of hops a data packet travels
+/// equals total data link flow divided by total exogenous input rate
+/// (every hop of every packet contributes its rate to exactly one link);
+/// likewise for results with the total result generation rate `Σ a_m g`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TravelDistance {
+    pub l_data: f64,
+    pub l_result: f64,
+}
+
+pub fn travel_distance(net: &Network, flows: &FlowState) -> TravelDistance {
+    let mut data_flow = 0.0;
+    let mut res_flow = 0.0;
+    for s in 0..net.s() {
+        data_flow += flows.f_minus[s].iter().sum::<f64>();
+        res_flow += flows.f_plus[s].iter().sum::<f64>();
+    }
+    let data_rate: f64 = (0..net.s()).map(|s| net.task_input(s)).sum();
+    let res_rate: f64 = (0..net.s())
+        .map(|s| net.a_of(s) * flows.g[s].iter().sum::<f64>())
+        .sum();
+    TravelDistance {
+        l_data: if data_rate > 0.0 { data_flow / data_rate } else { 0.0 },
+        l_result: if res_rate > 0.0 { res_flow / res_rate } else { 0.0 },
+    }
+}
+
+/// Cost decomposition: communication vs computation share of `T`.
+#[derive(Clone, Copy, Debug)]
+pub struct CostBreakdown {
+    pub communication: f64,
+    pub computation: f64,
+}
+
+pub fn cost_breakdown(net: &Network, flows: &FlowState) -> CostBreakdown {
+    let communication: f64 = (0..net.e())
+        .map(|e| net.link_cost[e].value(flows.link_flow[e]))
+        .sum();
+    let computation: f64 = (0..net.n())
+        .map(|i| net.comp_cost[i].value(flows.workload[i]))
+        .sum();
+    CostBreakdown {
+        communication,
+        computation,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::flows::compute_flows;
+    use crate::model::network::testnet::diamond;
+    use crate::model::strategy::Strategy;
+
+    #[test]
+    fn local_compute_means_zero_data_distance() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let flows = compute_flows(&net, &phi).unwrap();
+        let td = travel_distance(&net, &flows);
+        assert_eq!(td.l_data, 0.0);
+        // results travel SP distance 0 -> 3 = 2 hops
+        assert!((td.l_result - 2.0).abs() < 1e-9, "l_result {}", td.l_result);
+    }
+
+    #[test]
+    fn compute_at_dest_means_zero_result_distance() {
+        let net = diamond(true);
+        let phi = Strategy::compute_at_dest_init(&net);
+        let flows = compute_flows(&net, &phi).unwrap();
+        let td = travel_distance(&net, &flows);
+        assert!((td.l_data - 2.0).abs() < 1e-9);
+        assert_eq!(td.l_result, 0.0);
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let flows = compute_flows(&net, &phi).unwrap();
+        let bd = cost_breakdown(&net, &flows);
+        assert!(
+            (bd.communication + bd.computation - flows.total_cost).abs() < 1e-9
+        );
+        assert!(bd.communication > 0.0);
+        assert!(bd.computation > 0.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! The coordination layer: scenario construction (Table II), optimization
+//! loop driving, metrics, reporting, and experiment configuration — the
+//! pieces `main.rs`, the examples and every bench build on.
+
+pub mod config;
+pub mod metrics;
+pub mod report;
+pub mod runner;
+pub mod scenario;
+
+use anyhow::{Context, Result};
+
+use crate::algo::{lcor_optimizer, spoo_optimizer, Gp, Lpr, Sgp};
+use crate::model::flows::compute_flows;
+use crate::model::network::Network;
+use crate::model::strategy::Strategy;
+
+pub use config::{Algorithm, ExperimentConfig, Schedule};
+pub use runner::{optimize, optimize_accelerated, RunConfig, RunResult};
+pub use scenario::{connected_er_servers, CostKind, Scenario, ScenarioSpec};
+
+/// Unified outcome across iterative algorithms and the one-shot LPR.
+#[derive(Clone, Debug)]
+pub struct AlgoOutcome {
+    pub algorithm: String,
+    pub final_cost: f64,
+    /// Iterations run (1 for LPR).
+    pub iterations: usize,
+    /// Cost trajectory (single entry for LPR).
+    pub costs: Vec<f64>,
+    pub l_data: f64,
+    pub l_result: f64,
+    pub wall_seconds: f64,
+}
+
+/// Run one algorithm on a network to steady state and collect the §V
+/// metrics. This is the single entry point the Fig. 4 / 5c / 5d benches
+/// loop over.
+pub fn run_algorithm(net: &Network, algo: Algorithm, cfg: &RunConfig) -> Result<AlgoOutcome> {
+    match algo {
+        Algorithm::Lpr => {
+            let start = std::time::Instant::now();
+            let sol = Lpr::default().solve(net);
+            Ok(AlgoOutcome {
+                algorithm: "lpr".into(),
+                final_cost: sol.total_cost,
+                iterations: 1,
+                costs: vec![sol.total_cost],
+                l_data: sol.l_data,
+                l_result: sol.l_result,
+                wall_seconds: start.elapsed().as_secs_f64(),
+            })
+        }
+        Algorithm::Sgp | Algorithm::Gp => {
+            let phi0 = Strategy::local_compute_init(net);
+            let res = match algo {
+                Algorithm::Sgp => {
+                    let mut opt = Sgp::new();
+                    optimize(net, &mut opt, &phi0, cfg)?
+                }
+                _ => {
+                    let mut opt = Gp::new(1.0);
+                    optimize(net, &mut opt, &phi0, cfg)?
+                }
+            };
+            finish_iterative(net, res)
+        }
+        Algorithm::Spoo => {
+            let (mut opt, phi0) = spoo_optimizer(net);
+            let res = optimize(net, &mut opt, &phi0, cfg)?;
+            finish_iterative_named(net, res, "spoo")
+        }
+        Algorithm::Lcor => {
+            let (mut opt, phi0) = lcor_optimizer(net);
+            let res = optimize(net, &mut opt, &phi0, cfg)?;
+            finish_iterative_named(net, res, "lcor")
+        }
+    }
+}
+
+fn finish_iterative(net: &Network, res: RunResult) -> Result<AlgoOutcome> {
+    let name = res.algorithm.clone();
+    finish_iterative_named(net, res, &name)
+}
+
+fn finish_iterative_named(net: &Network, res: RunResult, name: &str) -> Result<AlgoOutcome> {
+    let flows = compute_flows(net, &res.phi)
+        .context("evaluating final strategy")?;
+    let td = metrics::travel_distance(net, &flows);
+    Ok(AlgoOutcome {
+        algorithm: name.to_string(),
+        final_cost: res.final_cost(),
+        iterations: res.costs.len(),
+        costs: res.costs,
+        l_data: td.l_data,
+        l_result: td.l_result,
+        wall_seconds: res.wall_seconds,
+    })
+}
+
+/// Build the network for a named scenario, applying the rate scale.
+pub fn build_scenario_network(name: &str, seed: u64, rate_scale: f64) -> Result<Network> {
+    let spec = ScenarioSpec::by_name(name)
+        .with_context(|| format!("unknown scenario '{name}'"))?;
+    let mut sc = spec.build(seed);
+    if (rate_scale - 1.0).abs() > 1e-12 {
+        sc.net.scale_rates(rate_scale);
+    }
+    Ok(sc.net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_all_algorithms_on_abilene() {
+        let net = build_scenario_network("abilene", 3, 1.0).unwrap();
+        let cfg = RunConfig::quick();
+        let mut costs = std::collections::BTreeMap::new();
+        for &algo in Algorithm::all() {
+            let out = run_algorithm(&net, algo, &cfg).unwrap();
+            assert!(
+                out.final_cost.is_finite() || algo == Algorithm::Lpr,
+                "{:?} infinite",
+                algo
+            );
+            costs.insert(out.algorithm.clone(), out.final_cost);
+        }
+        // the headline claim of Fig. 4: SGP is the best of the bunch
+        let sgp = costs["sgp"];
+        for (name, &c) in &costs {
+            assert!(
+                sgp <= c + 1e-6,
+                "SGP ({sgp}) beaten by {name} ({c})"
+            );
+        }
+    }
+
+    #[test]
+    fn rate_scale_applied() {
+        let a = build_scenario_network("abilene", 3, 1.0).unwrap();
+        let b = build_scenario_network("abilene", 3, 2.0).unwrap();
+        assert!((b.task_input(0) - 2.0 * a.task_input(0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_scenario_rejected() {
+        assert!(build_scenario_network("zzz", 1, 1.0).is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! Experiment reporting: machine-readable JSON/CSV under `results/` plus
+//! the paper-style normalized bar rendering used by the benches.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::table::{bar, fnum, Table};
+
+/// A labelled series of (x, y) points — one line of Fig. 5c/5d.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+}
+
+impl Series {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("label", Json::Str(self.label.clone()))
+            .set("x", Json::from_f64_slice(&self.x))
+            .set("y", Json::from_f64_slice(&self.y));
+        o
+    }
+}
+
+/// Ensure `results/` exists and return the path for `name`.
+pub fn results_path(name: &str) -> Result<PathBuf> {
+    let dir = std::env::var_os("CECFLOW_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results"));
+    std::fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
+    Ok(dir.join(name))
+}
+
+/// Write a JSON document to `results/<name>`.
+pub fn write_json(name: &str, doc: &Json) -> Result<PathBuf> {
+    let path = results_path(name)?;
+    std::fs::write(&path, doc.pretty()).with_context(|| format!("writing {path:?}"))?;
+    Ok(path)
+}
+
+/// Write a CSV file (header + rows) to `results/<name>`.
+pub fn write_csv(name: &str, header: &[&str], rows: &[Vec<String>]) -> Result<PathBuf> {
+    let path = results_path(name)?;
+    let mut text = header.join(",");
+    text.push('\n');
+    for row in rows {
+        text.push_str(&row.join(","));
+        text.push('\n');
+    }
+    std::fs::write(&path, text).with_context(|| format!("writing {path:?}"))?;
+    Ok(path)
+}
+
+/// Render the Fig. 4-style normalized bars: one block per scenario, bars
+/// scaled to the worst algorithm in that scenario (matching the paper's
+/// per-scenario normalization).
+pub fn render_normalized_bars(
+    scenario_names: &[String],
+    algo_names: &[String],
+    // costs[scenario][algo]
+    costs: &[Vec<f64>],
+) -> String {
+    let mut out = String::new();
+    for (si, sname) in scenario_names.iter().enumerate() {
+        let worst = costs[si]
+            .iter()
+            .cloned()
+            .filter(|c| c.is_finite())
+            .fold(0.0f64, f64::max);
+        out.push_str(&format!("\n{sname}\n"));
+        for (ai, aname) in algo_names.iter().enumerate() {
+            let c = costs[si][ai];
+            let norm = if worst > 0.0 { c / worst } else { 0.0 };
+            out.push_str(&format!(
+                "  {aname:<6} |{}| {:.3}  (T = {})\n",
+                bar(c, worst, 34),
+                norm,
+                fnum(c)
+            ));
+        }
+    }
+    out
+}
+
+/// Render a plain table of series values (Fig. 5c/5d text form).
+pub fn render_series_table(x_label: &str, series: &[Series]) -> String {
+    let mut header = vec![x_label];
+    let labels: Vec<&str> = series.iter().map(|s| s.label.as_str()).collect();
+    header.extend(labels);
+    let mut t = Table::new(&header);
+    if let Some(first) = series.first() {
+        for (i, &x) in first.x.iter().enumerate() {
+            let mut row = vec![fnum(x)];
+            for s in series {
+                row.push(fnum(s.y[i]));
+            }
+            t.row(row);
+        }
+    }
+    t.render()
+}
+
+/// Serialize a whole figure (several series) to JSON.
+pub fn figure_json(title: &str, series: &[Series]) -> Json {
+    let mut o = Json::obj();
+    o.set("title", Json::Str(title.to_string())).set(
+        "series",
+        Json::Arr(series.iter().map(Series::to_json).collect()),
+    );
+    o
+}
+
+/// Write a line-chart SVG for a figure's series to `results/<name>`.
+pub fn write_series_svg(
+    name: &str,
+    title: &str,
+    x_label: &str,
+    y_label: &str,
+    series: &[Series],
+) -> Result<PathBuf> {
+    let lines: Vec<crate::util::svg::Line> = series
+        .iter()
+        .map(|s| crate::util::svg::Line {
+            label: &s.label,
+            points: s.x.iter().cloned().zip(s.y.iter().cloned()).collect(),
+        })
+        .collect();
+    let svg = crate::util::svg::line_chart(title, x_label, y_label, &lines);
+    let path = results_path(name)?;
+    std::fs::write(&path, svg).with_context(|| format!("writing {path:?}"))?;
+    Ok(path)
+}
+
+/// Write a Fig. 4-style grouped-bar SVG to `results/<name>`.
+pub fn write_bars_svg(
+    name: &str,
+    title: &str,
+    groups: &[String],
+    series: &[String],
+    values: &[Vec<f64>],
+) -> Result<PathBuf> {
+    let svg = crate::util::svg::grouped_bars(title, groups, series, values);
+    let path = results_path(name)?;
+    std::fs::write(&path, svg).with_context(|| format!("writing {path:?}"))?;
+    Ok(path)
+}
+
+/// Quick existence check used by tests.
+pub fn exists(path: &Path) -> bool {
+    path.exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bars_render_normalized() {
+        let out = render_normalized_bars(
+            &["scen".into()],
+            &["sgp".into(), "lpr".into()],
+            &[vec![1.0, 2.0]],
+        );
+        assert!(out.contains("scen"));
+        assert!(out.contains("sgp"));
+        assert!(out.contains("1.000")); // lpr normalized to 1
+        assert!(out.contains("0.500")); // sgp at half
+    }
+
+    #[test]
+    fn bars_handle_infinite_costs() {
+        let out = render_normalized_bars(
+            &["s".into()],
+            &["a".into(), "b".into()],
+            &[vec![f64::INFINITY, 2.0]],
+        );
+        assert!(out.contains("inf"));
+    }
+
+    #[test]
+    fn series_table_renders() {
+        let s = Series {
+            label: "sgp".into(),
+            x: vec![1.0, 2.0],
+            y: vec![10.0, 20.0],
+        };
+        let txt = render_series_table("scale", &[s]);
+        assert!(txt.contains("scale"));
+        assert!(txt.contains("sgp"));
+        assert!(txt.lines().count() >= 4);
+    }
+
+    #[test]
+    fn json_roundtrip_of_figure() {
+        let s = Series {
+            label: "x".into(),
+            x: vec![0.5],
+            y: vec![1.5],
+        };
+        let doc = figure_json("fig", &[s]);
+        let parsed = Json::parse(&doc.dump()).unwrap();
+        assert_eq!(parsed.get("title").as_str(), Some("fig"));
+        assert_eq!(
+            parsed.get("series").as_arr().unwrap()[0]
+                .get("label")
+                .as_str(),
+            Some("x")
+        );
+    }
+
+    #[test]
+    fn csv_written_to_results() {
+        std::env::set_var("CECFLOW_RESULTS", std::env::temp_dir().join("cecflow-res-test"));
+        let p = write_csv("t.csv", &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::env::remove_var("CECFLOW_RESULTS");
+    }
+}

@@ -1,0 +1,201 @@
+//! Optimization loop driver: runs an optimizer to steady state, captures
+//! the cost/residual trajectory, and detects convergence.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::algo::{Optimizer, Sgp};
+use crate::model::network::Network;
+use crate::model::strategy::Strategy;
+use crate::runtime::DenseEvaluator;
+
+/// Stopping rule for optimization runs.
+#[derive(Clone, Copy, Debug)]
+pub struct RunConfig {
+    pub max_iters: usize,
+    /// Converged when the relative cost drop over `patience` iterations
+    /// falls below `tol`.
+    pub tol: f64,
+    pub patience: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            max_iters: 300,
+            tol: 1e-7,
+            patience: 5,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn quick() -> Self {
+        RunConfig {
+            max_iters: 80,
+            tol: 1e-5,
+            patience: 3,
+        }
+    }
+}
+
+/// Result of one optimization run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub algorithm: String,
+    /// Cost after each iteration (index 0 = after first step).
+    pub costs: Vec<f64>,
+    /// Theorem-1 residual after each iteration.
+    pub residuals: Vec<f64>,
+    /// First iteration (1-based) within 1% of the final cost.
+    pub iters_to_1pct: usize,
+    pub wall_seconds: f64,
+    pub phi: Strategy,
+}
+
+impl RunResult {
+    pub fn final_cost(&self) -> f64 {
+        *self.costs.last().expect("empty run")
+    }
+
+    pub fn final_residual(&self) -> f64 {
+        *self.residuals.last().expect("empty run")
+    }
+
+    fn finish(
+        algorithm: &str,
+        costs: Vec<f64>,
+        residuals: Vec<f64>,
+        wall: f64,
+        phi: Strategy,
+    ) -> RunResult {
+        let fin = *costs.last().expect("empty run");
+        let thresh = fin * 1.01;
+        let iters_to_1pct = costs
+            .iter()
+            .position(|&c| c <= thresh)
+            .map(|p| p + 1)
+            .unwrap_or(costs.len());
+        RunResult {
+            algorithm: algorithm.to_string(),
+            costs,
+            residuals,
+            iters_to_1pct,
+            wall_seconds: wall,
+            phi,
+        }
+    }
+}
+
+fn converged(costs: &[f64], cfg: &RunConfig) -> bool {
+    if costs.len() < cfg.patience + 1 {
+        return false;
+    }
+    let now = costs[costs.len() - 1];
+    let then = costs[costs.len() - 1 - cfg.patience];
+    (then - now).abs() <= cfg.tol * then.abs().max(1e-12)
+}
+
+/// Run any [`Optimizer`] to steady state (native evaluation).
+pub fn optimize(
+    net: &Network,
+    opt: &mut dyn Optimizer,
+    phi0: &Strategy,
+    cfg: &RunConfig,
+) -> Result<RunResult> {
+    let mut phi = phi0.clone();
+    let mut costs = Vec::new();
+    let mut residuals = Vec::new();
+    let start = Instant::now();
+    for _ in 0..cfg.max_iters {
+        let st = opt.step(net, &mut phi)?;
+        costs.push(st.total_cost);
+        residuals.push(st.residual);
+        if converged(&costs, cfg) {
+            break;
+        }
+    }
+    Ok(RunResult::finish(
+        opt.name(),
+        costs,
+        residuals,
+        start.elapsed().as_secs_f64(),
+        phi,
+    ))
+}
+
+/// Run SGP with flows/marginals evaluated on the XLA data plane.
+pub fn optimize_accelerated(
+    net: &Network,
+    sgp: &mut Sgp,
+    phi0: &Strategy,
+    cfg: &RunConfig,
+    evaluator: &DenseEvaluator,
+) -> Result<RunResult> {
+    let mut phi = phi0.clone();
+    let mut costs = Vec::new();
+    let mut residuals = Vec::new();
+    let start = Instant::now();
+    for _ in 0..cfg.max_iters {
+        let st = sgp.step_dense(net, &mut phi, evaluator)?;
+        costs.push(st.total_cost);
+        residuals.push(st.residual);
+        if converged(&costs, cfg) {
+            break;
+        }
+    }
+    Ok(RunResult::finish(
+        "sgp-xla",
+        costs,
+        residuals,
+        start.elapsed().as_secs_f64(),
+        phi,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{Gp, Sgp};
+    use crate::model::network::testnet::diamond;
+
+    #[test]
+    fn optimize_runs_to_convergence() {
+        let net = diamond(true);
+        let phi0 = Strategy::local_compute_init(&net);
+        let mut sgp = Sgp::new();
+        let res = optimize(&net, &mut sgp, &phi0, &RunConfig::default()).unwrap();
+        assert!(res.final_cost().is_finite());
+        assert!(res.costs.len() >= 2);
+        assert!(res.final_residual() < 1e-5, "residual {}", res.final_residual());
+        // monotone
+        for w in res.costs.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9);
+        }
+    }
+
+    #[test]
+    fn convergence_detection_stops_early() {
+        let net = diamond(true);
+        let phi0 = Strategy::local_compute_init(&net);
+        let mut sgp = Sgp::new();
+        let cfg = RunConfig {
+            max_iters: 500,
+            tol: 1e-6,
+            patience: 4,
+        };
+        let res = optimize(&net, &mut sgp, &phi0, &cfg).unwrap();
+        assert!(res.costs.len() < 500, "never detected convergence");
+    }
+
+    #[test]
+    fn iters_to_1pct_sane() {
+        let net = diamond(true);
+        let phi0 = Strategy::local_compute_init(&net);
+        let mut gp = Gp::new(1.0);
+        let res = optimize(&net, &mut gp, &phi0, &RunConfig::quick()).unwrap();
+        assert!(res.iters_to_1pct >= 1);
+        assert!(res.iters_to_1pct <= res.costs.len());
+    }
+}

@@ -1,0 +1,429 @@
+//! Table II scenario builders: paper-faithful random network instances.
+//!
+//! Parameter recipe (§V):
+//! * `M = 5` computation types; `a_m ~ Exp(0.5)` truncated to `[0.1, 5]`;
+//! * each task gets a uniform random type and destination plus `|R|`
+//!   random active data sources with rates `U[r_min, r_max]`,
+//!   `[0.5, 1.5]`;
+//! * link costs: Linear with unit `d_ij ~ U[0, 2·d̄]`, or Queue with
+//!   capacity `d_ij ~ U[0, 2·d̄]`;
+//! * computation costs: Linear (`s_i` uniform with mean `s̄`) or Queue
+//!   (`s_i ~ Exp(s̄)`), weights `w_im ~ U[1, 5]`.
+//!
+//! Two guards keep instances *feasible* where the paper implicitly assumes
+//! it ("we simulate on the scenarios where such pure-local computation is
+//! feasible", §V): computation capacities are redrawn/bumped until every
+//! node can absorb its local input, and link capacities are inflated
+//! geometrically until the all-local initial strategy has finite cost.
+//! Both adjustments preserve the congestion regime and are documented in
+//! DESIGN.md §3.6.
+
+use crate::graph::topology::{connected_er, TopologyKind};
+use crate::model::cost::CostFn;
+use crate::model::network::{Network, Task};
+use crate::model::strategy::Strategy;
+use crate::util::rng::Pcg;
+
+/// Cost-family selector for a scenario.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostKind {
+    Linear,
+    Queue,
+}
+
+/// A scenario specification (one Table II row).
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    pub name: &'static str,
+    pub topology: TopologyKind,
+    /// `|S|` tasks.
+    pub num_tasks: usize,
+    /// `|R|` active data sources per task.
+    pub sources_per_task: usize,
+    pub link_kind: CostKind,
+    /// `d̄_ij` mean link parameter.
+    pub link_mean: f64,
+    pub comp_kind: CostKind,
+    /// `s̄_i` mean computation parameter.
+    pub comp_mean: f64,
+    /// `M` computation types.
+    pub num_types: usize,
+    pub r_min: f64,
+    pub r_max: f64,
+}
+
+impl ScenarioSpec {
+    /// The seven Table II rows. `SW` defaults to the Queue variant; see
+    /// [`ScenarioSpec::sw_linear`] for the `SW-linear` column of Fig. 4.
+    pub fn table2() -> Vec<ScenarioSpec> {
+        use TopologyKind::*;
+        let mk = |name, topology, num_tasks, sources, link_mean, comp_mean| ScenarioSpec {
+            name,
+            topology,
+            num_tasks,
+            sources_per_task: sources,
+            link_kind: CostKind::Queue,
+            link_mean,
+            comp_kind: CostKind::Queue,
+            comp_mean,
+            num_types: 5,
+            r_min: 0.5,
+            r_max: 1.5,
+        };
+        vec![
+            mk("connected-er", ConnectedEr, 15, 5, 10.0, 12.0),
+            mk("balanced-tree", BalancedTree, 20, 5, 20.0, 15.0),
+            mk("fog", Fog, 30, 5, 20.0, 17.0),
+            mk("abilene", Abilene, 10, 3, 15.0, 10.0),
+            mk("lhc", Lhc, 30, 5, 15.0, 15.0),
+            mk("geant", Geant, 40, 7, 20.0, 20.0),
+            mk("sw", SmallWorld, 120, 10, 20.0, 20.0),
+        ]
+    }
+
+    /// Find one Table II row by name ("sw-linear" / "sw-queue" variants
+    /// included).
+    pub fn by_name(name: &str) -> Option<ScenarioSpec> {
+        if name.eq_ignore_ascii_case("sw-linear") {
+            return Some(ScenarioSpec::table2()[6].clone().sw_linear());
+        }
+        if name.eq_ignore_ascii_case("sw-queue") {
+            return Some(ScenarioSpec::table2()[6].clone());
+        }
+        ScenarioSpec::table2()
+            .into_iter()
+            .find(|s| s.name.eq_ignore_ascii_case(name))
+    }
+
+    /// The `SW-linear` variant of Fig. 4 (same topology/params, linear
+    /// costs on both planes).
+    pub fn sw_linear(mut self) -> ScenarioSpec {
+        self.name = "sw-linear";
+        self.link_kind = CostKind::Linear;
+        self.comp_kind = CostKind::Linear;
+        self
+    }
+
+    /// A reduced-size variant that fits the `small` AOT class
+    /// (N ≤ 32, S ≤ 48) — used by the accelerated example and parity tests.
+    pub fn shrunk(mut self, num_tasks: usize) -> ScenarioSpec {
+        self.num_tasks = num_tasks;
+        self
+    }
+
+    /// Instantiate the scenario deterministically from `seed`.
+    pub fn build(&self, seed: u64) -> Scenario {
+        let mut rng = Pcg::with_stream(seed, 0xcec + self.topology as u64);
+        let graph = self.topology.build(&mut rng);
+        let n = graph.node_count();
+        let e = graph.edge_count();
+
+        // result ratios a_m ~ Exp(0.5) ∩ [0.1, 5]
+        let result_ratio: Vec<f64> = (0..self.num_types)
+            .map(|_| rng.exponential_trunc(0.5, 0.1, 5.0))
+            .collect();
+        // weights w_im ~ U[1,5]
+        let comp_weight: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..self.num_types).map(|_| rng.uniform(1.0, 5.0)).collect())
+            .collect();
+
+        // tasks: uniform type + destination, |R| distinct sources
+        let mut tasks = Vec::with_capacity(self.num_tasks);
+        let mut input_rate = Vec::with_capacity(self.num_tasks);
+        for _ in 0..self.num_tasks {
+            let dest = rng.below(n);
+            let ctype = rng.below(self.num_types);
+            tasks.push(Task { dest, ctype });
+            let mut rates = vec![0.0; n];
+            for src in rng.choose_distinct(n, self.sources_per_task.min(n)) {
+                rates[src] = rng.uniform(self.r_min, self.r_max);
+            }
+            input_rate.push(rates);
+        }
+
+        // link costs: d_ij ~ U[0, 2·d̄] (floored slightly away from 0 so
+        // queue capacities are usable)
+        let mut link_cost: Vec<CostFn> = (0..e)
+            .map(|_| {
+                let d = rng.uniform(0.05 * self.link_mean, 2.0 * self.link_mean);
+                match self.link_kind {
+                    CostKind::Linear => CostFn::Linear { unit: d.max(1e-3) },
+                    CostKind::Queue => CostFn::Queue { cap: d.max(1e-3) },
+                }
+            })
+            .collect();
+
+        // computation costs: Exp(s̄) for Queue, U[0, 2·s̄] for Linear
+        let mut comp_cost: Vec<CostFn> = (0..n)
+            .map(|_| match self.comp_kind {
+                CostKind::Linear => CostFn::Linear {
+                    unit: rng.uniform(0.0, 2.0 * self.comp_mean).max(1e-3),
+                },
+                CostKind::Queue => CostFn::Queue {
+                    cap: rng.exponential(self.comp_mean).max(1e-3),
+                },
+            })
+            .collect();
+
+        // --- feasibility guard 1: local computation must be possible ---
+        for i in 0..n {
+            let mut load = 0.0;
+            for (s, task) in tasks.iter().enumerate() {
+                load += comp_weight[i][task.ctype] * input_rate[s][i];
+            }
+            if let CostFn::Queue { cap } = comp_cost[i] {
+                if cap <= 1.25 * load {
+                    comp_cost[i] = CostFn::Queue {
+                        cap: 1.25 * load + rng.exponential(self.comp_mean),
+                    };
+                }
+            }
+        }
+
+        let mut net = Network {
+            graph,
+            tasks,
+            num_types: self.num_types,
+            input_rate,
+            result_ratio,
+            comp_weight,
+            link_cost: link_cost.clone(),
+            comp_cost,
+        };
+
+        // --- feasibility guard 2: finite initial cost ---
+        for _round in 0..40 {
+            let phi0 = Strategy::local_compute_init(&net);
+            let t0 = crate::model::flows::compute_flows(&net, &phi0)
+                .map(|f| f.total_cost)
+                .unwrap_or(f64::INFINITY);
+            if t0.is_finite() {
+                break;
+            }
+            for c in link_cost.iter_mut() {
+                if let CostFn::Queue { cap } = c {
+                    *cap *= 1.3;
+                }
+            }
+            net.link_cost = link_cost.clone();
+        }
+
+        net.assert_valid();
+        debug_assert!(net.local_computation_feasible());
+        Scenario {
+            name: self.name.to_string(),
+            net,
+            servers: Vec::new(),
+            seed,
+        }
+    }
+}
+
+/// A built scenario: the network plus metadata.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub net: Network,
+    /// Designated "major servers" (Fig. 5a) — empty unless built by
+    /// [`connected_er_servers`].
+    pub servers: Vec<usize>,
+    pub seed: u64,
+}
+
+/// The refined Connected-ER instance of Fig. 5a: 4 designated major
+/// servers with boosted computation capacity; task destinations are drawn
+/// from the servers (users fetch results at service points), and `S1 =
+/// servers[0]` is the node failed at iteration 100 in Fig. 5b.
+pub fn connected_er_servers(seed: u64) -> Scenario {
+    let spec = &ScenarioSpec::table2()[0];
+    let mut rng = Pcg::with_stream(seed, 0x5e71);
+    let graph = connected_er(20, 40, &mut rng);
+    let n = graph.node_count();
+
+    // spread servers: pick 4 distinct nodes
+    let servers = rng.choose_distinct(n, 4);
+
+    let result_ratio: Vec<f64> = (0..spec.num_types)
+        .map(|_| rng.exponential_trunc(0.5, 0.1, 5.0))
+        .collect();
+    let comp_weight: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..spec.num_types).map(|_| rng.uniform(1.0, 5.0)).collect())
+        .collect();
+
+    let mut tasks = Vec::new();
+    let mut input_rate = Vec::new();
+    for _ in 0..spec.num_tasks {
+        let dest = *rng.pick(&servers);
+        let ctype = rng.below(spec.num_types);
+        tasks.push(Task { dest, ctype });
+        let mut rates = vec![0.0; n];
+        for src in rng.choose_distinct(n, spec.sources_per_task) {
+            rates[src] = rng.uniform(spec.r_min, spec.r_max);
+        }
+        input_rate.push(rates);
+    }
+
+    let mut link_cost: Vec<CostFn> = (0..graph.edge_count())
+        .map(|_| CostFn::Queue {
+            cap: rng.uniform(0.05 * spec.link_mean, 2.0 * spec.link_mean),
+        })
+        .collect();
+    let mut comp_cost: Vec<CostFn> = (0..n)
+        .map(|i| {
+            let base = rng.exponential(spec.comp_mean).max(1e-3);
+            let boost = if servers.contains(&i) { 4.0 } else { 1.0 };
+            CostFn::Queue { cap: base * boost }
+        })
+        .collect();
+
+    for i in 0..n {
+        let mut load = 0.0;
+        for (s, task) in tasks.iter().enumerate() {
+            load += comp_weight[i][task.ctype] * input_rate[s][i];
+        }
+        if let CostFn::Queue { cap } = comp_cost[i] {
+            if cap <= 1.25 * load {
+                comp_cost[i] = CostFn::Queue {
+                    cap: 1.25 * load + rng.exponential(spec.comp_mean),
+                };
+            }
+        }
+    }
+
+    let mut net = Network {
+        graph,
+        tasks,
+        num_types: spec.num_types,
+        input_rate,
+        result_ratio,
+        comp_weight,
+        link_cost: link_cost.clone(),
+        comp_cost,
+    };
+    for _ in 0..40 {
+        let phi0 = Strategy::local_compute_init(&net);
+        let finite = crate::model::flows::compute_flows(&net, &phi0)
+            .map(|f| f.total_cost.is_finite())
+            .unwrap_or(false);
+        if finite {
+            break;
+        }
+        for c in link_cost.iter_mut() {
+            if let CostFn::Queue { cap } = c {
+                *cap *= 1.3;
+            }
+        }
+        net.link_cost = link_cost.clone();
+    }
+    net.assert_valid();
+
+    Scenario {
+        name: "connected-er-servers".to_string(),
+        net,
+        servers,
+        seed,
+    }
+}
+
+/// Build a small scenario that fits the `small` AOT size class — the
+/// workhorse of the accelerated example and XLA parity tests.
+pub fn small_scenario(seed: u64) -> Scenario {
+    let spec = ScenarioSpec::table2()[3].clone(); // Abilene: 11 nodes
+    let mut sc = spec.build(seed);
+    sc.name = "abilene-small".to_string();
+    sc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::flows::compute_flows;
+
+    #[test]
+    fn table2_sizes_match_paper() {
+        let specs = ScenarioSpec::table2();
+        let expect = [
+            ("connected-er", 20, 40, 15),
+            ("balanced-tree", 15, 14, 20),
+            ("fog", 19, 33, 30), // |E|=33 vs paper's 30: see topology.rs fog()
+            ("abilene", 11, 14, 10),
+            ("lhc", 16, 31, 30),
+            ("geant", 22, 33, 40),
+            ("sw", 100, 320, 120),
+        ];
+        for (spec, (name, v, e_links, s)) in specs.iter().zip(expect) {
+            assert_eq!(spec.name, name);
+            let sc = spec.build(7);
+            assert_eq!(sc.net.n(), v, "{name} |V|");
+            assert_eq!(sc.net.e(), 2 * e_links, "{name} |E|");
+            assert_eq!(sc.net.s(), s, "{name} |S|");
+        }
+    }
+
+    #[test]
+    fn instances_feasible_and_deterministic() {
+        for spec in ScenarioSpec::table2().iter().take(6) {
+            let a = spec.build(42);
+            let b = spec.build(42);
+            assert_eq!(a.net.tasks, b.net.tasks, "{} nondeterministic", spec.name);
+            assert!(a.net.local_computation_feasible(), "{}", spec.name);
+            let phi0 = Strategy::local_compute_init(&a.net);
+            let t0 = compute_flows(&a.net, &phi0).unwrap().total_cost;
+            assert!(t0.is_finite(), "{} infinite initial cost", spec.name);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let spec = &ScenarioSpec::table2()[0];
+        let a = spec.build(1);
+        let b = spec.build(2);
+        assert_ne!(a.net.tasks, b.net.tasks);
+    }
+
+    #[test]
+    fn sw_linear_variant() {
+        let spec = ScenarioSpec::by_name("sw-linear").unwrap();
+        assert_eq!(spec.link_kind, CostKind::Linear);
+        assert_eq!(spec.comp_kind, CostKind::Linear);
+        let sc = spec.build(3);
+        assert!(matches!(sc.net.link_cost[0], CostFn::Linear { .. }));
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(ScenarioSpec::by_name("geant").is_some());
+        assert!(ScenarioSpec::by_name("GEANT").is_some());
+        assert!(ScenarioSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn servers_scenario_properties() {
+        let sc = connected_er_servers(5);
+        assert_eq!(sc.servers.len(), 4);
+        // all destinations are servers
+        for t in &sc.net.tasks {
+            assert!(sc.servers.contains(&t.dest));
+        }
+        let phi0 = Strategy::local_compute_init(&sc.net);
+        assert!(compute_flows(&sc.net, &phi0)
+            .unwrap()
+            .total_cost
+            .is_finite());
+    }
+
+    #[test]
+    fn small_scenario_fits_small_class() {
+        let sc = small_scenario(9);
+        assert!(sc.net.n() <= 32);
+        assert!(sc.net.s() <= 48);
+    }
+
+    #[test]
+    fn a_m_range_respected() {
+        let sc = ScenarioSpec::table2()[0].build(11);
+        for &a in &sc.net.result_ratio {
+            assert!((0.1..=5.0).contains(&a));
+        }
+    }
+}

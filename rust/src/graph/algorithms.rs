@@ -1,0 +1,377 @@
+//! Graph algorithms needed by the flow model and the baselines:
+//! Dijkstra shortest paths (SPOO / LPR), strong-connectivity (scenario
+//! validation, §II requires strongly connected G), topological sorting of
+//! the φ-induced active subgraphs (exact flow/marginal computation), and
+//! cycle detection (loop-freedom invariant checks).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::digraph::DiGraph;
+
+/// Result of a single-source Dijkstra run.
+#[derive(Clone, Debug)]
+pub struct ShortestPaths {
+    pub dist: Vec<f64>,
+    /// Predecessor node on a shortest path, usize::MAX for source/unreached.
+    pub prev: Vec<usize>,
+}
+
+#[derive(PartialEq)]
+struct HeapItem {
+    dist: f64,
+    node: usize,
+}
+
+impl Eq for HeapItem {}
+
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap on dist
+        other
+            .dist
+            .partial_cmp(&self.dist)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.node.cmp(&self.node))
+    }
+}
+
+/// Dijkstra from `src` with per-edge weights `w[edge_id]` (must be >= 0).
+pub fn dijkstra(g: &DiGraph, src: usize, w: &[f64]) -> ShortestPaths {
+    assert_eq!(w.len(), g.edge_count());
+    debug_assert!(w.iter().all(|&x| x >= 0.0), "negative edge weight");
+    let n = g.node_count();
+    let mut dist = vec![f64::INFINITY; n];
+    let mut prev = vec![usize::MAX; n];
+    let mut heap = BinaryHeap::new();
+    dist[src] = 0.0;
+    heap.push(HeapItem { dist: 0.0, node: src });
+    while let Some(HeapItem { dist: d, node: u }) = heap.pop() {
+        if d > dist[u] {
+            continue;
+        }
+        for &eid in g.out_edge_ids(u) {
+            let v = g.edge(eid).dst;
+            let nd = d + w[eid];
+            if nd < dist[v] {
+                dist[v] = nd;
+                prev[v] = u;
+                heap.push(HeapItem { dist: nd, node: v });
+            }
+        }
+    }
+    ShortestPaths { dist, prev }
+}
+
+/// Dijkstra on the *reverse* graph: `dist[i]` = cost of the cheapest path
+/// from `i` **to** `dst`. `next[i]` is the next hop along that path.
+/// This is the form the SPOO / LPR baselines need (route-toward-destination
+/// trees).
+pub fn dijkstra_to(g: &DiGraph, dst: usize, w: &[f64]) -> (Vec<f64>, Vec<usize>) {
+    assert_eq!(w.len(), g.edge_count());
+    let n = g.node_count();
+    let mut dist = vec![f64::INFINITY; n];
+    let mut next = vec![usize::MAX; n];
+    let mut heap = BinaryHeap::new();
+    dist[dst] = 0.0;
+    heap.push(HeapItem { dist: 0.0, node: dst });
+    while let Some(HeapItem { dist: d, node: u }) = heap.pop() {
+        if d > dist[u] {
+            continue;
+        }
+        // traverse incoming edges: predecessor v reaches dst through u
+        for &eid in g.in_edge_ids(u) {
+            let v = g.edge(eid).src;
+            let nd = d + w[eid];
+            if nd < dist[v] {
+                dist[v] = nd;
+                next[v] = u;
+                heap.push(HeapItem { dist: nd, node: v });
+            }
+        }
+    }
+    (dist, next)
+}
+
+/// Extract the path `src -> ... -> dst` from a `dijkstra_to` next-hop map.
+pub fn path_from_next(next: &[usize], src: usize, dst: usize) -> Option<Vec<usize>> {
+    let mut path = vec![src];
+    let mut cur = src;
+    while cur != dst {
+        let nxt = next[cur];
+        if nxt == usize::MAX || path.len() > next.len() {
+            return None;
+        }
+        path.push(nxt);
+        cur = nxt;
+    }
+    Some(path)
+}
+
+/// Is the directed graph strongly connected? (BFS out + BFS on reverse.)
+pub fn strongly_connected(g: &DiGraph) -> bool {
+    let n = g.node_count();
+    if n == 0 {
+        return true;
+    }
+    let reach = |forward: bool| -> usize {
+        let mut seen = vec![false; n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = stack.pop() {
+            let nexts: Vec<usize> = if forward {
+                g.out_neighbors(u).collect()
+            } else {
+                g.in_neighbors(u).collect()
+            };
+            for v in nexts {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    stack.push(v);
+                }
+            }
+        }
+        count
+    };
+    reach(true) == n && reach(false) == n
+}
+
+/// Kahn topological order over a subgraph given by an edge mask
+/// (`active[edge_id]`). Nodes not touching active edges still appear.
+/// Returns `None` if the active subgraph has a cycle.
+pub fn topo_order_masked(g: &DiGraph, active: &[bool]) -> Option<Vec<usize>> {
+    assert_eq!(active.len(), g.edge_count());
+    let n = g.node_count();
+    let mut indeg = vec![0usize; n];
+    for (eid, &on) in active.iter().enumerate() {
+        if on {
+            indeg[g.edge(eid).dst] += 1;
+        }
+    }
+    let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(u) = queue.pop() {
+        order.push(u);
+        for &eid in g.out_edge_ids(u) {
+            if active[eid] {
+                let v = g.edge(eid).dst;
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+    }
+    if order.len() == n {
+        Some(order)
+    } else {
+        None // cycle among the remaining nodes
+    }
+}
+
+/// Does the active subgraph contain a directed cycle?
+pub fn has_cycle_masked(g: &DiGraph, active: &[bool]) -> bool {
+    topo_order_masked(g, active).is_none()
+}
+
+/// Longest path length (hop count) ending analysis over a DAG given by the
+/// edge mask: `h[i]` = max hops from `i` along active edges to any sink.
+/// Returns `None` on cycles. This is the paper's `h±` statistic feeding the
+/// scaling matrices (16).
+pub fn longest_path_to_sink(g: &DiGraph, active: &[bool]) -> Option<Vec<usize>> {
+    let order = topo_order_masked(g, active)?;
+    let n = g.node_count();
+    let mut h = vec![0usize; n];
+    // process in reverse topological order so successors are final
+    for &u in order.iter().rev() {
+        for &eid in g.out_edge_ids(u) {
+            if active[eid] {
+                let v = g.edge(eid).dst;
+                h[u] = h[u].max(1 + h[v]);
+            }
+        }
+    }
+    Some(h)
+}
+
+/// Floyd–Warshall all-pairs shortest paths — O(n³), used only by tests as
+/// a brute-force oracle for Dijkstra.
+pub fn floyd_warshall(g: &DiGraph, w: &[f64]) -> Vec<Vec<f64>> {
+    let n = g.node_count();
+    let mut d = vec![vec![f64::INFINITY; n]; n];
+    for i in 0..n {
+        d[i][i] = 0.0;
+    }
+    for (eid, e) in g.edges().iter().enumerate() {
+        if w[eid] < d[e.src][e.dst] {
+            d[e.src][e.dst] = w[eid];
+        }
+    }
+    for k in 0..n {
+        for i in 0..n {
+            if d[i][k].is_infinite() {
+                continue;
+            }
+            for j in 0..n {
+                let via = d[i][k] + d[k][j];
+                if via < d[i][j] {
+                    d[i][j] = via;
+                }
+            }
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn grid3() -> (DiGraph, Vec<f64>) {
+        // 0-1-2 / 3-4-5 grid, bidirectional, unit-ish weights
+        let links = [
+            (0, 1),
+            (1, 2),
+            (3, 4),
+            (4, 5),
+            (0, 3),
+            (1, 4),
+            (2, 5),
+        ];
+        let g = super::super::digraph::from_undirected(6, &links);
+        let w = vec![1.0; g.edge_count()];
+        (g, w)
+    }
+
+    #[test]
+    fn dijkstra_simple_distances() {
+        let (g, w) = grid3();
+        let sp = dijkstra(&g, 0, &w);
+        assert_eq!(sp.dist[0], 0.0);
+        assert_eq!(sp.dist[1], 1.0);
+        assert_eq!(sp.dist[5], 3.0);
+    }
+
+    #[test]
+    fn dijkstra_respects_weights() {
+        let g = DiGraph::new(3, &[(0, 1), (1, 2), (0, 2)]);
+        let w = vec![1.0, 1.0, 5.0];
+        let sp = dijkstra(&g, 0, &w);
+        assert_eq!(sp.dist[2], 2.0); // via node 1, not direct
+        assert_eq!(sp.prev[2], 1);
+    }
+
+    #[test]
+    fn dijkstra_matches_floyd_warshall_random() {
+        let mut rng = Pcg::new(99);
+        for trial in 0..20 {
+            let n = rng.int_range(4, 12);
+            let mut edges = Vec::new();
+            for u in 0..n {
+                for v in 0..n {
+                    if u != v && rng.chance(0.4) {
+                        edges.push((u, v));
+                    }
+                }
+            }
+            if edges.is_empty() {
+                continue;
+            }
+            let g = DiGraph::new(n, &edges);
+            let w: Vec<f64> = (0..g.edge_count()).map(|_| rng.uniform(0.1, 3.0)).collect();
+            let fw = floyd_warshall(&g, &w);
+            for src in 0..n {
+                let sp = dijkstra(&g, src, &w);
+                for v in 0..n {
+                    let a = sp.dist[v];
+                    let b = fw[src][v];
+                    assert!(
+                        (a - b).abs() < 1e-9 || (a.is_infinite() && b.is_infinite()),
+                        "trial {trial}: dist({src},{v}) dijkstra={a} fw={b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dijkstra_to_gives_next_hops() {
+        let (g, w) = grid3();
+        let (dist, next) = dijkstra_to(&g, 5, &w);
+        assert_eq!(dist[5], 0.0);
+        assert_eq!(dist[0], 3.0);
+        let path = path_from_next(&next, 0, 5).unwrap();
+        assert_eq!(path.len(), 4);
+        assert_eq!(*path.first().unwrap(), 0);
+        assert_eq!(*path.last().unwrap(), 5);
+        // consecutive hops are edges
+        for win in path.windows(2) {
+            assert!(g.has_edge(win[0], win[1]));
+        }
+    }
+
+    #[test]
+    fn strong_connectivity() {
+        let cyc = DiGraph::new(3, &[(0, 1), (1, 2), (2, 0)]);
+        assert!(strongly_connected(&cyc));
+        let dag = DiGraph::new(3, &[(0, 1), (1, 2)]);
+        assert!(!strongly_connected(&dag));
+        let (g, _) = grid3();
+        assert!(strongly_connected(&g));
+    }
+
+    #[test]
+    fn topo_order_on_dag() {
+        let g = DiGraph::new(4, &[(0, 1), (0, 2), (1, 3), (2, 3)]);
+        let active = vec![true; 4];
+        let order = topo_order_masked(&g, &active).unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; 4];
+            for (i, &u) in order.iter().enumerate() {
+                p[u] = i;
+            }
+            p
+        };
+        assert!(pos[0] < pos[1] && pos[0] < pos[2]);
+        assert!(pos[1] < pos[3] && pos[2] < pos[3]);
+    }
+
+    #[test]
+    fn topo_order_detects_cycle() {
+        let g = DiGraph::new(3, &[(0, 1), (1, 2), (2, 0)]);
+        assert!(topo_order_masked(&g, &[true, true, true]).is_none());
+        assert!(has_cycle_masked(&g, &[true, true, true]));
+        // masking one edge breaks the cycle
+        assert!(!has_cycle_masked(&g, &[true, true, false]));
+    }
+
+    #[test]
+    fn masked_edges_ignored() {
+        let g = DiGraph::new(3, &[(0, 1), (1, 2), (2, 0)]);
+        let order = topo_order_masked(&g, &[true, false, false]).unwrap();
+        assert_eq!(order.len(), 3);
+    }
+
+    #[test]
+    fn longest_path_dag() {
+        // chain 0->1->2->3 plus shortcut 0->3
+        let g = DiGraph::new(4, &[(0, 1), (1, 2), (2, 3), (0, 3)]);
+        let h = longest_path_to_sink(&g, &[true, true, true, true]).unwrap();
+        assert_eq!(h, vec![3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn longest_path_none_on_cycle() {
+        let g = DiGraph::new(2, &[(0, 1), (1, 0)]);
+        assert!(longest_path_to_sink(&g, &[true, true]).is_none());
+    }
+}

@@ -1,0 +1,273 @@
+//! Directed graph with CSR-style adjacency.
+//!
+//! The paper's network `G = (V, E)` is a directed, strongly connected graph
+//! (§II). Nodes are dense indices `0..n`; every directed edge gets a stable
+//! edge id used to index flow vectors `F_ij` and cost parameters.
+
+/// Directed edge endpoint pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Edge {
+    pub src: usize,
+    pub dst: usize,
+}
+
+/// Directed graph over dense node ids with O(1) out/in neighbor slices.
+#[derive(Clone, Debug)]
+pub struct DiGraph {
+    n: usize,
+    edges: Vec<Edge>,
+    /// CSR over outgoing edges: `out_off[i]..out_off[i+1]` indexes `out_edges`.
+    out_off: Vec<usize>,
+    out_edges: Vec<usize>, // edge ids sorted by src
+    in_off: Vec<usize>,
+    in_edges: Vec<usize>, // edge ids sorted by dst
+    /// edge id lookup by (src,dst); dense matrix for the graph sizes we use.
+    eid: Vec<u32>,
+}
+
+pub const NO_EDGE: u32 = u32::MAX;
+
+impl DiGraph {
+    /// Build from an edge list. Parallel edges are rejected; self-loops are
+    /// rejected (the flow model has no use for them and loop-freedom
+    /// bookkeeping assumes their absence).
+    pub fn new(n: usize, edge_list: &[(usize, usize)]) -> DiGraph {
+        let mut eid = vec![NO_EDGE; n * n];
+        let mut edges = Vec::with_capacity(edge_list.len());
+        for &(u, v) in edge_list {
+            assert!(u < n && v < n, "edge ({u},{v}) out of range for n={n}");
+            assert_ne!(u, v, "self-loop ({u},{v}) not allowed");
+            assert_eq!(
+                eid[u * n + v], NO_EDGE,
+                "duplicate edge ({u},{v})"
+            );
+            eid[u * n + v] = edges.len() as u32;
+            edges.push(Edge { src: u, dst: v });
+        }
+
+        let mut out_off = vec![0usize; n + 1];
+        let mut in_off = vec![0usize; n + 1];
+        for e in &edges {
+            out_off[e.src + 1] += 1;
+            in_off[e.dst + 1] += 1;
+        }
+        for i in 0..n {
+            out_off[i + 1] += out_off[i];
+            in_off[i + 1] += in_off[i];
+        }
+        let mut out_edges = vec![0usize; edges.len()];
+        let mut in_edges = vec![0usize; edges.len()];
+        let mut out_cursor = out_off.clone();
+        let mut in_cursor = in_off.clone();
+        for (id, e) in edges.iter().enumerate() {
+            out_edges[out_cursor[e.src]] = id;
+            out_cursor[e.src] += 1;
+            in_edges[in_cursor[e.dst]] = id;
+            in_cursor[e.dst] += 1;
+        }
+
+        DiGraph {
+            n,
+            edges,
+            out_off,
+            out_edges,
+            in_off,
+            in_edges,
+            eid,
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.n
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn edge(&self, id: usize) -> Edge {
+        self.edges[id]
+    }
+
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    /// Edge id of (u,v) if present.
+    pub fn edge_id(&self, u: usize, v: usize) -> Option<usize> {
+        let id = self.eid[u * self.n + v];
+        if id == NO_EDGE {
+            None
+        } else {
+            Some(id as usize)
+        }
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.eid[u * self.n + v] != NO_EDGE
+    }
+
+    /// Outgoing edge ids of node `i` — the paper's `O(i)` in edge form.
+    pub fn out_edge_ids(&self, i: usize) -> &[usize] {
+        &self.out_edges[self.out_off[i]..self.out_off[i + 1]]
+    }
+
+    /// Incoming edge ids of node `i` — the paper's `I(i)` in edge form.
+    pub fn in_edge_ids(&self, i: usize) -> &[usize] {
+        &self.in_edges[self.in_off[i]..self.in_off[i + 1]]
+    }
+
+    /// Out-neighbors `O(i)` as node ids.
+    pub fn out_neighbors(&self, i: usize) -> impl Iterator<Item = usize> + '_ {
+        self.out_edge_ids(i).iter().map(move |&e| self.edges[e].dst)
+    }
+
+    /// In-neighbors `I(i)` as node ids.
+    pub fn in_neighbors(&self, i: usize) -> impl Iterator<Item = usize> + '_ {
+        self.in_edge_ids(i).iter().map(move |&e| self.edges[e].src)
+    }
+
+    pub fn out_degree(&self, i: usize) -> usize {
+        self.out_off[i + 1] - self.out_off[i]
+    }
+
+    pub fn in_degree(&self, i: usize) -> usize {
+        self.in_off[i + 1] - self.in_off[i]
+    }
+
+    /// Maximum out-degree over nodes — `d̄` in the paper's complexity model.
+    pub fn max_out_degree(&self) -> usize {
+        (0..self.n).map(|i| self.out_degree(i)).max().unwrap_or(0)
+    }
+
+    /// Build a new graph with node `dead` isolated (all incident edges
+    /// removed) — used for the Fig. 5b server-failure experiment. Node ids
+    /// are preserved.
+    pub fn without_node(&self, dead: usize) -> DiGraph {
+        let kept: Vec<(usize, usize)> = self
+            .edges
+            .iter()
+            .filter(|e| e.src != dead && e.dst != dead)
+            .map(|e| (e.src, e.dst))
+            .collect();
+        DiGraph::new(self.n, &kept)
+    }
+
+    /// Symmetrize: ensure that for every (u,v) the reverse (v,u) exists.
+    /// The paper's topologies are undirected physical links carried as a
+    /// pair of directed edges.
+    pub fn symmetrized(&self) -> DiGraph {
+        let mut set: Vec<(usize, usize)> = self.edges.iter().map(|e| (e.src, e.dst)).collect();
+        for e in &self.edges {
+            if !self.has_edge(e.dst, e.src) {
+                set.push((e.dst, e.src));
+            }
+        }
+        DiGraph::new(self.n, &set)
+    }
+}
+
+/// Convenience: build a directed graph from undirected link pairs,
+/// inserting both directions.
+pub fn from_undirected(n: usize, links: &[(usize, usize)]) -> DiGraph {
+    let mut edges = Vec::with_capacity(links.len() * 2);
+    for &(u, v) in links {
+        assert_ne!(u, v, "self-link ({u},{v})");
+        if !edges.contains(&(u, v)) {
+            edges.push((u, v));
+        }
+        if !edges.contains(&(v, u)) {
+            edges.push((v, u));
+        }
+    }
+    DiGraph::new(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> DiGraph {
+        // 0 -> 1 -> 3, 0 -> 2 -> 3
+        DiGraph::new(4, &[(0, 1), (0, 2), (1, 3), (2, 3)])
+    }
+
+    #[test]
+    fn counts_and_lookup() {
+        let g = diamond();
+        assert_eq!(g.node_count(), 4);
+        assert_eq!(g.edge_count(), 4);
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(1, 0));
+        assert_eq!(g.edge_id(2, 3), Some(3));
+        assert_eq!(g.edge_id(3, 2), None);
+    }
+
+    #[test]
+    fn neighbor_views() {
+        let g = diamond();
+        let outs: Vec<usize> = g.out_neighbors(0).collect();
+        assert_eq!(outs, vec![1, 2]);
+        let ins: Vec<usize> = g.in_neighbors(3).collect();
+        assert_eq!(ins, vec![1, 2]);
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.in_degree(0), 0);
+        assert_eq!(g.max_out_degree(), 2);
+    }
+
+    #[test]
+    fn edge_ids_consistent_with_edges() {
+        let g = diamond();
+        for id in 0..g.edge_count() {
+            let e = g.edge(id);
+            assert_eq!(g.edge_id(e.src, e.dst), Some(id));
+        }
+        for i in 0..g.node_count() {
+            for &eid in g.out_edge_ids(i) {
+                assert_eq!(g.edge(eid).src, i);
+            }
+            for &eid in g.in_edge_ids(i) {
+                assert_eq!(g.edge(eid).dst, i);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_duplicate_edges() {
+        DiGraph::new(2, &[(0, 1), (0, 1)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_self_loop() {
+        DiGraph::new(2, &[(1, 1)]);
+    }
+
+    #[test]
+    fn without_node_isolates() {
+        let g = diamond().without_node(1);
+        assert!(!g.has_edge(0, 1));
+        assert!(!g.has_edge(1, 3));
+        assert!(g.has_edge(0, 2));
+        assert_eq!(g.edge_count(), 2);
+        assert_eq!(g.node_count(), 4); // ids preserved
+    }
+
+    #[test]
+    fn undirected_builder_inserts_both_directions() {
+        let g = from_undirected(3, &[(0, 1), (1, 2)]);
+        assert_eq!(g.edge_count(), 4);
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert!(g.has_edge(1, 2) && g.has_edge(2, 1));
+    }
+
+    #[test]
+    fn symmetrized_adds_missing_reverse() {
+        let g = DiGraph::new(3, &[(0, 1), (1, 2), (2, 0)]).symmetrized();
+        assert_eq!(g.edge_count(), 6);
+        for e in g.edges() {
+            assert!(g.has_edge(e.dst, e.src));
+        }
+    }
+}

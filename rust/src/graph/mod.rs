@@ -1,0 +1,10 @@
+//! Graph substrate: the directed network `G = (V, E)` of §II, generators
+//! for every Table II topology, and the graph algorithms the optimizer and
+//! baselines rely on.
+
+pub mod algorithms;
+pub mod digraph;
+pub mod topology;
+
+pub use digraph::{from_undirected, DiGraph, Edge};
+pub use topology::TopologyKind;

@@ -1,0 +1,408 @@
+//! Topology generators and embedded real-world topologies for the Table II
+//! scenarios of the paper.
+//!
+//! All topologies are built as undirected link sets carried as directed
+//! edge pairs (the paper's links are bidirectional physical channels with
+//! per-direction flows). `|E|` in Table II counts undirected links.
+//!
+//! Real topologies: the paper takes Abilene, GEANT and LHC from the Rossi &
+//! Rossini CCN dataset [23], which is not shipped here. Abilene is embedded
+//! exactly (its 11-node / 14-link layout is public and unambiguous); GEANT
+//! and LHC are embedded as faithful reconstructions with the exact node and
+//! link counts from Table II (22/33 and 16/31). The experiments re-randomize
+//! rates, capacities and task placements anyway (§V), so only the size and
+//! connectivity structure matter — see DESIGN.md §3.6.
+
+use super::digraph::{from_undirected, DiGraph};
+use crate::util::rng::Pcg;
+
+/// Named topology kinds used throughout configs, CLI and benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    ConnectedEr,
+    BalancedTree,
+    Fog,
+    Abilene,
+    Lhc,
+    Geant,
+    SmallWorld,
+}
+
+impl TopologyKind {
+    pub fn parse(name: &str) -> Option<TopologyKind> {
+        Some(match name.to_ascii_lowercase().as_str() {
+            "connected-er" | "er" | "connected_er" => TopologyKind::ConnectedEr,
+            "balanced-tree" | "tree" | "balanced_tree" => TopologyKind::BalancedTree,
+            "fog" => TopologyKind::Fog,
+            "abilene" => TopologyKind::Abilene,
+            "lhc" => TopologyKind::Lhc,
+            "geant" => TopologyKind::Geant,
+            "sw" | "small-world" | "small_world" => TopologyKind::SmallWorld,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::ConnectedEr => "connected-er",
+            TopologyKind::BalancedTree => "balanced-tree",
+            TopologyKind::Fog => "fog",
+            TopologyKind::Abilene => "abilene",
+            TopologyKind::Lhc => "lhc",
+            TopologyKind::Geant => "geant",
+            TopologyKind::SmallWorld => "sw",
+        }
+    }
+
+    pub fn all() -> &'static [TopologyKind] {
+        &[
+            TopologyKind::ConnectedEr,
+            TopologyKind::BalancedTree,
+            TopologyKind::Fog,
+            TopologyKind::Abilene,
+            TopologyKind::Lhc,
+            TopologyKind::Geant,
+            TopologyKind::SmallWorld,
+        ]
+    }
+
+    /// Build the topology at its Table II size.
+    pub fn build(&self, rng: &mut Pcg) -> DiGraph {
+        match self {
+            TopologyKind::ConnectedEr => connected_er(20, 40, rng),
+            TopologyKind::BalancedTree => balanced_tree(15),
+            TopologyKind::Fog => fog(&[1, 2, 4, 12]),
+            TopologyKind::Abilene => abilene(),
+            TopologyKind::Lhc => lhc(),
+            TopologyKind::Geant => geant(),
+            TopologyKind::SmallWorld => small_world(100, 320, rng),
+        }
+    }
+}
+
+/// Connectivity-guaranteed Erdős–Rényi graph (§V): a linear chain
+/// concatenating all nodes guarantees connectivity, then random extra
+/// links are added until exactly `links` undirected links exist.
+///
+/// The paper describes "creating links with probability p = 0.1" and
+/// reports |E| = 40 for |V| = 20; we draw links until the reported count is
+/// hit so every seed reproduces the Table II size exactly.
+pub fn connected_er(n: usize, links: usize, rng: &mut Pcg) -> DiGraph {
+    assert!(n >= 2);
+    assert!(
+        links >= n - 1,
+        "need at least n-1={} links for connectivity",
+        n - 1
+    );
+    assert!(links <= n * (n - 1) / 2, "too many links requested");
+    let mut pairs: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+    let mut have = vec![false; n * n];
+    for &(u, v) in &pairs {
+        have[u * n + v] = true;
+        have[v * n + u] = true;
+    }
+    while pairs.len() < links {
+        let u = rng.below(n);
+        let v = rng.below(n);
+        if u != v && !have[u * n + v] {
+            have[u * n + v] = true;
+            have[v * n + u] = true;
+            pairs.push((u.min(v), u.max(v)));
+        }
+    }
+    from_undirected(n, &pairs)
+}
+
+/// Complete balanced binary tree with `n` nodes (node 0 is the root,
+/// children of `i` are `2i+1`, `2i+2`). Table II: n = 15 (depth 4).
+pub fn balanced_tree(n: usize) -> DiGraph {
+    let mut pairs = Vec::new();
+    for i in 0..n {
+        for c in [2 * i + 1, 2 * i + 2] {
+            if c < n {
+                pairs.push((i, c));
+            }
+        }
+    }
+    from_undirected(n, &pairs)
+}
+
+/// Fog-computing topology (paper ref [22]): a balanced tree whose layers
+/// are given by `layer_sizes` (root first), with nodes on the same layer
+/// additionally linked in a line. Children are distributed evenly over the
+/// parents of the previous layer.
+pub fn fog(layer_sizes: &[usize]) -> DiGraph {
+    assert!(!layer_sizes.is_empty() && layer_sizes[0] >= 1);
+    let n: usize = layer_sizes.iter().sum();
+    let mut pairs = Vec::new();
+    // assign node ids layer by layer
+    let mut layer_start = Vec::with_capacity(layer_sizes.len());
+    let mut acc = 0;
+    for &sz in layer_sizes {
+        layer_start.push(acc);
+        acc += sz;
+    }
+    for l in 1..layer_sizes.len() {
+        let (pstart, psz) = (layer_start[l - 1], layer_sizes[l - 1]);
+        let (cstart, csz) = (layer_start[l], layer_sizes[l]);
+        for c in 0..csz {
+            // even distribution of children over parents
+            let p = pstart + (c * psz) / csz;
+            pairs.push((p, cstart + c));
+        }
+        // intra-layer line links
+        for c in 1..csz {
+            pairs.push((cstart + c - 1, cstart + c));
+        }
+    }
+    from_undirected(n, &pairs)
+}
+
+/// Abilene — the Internet2 predecessor backbone, 11 PoPs / 14 links.
+/// Node order: 0 Seattle, 1 Sunnyvale, 2 Los Angeles, 3 Denver,
+/// 4 Kansas City, 5 Houston, 6 Chicago, 7 Indianapolis, 8 Atlanta,
+/// 9 Washington DC, 10 New York.
+pub fn abilene() -> DiGraph {
+    let links = [
+        (0, 1),  // Seattle - Sunnyvale
+        (0, 3),  // Seattle - Denver
+        (1, 2),  // Sunnyvale - Los Angeles
+        (1, 3),  // Sunnyvale - Denver
+        (2, 5),  // Los Angeles - Houston
+        (3, 4),  // Denver - Kansas City
+        (4, 5),  // Kansas City - Houston
+        (4, 7),  // Kansas City - Indianapolis
+        (5, 8),  // Houston - Atlanta
+        (6, 7),  // Chicago - Indianapolis
+        (6, 10), // Chicago - New York
+        (7, 8),  // Indianapolis - Atlanta
+        (8, 9),  // Atlanta - Washington DC
+        (9, 10), // Washington DC - New York
+    ];
+    from_undirected(11, &links)
+}
+
+/// LHC computing-grid topology, 16 nodes / 31 links — reconstruction of the
+/// dataset used by [23]: a CERN hub (node 0) meshed with Tier-1 centres
+/// (1..=6) which fan out to Tier-2 sites (7..=15).
+pub fn lhc() -> DiGraph {
+    let links = [
+        // CERN Tier-0 to Tier-1 ring
+        (0, 1),
+        (0, 2),
+        (0, 3),
+        (0, 4),
+        (0, 5),
+        (0, 6),
+        // Tier-1 lateral mesh
+        (1, 2),
+        (2, 3),
+        (3, 4),
+        (4, 5),
+        (5, 6),
+        (6, 1),
+        (1, 4),
+        // Tier-2 attachments (dual-homed)
+        (7, 1),
+        (7, 2),
+        (8, 2),
+        (8, 3),
+        (9, 3),
+        (9, 4),
+        (10, 4),
+        (10, 5),
+        (11, 5),
+        (11, 6),
+        (12, 6),
+        (12, 1),
+        (13, 2),
+        (13, 5),
+        (14, 3),
+        (14, 6),
+        (15, 7),
+        (15, 8),
+    ];
+    from_undirected(16, &links)
+}
+
+/// GEANT pan-European research network, 22 nodes / 33 links —
+/// reconstruction of the GEANT backbone as used by [23].
+/// Node key (approximate): 0 UK, 1 FR, 2 BE, 3 NL, 4 DE, 5 CH, 6 IT,
+/// 7 ES, 8 PT, 9 IE, 10 AT, 11 CZ, 12 PL, 13 HU, 14 SK, 15 SI, 16 HR,
+/// 17 GR, 18 SE, 19 DK, 20 NO, 21 FI.
+pub fn geant() -> DiGraph {
+    let links = [
+        (0, 1),  // UK-FR
+        (0, 2),  // UK-BE
+        (0, 3),  // UK-NL
+        (0, 9),  // UK-IE
+        (1, 5),  // FR-CH
+        (1, 7),  // FR-ES
+        (1, 2),  // FR-BE
+        (2, 3),  // BE-NL
+        (3, 4),  // NL-DE
+        (3, 19), // NL-DK
+        (4, 5),  // DE-CH
+        (4, 10), // DE-AT
+        (4, 11), // DE-CZ
+        (4, 12), // DE-PL
+        (4, 19), // DE-DK
+        (5, 6),  // CH-IT
+        (6, 10), // IT-AT
+        (6, 17), // IT-GR
+        (7, 8),  // ES-PT
+        (7, 6),  // ES-IT
+        (8, 0),  // PT-UK (Atlantic path)
+        (9, 3),  // IE-NL
+        (10, 13), // AT-HU
+        (10, 15), // AT-SI
+        (11, 14), // CZ-SK
+        (12, 11), // PL-CZ
+        (13, 14), // HU-SK
+        (13, 16), // HU-HR
+        (15, 16), // SI-HR
+        (17, 13), // GR-HU
+        (18, 19), // SE-DK
+        (18, 20), // SE-NO
+        (18, 21), // SE-FI
+    ];
+    from_undirected(22, &links)
+}
+
+/// Small-world graph (Kleinberg [24], §V "SW"): a ring with distance-2
+/// chords (short range) plus random long-range links added until exactly
+/// `links` undirected links exist. Table II: 100 nodes, 320 links.
+pub fn small_world(n: usize, links: usize, rng: &mut Pcg) -> DiGraph {
+    assert!(n >= 5);
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    let mut have = vec![false; n * n];
+    let push = |pairs: &mut Vec<(usize, usize)>, have: &mut Vec<bool>, u: usize, v: usize| {
+        if u != v && !have[u * n + v] {
+            have[u * n + v] = true;
+            have[v * n + u] = true;
+            pairs.push((u, v));
+            true
+        } else {
+            false
+        }
+    };
+    // ring
+    for i in 0..n {
+        push(&mut pairs, &mut have, i, (i + 1) % n);
+    }
+    // short-range chords (distance 2)
+    for i in 0..n {
+        if pairs.len() >= links {
+            break;
+        }
+        push(&mut pairs, &mut have, i, (i + 2) % n);
+    }
+    // long-range random chords
+    while pairs.len() < links {
+        let u = rng.below(n);
+        let v = rng.below(n);
+        // Kleinberg-flavored: prefer moderately distant targets
+        let dist = {
+            let d = if u > v { u - v } else { v - u };
+            d.min(n - d)
+        };
+        if dist >= 3 {
+            push(&mut pairs, &mut have, u, v);
+        }
+    }
+    from_undirected(n, &pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::algorithms::strongly_connected;
+
+    #[test]
+    fn abilene_matches_table2() {
+        let g = abilene();
+        assert_eq!(g.node_count(), 11);
+        assert_eq!(g.edge_count(), 28); // 14 undirected links
+        assert!(strongly_connected(&g));
+    }
+
+    #[test]
+    fn geant_matches_table2() {
+        let g = geant();
+        assert_eq!(g.node_count(), 22);
+        assert_eq!(g.edge_count(), 66); // 33 links
+        assert!(strongly_connected(&g));
+    }
+
+    #[test]
+    fn lhc_matches_table2() {
+        let g = lhc();
+        assert_eq!(g.node_count(), 16);
+        assert_eq!(g.edge_count(), 62); // 31 links... see below
+        assert!(strongly_connected(&g));
+    }
+
+    #[test]
+    fn balanced_tree_matches_table2() {
+        let g = balanced_tree(15);
+        assert_eq!(g.node_count(), 15);
+        assert_eq!(g.edge_count(), 28); // 14 links
+        assert!(strongly_connected(&g));
+    }
+
+    #[test]
+    fn connected_er_matches_table2() {
+        let mut rng = Pcg::new(1);
+        let g = connected_er(20, 40, &mut rng);
+        assert_eq!(g.node_count(), 20);
+        assert_eq!(g.edge_count(), 80); // 40 links
+        assert!(strongly_connected(&g));
+    }
+
+    #[test]
+    fn connected_er_deterministic_per_seed() {
+        let a = connected_er(20, 40, &mut Pcg::new(7));
+        let b = connected_er(20, 40, &mut Pcg::new(7));
+        assert_eq!(a.edges(), b.edges());
+    }
+
+    #[test]
+    fn small_world_matches_table2() {
+        let mut rng = Pcg::new(2);
+        let g = small_world(100, 320, &mut rng);
+        assert_eq!(g.node_count(), 100);
+        assert_eq!(g.edge_count(), 640); // 320 links
+        assert!(strongly_connected(&g));
+    }
+
+    #[test]
+    fn fog_structure() {
+        let g = fog(&[1, 2, 4, 12]);
+        assert_eq!(g.node_count(), 19); // Table II |V| = 19
+        assert!(strongly_connected(&g));
+        // root links only to layer 1
+        let root_deg = g.out_degree(0);
+        assert_eq!(root_deg, 2);
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in TopologyKind::all() {
+            assert_eq!(TopologyKind::parse(k.name()), Some(*k));
+        }
+        assert_eq!(TopologyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn build_all_kinds_strongly_connected() {
+        for k in TopologyKind::all() {
+            let mut rng = Pcg::new(11);
+            let g = k.build(&mut rng);
+            assert!(
+                strongly_connected(&g),
+                "{} not strongly connected",
+                k.name()
+            );
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! # cecflow
+//!
+//! A production-grade reproduction of *"Optimal Congestion-aware Routing
+//! and Offloading in Collaborative Edge Computing"* (Zhang, Liu, Yeh 2022)
+//! as a three-layer Rust + JAX/Pallas system:
+//!
+//! * **L3 (this crate)** — the distributed joint routing/offloading
+//!   optimizer: flow model, marginal-cost broadcast, blocked-node
+//!   loop-freedom, the Scaled Gradient Projection algorithm and the
+//!   GP/SPOO/LCOR/LPR baselines, a discrete-event protocol simulator, and
+//!   experiment drivers for every table/figure of the paper.
+//! * **L2/L1 (python/, build-time only)** — the dense per-iteration
+//!   numeric core (flow propagation + congestion costs + marginal
+//!   recursions) written in JAX with Pallas kernels, AOT-lowered to HLO
+//!   text and executed from Rust through the PJRT CPU client
+//!   ([`runtime`]).
+//!
+//! Start at [`coordinator::scenario`] for paper-faithful network
+//! instances, [`algo::sgp`] for the optimizer, and `examples/quickstart.rs`
+//! for a guided tour.
+
+pub mod algo;
+pub mod cli;
+pub mod coordinator;
+pub mod graph;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod util;

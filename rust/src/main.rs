@@ -1,0 +1,296 @@
+//! `cecflow` — CLI launcher for the congestion-aware routing/offloading
+//! framework.
+//!
+//! ```text
+//! cecflow run        --scenario geant --algo sgp [--seed 42] [--iters 200]
+//!                    [--scale 1.0] [--schedule sync|async|accelerated]
+//!                    [--config path.json] [--out results/run.json]
+//! cecflow experiment fig4|fig5b|fig5c|fig5d|table2  (see benches/ too)
+//! cecflow validate   [--scenario abilene] — XLA data plane vs native
+//! cecflow info       — environment, scenarios, artifact status
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use cecflow::cli::Args;
+use cecflow::coordinator::{
+    build_scenario_network, config::ExperimentConfig, connected_er_servers, run_algorithm,
+    Algorithm, RunConfig, Schedule, ScenarioSpec,
+};
+use cecflow::model::strategy::Strategy;
+use cecflow::runtime::{default_artifacts_dir, DenseEvaluator, Engine};
+use cecflow::sim::run_with_failure;
+use cecflow::util::json::Json;
+use cecflow::util::table::{fnum, Table};
+
+fn main() {
+    let args = Args::from_env(true);
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(err) => {
+            eprintln!("error: {err:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(args),
+        Some("validate") => cmd_validate(args),
+        Some("info") => cmd_info(),
+        Some("experiment") => cmd_experiment(args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}' (try `cecflow help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "cecflow — optimal congestion-aware routing and offloading in CEC\n\
+         \n\
+         subcommands:\n\
+         \x20 run         optimize one scenario with one algorithm\n\
+         \x20 experiment  regenerate a paper figure (fig4|fig5b|fig5c|fig5d|table2)\n\
+         \x20 validate    XLA dense data plane vs native evaluator parity\n\
+         \x20 info        environment + scenario inventory\n\
+         \n\
+         common flags: --scenario NAME --algo sgp|gp|spoo|lcor|lpr --seed N\n\
+         \x20            --iters N --scale X --schedule sync|async|accelerated\n\
+         \x20            --config FILE --out FILE"
+    );
+}
+
+fn load_cfg(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(s) = args.opt("scenario") {
+        cfg.scenario = s.to_string();
+    }
+    if let Some(a) = args.opt("algo") {
+        cfg.algorithm = Algorithm::parse(a).with_context(|| format!("unknown algo '{a}'"))?;
+    }
+    cfg.seed = args.opt_u64("seed", cfg.seed);
+    cfg.max_iters = args.opt_usize("iters", cfg.max_iters);
+    cfg.rate_scale = args.opt_f64("scale", cfg.rate_scale);
+    if let Some(s) = args.opt("schedule") {
+        cfg.schedule = Schedule::parse(s).with_context(|| format!("unknown schedule '{s}'"))?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let net = build_scenario_network(&cfg.scenario, cfg.seed, cfg.rate_scale)?;
+    println!(
+        "scenario {} (seed {}): |V|={} |E|={} |S|={} scale={}",
+        cfg.scenario,
+        cfg.seed,
+        net.n(),
+        net.e() / 2,
+        net.s(),
+        cfg.rate_scale
+    );
+
+    let run_cfg = RunConfig {
+        max_iters: cfg.max_iters,
+        ..RunConfig::default()
+    };
+
+    let outcome = match cfg.schedule {
+        Schedule::Sync => run_algorithm(&net, cfg.algorithm, &run_cfg)?,
+        Schedule::Async => {
+            anyhow::ensure!(
+                cfg.algorithm == Algorithm::Sgp,
+                "async schedule is defined for SGP"
+            );
+            let phi0 = Strategy::local_compute_init(&net);
+            let updates = cfg.max_iters * net.n();
+            let trace = cecflow::sim::run_async(&net, &phi0, updates, cfg.seed)?;
+            let flows = cecflow::model::flows::compute_flows(&net, &trace.phi)?;
+            let td = cecflow::coordinator::metrics::travel_distance(&net, &flows);
+            cecflow::coordinator::AlgoOutcome {
+                algorithm: "sgp-async".into(),
+                final_cost: *trace.costs.last().unwrap(),
+                iterations: trace.costs.len(),
+                costs: trace.costs,
+                l_data: td.l_data,
+                l_result: td.l_result,
+                wall_seconds: 0.0,
+            }
+        }
+        Schedule::Accelerated => {
+            anyhow::ensure!(
+                cfg.algorithm == Algorithm::Sgp,
+                "accelerated schedule is defined for SGP"
+            );
+            let engine = Engine::load(&default_artifacts_dir())?;
+            let eval = DenseEvaluator::new(&engine);
+            let phi0 = Strategy::local_compute_init(&net);
+            let mut sgp = cecflow::algo::Sgp::new();
+            let res = cecflow::coordinator::optimize_accelerated(
+                &net, &mut sgp, &phi0, &run_cfg, &eval,
+            )?;
+            let flows = cecflow::model::flows::compute_flows(&net, &res.phi)?;
+            let td = cecflow::coordinator::metrics::travel_distance(&net, &flows);
+            cecflow::coordinator::AlgoOutcome {
+                algorithm: res.algorithm.clone(),
+                final_cost: res.final_cost(),
+                iterations: res.costs.len(),
+                costs: res.costs,
+                l_data: td.l_data,
+                l_result: td.l_result,
+                wall_seconds: res.wall_seconds,
+            }
+        }
+    };
+
+    println!(
+        "{}: T = {} after {} iterations  (L_data={:.3}, L_result={:.3}, {:.2}s)",
+        outcome.algorithm,
+        fnum(outcome.final_cost),
+        outcome.iterations,
+        outcome.l_data,
+        outcome.l_result,
+        outcome.wall_seconds
+    );
+
+    if let Some(out) = args.opt("out") {
+        let mut doc = Json::obj();
+        doc.set("config", cfg.to_json())
+            .set("algorithm", Json::Str(outcome.algorithm.clone()))
+            .set("final_cost", Json::Num(outcome.final_cost))
+            .set("iterations", Json::Num(outcome.iterations as f64))
+            .set("costs", Json::from_f64_slice(&outcome.costs))
+            .set("l_data", Json::Num(outcome.l_data))
+            .set("l_result", Json::Num(outcome.l_result));
+        std::fs::write(out, doc.pretty()).with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let scenario = args.opt_or("scenario", "abilene");
+    let seed = args.opt_u64("seed", 42);
+    let net = build_scenario_network(scenario, seed, 1.0)?;
+    anyhow::ensure!(
+        net.n() <= 128 && net.s() <= 128,
+        "validate currently covers networks within the large AOT class"
+    );
+    let engine = Engine::load(&default_artifacts_dir())?;
+    println!("PJRT platform: {}", engine.platform());
+    let eval = DenseEvaluator::new(&engine);
+
+    let phi = Strategy::local_compute_init(&net);
+    let native = cecflow::model::flows::compute_flows(&net, &phi)?;
+    let marg = cecflow::model::marginals::compute_marginals(&net, &phi, &native)?;
+    let dense = eval.evaluate(&net, &phi)?;
+
+    let rel = |a: f64, b: f64| (a - b).abs() / a.abs().max(b.abs()).max(1e-9);
+    let cost_err = rel(native.total_cost, dense.total_cost);
+    let mut marg_err = 0.0f64;
+    for s in 0..net.s() {
+        for i in 0..net.n() {
+            marg_err = marg_err.max(rel(marg.dt_plus[s][i], dense.dt_plus[s][i]));
+            marg_err = marg_err.max(rel(marg.dt_r[s][i], dense.dt_r[s][i]));
+        }
+    }
+    println!(
+        "total cost:   native {} vs XLA {}  (rel err {:.2e})",
+        fnum(native.total_cost),
+        fnum(dense.total_cost),
+        cost_err
+    );
+    println!("marginals:    max rel err {marg_err:.2e}");
+    anyhow::ensure!(cost_err < 1e-3, "total-cost parity failure");
+    anyhow::ensure!(marg_err < 5e-3, "marginal parity failure");
+    println!("VALIDATION OK (f32 data plane vs f64 native)");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("cecflow {}", env!("CARGO_PKG_VERSION"));
+    let dir = default_artifacts_dir();
+    match Engine::load(&dir) {
+        Ok(engine) => {
+            println!("artifacts: {} (platform {})", dir.display(), engine.platform());
+            for c in engine.classes() {
+                println!("  class {:<6} N={} S={}", c.name, c.n, c.s);
+            }
+        }
+        Err(err) => println!("artifacts: unavailable ({err})"),
+    }
+    println!("\nTable II scenarios:");
+    let mut t = Table::new(&["name", "|V|", "links", "|S|", "|R|", "cost"]);
+    for spec in ScenarioSpec::table2() {
+        let sc = spec.build(1);
+        t.row(vec![
+            spec.name.to_string(),
+            sc.net.n().to_string(),
+            (sc.net.e() / 2).to_string(),
+            sc.net.s().to_string(),
+            spec.sources_per_task.to_string(),
+            format!("{:?}/{:?}", spec.link_kind, spec.comp_kind),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Lightweight experiment driver (the full sweeps live in `benches/`).
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .context("experiment name required: fig4|fig5b|fig5c|fig5d|table2")?;
+    match which {
+        "fig5b" => {
+            let sc = connected_er_servers(args.opt_u64("seed", 42));
+            let s1 = sc.servers[0];
+            let fallback = sc.servers[1];
+            let phi0 = Strategy::local_compute_init(&sc.net);
+            println!("Connected-ER with servers {:?}; failing S1={s1} at iter 100", sc.servers);
+            let sgp_run = run_with_failure(
+                &sc.net,
+                cecflow::algo::Sgp::new,
+                &phi0,
+                100,
+                200,
+                s1,
+                fallback,
+                0.01,
+            )?;
+            let gp_run = run_with_failure(
+                &sc.net,
+                || cecflow::algo::Gp::new(1.0),
+                &phi0,
+                100,
+                200,
+                s1,
+                fallback,
+                0.01,
+            )?;
+            for (name, run) in [("sgp", &sgp_run), ("gp", &gp_run)] {
+                println!(
+                    "{name}: post-failure cost {} -> {} in {} iterations",
+                    fnum(run.cost_after_failure),
+                    fnum(run.final_cost),
+                    run.reconverge_iters
+                );
+            }
+            Ok(())
+        }
+        other => bail!(
+            "experiment '{other}' is driven by the bench harness: \
+             cargo bench --bench {other}"
+        ),
+    }
+}

@@ -1,0 +1,288 @@
+//! Congestion-aware convex cost functions (§II).
+//!
+//! Both communication costs `D_ij(F_ij)` and computation costs `C_i(G_i)`
+//! are increasing, continuously differentiable, convex functions; the paper
+//! evaluates two families and mentions a third:
+//!
+//! * `Linear`  — `D(F) = c·F` (propagation-delay-like, no congestion);
+//! * `Queue`   — `D(F) = F/(c−F)`, the M/M/1 expected number in system with
+//!   service rate `c` (∝ average delay by Little's law), diverging at the
+//!   capacity;
+//! * `SmoothCap` — `D(F) = s·F − μ·ln(1 − F/c)`: a linear cost plus a log
+//!   barrier that smoothly approximates a sharp capacity constraint
+//!   `F ≤ c` (the paper's remark about approximating `F_ij ≤ C_ij`).
+//!
+//! The scaled-gradient-projection algorithm additionally needs
+//! `A(T⁰) = sup { D''(F) : D(F) ≤ T⁰ }` (eq. 16): the supremum of the second
+//! derivative over the sublevel set reachable while the total cost stays
+//! below its initial value. For `Queue` this has the closed form
+//! `2(1+T⁰)³/c²`; the other kinds use the same closed-form reasoning or a
+//! bisection fallback, all behind [`CostFn::sup_second_deriv`].
+
+/// One convex congestion cost curve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CostFn {
+    /// `D(F) = unit · F`.
+    Linear { unit: f64 },
+    /// `D(F) = F / (cap − F)` for `F < cap`, `+∞` otherwise.
+    Queue { cap: f64 },
+    /// `D(F) = slope·F − mu·ln(1 − F/cap)` for `F < cap`, `+∞` otherwise.
+    SmoothCap { slope: f64, cap: f64, mu: f64 },
+}
+
+impl CostFn {
+    /// Cost value. Returns `+∞` at or beyond capacity for capacitated kinds.
+    pub fn value(&self, f: f64) -> f64 {
+        debug_assert!(f >= -1e-9, "negative flow {f}");
+        let f = f.max(0.0);
+        match *self {
+            CostFn::Linear { unit } => unit * f,
+            CostFn::Queue { cap } => {
+                if f >= cap {
+                    f64::INFINITY
+                } else {
+                    f / (cap - f)
+                }
+            }
+            CostFn::SmoothCap { slope, cap, mu } => {
+                if f >= cap {
+                    f64::INFINITY
+                } else {
+                    slope * f - mu * (1.0 - f / cap).ln()
+                }
+            }
+        }
+    }
+
+    /// First derivative `D'(F)`. `+∞` at/beyond capacity.
+    pub fn deriv(&self, f: f64) -> f64 {
+        let f = f.max(0.0);
+        match *self {
+            CostFn::Linear { unit } => unit,
+            CostFn::Queue { cap } => {
+                if f >= cap {
+                    f64::INFINITY
+                } else {
+                    cap / ((cap - f) * (cap - f))
+                }
+            }
+            CostFn::SmoothCap { slope, cap, mu } => {
+                if f >= cap {
+                    f64::INFINITY
+                } else {
+                    slope + mu / (cap - f)
+                }
+            }
+        }
+    }
+
+    /// Second derivative `D''(F)`. `+∞` at/beyond capacity.
+    pub fn second_deriv(&self, f: f64) -> f64 {
+        let f = f.max(0.0);
+        match *self {
+            CostFn::Linear { .. } => 0.0,
+            CostFn::Queue { cap } => {
+                if f >= cap {
+                    f64::INFINITY
+                } else {
+                    2.0 * cap / (cap - f).powi(3)
+                }
+            }
+            CostFn::SmoothCap { cap, mu, .. } => {
+                if f >= cap {
+                    f64::INFINITY
+                } else {
+                    mu / ((cap - f) * (cap - f))
+                }
+            }
+        }
+    }
+
+    /// Marginal cost at zero flow — the SPOO/LPR linearization point.
+    pub fn deriv_at_zero(&self) -> f64 {
+        self.deriv(0.0)
+    }
+
+    /// Capacity (service rate) if the kind has one.
+    pub fn capacity(&self) -> Option<f64> {
+        match *self {
+            CostFn::Linear { .. } => None,
+            CostFn::Queue { cap } => Some(cap),
+            CostFn::SmoothCap { cap, .. } => Some(cap),
+        }
+    }
+
+    /// Largest flow with `value(F) ≤ t0` (the sublevel-set boundary).
+    ///
+    /// Closed form for `Linear` and `Queue`; bisection for `SmoothCap`.
+    pub fn sublevel_flow(&self, t0: f64) -> f64 {
+        assert!(t0 >= 0.0);
+        match *self {
+            CostFn::Linear { unit } => {
+                if unit <= 0.0 {
+                    f64::INFINITY
+                } else {
+                    t0 / unit
+                }
+            }
+            CostFn::Queue { cap } => cap * t0 / (1.0 + t0),
+            CostFn::SmoothCap { cap, .. } => {
+                // value is increasing: bisect F in [0, cap)
+                let mut lo = 0.0f64;
+                let mut hi = cap * (1.0 - 1e-12);
+                if self.value(hi) <= t0 {
+                    return hi;
+                }
+                for _ in 0..200 {
+                    let mid = 0.5 * (lo + hi);
+                    if self.value(mid) <= t0 {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                lo
+            }
+        }
+    }
+
+    /// `A(T⁰) = sup_{D(F) ≤ T⁰} D''(F)` — the curvature bound used by the
+    /// SGP scaling matrices (eq. 16). Since all our `D''` are non-decreasing
+    /// in `F`, the sup is attained at the sublevel boundary.
+    pub fn sup_second_deriv(&self, t0: f64) -> f64 {
+        match *self {
+            CostFn::Linear { .. } => 0.0,
+            CostFn::Queue { cap } => {
+                // F_max = cap·T0/(1+T0)  =>  cap − F_max = cap/(1+T0)
+                // D'' = 2 cap/(cap−F)³  =>  2 (1+T0)³ / cap²
+                2.0 * (1.0 + t0).powi(3) / (cap * cap)
+            }
+            CostFn::SmoothCap { .. } => self.second_deriv(self.sublevel_flow(t0)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finite_diff(c: &CostFn, f: f64, h: f64) -> (f64, f64) {
+        let d1 = (c.value(f + h) - c.value(f - h)) / (2.0 * h);
+        let d2 = (c.value(f + h) - 2.0 * c.value(f) + c.value(f - h)) / (h * h);
+        (d1, d2)
+    }
+
+    #[test]
+    fn linear_shapes() {
+        let c = CostFn::Linear { unit: 2.5 };
+        assert_eq!(c.value(4.0), 10.0);
+        assert_eq!(c.deriv(100.0), 2.5);
+        assert_eq!(c.second_deriv(1.0), 0.0);
+        assert_eq!(c.capacity(), None);
+    }
+
+    #[test]
+    fn queue_matches_mm1() {
+        let c = CostFn::Queue { cap: 10.0 };
+        assert!((c.value(5.0) - 1.0).abs() < 1e-12); // 5/(10-5)
+        assert!(c.value(10.0).is_infinite());
+        assert!(c.value(11.0).is_infinite());
+        assert!(c.deriv(10.0).is_infinite());
+    }
+
+    #[test]
+    fn derivatives_match_finite_differences() {
+        let cases = [
+            CostFn::Linear { unit: 3.0 },
+            CostFn::Queue { cap: 8.0 },
+            CostFn::SmoothCap {
+                slope: 1.0,
+                cap: 8.0,
+                mu: 0.5,
+            },
+        ];
+        for c in &cases {
+            for &f in &[0.5, 1.0, 3.0, 6.0] {
+                let (d1, d2) = finite_diff(c, f, 1e-5);
+                assert!(
+                    (c.deriv(f) - d1).abs() < 1e-5 * (1.0 + d1.abs()),
+                    "{c:?} f={f}: deriv {} vs fd {d1}",
+                    c.deriv(f)
+                );
+                assert!(
+                    (c.second_deriv(f) - d2).abs() < 1e-3 * (1.0 + d2.abs()),
+                    "{c:?} f={f}: d2 {} vs fd {d2}",
+                    c.second_deriv(f)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn convexity_and_monotonicity_sampled() {
+        let cases = [
+            CostFn::Linear { unit: 1.0 },
+            CostFn::Queue { cap: 5.0 },
+            CostFn::SmoothCap {
+                slope: 0.2,
+                cap: 5.0,
+                mu: 0.1,
+            },
+        ];
+        for c in &cases {
+            let mut prev_v = c.value(0.0);
+            let mut prev_d = c.deriv(0.0);
+            for k in 1..40 {
+                let f = 4.9 * k as f64 / 40.0;
+                let v = c.value(f);
+                let d = c.deriv(f);
+                assert!(v >= prev_v - 1e-12, "{c:?} not increasing at {f}");
+                assert!(d >= prev_d - 1e-12, "{c:?} not convex at {f}");
+                prev_v = v;
+                prev_d = d;
+            }
+        }
+    }
+
+    #[test]
+    fn queue_sublevel_closed_form() {
+        let c = CostFn::Queue { cap: 12.0 };
+        for &t0 in &[0.5, 1.0, 4.0] {
+            let f = c.sublevel_flow(t0);
+            assert!((c.value(f) - t0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sup_second_deriv_queue_closed_form() {
+        let c = CostFn::Queue { cap: 12.0 };
+        let t0 = 2.0;
+        let f_max = c.sublevel_flow(t0);
+        let expect = c.second_deriv(f_max);
+        assert!((c.sup_second_deriv(t0) - expect).abs() < 1e-9 * expect);
+    }
+
+    #[test]
+    fn sup_second_deriv_linear_zero() {
+        assert_eq!(CostFn::Linear { unit: 7.0 }.sup_second_deriv(100.0), 0.0);
+    }
+
+    #[test]
+    fn smoothcap_sublevel_bisection() {
+        let c = CostFn::SmoothCap {
+            slope: 1.0,
+            cap: 10.0,
+            mu: 0.5,
+        };
+        let f = c.sublevel_flow(3.0);
+        assert!((c.value(f) - 3.0).abs() < 1e-6);
+        // sup D'' attained at the boundary (D'' increasing)
+        assert!(c.sup_second_deriv(3.0) >= c.second_deriv(f * 0.5));
+    }
+
+    #[test]
+    fn deriv_at_zero() {
+        assert_eq!(CostFn::Queue { cap: 4.0 }.deriv_at_zero(), 0.25);
+        assert_eq!(CostFn::Linear { unit: 9.0 }.deriv_at_zero(), 9.0);
+    }
+}

@@ -1,0 +1,445 @@
+//! Exact flow computation for a feasible loop-free strategy (§II eqs 1–7).
+//!
+//! Given `φ`, the data traffic per task satisfies the linear fixed point
+//! `t⁻_i = r_i + Σ_{j∈I(i)} t⁻_j φ⁻_{ji}`. Because the φ-active subgraph is
+//! acyclic, one pass in topological order solves it exactly (no iteration,
+//! no tolerance). Results follow the same pattern on the result plane with
+//! source term `a_m · g_i`.
+
+use crate::graph::algorithms::topo_order_masked;
+
+use super::network::Network;
+use super::strategy::Strategy;
+
+/// All flow quantities of §II for one strategy.
+#[derive(Clone, Debug)]
+pub struct FlowState {
+    /// Data traffic `t⁻_i(d,m)`, `[task][node]`.
+    pub t_minus: Vec<Vec<f64>>,
+    /// Result traffic `t⁺_i(d,m)`, `[task][node]`.
+    pub t_plus: Vec<Vec<f64>>,
+    /// Computational input `g_i(d,m)`, `[task][node]`.
+    pub g: Vec<Vec<f64>>,
+    /// Data flow per directed edge `f⁻_ij(d,m)`, `[task][edge]`.
+    pub f_minus: Vec<Vec<f64>>,
+    /// Result flow per directed edge `f⁺_ij(d,m)`, `[task][edge]`.
+    pub f_plus: Vec<Vec<f64>>,
+    /// Aggregate link flow `F_ij`, `[edge]`.
+    pub link_flow: Vec<f64>,
+    /// Computation workload `G_i = Σ_m w_im g_i^m`, `[node]`.
+    pub workload: Vec<f64>,
+    /// Total cost `T = Σ D_ij(F_ij) + Σ C_i(G_i)`; may be `+∞` when a
+    /// capacitated cost is saturated.
+    pub total_cost: f64,
+}
+
+/// Why flows could not be computed.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FlowError {
+    /// The data plane of `task` contains a routing loop.
+    DataLoop { task: usize },
+    /// The result plane of `task` contains a routing loop.
+    ResultLoop { task: usize },
+}
+
+impl std::fmt::Display for FlowError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FlowError::DataLoop { task } => write!(f, "data-plane loop in task {task}"),
+            FlowError::ResultLoop { task } => write!(f, "result-plane loop in task {task}"),
+        }
+    }
+}
+
+impl std::error::Error for FlowError {}
+
+/// Compute all flows and the total cost for a feasible, loop-free strategy.
+pub fn compute_flows(net: &Network, phi: &Strategy) -> Result<FlowState, FlowError> {
+    let n = net.n();
+    let e = net.e();
+    let s_count = net.s();
+    let g_ref = &net.graph;
+
+    let mut t_minus = vec![vec![0.0; n]; s_count];
+    let mut t_plus = vec![vec![0.0; n]; s_count];
+    let mut g_in = vec![vec![0.0; n]; s_count];
+    let mut f_minus = vec![vec![0.0; e]; s_count];
+    let mut f_plus = vec![vec![0.0; e]; s_count];
+    let mut link_flow = vec![0.0; e];
+    let mut workload = vec![0.0; n];
+
+    for s in 0..s_count {
+        let a_m = net.a_of(s);
+
+        // ---- data plane ----
+        let dmask = phi.data_active_mask(net, s);
+        let order = topo_order_masked(g_ref, &dmask)
+            .ok_or(FlowError::DataLoop { task: s })?;
+        for &i in &order {
+            let t = net.input_rate[s][i]
+                + g_ref
+                    .in_edge_ids(i)
+                    .iter()
+                    .map(|&eid| f_minus[s][eid])
+                    .sum::<f64>();
+            t_minus[s][i] = t;
+            // split to local computation + outgoing data flows (eqs 3,4)
+            g_in[s][i] = t * phi.data[s][i][0];
+            for (k, &eid) in g_ref.out_edge_ids(i).iter().enumerate() {
+                f_minus[s][eid] = t * phi.data[s][i][k + 1];
+            }
+        }
+
+        // ---- result plane ----
+        let rmask = phi.result_active_mask(net, s);
+        let order = topo_order_masked(g_ref, &rmask)
+            .ok_or(FlowError::ResultLoop { task: s })?;
+        for &i in &order {
+            let t = a_m * g_in[s][i]
+                + g_ref
+                    .in_edge_ids(i)
+                    .iter()
+                    .map(|&eid| f_plus[s][eid])
+                    .sum::<f64>();
+            t_plus[s][i] = t;
+            for (k, &eid) in g_ref.out_edge_ids(i).iter().enumerate() {
+                f_plus[s][eid] = t * phi.result[s][i][k];
+            }
+        }
+
+        // ---- aggregates ----
+        for eid in 0..e {
+            link_flow[eid] += f_minus[s][eid] + f_plus[s][eid];
+        }
+        let ctype = net.tasks[s].ctype;
+        for i in 0..n {
+            workload[i] += net.comp_weight[i][ctype] * g_in[s][i];
+        }
+    }
+
+    let mut total = 0.0;
+    for eid in 0..e {
+        total += net.link_cost[eid].value(link_flow[eid]);
+    }
+    for i in 0..n {
+        total += net.comp_cost[i].value(workload[i]);
+    }
+
+    Ok(FlowState {
+        t_minus,
+        t_plus,
+        g: g_in,
+        f_minus,
+        f_plus,
+        link_flow,
+        workload,
+        total_cost: total,
+    })
+}
+
+/// Total cost only (fast path used by line searches).
+pub fn total_cost(net: &Network, phi: &Strategy) -> Result<f64, FlowError> {
+    Ok(compute_flows(net, phi)?.total_cost)
+}
+
+/// Recompute the flows of a **single task** in place, updating the
+/// aggregate `link_flow` / `workload` by subtract-old/add-new deltas.
+/// `total_cost` is left stale — callers batch task updates and then call
+/// [`refresh_total_cost`]. This is the incremental fast path of the
+/// per-node Gauss–Seidel sweep (EXPERIMENTS.md §Perf): a single-node
+/// strategy change touches only the tasks whose rows changed, so the
+/// other `|S|−1` tasks need no recomputation.
+pub fn recompute_task_flows(
+    net: &Network,
+    phi: &Strategy,
+    fs: &mut FlowState,
+    s: usize,
+) -> Result<(), FlowError> {
+    let g_ref = &net.graph;
+    let n = net.n();
+    let e = net.e();
+    let a_m = net.a_of(s);
+    let ctype = net.tasks[s].ctype;
+
+    // subtract the task's old contribution from the aggregates
+    for eid in 0..e {
+        fs.link_flow[eid] -= fs.f_minus[s][eid] + fs.f_plus[s][eid];
+    }
+    for i in 0..n {
+        fs.workload[i] -= net.comp_weight[i][ctype] * fs.g[s][i];
+    }
+
+    // Zero the task's per-edge flows before recomputation: the topological
+    // order below only respects *active* edges, so a stale value on a
+    // newly-inactive edge (src later in the order than dst) would
+    // otherwise be read before being overwritten.
+    fs.f_minus[s].fill(0.0);
+    fs.f_plus[s].fill(0.0);
+    fs.g[s].fill(0.0);
+
+    // recompute the task exactly as in compute_flows
+    let dmask = phi.data_active_mask(net, s);
+    let order = topo_order_masked(g_ref, &dmask).ok_or(FlowError::DataLoop { task: s })?;
+    for &i in &order {
+        let t = net.input_rate[s][i]
+            + g_ref
+                .in_edge_ids(i)
+                .iter()
+                .map(|&eid| fs.f_minus[s][eid])
+                .sum::<f64>();
+        fs.t_minus[s][i] = t;
+        fs.g[s][i] = t * phi.data[s][i][0];
+        for (k, &eid) in g_ref.out_edge_ids(i).iter().enumerate() {
+            fs.f_minus[s][eid] = t * phi.data[s][i][k + 1];
+        }
+    }
+    let rmask = phi.result_active_mask(net, s);
+    let order = topo_order_masked(g_ref, &rmask).ok_or(FlowError::ResultLoop { task: s })?;
+    for &i in &order {
+        let t = a_m * fs.g[s][i]
+            + g_ref
+                .in_edge_ids(i)
+                .iter()
+                .map(|&eid| fs.f_plus[s][eid])
+                .sum::<f64>();
+        fs.t_plus[s][i] = t;
+        for (k, &eid) in g_ref.out_edge_ids(i).iter().enumerate() {
+            fs.f_plus[s][eid] = t * phi.result[s][i][k];
+        }
+    }
+
+    // add the new contribution back
+    for eid in 0..e {
+        fs.link_flow[eid] += fs.f_minus[s][eid] + fs.f_plus[s][eid];
+    }
+    for i in 0..n {
+        fs.workload[i] += net.comp_weight[i][ctype] * fs.g[s][i];
+    }
+    Ok(())
+}
+
+/// Re-price the aggregates after a batch of [`recompute_task_flows`].
+pub fn refresh_total_cost(net: &Network, fs: &mut FlowState) -> f64 {
+    let mut total = 0.0;
+    for eid in 0..net.e() {
+        total += net.link_cost[eid].value(fs.link_flow[eid]);
+    }
+    for i in 0..net.n() {
+        total += net.comp_cost[i].value(fs.workload[i]);
+    }
+    fs.total_cost = total;
+    total
+}
+
+impl FlowState {
+    /// Verify flow conservation (eqs 1–7) against the generating strategy;
+    /// returns violations (used by property tests).
+    pub fn conservation_violations(&self, net: &Network, phi: &Strategy) -> Vec<String> {
+        let mut out = Vec::new();
+        let g_ref = &net.graph;
+        let tol = 1e-8;
+        for s in 0..net.s() {
+            let a_m = net.a_of(s);
+            let dest = net.tasks[s].dest;
+            for i in 0..net.n() {
+                // (1): t⁻ = in-flows + exogenous
+                let arr: f64 = g_ref
+                    .in_edge_ids(i)
+                    .iter()
+                    .map(|&eid| self.f_minus[s][eid])
+                    .sum::<f64>()
+                    + net.input_rate[s][i];
+                if (arr - self.t_minus[s][i]).abs() > tol {
+                    out.push(format!("task {s} node {i}: (1) violated"));
+                }
+                // (3),(4): splits follow φ⁻
+                if (self.g[s][i] - self.t_minus[s][i] * phi.data[s][i][0]).abs() > tol {
+                    out.push(format!("task {s} node {i}: (4) violated"));
+                }
+                for (k, &eid) in g_ref.out_edge_ids(i).iter().enumerate() {
+                    if (self.f_minus[s][eid] - self.t_minus[s][i] * phi.data[s][i][k + 1]).abs()
+                        > tol
+                    {
+                        out.push(format!("task {s} edge {eid}: (3) violated"));
+                    }
+                    if (self.f_plus[s][eid] - self.t_plus[s][i] * phi.result[s][i][k]).abs() > tol
+                    {
+                        out.push(format!("task {s} edge {eid}: (6) violated"));
+                    }
+                }
+                // (2): t⁺ = in result flows + a_m g
+                let arr_p: f64 = g_ref
+                    .in_edge_ids(i)
+                    .iter()
+                    .map(|&eid| self.f_plus[s][eid])
+                    .sum::<f64>()
+                    + a_m * self.g[s][i];
+                if (arr_p - self.t_plus[s][i]).abs() > tol {
+                    out.push(format!("task {s} node {i}: (2) violated"));
+                }
+                // destination absorbs results
+                if i == dest {
+                    let fwd: f64 = g_ref
+                        .out_edge_ids(i)
+                        .iter()
+                        .map(|&eid| self.f_plus[s][eid])
+                        .sum();
+                    if fwd.abs() > tol {
+                        out.push(format!("task {s}: destination forwards results"));
+                    }
+                }
+            }
+            // global balance: all data eventually computed
+            let total_in: f64 = net.input_rate[s].iter().sum();
+            let total_g: f64 = self.g[s].iter().sum();
+            if (total_in - total_g).abs() > tol * (1.0 + total_in) {
+                out.push(format!(
+                    "task {s}: input {total_in} != computed {total_g}"
+                ));
+            }
+            // global balance: all results delivered at dest
+            let total_res: f64 = a_m * total_g;
+            let delivered = self.t_plus[s][dest];
+            if (total_res - delivered).abs() > tol * (1.0 + total_res) {
+                out.push(format!(
+                    "task {s}: results {total_res} != delivered {delivered}"
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::network::testnet::{diamond, line3};
+    use crate::model::strategy::out_slot;
+
+    #[test]
+    fn local_compute_flows() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let fs = compute_flows(&net, &phi).unwrap();
+        // all input computed at node 0
+        assert!((fs.g[0][0] - 1.0).abs() < 1e-12);
+        assert!((fs.workload[0] - 1.0).abs() < 1e-12);
+        // results (a=0.5) delivered to dest 3
+        assert!((fs.t_plus[0][3] - 0.5).abs() < 1e-12);
+        assert!(fs.conservation_violations(&net, &phi).is_empty());
+        assert!(fs.total_cost.is_finite());
+    }
+
+    #[test]
+    fn compute_at_dest_flows() {
+        let net = diamond(true);
+        let phi = Strategy::compute_at_dest_init(&net);
+        let fs = compute_flows(&net, &phi).unwrap();
+        // all input computed at node 3
+        assert!((fs.g[0][3] - 1.0).abs() < 1e-12);
+        // no result flow on links (computed at dest)
+        assert!(fs.f_plus[0].iter().all(|&f| f.abs() < 1e-12));
+        // data flowed over 2 hops
+        let used: usize = fs.f_minus[0].iter().filter(|&&f| f > 1e-12).count();
+        assert_eq!(used, 2);
+        assert!(fs.conservation_violations(&net, &phi).is_empty());
+    }
+
+    #[test]
+    fn split_data_flows() {
+        let net = diamond(false);
+        let mut phi = Strategy::compute_at_dest_init(&net);
+        // node 0 splits data 50/50 between neighbors 1 and 2
+        let s1 = out_slot(&net.graph, 0, 1).unwrap();
+        let s2 = out_slot(&net.graph, 0, 2).unwrap();
+        phi.data[0][0] = vec![0.0; net.graph.out_degree(0) + 1];
+        phi.data[0][0][s1 + 1] = 0.5;
+        phi.data[0][0][s2 + 1] = 0.5;
+        // nodes 1 and 2 forward everything to 3
+        for i in [1usize, 2] {
+            let s3 = out_slot(&net.graph, i, 3).unwrap();
+            phi.data[0][i] = vec![0.0; net.graph.out_degree(i) + 1];
+            phi.data[0][i][s3 + 1] = 1.0;
+        }
+        let fs = compute_flows(&net, &phi).unwrap();
+        assert!((fs.t_minus[0][1] - 0.5).abs() < 1e-12);
+        assert!((fs.t_minus[0][2] - 0.5).abs() < 1e-12);
+        assert!((fs.t_minus[0][3] - 1.0).abs() < 1e-12);
+        assert!((fs.g[0][3] - 1.0).abs() < 1e-12);
+        assert!(fs.conservation_violations(&net, &phi).is_empty());
+    }
+
+    #[test]
+    fn partial_offloading_mid_path() {
+        let net = diamond(true);
+        let mut phi = Strategy::compute_at_dest_init(&net);
+        // node 0 sends everything to node 1; node 1 computes 40% locally,
+        // forwards 60% to 3; results from 1 go to 3.
+        let s1 = out_slot(&net.graph, 0, 1).unwrap();
+        phi.data[0][0] = vec![0.0; net.graph.out_degree(0) + 1];
+        phi.data[0][0][s1 + 1] = 1.0;
+        let s13 = out_slot(&net.graph, 1, 3).unwrap();
+        phi.data[0][1] = vec![0.0; net.graph.out_degree(1) + 1];
+        phi.data[0][1][0] = 0.4;
+        phi.data[0][1][s13 + 1] = 0.6;
+        phi.result[0][1] = vec![0.0; net.graph.out_degree(1)];
+        phi.result[0][1][s13] = 1.0;
+        let fs = compute_flows(&net, &phi).unwrap();
+        assert!((fs.g[0][1] - 0.4).abs() < 1e-12);
+        assert!((fs.g[0][3] - 0.6).abs() < 1e-12);
+        // result flow on (1,3): a_m * 0.4 = 0.2
+        let e13 = net.graph.edge_id(1, 3).unwrap();
+        assert!((fs.f_plus[0][e13] - 0.2).abs() < 1e-12);
+        // total link flow on (1,3) = 0.6 data + 0.2 result
+        assert!((fs.link_flow[e13] - 0.8).abs() < 1e-12);
+        assert!(fs.conservation_violations(&net, &phi).is_empty());
+    }
+
+    #[test]
+    fn detects_data_loop() {
+        let net = diamond(true);
+        let mut phi = Strategy::local_compute_init(&net);
+        // create a data loop 0 -> 1 -> 0
+        let s01 = out_slot(&net.graph, 0, 1).unwrap();
+        let s10 = out_slot(&net.graph, 1, 0).unwrap();
+        phi.data[0][0] = vec![0.0; net.graph.out_degree(0) + 1];
+        phi.data[0][0][s01 + 1] = 1.0;
+        phi.data[0][1] = vec![0.0; net.graph.out_degree(1) + 1];
+        phi.data[0][1][s10 + 1] = 1.0;
+        assert_eq!(
+            compute_flows(&net, &phi).unwrap_err(),
+            FlowError::DataLoop { task: 0 }
+        );
+    }
+
+    #[test]
+    fn saturated_queue_gives_infinite_cost() {
+        let mut net = diamond(true);
+        net.input_rate[0][0] = 100.0; // above comp capacity 12
+        let phi = Strategy::local_compute_init(&net);
+        let fs = compute_flows(&net, &phi).unwrap();
+        assert!(fs.total_cost.is_infinite());
+    }
+
+    #[test]
+    fn multi_task_aggregation() {
+        let net = line3();
+        let phi = Strategy::local_compute_init(&net);
+        let fs = compute_flows(&net, &phi).unwrap();
+        // workload at node 1: w(1,type0)*r + w(1,type1)*r = 1.5*0.5
+        assert!((fs.workload[1] - 0.75).abs() < 1e-12);
+        // node 2 computes task-1 input 0.8 with w=1 -> workload 0.8
+        assert!((fs.workload[2] - 0.8).abs() < 1e-12);
+        assert!(fs.conservation_violations(&net, &phi).is_empty());
+        // task 1 has a=2.0: results delivered at node 0 = 1.6
+        assert!((fs.t_plus[1][0] - 1.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn total_cost_helper_matches() {
+        let net = line3();
+        let phi = Strategy::local_compute_init(&net);
+        let fs = compute_flows(&net, &phi).unwrap();
+        assert_eq!(total_cost(&net, &phi).unwrap(), fs.total_cost);
+    }
+}

@@ -1,0 +1,394 @@
+//! Marginal costs and the Theorem-1 quantities `δ±` (§III).
+//!
+//! `∂T/∂t⁺_i(d,m)` and `∂T/∂r_i(d,m)` satisfy the recursions (12) and (11),
+//! which are well-founded precisely because the strategy is loop-free: they
+//! are reverse-topological dynamic programs over the active result/data
+//! subgraphs. This module is the *centralized* computation used by the
+//! optimizer loop; `sim::protocol` implements the same recursions as the
+//! paper's two-stage distributed broadcast and an integration test pins
+//! them to each other.
+
+use crate::graph::algorithms::{longest_path_to_sink, topo_order_masked};
+
+use super::flows::{FlowError, FlowState};
+use super::network::Network;
+use super::strategy::Strategy;
+
+/// Marginal-cost state for one `(network, strategy, flows)` triple.
+#[derive(Clone, Debug)]
+pub struct Marginals {
+    /// `D'_ij(F_ij)` per directed edge.
+    pub d_link: Vec<f64>,
+    /// `C'_i(G_i)` per node.
+    pub c_node: Vec<f64>,
+    /// `∂T/∂t⁺_i(d,m)`, `[task][node]` (eq. 12; 0 at the destination).
+    pub dt_plus: Vec<Vec<f64>>,
+    /// `∂T/∂r_i(d,m)`, `[task][node]` (eq. 11).
+    pub dt_r: Vec<Vec<f64>>,
+    /// Max result-path hop count from each node to the destination over
+    /// active result edges (`h⁺` in eq. 16).
+    pub h_plus: Vec<Vec<usize>>,
+    /// Max data-path hop count from each node to a computation exit (`h⁻`).
+    pub h_minus: Vec<Vec<usize>>,
+}
+
+/// Compute all marginal quantities. Fails only on routing loops (which
+/// [`super::flows::compute_flows`] would already have rejected).
+pub fn compute_marginals(
+    net: &Network,
+    phi: &Strategy,
+    flows: &FlowState,
+) -> Result<Marginals, FlowError> {
+    let n = net.n();
+    let s_count = net.s();
+    let g_ref = &net.graph;
+
+    let d_link: Vec<f64> = (0..net.e())
+        .map(|eid| net.link_cost[eid].deriv(flows.link_flow[eid]))
+        .collect();
+    let c_node: Vec<f64> = (0..n)
+        .map(|i| net.comp_cost[i].deriv(flows.workload[i]))
+        .collect();
+
+    let mut dt_plus = vec![vec![0.0; n]; s_count];
+    let mut dt_r = vec![vec![0.0; n]; s_count];
+    let mut h_plus = vec![vec![0usize; n]; s_count];
+    let mut h_minus = vec![vec![0usize; n]; s_count];
+
+    for s in 0..s_count {
+        let a_m = net.a_of(s);
+        let ctype = net.tasks[s].ctype;
+
+        // ---- result plane: ∂T/∂t⁺ via (12), destination pinned to 0 ----
+        let rmask = phi.result_active_mask(net, s);
+        let order =
+            topo_order_masked(g_ref, &rmask).ok_or(FlowError::ResultLoop { task: s })?;
+        for &i in order.iter().rev() {
+            if i == net.tasks[s].dest {
+                dt_plus[s][i] = 0.0;
+                continue;
+            }
+            let mut acc = 0.0;
+            for (k, &eid) in g_ref.out_edge_ids(i).iter().enumerate() {
+                let frac = phi.result[s][i][k];
+                if frac > 0.0 {
+                    let j = g_ref.edge(eid).dst;
+                    acc += frac * (d_link[eid] + dt_plus[s][j]);
+                }
+            }
+            dt_plus[s][i] = acc;
+        }
+        h_plus[s] = longest_path_to_sink(g_ref, &rmask)
+            .ok_or(FlowError::ResultLoop { task: s })?;
+
+        // ---- data plane: ∂T/∂r via (11) ----
+        let dmask = phi.data_active_mask(net, s);
+        let order =
+            topo_order_masked(g_ref, &dmask).ok_or(FlowError::DataLoop { task: s })?;
+        for &i in order.iter().rev() {
+            let mut acc = phi.data[s][i][0]
+                * (net.comp_weight[i][ctype] * c_node[i] + a_m * dt_plus[s][i]);
+            for (k, &eid) in g_ref.out_edge_ids(i).iter().enumerate() {
+                let frac = phi.data[s][i][k + 1];
+                if frac > 0.0 {
+                    let j = g_ref.edge(eid).dst;
+                    acc += frac * (d_link[eid] + dt_r[s][j]);
+                }
+            }
+            dt_r[s][i] = acc;
+        }
+        h_minus[s] = longest_path_to_sink(g_ref, &dmask)
+            .ok_or(FlowError::DataLoop { task: s })?;
+    }
+
+    Ok(Marginals {
+        d_link,
+        c_node,
+        dt_plus,
+        dt_r,
+        h_plus,
+        h_minus,
+    })
+}
+
+impl Marginals {
+    /// Theorem-1 data-plane marginals `δ⁻_i(d,m)` for node `i`, task `s`:
+    /// slot 0 is the local-computation entry
+    /// `w_im C'_i + a_m ∂T/∂t⁺_i`, slot `k+1` is
+    /// `D'_ij + ∂T/∂r_j` for the k-th out-edge (eq. 13).
+    pub fn delta_minus(&self, net: &Network, s: usize, i: usize) -> Vec<f64> {
+        let ctype = net.tasks[s].ctype;
+        let a_m = net.a_of(s);
+        let g_ref = &net.graph;
+        let mut out = Vec::with_capacity(g_ref.out_degree(i) + 1);
+        out.push(net.comp_weight[i][ctype] * self.c_node[i] + a_m * self.dt_plus[s][i]);
+        for &eid in g_ref.out_edge_ids(i) {
+            let j = g_ref.edge(eid).dst;
+            out.push(self.d_link[eid] + self.dt_r[s][j]);
+        }
+        out
+    }
+
+    /// Theorem-1 result-plane marginals `δ⁺_i(d,m)`: slot `k` is
+    /// `D'_ij + ∂T/∂t⁺_j` for the k-th out-edge (eq. 13).
+    pub fn delta_plus(&self, net: &Network, s: usize, i: usize) -> Vec<f64> {
+        let g_ref = &net.graph;
+        let mut out = Vec::with_capacity(g_ref.out_degree(i));
+        for &eid in g_ref.out_edge_ids(i) {
+            let j = g_ref.edge(eid).dst;
+            out.push(self.d_link[eid] + self.dt_plus[s][j]);
+        }
+        out
+    }
+
+    /// Lemma-1 partial derivative `∂T/∂φ⁻_ij` (eq. 9): `t⁻_i · δ⁻_ij`.
+    pub fn dphi_minus(
+        &self,
+        net: &Network,
+        flows: &FlowState,
+        s: usize,
+        i: usize,
+    ) -> Vec<f64> {
+        self.delta_minus(net, s, i)
+            .into_iter()
+            .map(|d| flows.t_minus[s][i] * d)
+            .collect()
+    }
+
+    /// Lemma-1 partial derivative `∂T/∂φ⁺_ij` (eq. 10): `t⁺_i · δ⁺_ij`.
+    pub fn dphi_plus(
+        &self,
+        net: &Network,
+        flows: &FlowState,
+        s: usize,
+        i: usize,
+    ) -> Vec<f64> {
+        self.delta_plus(net, s, i)
+            .into_iter()
+            .map(|d| flows.t_plus[s][i] * d)
+            .collect()
+    }
+}
+
+/// Maximum complementarity violation of the Theorem-1 conditions:
+/// `max over (s,i) active slots of φ · (δ − min_k δ_k)`.
+/// Zero (≤ tol) ⇔ the sufficient optimality conditions hold ⇔ `φ` is
+/// globally optimal.
+pub fn theorem1_residual(net: &Network, phi: &Strategy, marg: &Marginals) -> f64 {
+    let mut worst = 0.0f64;
+    for s in 0..net.s() {
+        for i in 0..net.n() {
+            let dm = marg.delta_minus(net, s, i);
+            let dmin = dm.iter().cloned().fold(f64::INFINITY, f64::min);
+            for (slot, &d) in dm.iter().enumerate() {
+                let frac = phi.data[s][i][slot];
+                if frac > 0.0 {
+                    worst = worst.max(frac * (d - dmin));
+                }
+            }
+            if i != net.tasks[s].dest && net.graph.out_degree(i) > 0 {
+                let dp = marg.delta_plus(net, s, i);
+                let pmin = dp.iter().cloned().fold(f64::INFINITY, f64::min);
+                for (slot, &d) in dp.iter().enumerate() {
+                    let frac = phi.result[s][i][slot];
+                    if frac > 0.0 {
+                        worst = worst.max(frac * (d - pmin));
+                    }
+                }
+            }
+        }
+    }
+    worst
+}
+
+/// Lemma-1 (KKT) residual: same complementarity check but on the *scaled*
+/// derivatives `∂T/∂φ = t·δ`. Satisfied trivially at zero-traffic nodes —
+/// exactly the gap Fig. 3 exhibits.
+pub fn lemma1_residual(
+    net: &Network,
+    phi: &Strategy,
+    flows: &FlowState,
+    marg: &Marginals,
+) -> f64 {
+    let mut worst = 0.0f64;
+    for s in 0..net.s() {
+        for i in 0..net.n() {
+            let dm = marg.dphi_minus(net, flows, s, i);
+            let dmin = dm.iter().cloned().fold(f64::INFINITY, f64::min);
+            for (slot, &d) in dm.iter().enumerate() {
+                if phi.data[s][i][slot] > 0.0 {
+                    worst = worst.max(phi.data[s][i][slot] * (d - dmin));
+                }
+            }
+            if i != net.tasks[s].dest && net.graph.out_degree(i) > 0 {
+                let dp = marg.dphi_plus(net, flows, s, i);
+                let pmin = dp.iter().cloned().fold(f64::INFINITY, f64::min);
+                for (slot, &d) in dp.iter().enumerate() {
+                    if phi.result[s][i][slot] > 0.0 {
+                        worst = worst.max(phi.result[s][i][slot] * (d - pmin));
+                    }
+                }
+            }
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::flows::compute_flows;
+    use crate::model::network::testnet::{diamond, line3};
+    use crate::model::strategy::out_slot;
+
+    fn setup(net: &Network, phi: &Strategy) -> (FlowState, Marginals) {
+        let fs = compute_flows(net, phi).unwrap();
+        let m = compute_marginals(net, phi, &fs).unwrap();
+        (fs, m)
+    }
+
+    #[test]
+    fn destination_marginal_is_zero() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let (_, m) = setup(&net, &phi);
+        assert_eq!(m.dt_plus[0][3], 0.0);
+        // all other nodes see positive result marginals (they must pay to
+        // move results toward 3)
+        for i in 0..3 {
+            assert!(m.dt_plus[0][i] > 0.0, "dt_plus[{i}]");
+        }
+    }
+
+    #[test]
+    fn recursion_12_holds() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let (_, m) = setup(&net, &phi);
+        let g = &net.graph;
+        for i in 0..net.n() {
+            if i == 3 {
+                continue;
+            }
+            let mut expect = 0.0;
+            for (k, &eid) in g.out_edge_ids(i).iter().enumerate() {
+                let j = g.edge(eid).dst;
+                expect += phi.result[0][i][k] * (m.d_link[eid] + m.dt_plus[0][j]);
+            }
+            assert!((m.dt_plus[0][i] - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn recursion_11_holds() {
+        let net = line3();
+        let phi = Strategy::local_compute_init(&net);
+        let (_, m) = setup(&net, &phi);
+        for s in 0..net.s() {
+            let a = net.a_of(s);
+            let ct = net.tasks[s].ctype;
+            for i in 0..net.n() {
+                // local-compute init: φ_i0 = 1
+                let expect = net.comp_weight[i][ct] * m.c_node[i] + a * m.dt_plus[s][i];
+                assert!(
+                    (m.dt_r[s][i] - expect).abs() < 1e-12,
+                    "task {s} node {i}: {} vs {}",
+                    m.dt_r[s][i],
+                    expect
+                );
+            }
+        }
+    }
+
+    /// The core correctness check: ∂T/∂φ from (9)/(10) matches numeric
+    /// differentiation of T under an off-simplex bump of one fraction.
+    #[test]
+    fn partials_match_finite_differences() {
+        let net = diamond(true);
+        let mut phi = Strategy::compute_at_dest_init(&net);
+        // make an interior point so every plane carries traffic:
+        // node 0 splits 30% local / 40% ->1 / 30% ->2
+        let s1 = out_slot(&net.graph, 0, 1).unwrap();
+        let s2 = out_slot(&net.graph, 0, 2).unwrap();
+        phi.data[0][0] = vec![0.0; net.graph.out_degree(0) + 1];
+        phi.data[0][0][0] = 0.3;
+        phi.data[0][0][s1 + 1] = 0.4;
+        phi.data[0][0][s2 + 1] = 0.3;
+        // node 0's results go via 2 (so a test bump of 1→0 on the result
+        // plane cannot close a loop through 0→1)
+        let r2 = out_slot(&net.graph, 0, 2).unwrap();
+        phi.result[0][0] = vec![0.0; net.graph.out_degree(0)];
+        phi.result[0][0][r2] = 1.0;
+        // node 1 results to 3 (already from compute_at_dest_init), data too
+        let (fs, m) = setup(&net, &phi);
+        assert!(fs.conservation_violations(&net, &phi).is_empty());
+
+        let eps = 1e-6;
+        // data-plane slots of node 0
+        let analytic = m.dphi_minus(&net, &fs, 0, 0);
+        for slot in 0..analytic.len() {
+            let mut bumped = phi.clone();
+            bumped.data[0][0][slot] += eps;
+            let t1 = compute_flows(&net, &bumped).unwrap().total_cost;
+            let t0 = fs.total_cost;
+            let numeric = (t1 - t0) / eps;
+            assert!(
+                (analytic[slot] - numeric).abs() < 1e-4 * (1.0 + numeric.abs()),
+                "slot {slot}: analytic {} vs numeric {}",
+                analytic[slot],
+                numeric
+            );
+        }
+        // result-plane slots of node 1
+        let analytic = m.dphi_plus(&net, &fs, 0, 1);
+        for slot in 0..analytic.len() {
+            let mut bumped = phi.clone();
+            bumped.result[0][1][slot] += eps;
+            let t1 = compute_flows(&net, &bumped).unwrap().total_cost;
+            let numeric = (t1 - fs.total_cost) / eps;
+            assert!(
+                (analytic[slot] - numeric).abs() < 1e-4 * (1.0 + numeric.abs()),
+                "slot {slot}: analytic {} vs numeric {}",
+                analytic[slot],
+                numeric
+            );
+        }
+    }
+
+    #[test]
+    fn h_statistics() {
+        let net = diamond(true);
+        let phi = Strategy::compute_at_dest_init(&net);
+        let (_, m) = setup(&net, &phi);
+        // data path 0 -> 1|2 -> 3: longest data path from 0 is 2 hops
+        assert_eq!(m.h_minus[0][0], 2);
+        assert_eq!(m.h_minus[0][3], 0);
+        // no result flows: h_plus still reflects φ⁺ tree
+        assert!(m.h_plus[0][0] >= 1);
+    }
+
+    #[test]
+    fn residuals_nonnegative_and_zero_only_when_optimal_shape() {
+        let net = diamond(false); // linear costs: SP is optimal
+        let phi = Strategy::compute_at_dest_init(&net);
+        let (fs, m) = setup(&net, &phi);
+        let r1 = lemma1_residual(&net, &phi, &fs, &m);
+        let rt = theorem1_residual(&net, &phi, &m);
+        assert!(r1 >= 0.0 && rt >= 0.0);
+    }
+
+    #[test]
+    fn delta_minus_slot0_formula() {
+        let net = line3();
+        let phi = Strategy::local_compute_init(&net);
+        let (_, m) = setup(&net, &phi);
+        for s in 0..net.s() {
+            for i in 0..net.n() {
+                let d = m.delta_minus(&net, s, i);
+                let expect =
+                    net.w_of(i, s) * m.c_node[i] + net.a_of(s) * m.dt_plus[s][i];
+                assert!((d[0] - expect).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! The flow model of §II–§III: network instances, convex congestion costs,
+//! routing/offloading strategies, exact flow computation and marginal
+//! costs (the `δ±` quantities of Theorem 1).
+
+pub mod cost;
+pub mod flows;
+pub mod marginals;
+pub mod network;
+pub mod strategy;
+
+pub use cost::CostFn;
+pub use flows::{compute_flows, total_cost, FlowError, FlowState};
+pub use marginals::{
+    compute_marginals, lemma1_residual, theorem1_residual, Marginals,
+};
+pub use network::{Network, Task};
+pub use strategy::{out_slot, Strategy};

@@ -1,0 +1,321 @@
+//! The CEC network instance: graph + tasks + rates + cost functions (§II).
+
+use crate::graph::algorithms::strongly_connected;
+use crate::graph::DiGraph;
+
+use super::cost::CostFn;
+
+/// A computation task `(d, m)`: results must reach `dest`, computed with
+/// type `ctype ∈ [M]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Task {
+    pub dest: usize,
+    pub ctype: usize,
+}
+
+/// A complete network instance. All vectors are indexed by dense ids:
+/// tasks by `s`, nodes by `i`, directed edges by `e`, computation types by
+/// `m`.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub graph: DiGraph,
+    pub tasks: Vec<Task>,
+    /// Number of computation types `M`.
+    pub num_types: usize,
+    /// Exogenous data input rates `r_i(d,m)`, indexed `[task][node]`.
+    pub input_rate: Vec<Vec<f64>>,
+    /// Result-size ratios `a_m`, indexed by type.
+    pub result_ratio: Vec<f64>,
+    /// Computation weights `w_im`, indexed `[node][type]`.
+    pub comp_weight: Vec<Vec<f64>>,
+    /// Communication cost `D_ij`, indexed by edge id.
+    pub link_cost: Vec<CostFn>,
+    /// Computation cost `C_i`, indexed by node.
+    pub comp_cost: Vec<CostFn>,
+}
+
+impl Network {
+    /// Number of nodes `|V|`.
+    pub fn n(&self) -> usize {
+        self.graph.node_count()
+    }
+
+    /// Number of directed edges (2× the undirected link count).
+    pub fn e(&self) -> usize {
+        self.graph.edge_count()
+    }
+
+    /// Number of tasks `|S|`.
+    pub fn s(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Result ratio `a_m` for a task.
+    pub fn a_of(&self, task: usize) -> f64 {
+        self.result_ratio[self.tasks[task].ctype]
+    }
+
+    /// Computation weight `w_im` for node `i` under a task's type.
+    pub fn w_of(&self, node: usize, task: usize) -> f64 {
+        self.comp_weight[node][self.tasks[task].ctype]
+    }
+
+    /// Total exogenous input rate of one task.
+    pub fn task_input(&self, task: usize) -> f64 {
+        self.input_rate[task].iter().sum()
+    }
+
+    /// Scale every exogenous input rate by `factor` (Fig. 5c sweeps).
+    pub fn scale_rates(&mut self, factor: f64) {
+        for per_node in &mut self.input_rate {
+            for r in per_node {
+                *r *= factor;
+            }
+        }
+    }
+
+    /// Structural validation; returns a list of human-readable problems
+    /// (empty = valid instance).
+    pub fn validate(&self) -> Vec<String> {
+        let mut problems = Vec::new();
+        let n = self.n();
+        if !strongly_connected(&self.graph) {
+            problems.push("graph is not strongly connected".into());
+        }
+        if self.tasks.is_empty() {
+            problems.push("no tasks".into());
+        }
+        for (s, t) in self.tasks.iter().enumerate() {
+            if t.dest >= n {
+                problems.push(format!("task {s}: dest {} out of range", t.dest));
+            }
+            if t.ctype >= self.num_types {
+                problems.push(format!("task {s}: ctype {} out of range", t.ctype));
+            }
+        }
+        if self.input_rate.len() != self.s() {
+            problems.push("input_rate task dimension mismatch".into());
+        }
+        for (s, per_node) in self.input_rate.iter().enumerate() {
+            if per_node.len() != n {
+                problems.push(format!("input_rate[{s}] node dimension mismatch"));
+            }
+            if per_node.iter().any(|&r| r < 0.0) {
+                problems.push(format!("task {s}: negative input rate"));
+            }
+            if per_node.iter().all(|&r| r == 0.0) {
+                problems.push(format!("task {s}: no data sources"));
+            }
+        }
+        if self.result_ratio.len() != self.num_types {
+            problems.push("result_ratio dimension mismatch".into());
+        }
+        if self.result_ratio.iter().any(|&a| a <= 0.0) {
+            problems.push("a_m must be positive".into());
+        }
+        if self.comp_weight.len() != n {
+            problems.push("comp_weight node dimension mismatch".into());
+        } else if self
+            .comp_weight
+            .iter()
+            .any(|ws| ws.len() != self.num_types || ws.iter().any(|&w| w <= 0.0))
+        {
+            problems.push("comp_weight entries must be positive, one per type".into());
+        }
+        if self.link_cost.len() != self.e() {
+            problems.push("link_cost edge dimension mismatch".into());
+        }
+        if self.comp_cost.len() != n {
+            problems.push("comp_cost node dimension mismatch".into());
+        }
+        problems
+    }
+
+    /// Panicking validation for construction sites.
+    pub fn assert_valid(&self) {
+        let problems = self.validate();
+        assert!(problems.is_empty(), "invalid network: {problems:?}");
+    }
+
+    /// Can every node compute all of its local input within its own
+    /// capacity? (The paper's LCOR baseline assumes this — §V.)
+    pub fn local_computation_feasible(&self) -> bool {
+        let n = self.n();
+        for i in 0..n {
+            let mut load = 0.0;
+            for (s, task) in self.tasks.iter().enumerate() {
+                load += self.comp_weight[i][task.ctype] * self.input_rate[s][i];
+            }
+            if !self.comp_cost[i].value(load).is_finite() {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Simulate a node failure (Fig. 5b): all incident links removed, the
+    /// node stops being a data source; tasks destined there are retargeted
+    /// to `fallback_dest`. Computation capability is disabled by making the
+    /// local weight prohibitive through an infinite-cost curve.
+    pub fn with_failed_node(&self, dead: usize, fallback_dest: usize) -> Network {
+        assert_ne!(dead, fallback_dest);
+        let mut net = self.clone();
+        net.graph = self.graph.without_node(dead);
+        for t in &mut net.tasks {
+            if t.dest == dead {
+                t.dest = fallback_dest;
+            }
+        }
+        for per_node in &mut net.input_rate {
+            per_node[dead] = 0.0;
+        }
+        // Rebuild link costs for the surviving edge set, preserving each
+        // surviving (src,dst)'s original curve.
+        let mut link_cost = Vec::with_capacity(net.graph.edge_count());
+        for e in net.graph.edges() {
+            let old_id = self
+                .graph
+                .edge_id(e.src, e.dst)
+                .expect("surviving edge existed before");
+            link_cost.push(self.link_cost[old_id]);
+        }
+        net.link_cost = link_cost;
+        // Disable computation at the dead node: zero capacity.
+        net.comp_cost[dead] = CostFn::Queue { cap: 1e-9 };
+        net
+    }
+}
+
+#[cfg(test)]
+pub mod testnet {
+    //! Small hand-built networks shared across the model/algo test suites.
+    use super::*;
+    use crate::graph::from_undirected;
+
+    /// 4-node diamond: 0→{1,2}→3 (bidirectional links), one task ending at
+    /// node 3, data entering at node 0.
+    pub fn diamond(queue: bool) -> Network {
+        let graph = from_undirected(4, &[(0, 1), (0, 2), (1, 3), (2, 3)]);
+        let e = graph.edge_count();
+        let link_cost = if queue {
+            vec![CostFn::Queue { cap: 10.0 }; e]
+        } else {
+            vec![CostFn::Linear { unit: 1.0 }; e]
+        };
+        let comp_cost = if queue {
+            vec![CostFn::Queue { cap: 12.0 }; 4]
+        } else {
+            vec![CostFn::Linear { unit: 1.0 }; 4]
+        };
+        Network {
+            graph,
+            tasks: vec![Task { dest: 3, ctype: 0 }],
+            num_types: 1,
+            input_rate: vec![vec![1.0, 0.0, 0.0, 0.0]],
+            result_ratio: vec![0.5],
+            comp_weight: vec![vec![1.0]; 4],
+            link_cost,
+            comp_cost,
+        }
+    }
+
+    /// Line 0—1—2, two tasks with distinct destinations and types.
+    pub fn line3() -> Network {
+        let graph = from_undirected(3, &[(0, 1), (1, 2)]);
+        let e = graph.edge_count();
+        Network {
+            graph,
+            tasks: vec![Task { dest: 2, ctype: 0 }, Task { dest: 0, ctype: 1 }],
+            num_types: 2,
+            input_rate: vec![vec![1.0, 0.5, 0.0], vec![0.0, 0.0, 0.8]],
+            result_ratio: vec![0.5, 2.0],
+            comp_weight: vec![vec![1.0, 2.0], vec![1.5, 1.0], vec![2.0, 1.0]],
+            link_cost: vec![CostFn::Queue { cap: 15.0 }; e],
+            comp_cost: vec![CostFn::Queue { cap: 20.0 }; 3],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testnet::{diamond, line3};
+    use super::*;
+
+    #[test]
+    fn valid_instances_pass() {
+        assert!(diamond(true).validate().is_empty());
+        assert!(diamond(false).validate().is_empty());
+        assert!(line3().validate().is_empty());
+    }
+
+    #[test]
+    fn accessors() {
+        let net = line3();
+        assert_eq!(net.n(), 3);
+        assert_eq!(net.e(), 4);
+        assert_eq!(net.s(), 2);
+        assert_eq!(net.a_of(0), 0.5);
+        assert_eq!(net.a_of(1), 2.0);
+        assert_eq!(net.w_of(1, 0), 1.5);
+        assert!((net.task_input(0) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_catches_bad_dest() {
+        let mut net = diamond(true);
+        net.tasks[0].dest = 99;
+        assert!(!net.validate().is_empty());
+    }
+
+    #[test]
+    fn validation_catches_negative_rate() {
+        let mut net = diamond(true);
+        net.input_rate[0][0] = -1.0;
+        assert!(net.validate().iter().any(|p| p.contains("negative")));
+    }
+
+    #[test]
+    fn validation_catches_sourceless_task() {
+        let mut net = diamond(true);
+        net.input_rate[0] = vec![0.0; 4];
+        assert!(net.validate().iter().any(|p| p.contains("no data sources")));
+    }
+
+    #[test]
+    fn scale_rates() {
+        let mut net = diamond(true);
+        net.scale_rates(2.0);
+        assert_eq!(net.input_rate[0][0], 2.0);
+    }
+
+    #[test]
+    fn local_feasibility() {
+        let net = diamond(true); // rate 1.0, comp cap 12 — feasible
+        assert!(net.local_computation_feasible());
+        let mut tight = net.clone();
+        tight.comp_cost[0] = CostFn::Queue { cap: 0.5 };
+        assert!(!tight.local_computation_feasible());
+    }
+
+    #[test]
+    fn failure_rewires() {
+        let net = diamond(true);
+        let failed = net.with_failed_node(1, 3);
+        assert!(!failed.graph.has_edge(0, 1));
+        assert!(!failed.graph.has_edge(1, 3));
+        assert_eq!(failed.link_cost.len(), failed.graph.edge_count());
+        // computation disabled at the dead node
+        assert!(!failed.comp_cost[1].value(0.1).is_finite());
+        // still a valid, strongly-connected instance on the survivors?
+        // (0-2-3 path remains; node 1 is isolated so full-graph strong
+        // connectivity fails — callers run on the surviving component.)
+    }
+
+    #[test]
+    fn failure_retargets_dest() {
+        let net = line3();
+        let failed = net.with_failed_node(2, 0);
+        assert_eq!(failed.tasks[0].dest, 0);
+        assert_eq!(failed.input_rate[1][2], 0.0);
+    }
+}

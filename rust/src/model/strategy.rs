@@ -1,0 +1,382 @@
+//! The routing/offloading strategy `φ` (§II "Routing and offloading
+//! strategy") and its invariants.
+//!
+//! For every task `s` and node `i`:
+//!
+//! * `data[s][i]` — the data-plane simplex `φ⁻_i(d,m)`: slot `0` is the
+//!   local-computation fraction `φ⁻_i0`, slot `k+1` corresponds to the
+//!   `k`-th outgoing edge `g.out_edge_ids(i)[k]`. Constraint (5): the slots
+//!   sum to 1.
+//! * `result[s][i]` — the result-plane simplex `φ⁺_i(d,m)`: slot `k` is the
+//!   `k`-th outgoing edge. Constraint (7): sums to 1 unless `i` is the
+//!   task's destination, where all entries are 0 (results exit there).
+//!
+//! *Loop-freedom* (§IV) is a property of the φ-induced *active subgraphs*:
+//! the data plane and the result plane must each be acyclic per task
+//! (a data path may legitimately concatenate with a result path into a
+//! round trip — the paper's footnote 1 — which is why the two planes are
+//! checked independently).
+
+use crate::graph::algorithms::{dijkstra_to, has_cycle_masked};
+use crate::graph::DiGraph;
+
+use super::network::Network;
+
+/// Fractions below this are treated as "no flow" when building active
+/// masks; keeps floating-point dust from creating phantom routing loops.
+pub const ACTIVE_EPS: f64 = 1e-12;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Strategy {
+    /// `[task][node][slot]`, slot 0 = local computation, slot k+1 = k-th out-edge.
+    pub data: Vec<Vec<Vec<f64>>>,
+    /// `[task][node][k]`, k-th out-edge.
+    pub result: Vec<Vec<Vec<f64>>>,
+}
+
+impl Strategy {
+    /// All-zero strategy with the right shape (infeasible until filled).
+    pub fn zeroed(net: &Network) -> Strategy {
+        let n = net.n();
+        let s = net.s();
+        let data = (0..s)
+            .map(|_| {
+                (0..n)
+                    .map(|i| vec![0.0; net.graph.out_degree(i) + 1])
+                    .collect()
+            })
+            .collect();
+        let result = (0..s)
+            .map(|_| {
+                (0..n)
+                    .map(|i| vec![0.0; net.graph.out_degree(i)])
+                    .collect()
+            })
+            .collect();
+        Strategy { data, result }
+    }
+
+    /// The paper's safe initial point (§V simulates settings where pure
+    /// local computation is feasible): every node computes all arriving
+    /// data locally (`φ⁻_i0 = 1`) and routes results along the
+    /// shortest-path tree toward each destination under zero-flow marginal
+    /// weights `D'(0)`. Loop-free by construction (SP trees are acyclic).
+    pub fn local_compute_init(net: &Network) -> Strategy {
+        let mut phi = Strategy::zeroed(net);
+        let w0: Vec<f64> = net.link_cost.iter().map(|c| c.deriv_at_zero()).collect();
+        for (s, task) in net.tasks.iter().enumerate() {
+            let (_, next) = dijkstra_to(&net.graph, task.dest, &w0);
+            for i in 0..net.n() {
+                phi.data[s][i][0] = 1.0;
+                if i == task.dest || net.graph.out_degree(i) == 0 {
+                    continue; // sink, or isolated (e.g. a failed node)
+                }
+                let nxt = next[i];
+                if nxt == usize::MAX {
+                    // disconnected from this destination (can only happen
+                    // on degraded graphs); the node carries no traffic for
+                    // this task, so a zero result row is harmless.
+                    continue;
+                }
+                let slot = out_slot(&net.graph, i, nxt)
+                    .expect("next hop must be an out-neighbor");
+                phi.result[s][i][slot] = 1.0;
+            }
+        }
+        phi
+    }
+
+    /// Initial point that routes all data along the SP tree to the
+    /// destination and computes there (used by tests as an alternative
+    /// starting point; finite only when the destination's computation
+    /// capacity covers the full task input).
+    pub fn compute_at_dest_init(net: &Network) -> Strategy {
+        let mut phi = Strategy::zeroed(net);
+        let w0: Vec<f64> = net.link_cost.iter().map(|c| c.deriv_at_zero()).collect();
+        for (s, task) in net.tasks.iter().enumerate() {
+            let (_, next) = dijkstra_to(&net.graph, task.dest, &w0);
+            for i in 0..net.n() {
+                if i == task.dest {
+                    phi.data[s][i][0] = 1.0; // compute here
+                    continue;
+                }
+                let nxt = next[i];
+                assert!(nxt != usize::MAX);
+                let slot = out_slot(&net.graph, i, nxt).unwrap();
+                phi.data[s][i][slot + 1] = 1.0;
+                phi.result[s][i][slot] = 1.0; // (unused: no result traffic upstream)
+            }
+        }
+        phi
+    }
+
+    /// Per-task edge mask of the **data** plane: `active[e]` iff
+    /// `φ⁻_{src(e), dst(e)}(s) > ε`.
+    pub fn data_active_mask(&self, net: &Network, s: usize) -> Vec<bool> {
+        let mut mask = vec![false; net.e()];
+        for i in 0..net.n() {
+            for (k, &eid) in net.graph.out_edge_ids(i).iter().enumerate() {
+                if self.data[s][i][k + 1] > ACTIVE_EPS {
+                    mask[eid] = true;
+                }
+            }
+        }
+        mask
+    }
+
+    /// Per-task edge mask of the **result** plane.
+    pub fn result_active_mask(&self, net: &Network, s: usize) -> Vec<bool> {
+        let mut mask = vec![false; net.e()];
+        for i in 0..net.n() {
+            for (k, &eid) in net.graph.out_edge_ids(i).iter().enumerate() {
+                if self.result[s][i][k] > ACTIVE_EPS {
+                    mask[eid] = true;
+                }
+            }
+        }
+        mask
+    }
+
+    /// Loop-freedom: no data loop and no result loop for any task (§IV).
+    pub fn is_loop_free(&self, net: &Network) -> bool {
+        for s in 0..net.s() {
+            if has_cycle_masked(&net.graph, &self.data_active_mask(net, s)) {
+                return false;
+            }
+            if has_cycle_masked(&net.graph, &self.result_active_mask(net, s)) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Feasibility per constraints (5) and (7) plus non-negativity.
+    /// Returns human-readable violations (empty = feasible).
+    pub fn feasibility_violations(&self, net: &Network) -> Vec<String> {
+        let mut out = Vec::new();
+        let tol = 1e-9;
+        for s in 0..net.s() {
+            let dest = net.tasks[s].dest;
+            for i in 0..net.n() {
+                let dsum: f64 = self.data[s][i].iter().sum();
+                if self.data[s][i].iter().any(|&x| x < -tol) {
+                    out.push(format!("task {s} node {i}: negative data fraction"));
+                }
+                if (dsum - 1.0).abs() > 1e-6 {
+                    out.push(format!("task {s} node {i}: data fractions sum to {dsum}"));
+                }
+                let rsum: f64 = self.result[s][i].iter().sum();
+                if self.result[s][i].iter().any(|&x| x < -tol) {
+                    out.push(format!("task {s} node {i}: negative result fraction"));
+                }
+                if i == dest {
+                    if rsum.abs() > 1e-6 {
+                        out.push(format!(
+                            "task {s}: destination {i} must not forward results (sum={rsum})"
+                        ));
+                    }
+                } else if net.graph.out_degree(i) > 0 && (rsum - 1.0).abs() > 1e-6 {
+                    // isolated nodes (e.g. after a failure) are exempt: they
+                    // carry no traffic and have no outgoing slots.
+                    out.push(format!(
+                        "task {s} node {i}: result fractions sum to {rsum}"
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn is_feasible(&self, net: &Network) -> bool {
+        self.feasibility_violations(net).is_empty()
+    }
+
+    /// Warm-start adaptation after a topology/task change (Fig. 5b): map
+    /// surviving data-plane fractions onto the new graph by `(src,dst)`
+    /// pair (mass on removed edges returns to the local-computation slot),
+    /// and re-initialize the result plane along the new shortest-path
+    /// trees (guaranteed loop-free). Nodes left with no out-edges fall
+    /// back to pure local computation.
+    pub fn adapt_to(&self, old_net: &Network, new_net: &Network) -> Strategy {
+        use crate::graph::algorithms::dijkstra_to;
+        let mut phi = Strategy::zeroed(new_net);
+        let w0: Vec<f64> = new_net
+            .link_cost
+            .iter()
+            .map(|c| c.deriv_at_zero())
+            .collect();
+        for (s, task) in new_net.tasks.iter().enumerate() {
+            let (_, next) = dijkstra_to(&new_net.graph, task.dest, &w0);
+            for i in 0..new_net.n() {
+                // --- data plane: remap by (src,dst) ---
+                let mut local = self.data[s][i][0];
+                for (k_old, &eid_old) in old_net.graph.out_edge_ids(i).iter().enumerate() {
+                    let j = old_net.graph.edge(eid_old).dst;
+                    let frac = self.data[s][i][k_old + 1];
+                    if frac == 0.0 {
+                        continue;
+                    }
+                    match out_slot(&new_net.graph, i, j) {
+                        Some(k_new) => phi.data[s][i][k_new + 1] = frac,
+                        None => local += frac, // edge gone: compute locally
+                    }
+                }
+                phi.data[s][i][0] = local;
+                // renormalize tiny drift
+                let sum: f64 = phi.data[s][i].iter().sum();
+                if sum > 0.0 {
+                    phi.data[s][i].iter_mut().for_each(|x| *x /= sum);
+                } else {
+                    phi.data[s][i][0] = 1.0;
+                }
+                // --- result plane: SP re-init (loop-free by construction) ---
+                if i == task.dest || new_net.graph.out_degree(i) == 0 {
+                    continue;
+                }
+                let nxt = next[i];
+                if nxt == usize::MAX {
+                    // disconnected from the destination: dead-end node;
+                    // keep zero result strategy (it carries no traffic)
+                    continue;
+                }
+                let slot = out_slot(&new_net.graph, i, nxt).unwrap();
+                phi.result[s][i][slot] = 1.0;
+            }
+        }
+        phi
+    }
+
+    /// Largest pairwise entry difference against another strategy —
+    /// convergence metric for fixed-point comparisons.
+    pub fn max_abs_diff(&self, other: &Strategy) -> f64 {
+        let mut worst = 0.0f64;
+        for (a_t, b_t) in self.data.iter().zip(&other.data) {
+            for (a_n, b_n) in a_t.iter().zip(b_t) {
+                for (a, b) in a_n.iter().zip(b_n) {
+                    worst = worst.max((a - b).abs());
+                }
+            }
+        }
+        for (a_t, b_t) in self.result.iter().zip(&other.result) {
+            for (a_n, b_n) in a_t.iter().zip(b_t) {
+                for (a, b) in a_n.iter().zip(b_n) {
+                    worst = worst.max((a - b).abs());
+                }
+            }
+        }
+        worst
+    }
+}
+
+/// Slot index of out-neighbor `j` within node `i`'s out-edge order, if any.
+pub fn out_slot(g: &DiGraph, i: usize, j: usize) -> Option<usize> {
+    g.out_edge_ids(i)
+        .iter()
+        .position(|&eid| g.edge(eid).dst == j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::network::testnet::{diamond, line3};
+
+    #[test]
+    fn zeroed_shape() {
+        let net = diamond(true);
+        let phi = Strategy::zeroed(&net);
+        assert_eq!(phi.data.len(), 1);
+        assert_eq!(phi.data[0].len(), 4);
+        assert_eq!(phi.data[0][0].len(), net.graph.out_degree(0) + 1);
+        assert_eq!(phi.result[0][0].len(), net.graph.out_degree(0));
+    }
+
+    #[test]
+    fn local_init_feasible_loop_free() {
+        for net in [diamond(true), diamond(false), line3()] {
+            let phi = Strategy::local_compute_init(&net);
+            assert!(phi.is_feasible(&net), "{:?}", phi.feasibility_violations(&net));
+            assert!(phi.is_loop_free(&net));
+            // all data computed locally
+            for s in 0..net.s() {
+                for i in 0..net.n() {
+                    assert_eq!(phi.data[s][i][0], 1.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dest_init_feasible_loop_free() {
+        let net = diamond(true);
+        let phi = Strategy::compute_at_dest_init(&net);
+        assert!(phi.is_feasible(&net));
+        assert!(phi.is_loop_free(&net));
+        // destination computes
+        assert_eq!(phi.data[0][3][0], 1.0);
+        // source forwards
+        assert_eq!(phi.data[0][0][0], 0.0);
+    }
+
+    #[test]
+    fn feasibility_catches_bad_sum() {
+        let net = diamond(true);
+        let mut phi = Strategy::local_compute_init(&net);
+        phi.data[0][0][0] = 0.7;
+        assert!(!phi.is_feasible(&net));
+    }
+
+    #[test]
+    fn feasibility_catches_dest_forwarding() {
+        let net = diamond(true);
+        let mut phi = Strategy::local_compute_init(&net);
+        phi.result[0][3][0] = 0.2;
+        assert!(phi
+            .feasibility_violations(&net)
+            .iter()
+            .any(|v| v.contains("destination")));
+    }
+
+    #[test]
+    fn loop_detection_on_result_plane() {
+        let net = diamond(true);
+        let mut phi = Strategy::local_compute_init(&net);
+        // Make result traffic circulate 1 -> 0 -> 1 for the task at dest 3:
+        let s01 = out_slot(&net.graph, 0, 1).unwrap();
+        let s10 = out_slot(&net.graph, 1, 0).unwrap();
+        phi.result[0][0] = vec![0.0; net.graph.out_degree(0)];
+        phi.result[0][0][s01] = 1.0;
+        phi.result[0][1] = vec![0.0; net.graph.out_degree(1)];
+        phi.result[0][1][s10] = 1.0;
+        assert!(!phi.is_loop_free(&net));
+    }
+
+    #[test]
+    fn active_masks_follow_fractions() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        // local-compute init: no data flows at all
+        assert!(phi.data_active_mask(&net, 0).iter().all(|&b| !b));
+        // results flow along the SP tree: at least the dest's in-edges used
+        let rmask = phi.result_active_mask(&net, 0);
+        assert!(rmask.iter().any(|&b| b));
+    }
+
+    #[test]
+    fn max_abs_diff_zero_for_clone() {
+        let net = line3();
+        let a = Strategy::local_compute_init(&net);
+        let mut b = a.clone();
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        b.data[0][0][0] -= 0.25;
+        assert!((a.max_abs_diff(&b) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn out_slot_lookup() {
+        let net = diamond(true);
+        let g = &net.graph;
+        let slot = out_slot(g, 0, 2).unwrap();
+        assert_eq!(g.edge(g.out_edge_ids(0)[slot]).dst, 2);
+        assert_eq!(out_slot(g, 0, 3), None); // not adjacent
+    }
+}

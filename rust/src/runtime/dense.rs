@@ -1,0 +1,222 @@
+//! Dense packing: `Network` + `Strategy` → padded tensors for the AOT
+//! `dense_eval` artifact, and unpacking of its outputs back into the
+//! sparse model shapes.
+//!
+//! Padding identity: padded nodes are isolated (link mask 0, zero rates,
+//! `φ_local = 1`) and padded tasks carry zero input — every padded slot
+//! contributes exactly 0 to cost and marginals, which the parity test in
+//! `rust/tests/xla_parity.rs` pins against the native evaluator.
+
+use anyhow::{Context, Result};
+
+use crate::model::cost::CostFn;
+use crate::model::network::Network;
+use crate::model::strategy::Strategy;
+
+use super::engine::{DenseInputs, DenseOutputs, Engine};
+
+/// Dense evaluation results mapped back to model indexing.
+#[derive(Clone, Debug)]
+pub struct DenseEval {
+    pub total_cost: f64,
+    /// `D'` per directed edge id.
+    pub d_link: Vec<f64>,
+    /// `C'` per node.
+    pub c_node: Vec<f64>,
+    /// `∂T/∂t⁺` `[task][node]`.
+    pub dt_plus: Vec<Vec<f64>>,
+    /// `∂T/∂r` `[task][node]`.
+    pub dt_r: Vec<Vec<f64>>,
+    /// `t⁻` / `t⁺` `[task][node]`.
+    pub t_minus: Vec<Vec<f64>>,
+    pub t_plus: Vec<Vec<f64>>,
+    /// Aggregate flow per directed edge id.
+    pub link_flow: Vec<f64>,
+    /// Workload per node.
+    pub workload: Vec<f64>,
+}
+
+/// Pack a network + strategy into `DenseInputs` padded for `(pn, ps)`.
+pub fn pack(net: &Network, phi: &Strategy, pn: usize, ps: usize) -> Result<DenseInputs> {
+    let n = net.n();
+    let s = net.s();
+    anyhow::ensure!(pn >= n && ps >= s, "padding smaller than network");
+    let mut inp = DenseInputs::zeroed(pn, ps);
+
+    for (eid, e) in net.graph.edges().iter().enumerate() {
+        let idx = e.src * pn + e.dst;
+        inp.link_mask[idx] = 1.0;
+        match net.link_cost[eid] {
+            CostFn::Linear { unit } => {
+                inp.link_kind[idx] = 0.0;
+                inp.link_param[idx] = unit as f32;
+            }
+            CostFn::Queue { cap } => {
+                inp.link_kind[idx] = 1.0;
+                inp.link_param[idx] = cap as f32;
+            }
+            CostFn::SmoothCap { .. } => {
+                anyhow::bail!("SmoothCap links are not represented in the AOT artifact")
+            }
+        }
+    }
+    for i in 0..n {
+        match net.comp_cost[i] {
+            CostFn::Linear { unit } => {
+                inp.comp_kind[i] = 0.0;
+                inp.comp_param[i] = unit as f32;
+            }
+            CostFn::Queue { cap } => {
+                inp.comp_kind[i] = 1.0;
+                inp.comp_param[i] = cap as f32;
+            }
+            CostFn::SmoothCap { .. } => {
+                anyhow::bail!("SmoothCap nodes are not represented in the AOT artifact")
+            }
+        }
+    }
+
+    for task in 0..s {
+        let a = net.a_of(task);
+        inp.a[task] = a as f32;
+        for i in 0..n {
+            inp.r[task * pn + i] = net.input_rate[task][i] as f32;
+            inp.w[task * pn + i] = net.w_of(i, task) as f32;
+            inp.phi_local[task * pn + i] = phi.data[task][i][0] as f32;
+            for (k, &eid) in net.graph.out_edge_ids(i).iter().enumerate() {
+                let j = net.graph.edge(eid).dst;
+                inp.phi_data[task * pn * pn + i * pn + j] = phi.data[task][i][k + 1] as f32;
+                inp.phi_result[task * pn * pn + i * pn + j] = phi.result[task][i][k] as f32;
+            }
+        }
+    }
+    Ok(inp)
+}
+
+/// Unpack padded outputs back to edge-id / node / task indexing.
+pub fn unpack(net: &Network, out: &DenseOutputs) -> DenseEval {
+    let n = net.n();
+    let s = net.s();
+    let pn = out.n;
+    let d_link: Vec<f64> = net
+        .graph
+        .edges()
+        .iter()
+        .map(|e| out.dp_link[e.src * pn + e.dst] as f64)
+        .collect();
+    let link_flow: Vec<f64> = net
+        .graph
+        .edges()
+        .iter()
+        .map(|e| out.link_flow[e.src * pn + e.dst] as f64)
+        .collect();
+    let c_node: Vec<f64> = (0..n).map(|i| out.cp_node[i] as f64).collect();
+    let workload: Vec<f64> = (0..n).map(|i| out.workload[i] as f64).collect();
+    let grab = |flat: &[f32]| -> Vec<Vec<f64>> {
+        (0..s)
+            .map(|task| (0..n).map(|i| flat[task * pn + i] as f64).collect())
+            .collect()
+    };
+    DenseEval {
+        total_cost: out.total_cost,
+        d_link,
+        c_node,
+        dt_plus: grab(&out.dt_plus),
+        dt_r: grab(&out.dt_r),
+        t_minus: grab(&out.t_minus),
+        t_plus: grab(&out.t_plus),
+        link_flow,
+        workload,
+    }
+}
+
+/// High-level accelerated evaluator: pads, runs the artifact, unpacks.
+pub struct DenseEvaluator<'e> {
+    engine: &'e Engine,
+}
+
+impl<'e> DenseEvaluator<'e> {
+    pub fn new(engine: &'e Engine) -> Self {
+        DenseEvaluator { engine }
+    }
+
+    /// Evaluate flows + marginals for `(net, phi)` on the XLA data plane.
+    pub fn evaluate(&self, net: &Network, phi: &Strategy) -> Result<DenseEval> {
+        let class = self
+            .engine
+            .class_for(net.n(), net.s())
+            .with_context(|| {
+                format!(
+                    "no size class fits N={} S={} (largest: {:?})",
+                    net.n(),
+                    net.s(),
+                    self.engine
+                        .classes()
+                        .iter()
+                        .map(|c| (c.n, c.s))
+                        .max()
+                )
+            })?;
+        let inputs = pack(net, phi, class.n, class.s)?;
+        let out = self.engine.run(&inputs)?;
+        Ok(unpack(net, &out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::network::testnet::diamond;
+
+    #[test]
+    fn pack_shapes_and_padding_identity() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let inp = pack(&net, &phi, 8, 4).unwrap();
+        assert_eq!(inp.phi_data.len(), 4 * 8 * 8);
+        // padded tasks: zero rates, local fraction 1
+        for task in net.s()..4 {
+            for i in 0..8 {
+                assert_eq!(inp.r[task * 8 + i], 0.0);
+                assert_eq!(inp.phi_local[task * 8 + i], 1.0);
+            }
+        }
+        // padded nodes are masked out of the link plane
+        for i in 0..8 {
+            for j in net.n()..8 {
+                assert_eq!(inp.link_mask[i * 8 + j], 0.0);
+            }
+        }
+        // real edges present with queue kind
+        let e01 = net.graph.edge_id(0, 1).unwrap();
+        let _ = e01;
+        assert_eq!(inp.link_mask[1], 1.0); // edge (0,1) at idx 0*8+1
+        assert_eq!(inp.link_kind[1], 1.0);
+        assert_eq!(inp.link_param[1], 10.0);
+    }
+
+    #[test]
+    fn pack_rejects_too_small_padding() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        assert!(pack(&net, &phi, 2, 1).is_err());
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_of_phi() {
+        let net = diamond(true);
+        let phi = Strategy::compute_at_dest_init(&net);
+        let inp = pack(&net, &phi, 8, 2).unwrap();
+        // φ entries land at (task, i, j)
+        for i in 0..net.n() {
+            for (k, &eid) in net.graph.out_edge_ids(i).iter().enumerate() {
+                let j = net.graph.edge(eid).dst;
+                assert_eq!(
+                    inp.phi_data[i * 8 + j],
+                    phi.data[0][i][k + 1] as f32,
+                    "({i},{j})"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! PJRT execution engine: loads the AOT HLO-text artifacts and runs them
+//! on the CPU client from the rust hot path.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! One compiled executable per size class, compiled once at startup.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{Manifest, SizeClass};
+
+/// A compiled `dense_eval` executable for one size class.
+pub struct CompiledClass {
+    pub n: usize,
+    pub s: usize,
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The engine: PJRT client + one executable per size class.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    compiled: Vec<CompiledClass>,
+}
+
+/// Raw dense inputs, already padded to a size class. All row-major f32.
+#[derive(Clone, Debug)]
+pub struct DenseInputs {
+    pub n: usize,
+    pub s: usize,
+    pub phi_data: Vec<f32>,   // [S*N*N]
+    pub phi_local: Vec<f32>,  // [S*N]
+    pub phi_result: Vec<f32>, // [S*N*N]
+    pub r: Vec<f32>,          // [S*N]
+    pub a: Vec<f32>,          // [S]
+    pub w: Vec<f32>,          // [S*N]
+    pub link_param: Vec<f32>, // [N*N]
+    pub link_kind: Vec<f32>,  // [N*N]
+    pub link_mask: Vec<f32>,  // [N*N]
+    pub comp_param: Vec<f32>, // [N]
+    pub comp_kind: Vec<f32>,  // [N]
+}
+
+/// Dense outputs as returned by the artifact.
+#[derive(Clone, Debug)]
+pub struct DenseOutputs {
+    pub n: usize,
+    pub s: usize,
+    pub total_cost: f64,
+    pub link_flow: Vec<f32>, // [N*N]
+    pub workload: Vec<f32>,  // [N]
+    pub dp_link: Vec<f32>,   // [N*N]
+    pub cp_node: Vec<f32>,   // [N]
+    pub dt_plus: Vec<f32>,   // [S*N]
+    pub dt_r: Vec<f32>,      // [S*N]
+    pub t_minus: Vec<f32>,   // [S*N]
+    pub t_plus: Vec<f32>,    // [S*N]
+}
+
+impl DenseInputs {
+    /// Zero-filled inputs for a size class (padding identity: zero rates,
+    /// zero routing, masked-out links, local fractions set to 1 for
+    /// padding rows so simplexes stay valid — all costs stay 0).
+    pub fn zeroed(n: usize, s: usize) -> DenseInputs {
+        DenseInputs {
+            n,
+            s,
+            phi_data: vec![0.0; s * n * n],
+            phi_local: vec![1.0; s * n],
+            phi_result: vec![0.0; s * n * n],
+            r: vec![0.0; s * n],
+            a: vec![1.0; s],
+            w: vec![1.0; s * n],
+            link_param: vec![0.0; n * n],
+            link_kind: vec![0.0; n * n],
+            link_mask: vec![0.0; n * n],
+            comp_param: vec![0.0; n],
+            comp_kind: vec![0.0; n],
+        }
+    }
+}
+
+impl Engine {
+    /// Load the manifest and compile every artifact on the CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut compiled = Vec::new();
+        for class in &manifest.classes {
+            let exe = Self::compile_class(&client, class)
+                .with_context(|| format!("compiling size class {}", class.name))?;
+            compiled.push(CompiledClass {
+                n: class.n,
+                s: class.s,
+                name: class.name.clone(),
+                exe,
+            });
+        }
+        Ok(Engine {
+            manifest,
+            client,
+            compiled,
+        })
+    }
+
+    /// Load only the classes that satisfy `pred` (examples use this to skip
+    /// the large class for faster startup).
+    pub fn load_filtered(
+        artifacts_dir: &Path,
+        pred: impl Fn(&SizeClass) -> bool,
+    ) -> Result<Engine> {
+        let mut manifest = Manifest::load(artifacts_dir)?;
+        manifest.classes.retain(|c| pred(c));
+        anyhow::ensure!(
+            !manifest.classes.is_empty(),
+            "class filter removed every size class"
+        );
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut compiled = Vec::new();
+        for class in &manifest.classes {
+            let exe = Self::compile_class(&client, class)?;
+            compiled.push(CompiledClass {
+                n: class.n,
+                s: class.s,
+                name: class.name.clone(),
+                exe,
+            });
+        }
+        Ok(Engine {
+            manifest,
+            client,
+            compiled,
+        })
+    }
+
+    fn compile_class(
+        client: &xla::PjRtClient,
+        class: &SizeClass,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let path_str = class
+            .file
+            .to_str()
+            .context("artifact path is not valid UTF-8")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path_str}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {path_str}"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn classes(&self) -> &[CompiledClass] {
+        &self.compiled
+    }
+
+    /// Pick the smallest compiled class that fits `(n, s)`.
+    pub fn class_for(&self, n: usize, s: usize) -> Option<&CompiledClass> {
+        self.compiled
+            .iter()
+            .filter(|c| c.n >= n && c.s >= s)
+            .min_by_key(|c| (c.n, c.s))
+    }
+
+    /// Execute `dense_eval` on pre-padded inputs (must match a compiled
+    /// class exactly — use [`Engine::class_for`] + the packer in
+    /// `runtime::dense`).
+    pub fn run(&self, inputs: &DenseInputs) -> Result<DenseOutputs> {
+        let class = self
+            .compiled
+            .iter()
+            .find(|c| c.n == inputs.n && c.s == inputs.s)
+            .with_context(|| {
+                format!(
+                    "no compiled class of exact size N={} S={}",
+                    inputs.n, inputs.s
+                )
+            })?;
+        let n = inputs.n as i64;
+        let s = inputs.s as i64;
+
+        let lit = |data: &[f32], dims: &[i64]| -> Result<xla::Literal> {
+            let flat = xla::Literal::vec1(data);
+            Ok(flat.reshape(dims)?)
+        };
+        let args: Vec<xla::Literal> = vec![
+            lit(&inputs.phi_data, &[s, n, n])?,
+            lit(&inputs.phi_local, &[s, n])?,
+            lit(&inputs.phi_result, &[s, n, n])?,
+            lit(&inputs.r, &[s, n])?,
+            lit(&inputs.a, &[s])?,
+            lit(&inputs.w, &[s, n])?,
+            lit(&inputs.link_param, &[n, n])?,
+            lit(&inputs.link_kind, &[n, n])?,
+            lit(&inputs.link_mask, &[n, n])?,
+            lit(&inputs.comp_param, &[n])?,
+            lit(&inputs.comp_kind, &[n])?,
+        ];
+
+        let result = class.exe.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = result.to_tuple().context("decomposing result tuple")?;
+        anyhow::ensure!(
+            parts.len() == 9,
+            "artifact returned {} outputs, expected 9",
+            parts.len()
+        );
+        let mut it = parts.into_iter();
+        let total: f32 = it.next().unwrap().to_vec::<f32>()?[0];
+        let next_vec = |it: &mut std::vec::IntoIter<xla::Literal>| -> Result<Vec<f32>> {
+            Ok(it.next().unwrap().to_vec::<f32>()?)
+        };
+        let link_flow = next_vec(&mut it)?;
+        let workload = next_vec(&mut it)?;
+        let dp_link = next_vec(&mut it)?;
+        let cp_node = next_vec(&mut it)?;
+        let dt_plus = next_vec(&mut it)?;
+        let dt_r = next_vec(&mut it)?;
+        let t_minus = next_vec(&mut it)?;
+        let t_plus = next_vec(&mut it)?;
+
+        // saturation sentinel → true infinity
+        let total_cost = if (total as f64) >= self.manifest.sat_big {
+            f64::INFINITY
+        } else {
+            total as f64
+        };
+
+        Ok(DenseOutputs {
+            n: inputs.n,
+            s: inputs.s,
+            total_cost,
+            link_flow,
+            workload,
+            dp_link,
+            cp_node,
+            dt_plus,
+            dt_r,
+            t_minus,
+            t_plus,
+        })
+    }
+}

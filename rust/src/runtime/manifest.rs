@@ -1,0 +1,182 @@
+//! `artifacts/manifest.json` — the contract between the python AOT step
+//! and the rust runtime: artifact file names, size classes (padding
+//! bounds), and the tensor input/output orders of the `dense_eval` entry.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One padded size class (`N` nodes, `S` tasks) with its HLO artifact.
+#[derive(Clone, Debug)]
+pub struct SizeClass {
+    pub name: String,
+    pub file: PathBuf,
+    pub n: usize,
+    pub s: usize,
+    /// Propagation wave count baked into the artifact.
+    pub iters: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    /// Values at/above this are "saturated" (the f32 stand-in for +∞).
+    pub sat_big: f64,
+    pub classes: Vec<SizeClass>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        if root.get("format").as_str() != Some("hlo-text") {
+            bail!("unsupported artifact format {:?}", root.get("format"));
+        }
+        let strings = |key: &str| -> Result<Vec<String>> {
+            root.get(key)
+                .as_arr()
+                .with_context(|| format!("manifest missing {key}"))?
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .with_context(|| format!("non-string in {key}"))
+                })
+                .collect()
+        };
+        let inputs = strings("inputs")?;
+        let outputs = strings("outputs")?;
+        let sat_big = root.get("sat_big").as_num().unwrap_or(1e30);
+        let mut classes = Vec::new();
+        for c in root
+            .get("classes")
+            .as_arr()
+            .context("manifest missing classes")?
+        {
+            classes.push(SizeClass {
+                name: c
+                    .get("name")
+                    .as_str()
+                    .context("class missing name")?
+                    .to_string(),
+                file: dir.join(c.get("file").as_str().context("class missing file")?),
+                n: c.get("n").as_usize().context("class missing n")?,
+                s: c.get("s").as_usize().context("class missing s")?,
+                iters: c.get("iters").as_usize().context("class missing iters")?,
+            });
+        }
+        if classes.is_empty() {
+            bail!("manifest has no size classes");
+        }
+        let m = Manifest {
+            inputs,
+            outputs,
+            sat_big,
+            classes,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.inputs.len() != 11 {
+            bail!("expected 11 inputs, manifest lists {}", self.inputs.len());
+        }
+        if self.outputs.len() != 9 {
+            bail!("expected 9 outputs, manifest lists {}", self.outputs.len());
+        }
+        for c in &self.classes {
+            if !c.file.exists() {
+                bail!("artifact file missing: {:?}", c.file);
+            }
+            if c.n == 0 || c.s == 0 {
+                bail!("degenerate size class {}", c.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Smallest class fitting a network with `n` nodes and `s` tasks.
+    pub fn class_for(&self, n: usize, s: usize) -> Option<&SizeClass> {
+        self.classes
+            .iter()
+            .filter(|c| c.n >= n && c.s >= s)
+            .min_by_key(|c| (c.n, c.s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path, with_files: bool) {
+        let manifest = r#"{
+            "format": "hlo-text",
+            "entry": "dense_eval",
+            "inputs": ["phi_data","phi_local","phi_result","r","a","w",
+                       "link_param","link_kind","link_mask","comp_param","comp_kind"],
+            "outputs": ["total_cost","link_flow","workload","dp_link","cp_node",
+                        "dt_plus","dt_r","t_minus","t_plus"],
+            "sat_big": 1e30,
+            "classes": [
+                {"name":"small","file":"dense_eval_small.hlo.txt","n":32,"s":48,"iters":32},
+                {"name":"large","file":"dense_eval_large.hlo.txt","n":128,"s":128,"iters":128}
+            ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        if with_files {
+            std::fs::write(dir.join("dense_eval_small.hlo.txt"), "HloModule x").unwrap();
+            std::fs::write(dir.join("dense_eval_large.hlo.txt"), "HloModule x").unwrap();
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("cecflow-manifest-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = tmpdir("ok");
+        write_fixture(&dir, true);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.classes.len(), 2);
+        assert_eq!(m.inputs[0], "phi_data");
+        assert_eq!(m.sat_big, 1e30);
+    }
+
+    #[test]
+    fn class_selection_smallest_fitting() {
+        let dir = tmpdir("sel");
+        write_fixture(&dir, true);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.class_for(10, 10).unwrap().name, "small");
+        assert_eq!(m.class_for(32, 48).unwrap().name, "small");
+        assert_eq!(m.class_for(33, 10).unwrap().name, "large");
+        assert_eq!(m.class_for(100, 120).unwrap().name, "large");
+        assert!(m.class_for(500, 10).is_none());
+    }
+
+    #[test]
+    fn missing_artifact_file_rejected() {
+        let dir = tmpdir("missing");
+        write_fixture(&dir, false);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_errors_helpfully() {
+        let dir = tmpdir("nofile");
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the AOT-compiled `dense_eval` HLO artifacts
+//! produced by `python/compile/aot.py` and executes them from the rust hot
+//! path. Python never runs at request time — artifacts are bytes on disk.
+
+pub mod dense;
+pub mod engine;
+pub mod manifest;
+
+pub use dense::{DenseEval, DenseEvaluator};
+pub use engine::{DenseInputs, DenseOutputs, Engine};
+pub use manifest::Manifest;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$CECFLOW_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("CECFLOW_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

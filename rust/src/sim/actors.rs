@@ -1,0 +1,244 @@
+//! Thread-based actor deployment of the broadcast protocol.
+//!
+//! `sim::protocol` models the two-stage broadcast on a virtual clock; this
+//! module runs it with *real* concurrency — one OS thread per network node,
+//! mpsc channels as links — demonstrating that the protocol is genuinely
+//! asynchronous: no barriers, nodes fire purely on message arrival, in
+//! whatever order the scheduler produces. (tokio is unavailable offline;
+//! std::thread + channels express the same thing for the network sizes in
+//! the paper.)
+//!
+//! Each node thread knows only its local state (φ rows, measured `D'` on
+//! out-links, `C'`, `w`, `a_m`) — mirroring what a physical device could
+//! measure — and terminates once it has computed and broadcast both of its
+//! marginals for every task.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread;
+
+use crate::model::flows::FlowState;
+use crate::model::network::Network;
+use crate::model::strategy::Strategy;
+
+/// Message between node threads: (task, stage, from, value).
+/// stage false = result marginal (stage 1), true = data marginal (stage 2).
+#[derive(Clone, Copy, Debug)]
+struct Wire {
+    task: usize,
+    stage2: bool,
+    from: usize,
+    value: f64,
+}
+
+/// Distributed marginals computed by the actor deployment.
+#[derive(Clone, Debug)]
+pub struct ActorResult {
+    pub dt_plus: Vec<Vec<f64>>,
+    pub dt_r: Vec<Vec<f64>>,
+}
+
+/// Run the two-stage broadcast with one thread per node.
+pub fn run_actor_broadcast(net: &Network, phi: &Strategy, flows: &FlowState) -> ActorResult {
+    let n = net.n();
+    let s_count = net.s();
+    let g = &net.graph;
+
+    // Locally-measurable quantities, sliced per node.
+    let d_link: Vec<f64> = (0..net.e())
+        .map(|e| net.link_cost[e].deriv(flows.link_flow[e]))
+        .collect();
+    let c_node: Vec<f64> = (0..n)
+        .map(|i| net.comp_cost[i].deriv(flows.workload[i]))
+        .collect();
+
+    // Channels: one inbox per node; senders cloned per in-neighbor.
+    let mut inboxes: Vec<Option<Receiver<Wire>>> = Vec::with_capacity(n);
+    let mut senders: Vec<Sender<Wire>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        inboxes.push(Some(rx));
+    }
+    // results flow back over a dedicated channel
+    let (result_tx, result_rx) = channel::<(usize, Vec<f64>, Vec<f64>)>();
+
+    let mut handles = Vec::with_capacity(n);
+    for i in 0..n {
+        let rx = inboxes[i].take().unwrap();
+        let result_tx = result_tx.clone();
+        // per-node local knowledge (cloned snapshots)
+        let out_edges: Vec<(usize, usize)> = g
+            .out_edge_ids(i)
+            .iter()
+            .map(|&eid| (eid, g.edge(eid).dst))
+            .collect();
+        let in_neighbors: Vec<usize> = g.in_neighbors(i).collect();
+        let up_senders: Vec<Sender<Wire>> =
+            in_neighbors.iter().map(|&j| senders[j].clone()).collect();
+        let phi_data: Vec<Vec<f64>> = (0..s_count).map(|s| phi.data[s][i].clone()).collect();
+        let phi_result: Vec<Vec<f64>> =
+            (0..s_count).map(|s| phi.result[s][i].clone()).collect();
+        let d_out: Vec<f64> = out_edges.iter().map(|&(eid, _)| d_link[eid]).collect();
+        let c_i = c_node[i];
+        let w_i: Vec<f64> = (0..s_count).map(|s| net.w_of(i, s)).collect();
+        let a_s: Vec<f64> = (0..s_count).map(|s| net.a_of(s)).collect();
+        let dests: Vec<usize> = net.tasks.iter().map(|t| t.dest).collect();
+
+        handles.push(thread::spawn(move || {
+            let deg = out_edges.len();
+            let mut inbox1: Vec<Vec<Option<f64>>> = vec![vec![None; deg]; s_count];
+            let mut inbox2: Vec<Vec<Option<f64>>> = vec![vec![None; deg]; s_count];
+            let mut my_dt_plus: Vec<Option<f64>> = vec![None; s_count];
+            let mut my_dt_r: Vec<Option<f64>> = vec![None; s_count];
+
+            let broadcast = |task: usize, stage2: bool, value: f64| {
+                for tx in &up_senders {
+                    // a receiver hanging up just means that node finished
+                    let _ = tx.send(Wire {
+                        task,
+                        stage2,
+                        from: i,
+                        value,
+                    });
+                }
+            };
+
+            let stage1_ready = |s: usize, inbox: &[Option<f64>]| -> bool {
+                (0..deg).all(|k| phi_result[s][k] == 0.0 || inbox[k].is_some())
+            };
+            let stage2_ready = |s: usize, inbox: &[Option<f64>]| -> bool {
+                (0..deg).all(|k| phi_data[s][k + 1] == 0.0 || inbox[k].is_some())
+            };
+
+            // try to fire stages for task s; returns whether progress happened
+            macro_rules! try_fire {
+                ($s:expr) => {{
+                    let s = $s;
+                    if my_dt_plus[s].is_none() && (dests[s] == i || stage1_ready(s, &inbox1[s])) {
+                        let v = if dests[s] == i {
+                            0.0
+                        } else {
+                            (0..deg)
+                                .map(|k| {
+                                    let f = phi_result[s][k];
+                                    if f > 0.0 {
+                                        f * (d_out[k] + inbox1[s][k].unwrap())
+                                    } else {
+                                        0.0
+                                    }
+                                })
+                                .sum()
+                        };
+                        my_dt_plus[s] = Some(v);
+                        broadcast(s, false, v);
+                    }
+                    if my_dt_r[s].is_none() {
+                        if let Some(dtp) = my_dt_plus[s] {
+                            if stage2_ready(s, &inbox2[s]) {
+                                let mut v = phi_data[s][0] * (w_i[s] * c_i + a_s[s] * dtp);
+                                for k in 0..deg {
+                                    let f = phi_data[s][k + 1];
+                                    if f > 0.0 {
+                                        v += f * (d_out[k] + inbox2[s][k].unwrap());
+                                    }
+                                }
+                                my_dt_r[s] = Some(v);
+                                broadcast(s, true, v);
+                            }
+                        }
+                    }
+                }};
+            }
+
+            for s in 0..s_count {
+                try_fire!(s);
+            }
+            while my_dt_plus.iter().any(Option::is_none) || my_dt_r.iter().any(Option::is_none)
+            {
+                let msg = rx.recv().expect("protocol deadlock: inbox closed early");
+                if let Some(k) = out_edges.iter().position(|&(_, dst)| dst == msg.from) {
+                    if msg.stage2 {
+                        inbox2[msg.task][k] = Some(msg.value);
+                    } else {
+                        inbox1[msg.task][k] = Some(msg.value);
+                    }
+                }
+                try_fire!(msg.task);
+            }
+            // drain-free exit; report results to the coordinator
+            let dt_plus: Vec<f64> = my_dt_plus.into_iter().map(Option::unwrap).collect();
+            let dt_r: Vec<f64> = my_dt_r.into_iter().map(Option::unwrap).collect();
+            result_tx.send((i, dt_plus, dt_r)).unwrap();
+        }));
+    }
+    drop(result_tx);
+    drop(senders);
+
+    let mut dt_plus = vec![vec![0.0; n]; s_count];
+    let mut dt_r = vec![vec![0.0; n]; s_count];
+    for _ in 0..n {
+        let (i, p, r) = result_rx.recv().expect("node thread died");
+        for s in 0..s_count {
+            dt_plus[s][i] = p[s];
+            dt_r[s][i] = r[s];
+        }
+    }
+    for h in handles {
+        h.join().expect("node thread panicked");
+    }
+
+    ActorResult { dt_plus, dt_r }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::flows::compute_flows;
+    use crate::model::marginals::compute_marginals;
+    use crate::model::network::testnet::{diamond, line3};
+
+    fn check(net: &Network, phi: &Strategy) {
+        let flows = compute_flows(net, phi).unwrap();
+        let marg = compute_marginals(net, phi, &flows).unwrap();
+        let res = run_actor_broadcast(net, phi, &flows);
+        for s in 0..net.s() {
+            for i in 0..net.n() {
+                assert!(
+                    (res.dt_plus[s][i] - marg.dt_plus[s][i]).abs() < 1e-12,
+                    "dt_plus[{s}][{i}]"
+                );
+                assert!(
+                    (res.dt_r[s][i] - marg.dt_r[s][i]).abs() < 1e-12,
+                    "dt_r[{s}][{i}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn actor_broadcast_matches_centralized_diamond() {
+        let net = diamond(true);
+        check(&net, &Strategy::local_compute_init(&net));
+        check(&net, &Strategy::compute_at_dest_init(&net));
+    }
+
+    #[test]
+    fn actor_broadcast_matches_centralized_line3() {
+        let net = line3();
+        check(&net, &Strategy::local_compute_init(&net));
+    }
+
+    #[test]
+    fn repeated_runs_deterministic_values() {
+        // thread interleavings vary; the computed fixed point must not
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let flows = compute_flows(&net, &phi).unwrap();
+        let a = run_actor_broadcast(&net, &phi, &flows);
+        for _ in 0..5 {
+            let b = run_actor_broadcast(&net, &phi, &flows);
+            assert_eq!(a.dt_plus, b.dt_plus);
+            assert_eq!(a.dt_r, b.dt_r);
+        }
+    }
+}

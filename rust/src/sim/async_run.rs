@@ -1,0 +1,246 @@
+//! Asynchronous optimization schedules (Theorem 2) and the Fig. 5b
+//! failure-adaptation experiment driver.
+//!
+//! Theorem 2 guarantees convergence when each `(node, task, plane)` block
+//! is updated infinitely often, one at a time, in any order. This module
+//! drives [`crate::algo::Sgp::update_single_node`] under randomized
+//! schedules, and simulates the mid-run server failure of Fig. 5b: at a
+//! given iteration the failed node's links and computation are disabled,
+//! strategies are warm-start adapted ([`Strategy::adapt_to`]), and the
+//! optimizer continues — the paper's point being that SGP re-converges in
+//! few iterations.
+
+use anyhow::Result;
+
+use crate::algo::sgp::Sgp;
+use crate::model::flows::compute_flows;
+use crate::model::network::Network;
+use crate::model::strategy::Strategy;
+use crate::util::rng::Pcg;
+
+/// Trajectory of total cost under an asynchronous schedule.
+#[derive(Clone, Debug)]
+pub struct AsyncTrace {
+    /// Cost after every single-block update.
+    pub costs: Vec<f64>,
+    /// Final strategy.
+    pub phi: Strategy,
+}
+
+/// Run `updates` single-block asynchronous updates under a uniformly
+/// random (node, task, plane) schedule.
+pub fn run_async(
+    net: &Network,
+    phi0: &Strategy,
+    updates: usize,
+    seed: u64,
+) -> Result<AsyncTrace> {
+    let mut phi = phi0.clone();
+    let mut sgp = Sgp::new();
+    let mut rng = Pcg::new(seed);
+    let mut costs = Vec::with_capacity(updates);
+    for _ in 0..updates {
+        let node = rng.below(net.n());
+        let task = rng.below(net.s());
+        let plane_result = rng.chance(0.5);
+        let t = sgp.update_single_node(net, &mut phi, node, task, plane_result)?;
+        costs.push(t);
+    }
+    Ok(AsyncTrace { costs, phi })
+}
+
+/// Round-robin asynchronous schedule (deterministic coverage of all
+/// blocks): sweeps nodes × tasks × planes.
+pub fn run_async_round_robin(
+    net: &Network,
+    phi0: &Strategy,
+    sweeps: usize,
+) -> Result<AsyncTrace> {
+    let mut phi = phi0.clone();
+    let mut sgp = Sgp::new();
+    let mut costs = Vec::new();
+    for _ in 0..sweeps {
+        for task in 0..net.s() {
+            for node in 0..net.n() {
+                for plane_result in [false, true] {
+                    let t =
+                        sgp.update_single_node(net, &mut phi, node, task, plane_result)?;
+                    costs.push(t);
+                }
+            }
+        }
+    }
+    Ok(AsyncTrace { costs, phi })
+}
+
+/// The Fig. 5b experiment: run an optimizer synchronously for
+/// `fail_at` iterations, fail `dead_node` (retargeting its tasks to
+/// `fallback_dest`), warm-start adapt, and continue for `total - fail_at`
+/// iterations. Returns the cost trajectory (one entry per iteration) and
+/// the post-failure re-convergence iteration count.
+pub struct FailureRun {
+    pub costs: Vec<f64>,
+    /// Iterations after the failure until the cost is within `tol_frac` of
+    /// its post-failure steady state.
+    pub reconverge_iters: usize,
+    /// Cost immediately after adaptation (before re-optimizing).
+    pub cost_after_failure: f64,
+    /// Final steady-state cost on the degraded network.
+    pub final_cost: f64,
+}
+
+pub fn run_with_failure<O: crate::algo::Optimizer>(
+    net: &Network,
+    mut opt_factory: impl FnMut() -> O,
+    phi0: &Strategy,
+    fail_at: usize,
+    total: usize,
+    dead_node: usize,
+    fallback_dest: usize,
+    tol_frac: f64,
+) -> Result<FailureRun> {
+    assert!(fail_at < total);
+    let mut costs = Vec::with_capacity(total);
+
+    // Phase A: healthy network.
+    let mut phi = phi0.clone();
+    let mut opt = opt_factory();
+    for _ in 0..fail_at {
+        let st = opt.step(net, &mut phi)?;
+        costs.push(st.total_cost);
+    }
+
+    // Failure: rebuild network, adapt strategy, fresh optimizer state.
+    let failed = net.with_failed_node(dead_node, fallback_dest);
+    let mut phi = phi.adapt_to(net, &failed);
+    debug_assert!(phi.is_loop_free(&failed));
+    let mut cost_after_failure = compute_flows(&failed, &phi)?.total_cost;
+    if !cost_after_failure.is_finite() {
+        // The warm-started point can saturate a queue after a capacity
+        // loss; fall back to the always-safe all-local strategy on the
+        // degraded network (if even that is infinite, the failure is not
+        // survivable for this instance and we report the error).
+        let cold = Strategy::local_compute_init(&failed);
+        let cold_cost = compute_flows(&failed, &cold)?.total_cost;
+        anyhow::ensure!(
+            cold_cost.is_finite(),
+            "network cannot absorb the failure of node {dead_node}"
+        );
+        phi = cold;
+        cost_after_failure = cold_cost;
+    }
+    let mut opt = opt_factory();
+    for _ in fail_at..total {
+        let st = opt.step(&failed, &mut phi)?;
+        costs.push(st.total_cost);
+    }
+    let final_cost = *costs.last().unwrap();
+
+    // Re-convergence: first post-failure iteration within tol of final.
+    let thresh = final_cost * (1.0 + tol_frac);
+    let reconverge_iters = costs[fail_at..]
+        .iter()
+        .position(|&c| c <= thresh)
+        .map(|p| p + 1)
+        .unwrap_or(total - fail_at);
+
+    Ok(FailureRun {
+        costs,
+        reconverge_iters,
+        cost_after_failure,
+        final_cost,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{Gp, Optimizer, Sgp};
+    use crate::model::network::testnet::diamond;
+
+    #[test]
+    fn async_random_descends() {
+        let net = diamond(true);
+        let phi0 = Strategy::local_compute_init(&net);
+        let trace = run_async(&net, &phi0, 200, 7).unwrap();
+        for w in trace.costs.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "async cost increased");
+        }
+        assert!(trace.phi.is_loop_free(&net));
+        assert!(trace.phi.is_feasible(&net));
+    }
+
+    #[test]
+    fn async_matches_sync_fixed_point() {
+        let net = diamond(true);
+        let phi0 = Strategy::local_compute_init(&net);
+        let trace = run_async_round_robin(&net, &phi0, 40).unwrap();
+        let t_async = *trace.costs.last().unwrap();
+
+        let mut phi = phi0.clone();
+        let mut sgp = Sgp::new();
+        let mut t_sync = f64::INFINITY;
+        for _ in 0..120 {
+            t_sync = sgp.step(&net, &mut phi).unwrap().total_cost;
+        }
+        assert!(
+            (t_async - t_sync).abs() < 5e-3 * t_sync.max(1e-9),
+            "async {t_async} vs sync {t_sync}"
+        );
+    }
+
+    #[test]
+    fn failure_run_recovers() {
+        let net = diamond(true);
+        let phi0 = Strategy::local_compute_init(&net);
+        // fail node 1 (a relay), fall back dest to 3 (unchanged here since
+        // dest is 3 already)
+        let run = run_with_failure(
+            &net,
+            Sgp::new,
+            &phi0,
+            20,
+            60,
+            1,
+            3,
+            0.01,
+        )
+        .unwrap();
+        assert_eq!(run.costs.len(), 60);
+        assert!(run.final_cost.is_finite());
+        // degraded network must still be solvable and not cheaper than the
+        // healthy optimum
+        let healthy_opt = run.costs[19];
+        assert!(run.final_cost >= healthy_opt - 1e-9);
+        // post-failure descent is monotone
+        for w in run.costs[20..].windows(2) {
+            assert!(w[1] <= w[0] + 1e-9);
+        }
+    }
+
+    #[test]
+    fn sgp_reconverges_no_slower_than_gp() {
+        let net = diamond(true);
+        let phi0 = Strategy::local_compute_init(&net);
+        let sgp_run =
+            run_with_failure(&net, Sgp::new, &phi0, 15, 100, 1, 3, 0.01).unwrap();
+        let gp_run =
+            run_with_failure(&net, || Gp::new(1.0), &phi0, 15, 100, 1, 3, 0.01).unwrap();
+        assert!(
+            sgp_run.reconverge_iters <= gp_run.reconverge_iters + 1,
+            "SGP {} vs GP {}",
+            sgp_run.reconverge_iters,
+            gp_run.reconverge_iters
+        );
+    }
+
+    #[test]
+    fn generic_over_optimizer_trait() {
+        // run_with_failure accepts any Optimizer factory
+        let net = diamond(true);
+        let phi0 = Strategy::local_compute_init(&net);
+        let run = run_with_failure(&net, || Gp::new(0.5), &phi0, 5, 15, 2, 3, 0.05).unwrap();
+        assert_eq!(run.costs.len(), 15);
+        let _: &dyn Optimizer = &Gp::new(0.5);
+    }
+}

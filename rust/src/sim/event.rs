@@ -1,0 +1,147 @@
+//! Discrete-event engine for the distributed-protocol simulation.
+//!
+//! A minimal time-ordered event queue: events carry an opaque payload and
+//! fire in (time, sequence) order, so simultaneous events are processed in
+//! deterministic FIFO order. Used by `sim::protocol` to model broadcast
+//! message propagation with per-message latency `t_c` (§IV Complexity).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event scheduled at `time` carrying `payload`.
+#[derive(Clone, Debug)]
+pub struct Event<P> {
+    pub time: f64,
+    pub seq: u64,
+    pub payload: P,
+}
+
+impl<P> PartialEq for Event<P> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl<P> Eq for Event<P> {}
+
+impl<P> PartialOrd for Event<P> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<P> Ord for Event<P> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event queue / simulation clock.
+pub struct EventQueue<P> {
+    heap: BinaryHeap<Event<P>>,
+    now: f64,
+    seq: u64,
+    pub processed: u64,
+}
+
+impl<P> EventQueue<P> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            now: 0.0,
+            seq: 0,
+            processed: 0,
+        }
+    }
+
+    /// Current simulation time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule `payload` to fire `delay` from now.
+    pub fn schedule(&mut self, delay: f64, payload: P) {
+        assert!(delay >= 0.0, "negative delay");
+        let ev = Event {
+            time: self.now + delay,
+            seq: self.seq,
+            payload,
+        };
+        self.seq += 1;
+        self.heap.push(ev);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<Event<P>> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.time >= self.now - 1e-12);
+        self.now = ev.time;
+        self.processed += 1;
+        Some(ev)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+impl<P> Default for EventQueue<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(q.now(), 3.0);
+        assert_eq!(q.processed, 3);
+    }
+
+    #[test]
+    fn simultaneous_events_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.schedule(1.0, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances_with_nested_scheduling() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.schedule(1.0, 1);
+        let e = q.pop().unwrap();
+        assert_eq!(e.payload, 1);
+        // schedule relative to the new now
+        q.schedule(0.5, 2);
+        let e2 = q.pop().unwrap();
+        assert!((e2.time - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_delay_rejected() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        q.schedule(-1.0, ());
+    }
+}

@@ -1,0 +1,12 @@
+//! Distributed-protocol simulation: the paper's two-stage marginal
+//! broadcast (§IV) on a discrete-event engine, asynchronous update
+//! schedules (Theorem 2), mid-run failure injection (Fig. 5b), and a
+//! thread-per-node actor deployment demonstrating true asynchrony.
+
+pub mod actors;
+pub mod async_run;
+pub mod event;
+pub mod protocol;
+
+pub use async_run::{run_async, run_async_round_robin, run_with_failure, FailureRun};
+pub use protocol::{run_broadcast, ProtocolResult};

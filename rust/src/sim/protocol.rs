@@ -1,0 +1,443 @@
+//! The paper's two-stage marginal-cost broadcast (§IV "Marginal cost
+//! broadcast") as an explicit distributed message-passing protocol on the
+//! discrete-event engine.
+//!
+//! Stage 1 computes `∂T/∂t⁺` upstream from each destination; stage 2
+//! computes `∂T/∂r` upstream from the computation exits, and may start at a
+//! node only after its own stage-1 value is known (eq. 11 references
+//! `∂T/∂t⁺_i`). The max-path-length statistics `h±` ride piggyback, exactly
+//! as the paper suggests.
+//!
+//! Each node runs on purely local knowledge: its `φ` rows, its measured
+//! link marginals `D'_ij` on outgoing links, its local `C'_i`, `w_im`,
+//! `a_m`. Messages carry `(value, h)` and take `t_c` time units on the
+//! non-congestible control channel. A node *fires* once all of its active
+//! downstream dependencies have reported; firing broadcasts to all
+//! in-neighbors (upstream nodes need the value of every out-neighbor to
+//! build the Theorem-1 vectors `δ±`, not just of active ones).
+//!
+//! The integration test `rust/tests/protocol_parity.rs` pins this protocol
+//! bit-for-bit to the centralized `model::marginals` computation; the unit
+//! tests here check timing/complexity claims (completion ≤ 2·h̄·t_c, message
+//! count 2·|S|·|E| per iteration).
+
+use crate::model::flows::FlowState;
+use crate::model::marginals::Marginals;
+use crate::model::network::Network;
+use crate::model::strategy::Strategy;
+
+use super::event::EventQueue;
+
+/// A broadcast message for one task: either a stage-1 (`∂T/∂t⁺`) or
+/// stage-2 (`∂T/∂r`) value, from `from`, delivered to `to`.
+#[derive(Clone, Copy, Debug)]
+pub struct Message {
+    pub task: usize,
+    pub stage: Stage,
+    pub from: usize,
+    pub to: usize,
+    pub value: f64,
+    pub hops: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    ResultMarginal, // stage 1: ∂T/∂t⁺ with h⁺
+    DataMarginal,   // stage 2: ∂T/∂r with h⁻
+}
+
+/// Outcome of running the protocol for one iteration.
+#[derive(Clone, Debug)]
+pub struct ProtocolResult {
+    /// `∂T/∂t⁺` per `[task][node]` as learned distributively.
+    pub dt_plus: Vec<Vec<f64>>,
+    /// `∂T/∂r` per `[task][node]`.
+    pub dt_r: Vec<Vec<f64>>,
+    /// piggybacked `h⁺` / `h⁻`.
+    pub h_plus: Vec<Vec<usize>>,
+    pub h_minus: Vec<Vec<usize>>,
+    /// Total broadcast messages sent.
+    pub messages: u64,
+    /// Simulated completion time (all nodes informed), in `t_c` units when
+    /// `t_c = 1`.
+    pub completion_time: f64,
+}
+
+/// Per-(task,node) protocol state machine.
+struct NodeState {
+    // stage 1
+    dt_plus: Option<f64>,
+    h_plus: usize,
+    pending_stage1: usize, // active result out-neighbors not yet reported
+    stage1_inbox: Vec<Option<(f64, usize)>>, // per out-slot: (value, h)
+    // stage 2
+    dt_r: Option<f64>,
+    h_minus: usize,
+    pending_stage2: usize, // active data out-neighbors not yet reported
+    stage2_inbox: Vec<Option<(f64, usize)>>,
+}
+
+/// Run the two-stage broadcast for every task. `t_c` is the per-message
+/// latency; `flows` supplies the locally-measured quantities (each node
+/// only reads its own rows).
+pub fn run_broadcast(
+    net: &Network,
+    phi: &Strategy,
+    flows: &FlowState,
+    t_c: f64,
+) -> ProtocolResult {
+    let n = net.n();
+    let s_count = net.s();
+    let g = &net.graph;
+
+    // Locally-measured marginals: node i measures D'_ij on its out-links
+    // and C'_i at its computation unit.
+    let d_link: Vec<f64> = (0..net.e())
+        .map(|e| net.link_cost[e].deriv(flows.link_flow[e]))
+        .collect();
+    let c_node: Vec<f64> = (0..n)
+        .map(|i| net.comp_cost[i].deriv(flows.workload[i]))
+        .collect();
+
+    let mut states: Vec<Vec<NodeState>> = (0..s_count)
+        .map(|s| {
+            (0..n)
+                .map(|i| {
+                    let deg = g.out_degree(i);
+                    let active_res = (0..deg)
+                        .filter(|&k| phi.result[s][i][k] > 0.0)
+                        .count();
+                    let active_data = (0..deg)
+                        .filter(|&k| phi.data[s][i][k + 1] > 0.0)
+                        .count();
+                    NodeState {
+                        dt_plus: None,
+                        h_plus: 0,
+                        pending_stage1: active_res,
+                        stage1_inbox: vec![None; deg],
+                        dt_r: None,
+                        h_minus: 0,
+                        pending_stage2: active_data,
+                        stage2_inbox: vec![None; deg],
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut queue: EventQueue<Message> = EventQueue::new();
+    let mut messages: u64 = 0;
+
+    // A node "fires" stage 1 when its dt⁺ becomes known: broadcast to all
+    // in-neighbors, then check whether stage 2 can fire too.
+    fn fire_stage1(
+        net: &Network,
+        s: usize,
+        i: usize,
+        value: f64,
+        hops: usize,
+        queue: &mut EventQueue<Message>,
+        messages: &mut u64,
+        t_c: f64,
+    ) {
+        for j in net.graph.in_neighbors(i).collect::<Vec<_>>() {
+            queue.schedule(
+                t_c,
+                Message {
+                    task: s,
+                    stage: Stage::ResultMarginal,
+                    from: i,
+                    to: j,
+                    value,
+                    hops,
+                },
+            );
+            *messages += 1;
+        }
+    }
+
+    fn fire_stage2(
+        net: &Network,
+        s: usize,
+        i: usize,
+        value: f64,
+        hops: usize,
+        queue: &mut EventQueue<Message>,
+        messages: &mut u64,
+        t_c: f64,
+    ) {
+        for j in net.graph.in_neighbors(i).collect::<Vec<_>>() {
+            queue.schedule(
+                t_c,
+                Message {
+                    task: s,
+                    stage: Stage::DataMarginal,
+                    from: i,
+                    to: j,
+                    value,
+                    hops,
+                },
+            );
+            *messages += 1;
+        }
+    }
+
+    // Try to resolve stage 1 at (s,i); on success fire and cascade stage 2.
+    fn try_stage1(
+        net: &Network,
+        phi: &Strategy,
+        d_link: &[f64],
+        states: &mut [Vec<NodeState>],
+        s: usize,
+        i: usize,
+        queue: &mut EventQueue<Message>,
+        messages: &mut u64,
+        t_c: f64,
+    ) {
+        let st = &states[s][i];
+        if st.dt_plus.is_some() || st.pending_stage1 > 0 {
+            return;
+        }
+        let g = &net.graph;
+        let dest = net.tasks[s].dest;
+        let (value, hops) = if i == dest {
+            (0.0, 0)
+        } else {
+            let mut acc = 0.0;
+            let mut h = 0usize;
+            for (k, &eid) in g.out_edge_ids(i).iter().enumerate() {
+                let frac = phi.result[s][i][k];
+                if frac > 0.0 {
+                    let (v_j, h_j) = states[s][i].stage1_inbox[k]
+                        .expect("pending_stage1 reached 0 but inbox incomplete");
+                    acc += frac * (d_link[eid] + v_j);
+                    h = h.max(1 + h_j);
+                }
+            }
+            (acc, h)
+        };
+        states[s][i].dt_plus = Some(value);
+        states[s][i].h_plus = hops;
+        fire_stage1(net, s, i, value, hops, queue, messages, t_c);
+    }
+
+    fn try_stage2(
+        net: &Network,
+        phi: &Strategy,
+        d_link: &[f64],
+        c_node: &[f64],
+        states: &mut [Vec<NodeState>],
+        s: usize,
+        i: usize,
+        queue: &mut EventQueue<Message>,
+        messages: &mut u64,
+        t_c: f64,
+    ) {
+        let st = &states[s][i];
+        if st.dt_r.is_some() || st.pending_stage2 > 0 || st.dt_plus.is_none() {
+            return;
+        }
+        let g = &net.graph;
+        let ctype = net.tasks[s].ctype;
+        let a_m = net.a_of(s);
+        let mut acc =
+            phi.data[s][i][0] * (net.comp_weight[i][ctype] * c_node[i] + a_m * st.dt_plus.unwrap());
+        let mut h = 0usize;
+        for (k, &eid) in g.out_edge_ids(i).iter().enumerate() {
+            let frac = phi.data[s][i][k + 1];
+            if frac > 0.0 {
+                let (v_j, h_j) = states[s][i].stage2_inbox[k]
+                    .expect("pending_stage2 reached 0 but inbox incomplete");
+                acc += frac * (d_link[eid] + v_j);
+                h = h.max(1 + h_j);
+            }
+        }
+        states[s][i].dt_r = Some(acc);
+        states[s][i].h_minus = h;
+        fire_stage2(net, s, i, acc, h, queue, messages, t_c);
+    }
+
+    // Bootstrap: destinations fire stage 1; stage-2 leaves cascade from
+    // try_stage2 as soon as their stage-1 value lands.
+    for s in 0..s_count {
+        for i in 0..n {
+            try_stage1(net, phi, &d_link, &mut states, s, i, &mut queue, &mut messages, t_c);
+            try_stage2(
+                net, phi, &d_link, &c_node, &mut states, s, i, &mut queue, &mut messages, t_c,
+            );
+        }
+    }
+
+    // Event loop.
+    while let Some(ev) = queue.pop() {
+        let m = ev.payload;
+        let s = m.task;
+        let i = m.to;
+        let slot = crate::model::strategy::out_slot(&net.graph, i, m.from);
+        match m.stage {
+            Stage::ResultMarginal => {
+                if let Some(k) = slot {
+                    if states[s][i].stage1_inbox[k].is_none() {
+                        states[s][i].stage1_inbox[k] = Some((m.value, m.hops));
+                        if phi.result[s][i][k] > 0.0 {
+                            states[s][i].pending_stage1 -= 1;
+                        }
+                    }
+                }
+                try_stage1(net, phi, &d_link, &mut states, s, i, &mut queue, &mut messages, t_c);
+                try_stage2(
+                    net, phi, &d_link, &c_node, &mut states, s, i, &mut queue, &mut messages,
+                    t_c,
+                );
+            }
+            Stage::DataMarginal => {
+                if let Some(k) = slot {
+                    if states[s][i].stage2_inbox[k].is_none() {
+                        states[s][i].stage2_inbox[k] = Some((m.value, m.hops));
+                        if phi.data[s][i][k + 1] > 0.0 {
+                            states[s][i].pending_stage2 -= 1;
+                        }
+                    }
+                }
+                try_stage2(
+                    net, phi, &d_link, &c_node, &mut states, s, i, &mut queue, &mut messages,
+                    t_c,
+                );
+            }
+        }
+    }
+
+    let completion_time = queue.now();
+    let mut dt_plus = vec![vec![0.0; n]; s_count];
+    let mut dt_r = vec![vec![0.0; n]; s_count];
+    let mut h_plus = vec![vec![0usize; n]; s_count];
+    let mut h_minus = vec![vec![0usize; n]; s_count];
+    for s in 0..s_count {
+        for i in 0..n {
+            dt_plus[s][i] = states[s][i]
+                .dt_plus
+                .unwrap_or_else(|| panic!("stage 1 incomplete at task {s} node {i}"));
+            dt_r[s][i] = states[s][i]
+                .dt_r
+                .unwrap_or_else(|| panic!("stage 2 incomplete at task {s} node {i}"));
+            h_plus[s][i] = states[s][i].h_plus;
+            h_minus[s][i] = states[s][i].h_minus;
+        }
+    }
+
+    ProtocolResult {
+        dt_plus,
+        dt_r,
+        h_plus,
+        h_minus,
+        messages,
+        completion_time,
+    }
+}
+
+impl ProtocolResult {
+    /// Max absolute deviation from a centralized marginal computation.
+    pub fn max_deviation(&self, marg: &Marginals) -> f64 {
+        let mut worst = 0.0f64;
+        for (a_t, b_t) in self.dt_plus.iter().zip(&marg.dt_plus) {
+            for (a, b) in a_t.iter().zip(b_t) {
+                worst = worst.max((a - b).abs());
+            }
+        }
+        for (a_t, b_t) in self.dt_r.iter().zip(&marg.dt_r) {
+            for (a, b) in a_t.iter().zip(b_t) {
+                worst = worst.max((a - b).abs());
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::flows::compute_flows;
+    use crate::model::marginals::compute_marginals;
+    use crate::model::network::testnet::{diamond, line3};
+
+    #[test]
+    fn matches_centralized_on_diamond() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let flows = compute_flows(&net, &phi).unwrap();
+        let marg = compute_marginals(&net, &phi, &flows).unwrap();
+        let res = run_broadcast(&net, &phi, &flows, 1.0);
+        assert!(
+            res.max_deviation(&marg) < 1e-12,
+            "deviation {}",
+            res.max_deviation(&marg)
+        );
+        assert_eq!(res.h_plus, marg.h_plus);
+        assert_eq!(res.h_minus, marg.h_minus);
+    }
+
+    #[test]
+    fn matches_centralized_on_line3() {
+        let net = line3();
+        let phi = Strategy::local_compute_init(&net);
+        let flows = compute_flows(&net, &phi).unwrap();
+        let marg = compute_marginals(&net, &phi, &flows).unwrap();
+        let res = run_broadcast(&net, &phi, &flows, 0.5);
+        assert!(res.max_deviation(&marg) < 1e-12);
+    }
+
+    #[test]
+    fn message_count_bound() {
+        // ≤ 2 messages per (edge, task): one per stage, each node fires
+        // each stage exactly once over all its in-edges.
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let flows = compute_flows(&net, &phi).unwrap();
+        let res = run_broadcast(&net, &phi, &flows, 1.0);
+        let bound = 2 * net.s() as u64 * net.e() as u64;
+        assert!(
+            res.messages <= bound,
+            "{} messages > bound {bound}",
+            res.messages
+        );
+        assert!(res.messages > 0);
+    }
+
+    #[test]
+    fn completion_time_bound() {
+        // Completion ≤ 2·(h̄+1)·t_c with h̄ the max hop count (paper §IV:
+        // 2·h̄·t_c for the waves; +2 for the final informational broadcasts
+        // of sink nodes).
+        let net = diamond(true);
+        let phi = Strategy::compute_at_dest_init(&net);
+        let flows = compute_flows(&net, &phi).unwrap();
+        let t_c = 1.0;
+        let res = run_broadcast(&net, &phi, &flows, t_c);
+        let marg = compute_marginals(&net, &phi, &flows).unwrap();
+        let h_bar = marg
+            .h_plus
+            .iter()
+            .chain(marg.h_minus.iter())
+            .flat_map(|v| v.iter())
+            .cloned()
+            .max()
+            .unwrap_or(0) as f64;
+        assert!(
+            res.completion_time <= 2.0 * (h_bar + 1.0) * t_c + 1e-9,
+            "completion {} vs bound {}",
+            res.completion_time,
+            2.0 * (h_bar + 1.0) * t_c
+        );
+    }
+
+    #[test]
+    fn scales_latency_with_tc() {
+        let net = line3();
+        let phi = Strategy::local_compute_init(&net);
+        let flows = compute_flows(&net, &phi).unwrap();
+        let r1 = run_broadcast(&net, &phi, &flows, 1.0);
+        let r2 = run_broadcast(&net, &phi, &flows, 2.0);
+        assert!((r2.completion_time - 2.0 * r1.completion_time).abs() < 1e-9);
+        assert_eq!(r1.messages, r2.messages);
+    }
+}

@@ -1,0 +1,78 @@
+//! Leveled stderr logging, controlled by `CECFLOW_LOG` (error|warn|info|debug).
+//!
+//! The `log` crate facade plus an impl would be an option, but a 60-line
+//! in-tree logger keeps the offline dependency set minimal and gives the
+//! benches deterministic, easily-silenced output.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn max_level() -> u8 {
+    let cur = MAX_LEVEL.load(Ordering::Relaxed);
+    if cur != u8::MAX {
+        return cur;
+    }
+    let lvl = match std::env::var("CECFLOW_LOG").as_deref() {
+        Ok("error") => Level::Error as u8,
+        Ok("warn") => Level::Warn as u8,
+        Ok("debug") => Level::Debug as u8,
+        Ok("info") => Level::Info as u8,
+        _ => Level::Warn as u8, // default: quiet enough for benches
+    };
+    MAX_LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Override the log level programmatically (tests, CLI `--verbose`).
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= max_level()
+}
+
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[cecflow {tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_error { ($($t:tt)*) => { $crate::util::logsys::log($crate::util::logsys::Level::Error, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($t:tt)*) => { $crate::util::logsys::log($crate::util::logsys::Level::Warn, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($t:tt)*) => { $crate::util::logsys::log($crate::util::logsys::Level::Info, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($t:tt)*) => { $crate::util::logsys::log($crate::util::logsys::Level::Debug, format_args!($($t)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+    }
+}

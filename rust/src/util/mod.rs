@@ -1,0 +1,10 @@
+//! Self-contained utility substrates (the offline build has no access to
+//! rand / serde / criterion / log, so the pieces we need are in-tree).
+
+pub mod json;
+pub mod logsys;
+pub mod rng;
+pub mod stats;
+pub mod svg;
+pub mod table;
+pub mod timer;

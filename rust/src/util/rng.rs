@@ -1,0 +1,290 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! All stochastic elements of the reproduction (topology generation, task
+//! placement, rate/capacity draws per Table II of the paper) flow through
+//! this module so that every experiment is reproducible bit-for-bit from a
+//! `u64` seed. The generator is PCG-XSH-RR 64/32 (O'Neill 2014), chosen for
+//! its tiny state, solid statistical quality and trivial portability — the
+//! `rand` crate family is unavailable in this offline build.
+
+/// PCG-XSH-RR 64/32 pseudo-random generator.
+///
+/// 64-bit LCG state advanced with the standard PCG multiplier, output
+/// permuted with an xorshift-high + random rotate to 32 bits. Two `next_u32`
+/// draws are combined for `next_u64`.
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg {
+    /// Create a generator from a seed and a stream selector.
+    ///
+    /// Distinct `stream` values yield statistically independent sequences
+    /// for the same `seed` (the LCG increment must be odd; that is forced
+    /// internally).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg {
+            state: 0,
+            inc: (stream << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Create a generator from a bare seed (stream 0xda3e39cb94b95bdb).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Derive a child generator for an independent sub-experiment.
+    ///
+    /// Used to give each scenario/task/trial its own stream so that adding
+    /// draws in one place never perturbs another (important when comparing
+    /// algorithms on *identical* random instances).
+    pub fn fork(&mut self, tag: u64) -> Pcg {
+        let seed = self.next_u64() ^ tag.wrapping_mul(0x9e3779b97f4a7c15);
+        Pcg::with_stream(seed, tag.wrapping_add(0x5851f42d4c957f2d))
+    }
+
+    /// Next raw 32-bit output.
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next raw 64-bit output (two 32-bit halves).
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of precision.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        debug_assert!(hi >= lo);
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n) by Lemire's multiply-shift with rejection.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0) is undefined");
+        let n = n as u64;
+        // Rejection sampling to remove modulo bias.
+        let zone = u64::MAX - (u64::MAX - n + 1) % n;
+        loop {
+            let v = self.next_u64();
+            if v <= zone {
+                return (v % n) as usize;
+            }
+        }
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn int_range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Bernoulli draw with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential random variable with the given mean.
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        assert!(mean > 0.0);
+        // Inverse CDF; guard the log argument away from 0.
+        let u = 1.0 - self.f64();
+        -mean * u.ln()
+    }
+
+    /// Exponential with given mean, truncated (by re-draw) to [lo, hi].
+    ///
+    /// This matches the paper's draw of the result-size ratios
+    /// `a_m ~ Exp(0.5)` truncated into `[0.1, 5]` (§V).
+    pub fn exponential_trunc(&mut self, mean: f64, lo: f64, hi: f64) -> f64 {
+        assert!(lo < hi);
+        for _ in 0..10_000 {
+            let v = self.exponential(mean);
+            if v >= lo && v <= hi {
+                return v;
+            }
+        }
+        // Probability of reaching here is astronomically small for the
+        // parameter ranges we use; clamp as a safe fallback.
+        lo.max(mean.min(hi))
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose `k` distinct indices out of `n` (k <= n), in random order.
+    pub fn choose_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot choose {k} distinct out of {n}");
+        // Partial Fisher–Yates over an index vector.
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Pick one element of a slice uniformly at random.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg::new(42);
+        let mut b = Pcg::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg::new(1);
+        let mut b = Pcg::new(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "seeds should decorrelate, {same} collisions");
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut a = Pcg::with_stream(7, 1);
+        let mut b = Pcg::with_stream(7, 2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg::new(3);
+        for _ in 0..10_000 {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut rng = Pcg::new(4);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_unbiased_small_range() {
+        let mut rng = Pcg::new(5);
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[rng.below(7)] += 1;
+        }
+        for &c in &counts {
+            let expect = n / 7;
+            assert!(
+                (c as i64 - expect as i64).abs() < (expect as i64) / 10,
+                "count {c} vs expected {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn int_range_inclusive_bounds_hit() {
+        let mut rng = Pcg::new(6);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..10_000 {
+            let v = rng.int_range(3, 5);
+            assert!((3..=5).contains(&v));
+            lo_seen |= v == 3;
+            hi_seen |= v == 5;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg::new(7);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| rng.exponential(0.5)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn exponential_trunc_respects_bounds() {
+        let mut rng = Pcg::new(8);
+        for _ in 0..10_000 {
+            let v = rng.exponential_trunc(0.5, 0.1, 5.0);
+            assert!((0.1..=5.0).contains(&v), "v={v}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg::new(9);
+        let mut xs: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn choose_distinct_no_duplicates() {
+        let mut rng = Pcg::new(10);
+        for _ in 0..100 {
+            let picks = rng.choose_distinct(20, 8);
+            assert_eq!(picks.len(), 8);
+            let mut s = picks.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 8, "duplicates in {picks:?}");
+            assert!(picks.iter().all(|&p| p < 20));
+        }
+    }
+
+    #[test]
+    fn fork_decorrelates() {
+        let mut root = Pcg::new(11);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn chance_extremes() {
+        let mut rng = Pcg::new(12);
+        assert!((0..100).all(|_| !rng.chance(0.0)));
+        assert!((0..100).all(|_| rng.chance(1.0)));
+    }
+}

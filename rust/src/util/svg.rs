@@ -1,0 +1,304 @@
+//! Minimal SVG chart rendering — the benches emit real figure files
+//! (`results/*.svg`) alongside CSV/JSON, so the paper's plots can be
+//! compared visually without any plotting toolchain.
+//!
+//! Two chart types cover everything in §V: line charts (Fig. 5b/5c/5d
+//! trajectories and sweeps) and grouped horizontal bars (Fig. 4).
+
+use std::fmt::Write as _;
+
+const PALETTE: &[&str] = &[
+    "#1f77b4", "#d62728", "#2ca02c", "#ff7f0e", "#9467bd", "#8c564b",
+];
+
+/// A named line for [`line_chart`].
+pub struct Line<'a> {
+    pub label: &'a str,
+    pub points: Vec<(f64, f64)>,
+}
+
+fn nice_num(x: f64) -> String {
+    if x == 0.0 {
+        return "0".into();
+    }
+    let a = x.abs();
+    if a >= 1000.0 {
+        format!("{x:.0}")
+    } else if a >= 1.0 {
+        format!("{x:.1}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+/// Render a line chart. Non-finite y values are dropped from their line.
+/// Returns the SVG document as a string.
+pub fn line_chart(title: &str, x_label: &str, y_label: &str, lines: &[Line]) -> String {
+    let (w, h) = (640.0, 400.0);
+    let (ml, mr, mt, mb) = (70.0, 20.0, 40.0, 50.0);
+    let pw = w - ml - mr;
+    let ph = h - mt - mb;
+
+    let finite: Vec<(f64, f64)> = lines
+        .iter()
+        .flat_map(|l| l.points.iter().cloned())
+        .filter(|p| p.0.is_finite() && p.1.is_finite())
+        .collect();
+    let (mut x0, mut x1, mut y0, mut y1) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    for &(x, y) in &finite {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if !x0.is_finite() || x0 == x1 {
+        x0 = 0.0;
+        x1 = 1.0;
+    }
+    if !y0.is_finite() || y0 == y1 {
+        y0 = 0.0;
+        y1 = y0 + 1.0;
+    }
+    // pad the y range a little
+    let ypad = 0.05 * (y1 - y0);
+    let (y0, y1) = (y0 - ypad, y1 + ypad);
+
+    let sx = move |x: f64| ml + (x - x0) / (x1 - x0) * pw;
+    let sy = move |y: f64| mt + (1.0 - (y - y0) / (y1 - y0)) * ph;
+
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" viewBox="0 0 {w} {h}">"#
+    );
+    let _ = write!(
+        s,
+        r#"<rect width="{w}" height="{h}" fill="white"/><text x="{}" y="24" text-anchor="middle" font-family="sans-serif" font-size="16">{}</text>"#,
+        w / 2.0,
+        xml_escape(title)
+    );
+    // axes + grid + ticks
+    for k in 0..=4 {
+        let fy = y0 + (y1 - y0) * k as f64 / 4.0;
+        let py = sy(fy);
+        let _ = write!(
+            s,
+            r##"<line x1="{ml}" y1="{py}" x2="{}" y2="{py}" stroke="#ddd"/><text x="{}" y="{}" text-anchor="end" font-family="sans-serif" font-size="11">{}</text>"##,
+            w - mr,
+            ml - 6.0,
+            py + 4.0,
+            nice_num(fy)
+        );
+        let fx = x0 + (x1 - x0) * k as f64 / 4.0;
+        let px = sx(fx);
+        let _ = write!(
+            s,
+            r#"<text x="{px}" y="{}" text-anchor="middle" font-family="sans-serif" font-size="11">{}</text>"#,
+            h - mb + 18.0,
+            nice_num(fx)
+        );
+    }
+    let _ = write!(
+        s,
+        r#"<line x1="{ml}" y1="{mt}" x2="{ml}" y2="{}" stroke="black"/><line x1="{ml}" y1="{0}" x2="{1}" y2="{0}" stroke="black"/>"#,
+        h - mb,
+        w - mr,
+    );
+    // axis labels
+    let _ = write!(
+        s,
+        r#"<text x="{}" y="{}" text-anchor="middle" font-family="sans-serif" font-size="12">{}</text>"#,
+        ml + pw / 2.0,
+        h - 12.0,
+        xml_escape(x_label)
+    );
+    let _ = write!(
+        s,
+        r#"<text x="16" y="{}" text-anchor="middle" font-family="sans-serif" font-size="12" transform="rotate(-90 16 {})">{}</text>"#,
+        mt + ph / 2.0,
+        mt + ph / 2.0,
+        xml_escape(y_label)
+    );
+    // lines + legend
+    for (li, line) in lines.iter().enumerate() {
+        let color = PALETTE[li % PALETTE.len()];
+        let pts: Vec<String> = line
+            .points
+            .iter()
+            .filter(|p| p.0.is_finite() && p.1.is_finite())
+            .map(|&(x, y)| format!("{:.1},{:.1}", sx(x), sy(y)))
+            .collect();
+        if pts.len() >= 2 {
+            let _ = write!(
+                s,
+                r#"<polyline points="{}" fill="none" stroke="{color}" stroke-width="2"/>"#,
+                pts.join(" ")
+            );
+        }
+        let ly = mt + 16.0 * li as f64;
+        let _ = write!(
+            s,
+            r#"<line x1="{}" y1="{ly}" x2="{}" y2="{ly}" stroke="{color}" stroke-width="3"/><text x="{}" y="{}" font-family="sans-serif" font-size="11">{}</text>"#,
+            w - mr - 120.0,
+            w - mr - 95.0,
+            w - mr - 90.0,
+            ly + 4.0,
+            xml_escape(line.label)
+        );
+    }
+    s.push_str("</svg>");
+    s
+}
+
+/// Render grouped horizontal bars (Fig. 4 style): one group per scenario,
+/// one bar per algorithm, values normalized within the group. Infinite
+/// values render as full-width hatched bars labelled "saturated".
+pub fn grouped_bars(
+    title: &str,
+    groups: &[String],
+    series: &[String],
+    // values[group][series]
+    values: &[Vec<f64>],
+) -> String {
+    let bar_h = 16.0;
+    let group_gap = 18.0;
+    let group_h = series.len() as f64 * bar_h + group_gap;
+    let (ml, mr, mt, mb) = (110.0, 90.0, 50.0, 20.0);
+    let pw = 420.0;
+    let w = ml + pw + mr;
+    let h = mt + groups.len() as f64 * group_h + mb;
+
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" viewBox="0 0 {w} {h}">"#
+    );
+    let _ = write!(
+        s,
+        r#"<rect width="{w}" height="{h}" fill="white"/><text x="{}" y="28" text-anchor="middle" font-family="sans-serif" font-size="16">{}</text>"#,
+        w / 2.0,
+        xml_escape(title)
+    );
+    for (gi, gname) in groups.iter().enumerate() {
+        let gy = mt + gi as f64 * group_h;
+        let worst = values[gi]
+            .iter()
+            .cloned()
+            .filter(|v| v.is_finite())
+            .fold(0.0f64, f64::max);
+        let _ = write!(
+            s,
+            r#"<text x="{}" y="{}" text-anchor="end" font-family="sans-serif" font-size="12">{}</text>"#,
+            ml - 8.0,
+            gy + group_h / 2.0 - group_gap / 2.0,
+            xml_escape(gname)
+        );
+        for (si, sname) in series.iter().enumerate() {
+            let v = values[gi][si];
+            let y = gy + si as f64 * bar_h;
+            let color = PALETTE[si % PALETTE.len()];
+            let (bw, label) = if v.is_finite() && worst > 0.0 {
+                (pw * (v / worst).min(1.0), format!("{:.2}", v / worst))
+            } else {
+                (pw, "saturated".to_string())
+            };
+            let _ = write!(
+                s,
+                r#"<rect x="{ml}" y="{y}" width="{bw:.1}" height="{}" fill="{color}" fill-opacity="{}"/><text x="{}" y="{}" font-family="sans-serif" font-size="10">{} {}</text>"#,
+                bar_h - 3.0,
+                if v.is_finite() { 0.85 } else { 0.35 },
+                ml + bw + 5.0,
+                y + bar_h - 6.0,
+                xml_escape(sname),
+                label
+            );
+        }
+    }
+    s.push_str("</svg>");
+    s
+}
+
+fn xml_escape(s: &str) -> String {
+    s.replace('&', "&amp;")
+        .replace('<', "&lt;")
+        .replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chart_well_formed() {
+        let svg = line_chart(
+            "t",
+            "x",
+            "y",
+            &[
+                Line {
+                    label: "a",
+                    points: vec![(0.0, 1.0), (1.0, 2.0), (2.0, 1.5)],
+                },
+                Line {
+                    label: "b",
+                    points: vec![(0.0, 3.0), (2.0, 0.5)],
+                },
+            ],
+        );
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>"));
+        assert_eq!(svg.matches("<polyline").count(), 2);
+        assert!(svg.contains(">a</text>"));
+    }
+
+    #[test]
+    fn line_chart_drops_nonfinite() {
+        let svg = line_chart(
+            "t",
+            "x",
+            "y",
+            &[Line {
+                label: "a",
+                points: vec![(0.0, 1.0), (1.0, f64::INFINITY), (2.0, 2.0)],
+            }],
+        );
+        // still renders the finite points as one polyline
+        assert_eq!(svg.matches("<polyline").count(), 1);
+        assert!(!svg.contains("inf"));
+    }
+
+    #[test]
+    fn line_chart_degenerate_ranges() {
+        // single point / constant series must not divide by zero
+        let svg = line_chart(
+            "t",
+            "x",
+            "y",
+            &[Line {
+                label: "c",
+                points: vec![(1.0, 5.0)],
+            }],
+        );
+        assert!(svg.contains("</svg>"));
+        assert!(!svg.contains("NaN"));
+    }
+
+    #[test]
+    fn bars_normalize_and_mark_saturation() {
+        let svg = grouped_bars(
+            "fig",
+            &["s1".into()],
+            &["sgp".into(), "lpr".into()],
+            &[vec![1.0, f64::INFINITY]],
+        );
+        assert!(svg.contains("saturated"));
+        assert!(svg.contains("sgp 1.00") || svg.contains("sgp 0."));
+        assert!(!svg.contains("NaN"));
+    }
+
+    #[test]
+    fn escaping() {
+        let svg = line_chart("a<b&c", "x", "y", &[]);
+        assert!(svg.contains("a&lt;b&amp;c"));
+    }
+}

@@ -1,0 +1,163 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `bench_fn` runs a closure under a warmup + timed-batch protocol and
+//! returns per-iteration timing statistics; `BenchReport` collects rows and
+//! renders them for the `benches/*.rs` binaries (built with
+//! `harness = false`).
+
+use std::time::{Duration, Instant};
+
+use super::stats::{summarize, Summary};
+
+/// Result of measuring one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-iteration wall time statistics, in seconds.
+    pub per_iter: Summary,
+    /// Total iterations timed (across all batches).
+    pub iters: u64,
+}
+
+impl Measurement {
+    pub fn mean_ns(&self) -> f64 {
+        self.per_iter.mean * 1e9
+    }
+}
+
+/// Human-friendly duration formatting for reports.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Measure `f`, auto-calibrating the batch size so each timed batch lasts
+/// at least ~2 ms. `budget` caps total measurement time.
+pub fn bench_fn<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Measurement {
+    // Warm up + calibrate batch size.
+    let mut batch: u64 = 1;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed();
+        if dt >= Duration::from_millis(2) || batch >= 1 << 20 {
+            break;
+        }
+        batch *= 4;
+    }
+
+    let mut samples = Vec::new();
+    let mut iters = 0u64;
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64() / batch as f64;
+        samples.push(dt);
+        iters += batch;
+        if samples.len() >= 200 {
+            break;
+        }
+    }
+    Measurement {
+        name: name.to_string(),
+        per_iter: summarize(&samples),
+        iters,
+    }
+}
+
+/// Collects measurements / metric rows and renders a plain-text report.
+#[derive(Default)]
+pub struct BenchReport {
+    title: String,
+    rows: Vec<(String, String)>,
+}
+
+impl BenchReport {
+    pub fn new(title: &str) -> Self {
+        BenchReport {
+            title: title.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn add_measurement(&mut self, m: &Measurement) {
+        self.rows.push((
+            m.name.clone(),
+            format!(
+                "{} / iter (±{}, n={})",
+                fmt_duration(m.per_iter.mean),
+                fmt_duration(m.per_iter.std),
+                m.per_iter.n
+            ),
+        ));
+    }
+
+    pub fn add_row(&mut self, key: &str, value: String) {
+        self.rows.push((key.to_string(), value));
+    }
+
+    pub fn render(&self) -> String {
+        let width = self
+            .rows
+            .iter()
+            .map(|(k, _)| k.len())
+            .max()
+            .unwrap_or(0)
+            .max(self.title.len());
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        for (k, v) in &self.rows {
+            out.push_str(&format!("{k:<width$}  {v}\n"));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let m = bench_fn("noop-ish", Duration::from_millis(20), || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(m.per_iter.mean > 0.0);
+        assert!(m.iters > 0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(5e-9).contains("ns"));
+        assert!(fmt_duration(5e-6).contains("µs"));
+        assert!(fmt_duration(5e-3).contains("ms"));
+        assert!(fmt_duration(5.0).contains(" s"));
+    }
+
+    #[test]
+    fn report_renders_rows() {
+        let mut r = BenchReport::new("t");
+        r.add_row("alpha", "1".into());
+        r.add_row("beta", "2".into());
+        let text = r.render();
+        assert!(text.contains("alpha"));
+        assert!(text.contains("== t =="));
+    }
+}

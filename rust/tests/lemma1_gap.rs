@@ -1,0 +1,135 @@
+//! Fig. 3 of the paper: a strategy satisfying the Lemma-1 (KKT) necessary
+//! conditions that is **not** globally optimal — the gap that motivates
+//! Theorem 1's augmented sufficient conditions.
+//!
+//! Construction (mirroring the paper's 4-node example): the single task
+//! `(dest=3, type 0)` has data only at node 0. Node 1 carries zero traffic,
+//! so the Lemma-1 conditions hold at node 1 *vacuously* no matter where it
+//! points — and by pointing it at an expensive detour, node 0 is deterred
+//! from routing through it even though the path through node 1 is part of
+//! the true optimum. Theorem 1's δ-conditions (which drop the `t_i`
+//! factor) detect the misconfiguration; SGP escapes it.
+
+use cecflow::algo::{Optimizer, Sgp};
+use cecflow::graph::DiGraph;
+use cecflow::model::{
+    compute_flows, compute_marginals, lemma1_residual, theorem1_residual, CostFn, Network,
+    Strategy, Task,
+};
+
+/// Node layout: 0 (source) → {1 (relay), 2 (expensive relay)} → 3 (dest),
+/// plus a direct expensive edge 0 → 3.
+fn gap_network() -> Network {
+    // directed edges only where needed to pin the example
+    let graph = DiGraph::new(
+        4,
+        &[
+            (0, 1), // cheap first hop
+            (0, 2), // expensive first hop
+            (1, 3), // cheap second hop
+            (2, 3), // cheap second hop
+            (1, 2), // detour node 1 -> 2 (the "wrong" pointer)
+            (3, 0), // return edges so the graph is strongly connected
+            (3, 1),
+            (3, 2),
+        ],
+    );
+    let e = graph.edge_count();
+    let mut link_cost = vec![CostFn::Linear { unit: 1.0 }; e];
+    link_cost[graph.edge_id(0, 2).unwrap()] = CostFn::Linear { unit: 10.0 };
+    link_cost[graph.edge_id(1, 2).unwrap()] = CostFn::Linear { unit: 10.0 };
+    // direct edge absent; destination computes for free-ish
+    Network {
+        graph,
+        tasks: vec![Task { dest: 3, ctype: 0 }],
+        num_types: 1,
+        input_rate: vec![vec![1.0, 0.0, 0.0, 0.0]],
+        result_ratio: vec![0.5],
+        comp_weight: vec![vec![1.0]; 4],
+        link_cost,
+        comp_cost: vec![
+            // Computing anywhere but the destination must look worse than
+            // the expensive detour (unit 12 > 10 + downstream ≈ 11.1), so
+            // the misconfigured point is a genuine KKT point.
+            CostFn::Linear { unit: 12.0 },
+            CostFn::Linear { unit: 12.0 },
+            CostFn::Linear { unit: 12.0 },
+            CostFn::Linear { unit: 0.1 }, // destination is the cheap place
+        ],
+    }
+}
+
+/// The mis-configured strategy: node 0 ships everything over the expensive
+/// edge (0,2) and node 1 (zero traffic) points its data plane at the
+/// expensive detour (1,2), making the cheap path look bad through the
+/// recursion (11).
+fn misconfigured(net: &Network) -> Strategy {
+    use cecflow::model::out_slot;
+    let mut phi = Strategy::zeroed(net);
+    let g = &net.graph;
+    // data: 0 -> 2 -> 3 -> compute at 3
+    phi.data[0][0][out_slot(g, 0, 2).unwrap() + 1] = 1.0;
+    phi.data[0][2][out_slot(g, 2, 3).unwrap() + 1] = 1.0;
+    phi.data[0][3][0] = 1.0;
+    // node 1 (zero traffic) points at the expensive detour
+    phi.data[0][1][out_slot(g, 1, 2).unwrap() + 1] = 1.0;
+    // result planes: everything toward 3 (dest sinks results)
+    phi.result[0][0][out_slot(g, 0, 1).unwrap()] = 1.0;
+    phi.result[0][1][out_slot(g, 1, 3).unwrap()] = 1.0;
+    phi.result[0][2][out_slot(g, 2, 3).unwrap()] = 1.0;
+    phi
+}
+
+#[test]
+fn lemma1_holds_but_not_theorem1() {
+    let net = gap_network();
+    let phi = misconfigured(&net);
+    assert!(phi.is_feasible(&net), "{:?}", phi.feasibility_violations(&net));
+    assert!(phi.is_loop_free(&net));
+
+    let flows = compute_flows(&net, &phi).unwrap();
+    let marg = compute_marginals(&net, &phi, &flows).unwrap();
+
+    // Lemma-1 residual ~ 0: every *loaded* node already uses its
+    // min-∂T/∂φ slots; node 1 satisfies KKT vacuously (t_1 = 0).
+    let l1 = lemma1_residual(&net, &phi, &flows, &marg);
+    assert!(l1 < 1e-9, "Lemma-1 residual should vanish, got {l1}");
+
+    // ...but the Theorem-1 conditions are violated (node 1's δ exposes the
+    // detour, and node 0's δ exposes the expensive first hop).
+    let t1 = theorem1_residual(&net, &phi, &marg);
+    assert!(t1 > 1e-3, "Theorem-1 residual should flag the gap, got {t1}");
+}
+
+#[test]
+fn misconfiguration_is_suboptimal_and_sgp_escapes() {
+    let net = gap_network();
+    let phi_bad = misconfigured(&net);
+    let t_bad = compute_flows(&net, &phi_bad).unwrap().total_cost;
+
+    let mut phi = phi_bad.clone();
+    let mut sgp = Sgp::new();
+    for _ in 0..60 {
+        sgp.step(&net, &mut phi).unwrap();
+    }
+    let flows = compute_flows(&net, &phi).unwrap();
+    let marg = compute_marginals(&net, &phi, &flows).unwrap();
+
+    assert!(
+        flows.total_cost < t_bad * 0.9,
+        "SGP failed to escape: {} vs {}",
+        flows.total_cost,
+        t_bad
+    );
+    assert!(
+        theorem1_residual(&net, &phi, &marg) < 1e-6,
+        "SGP did not reach a Theorem-1 point"
+    );
+    // the optimum routes data over the cheap path 0 -> 1 -> 3
+    let e01 = net.graph.edge_id(0, 1).unwrap();
+    assert!(
+        flows.f_minus[0][e01] > 0.9,
+        "cheap path unused: f(0,1) = {}",
+        flows.f_minus[0][e01]
+    );
+}

@@ -1,0 +1,372 @@
+//! Randomized property tests over the flow model and the optimizer
+//! (proptest is unavailable offline; this is a hand-rolled
+//! generate-and-check harness over seeded PCG streams — failures print
+//! the offending seed so any case replays deterministically).
+
+use cecflow::algo::{Gp, Optimizer, Sgp};
+use cecflow::graph::algorithms::strongly_connected;
+use cecflow::graph::from_undirected;
+use cecflow::model::{
+    compute_flows, compute_marginals, theorem1_residual, CostFn, Network, Strategy, Task,
+};
+use cecflow::util::rng::Pcg;
+
+/// Random strongly-connected network with random tasks and costs.
+fn random_network(rng: &mut Pcg) -> Network {
+    let n = rng.int_range(4, 10);
+    // ring for connectivity + random chords
+    let mut links: Vec<(usize, usize)> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+    for u in 0..n {
+        for v in (u + 2)..n {
+            if rng.chance(0.3) && !(u == 0 && v == n - 1) {
+                links.push((u, v));
+            }
+        }
+    }
+    let graph = from_undirected(n, &links);
+    assert!(strongly_connected(&graph));
+
+    let num_types = rng.int_range(1, 3);
+    let s_count = rng.int_range(1, 4);
+    let tasks: Vec<Task> = (0..s_count)
+        .map(|_| Task {
+            dest: rng.below(n),
+            ctype: rng.below(num_types),
+        })
+        .collect();
+    let input_rate: Vec<Vec<f64>> = (0..s_count)
+        .map(|_| {
+            let mut r = vec![0.0; n];
+            let sources = rng.int_range(1, 3.min(n));
+            for src in rng.choose_distinct(n, sources) {
+                r[src] = rng.uniform(0.2, 1.0);
+            }
+            r
+        })
+        .collect();
+    let result_ratio: Vec<f64> = (0..num_types)
+        .map(|_| rng.exponential_trunc(0.5, 0.1, 5.0))
+        .collect();
+    let comp_weight: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..num_types).map(|_| rng.uniform(1.0, 5.0)).collect())
+        .collect();
+    let e = graph.edge_count();
+    let link_cost: Vec<CostFn> = (0..e)
+        .map(|_| {
+            if rng.chance(0.5) {
+                CostFn::Linear {
+                    unit: rng.uniform(0.1, 3.0),
+                }
+            } else {
+                CostFn::Queue {
+                    cap: rng.uniform(20.0, 60.0),
+                }
+            }
+        })
+        .collect();
+    let comp_cost: Vec<CostFn> = (0..n)
+        .map(|_| {
+            if rng.chance(0.5) {
+                CostFn::Linear {
+                    unit: rng.uniform(0.1, 3.0),
+                }
+            } else {
+                CostFn::Queue {
+                    cap: rng.uniform(30.0, 80.0),
+                }
+            }
+        })
+        .collect();
+    let net = Network {
+        graph,
+        tasks,
+        num_types,
+        input_rate,
+        result_ratio,
+        comp_weight,
+        link_cost,
+        comp_cost,
+    };
+    net.assert_valid();
+    net
+}
+
+/// Random feasible loop-free strategy: data/result fractions forward only
+/// along a random node ranking (acyclic by construction), with random
+/// local-computation splits.
+fn random_strategy(net: &Network, rng: &mut Pcg) -> Strategy {
+    let n = net.n();
+    let mut rank: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut rank);
+    let pos = {
+        let mut p = vec![0usize; n];
+        for (i, &v) in rank.iter().enumerate() {
+            p[v] = i;
+        }
+        p
+    };
+    let mut phi = Strategy::zeroed(net);
+    for s in 0..net.s() {
+        let dest = net.tasks[s].dest;
+        for i in 0..n {
+            // data plane: split between local and "forward" neighbors
+            let fwd: Vec<usize> = net
+                .graph
+                .out_edge_ids(i)
+                .iter()
+                .enumerate()
+                .filter(|(_, &eid)| pos[net.graph.edge(eid).dst] > pos[i])
+                .map(|(k, _)| k)
+                .collect();
+            let mut weights = vec![rng.uniform(0.2, 1.0)];
+            for _ in &fwd {
+                weights.push(if rng.chance(0.5) {
+                    rng.uniform(0.0, 1.0)
+                } else {
+                    0.0
+                });
+            }
+            let total: f64 = weights.iter().sum();
+            phi.data[s][i][0] = weights[0] / total;
+            for (w_idx, &k) in fwd.iter().enumerate() {
+                phi.data[s][i][k + 1] = weights[w_idx + 1] / total;
+            }
+            // result plane: forward-only split; fall back to the ranking's
+            // guarantee — if no forward neighbor exists give everything to
+            // the destination-directed SP (cannot happen for the max-rank
+            // node unless it is the destination, handled below).
+            if i == dest {
+                continue;
+            }
+            if fwd.is_empty() {
+                // route toward dest along any out-edge of minimal pos —
+                // may break rank-acyclicity, so instead recompute via SP
+                // init for this node (kept rare by the ring structure).
+                let w0: Vec<f64> = net.link_cost.iter().map(|c| c.deriv_at_zero()).collect();
+                let (_, next) = cecflow::graph::algorithms::dijkstra_to(
+                    &net.graph, dest, &w0,
+                );
+                let nxt = next[i];
+                let slot = cecflow::model::out_slot(&net.graph, i, nxt).unwrap();
+                phi.result[s][i][slot] = 1.0;
+                continue;
+            }
+            let mut rw: Vec<f64> = fwd.iter().map(|_| rng.uniform(0.1, 1.0)).collect();
+            let total: f64 = rw.iter().sum();
+            rw.iter_mut().for_each(|x| *x /= total);
+            for (w, &k) in rw.iter().zip(&fwd) {
+                phi.result[s][i][k] = *w;
+            }
+        }
+        // fix the result plane so everything reaches the destination: the
+        // rank-forward construction can strand mass at the max-rank node.
+        // Redirect rank-max non-dest nodes straight along the SP tree.
+        let w0: Vec<f64> = net.link_cost.iter().map(|c| c.deriv_at_zero()).collect();
+        let (_, next) = cecflow::graph::algorithms::dijkstra_to(&net.graph, dest, &w0);
+        for i in 0..n {
+            if i != dest && phi.result[s][i].iter().sum::<f64>() < 0.5 {
+                let slot =
+                    cecflow::model::out_slot(&net.graph, i, next[i]).unwrap();
+                phi.result[s][i] = vec![0.0; net.graph.out_degree(i)];
+                phi.result[s][i][slot] = 1.0;
+            }
+        }
+    }
+    // the SP fallback can mix rank directions; accept only loop-free draws
+    if !phi.is_loop_free(net) {
+        return Strategy::local_compute_init(net);
+    }
+    phi
+}
+
+#[test]
+fn flow_conservation_random_instances() {
+    for seed in 0..30u64 {
+        let mut rng = Pcg::new(1000 + seed);
+        let net = random_network(&mut rng);
+        let phi = random_strategy(&net, &mut rng);
+        assert!(
+            phi.is_feasible(&net),
+            "seed {seed}: {:?}",
+            phi.feasibility_violations(&net)
+        );
+        let flows = compute_flows(&net, &phi).unwrap();
+        let violations = flows.conservation_violations(&net, &phi);
+        assert!(violations.is_empty(), "seed {seed}: {violations:?}");
+    }
+}
+
+#[test]
+fn marginals_match_finite_differences_random() {
+    let mut checked = 0;
+    for seed in 0..12u64 {
+        let mut rng = Pcg::new(2000 + seed);
+        let net = random_network(&mut rng);
+        let phi = random_strategy(&net, &mut rng);
+        let flows = compute_flows(&net, &phi).unwrap();
+        if !flows.total_cost.is_finite() {
+            continue;
+        }
+        let marg = compute_marginals(&net, &phi, &flows).unwrap();
+        let eps = 1e-6;
+        // probe a few random (task, node, slot) partial derivatives
+        for _ in 0..6 {
+            let s = rng.below(net.s());
+            let i = rng.below(net.n());
+            let analytic = marg.dphi_minus(&net, &flows, s, i);
+            let slot = rng.below(analytic.len());
+            let mut bumped = phi.clone();
+            bumped.data[s][i][slot] += eps;
+            let Ok(t1) = compute_flows(&net, &bumped) else { continue };
+            if !t1.total_cost.is_finite() {
+                continue;
+            }
+            let numeric = (t1.total_cost - flows.total_cost) / eps;
+            assert!(
+                (analytic[slot] - numeric).abs() < 1e-3 * (1.0 + numeric.abs()),
+                "seed {seed}: dphi_minus[{s}][{i}][{slot}] analytic {} vs numeric {}",
+                analytic[slot],
+                numeric
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked > 20, "only {checked} probes ran");
+}
+
+#[test]
+fn sgp_invariants_random_instances() {
+    for seed in 0..10u64 {
+        let mut rng = Pcg::new(3000 + seed);
+        let net = random_network(&mut rng);
+        let mut phi = Strategy::local_compute_init(&net);
+        let mut sgp = Sgp::new();
+        let mut last = f64::INFINITY;
+        for iter in 0..25 {
+            let st = sgp.step(&net, &mut phi).unwrap();
+            assert!(
+                st.total_cost <= last + 1e-9,
+                "seed {seed} iter {iter}: cost increased {last} -> {}",
+                st.total_cost
+            );
+            last = st.total_cost;
+            assert!(phi.is_loop_free(&net), "seed {seed} iter {iter}: loop");
+            assert!(
+                phi.is_feasible(&net),
+                "seed {seed} iter {iter}: {:?}",
+                phi.feasibility_violations(&net)
+            );
+        }
+        assert_eq!(sgp.rollbacks, 0, "seed {seed}: loop rollbacks fired");
+    }
+}
+
+#[test]
+fn theorem1_residual_vanishes_at_convergence_random() {
+    for seed in 0..6u64 {
+        let mut rng = Pcg::new(4000 + seed);
+        let net = random_network(&mut rng);
+        let mut phi = Strategy::local_compute_init(&net);
+        let mut sgp = Sgp::new();
+        let mut res = f64::INFINITY;
+        for _ in 0..80 {
+            res = sgp.step(&net, &mut phi).unwrap().residual;
+        }
+        assert!(
+            res < 1e-4,
+            "seed {seed}: Theorem-1 residual stuck at {res}"
+        );
+    }
+}
+
+#[test]
+fn gp_and_sgp_agree_random() {
+    for seed in 0..5u64 {
+        let mut rng = Pcg::new(5000 + seed);
+        let net = random_network(&mut rng);
+
+        let mut phi_s = Strategy::local_compute_init(&net);
+        let mut sgp = Sgp::new();
+        for _ in 0..60 {
+            sgp.step(&net, &mut phi_s).unwrap();
+        }
+        let ts = compute_flows(&net, &phi_s).unwrap().total_cost;
+
+        let mut phi_g = Strategy::local_compute_init(&net);
+        let mut gp = Gp::new(1.0);
+        for _ in 0..400 {
+            gp.step(&net, &mut phi_g).unwrap();
+        }
+        let tg = compute_flows(&net, &phi_g).unwrap().total_cost;
+
+        assert!(
+            (ts - tg).abs() < 0.02 * ts.max(1e-9),
+            "seed {seed}: SGP {ts} vs GP {tg}"
+        );
+    }
+}
+
+#[test]
+fn random_strategies_never_beat_converged_sgp() {
+    // Global-optimality spot check: no random feasible strategy should
+    // undercut the Theorem-1 point SGP converged to.
+    for seed in 0..6u64 {
+        let mut rng = Pcg::new(6000 + seed);
+        let net = random_network(&mut rng);
+        let mut phi = Strategy::local_compute_init(&net);
+        let mut sgp = Sgp::new();
+        let mut opt_cost = f64::INFINITY;
+        for _ in 0..80 {
+            opt_cost = sgp.step(&net, &mut phi).unwrap().total_cost;
+        }
+        for probe in 0..40 {
+            let cand = random_strategy(&net, &mut rng);
+            let t = compute_flows(&net, &cand).unwrap().total_cost;
+            assert!(
+                t >= opt_cost - 1e-6 * opt_cost.abs(),
+                "seed {seed} probe {probe}: random strategy beats 'optimum' ({t} < {opt_cost})"
+            );
+        }
+        // and the converged point satisfies Theorem 1
+        let flows = compute_flows(&net, &phi).unwrap();
+        let marg = compute_marginals(&net, &phi, &flows).unwrap();
+        assert!(theorem1_residual(&net, &phi, &marg) < 1e-4, "seed {seed}");
+    }
+}
+
+#[test]
+fn incremental_reflow_matches_full_recompute() {
+    use cecflow::model::flows::{recompute_task_flows, refresh_total_cost};
+    for seed in 0..15u64 {
+        let mut rng = Pcg::new(7000 + seed);
+        let net = random_network(&mut rng);
+        let phi_a = random_strategy(&net, &mut rng);
+        let phi_b = random_strategy(&net, &mut rng);
+        // start from A's flows, mutate every task to B via the incremental
+        // path, compare against a from-scratch computation of B.
+        let mut fs = compute_flows(&net, &phi_a).unwrap();
+        for s in 0..net.s() {
+            recompute_task_flows(&net, &phi_b, &mut fs, s).unwrap();
+        }
+        let t_inc = refresh_total_cost(&net, &mut fs);
+        let full = compute_flows(&net, &phi_b).unwrap();
+        assert!(
+            (t_inc - full.total_cost).abs() < 1e-9 * (1.0 + full.total_cost.abs())
+                || (t_inc.is_infinite() && full.total_cost.is_infinite()),
+            "seed {seed}: incremental {t_inc} vs full {}",
+            full.total_cost
+        );
+        for eid in 0..net.e() {
+            assert!(
+                (fs.link_flow[eid] - full.link_flow[eid]).abs() < 1e-9,
+                "seed {seed}: edge {eid} flow drift"
+            );
+        }
+        for i in 0..net.n() {
+            assert!(
+                (fs.workload[i] - full.workload[i]).abs() < 1e-9,
+                "seed {seed}: node {i} workload drift"
+            );
+        }
+    }
+}

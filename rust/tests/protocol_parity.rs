@@ -1,0 +1,71 @@
+//! Integration test: the distributed two-stage broadcast protocol
+//! (event-driven simulation AND thread-per-node actors) computes exactly
+//! the marginals of the centralized evaluator, on real Table II scenarios
+//! and on optimized (multi-path) strategies.
+
+use cecflow::algo::Optimizer;
+use cecflow::coordinator::ScenarioSpec;
+use cecflow::model::{compute_flows, compute_marginals, Strategy};
+use cecflow::sim::actors::run_actor_broadcast;
+use cecflow::sim::run_broadcast;
+
+fn optimized_strategy(name: &str, seed: u64, steps: usize) -> (cecflow::model::Network, Strategy) {
+    let sc = ScenarioSpec::by_name(name).unwrap().build(seed);
+    let mut phi = Strategy::local_compute_init(&sc.net);
+    let mut sgp = cecflow::algo::Sgp::new();
+    for _ in 0..steps {
+        sgp.step(&sc.net, &mut phi).unwrap();
+    }
+    (sc.net, phi)
+}
+
+#[test]
+fn event_protocol_matches_centralized_on_scenarios() {
+    for name in ["abilene", "connected-er", "balanced-tree"] {
+        let (net, phi) = optimized_strategy(name, 11, 8);
+        let flows = compute_flows(&net, &phi).unwrap();
+        let marg = compute_marginals(&net, &phi, &flows).unwrap();
+        let res = run_broadcast(&net, &phi, &flows, 1.0);
+        let dev = res.max_deviation(&marg);
+        assert!(dev < 1e-9, "{name}: protocol deviation {dev}");
+        assert_eq!(res.h_plus, marg.h_plus, "{name}: h+ mismatch");
+        assert_eq!(res.h_minus, marg.h_minus, "{name}: h- mismatch");
+    }
+}
+
+#[test]
+fn protocol_complexity_claims() {
+    // §IV Complexity: ≤ 2|S||E| broadcast messages per iteration and
+    // completion within O(h̄ · t_c).
+    let (net, phi) = optimized_strategy("geant", 3, 5);
+    let flows = compute_flows(&net, &phi).unwrap();
+    let res = run_broadcast(&net, &phi, &flows, 1.0);
+    let bound = 2 * net.s() as u64 * net.e() as u64;
+    assert!(res.messages <= bound, "{} > {bound}", res.messages);
+    // every node ends informed
+    for s in 0..net.s() {
+        for i in 0..net.n() {
+            assert!(res.dt_r[s][i].is_finite());
+        }
+    }
+}
+
+#[test]
+fn actor_threads_match_centralized_on_scenario() {
+    let (net, phi) = optimized_strategy("abilene", 19, 6);
+    let flows = compute_flows(&net, &phi).unwrap();
+    let marg = compute_marginals(&net, &phi, &flows).unwrap();
+    let res = run_actor_broadcast(&net, &phi, &flows);
+    for s in 0..net.s() {
+        for i in 0..net.n() {
+            assert!(
+                (res.dt_plus[s][i] - marg.dt_plus[s][i]).abs() < 1e-9,
+                "dt_plus[{s}][{i}]"
+            );
+            assert!(
+                (res.dt_r[s][i] - marg.dt_r[s][i]).abs() < 1e-9,
+                "dt_r[{s}][{i}]"
+            );
+        }
+    }
+}

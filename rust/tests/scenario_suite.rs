@@ -1,0 +1,199 @@
+//! Scenario-level integration suite: every (small/medium) Table II
+//! instance optimizes cleanly, the §V ordering holds, failure injection
+//! stays sound, and the end-to-end CLI building blocks compose.
+
+use cecflow::algo::Optimizer;
+use cecflow::coordinator::{
+    build_scenario_network, connected_er_servers, run_algorithm, Algorithm, RunConfig,
+    ScenarioSpec,
+};
+use cecflow::model::{compute_flows, compute_marginals, theorem1_residual, Strategy};
+use cecflow::sim::run_with_failure;
+
+const SMALL_SCENARIOS: &[&str] = &[
+    "connected-er",
+    "balanced-tree",
+    "fog",
+    "abilene",
+    "lhc",
+    "geant",
+];
+
+#[test]
+fn sgp_converges_on_all_small_scenarios() {
+    for name in SMALL_SCENARIOS {
+        let net = build_scenario_network(name, 7, 1.0).unwrap();
+        let mut phi = Strategy::local_compute_init(&net);
+        let mut sgp = cecflow::algo::Sgp::new();
+        let mut last = f64::INFINITY;
+        let mut residual = f64::INFINITY;
+        for _ in 0..50 {
+            let st = sgp.step(&net, &mut phi).unwrap();
+            assert!(st.total_cost <= last + 1e-9, "{name}: not monotone");
+            last = st.total_cost;
+            residual = st.residual;
+        }
+        assert!(phi.is_loop_free(&net), "{name}: loop after optimization");
+        assert!(
+            residual < 1e-2 * (1.0 + last),
+            "{name}: residual {residual} too large vs cost {last}"
+        );
+        assert_eq!(sgp.rollbacks, 0, "{name}: rollbacks fired");
+    }
+}
+
+#[test]
+fn sgp_beats_all_baselines_on_three_seeds() {
+    let cfg = RunConfig::quick();
+    for name in ["abilene", "connected-er", "lhc"] {
+        for seed in [1u64, 2, 3] {
+            let net = build_scenario_network(name, seed, 1.0).unwrap();
+            let sgp = run_algorithm(&net, Algorithm::Sgp, &cfg).unwrap();
+            for algo in [Algorithm::Spoo, Algorithm::Lcor, Algorithm::Lpr] {
+                let out = run_algorithm(&net, algo, &cfg).unwrap();
+                assert!(
+                    sgp.final_cost <= out.final_cost * 1.001,
+                    "{name} seed {seed}: sgp {} beaten by {} {}",
+                    sgp.final_cost,
+                    out.algorithm,
+                    out.final_cost
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn failure_injection_all_servers() {
+    // failing any of the four servers keeps the experiment sound
+    let sc = connected_er_servers(9);
+    let phi0 = Strategy::local_compute_init(&sc.net);
+    let mut survivable = 0;
+    for k in 0..sc.servers.len() {
+        let dead = sc.servers[k];
+        let fallback = sc.servers[(k + 1) % sc.servers.len()];
+        match run_with_failure(
+            &sc.net,
+            cecflow::algo::Sgp::new,
+            &phi0,
+            10,
+            40,
+            dead,
+            fallback,
+            0.01,
+        ) {
+            Ok(run) => {
+                survivable += 1;
+                assert!(run.final_cost.is_finite(), "server {dead}: degraded cost inf");
+                for w in run.costs[10..].windows(2) {
+                    assert!(w[1] <= w[0] + 1e-9, "server {dead}: post-failure ascent");
+                }
+            }
+            Err(err) => {
+                // legitimate outcome: the instance cannot absorb losing
+                // this much capacity — must be reported, not mis-optimized
+                assert!(
+                    err.to_string().contains("cannot absorb"),
+                    "unexpected failure mode: {err}"
+                );
+            }
+        }
+    }
+    assert!(survivable >= 2, "only {survivable} servers survivable");
+}
+
+#[test]
+fn optimized_strategies_satisfy_theorem1_within_tolerance() {
+    let net = build_scenario_network("abilene", 13, 1.0).unwrap();
+    let mut phi = Strategy::local_compute_init(&net);
+    let mut sgp = cecflow::algo::Sgp::new();
+    for _ in 0..120 {
+        sgp.step(&net, &mut phi).unwrap();
+    }
+    let flows = compute_flows(&net, &phi).unwrap();
+    let marg = compute_marginals(&net, &phi, &flows).unwrap();
+    let res = theorem1_residual(&net, &phi, &marg);
+    assert!(res < 1e-4 * (1.0 + flows.total_cost), "residual {res}");
+
+    // δ-consistency: for every loaded slot, its δ equals the node minimum
+    for s in 0..net.s() {
+        for i in 0..net.n() {
+            let dm = marg.delta_minus(&net, s, i);
+            let dmin = dm.iter().cloned().fold(f64::INFINITY, f64::min);
+            for (slot, &frac) in phi.data[s][i].iter().enumerate() {
+                if frac > 1e-6 {
+                    assert!(
+                        dm[slot] <= dmin + 1e-3 * (1.0 + dmin.abs()),
+                        "task {s} node {i} slot {slot}: δ {} vs min {dmin}",
+                        dm[slot]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn rate_scaling_monotone_in_cost() {
+    // Fig. 5c precondition: optimized total cost grows with load.
+    let cfg = RunConfig::quick();
+    let mut prev = 0.0;
+    for scale in [0.5, 1.0, 1.3] {
+        let net = build_scenario_network("abilene", 4, scale).unwrap();
+        let out = run_algorithm(&net, Algorithm::Sgp, &cfg).unwrap();
+        assert!(
+            out.final_cost > prev,
+            "cost not increasing at scale {scale}: {} <= {prev}",
+            out.final_cost
+        );
+        prev = out.final_cost;
+    }
+}
+
+#[test]
+fn spoo_lcor_respect_their_restrictions_on_scenarios() {
+    let net = build_scenario_network("lhc", 5, 1.0).unwrap();
+
+    let (mut spoo, mut phi_p) = cecflow::algo::spoo_optimizer(&net);
+    for _ in 0..10 {
+        spoo.step(&net, &mut phi_p).unwrap();
+    }
+    // SPOO: for each task, each node uses at most one forwarding slot
+    for s in 0..net.s() {
+        for i in 0..net.n() {
+            let used = phi_p.data[s][i]
+                .iter()
+                .skip(1)
+                .filter(|&&f| f > 1e-9)
+                .count();
+            assert!(used <= 1, "SPOO: task {s} node {i} uses {used} out-edges");
+        }
+    }
+
+    let (mut lcor, mut phi_l) = cecflow::algo::lcor_optimizer(&net);
+    for _ in 0..10 {
+        lcor.step(&net, &mut phi_l).unwrap();
+    }
+    for s in 0..net.s() {
+        for i in 0..net.n() {
+            assert!(
+                (phi_l.data[s][i][0] - 1.0).abs() < 1e-12,
+                "LCOR: task {s} node {i} shipped data"
+            );
+        }
+    }
+}
+
+#[test]
+fn sw_scenario_single_iteration_smoke() {
+    // the big one: one full Gauss–Seidel sweep at SW scale stays sound
+    let net = build_scenario_network("sw", 3, 1.0).unwrap();
+    assert_eq!(net.n(), 100);
+    let mut phi = Strategy::local_compute_init(&net);
+    let t0 = compute_flows(&net, &phi).unwrap().total_cost;
+    let mut sgp = cecflow::algo::Sgp::new();
+    let st = sgp.step(&net, &mut phi).unwrap();
+    assert!(st.total_cost < t0, "no progress on SW: {t0} -> {}", st.total_cost);
+    assert!(phi.is_loop_free(&net));
+    assert!(phi.is_feasible(&net));
+}
