@@ -1,0 +1,26 @@
+# Convenience targets. Tier-1 verification is `cargo build --release &&
+# cargo test -q` and needs none of the python tooling below.
+
+ARTIFACTS_DIR ?= artifacts
+
+.PHONY: all build test artifacts bench-smoke clean-artifacts
+
+all: build
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# AOT-lower the JAX/Pallas dense_eval program to HLO-text artifacts +
+# manifest.json consumed by the `pjrt` runtime feature. Requires jax.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
+
+# Fast bench smoke used by CI to catch driver rot (skips the SW scenario).
+bench-smoke:
+	CECFLOW_BENCH_FAST=1 cargo bench --bench fig4
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS_DIR)

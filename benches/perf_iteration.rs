@@ -17,7 +17,7 @@ use cecflow::algo::{Optimizer, Sgp};
 use cecflow::coordinator::report::write_csv;
 use cecflow::coordinator::ScenarioSpec;
 use cecflow::model::{compute_flows, compute_marginals, Strategy};
-use cecflow::runtime::{default_artifacts_dir, DenseEvaluator, Engine};
+use cecflow::runtime::{DenseBackend, NativeBackend};
 use cecflow::util::timer::{bench_fn, BenchReport};
 
 fn main() -> anyhow::Result<()> {
@@ -81,29 +81,52 @@ fn main() -> anyhow::Result<()> {
     report.add_measurement(&m);
     record(&mut rows, &m);
 
-    // XLA dense evaluation vs native (small class)
-    match Engine::load_filtered(&default_artifacts_dir(), |c| c.name == "small") {
-        Ok(engine) => {
-            let sc = ScenarioSpec::by_name("abilene").unwrap().build(2026);
-            let net = &sc.net;
-            let phi = Strategy::local_compute_init(net);
-            let eval = DenseEvaluator::new(&engine);
-            let m = bench_fn("abilene: XLA dense_eval (N=32,S=48 padded)", budget, || {
-                let _ = eval.evaluate(net, &phi).unwrap();
-            });
-            report.add_measurement(&m);
-            record(&mut rows, &m);
-            let m = bench_fn("abilene: native flows+marginals", budget, || {
-                let f = compute_flows(net, &phi).unwrap();
-                let _ = compute_marginals(net, &phi, &f).unwrap();
-            });
-            report.add_measurement(&m);
-            record(&mut rows, &m);
-        }
-        Err(err) => {
-            report.add_row("xla", format!("skipped ({err})"));
+    // Dense-backend evaluation through the trait object (the abstraction
+    // the accelerated loop pays for), vs the direct native calls.
+    {
+        let sc = ScenarioSpec::by_name("abilene").unwrap().build(2026);
+        let net = &sc.net;
+        let phi = Strategy::local_compute_init(net);
+        let backend: &dyn DenseBackend = &NativeBackend;
+        let m = bench_fn("abilene: NativeBackend dense evaluate", budget, || {
+            let _ = backend.evaluate(net, &phi).unwrap();
+        });
+        report.add_measurement(&m);
+        record(&mut rows, &m);
+        let m = bench_fn("abilene: native flows+marginals", budget, || {
+            let f = compute_flows(net, &phi).unwrap();
+            let _ = compute_marginals(net, &phi, &f).unwrap();
+        });
+        report.add_measurement(&m);
+        record(&mut rows, &m);
+    }
+
+    // XLA dense evaluation (small class), only in `--features pjrt` builds.
+    #[cfg(feature = "pjrt")]
+    {
+        use cecflow::runtime::{default_artifacts_dir, DenseEvaluator, Engine};
+        match Engine::load_filtered(&default_artifacts_dir(), |c| c.name == "small") {
+            Ok(engine) => {
+                let sc = ScenarioSpec::by_name("abilene").unwrap().build(2026);
+                let net = &sc.net;
+                let phi = Strategy::local_compute_init(net);
+                let eval = DenseEvaluator::new(&engine);
+                let m = bench_fn("abilene: XLA dense_eval (N=32,S=48 padded)", budget, || {
+                    let _ = eval.evaluate(net, &phi).unwrap();
+                });
+                report.add_measurement(&m);
+                record(&mut rows, &m);
+            }
+            Err(err) => {
+                report.add_row("xla", format!("skipped ({err:#})"));
+            }
         }
     }
+    #[cfg(not(feature = "pjrt"))]
+    report.add_row(
+        "xla",
+        "skipped (built without the `pjrt` cargo feature)".to_string(),
+    );
 
     report.print();
     write_csv("perf_iteration.csv", &["path", "seconds_per_iter"], &rows)?;

@@ -2,37 +2,44 @@
 //!
 //! L3 (rust coordinator) runs the SGP optimizer; the per-iteration numeric
 //! core — flow propagation, congestion costs, two-stage marginal
-//! recursions — executes on the **XLA data plane**: the Pallas/JAX program
-//! AOT-lowered by `python/compile/aot.py` into `artifacts/*.hlo.txt` and
-//! loaded here through the PJRT CPU client. Python is not running.
+//! recursions — executes on a pluggable **dense backend**:
 //!
-//! The driver:
+//! * built with `--features pjrt` (and after `make artifacts`), the
+//!   Pallas/JAX program AOT-lowered by `python/compile/aot.py` into
+//!   `artifacts/*.hlo.txt` runs through the PJRT CPU client — Python is
+//!   not running;
+//! * in a default build, the exact pure-rust f64 `NativeBackend` drives
+//!   the same `optimize_accelerated` loop, so the example always runs.
+//!
+//! The PJRT driver:
 //!  1. loads + compiles the AOT artifacts,
 //!  2. checks XLA↔native numerical parity on the live workload,
 //!  3. optimizes a Table-II Abilene instance end-to-end on the XLA plane,
 //!  4. compares the result against all four baselines,
 //!  5. reports per-iteration latency for both data planes.
 //!
-//! Run (after `make artifacts`):
+//! Run:
 //! ```bash
-//! cargo run --release --example accelerated
+//! cargo run --release --example accelerated                   # native backend
+//! cargo run --release --features pjrt --example accelerated   # after `make artifacts`
 //! ```
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
-use std::time::Instant;
-
-use cecflow::algo::Sgp;
-use cecflow::coordinator::{
-    optimize, optimize_accelerated, run_algorithm, Algorithm, RunConfig, ScenarioSpec,
-};
-use cecflow::model::{compute_flows, compute_marginals, Strategy};
-use cecflow::runtime::{default_artifacts_dir, DenseEvaluator, Engine};
-use cecflow::util::table::{fnum, Table};
-
+#[cfg(feature = "pjrt")]
 fn main() -> anyhow::Result<()> {
+    use std::time::Instant;
+
+    use cecflow::algo::Sgp;
+    use cecflow::coordinator::{
+        optimize, optimize_accelerated, run_algorithm, Algorithm, RunConfig, ScenarioSpec,
+    };
+    use cecflow::model::{compute_flows, compute_marginals, Strategy};
+    use cecflow::runtime::{resolve_artifacts_dir, DenseEvaluator, Engine};
+    use cecflow::util::table::{fnum, Table};
+
     // ---- 1. load the AOT artifacts --------------------------------------
     let t_load = Instant::now();
-    let engine = Engine::load_filtered(&default_artifacts_dir(), |c| c.name == "small")?;
+    let engine = Engine::load_filtered(&resolve_artifacts_dir()?, |c| c.name == "small")?;
     println!(
         "loaded + compiled AOT artifacts on PJRT '{}' in {:.2}s",
         engine.platform(),
@@ -126,5 +133,60 @@ fn main() -> anyhow::Result<()> {
          scale — see EXPERIMENTS.md §Perf for the crossover analysis)"
     );
     println!("\nEND-TO-END OK");
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() -> anyhow::Result<()> {
+    use cecflow::algo::Sgp;
+    use cecflow::coordinator::{optimize, optimize_accelerated, RunConfig, ScenarioSpec};
+    use cecflow::model::Strategy;
+    use cecflow::runtime::{DenseBackend, NativeBackend};
+    use cecflow::util::table::fnum;
+
+    println!(
+        "built without the `pjrt` cargo feature — running the accelerated optimization \
+         loop on the pure-rust NativeBackend instead of the XLA data plane.\n\
+         (rebuild with `--features pjrt` and run `make artifacts` for the PJRT driver)\n"
+    );
+
+    let sc = ScenarioSpec::by_name("abilene").unwrap().build(2026);
+    let net = &sc.net;
+    println!(
+        "workload: Table II Abilene — |V|={} links={} |S|={}",
+        net.n(),
+        net.e() / 2,
+        net.s()
+    );
+    let phi0 = Strategy::local_compute_init(net);
+    let cfg = RunConfig {
+        max_iters: 40,
+        ..RunConfig::default()
+    };
+
+    let backend = NativeBackend;
+    let mut sgp = Sgp::new();
+    let accel = optimize_accelerated(net, &mut sgp, &phi0, &cfg, &backend)?;
+    println!(
+        "SGP via the '{}' dense backend: T {} -> {} in {} iterations ({:.2}s)",
+        backend.name(),
+        fnum(accel.costs[0]),
+        fnum(accel.final_cost()),
+        accel.costs.len(),
+        accel.wall_seconds
+    );
+
+    let mut sgp_gs = Sgp::new();
+    let reference = optimize(net, &mut sgp_gs, &phi0, &cfg)?;
+    println!(
+        "SGP native Gauss–Seidel reference: T -> {} in {} iterations",
+        fnum(reference.final_cost()),
+        reference.costs.len()
+    );
+    let rel = (accel.final_cost() - reference.final_cost()).abs()
+        / reference.final_cost().abs().max(1e-9);
+    println!("final-cost agreement: rel err {rel:.2e}");
+    anyhow::ensure!(rel < 0.05, "dense-backend run diverged from the reference");
+    println!("\nEND-TO-END OK (native backend)");
     Ok(())
 }

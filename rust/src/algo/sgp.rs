@@ -396,16 +396,19 @@ impl Sgp {
 }
 
 impl Sgp {
-    /// One synchronous iteration with flows + marginals evaluated on the
-    /// **XLA data plane** (the AOT `dense_eval` artifact) instead of the
-    /// native evaluator — the accelerated hot path. The control plane
-    /// (blocked sets, scaling, QP, safeguard) stays in rust; candidate
-    /// costs inside the safeguard are also priced by the artifact.
+    /// One synchronous iteration with flows + marginals evaluated by a
+    /// pluggable [`crate::runtime::DenseBackend`] — the accelerated hot
+    /// path. The default backend is the pure-rust
+    /// [`crate::runtime::NativeBackend`]; with the `pjrt` cargo feature
+    /// the AOT `dense_eval` artifact (XLA data plane) drops in instead.
+    /// The control plane (blocked sets, scaling, QP, safeguard) stays in
+    /// rust; candidate costs inside the safeguard are also priced by the
+    /// backend.
     pub fn step_dense(
         &mut self,
         net: &Network,
         phi: &mut Strategy,
-        evaluator: &crate::runtime::DenseEvaluator,
+        evaluator: &dyn crate::runtime::DenseBackend,
     ) -> Result<IterationStats> {
         use crate::graph::algorithms::longest_path_to_sink;
 

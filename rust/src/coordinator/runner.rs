@@ -8,7 +8,7 @@ use anyhow::Result;
 use crate::algo::{Optimizer, Sgp};
 use crate::model::network::Network;
 use crate::model::strategy::Strategy;
-use crate::runtime::DenseEvaluator;
+use crate::runtime::DenseBackend;
 
 /// Stopping rule for optimization runs.
 #[derive(Clone, Copy, Debug)]
@@ -125,13 +125,15 @@ pub fn optimize(
     ))
 }
 
-/// Run SGP with flows/marginals evaluated on the XLA data plane.
+/// Run SGP with flows/marginals evaluated by a pluggable dense backend
+/// (the native f64 evaluator by default; the PJRT/XLA engine behind the
+/// `pjrt` feature).
 pub fn optimize_accelerated(
     net: &Network,
     sgp: &mut Sgp,
     phi0: &Strategy,
     cfg: &RunConfig,
-    evaluator: &DenseEvaluator,
+    evaluator: &dyn DenseBackend,
 ) -> Result<RunResult> {
     let mut phi = phi0.clone();
     let mut costs = Vec::new();
@@ -145,8 +147,9 @@ pub fn optimize_accelerated(
             break;
         }
     }
+    let label = format!("sgp-{}", evaluator.name());
     Ok(RunResult::finish(
-        "sgp-xla",
+        &label,
         costs,
         residuals,
         start.elapsed().as_secs_f64(),
@@ -187,6 +190,27 @@ mod tests {
         };
         let res = optimize(&net, &mut sgp, &phi0, &cfg).unwrap();
         assert!(res.costs.len() < 500, "never detected convergence");
+    }
+
+    #[test]
+    fn accelerated_with_native_backend_descends_and_labels() {
+        use crate::runtime::NativeBackend;
+        let net = diamond(true);
+        let phi0 = Strategy::local_compute_init(&net);
+        let mut sgp = Sgp::new();
+        let res =
+            optimize_accelerated(&net, &mut sgp, &phi0, &RunConfig::quick(), &NativeBackend)
+                .unwrap();
+        assert_eq!(res.algorithm, "sgp-native");
+        assert!(res.final_cost().is_finite());
+        for w in res.costs.windows(2) {
+            assert!(
+                w[1] <= w[0] * (1.0 + 1e-5),
+                "dense-backend cost increased: {} -> {}",
+                w[0],
+                w[1]
+            );
+        }
     }
 
     #[test]

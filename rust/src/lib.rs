@@ -13,7 +13,9 @@
 //!   numeric core (flow propagation + congestion costs + marginal
 //!   recursions) written in JAX with Pallas kernels, AOT-lowered to HLO
 //!   text and executed from Rust through the PJRT CPU client
-//!   ([`runtime`]).
+//!   ([`runtime`], behind the `pjrt` cargo feature). Default builds run
+//!   the same loop on the pure-rust [`runtime::NativeBackend`], so the
+//!   crate builds and tests with no XLA libraries and no artifacts.
 //!
 //! Start at [`coordinator::scenario`] for paper-faithful network
 //! instances, [`algo::sgp`] for the optimizer, and `examples/quickstart.rs`

@@ -15,13 +15,16 @@ use anyhow::{bail, Context, Result};
 use cecflow::cli::Args;
 use cecflow::coordinator::{
     build_scenario_network, config::ExperimentConfig, connected_er_servers, run_algorithm,
-    Algorithm, RunConfig, Schedule, ScenarioSpec,
+    Algorithm, RunConfig, RunResult, Schedule, ScenarioSpec,
 };
+use cecflow::model::network::Network;
 use cecflow::model::strategy::Strategy;
-use cecflow::runtime::{default_artifacts_dir, DenseEvaluator, Engine};
 use cecflow::sim::run_with_failure;
 use cecflow::util::json::Json;
 use cecflow::util::table::{fnum, Table};
+
+#[cfg(feature = "pjrt")]
+use cecflow::runtime::{resolve_artifacts_dir, DenseEvaluator, Engine};
 
 fn main() {
     let args = Args::from_env(true);
@@ -130,13 +133,9 @@ fn cmd_run(args: &Args) -> Result<()> {
                 cfg.algorithm == Algorithm::Sgp,
                 "accelerated schedule is defined for SGP"
             );
-            let engine = Engine::load(&default_artifacts_dir())?;
-            let eval = DenseEvaluator::new(&engine);
             let phi0 = Strategy::local_compute_init(&net);
             let mut sgp = cecflow::algo::Sgp::new();
-            let res = cecflow::coordinator::optimize_accelerated(
-                &net, &mut sgp, &phi0, &run_cfg, &eval,
-            )?;
+            let res = run_accelerated(&net, &mut sgp, &phi0, &run_cfg)?;
             let flows = cecflow::model::flows::compute_flows(&net, &res.phi)?;
             let td = cecflow::coordinator::metrics::travel_distance(&net, &flows);
             cecflow::coordinator::AlgoOutcome {
@@ -176,6 +175,53 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run the accelerated schedule on the best available dense backend:
+/// the PJRT engine when built with `--features pjrt`, the pure-rust
+/// native backend otherwise.
+#[cfg(feature = "pjrt")]
+fn run_accelerated(
+    net: &Network,
+    sgp: &mut cecflow::algo::Sgp,
+    phi0: &Strategy,
+    run_cfg: &RunConfig,
+) -> Result<RunResult> {
+    let engine = Engine::load(&resolve_artifacts_dir()?)?;
+    let eval = DenseEvaluator::new(&engine);
+    cecflow::coordinator::optimize_accelerated(net, sgp, phi0, run_cfg, &eval)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_accelerated(
+    net: &Network,
+    sgp: &mut cecflow::algo::Sgp,
+    phi0: &Strategy,
+    run_cfg: &RunConfig,
+) -> Result<RunResult> {
+    eprintln!(
+        "note: cecflow was built without the `pjrt` cargo feature; the accelerated \
+         schedule runs on the native dense backend (rebuild with `--features pjrt` \
+         and run `make artifacts` for the XLA data plane)"
+    );
+    cecflow::coordinator::optimize_accelerated(
+        net,
+        sgp,
+        phi0,
+        run_cfg,
+        &cecflow::runtime::NativeBackend,
+    )
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_validate(_args: &Args) -> Result<()> {
+    bail!(
+        "`cecflow validate` compares the PJRT/XLA data plane against the native \
+         evaluator and requires a build with `--features pjrt` (plus AOT artifacts \
+         from `make artifacts`). This binary was built with the native backend only, \
+         which is the reference being validated."
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_validate(args: &Args) -> Result<()> {
     let scenario = args.opt_or("scenario", "abilene");
     let seed = args.opt_u64("seed", 42);
@@ -184,7 +230,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
         net.n() <= 128 && net.s() <= 128,
         "validate currently covers networks within the large AOT class"
     );
-    let engine = Engine::load(&default_artifacts_dir())?;
+    let engine = Engine::load(&resolve_artifacts_dir()?)?;
     println!("PJRT platform: {}", engine.platform());
     let eval = DenseEvaluator::new(&engine);
 
@@ -217,16 +263,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
 
 fn cmd_info() -> Result<()> {
     println!("cecflow {}", env!("CARGO_PKG_VERSION"));
-    let dir = default_artifacts_dir();
-    match Engine::load(&dir) {
-        Ok(engine) => {
-            println!("artifacts: {} (platform {})", dir.display(), engine.platform());
-            for c in engine.classes() {
-                println!("  class {:<6} N={} S={}", c.name, c.n, c.s);
-            }
-        }
-        Err(err) => println!("artifacts: unavailable ({err})"),
-    }
+    print_engine_info();
     println!("\nTable II scenarios:");
     let mut t = Table::new(&["name", "|V|", "links", "|S|", "|R|", "cost"]);
     for spec in ScenarioSpec::table2() {
@@ -242,6 +279,30 @@ fn cmd_info() -> Result<()> {
     }
     t.print();
     Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn print_engine_info() {
+    println!("dense backends: native (default), pjrt (enabled)");
+    let dir = cecflow::runtime::default_artifacts_dir();
+    match Engine::load(&dir) {
+        Ok(engine) => {
+            println!("artifacts: {} (platform {})", dir.display(), engine.platform());
+            for c in engine.classes() {
+                println!("  class {:<6} N={} S={}", c.name, c.n, c.s);
+            }
+        }
+        Err(err) => println!("artifacts: unavailable ({err:#})"),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn print_engine_info() {
+    println!("dense backends: native (default)");
+    println!(
+        "pjrt engine: disabled at build time — rebuild with `--features pjrt` and run \
+         `make artifacts` to enable the XLA data plane"
+    );
 }
 
 /// Lightweight experiment driver (the full sweeps live in `benches/`).

@@ -1,0 +1,121 @@
+//! Pluggable dense-evaluation backends.
+//!
+//! The SGP accelerated path ([`crate::algo::Sgp::step_dense`] /
+//! [`crate::coordinator::optimize_accelerated`]) needs one thing from its
+//! data plane: given `(network, strategy)`, produce the full
+//! [`DenseEval`] — total cost, aggregate flows, link/node marginal prices,
+//! and the per-task traffic and marginal fields of §II–§III. The
+//! [`DenseBackend`] trait captures exactly that contract, so the control
+//! plane (blocked sets, scaling matrices, projection QP, descent
+//! safeguard) is backend-agnostic.
+//!
+//! Two implementations exist:
+//!
+//! * [`NativeBackend`] (this module) — the default: exact, pure-rust f64
+//!   evaluation via [`crate::model::flows`] + [`crate::model::marginals`].
+//!   Always available; no artifacts, no external libraries.
+//! * `DenseEvaluator` (`runtime::dense`, behind the `pjrt` cargo feature)
+//!   — the AOT `dense_eval` HLO artifact executed on the PJRT CPU client
+//!   (f32 data plane; see `rust/tests/xla_parity.rs` for the parity
+//!   tolerances).
+
+use anyhow::Result;
+
+use crate::model::flows::compute_flows;
+use crate::model::marginals::compute_marginals;
+use crate::model::network::Network;
+use crate::model::strategy::Strategy;
+
+use super::dense::DenseEval;
+
+/// A dense data-plane backend: evaluates flows + marginals for a
+/// `(network, strategy)` pair.
+///
+/// Implementations must only be called on loop-free strategies (callers
+/// check `Strategy::is_loop_free` first — the SGP safeguard already does).
+pub trait DenseBackend {
+    /// Short backend name, used in run labels (e.g. `sgp-native`).
+    fn name(&self) -> &'static str;
+
+    /// Evaluate the full dense state for `(net, phi)`.
+    fn evaluate(&self, net: &Network, phi: &Strategy) -> Result<DenseEval>;
+}
+
+/// The default backend: exact f64 evaluation on the sparse native model.
+///
+/// This is the always-buildable data plane — the PJRT engine behind the
+/// `pjrt` feature is an optional drop-in replacement for large padded
+/// instances.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl DenseBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn evaluate(&self, net: &Network, phi: &Strategy) -> Result<DenseEval> {
+        let flows = compute_flows(net, phi).map_err(anyhow::Error::new)?;
+        let marg = compute_marginals(net, phi, &flows).map_err(anyhow::Error::new)?;
+        Ok(DenseEval {
+            total_cost: flows.total_cost,
+            d_link: marg.d_link,
+            c_node: marg.c_node,
+            dt_plus: marg.dt_plus,
+            dt_r: marg.dt_r,
+            t_minus: flows.t_minus,
+            t_plus: flows.t_plus,
+            link_flow: flows.link_flow,
+            workload: flows.workload,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::network::testnet::{diamond, line3};
+
+    #[test]
+    fn native_backend_matches_direct_model_evaluation() {
+        for net in [diamond(true), diamond(false), line3()] {
+            let phi = Strategy::local_compute_init(&net);
+            let flows = compute_flows(&net, &phi).unwrap();
+            let marg = compute_marginals(&net, &phi, &flows).unwrap();
+            let ev = NativeBackend.evaluate(&net, &phi).unwrap();
+            assert_eq!(ev.total_cost, flows.total_cost);
+            assert_eq!(ev.link_flow, flows.link_flow);
+            assert_eq!(ev.workload, flows.workload);
+            assert_eq!(ev.t_minus, flows.t_minus);
+            assert_eq!(ev.t_plus, flows.t_plus);
+            assert_eq!(ev.d_link, marg.d_link);
+            assert_eq!(ev.c_node, marg.c_node);
+            assert_eq!(ev.dt_plus, marg.dt_plus);
+            assert_eq!(ev.dt_r, marg.dt_r);
+        }
+    }
+
+    #[test]
+    fn native_backend_reports_saturation_as_infinity() {
+        let mut net = diamond(true);
+        net.input_rate[0][0] = 100.0; // beyond the comp capacity of 12
+        let phi = Strategy::local_compute_init(&net);
+        let ev = NativeBackend.evaluate(&net, &phi).unwrap();
+        assert!(ev.total_cost.is_infinite());
+    }
+
+    #[test]
+    fn usable_as_trait_object() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let backend: &dyn DenseBackend = &NativeBackend;
+        assert_eq!(backend.name(), "native");
+        assert!(backend.evaluate(&net, &phi).unwrap().total_cost.is_finite());
+    }
+}

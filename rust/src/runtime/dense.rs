@@ -1,19 +1,20 @@
-//! Dense packing: `Network` + `Strategy` → padded tensors for the AOT
-//! `dense_eval` artifact, and unpacking of its outputs back into the
-//! sparse model shapes.
+//! Dense tensor layout shared by all accelerated backends: `Network` +
+//! `Strategy` → padded row-major tensors for the AOT `dense_eval`
+//! artifact, and unpacking of its outputs back into the sparse model
+//! shapes. The [`DenseEval`] struct is also the return type of every
+//! [`super::backend::DenseBackend`], so pack/unpack and the backend
+//! abstraction agree on indexing.
 //!
 //! Padding identity: padded nodes are isolated (link mask 0, zero rates,
 //! `φ_local = 1`) and padded tasks carry zero input — every padded slot
 //! contributes exactly 0 to cost and marginals, which the parity test in
 //! `rust/tests/xla_parity.rs` pins against the native evaluator.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::model::cost::CostFn;
 use crate::model::network::Network;
 use crate::model::strategy::Strategy;
-
-use super::engine::{DenseInputs, DenseOutputs, Engine};
 
 /// Dense evaluation results mapped back to model indexing.
 #[derive(Clone, Debug)]
@@ -34,6 +35,63 @@ pub struct DenseEval {
     pub link_flow: Vec<f64>,
     /// Workload per node.
     pub workload: Vec<f64>,
+}
+
+/// Raw dense inputs, already padded to a size class. All row-major f32.
+#[derive(Clone, Debug)]
+pub struct DenseInputs {
+    pub n: usize,
+    pub s: usize,
+    pub phi_data: Vec<f32>,   // [S*N*N]
+    pub phi_local: Vec<f32>,  // [S*N]
+    pub phi_result: Vec<f32>, // [S*N*N]
+    pub r: Vec<f32>,          // [S*N]
+    pub a: Vec<f32>,          // [S]
+    pub w: Vec<f32>,          // [S*N]
+    pub link_param: Vec<f32>, // [N*N]
+    pub link_kind: Vec<f32>,  // [N*N]
+    pub link_mask: Vec<f32>,  // [N*N]
+    pub comp_param: Vec<f32>, // [N]
+    pub comp_kind: Vec<f32>,  // [N]
+}
+
+/// Dense outputs as returned by the artifact.
+#[derive(Clone, Debug)]
+pub struct DenseOutputs {
+    pub n: usize,
+    pub s: usize,
+    pub total_cost: f64,
+    pub link_flow: Vec<f32>, // [N*N]
+    pub workload: Vec<f32>,  // [N]
+    pub dp_link: Vec<f32>,   // [N*N]
+    pub cp_node: Vec<f32>,   // [N]
+    pub dt_plus: Vec<f32>,   // [S*N]
+    pub dt_r: Vec<f32>,      // [S*N]
+    pub t_minus: Vec<f32>,   // [S*N]
+    pub t_plus: Vec<f32>,    // [S*N]
+}
+
+impl DenseInputs {
+    /// Zero-filled inputs for a size class (padding identity: zero rates,
+    /// zero routing, masked-out links, local fractions set to 1 for
+    /// padding rows so simplexes stay valid — all costs stay 0).
+    pub fn zeroed(n: usize, s: usize) -> DenseInputs {
+        DenseInputs {
+            n,
+            s,
+            phi_data: vec![0.0; s * n * n],
+            phi_local: vec![1.0; s * n],
+            phi_result: vec![0.0; s * n * n],
+            r: vec![0.0; s * n],
+            a: vec![1.0; s],
+            w: vec![1.0; s * n],
+            link_param: vec![0.0; n * n],
+            link_kind: vec![0.0; n * n],
+            link_mask: vec![0.0; n * n],
+            comp_param: vec![0.0; n],
+            comp_kind: vec![0.0; n],
+        }
+    }
 }
 
 /// Pack a network + strategy into `DenseInputs` padded for `(pn, ps)`.
@@ -131,17 +189,22 @@ pub fn unpack(net: &Network, out: &DenseOutputs) -> DenseEval {
 }
 
 /// High-level accelerated evaluator: pads, runs the artifact, unpacks.
+/// This is the PJRT implementation of [`super::backend::DenseBackend`];
+/// the always-available default is [`super::backend::NativeBackend`].
+#[cfg(feature = "pjrt")]
 pub struct DenseEvaluator<'e> {
-    engine: &'e Engine,
+    engine: &'e super::engine::Engine,
 }
 
+#[cfg(feature = "pjrt")]
 impl<'e> DenseEvaluator<'e> {
-    pub fn new(engine: &'e Engine) -> Self {
+    pub fn new(engine: &'e super::engine::Engine) -> Self {
         DenseEvaluator { engine }
     }
 
     /// Evaluate flows + marginals for `(net, phi)` on the XLA data plane.
     pub fn evaluate(&self, net: &Network, phi: &Strategy) -> Result<DenseEval> {
+        use anyhow::Context as _;
         let class = self
             .engine
             .class_for(net.n(), net.s())
@@ -160,6 +223,17 @@ impl<'e> DenseEvaluator<'e> {
         let inputs = pack(net, phi, class.n, class.s)?;
         let out = self.engine.run(&inputs)?;
         Ok(unpack(net, &out))
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl super::backend::DenseBackend for DenseEvaluator<'_> {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn evaluate(&self, net: &Network, phi: &Strategy) -> Result<DenseEval> {
+        DenseEvaluator::evaluate(self, net, phi)
     }
 }
 

@@ -1,5 +1,7 @@
 //! PJRT execution engine: loads the AOT HLO-text artifacts and runs them
-//! on the CPU client from the rust hot path.
+//! on the CPU client from the rust hot path. Only compiled when the
+//! `pjrt` cargo feature is enabled — the default data plane is the
+//! pure-rust [`super::backend::NativeBackend`].
 //!
 //! Wiring follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
 //! → `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
@@ -9,6 +11,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use super::dense::{DenseInputs, DenseOutputs};
 use super::manifest::{Manifest, SizeClass};
 
 /// A compiled `dense_eval` executable for one size class.
@@ -24,63 +27,6 @@ pub struct Engine {
     pub manifest: Manifest,
     client: xla::PjRtClient,
     compiled: Vec<CompiledClass>,
-}
-
-/// Raw dense inputs, already padded to a size class. All row-major f32.
-#[derive(Clone, Debug)]
-pub struct DenseInputs {
-    pub n: usize,
-    pub s: usize,
-    pub phi_data: Vec<f32>,   // [S*N*N]
-    pub phi_local: Vec<f32>,  // [S*N]
-    pub phi_result: Vec<f32>, // [S*N*N]
-    pub r: Vec<f32>,          // [S*N]
-    pub a: Vec<f32>,          // [S]
-    pub w: Vec<f32>,          // [S*N]
-    pub link_param: Vec<f32>, // [N*N]
-    pub link_kind: Vec<f32>,  // [N*N]
-    pub link_mask: Vec<f32>,  // [N*N]
-    pub comp_param: Vec<f32>, // [N]
-    pub comp_kind: Vec<f32>,  // [N]
-}
-
-/// Dense outputs as returned by the artifact.
-#[derive(Clone, Debug)]
-pub struct DenseOutputs {
-    pub n: usize,
-    pub s: usize,
-    pub total_cost: f64,
-    pub link_flow: Vec<f32>, // [N*N]
-    pub workload: Vec<f32>,  // [N]
-    pub dp_link: Vec<f32>,   // [N*N]
-    pub cp_node: Vec<f32>,   // [N]
-    pub dt_plus: Vec<f32>,   // [S*N]
-    pub dt_r: Vec<f32>,      // [S*N]
-    pub t_minus: Vec<f32>,   // [S*N]
-    pub t_plus: Vec<f32>,    // [S*N]
-}
-
-impl DenseInputs {
-    /// Zero-filled inputs for a size class (padding identity: zero rates,
-    /// zero routing, masked-out links, local fractions set to 1 for
-    /// padding rows so simplexes stay valid — all costs stay 0).
-    pub fn zeroed(n: usize, s: usize) -> DenseInputs {
-        DenseInputs {
-            n,
-            s,
-            phi_data: vec![0.0; s * n * n],
-            phi_local: vec![1.0; s * n],
-            phi_result: vec![0.0; s * n * n],
-            r: vec![0.0; s * n],
-            a: vec![1.0; s],
-            w: vec![1.0; s * n],
-            link_param: vec![0.0; n * n],
-            link_kind: vec![0.0; n * n],
-            link_mask: vec![0.0; n * n],
-            comp_param: vec![0.0; n],
-            comp_kind: vec![0.0; n],
-        }
-    }
 }
 
 impl Engine {

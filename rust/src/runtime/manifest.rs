@@ -31,7 +31,12 @@ pub struct Manifest {
 
 impl Manifest {
     /// Load and validate `<dir>/manifest.json`.
+    ///
+    /// Every failure on the no-artifact path (missing directory, missing
+    /// manifest, missing artifact files) returns a contextful error that
+    /// says how to produce the artifacts — never a panic.
     pub fn load(dir: &Path) -> Result<Manifest> {
+        super::ensure_artifacts_dir(dir)?;
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
@@ -94,7 +99,11 @@ impl Manifest {
         }
         for c in &self.classes {
             if !c.file.exists() {
-                bail!("artifact file missing: {:?}", c.file);
+                bail!(
+                    "artifact file missing: {:?} (listed in manifest.json — re-run \
+                     `make artifacts` to regenerate the HLO artifacts)",
+                    c.file
+                );
             }
             if c.n == 0 || c.s == 0 {
                 bail!("degenerate size class {}", c.name);

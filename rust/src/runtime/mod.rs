@@ -1,20 +1,87 @@
-//! PJRT runtime: loads the AOT-compiled `dense_eval` HLO artifacts
-//! produced by `python/compile/aot.py` and executes them from the rust hot
-//! path. Python never runs at request time — artifacts are bytes on disk.
+//! Dense-evaluation runtime with pluggable backends.
+//!
+//! * [`backend::NativeBackend`] — the default data plane: exact pure-rust
+//!   f64 evaluation. Always built; needs no artifacts.
+//! * [`engine::Engine`] + [`dense::DenseEvaluator`] (cargo feature
+//!   `pjrt`) — loads the AOT-compiled `dense_eval` HLO artifacts produced
+//!   by `python/compile/aot.py` (`make artifacts`) and executes them
+//!   through the PJRT CPU client. Python never runs at request time —
+//!   artifacts are bytes on disk.
 
+pub mod backend;
 pub mod dense;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
 
-pub use dense::{DenseEval, DenseEvaluator};
-pub use engine::{DenseInputs, DenseOutputs, Engine};
+pub use backend::{DenseBackend, NativeBackend};
+#[cfg(feature = "pjrt")]
+pub use dense::DenseEvaluator;
+pub use dense::{DenseEval, DenseInputs, DenseOutputs};
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;
 pub use manifest::Manifest;
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
 
 /// Default artifacts directory: `$CECFLOW_ARTIFACTS` or `./artifacts`.
+///
+/// This only names the location; use [`resolve_artifacts_dir`] when the
+/// caller needs the directory to actually exist.
 pub fn default_artifacts_dir() -> PathBuf {
     std::env::var_os("CECFLOW_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// [`default_artifacts_dir`], validated: returns a contextful error when
+/// the directory is missing instead of letting downstream file reads fail
+/// with a bare "No such file or directory".
+pub fn resolve_artifacts_dir() -> Result<PathBuf> {
+    let dir = default_artifacts_dir();
+    ensure_artifacts_dir(&dir)?;
+    Ok(dir)
+}
+
+/// Single source of truth for the missing-artifacts-directory error
+/// (shared by [`resolve_artifacts_dir`] and `Manifest::load`).
+pub(crate) fn ensure_artifacts_dir(dir: &Path) -> Result<()> {
+    anyhow::ensure!(
+        dir.is_dir(),
+        "artifacts directory {dir:?} does not exist — set $CECFLOW_ARTIFACTS to the AOT \
+         output directory or generate it with `make artifacts`"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test (not several) so parallel test threads never race on the
+    // process-global CECFLOW_ARTIFACTS variable.
+    #[test]
+    fn artifacts_dir_resolution_and_errors() {
+        // env var overrides the default location
+        std::env::set_var("CECFLOW_ARTIFACTS", "/tmp/somewhere-else");
+        assert_eq!(
+            default_artifacts_dir(),
+            PathBuf::from("/tmp/somewhere-else")
+        );
+
+        // a missing directory must error with actionable context rather
+        // than panic or let downstream file reads fail bare
+        std::env::set_var(
+            "CECFLOW_ARTIFACTS",
+            std::env::temp_dir().join(format!("cecflow-noexist-{}", std::process::id())),
+        );
+        let err = resolve_artifacts_dir().unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+        assert!(err.contains("CECFLOW_ARTIFACTS"), "{err}");
+
+        std::env::remove_var("CECFLOW_ARTIFACTS");
+        assert_eq!(default_artifacts_dir(), PathBuf::from("artifacts"));
+    }
 }

@@ -1,0 +1,182 @@
+//! Randomized invariant suite for the per-node projection QP
+//! (`algo/simplex_qp.rs`), the numerical kernel every SGP/SPOO/LCOR
+//! update runs through. Across seeded random instances — including the
+//! extreme scalings the optimizer produces near capacity poles — the
+//! projected strategy row must:
+//!
+//!  1. be non-negative in every slot,
+//!  2. sum to exactly 1 (within float renormalization tolerance),
+//!  3. keep blocked slots at exactly 0.0 (bitwise, not just small:
+//!     blocked entries are what guarantees loop-freedom),
+//!  4. never increase the QP objective relative to staying at `φ`
+//!     (v = φ is feasible with objective 0).
+//!
+//! Failures print the offending seed so any case replays deterministically.
+
+use cecflow::algo::simplex_qp::{qp_objective, scaled_simplex_qp};
+use cecflow::util::rng::Pcg;
+
+/// Draw a random feasible row: φ on the simplex restricted to unblocked
+/// slots, plus marginals and scaling diagonals in optimizer-realistic
+/// ranges.
+#[allow(clippy::type_complexity)]
+fn random_instance(
+    rng: &mut Pcg,
+    extreme: bool,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<bool>) {
+    let n = rng.int_range(1, 9);
+    let mut blocked: Vec<bool> = (0..n).map(|_| rng.chance(0.3)).collect();
+    if blocked.iter().all(|&b| b) {
+        blocked[rng.below(n)] = false;
+    }
+
+    // φ: random mass on the unblocked slots, normalized
+    let mut phi = vec![0.0; n];
+    let mut total = 0.0;
+    for j in 0..n {
+        if !blocked[j] && rng.chance(0.7) {
+            phi[j] = rng.uniform(0.0, 1.0);
+            total += phi[j];
+        }
+    }
+    if total <= 0.0 {
+        let j = (0..n).find(|&j| !blocked[j]).unwrap();
+        phi[j] = 1.0;
+        total = 1.0;
+    }
+    for p in phi.iter_mut() {
+        *p /= total;
+    }
+
+    let (delta_lo, delta_hi, scale_lo, scale_hi) = if extreme {
+        // capacity-pole regime: huge marginals, near-floor and
+        // near-clamp scaling diagonals (sgp.rs floors at 1e-6·inflate
+        // and clamps at 1e12)
+        (-1e6, 1e8, 1e-6, 1e12)
+    } else {
+        (-5.0, 10.0, 0.05, 5.0)
+    };
+    let delta: Vec<f64> = (0..n).map(|_| rng.uniform(delta_lo, delta_hi)).collect();
+    let scale: Vec<f64> = (0..n)
+        .map(|_| {
+            if extreme {
+                // log-uniform so tiny and enormous diagonals both appear
+                let e = rng.uniform(scale_lo.log10(), scale_hi.log10());
+                10f64.powf(e)
+            } else {
+                rng.uniform(scale_lo, scale_hi)
+            }
+        })
+        .collect();
+    (phi, delta, scale, blocked)
+}
+
+fn check_invariants(
+    seed: u64,
+    phi: &[f64],
+    delta: &[f64],
+    scale: &[f64],
+    blocked: &[bool],
+) {
+    let v = scaled_simplex_qp(phi, delta, scale, blocked);
+    assert_eq!(v.len(), phi.len(), "seed {seed}: arity changed");
+
+    // (1) non-negativity
+    for (j, &x) in v.iter().enumerate() {
+        assert!(
+            x >= 0.0,
+            "seed {seed}: negative fraction {x} at slot {j} (v = {v:?})"
+        );
+        assert!(x.is_finite(), "seed {seed}: non-finite fraction at slot {j}");
+    }
+
+    // (2) simplex constraint
+    let sum: f64 = v.iter().sum();
+    assert!(
+        (sum - 1.0).abs() < 1e-9,
+        "seed {seed}: row sums to {sum} (v = {v:?})"
+    );
+
+    // (3) blocked slots are *exactly* zero
+    for (j, &b) in blocked.iter().enumerate() {
+        if b {
+            assert_eq!(
+                v[j], 0.0,
+                "seed {seed}: blocked slot {j} carries mass {} (v = {v:?})",
+                v[j]
+            );
+        }
+    }
+
+    // (4) never worse than staying put (v = φ is feasible, objective 0)
+    let obj = qp_objective(phi, delta, scale, &v);
+    let tol = 1e-6
+        * (1.0
+            + delta.iter().fold(0.0f64, |a, &d| a.max(d.abs()))
+            + scale.iter().fold(0.0f64, |a, &s| a.max(s.abs())) * 1e-9);
+    assert!(
+        obj <= tol,
+        "seed {seed}: projection increased the QP objective: {obj} (v = {v:?})"
+    );
+}
+
+#[test]
+fn qp_invariants_hold_across_random_seeds() {
+    for seed in 0..400u64 {
+        let mut rng = Pcg::new(90_000 + seed);
+        let (phi, delta, scale, blocked) = random_instance(&mut rng, false);
+        check_invariants(seed, &phi, &delta, &scale, &blocked);
+    }
+}
+
+#[test]
+fn qp_invariants_hold_under_extreme_scalings() {
+    for seed in 0..400u64 {
+        let mut rng = Pcg::new(91_000 + seed);
+        let (phi, delta, scale, blocked) = random_instance(&mut rng, true);
+        check_invariants(seed, &phi, &delta, &scale, &blocked);
+    }
+}
+
+#[test]
+fn qp_single_free_slot_takes_all_mass() {
+    // Degenerate rows (one unblocked slot) are common at tree leaves:
+    // the answer must be exactly the indicator of that slot.
+    for seed in 0..50u64 {
+        let mut rng = Pcg::new(92_000 + seed);
+        let n = rng.int_range(1, 6);
+        let free = rng.below(n);
+        let blocked: Vec<bool> = (0..n).map(|j| j != free).collect();
+        let mut phi = vec![0.0; n];
+        phi[free] = 1.0;
+        let delta: Vec<f64> = (0..n).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let scale: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 2.0)).collect();
+        let v = scaled_simplex_qp(&phi, &delta, &scale, &blocked);
+        for (j, &x) in v.iter().enumerate() {
+            assert_eq!(x, if j == free { 1.0 } else { 0.0 }, "seed {seed} slot {j}");
+        }
+    }
+}
+
+#[test]
+fn qp_moves_mass_toward_cheaper_marginals() {
+    // Directional sanity across seeds: the slot with the strictly lowest
+    // marginal never loses mass.
+    for seed in 0..100u64 {
+        let mut rng = Pcg::new(93_000 + seed);
+        let (phi, mut delta, scale, blocked) = random_instance(&mut rng, false);
+        let free: Vec<usize> = (0..phi.len()).filter(|&j| !blocked[j]).collect();
+        if free.len() < 2 {
+            continue;
+        }
+        let best = free[rng.below(free.len())];
+        delta[best] = delta.iter().cloned().fold(f64::INFINITY, f64::min) - 1.0;
+        let v = scaled_simplex_qp(&phi, &delta, &scale, &blocked);
+        assert!(
+            v[best] >= phi[best] - 1e-9,
+            "seed {seed}: min-marginal slot lost mass ({} -> {})",
+            phi[best],
+            v[best]
+        );
+    }
+}

@@ -1,0 +1,433 @@
+//! Vendored, minimal stand-in for the `anyhow` crate (1.x API subset).
+//!
+//! The build environment for this repository has no crates.io access, so
+//! the pieces of `anyhow` the workspace actually uses are reimplemented
+//! here with the same names and semantics:
+//!
+//! * [`Error`] — a boxed dynamic error with a context chain. `Display`
+//!   prints the outermost message; the alternate form (`{:#}`) prints the
+//!   whole chain separated by `: `, and `Debug` prints a `Caused by:`
+//!   listing, matching real-anyhow conventions.
+//! * [`Result<T>`] — `std::result::Result<T, Error>` with a defaultable
+//!   error parameter.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`], [`format_err!`] macros.
+//!
+//! Swapping back to the real crate is a one-line change in the root
+//! `Cargo.toml`; the call sites in this workspace need no changes.
+//!
+//! Known divergence from real anyhow: the expression arm of [`anyhow!`]
+//! (`anyhow!(some_error_value)`) formats the value as a message instead
+//! of preserving it as a typed source (real anyhow keeps the error chain
+//! via autoref specialization). No call site in this workspace uses that
+//! arm — prefer `Error::new(e)` / `.context(..)` when wrapping an error
+//! value, which do preserve the chain here and under the real crate.
+
+use std::error::Error as StdError;
+use std::fmt::{self, Debug, Display};
+
+/// `Result<T, anyhow::Error>` with a defaultable error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A boxed dynamic error with context. Deliberately does **not** implement
+/// `std::error::Error` so the blanket `From<E: std::error::Error>` below
+/// stays coherent (same trick as the real crate).
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Wrap any concrete error type.
+    pub fn new<E>(error: E) -> Self
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error {
+            inner: Box::new(error),
+        }
+    }
+
+    /// Build an error from a printable message.
+    pub fn msg<M>(message: M) -> Self
+    where
+        M: Display + Debug + Send + Sync + 'static,
+    {
+        Error {
+            inner: Box::new(MessageError(message)),
+        }
+    }
+
+    fn from_display<C>(message: C) -> Self
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        Error {
+            inner: Box::new(DisplayError(message)),
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C>(self, context: C) -> Self
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        Error {
+            inner: Box::new(ContextError {
+                context,
+                source: self.inner,
+            }),
+        }
+    }
+
+    /// Iterate the error chain, outermost context first.
+    pub fn chain(&self) -> Chain<'_> {
+        let first: &(dyn StdError + 'static) = &*self.inner;
+        Chain { next: Some(first) }
+    }
+
+    /// The innermost (original) error of the chain.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        self.chain().last().expect("chain is never empty")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        if f.alternate() {
+            for cause in self.chain().skip(1) {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut causes = self.chain().skip(1).peekable();
+        if causes.peek().is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for cause in causes {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Iterator over an [`Error`]'s cause chain.
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let current = self.next?;
+        self.next = current.source();
+        Some(current)
+    }
+}
+
+// ---- concrete error payloads ------------------------------------------
+
+struct MessageError<M>(M);
+
+impl<M: Display> Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: Debug> Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        Debug::fmt(&self.0, f)
+    }
+}
+
+impl<M> StdError for MessageError<M> where M: Display + Debug {}
+
+struct DisplayError<C>(C);
+
+impl<C: Display> Display for DisplayError<C> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        Display::fmt(&self.0, f)
+    }
+}
+
+impl<C: Display> Debug for DisplayError<C> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        Display::fmt(&self.0, f)
+    }
+}
+
+impl<C> StdError for DisplayError<C> where C: Display {}
+
+struct ContextError<C> {
+    context: C,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl<C: Display> Display for ContextError<C> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        Display::fmt(&self.context, f)
+    }
+}
+
+impl<C: Display> Debug for ContextError<C> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        Display::fmt(&self.context, f)
+    }
+}
+
+impl<C> StdError for ContextError<C>
+where
+    C: Display,
+{
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        let src: &(dyn StdError + 'static) = &*self.source;
+        Some(src)
+    }
+}
+
+// ---- Context extension trait ------------------------------------------
+
+mod ext {
+    use super::*;
+
+    /// Sealed adapter: anything that can be upgraded to [`Error`] with an
+    /// added context frame. Implemented for all `std::error::Error` types
+    /// and for [`Error`] itself (coherent because `Error` does not
+    /// implement `std::error::Error`).
+    pub trait StdErrorExt {
+        fn ext_context<C>(self, context: C) -> Error
+        where
+            C: Display + Send + Sync + 'static;
+    }
+
+    impl<E> StdErrorExt for E
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        fn ext_context<C>(self, context: C) -> Error
+        where
+            C: Display + Send + Sync + 'static,
+        {
+            Error::new(self).context(context)
+        }
+    }
+
+    impl StdErrorExt for Error {
+        fn ext_context<C>(self, context: C) -> Error
+        where
+            C: Display + Send + Sync + 'static,
+        {
+            self.context(context)
+        }
+    }
+}
+
+/// Attach context to failure values (`Result` and `Option`).
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::StdErrorExt + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|error| error.ext_context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|error| error.ext_context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::from_display(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::from_display(f()))
+    }
+}
+
+// ---- macros ------------------------------------------------------------
+
+/// Build an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Alias of [`anyhow!`], kept for API parity with the real crate.
+#[macro_export]
+macro_rules! format_err {
+    ($($t:tt)*) => { $crate::anyhow!($($t)*) };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug)]
+    struct Leaf;
+
+    impl Display for Leaf {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "leaf failure")
+        }
+    }
+
+    impl StdError for Leaf {}
+
+    fn fails() -> Result<()> {
+        Err(Error::new(Leaf))
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let err = fails().context("outer").unwrap_err();
+        assert_eq!(err.to_string(), "outer");
+    }
+
+    #[test]
+    fn alternate_display_shows_chain() {
+        let err = fails().context("mid").context("outer").unwrap_err();
+        assert_eq!(format!("{err:#}"), "outer: mid: leaf failure");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let err = fails().context("outer").unwrap_err();
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("outer"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("leaf failure"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn io_fail() -> Result<String> {
+            let text = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(text)
+        }
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn option_context_and_with_context() {
+        let none: Option<u32> = None;
+        let err = none.context("missing value").unwrap_err();
+        assert_eq!(err.to_string(), "missing value");
+        let none: Option<u32> = None;
+        let err = none.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(err.to_string(), "missing thing");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let err = fails().context("inner").context("outer").unwrap_err();
+        assert_eq!(err.chain().count(), 3);
+        assert_eq!(err.root_cause().to_string(), "leaf failure");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 7;
+        let err = anyhow!("bad value {x}");
+        assert_eq!(err.to_string(), "bad value 7");
+
+        fn bails() -> Result<()> {
+            bail!("fail {}", 1)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "fail 1");
+
+        fn ensures(v: i32) -> Result<i32> {
+            ensure!(v > 0, "must be positive, got {v}");
+            Ok(v)
+        }
+        assert!(ensures(1).is_ok());
+        assert_eq!(
+            ensures(-2).unwrap_err().to_string(),
+            "must be positive, got -2"
+        );
+
+        fn ensures_bare(v: i32) -> Result<i32> {
+            ensure!(v > 0);
+            Ok(v)
+        }
+        assert!(ensures_bare(-1).unwrap_err().to_string().contains("v > 0"));
+    }
+}
