@@ -1,0 +1,111 @@
+//! Sweep smoke driver: a small `scenario × seed × algorithm` grid on
+//! worker threads, printing the aggregated report and writing
+//! CSV/JSON under `results/`. CI runs this with `CECFLOW_BENCH_FAST=1`
+//! (one scenario, two seeds) as the parallel-sweep smoke test.
+//!
+//! Shape checks (paper claims, not absolute values):
+//!   * SGP's mean final cost is at or below every baseline's in every
+//!     scenario group;
+//!   * per-cell results are identical when the same grid is re-run on a
+//!     different worker count (the determinism contract, also pinned by
+//!     `rust/tests/sweep_determinism.rs`).
+//!
+//! Run: `cargo bench --bench sweep`   (CECFLOW_BENCH_FAST=1 shrinks the grid)
+
+use std::time::Instant;
+
+use cecflow::coordinator::report::{write_csv, write_json};
+use cecflow::coordinator::{run_sweep, Algorithm, RunConfig, SweepSpec};
+use cecflow::util::table::fnum;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("CECFLOW_BENCH_FAST").is_ok();
+    let spec = SweepSpec {
+        scenarios: if fast {
+            vec!["abilene".into()]
+        } else {
+            vec!["abilene".into(), "connected-er".into(), "balanced-tree".into()]
+        },
+        seeds: if fast { vec![1, 2] } else { vec![1, 2, 3, 4] },
+        algorithms: vec![Algorithm::Sgp, Algorithm::Gp, Algorithm::Lpr],
+        rate_scale: 1.0,
+        run: RunConfig::quick(),
+    };
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(4);
+
+    eprintln!(
+        "[sweep] {} cells on {workers} workers ...",
+        spec.cells().len()
+    );
+    let start = Instant::now();
+    let report = run_sweep(&spec, workers)?;
+    let wall = start.elapsed().as_secs_f64();
+    println!("{}", report.render());
+    println!("sweep wall time: {wall:.2}s on {workers} workers");
+
+    // ---- machine-readable outputs ----
+    write_json("sweep.json", &report.to_json())?;
+    let rows: Vec<Vec<String>> = report
+        .cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.cell.scenario.clone(),
+                c.cell.seed.to_string(),
+                c.cell.algorithm.name().to_string(),
+                fnum(c.final_cost),
+                c.iterations.to_string(),
+                c.iters_to_1pct.to_string(),
+                format!("{:.3}", c.wall_seconds),
+            ]
+        })
+        .collect();
+    write_csv(
+        "sweep.csv",
+        &[
+            "scenario",
+            "seed",
+            "algorithm",
+            "final_cost",
+            "iterations",
+            "iters_to_1pct",
+            "wall_seconds",
+        ],
+        &rows,
+    )?;
+
+    // ---- shape assertions ----
+    let mut ok = true;
+    let groups = report.groups();
+    for g in &groups {
+        if g.algorithm != "sgp" {
+            continue;
+        }
+        for other in groups.iter().filter(|o| o.scenario == g.scenario) {
+            if g.mean_cost > other.mean_cost * 1.001 {
+                println!(
+                    "SHAPE VIOLATION: {}: sgp mean {} > {} mean {}",
+                    g.scenario,
+                    fnum(g.mean_cost),
+                    other.algorithm,
+                    fnum(other.mean_cost)
+                );
+                ok = false;
+            }
+        }
+    }
+    // determinism spot-check across worker counts (serial rerun)
+    let rerun = run_sweep(&spec, 1)?;
+    if rerun.fingerprint() != report.fingerprint() {
+        println!("SHAPE VIOLATION: sweep results differ between 1 and {workers} workers");
+        ok = false;
+    }
+    println!("sweep shape: {}", if ok { "OK" } else { "VIOLATIONS (see above)" });
+    if !ok {
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -459,41 +459,83 @@ impl Sgp {
             .map(|s| blocked_sets(net, phi, &marg, s))
             .collect();
 
+        // Safeguard retry ladder, priced in *batches*: the first probe (the
+        // adapted trust step, accepted in the common case) goes alone, and
+        // every retry round prices `RETRY_BATCH` escalating-inflation
+        // candidates through one `evaluate_batch` call instead of N
+        // sequential `evaluate` calls. Candidates are scanned in ladder
+        // order, so the accepted step (and the retry/rollback counters up
+        // to it) are exactly those of the sequential ladder.
+        const MAX_ATTEMPTS: usize = 40;
+        const RETRY_BATCH: usize = 4;
+        // f32 data plane: allow relative rounding slack in the descent
+        // test (see DESIGN.md §3.7).
+        let slack = 1e-5 * flows.total_cost.abs().max(1.0);
+
         let mut inflate = self.trust;
         let mut attempts = 0usize;
-        let mut accepted = false;
-        for _attempt in 0..40 {
-            attempts += 1;
-            let cand = self.propose(net, phi, &flows, &marg, &blocked_all, inflate);
-            if !cand.is_loop_free(net) {
-                self.rollbacks += 1;
+        let mut accepted: Option<(crate::runtime::DenseEval, f64, usize)> = None;
+        while attempts < MAX_ATTEMPTS && accepted.is_none() {
+            let chunk = if attempts == 0 { 1 } else { RETRY_BATCH };
+            let mut batch: Vec<Strategy> = Vec::with_capacity(chunk);
+            // (inflation, 1-based attempt index) per batched candidate
+            let mut meta: Vec<(f64, usize)> = Vec::with_capacity(chunk);
+            // attempt indices of loop-forming (dropped) candidates; the
+            // sequential ladder would only have proposed those *before*
+            // the accepted attempt, so rollbacks are tallied after the
+            // scan decides where acceptance lands.
+            let mut loop_attempts: Vec<usize> = Vec::new();
+            while batch.len() < chunk && attempts < MAX_ATTEMPTS {
+                attempts += 1;
+                let cand = self.propose(net, phi, &flows, &marg, &blocked_all, inflate);
+                let cand_inflate = inflate;
                 inflate *= 4.0;
-                continue;
+                if !cand.is_loop_free(net) {
+                    loop_attempts.push(attempts);
+                    continue;
+                }
+                meta.push((cand_inflate, attempts));
+                batch.push(cand);
             }
-            let cand_cost = evaluator.evaluate(net, &cand)?.total_cost;
-            // f32 data plane: allow relative rounding slack in the descent
-            // test (see DESIGN.md §3.7).
-            let slack = 1e-5 * flows.total_cost.abs().max(1.0);
-            if cand_cost.is_finite() && self.accepts(net, &flows, phi, &cand, cand_cost, slack)
-            {
-                *phi = cand;
-                accepted = true;
-                break;
+            let mut evals = evaluator.evaluate_batch(net, &batch)?;
+            let mut chosen: Option<usize> = None;
+            for k in 0..batch.len() {
+                let cand_cost = evals[k].total_cost;
+                if cand_cost.is_finite()
+                    && self.accepts(net, &flows, phi, &batch[k], cand_cost, slack)
+                {
+                    chosen = Some(k);
+                    break;
+                }
+                self.retries += 1;
             }
-            self.retries += 1;
-            inflate *= 4.0;
-        }
-        if accepted {
-            self.trust = if attempts == 1 {
-                (self.trust * 0.5).max(1e-5)
-            } else {
-                (inflate * 0.25).min(1e6)
-            };
+            let accepted_attempt = chosen.map(|k| meta[k].1).unwrap_or(usize::MAX);
+            self.rollbacks += loop_attempts
+                .iter()
+                .filter(|&&a| a < accepted_attempt)
+                .count();
+            if let Some(k) = chosen {
+                *phi = batch.swap_remove(k);
+                accepted = Some((evals.swap_remove(k), meta[k].0, meta[k].1));
+            }
         }
 
-        let final_eval = evaluator.evaluate(net, phi)?;
-        let total = final_eval.total_cost;
-        let (_, marg2) = assemble(final_eval, phi)?;
+        // Final stats: the accepted candidate's evaluation *is* the state
+        // of the updated φ, so it is reused instead of re-evaluating (and
+        // with no accepted step, φ — hence `flows`/`marg` — is unchanged).
+        let (total, marg2) = match accepted {
+            Some((ev, acc_inflate, acc_attempt)) => {
+                self.trust = if acc_attempt == 1 {
+                    (self.trust * 0.5).max(1e-5)
+                } else {
+                    (acc_inflate * 0.25).min(1e6)
+                };
+                let total = ev.total_cost;
+                let (_, marg2) = assemble(ev, phi)?;
+                (total, marg2)
+            }
+            None => (flows.total_cost, marg),
+        };
         Ok(IterationStats {
             total_cost: total,
             residual: theorem1_residual(net, phi, &marg2),

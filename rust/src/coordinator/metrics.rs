@@ -33,6 +33,29 @@ pub fn travel_distance(net: &Network, flows: &FlowState) -> TravelDistance {
     }
 }
 
+/// First iteration (1-based) whose cost is within 1% of the final cost —
+/// the convergence-speed metric of Fig. 5b, shared by [`super::runner`]
+/// and the [`super::sweep`] aggregator.
+///
+/// Non-finite trajectories are handled conservatively: a run that never
+/// reaches a finite final cost "converges" only at its last iteration
+/// (`costs.len()`), never at iteration 1 via `x <= ∞`.
+pub fn iters_to_1pct(costs: &[f64]) -> usize {
+    if costs.is_empty() {
+        return 0;
+    }
+    let fin = costs[costs.len() - 1];
+    if !fin.is_finite() {
+        return costs.len();
+    }
+    let thresh = fin * 1.01;
+    costs
+        .iter()
+        .position(|&c| c <= thresh)
+        .map(|p| p + 1)
+        .unwrap_or(costs.len())
+}
+
 /// Cost decomposition: communication vs computation share of `T`.
 #[derive(Clone, Copy, Debug)]
 pub struct CostBreakdown {
@@ -79,6 +102,19 @@ mod tests {
         let td = travel_distance(&net, &flows);
         assert!((td.l_data - 2.0).abs() < 1e-9);
         assert_eq!(td.l_result, 0.0);
+    }
+
+    #[test]
+    fn iters_to_1pct_basic_and_nonfinite() {
+        assert_eq!(iters_to_1pct(&[]), 0);
+        assert_eq!(iters_to_1pct(&[5.0]), 1);
+        // 10, 2, 1.005, 1.0: first within 1% of 1.0 is index 2 -> iter 3
+        assert_eq!(iters_to_1pct(&[10.0, 2.0, 1.005, 1.0]), 3);
+        // a saturated run must not "converge at iteration 1"
+        assert_eq!(iters_to_1pct(&[f64::INFINITY, f64::INFINITY]), 2);
+        assert_eq!(iters_to_1pct(&[10.0, f64::NAN]), 2);
+        // early saturation followed by finite descent is fine
+        assert_eq!(iters_to_1pct(&[f64::INFINITY, 2.0, 1.0]), 3);
     }
 
     #[test]

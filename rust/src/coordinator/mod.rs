@@ -1,12 +1,14 @@
 //! The coordination layer: scenario construction (Table II), optimization
-//! loop driving, metrics, reporting, and experiment configuration — the
-//! pieces `main.rs`, the examples and every bench build on.
+//! loop driving, parallel scenario sweeps, metrics, reporting, and
+//! experiment configuration — the pieces `main.rs`, the examples and
+//! every bench build on.
 
 pub mod config;
 pub mod metrics;
 pub mod report;
 pub mod runner;
 pub mod scenario;
+pub mod sweep;
 
 use anyhow::{Context, Result};
 
@@ -18,6 +20,7 @@ use crate::model::strategy::Strategy;
 pub use config::{Algorithm, ExperimentConfig, Schedule};
 pub use runner::{optimize, optimize_accelerated, RunConfig, RunResult};
 pub use scenario::{connected_er_servers, CostKind, Scenario, ScenarioSpec};
+pub use sweep::{run_sweep, CellResult, GroupSummary, SweepCell, SweepReport, SweepSpec};
 
 /// Unified outcome across iterative algorithms and the one-shot LPR.
 #[derive(Clone, Debug)]

@@ -70,13 +70,8 @@ impl RunResult {
         wall: f64,
         phi: Strategy,
     ) -> RunResult {
-        let fin = *costs.last().expect("empty run");
-        let thresh = fin * 1.01;
-        let iters_to_1pct = costs
-            .iter()
-            .position(|&c| c <= thresh)
-            .map(|p| p + 1)
-            .unwrap_or(costs.len());
+        assert!(!costs.is_empty(), "empty run");
+        let iters_to_1pct = super::metrics::iters_to_1pct(&costs);
         RunResult {
             algorithm: algorithm.to_string(),
             costs,
@@ -88,13 +83,34 @@ impl RunResult {
     }
 }
 
+/// Converged when the relative cost drop over the trailing `patience`
+/// window falls below `tol` — but only a fully *finite* window counts: a
+/// saturated (`+∞`) or otherwise non-finite iteration inside the window
+/// can never attest a steady state (`∞ − ∞ = NaN` compares false, but an
+/// all-`∞` plateau would compare "stable" under a naive equality check).
 fn converged(costs: &[f64], cfg: &RunConfig) -> bool {
     if costs.len() < cfg.patience + 1 {
         return false;
     }
-    let now = costs[costs.len() - 1];
-    let then = costs[costs.len() - 1 - cfg.patience];
+    let window = &costs[costs.len() - 1 - cfg.patience..];
+    if window.iter().any(|c| !c.is_finite()) {
+        return false;
+    }
+    let now = window[window.len() - 1];
+    let then = window[0];
     (then - now).abs() <= cfg.tol * then.abs().max(1e-12)
+}
+
+/// Record one iteration's stats: residuals of saturated iterations can
+/// come out NaN (∞ marginals feeding the complementarity products); they
+/// are stored as `+∞` so `final_residual` is never NaN.
+fn record(costs: &mut Vec<f64>, residuals: &mut Vec<f64>, st: &crate::algo::IterationStats) {
+    costs.push(st.total_cost);
+    residuals.push(if st.residual.is_nan() {
+        f64::INFINITY
+    } else {
+        st.residual
+    });
 }
 
 /// Run any [`Optimizer`] to steady state (native evaluation).
@@ -110,8 +126,7 @@ pub fn optimize(
     let start = Instant::now();
     for _ in 0..cfg.max_iters {
         let st = opt.step(net, &mut phi)?;
-        costs.push(st.total_cost);
-        residuals.push(st.residual);
+        record(&mut costs, &mut residuals, &st);
         if converged(&costs, cfg) {
             break;
         }
@@ -141,8 +156,7 @@ pub fn optimize_accelerated(
     let start = Instant::now();
     for _ in 0..cfg.max_iters {
         let st = sgp.step_dense(net, &mut phi, evaluator)?;
-        costs.push(st.total_cost);
-        residuals.push(st.residual);
+        record(&mut costs, &mut residuals, &st);
         if converged(&costs, cfg) {
             break;
         }
@@ -211,6 +225,82 @@ mod tests {
                 w[1]
             );
         }
+    }
+
+    #[test]
+    fn converged_ignores_nonfinite_windows() {
+        let cfg = RunConfig {
+            max_iters: 100,
+            tol: 1e-6,
+            patience: 3,
+        };
+        let inf = f64::INFINITY;
+        // a flat saturated plateau is NOT convergence
+        assert!(!converged(&[inf, inf, inf, inf, inf], &cfg));
+        // ∞ anywhere inside the trailing window blocks convergence
+        assert!(!converged(&[10.0, 10.0, inf, 10.0, 10.0], &cfg));
+        assert!(!converged(&[10.0, 10.0, f64::NAN, 10.0, 10.0], &cfg));
+        // ∞ *before* the window is forgotten once a finite window stabilizes
+        assert!(converged(&[inf, 10.0, 10.0, 10.0, 10.0], &cfg));
+        // ordinary finite behaviour unchanged
+        assert!(converged(&[12.0, 10.0, 10.0, 10.0, 10.0], &cfg));
+        assert!(!converged(&[12.0, 11.0, 10.5, 10.2, 10.0], &cfg));
+        assert!(!converged(&[10.0, 10.0], &cfg)); // shorter than window
+    }
+
+    /// Optimizer stub: saturated (∞ cost, NaN residual) for the first
+    /// `sat` iterations, then a geometric descent to 10.
+    struct Saturating {
+        sat: usize,
+        t: usize,
+    }
+
+    impl crate::algo::Optimizer for Saturating {
+        fn name(&self) -> &'static str {
+            "saturating-stub"
+        }
+
+        fn step(
+            &mut self,
+            _net: &crate::model::network::Network,
+            _phi: &mut Strategy,
+        ) -> anyhow::Result<crate::algo::IterationStats> {
+            self.t += 1;
+            if self.t <= self.sat {
+                Ok(crate::algo::IterationStats {
+                    total_cost: f64::INFINITY,
+                    residual: f64::NAN,
+                })
+            } else {
+                let k = (self.t - self.sat) as i32;
+                Ok(crate::algo::IterationStats {
+                    total_cost: 10.0 + 2.0f64.powi(-k),
+                    residual: 2.0f64.powi(-k),
+                })
+            }
+        }
+    }
+
+    #[test]
+    fn saturated_iterations_never_fake_convergence_or_nan_residual() {
+        let net = diamond(true);
+        let phi0 = Strategy::local_compute_init(&net);
+        let cfg = RunConfig {
+            max_iters: 60,
+            tol: 1e-9,
+            patience: 3,
+        };
+        let mut opt = Saturating { sat: 8, t: 0 };
+        let res = optimize(&net, &mut opt, &phi0, &cfg).unwrap();
+        // must run past the 8 saturated iterations (patience is 3: a naive
+        // window check would have "converged" on the ∞ plateau)
+        assert!(res.costs.len() > 8, "stopped at {}", res.costs.len());
+        assert!(res.final_cost().is_finite());
+        assert!(!res.final_residual().is_nan());
+        // no recorded residual is NaN (saturated ones are stored as +∞)
+        assert!(res.residuals.iter().all(|r| !r.is_nan()));
+        // iters-to-1% must not be iteration 1 via `x <= ∞`
+        assert!(res.iters_to_1pct > 8, "iters_to_1pct {}", res.iters_to_1pct);
     }
 
     #[test]

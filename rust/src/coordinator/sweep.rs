@@ -1,0 +1,459 @@
+//! Parallel scenario sweeps: run a grid of `scenario × seed × algorithm`
+//! cells across worker threads and aggregate the outcomes into one
+//! comparable report — the machinery behind the `cecflow sweep`
+//! subcommand and `benches/sweep.rs`.
+//!
+//! Determinism is a hard contract, pinned by
+//! `rust/tests/sweep_determinism.rs`: every cell derives all randomness
+//! from its own `(scenario, seed)` pair (no RNG state is shared between
+//! workers), and cells are written back by index, so the per-cell results
+//! of a sweep are identical for any worker count — only wall-clock
+//! timings vary. Workers pull cells from an atomic cursor (work
+//! stealing), which keeps long cells (e.g. SW) from serializing behind a
+//! static partition.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::stats::summarize;
+use crate::util::table::{fnum, Table};
+
+use super::{build_scenario_network, metrics, run_algorithm, Algorithm, RunConfig};
+
+/// A sweep specification: the cell grid is the cross product
+/// `scenarios × seeds × algorithms`, every cell run at `rate_scale` under
+/// the same stopping rule.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub scenarios: Vec<String>,
+    pub seeds: Vec<u64>,
+    pub algorithms: Vec<Algorithm>,
+    pub rate_scale: f64,
+    pub run: RunConfig,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        SweepSpec {
+            scenarios: vec!["abilene".to_string(), "connected-er".to_string()],
+            seeds: vec![1, 2, 3],
+            algorithms: vec![Algorithm::Sgp, Algorithm::Gp, Algorithm::Lpr],
+            rate_scale: 1.0,
+            run: RunConfig::quick(),
+        }
+    }
+}
+
+/// One grid cell: a scenario instance (name + seed) optimized by one
+/// algorithm.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SweepCell {
+    pub scenario: String,
+    pub seed: u64,
+    pub algorithm: Algorithm,
+}
+
+/// The outcome of one cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub cell: SweepCell,
+    pub final_cost: f64,
+    pub iterations: usize,
+    pub iters_to_1pct: usize,
+    pub wall_seconds: f64,
+}
+
+/// Aggregate over the seeds of one `(scenario, algorithm)` group.
+#[derive(Clone, Debug)]
+pub struct GroupSummary {
+    pub scenario: String,
+    pub algorithm: String,
+    pub cells: usize,
+    pub mean_cost: f64,
+    pub p95_cost: f64,
+    pub mean_iters_to_1pct: f64,
+    pub mean_wall_seconds: f64,
+}
+
+/// A completed sweep: per-cell results in grid order plus aggregation.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub cells: Vec<CellResult>,
+    pub workers: usize,
+}
+
+impl SweepSpec {
+    /// The cell grid in canonical order: scenarios outermost, then seeds,
+    /// then algorithms. This order is part of the determinism contract —
+    /// reports compare cell-by-cell across runs and worker counts.
+    pub fn cells(&self) -> Vec<SweepCell> {
+        let mut out = Vec::with_capacity(
+            self.scenarios.len() * self.seeds.len() * self.algorithms.len(),
+        );
+        for scenario in &self.scenarios {
+            for &seed in &self.seeds {
+                for &algorithm in &self.algorithms {
+                    out.push(SweepCell {
+                        scenario: scenario.clone(),
+                        seed,
+                        algorithm,
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+fn run_cell(cell: &SweepCell, spec: &SweepSpec) -> Result<CellResult> {
+    let net = build_scenario_network(&cell.scenario, cell.seed, spec.rate_scale)?;
+    let start = Instant::now();
+    let out = run_algorithm(&net, cell.algorithm, &spec.run)?;
+    let final_cost = if out.final_cost.is_nan() {
+        f64::INFINITY
+    } else {
+        out.final_cost
+    };
+    Ok(CellResult {
+        cell: cell.clone(),
+        final_cost,
+        iterations: out.iterations,
+        iters_to_1pct: metrics::iters_to_1pct(&out.costs),
+        wall_seconds: start.elapsed().as_secs_f64(),
+    })
+}
+
+/// Execute every cell of `spec` on up to `workers` threads (clamped to
+/// `[1, #cells]`) and collect a [`SweepReport`]. Cell errors (e.g. an
+/// unknown scenario name) fail the whole sweep with the offending cell
+/// named.
+pub fn run_sweep(spec: &SweepSpec, workers: usize) -> Result<SweepReport> {
+    let cells = spec.cells();
+    anyhow::ensure!(
+        !cells.is_empty(),
+        "empty sweep: need at least one scenario, seed and algorithm"
+    );
+    let workers = workers.clamp(1, cells.len());
+
+    type CellSlot = Mutex<Option<Result<CellResult>>>;
+    let next = AtomicUsize::new(0);
+    // First failure stops workers from claiming further cells — a typo'd
+    // scenario name should not make the user wait out the healthy cells.
+    let failed = AtomicBool::new(false);
+    let slots: Vec<CellSlot> = (0..cells.len()).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                if failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let res = run_cell(&cells[i], spec);
+                if res.is_err() {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                *slots[i].lock().unwrap() = Some(res);
+            });
+        }
+    });
+
+    let mut results = Vec::with_capacity(cells.len());
+    for (i, slot) in slots.into_iter().enumerate() {
+        let res = slot.into_inner().unwrap().unwrap_or_else(|| {
+            panic!(
+                "sweep aborted early (cell {i} never ran) — an earlier cell's \
+                 error is reported instead"
+            )
+        });
+        results.push(res.with_context(|| {
+            format!(
+                "sweep cell {} ({} seed {} algo {})",
+                i,
+                cells[i].scenario,
+                cells[i].seed,
+                cells[i].algorithm.name()
+            )
+        })?);
+    }
+    Ok(SweepReport {
+        cells: results,
+        workers,
+    })
+}
+
+impl SweepReport {
+    /// Per-`(scenario, algorithm)` aggregates in first-appearance order.
+    pub fn groups(&self) -> Vec<GroupSummary> {
+        let mut order: Vec<(String, String)> = Vec::new();
+        let mut buckets: Vec<Vec<&CellResult>> = Vec::new();
+        for cell in &self.cells {
+            let key = (
+                cell.cell.scenario.clone(),
+                cell.cell.algorithm.name().to_string(),
+            );
+            match order.iter().position(|k| *k == key) {
+                Some(i) => buckets[i].push(cell),
+                None => {
+                    order.push(key);
+                    buckets.push(vec![cell]);
+                }
+            }
+        }
+        order
+            .into_iter()
+            .zip(buckets)
+            .map(|((scenario, algorithm), cells)| {
+                let costs: Vec<f64> = cells.iter().map(|c| c.final_cost).collect();
+                let s = summarize(&costs);
+                let n = cells.len() as f64;
+                GroupSummary {
+                    scenario,
+                    algorithm,
+                    cells: cells.len(),
+                    mean_cost: s.mean,
+                    p95_cost: s.p95,
+                    mean_iters_to_1pct: cells
+                        .iter()
+                        .map(|c| c.iters_to_1pct as f64)
+                        .sum::<f64>()
+                        / n,
+                    mean_wall_seconds: cells.iter().map(|c| c.wall_seconds).sum::<f64>() / n,
+                }
+            })
+            .collect()
+    }
+
+    /// Deterministic identity of the sweep's results: everything except
+    /// wall-clock timing, with costs compared bit-for-bit. Two sweeps of
+    /// the same spec must produce equal fingerprints regardless of worker
+    /// count (`rust/tests/sweep_determinism.rs`).
+    pub fn fingerprint(&self) -> Vec<(String, u64, String, u64, usize, usize)> {
+        self.cells
+            .iter()
+            .map(|c| {
+                (
+                    c.cell.scenario.clone(),
+                    c.cell.seed,
+                    c.cell.algorithm.name().to_string(),
+                    c.final_cost.to_bits(),
+                    c.iterations,
+                    c.iters_to_1pct,
+                )
+            })
+            .collect()
+    }
+
+    /// Paper-style text table of the group aggregates.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "scenario",
+            "algo",
+            "cells",
+            "mean T",
+            "p95 T",
+            "iters->1%",
+            "mean wall s",
+        ]);
+        for g in self.groups() {
+            t.row(vec![
+                g.scenario,
+                g.algorithm,
+                g.cells.to_string(),
+                fnum(g.mean_cost),
+                fnum(g.p95_cost),
+                format!("{:.1}", g.mean_iters_to_1pct),
+                format!("{:.3}", g.mean_wall_seconds),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Machine-readable report (cells + groups).
+    pub fn to_json(&self) -> Json {
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                let mut o = Json::obj();
+                o.set("scenario", Json::Str(c.cell.scenario.clone()))
+                    .set("seed", Json::Num(c.cell.seed as f64))
+                    .set(
+                        "algorithm",
+                        Json::Str(c.cell.algorithm.name().to_string()),
+                    )
+                    .set("final_cost", Json::Num(c.final_cost))
+                    .set("iterations", Json::Num(c.iterations as f64))
+                    .set("iters_to_1pct", Json::Num(c.iters_to_1pct as f64))
+                    .set("wall_seconds", Json::Num(c.wall_seconds));
+                o
+            })
+            .collect();
+        let groups: Vec<Json> = self
+            .groups()
+            .into_iter()
+            .map(|g| {
+                let mut o = Json::obj();
+                o.set("scenario", Json::Str(g.scenario))
+                    .set("algorithm", Json::Str(g.algorithm))
+                    .set("cells", Json::Num(g.cells as f64))
+                    .set("mean_cost", Json::Num(g.mean_cost))
+                    .set("p95_cost", Json::Num(g.p95_cost))
+                    .set("mean_iters_to_1pct", Json::Num(g.mean_iters_to_1pct))
+                    .set("mean_wall_seconds", Json::Num(g.mean_wall_seconds));
+                o
+            })
+            .collect();
+        let mut doc = Json::obj();
+        doc.set("workers", Json::Num(self.workers as f64))
+            .set("cells", Json::Arr(cells))
+            .set("groups", Json::Arr(groups));
+        doc
+    }
+}
+
+/// Parse a comma-separated scenario list (`"abilene,connected-er"`).
+pub fn parse_scenarios(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+/// Largest seed accepted from the CLI: seeds are reported in JSON, whose
+/// numbers are f64, so anything above 2^53 would silently collide with a
+/// neighbor in `sweep.json`.
+const MAX_SEED: u64 = 1 << 53;
+
+/// Parse a comma-separated seed list (`"1,2,3"`) or an inclusive range
+/// (`"1..8"`). Seeds above 2^53 are rejected (not representable in the
+/// JSON report).
+pub fn parse_seeds(s: &str) -> Result<Vec<u64>> {
+    let check = |seed: u64| -> Result<u64> {
+        anyhow::ensure!(
+            seed <= MAX_SEED,
+            "seed {seed} exceeds 2^53 and would lose precision in the JSON report"
+        );
+        Ok(seed)
+    };
+    if let Some((lo, hi)) = s.split_once("..") {
+        let lo: u64 = lo.trim().parse().context("seed range start")?;
+        let hi: u64 = check(hi.trim().parse().context("seed range end")?)?;
+        anyhow::ensure!(lo <= hi, "empty seed range {lo}..{hi}");
+        return Ok((lo..=hi).collect());
+    }
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            t.parse::<u64>()
+                .with_context(|| format!("bad seed '{t}'"))
+                .and_then(check)
+        })
+        .collect()
+}
+
+/// Parse a comma-separated algorithm list (`"sgp,gp,lpr"`).
+pub fn parse_algorithms(s: &str) -> Result<Vec<Algorithm>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| Algorithm::parse(t).with_context(|| format!("unknown algorithm '{t}'")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_grid_order_is_canonical() {
+        let spec = SweepSpec {
+            scenarios: vec!["a".into(), "b".into()],
+            seeds: vec![1, 2],
+            algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
+            rate_scale: 1.0,
+            run: RunConfig::quick(),
+        };
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 8);
+        assert_eq!(cells[0].scenario, "a");
+        assert_eq!(cells[0].seed, 1);
+        assert_eq!(cells[0].algorithm, Algorithm::Sgp);
+        assert_eq!(cells[1].algorithm, Algorithm::Lpr);
+        assert_eq!(cells[2].seed, 2);
+        assert_eq!(cells[4].scenario, "b");
+    }
+
+    #[test]
+    fn sweep_runs_and_aggregates() {
+        let spec = SweepSpec {
+            scenarios: vec!["abilene".into()],
+            seeds: vec![1, 2],
+            algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
+            rate_scale: 1.0,
+            run: RunConfig::quick(),
+        };
+        let report = run_sweep(&spec, 2).unwrap();
+        assert_eq!(report.cells.len(), 4);
+        let groups = report.groups();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].algorithm, "sgp");
+        assert_eq!(groups[0].cells, 2);
+        assert!(groups[0].mean_cost.is_finite());
+        // Fig. 4 headline on the means: SGP at or below LPR (same relative
+        // tolerance as the fig4 bench's shape check)
+        assert!(groups[0].mean_cost <= groups[1].mean_cost * 1.001);
+        let txt = report.render();
+        assert!(txt.contains("abilene"));
+        assert!(txt.contains("sgp"));
+        let doc = report.to_json();
+        assert_eq!(doc.get("cells").as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn unknown_scenario_names_the_cell() {
+        let spec = SweepSpec {
+            scenarios: vec!["no-such-scenario".into()],
+            seeds: vec![1],
+            algorithms: vec![Algorithm::Sgp],
+            rate_scale: 1.0,
+            run: RunConfig::quick(),
+        };
+        let err = run_sweep(&spec, 1).unwrap_err().to_string();
+        assert!(err.contains("no-such-scenario"), "{err}");
+    }
+
+    #[test]
+    fn empty_grid_rejected() {
+        let spec = SweepSpec {
+            scenarios: vec![],
+            ..SweepSpec::default()
+        };
+        assert!(run_sweep(&spec, 1).is_err());
+    }
+
+    #[test]
+    fn list_parsers() {
+        assert_eq!(parse_scenarios("a, b,"), vec!["a", "b"]);
+        assert_eq!(parse_seeds("1, 2,3").unwrap(), vec![1, 2, 3]);
+        assert_eq!(parse_seeds("4..6").unwrap(), vec![4, 5, 6]);
+        assert!(parse_seeds("9..2").is_err());
+        assert!(parse_seeds("x").is_err());
+        // seeds past 2^53 would alias in the f64-backed JSON report
+        assert!(parse_seeds("9007199254740993").is_err());
+        assert_eq!(
+            parse_algorithms("sgp,lpr").unwrap(),
+            vec![Algorithm::Sgp, Algorithm::Lpr]
+        );
+        assert!(parse_algorithms("sgp,zzz").is_err());
+    }
+}

@@ -5,6 +5,8 @@
 //! cecflow run        --scenario geant --algo sgp [--seed 42] [--iters 200]
 //!                    [--scale 1.0] [--schedule sync|async|accelerated]
 //!                    [--config path.json] [--out results/run.json]
+//! cecflow sweep      [--scenarios a,b] [--seeds 1,2,3 | 1..8] [--algos sgp,gp,lpr]
+//!                    [--workers N] [--iters N] [--scale X] [--out results/sweep.json]
 //! cecflow experiment fig4|fig5b|fig5c|fig5d|table2  (see benches/ too)
 //! cecflow validate   [--scenario abilene] — XLA data plane vs native
 //! cecflow info       — environment, scenarios, artifact status
@@ -41,6 +43,7 @@ fn main() {
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(args),
+        Some("sweep") => cmd_sweep(args),
         Some("validate") => cmd_validate(args),
         Some("info") => cmd_info(),
         Some("experiment") => cmd_experiment(args),
@@ -58,13 +61,16 @@ fn print_help() {
          \n\
          subcommands:\n\
          \x20 run         optimize one scenario with one algorithm\n\
+         \x20 sweep       scenario × seed × algorithm grid on worker threads\n\
          \x20 experiment  regenerate a paper figure (fig4|fig5b|fig5c|fig5d|table2)\n\
          \x20 validate    XLA dense data plane vs native evaluator parity\n\
          \x20 info        environment + scenario inventory\n\
          \n\
          common flags: --scenario NAME --algo sgp|gp|spoo|lcor|lpr --seed N\n\
          \x20            --iters N --scale X --schedule sync|async|accelerated\n\
-         \x20            --config FILE --out FILE"
+         \x20            --config FILE --out FILE\n\
+         sweep flags:  --scenarios a,b --seeds 1,2,3|1..8 --algos sgp,gp,lpr\n\
+         \x20            --workers N --iters N --scale X --out FILE"
     );
 }
 
@@ -170,6 +176,54 @@ fn cmd_run(args: &Args) -> Result<()> {
             .set("l_data", Json::Num(outcome.l_data))
             .set("l_result", Json::Num(outcome.l_result));
         std::fs::write(out, doc.pretty()).with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// `cecflow sweep`: run a `scenario × seed × algorithm` grid on worker
+/// threads and print the aggregated [`cecflow::coordinator::SweepReport`].
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use cecflow::coordinator::sweep::{parse_algorithms, parse_scenarios, parse_seeds};
+    use cecflow::coordinator::{run_sweep, SweepSpec};
+
+    let mut spec = SweepSpec::default();
+    if let Some(s) = args.opt("scenarios") {
+        spec.scenarios = parse_scenarios(s);
+    }
+    if let Some(s) = args.opt("seeds") {
+        spec.seeds = parse_seeds(s)?;
+    }
+    if let Some(s) = args.opt("algos") {
+        spec.algorithms = parse_algorithms(s)?;
+    }
+    spec.rate_scale = args.opt_f64("scale", spec.rate_scale);
+    spec.run.max_iters = args.opt_usize("iters", spec.run.max_iters);
+
+    let default_workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let workers = args.opt_usize("workers", default_workers);
+
+    println!(
+        "sweep: {} scenario(s) × {} seed(s) × {} algorithm(s) = {} cells",
+        spec.scenarios.len(),
+        spec.seeds.len(),
+        spec.algorithms.len(),
+        spec.cells().len(),
+    );
+    let start = std::time::Instant::now();
+    let report = run_sweep(&spec, workers)?;
+    println!("{}", report.render());
+    println!(
+        "sweep wall time: {:.2}s on {} worker(s)",
+        start.elapsed().as_secs_f64(),
+        report.workers
+    );
+
+    if let Some(out) = args.opt("out") {
+        std::fs::write(out, report.to_json().pretty())
+            .with_context(|| format!("writing {out}"))?;
         println!("wrote {out}");
     }
     Ok(())

@@ -53,20 +53,65 @@ impl std::fmt::Display for FlowError {
 
 impl std::error::Error for FlowError {}
 
+impl FlowState {
+    /// An all-zero flow state shaped for `net` — the scratch buffer
+    /// [`compute_flows_into`] fills. Batched evaluation allocates one of
+    /// these and reuses it across candidates.
+    pub fn zeroed(net: &Network) -> FlowState {
+        let n = net.n();
+        let e = net.e();
+        let s_count = net.s();
+        FlowState {
+            t_minus: vec![vec![0.0; n]; s_count],
+            t_plus: vec![vec![0.0; n]; s_count],
+            g: vec![vec![0.0; n]; s_count],
+            f_minus: vec![vec![0.0; e]; s_count],
+            f_plus: vec![vec![0.0; e]; s_count],
+            link_flow: vec![0.0; e],
+            workload: vec![0.0; n],
+            total_cost: 0.0,
+        }
+    }
+}
+
 /// Compute all flows and the total cost for a feasible, loop-free strategy.
 pub fn compute_flows(net: &Network, phi: &Strategy) -> Result<FlowState, FlowError> {
+    let mut fs = FlowState::zeroed(net);
+    compute_flows_into(net, phi, &mut fs)?;
+    Ok(fs)
+}
+
+/// [`compute_flows`] into a caller-owned [`FlowState`] buffer (shaped by
+/// [`FlowState::zeroed`] for the same network). The arithmetic — loop
+/// order, accumulation order — is byte-for-byte the one `compute_flows`
+/// performs on fresh buffers, so results are bitwise identical; only the
+/// allocations are skipped. This is the single-pass core of
+/// `NativeBackend::evaluate_batch`, which prices many candidate
+/// strategies against one network without re-allocating the
+/// `O(|S|·|E|)` per-task flow planes per candidate.
+pub fn compute_flows_into(
+    net: &Network,
+    phi: &Strategy,
+    fs: &mut FlowState,
+) -> Result<(), FlowError> {
     let n = net.n();
     let e = net.e();
     let s_count = net.s();
     let g_ref = &net.graph;
 
-    let mut t_minus = vec![vec![0.0; n]; s_count];
-    let mut t_plus = vec![vec![0.0; n]; s_count];
-    let mut g_in = vec![vec![0.0; n]; s_count];
-    let mut f_minus = vec![vec![0.0; e]; s_count];
-    let mut f_plus = vec![vec![0.0; e]; s_count];
-    let mut link_flow = vec![0.0; e];
-    let mut workload = vec![0.0; n];
+    // Reset the accumulators and the per-task planes that are *read*
+    // before every entry is written (an inactive in-edge whose source
+    // sits later in the topological order is read as 0 in compute_flows;
+    // a stale value from the previous candidate must not leak in).
+    // `t_minus` / `t_plus` are fully overwritten below (every node
+    // appears in the topological order) and need no reset.
+    for s in 0..s_count {
+        fs.f_minus[s].fill(0.0);
+        fs.f_plus[s].fill(0.0);
+        fs.g[s].fill(0.0);
+    }
+    fs.link_flow.fill(0.0);
+    fs.workload.fill(0.0);
 
     for s in 0..s_count {
         let a_m = net.a_of(s);
@@ -80,13 +125,13 @@ pub fn compute_flows(net: &Network, phi: &Strategy) -> Result<FlowState, FlowErr
                 + g_ref
                     .in_edge_ids(i)
                     .iter()
-                    .map(|&eid| f_minus[s][eid])
+                    .map(|&eid| fs.f_minus[s][eid])
                     .sum::<f64>();
-            t_minus[s][i] = t;
+            fs.t_minus[s][i] = t;
             // split to local computation + outgoing data flows (eqs 3,4)
-            g_in[s][i] = t * phi.data[s][i][0];
+            fs.g[s][i] = t * phi.data[s][i][0];
             for (k, &eid) in g_ref.out_edge_ids(i).iter().enumerate() {
-                f_minus[s][eid] = t * phi.data[s][i][k + 1];
+                fs.f_minus[s][eid] = t * phi.data[s][i][k + 1];
             }
         }
 
@@ -95,46 +140,37 @@ pub fn compute_flows(net: &Network, phi: &Strategy) -> Result<FlowState, FlowErr
         let order = topo_order_masked(g_ref, &rmask)
             .ok_or(FlowError::ResultLoop { task: s })?;
         for &i in &order {
-            let t = a_m * g_in[s][i]
+            let t = a_m * fs.g[s][i]
                 + g_ref
                     .in_edge_ids(i)
                     .iter()
-                    .map(|&eid| f_plus[s][eid])
+                    .map(|&eid| fs.f_plus[s][eid])
                     .sum::<f64>();
-            t_plus[s][i] = t;
+            fs.t_plus[s][i] = t;
             for (k, &eid) in g_ref.out_edge_ids(i).iter().enumerate() {
-                f_plus[s][eid] = t * phi.result[s][i][k];
+                fs.f_plus[s][eid] = t * phi.result[s][i][k];
             }
         }
 
         // ---- aggregates ----
         for eid in 0..e {
-            link_flow[eid] += f_minus[s][eid] + f_plus[s][eid];
+            fs.link_flow[eid] += fs.f_minus[s][eid] + fs.f_plus[s][eid];
         }
         let ctype = net.tasks[s].ctype;
         for i in 0..n {
-            workload[i] += net.comp_weight[i][ctype] * g_in[s][i];
+            fs.workload[i] += net.comp_weight[i][ctype] * fs.g[s][i];
         }
     }
 
     let mut total = 0.0;
     for eid in 0..e {
-        total += net.link_cost[eid].value(link_flow[eid]);
+        total += net.link_cost[eid].value(fs.link_flow[eid]);
     }
     for i in 0..n {
-        total += net.comp_cost[i].value(workload[i]);
+        total += net.comp_cost[i].value(fs.workload[i]);
     }
-
-    Ok(FlowState {
-        t_minus,
-        t_plus,
-        g: g_in,
-        f_minus,
-        f_plus,
-        link_flow,
-        workload,
-        total_cost: total,
-    })
+    fs.total_cost = total;
+    Ok(())
 }
 
 /// Total cost only (fast path used by line searches).
@@ -433,6 +469,47 @@ mod tests {
         assert!(fs.conservation_violations(&net, &phi).is_empty());
         // task 1 has a=2.0: results delivered at node 0 = 1.6
         assert!((fs.t_plus[1][0] - 1.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_flows_into_reuse_is_bitwise_identical() {
+        let net = diamond(true);
+        let a = Strategy::local_compute_init(&net);
+        let b = Strategy::compute_at_dest_init(&net);
+        let mut scratch = FlowState::zeroed(&net);
+        // dirty the scratch with a different candidate first, then check
+        // re-filling it matches a fresh computation exactly
+        compute_flows_into(&net, &a, &mut scratch).unwrap();
+        compute_flows_into(&net, &b, &mut scratch).unwrap();
+        let fresh = compute_flows(&net, &b).unwrap();
+        assert_eq!(scratch.t_minus, fresh.t_minus);
+        assert_eq!(scratch.t_plus, fresh.t_plus);
+        assert_eq!(scratch.g, fresh.g);
+        assert_eq!(scratch.f_minus, fresh.f_minus);
+        assert_eq!(scratch.f_plus, fresh.f_plus);
+        assert_eq!(scratch.link_flow, fresh.link_flow);
+        assert_eq!(scratch.workload, fresh.workload);
+        assert_eq!(scratch.total_cost.to_bits(), fresh.total_cost.to_bits());
+    }
+
+    #[test]
+    fn compute_flows_into_recovers_after_loop_error() {
+        let net = diamond(true);
+        let mut bad = Strategy::local_compute_init(&net);
+        let s01 = out_slot(&net.graph, 0, 1).unwrap();
+        let s10 = out_slot(&net.graph, 1, 0).unwrap();
+        bad.data[0][0] = vec![0.0; net.graph.out_degree(0) + 1];
+        bad.data[0][0][s01 + 1] = 1.0;
+        bad.data[0][1] = vec![0.0; net.graph.out_degree(1) + 1];
+        bad.data[0][1][s10 + 1] = 1.0;
+        let good = Strategy::local_compute_init(&net);
+        let mut scratch = FlowState::zeroed(&net);
+        assert!(compute_flows_into(&net, &bad, &mut scratch).is_err());
+        // a failed fill must not poison the next candidate's evaluation
+        compute_flows_into(&net, &good, &mut scratch).unwrap();
+        let fresh = compute_flows(&net, &good).unwrap();
+        assert_eq!(scratch.link_flow, fresh.link_flow);
+        assert_eq!(scratch.total_cost.to_bits(), fresh.total_cost.to_bits());
     }
 
     #[test]

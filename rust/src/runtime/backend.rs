@@ -21,7 +21,7 @@
 
 use anyhow::Result;
 
-use crate::model::flows::compute_flows;
+use crate::model::flows::{compute_flows, compute_flows_into, FlowState};
 use crate::model::marginals::compute_marginals;
 use crate::model::network::Network;
 use crate::model::strategy::Strategy;
@@ -39,6 +39,29 @@ pub trait DenseBackend {
 
     /// Evaluate the full dense state for `(net, phi)`.
     fn evaluate(&self, net: &Network, phi: &Strategy) -> Result<DenseEval>;
+
+    /// Evaluate several candidate strategies against the *same* network in
+    /// one backend call — the SGP safeguard prices its whole retry ladder
+    /// through this entry point.
+    ///
+    /// Contract (pinned by `rust/tests/batch_parity.rs`):
+    /// * `evaluate_batch(net, cands)?[k]` equals `evaluate(net, &cands[k])?`
+    ///   for every `k` — including saturation (`total_cost = +∞`) and the
+    ///   marginal fields. For `NativeBackend` the equality is bitwise.
+    /// * An error on any candidate (e.g. a routing loop) fails the whole
+    ///   batch, exactly as the per-candidate call would.
+    /// * An empty batch returns an empty vec.
+    ///
+    /// The default implementation loops over [`DenseBackend::evaluate`];
+    /// backends override it to amortize work across candidates
+    /// (`NativeBackend` reuses one set of flow buffers, the PJRT engine
+    /// resolves the size class and compiled executable once per batch).
+    fn evaluate_batch(&self, net: &Network, candidates: &[Strategy]) -> Result<Vec<DenseEval>> {
+        candidates
+            .iter()
+            .map(|phi| self.evaluate(net, phi))
+            .collect()
+    }
 }
 
 /// The default backend: exact f64 evaluation on the sparse native model.
@@ -74,6 +97,33 @@ impl DenseBackend for NativeBackend {
             link_flow: flows.link_flow,
             workload: flows.workload,
         })
+    }
+
+    /// Single-pass batch evaluation: one `O(|S|·|E|)` flow scratch is
+    /// allocated up front and refilled per candidate
+    /// ([`compute_flows_into`] performs the exact arithmetic of
+    /// `compute_flows`, so every result is bitwise identical to the
+    /// per-candidate path — only the per-candidate allocations of the
+    /// task×edge flow planes are gone).
+    fn evaluate_batch(&self, net: &Network, candidates: &[Strategy]) -> Result<Vec<DenseEval>> {
+        let mut scratch = FlowState::zeroed(net);
+        let mut out = Vec::with_capacity(candidates.len());
+        for phi in candidates {
+            compute_flows_into(net, phi, &mut scratch).map_err(anyhow::Error::new)?;
+            let marg = compute_marginals(net, phi, &scratch).map_err(anyhow::Error::new)?;
+            out.push(DenseEval {
+                total_cost: scratch.total_cost,
+                d_link: marg.d_link,
+                c_node: marg.c_node,
+                dt_plus: marg.dt_plus,
+                dt_r: marg.dt_r,
+                t_minus: scratch.t_minus.clone(),
+                t_plus: scratch.t_plus.clone(),
+                link_flow: scratch.link_flow.clone(),
+                workload: scratch.workload.clone(),
+            });
+        }
+        Ok(out)
     }
 }
 
@@ -117,5 +167,33 @@ mod tests {
         let backend: &dyn DenseBackend = &NativeBackend;
         assert_eq!(backend.name(), "native");
         assert!(backend.evaluate(&net, &phi).unwrap().total_cost.is_finite());
+    }
+
+    #[test]
+    fn batch_matches_per_candidate_evaluation() {
+        let net = diamond(true);
+        let cands = [
+            Strategy::local_compute_init(&net),
+            Strategy::compute_at_dest_init(&net),
+            Strategy::local_compute_init(&net),
+        ];
+        let batch = NativeBackend.evaluate_batch(&net, &cands).unwrap();
+        assert_eq!(batch.len(), cands.len());
+        for (phi, ev) in cands.iter().zip(&batch) {
+            let solo = NativeBackend.evaluate(&net, phi).unwrap();
+            assert_eq!(ev.total_cost.to_bits(), solo.total_cost.to_bits());
+            assert_eq!(ev.link_flow, solo.link_flow);
+            assert_eq!(ev.workload, solo.workload);
+            assert_eq!(ev.dt_plus, solo.dt_plus);
+            assert_eq!(ev.dt_r, solo.dt_r);
+        }
+    }
+
+    #[test]
+    fn batch_of_empty_and_single() {
+        let net = diamond(true);
+        assert!(NativeBackend.evaluate_batch(&net, &[]).unwrap().is_empty());
+        let one = [Strategy::local_compute_init(&net)];
+        assert_eq!(NativeBackend.evaluate_batch(&net, &one).unwrap().len(), 1);
     }
 }

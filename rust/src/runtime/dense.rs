@@ -224,6 +224,32 @@ impl<'e> DenseEvaluator<'e> {
         let out = self.engine.run(&inputs)?;
         Ok(unpack(net, &out))
     }
+
+    /// Batched evaluation on the XLA data plane: every candidate is packed
+    /// into the *same* size class (resolved once) and the whole batch goes
+    /// through one [`super::engine::Engine::run_batch`] dispatch.
+    pub fn evaluate_batch(
+        &self,
+        net: &Network,
+        candidates: &[Strategy],
+    ) -> Result<Vec<DenseEval>> {
+        use anyhow::Context as _;
+        if candidates.is_empty() {
+            return Ok(Vec::new());
+        }
+        let class = self
+            .engine
+            .class_for(net.n(), net.s())
+            .with_context(|| {
+                format!("no size class fits N={} S={}", net.n(), net.s())
+            })?;
+        let inputs: Vec<DenseInputs> = candidates
+            .iter()
+            .map(|phi| pack(net, phi, class.n, class.s))
+            .collect::<Result<_>>()?;
+        let outs = self.engine.run_batch(&inputs)?;
+        Ok(outs.iter().map(|out| unpack(net, out)).collect())
+    }
 }
 
 #[cfg(feature = "pjrt")]
@@ -234,6 +260,10 @@ impl super::backend::DenseBackend for DenseEvaluator<'_> {
 
     fn evaluate(&self, net: &Network, phi: &Strategy) -> Result<DenseEval> {
         DenseEvaluator::evaluate(self, net, phi)
+    }
+
+    fn evaluate_batch(&self, net: &Network, candidates: &[Strategy]) -> Result<Vec<DenseEval>> {
+        DenseEvaluator::evaluate_batch(self, net, candidates)
     }
 }
 

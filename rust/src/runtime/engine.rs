@@ -118,16 +118,45 @@ impl Engine {
     /// class exactly — use [`Engine::class_for`] + the packer in
     /// `runtime::dense`).
     pub fn run(&self, inputs: &DenseInputs) -> Result<DenseOutputs> {
-        let class = self
-            .compiled
+        let class = self.exact_class(inputs.n, inputs.s)?;
+        self.run_on_class(class, inputs)
+    }
+
+    /// The compiled class of *exactly* `(n, s)` (pre-padded inputs must
+    /// match a class; use [`Engine::class_for`] to pick one to pad to).
+    fn exact_class(&self, n: usize, s: usize) -> Result<&CompiledClass> {
+        self.compiled
             .iter()
-            .find(|c| c.n == inputs.n && c.s == inputs.s)
-            .with_context(|| {
-                format!(
-                    "no compiled class of exact size N={} S={}",
-                    inputs.n, inputs.s
-                )
-            })?;
+            .find(|c| c.n == n && c.s == s)
+            .with_context(|| format!("no compiled class of exact size N={n} S={s}"))
+    }
+
+    /// Execute `dense_eval` for a whole batch of pre-padded inputs in one
+    /// engine dispatch: the compiled class is resolved once and every
+    /// candidate runs on that executable back-to-back, keeping the device
+    /// hot between launches. All inputs must share one padding class —
+    /// `DenseEvaluator::evaluate_batch` packs them that way. (The AOT
+    /// artifact has no leading batch dimension yet; once
+    /// `python/compile/aot.py` grows one, this is the single place that
+    /// switches to a literally-one-launch execution.)
+    pub fn run_batch(&self, inputs: &[DenseInputs]) -> Result<Vec<DenseOutputs>> {
+        let Some(first) = inputs.first() else {
+            return Ok(Vec::new());
+        };
+        anyhow::ensure!(
+            inputs.iter().all(|i| i.n == first.n && i.s == first.s),
+            "run_batch requires uniformly padded inputs (first is N={} S={})",
+            first.n,
+            first.s
+        );
+        let class = self.exact_class(first.n, first.s)?;
+        inputs
+            .iter()
+            .map(|inp| self.run_on_class(class, inp))
+            .collect()
+    }
+
+    fn run_on_class(&self, class: &CompiledClass, inputs: &DenseInputs) -> Result<DenseOutputs> {
         let n = inputs.n as i64;
         let s = inputs.s as i64;
 

@@ -164,7 +164,11 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no ∞/NaN literal; emit null (as serde_json
+                    // does) so documents with saturated costs stay parsable.
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     out.push_str(&format!("{}", *x as i64));
                 } else {
                     out.push_str(&format!("{x}"));
@@ -437,6 +441,19 @@ mod tests {
             Json::parse("\"hi\"").unwrap(),
             Json::Str("hi".to_string())
         );
+    }
+
+    #[test]
+    fn nonfinite_numbers_serialize_as_null_and_stay_parsable() {
+        let mut o = Json::obj();
+        o.set("sat", Json::Num(f64::INFINITY))
+            .set("bad", Json::Num(f64::NAN))
+            .set("ok", Json::Num(2.5));
+        let text = o.dump();
+        let back = Json::parse(&text).expect("∞/NaN must not break parsing");
+        assert_eq!(back.get("sat"), &Json::Null);
+        assert_eq!(back.get("bad"), &Json::Null);
+        assert_eq!(back.get("ok").as_num(), Some(2.5));
     }
 
     #[test]

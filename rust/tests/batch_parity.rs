@@ -1,0 +1,158 @@
+//! Batch/sequential parity for `DenseBackend::evaluate_batch`
+//! (ISSUE 2 satellite): on `NativeBackend`, pricing a batch of candidate
+//! strategies must be *bitwise* identical to N independent `evaluate`
+//! calls — including saturated (`total_cost = +∞`) instances, whose
+//! marginal fields may themselves hold `∞`/NaN values that must match
+//! bit-for-bit.
+
+use cecflow::algo::{Optimizer, Sgp};
+use cecflow::coordinator::ScenarioSpec;
+use cecflow::model::network::Network;
+use cecflow::model::strategy::Strategy;
+use cecflow::runtime::{DenseBackend, DenseEval, NativeBackend};
+
+/// Bitwise equality that treats every NaN payload / infinity sign as
+/// significant — the strongest possible parity claim.
+fn bits_eq(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits()
+}
+
+fn assert_vec_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(bits_eq(*x, *y), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+fn assert_plane_bits_eq(a: &[Vec<f64>], b: &[Vec<f64>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: tasks");
+    for (s, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_vec_bits_eq(x, y, &format!("{what} task {s}"));
+    }
+}
+
+fn assert_eval_bits_eq(a: &DenseEval, b: &DenseEval, what: &str) {
+    assert!(
+        bits_eq(a.total_cost, b.total_cost),
+        "{what}: total_cost {} vs {}",
+        a.total_cost,
+        b.total_cost
+    );
+    assert_vec_bits_eq(&a.d_link, &b.d_link, &format!("{what}: d_link"));
+    assert_vec_bits_eq(&a.c_node, &b.c_node, &format!("{what}: c_node"));
+    assert_vec_bits_eq(&a.link_flow, &b.link_flow, &format!("{what}: link_flow"));
+    assert_vec_bits_eq(&a.workload, &b.workload, &format!("{what}: workload"));
+    assert_plane_bits_eq(&a.dt_plus, &b.dt_plus, &format!("{what}: dt_plus"));
+    assert_plane_bits_eq(&a.dt_r, &b.dt_r, &format!("{what}: dt_r"));
+    assert_plane_bits_eq(&a.t_minus, &b.t_minus, &format!("{what}: t_minus"));
+    assert_plane_bits_eq(&a.t_plus, &b.t_plus, &format!("{what}: t_plus"));
+}
+
+/// A ladder of distinct loop-free strategies: the local-compute and
+/// compute-at-dest corners plus the iterates of a short SGP descent —
+/// exactly the kind of candidates the safeguard batches.
+fn strategy_ladder(net: &Network, steps: usize) -> Vec<Strategy> {
+    let mut out = vec![
+        Strategy::local_compute_init(net),
+        Strategy::compute_at_dest_init(net),
+    ];
+    let mut phi = Strategy::local_compute_init(net);
+    let mut sgp = Sgp::new();
+    for _ in 0..steps {
+        sgp.step(net, &mut phi).expect("sgp step");
+        out.push(phi.clone());
+    }
+    out
+}
+
+fn check_parity(net: &Network, batch: &[Strategy], what: &str) {
+    let backend = NativeBackend;
+    let sequential: Vec<DenseEval> = batch
+        .iter()
+        .map(|phi| backend.evaluate(net, phi).expect("evaluate"))
+        .collect();
+    let batched = backend.evaluate_batch(net, batch).expect("evaluate_batch");
+    assert_eq!(batched.len(), sequential.len(), "{what}: batch size");
+    for (k, (b, s)) in batched.iter().zip(&sequential).enumerate() {
+        assert_eval_bits_eq(b, s, &format!("{what} candidate {k}"));
+    }
+}
+
+#[test]
+fn batch_parity_on_random_table2_instances() {
+    for (name, seed, steps) in [
+        ("abilene", 1u64, 4usize),
+        ("abilene", 7, 3),
+        ("connected-er", 3, 3),
+        ("balanced-tree", 5, 2),
+    ] {
+        let sc = ScenarioSpec::by_name(name).unwrap().build(seed);
+        let batch = strategy_ladder(&sc.net, steps);
+        check_parity(&sc.net, &batch, &format!("{name} seed {seed}"));
+    }
+}
+
+#[test]
+fn batch_parity_includes_saturated_infinity_cases() {
+    // Scale the input rates far beyond the feasibility guard: the
+    // all-local strategy saturates computation capacity and the
+    // evaluation must report +∞ identically on both paths.
+    let mut sc = ScenarioSpec::by_name("abilene").unwrap().build(11);
+    sc.net.scale_rates(200.0);
+    // saturated and (possibly) non-saturated candidates interleaved, with
+    // a repeat at the end: a saturated candidate's scratch state must not
+    // leak into the candidates priced after it.
+    let batch = [
+        Strategy::local_compute_init(&sc.net),
+        Strategy::compute_at_dest_init(&sc.net),
+        Strategy::local_compute_init(&sc.net),
+    ];
+    let ev = NativeBackend
+        .evaluate_batch(&sc.net, &batch)
+        .expect("batch on saturated net");
+    assert!(
+        ev[0].total_cost.is_infinite(),
+        "200× rates should saturate local compute (T = {})",
+        ev[0].total_cost
+    );
+    check_parity(&sc.net, &batch, "saturated abilene");
+}
+
+#[test]
+fn default_trait_impl_matches_native_specialization() {
+    /// Wrapper that inherits the *default* `evaluate_batch` (loop over
+    /// `evaluate`) — pins the specialized single-pass path to the trait's
+    /// reference semantics.
+    struct LoopingBackend;
+
+    impl DenseBackend for LoopingBackend {
+        fn name(&self) -> &'static str {
+            "looping"
+        }
+
+        fn evaluate(&self, net: &Network, phi: &Strategy) -> anyhow::Result<DenseEval> {
+            NativeBackend.evaluate(net, phi)
+        }
+    }
+
+    let sc = ScenarioSpec::by_name("connected-er").unwrap().build(9);
+    let batch = strategy_ladder(&sc.net, 2);
+    let via_default = LoopingBackend
+        .evaluate_batch(&sc.net, &batch)
+        .expect("default impl");
+    let via_native = NativeBackend
+        .evaluate_batch(&sc.net, &batch)
+        .expect("native impl");
+    for (k, (a, b)) in via_default.iter().zip(&via_native).enumerate() {
+        assert_eval_bits_eq(a, b, &format!("default-vs-native candidate {k}"));
+    }
+}
+
+#[test]
+fn empty_batch_is_empty() {
+    let sc = ScenarioSpec::by_name("abilene").unwrap().build(2);
+    assert!(NativeBackend
+        .evaluate_batch(&sc.net, &[])
+        .unwrap()
+        .is_empty());
+}

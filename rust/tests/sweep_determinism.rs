@@ -1,0 +1,73 @@
+//! Sweep determinism (ISSUE 2 satellite): the same `SweepSpec` run on
+//! different worker counts — and run repeatedly — yields identical
+//! per-cell results (costs compared bit-for-bit; only wall-clock timing
+//! may differ). This is the contract that makes sweep numbers citable.
+
+use cecflow::coordinator::{run_sweep, Algorithm, RunConfig, SweepSpec};
+
+fn small_spec() -> SweepSpec {
+    SweepSpec {
+        scenarios: vec!["abilene".into()],
+        seeds: vec![1, 2],
+        algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
+        rate_scale: 1.0,
+        run: RunConfig::quick(),
+    }
+}
+
+#[test]
+fn identical_results_on_1_and_4_workers() {
+    let spec = small_spec();
+    let serial = run_sweep(&spec, 1).unwrap();
+    let parallel = run_sweep(&spec, 4).unwrap();
+    assert_eq!(serial.workers, 1);
+    assert_eq!(serial.cells.len(), 4);
+    assert_eq!(parallel.cells.len(), 4);
+    assert_eq!(
+        serial.fingerprint(),
+        parallel.fingerprint(),
+        "per-cell results must not depend on the worker count"
+    );
+}
+
+#[test]
+fn repeated_runs_are_identical() {
+    let spec = small_spec();
+    let a = run_sweep(&spec, 2).unwrap();
+    let b = run_sweep(&spec, 2).unwrap();
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    // group aggregates follow from identical cells
+    let ga = a.groups();
+    let gb = b.groups();
+    assert_eq!(ga.len(), gb.len());
+    for (x, y) in ga.iter().zip(&gb) {
+        assert_eq!(x.scenario, y.scenario);
+        assert_eq!(x.algorithm, y.algorithm);
+        assert_eq!(x.mean_cost.to_bits(), y.mean_cost.to_bits());
+        assert_eq!(x.p95_cost.to_bits(), y.p95_cost.to_bits());
+    }
+}
+
+#[test]
+fn cells_cover_the_grid_in_canonical_order() {
+    let spec = small_spec();
+    let report = run_sweep(&spec, 3).unwrap();
+    let got: Vec<(String, u64, &str)> = report
+        .cells
+        .iter()
+        .map(|c| {
+            (
+                c.cell.scenario.clone(),
+                c.cell.seed,
+                c.cell.algorithm.name(),
+            )
+        })
+        .collect();
+    let want: Vec<(String, u64, &str)> = vec![
+        ("abilene".into(), 1, "sgp"),
+        ("abilene".into(), 1, "lpr"),
+        ("abilene".into(), 2, "sgp"),
+        ("abilene".into(), 2, "lpr"),
+    ];
+    assert_eq!(got, want, "results must come back in grid order");
+}
