@@ -1,5 +1,5 @@
-//! Sweep smoke driver: a small `scenario × seed × algorithm` grid on
-//! worker threads, printing the aggregated report and writing
+//! Sweep smoke driver: a small `scenario × seed × algorithm × backend`
+//! grid on worker threads, printing the aggregated report and writing
 //! CSV/JSON under `results/`. CI runs this with `CECFLOW_BENCH_FAST=1`
 //! (one scenario, two seeds) as the parallel-sweep smoke test.
 //!
@@ -8,14 +8,19 @@
 //!     scenario group;
 //!   * per-cell results are identical when the same grid is re-run on a
 //!     different worker count (the determinism contract, also pinned by
-//!     `rust/tests/sweep_determinism.rs`).
+//!     `rust/tests/sweep_determinism.rs`);
+//!   * per-cell results are identical when the same grid is re-run split
+//!     across two child *processes* (`run_sweep_sharded`, the contract of
+//!     `rust/tests/sweep_shard.rs`).
 //!
 //! Run: `cargo bench --bench sweep`   (CECFLOW_BENCH_FAST=1 shrinks the grid)
 
 use std::time::Instant;
 
 use cecflow::coordinator::report::{write_csv, write_json};
-use cecflow::coordinator::{run_sweep, Algorithm, RunConfig, SweepSpec};
+use cecflow::coordinator::{
+    run_sweep, run_sweep_sharded, Algorithm, CellBackend, RunConfig, ShardOptions, SweepSpec,
+};
 use cecflow::util::table::fnum;
 
 fn main() -> anyhow::Result<()> {
@@ -28,6 +33,9 @@ fn main() -> anyhow::Result<()> {
         },
         seeds: if fast { vec![1, 2] } else { vec![1, 2, 3, 4] },
         algorithms: vec![Algorithm::Sgp, Algorithm::Gp, Algorithm::Lpr],
+        // SGP additionally priced through the native dense backend
+        // (step_dense + evaluate_batch) so sweeps exercise both planes
+        backends: vec![CellBackend::Sparse, CellBackend::Native],
         rate_scale: 1.0,
         run: RunConfig::quick(),
     };
@@ -56,6 +64,7 @@ fn main() -> anyhow::Result<()> {
                 c.cell.scenario.clone(),
                 c.cell.seed.to_string(),
                 c.cell.algorithm.name().to_string(),
+                c.cell.backend.name().to_string(),
                 fnum(c.final_cost),
                 c.iterations.to_string(),
                 c.iters_to_1pct.to_string(),
@@ -69,6 +78,7 @@ fn main() -> anyhow::Result<()> {
             "scenario",
             "seed",
             "algorithm",
+            "backend",
             "final_cost",
             "iterations",
             "iters_to_1pct",
@@ -80,11 +90,15 @@ fn main() -> anyhow::Result<()> {
     // ---- shape assertions ----
     let mut ok = true;
     let groups = report.groups();
+    // Fig. 4 headline on the sparse plane: SGP at or below every baseline.
     for g in &groups {
-        if g.algorithm != "sgp" {
+        if g.algorithm != "sgp" || g.backend != "sparse" {
             continue;
         }
-        for other in groups.iter().filter(|o| o.scenario == g.scenario) {
+        for other in groups
+            .iter()
+            .filter(|o| o.scenario == g.scenario && o.backend == "sparse")
+        {
             if g.mean_cost > other.mean_cost * 1.001 {
                 println!(
                     "SHAPE VIOLATION: {}: sgp mean {} > {} mean {}",
@@ -97,10 +111,46 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
+    // The dense-routed SGP (Jacobi joint steps) lands in the same
+    // neighborhood as the sparse Gauss–Seidel run (xla_parity tolerance).
+    for g in &groups {
+        if g.algorithm != "sgp" || g.backend != "native" {
+            continue;
+        }
+        if let Some(sparse) = groups
+            .iter()
+            .find(|o| o.scenario == g.scenario && o.algorithm == "sgp" && o.backend == "sparse")
+        {
+            if g.mean_cost > sparse.mean_cost * 1.05 {
+                println!(
+                    "SHAPE VIOLATION: {}: sgp@native mean {} drifted above sgp@sparse mean {}",
+                    g.scenario,
+                    fnum(g.mean_cost),
+                    fnum(sparse.mean_cost)
+                );
+                ok = false;
+            }
+        }
+    }
     // determinism spot-check across worker counts (serial rerun)
     let rerun = run_sweep(&spec, 1)?;
     if rerun.fingerprint() != report.fingerprint() {
         println!("SHAPE VIOLATION: sweep results differ between 1 and {workers} workers");
+        ok = false;
+    }
+    // determinism spot-check across *process shards*: the same grid split
+    // over two cecflow child processes must reassemble bit-identically
+    let sharded = run_sweep_sharded(
+        &spec,
+        std::path::Path::new(env!("CARGO_BIN_EXE_cecflow")),
+        &ShardOptions {
+            shards: 2,
+            workers,
+            timeout: None,
+        },
+    )?;
+    if sharded.fingerprint() != report.fingerprint() {
+        println!("SHAPE VIOLATION: sweep results differ between in-process and 2-shard runs");
         ok = false;
     }
     println!("sweep shape: {}", if ok { "OK" } else { "VIOLATIONS (see above)" });

@@ -4,16 +4,20 @@
 //!
 //! Run: `cargo run --release --example scenario_sweep`
 
-use cecflow::coordinator::{run_sweep, Algorithm, RunConfig, SweepSpec};
+use cecflow::coordinator::{run_sweep, Algorithm, CellBackend, RunConfig, SweepSpec};
 
 fn main() -> anyhow::Result<()> {
     // A sweep is a cross product: every scenario is instantiated at every
     // seed (deterministically — seed in, same network out) and optimized
-    // by every algorithm under one stopping rule.
+    // by every algorithm under one stopping rule. SGP cells additionally
+    // run once per requested dense backend (`Sparse` is the classic
+    // Gauss–Seidel path, `Native` routes through `Sgp::step_dense` and
+    // the batched `evaluate_batch` safeguard ladder).
     let spec = SweepSpec {
         scenarios: vec!["abilene".into(), "connected-er".into()],
         seeds: vec![1, 2, 3],
         algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
+        backends: vec![CellBackend::Sparse, CellBackend::Native],
         rate_scale: 1.0,
         run: RunConfig::quick(),
     };
@@ -26,10 +30,11 @@ fn main() -> anyhow::Result<()> {
     println!("per-cell detail:");
     for c in &report.cells {
         println!(
-            "  {:>13} seed {}  {:<4}  T = {:<12.4} ({} iters, {} to 1%)",
+            "  {:>13} seed {}  {:<4} @{:<6}  T = {:<12.4} ({} iters, {} to 1%)",
             c.cell.scenario,
             c.cell.seed,
             c.cell.algorithm.name(),
+            c.cell.backend.name(),
             c.final_cost,
             c.iterations,
             c.iters_to_1pct

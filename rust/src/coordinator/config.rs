@@ -60,6 +60,49 @@ impl Algorithm {
     }
 }
 
+/// Dense-evaluation route for one sweep cell's SGP run (per-cell backend
+/// selection in [`crate::coordinator::SweepSpec`]).
+///
+/// Only SGP has a dense path ([`crate::algo::Sgp::step_dense`]); the grid
+/// builder skips non-SGP × non-[`CellBackend::Sparse`] combinations, so a
+/// sweep over `--backends sparse,native` prices every algorithm on the
+/// sparse path and SGP additionally through the native dense backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellBackend {
+    /// The sparse Gauss–Seidel path (`Sgp::step` / `run_algorithm`) — the
+    /// default, and the only route for the non-SGP baselines.
+    Sparse,
+    /// `Sgp::step_dense` on [`crate::runtime::NativeBackend`]: exercises
+    /// the batched safeguard ladder (`evaluate_batch`) in pure-rust f64.
+    Native,
+    /// `Sgp::step_dense` on the PJRT `DenseEvaluator` (needs a build with
+    /// `--features pjrt` plus `make artifacts`).
+    Pjrt,
+}
+
+impl CellBackend {
+    pub fn parse(name: &str) -> Option<CellBackend> {
+        Some(match name.to_ascii_lowercase().as_str() {
+            "sparse" => CellBackend::Sparse,
+            "native" => CellBackend::Native,
+            "pjrt" | "xla" => CellBackend::Pjrt,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CellBackend::Sparse => "sparse",
+            CellBackend::Native => "native",
+            CellBackend::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn all() -> &'static [CellBackend] {
+        &[CellBackend::Sparse, CellBackend::Native, CellBackend::Pjrt]
+    }
+}
+
 /// Update schedule for the optimization loop.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Schedule {
@@ -216,5 +259,14 @@ mod tests {
         for a in Algorithm::all() {
             assert_eq!(Algorithm::parse(a.name()), Some(*a));
         }
+    }
+
+    #[test]
+    fn cell_backend_parse_roundtrip() {
+        for b in CellBackend::all() {
+            assert_eq!(CellBackend::parse(b.name()), Some(*b));
+        }
+        assert_eq!(CellBackend::parse("XLA"), Some(CellBackend::Pjrt));
+        assert_eq!(CellBackend::parse("zzz"), None);
     }
 }

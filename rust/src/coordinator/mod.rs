@@ -17,10 +17,13 @@ use crate::model::flows::compute_flows;
 use crate::model::network::Network;
 use crate::model::strategy::Strategy;
 
-pub use config::{Algorithm, ExperimentConfig, Schedule};
+pub use config::{Algorithm, CellBackend, ExperimentConfig, Schedule};
 pub use runner::{optimize, optimize_accelerated, RunConfig, RunResult};
 pub use scenario::{connected_er_servers, CostKind, Scenario, ScenarioSpec};
-pub use sweep::{run_sweep, CellResult, GroupSummary, SweepCell, SweepReport, SweepSpec};
+pub use sweep::{
+    run_sweep, run_sweep_shard, run_sweep_sharded, CellResult, GroupSummary, ShardOptions,
+    SweepCell, SweepReport, SweepSpec,
+};
 
 /// Unified outcome across iterative algorithms and the one-shot LPR.
 #[derive(Clone, Debug)]
@@ -101,6 +104,77 @@ fn finish_iterative_named(net: &Network, res: RunResult, name: &str) -> Result<A
     })
 }
 
+/// [`run_algorithm`] with an explicit dense-evaluation route for the SGP
+/// run — the per-cell backend selection of [`sweep::SweepSpec`].
+///
+/// * [`CellBackend::Sparse`] — the plain [`run_algorithm`] path (sparse
+///   Gauss–Seidel `Sgp::step` for SGP); bit-for-bit the pre-routing sweep
+///   behavior.
+/// * [`CellBackend::Native`] — SGP through
+///   [`optimize_accelerated`] → `Sgp::step_dense` on
+///   [`crate::runtime::NativeBackend`], exercising the batched safeguard
+///   ladder (`evaluate_batch`).
+/// * [`CellBackend::Pjrt`] — same loop on the PJRT `DenseEvaluator`
+///   (errors unless built with `--features pjrt` and artifacts exist).
+///
+/// Non-SGP algorithms only have the sparse path; asking for a dense route
+/// on them is an error (the sweep grid builder never emits such cells).
+pub fn run_algorithm_with_backend(
+    net: &Network,
+    algo: Algorithm,
+    backend: CellBackend,
+    cfg: &RunConfig,
+) -> Result<AlgoOutcome> {
+    if backend == CellBackend::Sparse {
+        return run_algorithm(net, algo, cfg);
+    }
+    anyhow::ensure!(
+        algo == Algorithm::Sgp,
+        "the {} backend routes through Sgp::step_dense and is only defined for sgp (got {})",
+        backend.name(),
+        algo.name()
+    );
+    match backend {
+        CellBackend::Native => {
+            let phi0 = Strategy::local_compute_init(net);
+            let mut sgp = Sgp::new();
+            let res = runner::optimize_accelerated(
+                net,
+                &mut sgp,
+                &phi0,
+                cfg,
+                &crate::runtime::NativeBackend,
+            )?;
+            finish_iterative(net, res)
+        }
+        CellBackend::Pjrt => run_sgp_pjrt(net, cfg),
+        CellBackend::Sparse => unreachable!("handled above"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn run_sgp_pjrt(net: &Network, cfg: &RunConfig) -> Result<AlgoOutcome> {
+    use crate::runtime::{resolve_artifacts_dir, DenseEvaluator, Engine};
+    // Engine::load compiles every size class; loading per cell keeps the
+    // sweep workers independent (no shared client across threads). Cache
+    // at engine level once the real xla client's thread-safety is pinned.
+    let engine = Engine::load(&resolve_artifacts_dir()?)?;
+    let eval = DenseEvaluator::new(&engine);
+    let phi0 = Strategy::local_compute_init(net);
+    let mut sgp = Sgp::new();
+    let res = runner::optimize_accelerated(net, &mut sgp, &phi0, cfg, &eval)?;
+    finish_iterative(net, res)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_sgp_pjrt(_net: &Network, _cfg: &RunConfig) -> Result<AlgoOutcome> {
+    anyhow::bail!(
+        "sweep cell requested the pjrt backend, but cecflow was built without the \
+         `pjrt` cargo feature — rebuild with `--features pjrt` (and run `make \
+         artifacts`), or select backend `native`"
+    )
+}
+
 /// Build the network for a named scenario, applying the rate scale.
 pub fn build_scenario_network(name: &str, seed: u64, rate_scale: f64) -> Result<Network> {
     let spec = ScenarioSpec::by_name(name)
@@ -150,5 +224,49 @@ mod tests {
     #[test]
     fn unknown_scenario_rejected() {
         assert!(build_scenario_network("zzz", 1, 1.0).is_err());
+    }
+
+    #[test]
+    fn sparse_backend_routing_is_the_plain_path() {
+        let net = build_scenario_network("abilene", 3, 1.0).unwrap();
+        let cfg = RunConfig::quick();
+        let plain = run_algorithm(&net, Algorithm::Sgp, &cfg).unwrap();
+        let routed =
+            run_algorithm_with_backend(&net, Algorithm::Sgp, CellBackend::Sparse, &cfg).unwrap();
+        assert_eq!(plain.final_cost.to_bits(), routed.final_cost.to_bits());
+        assert_eq!(plain.iterations, routed.iterations);
+        assert_eq!(plain.algorithm, routed.algorithm);
+    }
+
+    #[test]
+    fn native_backend_routing_runs_the_dense_loop() {
+        let net = build_scenario_network("abilene", 3, 1.0).unwrap();
+        let cfg = RunConfig::quick();
+        let out =
+            run_algorithm_with_backend(&net, Algorithm::Sgp, CellBackend::Native, &cfg).unwrap();
+        assert_eq!(out.algorithm, "sgp-native");
+        assert!(out.final_cost.is_finite());
+        assert!(out.iterations >= 1);
+    }
+
+    #[test]
+    fn dense_backends_rejected_for_non_sgp() {
+        let net = build_scenario_network("abilene", 3, 1.0).unwrap();
+        let cfg = RunConfig::quick();
+        let err = run_algorithm_with_backend(&net, Algorithm::Lpr, CellBackend::Native, &cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("sgp"), "{err}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_errors_without_the_feature() {
+        let net = build_scenario_network("abilene", 3, 1.0).unwrap();
+        let cfg = RunConfig::quick();
+        let err = run_algorithm_with_backend(&net, Algorithm::Sgp, CellBackend::Pjrt, &cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("pjrt"), "{err}");
     }
 }

@@ -142,7 +142,11 @@ pub fn optimize(
 
 /// Run SGP with flows/marginals evaluated by a pluggable dense backend
 /// (the native f64 evaluator by default; the PJRT/XLA engine behind the
-/// `pjrt` feature).
+/// `pjrt` feature). Sweep cells with `backend: native|pjrt` route here
+/// via [`super::run_algorithm_with_backend`], so a sweep grid can price
+/// the batched `Sgp::step_dense` ladder next to the sparse path —
+/// `rust/tests/sweep_shard.rs` pins that a native-routed cell is bitwise
+/// this function's result.
 pub fn optimize_accelerated(
     net: &Network,
     sgp: &mut Sgp,

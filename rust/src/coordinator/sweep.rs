@@ -1,37 +1,67 @@
-//! Parallel scenario sweeps: run a grid of `scenario × seed × algorithm`
-//! cells across worker threads and aggregate the outcomes into one
-//! comparable report — the machinery behind the `cecflow sweep`
-//! subcommand and `benches/sweep.rs`.
+//! Parallel and process-sharded scenario sweeps: run a grid of
+//! `scenario × seed × algorithm × backend` cells across worker threads —
+//! and, with `cecflow sweep --shards N` / `--shard i/n`, across child
+//! *processes* — then aggregate the outcomes into one comparable report.
+//! This is the machinery behind the `cecflow sweep` subcommand and
+//! `benches/sweep.rs`.
 //!
 //! Determinism is a hard contract, pinned by
-//! `rust/tests/sweep_determinism.rs`: every cell derives all randomness
-//! from its own `(scenario, seed)` pair (no RNG state is shared between
-//! workers), and cells are written back by index, so the per-cell results
-//! of a sweep are identical for any worker count — only wall-clock
-//! timings vary. Workers pull cells from an atomic cursor (work
-//! stealing), which keeps long cells (e.g. SW) from serializing behind a
-//! static partition.
+//! `rust/tests/sweep_determinism.rs` and `rust/tests/sweep_shard.rs`:
+//! every cell derives all randomness from its own `(scenario, seed)` pair
+//! (no RNG state is shared between workers), and results carry their
+//! global grid index, so the per-cell results of a sweep are identical for
+//! any worker count *and* any shard count — only wall-clock timings vary.
+//! Workers pull cells from an atomic cursor (work stealing), which keeps
+//! long cells (e.g. SW) from serializing behind a static partition.
+//!
+//! ## Process sharding
+//!
+//! A sharded sweep splits the cell grid over `n` `cecflow` child
+//! processes. Shard `k` (1-based on the CLI) owns the strided index set
+//! `{k-1, k-1+n, k-1+2n, …}` — striding balances expensive scenarios
+//! (grid order keeps one scenario's cells adjacent) across shards. Each
+//! child runs `cecflow sweep --shard-worker k/n` with the same spec flags
+//! and speaks a JSON-lines protocol on stdout: one `{"type":"cell",…}`
+//! object per finished cell (carrying the global index and the exact cost
+//! bits), a final `{"type":"done",…}`, or `{"type":"error",…}` on
+//! failure. The parent reassembles the slots by index, so the merged
+//! [`SweepReport`] fingerprint is identical to a single-process run of
+//! the same spec. Shard reports written with `--shard i/n --out f.json`
+//! are first-class artifacts: [`SweepReport::from_json`] +
+//! [`SweepReport::merge`] (CLI: `cecflow sweep --merge a.json,b.json`)
+//! reassemble them across hosts.
 
+use std::io::BufRead;
+use std::panic::AssertUnwindSafe;
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
-use std::time::Instant;
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 use crate::util::stats::summarize;
 use crate::util::table::{fnum, Table};
 
-use super::{build_scenario_network, metrics, run_algorithm, Algorithm, RunConfig};
+use super::{
+    build_scenario_network, metrics, run_algorithm_with_backend, Algorithm, CellBackend,
+    RunConfig,
+};
 
 /// A sweep specification: the cell grid is the cross product
-/// `scenarios × seeds × algorithms`, every cell run at `rate_scale` under
-/// the same stopping rule.
+/// `scenarios × seeds × algorithms × backends` (non-SGP algorithms only
+/// pair with [`CellBackend::Sparse`] — they have no dense path), every
+/// cell run at `rate_scale` under the same stopping rule.
 #[derive(Clone, Debug)]
 pub struct SweepSpec {
     pub scenarios: Vec<String>,
     pub seeds: Vec<u64>,
     pub algorithms: Vec<Algorithm>,
+    /// Dense-evaluation routes to sweep SGP cells over. `[Sparse]` (the
+    /// default) reproduces the pre-routing grid exactly.
+    pub backends: Vec<CellBackend>,
     pub rate_scale: f64,
     pub run: RunConfig,
 }
@@ -42,6 +72,7 @@ impl Default for SweepSpec {
             scenarios: vec!["abilene".to_string(), "connected-er".to_string()],
             seeds: vec![1, 2, 3],
             algorithms: vec![Algorithm::Sgp, Algorithm::Gp, Algorithm::Lpr],
+            backends: vec![CellBackend::Sparse],
             rate_scale: 1.0,
             run: RunConfig::quick(),
         }
@@ -49,17 +80,21 @@ impl Default for SweepSpec {
 }
 
 /// One grid cell: a scenario instance (name + seed) optimized by one
-/// algorithm.
+/// algorithm through one dense-evaluation route.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SweepCell {
     pub scenario: String,
     pub seed: u64,
     pub algorithm: Algorithm,
+    pub backend: CellBackend,
 }
 
-/// The outcome of one cell.
+/// The outcome of one cell, tagged with its global grid index so shard
+/// outputs can be reassembled in canonical order.
 #[derive(Clone, Debug)]
 pub struct CellResult {
+    /// Position of this cell in [`SweepSpec::cells`] order.
+    pub index: usize,
     pub cell: SweepCell,
     pub final_cost: f64,
     pub iterations: usize,
@@ -67,11 +102,12 @@ pub struct CellResult {
     pub wall_seconds: f64,
 }
 
-/// Aggregate over the seeds of one `(scenario, algorithm)` group.
+/// Aggregate over the seeds of one `(scenario, algorithm, backend)` group.
 #[derive(Clone, Debug)]
 pub struct GroupSummary {
     pub scenario: String,
     pub algorithm: String,
+    pub backend: String,
     pub cells: usize,
     pub mean_cost: f64,
     pub p95_cost: f64,
@@ -83,25 +119,40 @@ pub struct GroupSummary {
 #[derive(Clone, Debug)]
 pub struct SweepReport {
     pub cells: Vec<CellResult>,
+    /// Worker threads used (total budget for sharded runs). Metadata only
+    /// — like wall times, excluded from [`SweepReport::fingerprint`].
     pub workers: usize,
+    /// Identity of the generating spec ([`spec_grid_hash`]); `0` when
+    /// unknown (hand-built reports). [`SweepReport::merge`] refuses to
+    /// combine shard reports whose nonzero hashes differ — index coverage
+    /// alone cannot tell two same-sized grids apart.
+    pub grid_hash: u64,
 }
 
 impl SweepSpec {
     /// The cell grid in canonical order: scenarios outermost, then seeds,
-    /// then algorithms. This order is part of the determinism contract —
-    /// reports compare cell-by-cell across runs and worker counts.
+    /// then algorithms, then backends. This order is part of the
+    /// determinism contract — reports compare cell-by-cell across runs,
+    /// worker counts and shard counts. Non-SGP × non-`Sparse`
+    /// combinations are skipped (no dense path exists for the baselines).
     pub fn cells(&self) -> Vec<SweepCell> {
         let mut out = Vec::with_capacity(
-            self.scenarios.len() * self.seeds.len() * self.algorithms.len(),
+            self.scenarios.len() * self.seeds.len() * self.algorithms.len() * self.backends.len(),
         );
         for scenario in &self.scenarios {
             for &seed in &self.seeds {
                 for &algorithm in &self.algorithms {
-                    out.push(SweepCell {
-                        scenario: scenario.clone(),
-                        seed,
-                        algorithm,
-                    });
+                    for &backend in &self.backends {
+                        if backend != CellBackend::Sparse && algorithm != Algorithm::Sgp {
+                            continue;
+                        }
+                        out.push(SweepCell {
+                            scenario: scenario.clone(),
+                            seed,
+                            algorithm,
+                            backend,
+                        });
+                    }
                 }
             }
         }
@@ -109,16 +160,17 @@ impl SweepSpec {
     }
 }
 
-fn run_cell(cell: &SweepCell, spec: &SweepSpec) -> Result<CellResult> {
+fn run_cell(index: usize, cell: &SweepCell, spec: &SweepSpec) -> Result<CellResult> {
     let net = build_scenario_network(&cell.scenario, cell.seed, spec.rate_scale)?;
     let start = Instant::now();
-    let out = run_algorithm(&net, cell.algorithm, &spec.run)?;
+    let out = run_algorithm_with_backend(&net, cell.algorithm, cell.backend, &spec.run)?;
     let final_cost = if out.final_cost.is_nan() {
         f64::INFINITY
     } else {
         out.final_cost
     };
     Ok(CellResult {
+        index,
         cell: cell.clone(),
         final_cost,
         iterations: out.iterations,
@@ -127,12 +179,90 @@ fn run_cell(cell: &SweepCell, spec: &SweepSpec) -> Result<CellResult> {
     })
 }
 
-/// Execute every cell of `spec` on up to `workers` threads (clamped to
-/// `[1, #cells]`) and collect a [`SweepReport`]. Cell errors (e.g. an
-/// unknown scenario name) fail the whole sweep with the offending cell
-/// named.
-pub fn run_sweep(spec: &SweepSpec, workers: usize) -> Result<SweepReport> {
-    let cells = spec.cells();
+/// Deterministic identity of a sweep spec's result-relevant content:
+/// FNV-1a over the full cell grid plus the rate scale and stopping rule.
+/// Stamped into every report this module produces so [`SweepReport::merge`]
+/// can refuse shard artifacts that come from different sweeps.
+pub fn spec_grid_hash(spec: &SweepSpec) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    for cell in spec.cells() {
+        eat(cell.scenario.as_bytes());
+        eat(&[0]);
+        eat(&cell.seed.to_le_bytes());
+        eat(cell.algorithm.name().as_bytes());
+        eat(&[0]);
+        eat(cell.backend.name().as_bytes());
+        eat(&[0xff]);
+    }
+    eat(&spec.rate_scale.to_bits().to_le_bytes());
+    eat(&(spec.run.max_iters as u64).to_le_bytes());
+    eat(&spec.run.tol.to_bits().to_le_bytes());
+    eat(&(spec.run.patience as u64).to_le_bytes());
+    h
+}
+
+/// Reject specs whose cells cannot round-trip through the JSON shard
+/// protocol / report artifacts (seeds above 2^53 lose precision as f64).
+/// The CLI seed parser enforces this too; this guard covers library users.
+fn validate_spec(spec: &SweepSpec) -> Result<()> {
+    for &seed in &spec.seeds {
+        anyhow::ensure!(
+            seed <= MAX_SEED,
+            "seed {seed} exceeds 2^53 and cannot round-trip through the sweep's JSON \
+             protocol/artifacts"
+        );
+    }
+    Ok(())
+}
+
+/// Human-readable cell identity used in error contexts.
+fn describe_cell(index: usize, cell: &SweepCell) -> String {
+    format!(
+        "sweep cell {index} ({} seed {} algo {} backend {})",
+        cell.scenario,
+        cell.seed,
+        cell.algorithm.name(),
+        cell.backend.name()
+    )
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// The worker pool shared by every sweep entry point: run `cells` (global
+/// index + cell) on up to `workers` threads, calling `on_cell` as each
+/// cell finishes (the `--shard-worker` streaming hook).
+///
+/// Failure discipline: the first failing cell raises a flag that stops
+/// workers from *claiming* further cells (a typo'd scenario name must not
+/// make the user wait out the healthy cells), and the whole sweep returns
+/// that cell's error with the cell named. A **panicking** cell cannot
+/// deadlock or poison the pool: the panic is caught at the cell boundary
+/// and surfaced as that cell's error (so `std::thread::scope` joins
+/// normally), and slot mutexes are read through `PoisonError::into_inner`
+/// so even a poisoned lock yields its data.
+fn run_cells_with<F>(
+    cells: &[(usize, SweepCell)],
+    workers: usize,
+    runner: F,
+    on_cell: Option<&(dyn Fn(&CellResult) + Sync)>,
+) -> Result<Vec<CellResult>>
+where
+    F: Fn(usize, &SweepCell) -> Result<CellResult> + Sync,
+{
     anyhow::ensure!(
         !cells.is_empty(),
         "empty sweep: need at least one scenario, seed and algorithm"
@@ -141,8 +271,6 @@ pub fn run_sweep(spec: &SweepSpec, workers: usize) -> Result<SweepReport> {
 
     type CellSlot = Mutex<Option<Result<CellResult>>>;
     let next = AtomicUsize::new(0);
-    // First failure stops workers from claiming further cells — a typo'd
-    // scenario name should not make the user wait out the healthy cells.
     let failed = AtomicBool::new(false);
     let slots: Vec<CellSlot> = (0..cells.len()).map(|_| Mutex::new(None)).collect();
 
@@ -152,52 +280,626 @@ pub fn run_sweep(spec: &SweepSpec, workers: usize) -> Result<SweepReport> {
                 if failed.load(Ordering::Relaxed) {
                     break;
                 }
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= cells.len() {
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                if k >= cells.len() {
                     break;
                 }
-                let res = run_cell(&cells[i], spec);
-                if res.is_err() {
-                    failed.store(true, Ordering::Relaxed);
+                let (index, cell) = &cells[k];
+                let res = std::panic::catch_unwind(AssertUnwindSafe(|| runner(*index, cell)))
+                    .unwrap_or_else(|payload| {
+                        Err(anyhow::anyhow!(
+                            "cell panicked: {}",
+                            panic_message(payload.as_ref())
+                        ))
+                    });
+                match &res {
+                    Ok(cr) => {
+                        if let Some(cb) = on_cell {
+                            cb(cr);
+                        }
+                    }
+                    Err(_) => failed.store(true, Ordering::Relaxed),
                 }
-                *slots[i].lock().unwrap() = Some(res);
+                *slots[k].lock().unwrap_or_else(|p| p.into_inner()) = Some(res);
             });
         }
     });
 
+    // The cursor hands out cells in order, so unclaimed (None) slots can
+    // only sit *after* every claimed one — the first error is always
+    // reached before any cancellation gap.
+    let mut out = Vec::with_capacity(cells.len());
+    let mut skipped: Option<usize> = None;
+    for (k, slot) in slots.into_iter().enumerate() {
+        match slot.into_inner().unwrap_or_else(|p| p.into_inner()) {
+            Some(res) => {
+                out.push(res.with_context(|| describe_cell(cells[k].0, &cells[k].1))?)
+            }
+            None => skipped = skipped.or(Some(k)),
+        }
+    }
+    if let Some(k) = skipped {
+        bail!(
+            "sweep aborted early ({} never ran) without a reported error",
+            describe_cell(cells[k].0, &cells[k].1)
+        );
+    }
+    Ok(out)
+}
+
+/// Execute every cell of `spec` on up to `workers` threads (clamped to
+/// `[1, #cells]`) and collect a [`SweepReport`]. Cell errors (e.g. an
+/// unknown scenario name) fail the whole sweep with the offending cell
+/// named.
+pub fn run_sweep(spec: &SweepSpec, workers: usize) -> Result<SweepReport> {
+    validate_spec(spec)?;
+    let cells: Vec<(usize, SweepCell)> = spec.cells().into_iter().enumerate().collect();
+    let results = run_cells_with(&cells, workers, |i, c| run_cell(i, c, spec), None)?;
+    Ok(SweepReport {
+        cells: results,
+        workers: workers.clamp(1, cells.len().max(1)),
+        grid_hash: spec_grid_hash(spec),
+    })
+}
+
+/// Global cell indices owned by shard `shard` (0-based) of `count`: the
+/// strided set `{shard, shard+count, shard+2·count, …}`.
+pub fn shard_cell_indices(total: usize, shard: usize, count: usize) -> Vec<usize> {
+    (shard..total).step_by(count.max(1)).collect()
+}
+
+/// Run one shard of `spec` in-process: the cells of
+/// [`shard_cell_indices`], with `shard` 0-based. The report's cells carry
+/// their *global* grid indices, so shard reports merge back into the
+/// single-process report via [`SweepReport::merge`].
+pub fn run_sweep_shard(
+    spec: &SweepSpec,
+    shard: usize,
+    count: usize,
+    workers: usize,
+) -> Result<SweepReport> {
+    run_sweep_shard_with(spec, shard, count, workers, |_| {})
+}
+
+/// [`run_sweep_shard`] with a completion hook: `on_cell` is called (from
+/// worker threads) as each cell finishes — the `--shard-worker` mode
+/// streams protocol lines through it.
+pub fn run_sweep_shard_with<F>(
+    spec: &SweepSpec,
+    shard: usize,
+    count: usize,
+    workers: usize,
+    on_cell: F,
+) -> Result<SweepReport>
+where
+    F: Fn(&CellResult) + Sync,
+{
+    anyhow::ensure!(
+        count >= 1 && shard < count,
+        "shard index {shard} out of range for {count} shard(s)"
+    );
+    validate_spec(spec)?;
+    let all = spec.cells();
+    anyhow::ensure!(
+        !all.is_empty(),
+        "empty sweep: need at least one scenario, seed and algorithm"
+    );
+    let mine: Vec<(usize, SweepCell)> = shard_cell_indices(all.len(), shard, count)
+        .into_iter()
+        .map(|i| (i, all[i].clone()))
+        .collect();
+    if mine.is_empty() {
+        // more shards than cells: this shard legitimately owns nothing
+        return Ok(SweepReport {
+            cells: Vec::new(),
+            workers: 0,
+            grid_hash: spec_grid_hash(spec),
+        });
+    }
+    let results = run_cells_with(&mine, workers, |i, c| run_cell(i, c, spec), Some(&on_cell))?;
+    Ok(SweepReport {
+        cells: results,
+        workers: workers.clamp(1, mine.len()),
+        grid_hash: spec_grid_hash(spec),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// JSON-lines shard protocol (`--shard-worker` stdout)
+// ---------------------------------------------------------------------------
+
+/// One parsed line of the `--shard-worker` stdout protocol.
+#[derive(Clone, Debug)]
+pub enum ShardLine {
+    /// A finished cell (global index inside).
+    Cell(CellResult),
+    /// Shard finished cleanly after reporting `cells` results.
+    Done { shard: usize, cells: usize },
+    /// Shard failed; the parent surfaces `message` as its error.
+    Error { message: String },
+}
+
+/// Serialize a finished cell as one protocol line (compact JSON, no
+/// newline). The cost travels as exact bits (`final_cost_bits`), so the
+/// parent's merged report is bit-identical to an in-process run.
+pub fn cell_line(cell: &CellResult) -> String {
+    let mut o = cell.to_json();
+    o.set("type", Json::Str("cell".to_string()));
+    o.dump()
+}
+
+/// Serialize the shard-completed protocol line (`shard` 0-based).
+pub fn done_line(shard: usize, cells: usize) -> String {
+    let mut o = Json::obj();
+    o.set("type", Json::Str("done".to_string()))
+        .set("shard", Json::Num(shard as f64))
+        .set("cells", Json::Num(cells as f64));
+    o.dump()
+}
+
+/// Serialize the shard-failed protocol line.
+pub fn error_line(message: &str) -> String {
+    let mut o = Json::obj();
+    o.set("type", Json::Str("error".to_string()))
+        .set("message", Json::Str(message.to_string()));
+    o.dump()
+}
+
+/// Parse one protocol line.
+pub fn parse_shard_line(line: &str) -> Result<ShardLine> {
+    let doc = Json::parse(line).with_context(|| format!("bad shard protocol line: {line}"))?;
+    match doc.get("type").as_str() {
+        Some("cell") => Ok(ShardLine::Cell(CellResult::from_json(&doc)?)),
+        Some("done") => Ok(ShardLine::Done {
+            shard: doc.get("shard").as_usize().unwrap_or(0),
+            cells: doc.get("cells").as_usize().unwrap_or(0),
+        }),
+        Some("error") => Ok(ShardLine::Error {
+            message: doc
+                .get("message")
+                .as_str()
+                .unwrap_or("unknown shard error")
+                .to_string(),
+        }),
+        other => bail!("unknown shard protocol line type {other:?} in: {line}"),
+    }
+}
+
+/// Parse a `--shard i/n` / `--shard-worker i/n` argument (`i` 1-based on
+/// the CLI). Returns the 0-based shard index and the shard count.
+pub fn parse_shard_arg(s: &str) -> Result<(usize, usize)> {
+    let (i, n) = s
+        .split_once('/')
+        .with_context(|| format!("--shard expects i/n (e.g. 1/4), got '{s}'"))?;
+    let i: usize = i
+        .trim()
+        .parse()
+        .with_context(|| format!("bad shard index '{i}'"))?;
+    let n: usize = n
+        .trim()
+        .parse()
+        .with_context(|| format!("bad shard count '{n}'"))?;
+    anyhow::ensure!(n >= 1, "shard count must be at least 1");
+    anyhow::ensure!((1..=n).contains(&i), "shard index {i} out of range 1..={n}");
+    Ok((i - 1, n))
+}
+
+/// Reconstruct the `cecflow sweep` CLI flags describing `spec` — the
+/// parent → child handoff of the process-sharded sweep. Every field that
+/// affects cell results is encoded, so a child parsing these flags
+/// rebuilds an identical grid and stopping rule.
+pub fn spec_to_args(spec: &SweepSpec) -> Vec<String> {
+    let join = |parts: Vec<String>| parts.join(",");
+    vec![
+        "--scenarios".to_string(),
+        spec.scenarios.join(","),
+        "--seeds".to_string(),
+        join(spec.seeds.iter().map(u64::to_string).collect()),
+        "--algos".to_string(),
+        join(spec.algorithms.iter().map(|a| a.name().to_string()).collect()),
+        "--backends".to_string(),
+        join(spec.backends.iter().map(|b| b.name().to_string()).collect()),
+        // f64 Display is the shortest round-tripping decimal, so the
+        // child parses back the exact same value
+        "--scale".to_string(),
+        spec.rate_scale.to_string(),
+        "--iters".to_string(),
+        spec.run.max_iters.to_string(),
+        "--tol".to_string(),
+        spec.run.tol.to_string(),
+        "--patience".to_string(),
+        spec.run.patience.to_string(),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Process-sharded orchestration (parent side)
+// ---------------------------------------------------------------------------
+
+/// Options for [`run_sweep_sharded`].
+#[derive(Clone, Debug)]
+pub struct ShardOptions {
+    /// Number of child processes (clamped to `[1, #cells]`).
+    pub shards: usize,
+    /// Total worker-thread budget, divided evenly across children.
+    pub workers: usize,
+    /// Overall deadline for the whole sharded run; `None` waits forever.
+    /// On expiry every child is killed and the error names the first cell
+    /// still outstanding.
+    pub timeout: Option<Duration>,
+}
+
+fn kill_children(children: &mut [Child]) {
+    for c in children.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+/// Wait for one child, bounded by the sharded sweep's overall deadline:
+/// past the deadline the child is killed and an error returned, so
+/// [`ShardOptions::timeout`] holds even for a child that wedges *after*
+/// closing its stdout (the protocol loop can no longer observe it).
+fn wait_with_deadline(
+    child: &mut Child,
+    deadline: Option<Instant>,
+) -> Result<std::process::ExitStatus> {
+    loop {
+        if let Some(status) = child.try_wait().context("polling child status")? {
+            return Ok(status);
+        }
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            let _ = child.kill();
+            let _ = child.wait();
+            bail!("child did not exit before the sweep deadline");
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Run `spec` sharded across `opts.shards` child processes of the
+/// `cecflow` binary at `exe` (the CLI passes `std::env::current_exe()`;
+/// tests pass `env!("CARGO_BIN_EXE_cecflow")`).
+///
+/// The parent partitions cells by [`shard_cell_indices`], spawns one
+/// `sweep --shard-worker k/n` child per shard (JSON-lines results over
+/// stdout, human chatter on inherited stderr), and reassembles the
+/// results by global index. Child failure, protocol corruption, nonzero
+/// exit and timeout all kill the remaining children and return a
+/// contextful error naming the shard and, where known, the cell.
+///
+/// Pinned by `rust/tests/sweep_shard.rs`: the merged report's
+/// [`SweepReport::fingerprint`] equals the single-process
+/// [`run_sweep`] fingerprint on the same spec.
+pub fn run_sweep_sharded(spec: &SweepSpec, exe: &Path, opts: &ShardOptions) -> Result<SweepReport> {
+    validate_spec(spec)?;
+    let cells = spec.cells();
+    anyhow::ensure!(
+        !cells.is_empty(),
+        "empty sweep: need at least one scenario, seed and algorithm"
+    );
+    let shards = opts.shards.clamp(1, cells.len());
+    let child_workers = (opts.workers / shards).max(1);
+
+    enum Event {
+        Line(usize, String),
+        ReadError(usize, String),
+        Eof(usize),
+    }
+
+    let (tx, rx) = mpsc::channel::<Event>();
+    let mut children: Vec<Child> = Vec::with_capacity(shards);
+    for shard in 0..shards {
+        let mut cmd = Command::new(exe);
+        cmd.arg("sweep")
+            .args(spec_to_args(spec))
+            .arg("--shard-worker")
+            .arg(format!("{}/{shards}", shard + 1))
+            .arg("--workers")
+            .arg(child_workers.to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit());
+        let mut child = cmd.spawn().with_context(|| {
+            format!(
+                "spawning sweep shard {}/{shards} ({})",
+                shard + 1,
+                exe.display()
+            )
+        })?;
+        let stdout = child.stdout.take().expect("stdout was piped");
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            for line in std::io::BufReader::new(stdout).lines() {
+                match line {
+                    Ok(l) => {
+                        if tx.send(Event::Line(shard, l)).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send(Event::ReadError(shard, e.to_string()));
+                        return;
+                    }
+                }
+            }
+            let _ = tx.send(Event::Eof(shard));
+        });
+        children.push(child);
+    }
+    drop(tx);
+
+    let deadline = opts.timeout.map(|t| Instant::now() + t);
+    let mut slots: Vec<Option<CellResult>> = vec![None; cells.len()];
+    let mut eofs = 0usize;
+    // which shards sent their `done` line — an EOF without it means the
+    // child died abnormally (OOM-kill, panic before the protocol started)
+    let mut done = vec![false; shards];
+    while eofs < shards {
+        let timed_out = |slots: &[Option<CellResult>], children: &mut [Child]| {
+            let missing = slots.iter().position(|s| s.is_none());
+            kill_children(children);
+            let what = missing
+                .map(|i| {
+                    format!(
+                        " waiting for {} (shard {}/{shards})",
+                        describe_cell(i, &cells[i]),
+                        i % shards + 1
+                    )
+                })
+                .unwrap_or_default();
+            anyhow::anyhow!(
+                "sharded sweep timed out after {:.1}s{what}",
+                opts.timeout.unwrap_or_default().as_secs_f64()
+            )
+        };
+        let ev = if let Some(d) = deadline {
+            match d.checked_duration_since(Instant::now()) {
+                None => return Err(timed_out(&slots, &mut children)),
+                Some(left) => match rx.recv_timeout(left) {
+                    Ok(ev) => ev,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        return Err(timed_out(&slots, &mut children))
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                },
+            }
+        } else {
+            match rx.recv() {
+                Ok(ev) => ev,
+                Err(_) => break,
+            }
+        };
+        match ev {
+            Event::Line(shard, line) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let parsed = match parse_shard_line(&line) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        kill_children(&mut children);
+                        return Err(e.context(format!(
+                            "sweep shard {}/{shards} spoke garbage on stdout",
+                            shard + 1
+                        )));
+                    }
+                };
+                match parsed {
+                    ShardLine::Cell(c) => {
+                        let i = c.index;
+                        if i >= cells.len() || cells[i] != c.cell {
+                            kill_children(&mut children);
+                            bail!(
+                                "sweep shard {}/{shards} reported a result for a cell not in \
+                                 this grid (index {i})",
+                                shard + 1
+                            );
+                        }
+                        if slots[i].is_some() {
+                            kill_children(&mut children);
+                            bail!(
+                                "sweep shard {}/{shards} reported {} twice",
+                                shard + 1,
+                                describe_cell(i, &cells[i])
+                            );
+                        }
+                        slots[i] = Some(c);
+                    }
+                    ShardLine::Error { message } => {
+                        kill_children(&mut children);
+                        bail!("sweep shard {}/{shards} failed: {message}", shard + 1);
+                    }
+                    ShardLine::Done { .. } => done[shard] = true,
+                }
+            }
+            Event::ReadError(shard, msg) => {
+                kill_children(&mut children);
+                bail!(
+                    "reading results from sweep shard {}/{shards}: {msg}",
+                    shard + 1
+                );
+            }
+            Event::Eof(shard) => {
+                eofs += 1;
+                // Fail fast on abnormal child death: stdout closed without
+                // a `done` (or `error`) line. Don't let the healthy shards
+                // run out the clock producing a result that must be thrown
+                // away anyway.
+                if !done[shard] {
+                    if let Ok(Some(status)) = children[shard].try_wait() {
+                        if !status.success() {
+                            kill_children(&mut children);
+                            bail!(
+                                "sweep shard {}/{shards} exited with {status} before \
+                                 finishing its cells",
+                                shard + 1
+                            );
+                        }
+                    }
+                    // still running or exited 0: the wait loop and the
+                    // completeness check below decide
+                }
+            }
+        }
+    }
+
+    for shard in 0..shards {
+        let status = match wait_with_deadline(&mut children[shard], deadline) {
+            Ok(status) => status,
+            Err(e) => {
+                kill_children(&mut children);
+                return Err(
+                    e.context(format!("waiting for sweep shard {}/{shards}", shard + 1))
+                );
+            }
+        };
+        if !status.success() {
+            kill_children(&mut children);
+            bail!(
+                "sweep shard {}/{shards} exited with {status} without reporting an error cell",
+                shard + 1
+            );
+        }
+    }
+
     let mut results = Vec::with_capacity(cells.len());
     for (i, slot) in slots.into_iter().enumerate() {
-        let res = slot.into_inner().unwrap().unwrap_or_else(|| {
-            panic!(
-                "sweep aborted early (cell {i} never ran) — an earlier cell's \
-                 error is reported instead"
-            )
-        });
-        results.push(res.with_context(|| {
+        results.push(slot.with_context(|| {
             format!(
-                "sweep cell {} ({} seed {} algo {})",
-                i,
-                cells[i].scenario,
-                cells[i].seed,
-                cells[i].algorithm.name()
+                "sharded sweep finished without a result for {} (shard {}/{shards})",
+                describe_cell(i, &cells[i]),
+                i % shards + 1
             )
         })?);
     }
     Ok(SweepReport {
         cells: results,
-        workers,
+        workers: opts.workers.max(1),
+        grid_hash: spec_grid_hash(spec),
     })
 }
 
+// ---------------------------------------------------------------------------
+// Report: aggregation, fingerprint, serde, merge
+// ---------------------------------------------------------------------------
+
+/// One cell's identity inside [`SweepReport::fingerprint`]: scenario,
+/// seed, algorithm, backend, cost bits, iterations, iters-to-1%.
+pub type CellFingerprint = (String, u64, String, String, u64, usize, usize);
+
+impl CellResult {
+    /// Machine-readable cell record. `final_cost` is duplicated as exact
+    /// bits (`final_cost_bits`, hex): JSON numbers cannot carry `±∞`
+    /// (serialized as `null`) and decimal round-trips are not part of the
+    /// determinism contract — the bits field is authoritative for
+    /// [`CellResult::from_json`].
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("index", Json::Num(self.index as f64))
+            .set("scenario", Json::Str(self.cell.scenario.clone()))
+            .set("seed", Json::Num(self.cell.seed as f64))
+            .set(
+                "algorithm",
+                Json::Str(self.cell.algorithm.name().to_string()),
+            )
+            .set("backend", Json::Str(self.cell.backend.name().to_string()))
+            .set("final_cost", Json::Num(self.final_cost))
+            .set(
+                "final_cost_bits",
+                Json::Str(format!("{:016x}", self.final_cost.to_bits())),
+            )
+            .set("iterations", Json::Num(self.iterations as f64))
+            .set("iters_to_1pct", Json::Num(self.iters_to_1pct as f64))
+            .set("wall_seconds", Json::Num(self.wall_seconds));
+        o
+    }
+
+    /// Parse a cell record produced by [`CellResult::to_json`] (or a
+    /// protocol line carrying the same fields).
+    pub fn from_json(doc: &Json) -> Result<CellResult> {
+        let scenario = doc
+            .get("scenario")
+            .as_str()
+            .context("cell record missing scenario")?
+            .to_string();
+        let seed = doc.get("seed").as_num().context("cell record missing seed")? as u64;
+        let algorithm = {
+            let a = doc
+                .get("algorithm")
+                .as_str()
+                .context("cell record missing algorithm")?;
+            Algorithm::parse(a).with_context(|| format!("unknown algorithm '{a}'"))?
+        };
+        let backend = {
+            let b = doc
+                .get("backend")
+                .as_str()
+                .context("cell record missing backend")?;
+            CellBackend::parse(b).with_context(|| format!("unknown backend '{b}'"))?
+        };
+        let final_cost = match doc.get("final_cost_bits").as_str() {
+            Some(hex) => f64::from_bits(
+                u64::from_str_radix(hex, 16)
+                    .with_context(|| format!("bad final_cost_bits '{hex}'"))?,
+            ),
+            None => {
+                // hand-authored records may carry only the decimal field;
+                // require it explicitly — a record with *neither* field is
+                // corrupt, not saturated. (The serializer writes non-finite
+                // costs as JSON null, so an explicit null means +∞.)
+                let present = doc
+                    .as_obj()
+                    .is_some_and(|m| m.contains_key("final_cost"));
+                anyhow::ensure!(
+                    present,
+                    "cell record missing final_cost_bits and final_cost"
+                );
+                match doc.get("final_cost") {
+                    Json::Num(x) => *x,
+                    Json::Null => f64::INFINITY,
+                    other => bail!(
+                        "cell record final_cost must be a number or null, got {other:?}"
+                    ),
+                }
+            }
+        };
+        Ok(CellResult {
+            index: doc
+                .get("index")
+                .as_usize()
+                .context("cell record missing index")?,
+            cell: SweepCell {
+                scenario,
+                seed,
+                algorithm,
+                backend,
+            },
+            final_cost,
+            iterations: doc
+                .get("iterations")
+                .as_usize()
+                .context("cell record missing iterations")?,
+            iters_to_1pct: doc
+                .get("iters_to_1pct")
+                .as_usize()
+                .context("cell record missing iters_to_1pct")?,
+            wall_seconds: doc.get("wall_seconds").as_num().unwrap_or(0.0),
+        })
+    }
+}
+
 impl SweepReport {
-    /// Per-`(scenario, algorithm)` aggregates in first-appearance order.
+    /// Per-`(scenario, algorithm, backend)` aggregates in
+    /// first-appearance order.
     pub fn groups(&self) -> Vec<GroupSummary> {
-        let mut order: Vec<(String, String)> = Vec::new();
+        let mut order: Vec<(String, String, String)> = Vec::new();
         let mut buckets: Vec<Vec<&CellResult>> = Vec::new();
         for cell in &self.cells {
             let key = (
                 cell.cell.scenario.clone(),
                 cell.cell.algorithm.name().to_string(),
+                cell.cell.backend.name().to_string(),
             );
             match order.iter().position(|k| *k == key) {
                 Some(i) => buckets[i].push(cell),
@@ -210,13 +912,14 @@ impl SweepReport {
         order
             .into_iter()
             .zip(buckets)
-            .map(|((scenario, algorithm), cells)| {
+            .map(|((scenario, algorithm, backend), cells)| {
                 let costs: Vec<f64> = cells.iter().map(|c| c.final_cost).collect();
                 let s = summarize(&costs);
                 let n = cells.len() as f64;
                 GroupSummary {
                     scenario,
                     algorithm,
+                    backend,
                     cells: cells.len(),
                     mean_cost: s.mean,
                     p95_cost: s.p95,
@@ -232,10 +935,12 @@ impl SweepReport {
     }
 
     /// Deterministic identity of the sweep's results: everything except
-    /// wall-clock timing, with costs compared bit-for-bit. Two sweeps of
-    /// the same spec must produce equal fingerprints regardless of worker
-    /// count (`rust/tests/sweep_determinism.rs`).
-    pub fn fingerprint(&self) -> Vec<(String, u64, String, u64, usize, usize)> {
+    /// wall-clock timing and worker/shard metadata, with costs compared
+    /// bit-for-bit. Two sweeps of the same spec must produce equal
+    /// fingerprints regardless of worker count
+    /// (`rust/tests/sweep_determinism.rs`) or shard count
+    /// (`rust/tests/sweep_shard.rs`).
+    pub fn fingerprint(&self) -> Vec<CellFingerprint> {
         self.cells
             .iter()
             .map(|c| {
@@ -243,6 +948,7 @@ impl SweepReport {
                     c.cell.scenario.clone(),
                     c.cell.seed,
                     c.cell.algorithm.name().to_string(),
+                    c.cell.backend.name().to_string(),
                     c.final_cost.to_bits(),
                     c.iterations,
                     c.iters_to_1pct,
@@ -256,6 +962,7 @@ impl SweepReport {
         let mut t = Table::new(&[
             "scenario",
             "algo",
+            "backend",
             "cells",
             "mean T",
             "p95 T",
@@ -266,6 +973,7 @@ impl SweepReport {
             t.row(vec![
                 g.scenario,
                 g.algorithm,
+                g.backend,
                 g.cells.to_string(),
                 fnum(g.mean_cost),
                 fnum(g.p95_cost),
@@ -276,26 +984,11 @@ impl SweepReport {
         t.render()
     }
 
-    /// Machine-readable report (cells + groups).
+    /// Machine-readable report (cells + groups). Shard reports written
+    /// this way are first-class artifacts: [`SweepReport::from_json`] +
+    /// [`SweepReport::merge`] reassemble them.
     pub fn to_json(&self) -> Json {
-        let cells: Vec<Json> = self
-            .cells
-            .iter()
-            .map(|c| {
-                let mut o = Json::obj();
-                o.set("scenario", Json::Str(c.cell.scenario.clone()))
-                    .set("seed", Json::Num(c.cell.seed as f64))
-                    .set(
-                        "algorithm",
-                        Json::Str(c.cell.algorithm.name().to_string()),
-                    )
-                    .set("final_cost", Json::Num(c.final_cost))
-                    .set("iterations", Json::Num(c.iterations as f64))
-                    .set("iters_to_1pct", Json::Num(c.iters_to_1pct as f64))
-                    .set("wall_seconds", Json::Num(c.wall_seconds));
-                o
-            })
-            .collect();
+        let cells: Vec<Json> = self.cells.iter().map(CellResult::to_json).collect();
         let groups: Vec<Json> = self
             .groups()
             .into_iter()
@@ -303,6 +996,7 @@ impl SweepReport {
                 let mut o = Json::obj();
                 o.set("scenario", Json::Str(g.scenario))
                     .set("algorithm", Json::Str(g.algorithm))
+                    .set("backend", Json::Str(g.backend))
                     .set("cells", Json::Num(g.cells as f64))
                     .set("mean_cost", Json::Num(g.mean_cost))
                     .set("p95_cost", Json::Num(g.p95_cost))
@@ -313,11 +1007,91 @@ impl SweepReport {
             .collect();
         let mut doc = Json::obj();
         doc.set("workers", Json::Num(self.workers as f64))
+            // hex string: u64 hashes exceed f64's exact-integer range
+            .set("grid_hash", Json::Str(format!("{:016x}", self.grid_hash)))
             .set("cells", Json::Arr(cells))
             .set("groups", Json::Arr(groups));
         doc
     }
+
+    /// Parse a report (or shard report) written by [`SweepReport::to_json`].
+    /// Cells are re-sorted by their global index; the derived `groups`
+    /// section is ignored (it is recomputed on demand).
+    pub fn from_json(doc: &Json) -> Result<SweepReport> {
+        let cells_json = doc
+            .get("cells")
+            .as_arr()
+            .context("sweep report missing cells array")?;
+        let mut cells = cells_json
+            .iter()
+            .enumerate()
+            .map(|(k, c)| CellResult::from_json(c).with_context(|| format!("cell record {k}")))
+            .collect::<Result<Vec<_>>>()?;
+        cells.sort_by_key(|c| c.index);
+        let grid_hash = match doc.get("grid_hash").as_str() {
+            Some(hex) => u64::from_str_radix(hex, 16)
+                .with_context(|| format!("bad grid_hash '{hex}'"))?,
+            None => 0,
+        };
+        Ok(SweepReport {
+            cells,
+            workers: doc.get("workers").as_usize().unwrap_or(0),
+            grid_hash,
+        })
+    }
+
+    /// Merge shard reports back into one full-grid report: cells are
+    /// reassembled by global index, which must form exactly `0..total`
+    /// (duplicates and gaps are contextful errors), and every part must
+    /// carry the same [`spec_grid_hash`] — shards of *different* sweeps
+    /// with same-sized grids would otherwise interleave silently.
+    /// Fingerprint-identical to the single-process run of the same spec.
+    pub fn merge(parts: Vec<SweepReport>) -> Result<SweepReport> {
+        let mut grid_hash = 0u64;
+        for p in &parts {
+            if p.grid_hash == 0 {
+                continue; // hand-built report: no identity to check
+            }
+            if grid_hash == 0 {
+                grid_hash = p.grid_hash;
+            } else if p.grid_hash != grid_hash {
+                bail!(
+                    "shard merge: reports come from different sweep specs \
+                     (grid hash {:016x} vs {:016x})",
+                    grid_hash,
+                    p.grid_hash
+                );
+            }
+        }
+        let workers = parts.iter().map(|p| p.workers).sum::<usize>().max(1);
+        let mut cells: Vec<CellResult> = parts.into_iter().flat_map(|p| p.cells).collect();
+        anyhow::ensure!(!cells.is_empty(), "merging empty shard reports");
+        cells.sort_by_key(|c| c.index);
+        for (k, c) in cells.iter().enumerate() {
+            if c.index != k {
+                if c.index < k {
+                    bail!(
+                        "shard merge: duplicate result for {}",
+                        describe_cell(c.index, &c.cell)
+                    );
+                }
+                bail!(
+                    "shard merge: missing cell index {k} — the shard reports do not cover \
+                     the whole grid"
+                );
+            }
+        }
+        Ok(SweepReport {
+            cells,
+            workers,
+            grid_hash,
+        })
+    }
 }
+
+// ---------------------------------------------------------------------------
+// CLI list parsers
+// ---------------------------------------------------------------------------
 
 /// Parse a comma-separated scenario list (`"abilene,connected-er"`).
 pub fn parse_scenarios(s: &str) -> Vec<String> {
@@ -370,9 +1144,29 @@ pub fn parse_algorithms(s: &str) -> Result<Vec<Algorithm>> {
         .collect()
 }
 
+/// Parse a comma-separated backend list (`"sparse,native"`).
+pub fn parse_backends(s: &str) -> Result<Vec<CellBackend>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| CellBackend::parse(t).with_context(|| format!("unknown backend '{t}'")))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn abilene_spec() -> SweepSpec {
+        SweepSpec {
+            scenarios: vec!["abilene".into()],
+            seeds: vec![1, 2],
+            algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
+            backends: vec![CellBackend::Sparse],
+            rate_scale: 1.0,
+            run: RunConfig::quick(),
+        }
+    }
 
     #[test]
     fn cell_grid_order_is_canonical() {
@@ -380,6 +1174,7 @@ mod tests {
             scenarios: vec!["a".into(), "b".into()],
             seeds: vec![1, 2],
             algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
+            backends: vec![CellBackend::Sparse],
             rate_scale: 1.0,
             run: RunConfig::quick(),
         };
@@ -394,19 +1189,46 @@ mod tests {
     }
 
     #[test]
-    fn sweep_runs_and_aggregates() {
+    fn grid_skips_dense_backends_for_baselines() {
         let spec = SweepSpec {
-            scenarios: vec!["abilene".into()],
-            seeds: vec![1, 2],
+            scenarios: vec!["a".into()],
+            seeds: vec![1],
             algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
+            backends: vec![CellBackend::Sparse, CellBackend::Native],
             rate_scale: 1.0,
             run: RunConfig::quick(),
         };
+        let cells = spec.cells();
+        // sgp×sparse, sgp×native, lpr×sparse — no lpr×native
+        assert_eq!(cells.len(), 3);
+        assert_eq!(
+            (cells[0].algorithm, cells[0].backend),
+            (Algorithm::Sgp, CellBackend::Sparse)
+        );
+        assert_eq!(
+            (cells[1].algorithm, cells[1].backend),
+            (Algorithm::Sgp, CellBackend::Native)
+        );
+        assert_eq!(
+            (cells[2].algorithm, cells[2].backend),
+            (Algorithm::Lpr, CellBackend::Sparse)
+        );
+    }
+
+    #[test]
+    fn sweep_runs_and_aggregates() {
+        let spec = abilene_spec();
         let report = run_sweep(&spec, 2).unwrap();
         assert_eq!(report.cells.len(), 4);
+        // indices are the canonical grid positions
+        assert_eq!(
+            report.cells.iter().map(|c| c.index).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
         let groups = report.groups();
         assert_eq!(groups.len(), 2);
         assert_eq!(groups[0].algorithm, "sgp");
+        assert_eq!(groups[0].backend, "sparse");
         assert_eq!(groups[0].cells, 2);
         assert!(groups[0].mean_cost.is_finite());
         // Fig. 4 headline on the means: SGP at or below LPR (same relative
@@ -425,8 +1247,7 @@ mod tests {
             scenarios: vec!["no-such-scenario".into()],
             seeds: vec![1],
             algorithms: vec![Algorithm::Sgp],
-            rate_scale: 1.0,
-            run: RunConfig::quick(),
+            ..SweepSpec::default()
         };
         let err = run_sweep(&spec, 1).unwrap_err().to_string();
         assert!(err.contains("no-such-scenario"), "{err}");
@@ -439,6 +1260,241 @@ mod tests {
             ..SweepSpec::default()
         };
         assert!(run_sweep(&spec, 1).is_err());
+    }
+
+    #[test]
+    fn panicking_cell_fails_cleanly_without_deadlock() {
+        // Inject a panic into one cell of a real grid: the pool must join
+        // all workers, skip unclaimed cells, and surface the panic as that
+        // cell's error — not deadlock, not propagate the unwind.
+        let spec = SweepSpec {
+            scenarios: vec!["abilene".into()],
+            seeds: vec![1, 2, 3, 4],
+            algorithms: vec![Algorithm::Lpr],
+            backends: vec![CellBackend::Sparse],
+            rate_scale: 1.0,
+            run: RunConfig::quick(),
+        };
+        let cells: Vec<(usize, SweepCell)> = spec.cells().into_iter().enumerate().collect();
+        let err = run_cells_with(
+            &cells,
+            2,
+            |i, c| {
+                if i == 1 {
+                    panic!("injected cell panic");
+                }
+                run_cell(i, c, &spec)
+            },
+            None,
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("injected cell panic"), "{msg}");
+        assert!(msg.contains("sweep cell 1"), "{msg}");
+    }
+
+    #[test]
+    fn shard_indices_partition_the_grid() {
+        for count in [1usize, 2, 3, 4, 7] {
+            let mut seen = vec![false; 10];
+            for shard in 0..count {
+                for i in shard_cell_indices(10, shard, count) {
+                    assert!(!seen[i], "index {i} assigned twice (count {count})");
+                    seen[i] = true;
+                    assert_eq!(i % count, shard, "striding violated");
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "indices dropped (count {count})");
+        }
+    }
+
+    #[test]
+    fn in_process_shards_merge_to_the_full_report() {
+        let spec = abilene_spec();
+        let whole = run_sweep(&spec, 2).unwrap();
+        for count in [1usize, 2, 4] {
+            let parts: Vec<SweepReport> = (0..count)
+                .map(|k| run_sweep_shard(&spec, k, count, 2).unwrap())
+                .collect();
+            let merged = SweepReport::merge(parts).unwrap();
+            assert_eq!(
+                merged.fingerprint(),
+                whole.fingerprint(),
+                "{count} shard(s) drifted from the single-process run"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_rejects_gaps_and_duplicates() {
+        let spec = abilene_spec();
+        let a = run_sweep_shard(&spec, 0, 2, 1).unwrap();
+        let b = run_sweep_shard(&spec, 1, 2, 1).unwrap();
+        // missing shard
+        let err = SweepReport::merge(vec![a.clone()]).unwrap_err().to_string();
+        assert!(err.contains("missing cell index"), "{err}");
+        // duplicate shard
+        let err = SweepReport::merge(vec![a.clone(), a.clone(), b.clone()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate"), "{err}");
+        // correct merge still fine
+        assert!(SweepReport::merge(vec![a, b]).is_ok());
+    }
+
+    #[test]
+    fn report_json_roundtrip_is_bit_exact() {
+        // Hand-built report with awkward values (∞ cost from a saturated
+        // cell): serde must round-trip the fingerprint exactly even though
+        // JSON itself cannot represent ∞.
+        let mk = |index: usize, cost: f64| CellResult {
+            index,
+            cell: SweepCell {
+                scenario: "abilene".into(),
+                seed: 1 + index as u64,
+                algorithm: Algorithm::Sgp,
+                backend: CellBackend::Native,
+            },
+            final_cost: cost,
+            iterations: 5,
+            iters_to_1pct: 2,
+            wall_seconds: 0.25,
+        };
+        let report = SweepReport {
+            cells: vec![mk(0, 123.456_789_012_345), mk(1, f64::INFINITY)],
+            workers: 3,
+            grid_hash: 0xdead_beef_0042_1337,
+        };
+        let text = report.to_json().pretty();
+        let back = SweepReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(report.fingerprint(), back.fingerprint());
+        assert!(back.cells[1].final_cost.is_infinite());
+        assert_eq!(back.workers, 3);
+        assert_eq!(back.grid_hash, report.grid_hash);
+    }
+
+    #[test]
+    fn merge_rejects_shards_of_different_specs() {
+        // equal-sized grids from different specs: index coverage alone
+        // would pass, the grid hash must not
+        let spec_a = abilene_spec();
+        let spec_b = SweepSpec {
+            seeds: vec![1, 3],
+            ..abilene_spec()
+        };
+        let a = run_sweep_shard(&spec_a, 0, 2, 1).unwrap();
+        let b = run_sweep_shard(&spec_b, 1, 2, 1).unwrap();
+        let err = SweepReport::merge(vec![a, b]).unwrap_err().to_string();
+        assert!(err.contains("different sweep specs"), "{err}");
+    }
+
+    #[test]
+    fn oversized_seeds_rejected_before_running() {
+        let spec = SweepSpec {
+            seeds: vec![(1 << 53) + 1],
+            ..abilene_spec()
+        };
+        let err = run_sweep(&spec, 1).unwrap_err().to_string();
+        assert!(err.contains("2^53"), "{err}");
+        assert!(run_sweep_shard(&spec, 0, 2, 1).is_err());
+    }
+
+    #[test]
+    fn corrupt_cell_records_are_rejected_not_defaulted() {
+        let base = r#"{"index":0,"scenario":"abilene","seed":1,"algorithm":"sgp",
+                       "backend":"sparse","iterations":3,"iters_to_1pct":1,
+                       "wall_seconds":0.1"#;
+        // neither final_cost_bits nor final_cost: corrupt, not saturated
+        let doc = Json::parse(&format!("{base}}}")).unwrap();
+        let err = CellResult::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("final_cost"), "{err}");
+        // an explicit null cost (the serializer's spelling of ∞) still loads
+        let doc = Json::parse(&format!("{base},\"final_cost\":null}}")).unwrap();
+        assert!(CellResult::from_json(&doc).unwrap().final_cost.is_infinite());
+        // a missing backend is an error too (every writer emits it)
+        let doc = Json::parse(
+            r#"{"index":0,"scenario":"abilene","seed":1,"algorithm":"sgp",
+                "final_cost":2.5,"iterations":3,"iters_to_1pct":1,"wall_seconds":0.1}"#,
+        )
+        .unwrap();
+        let err = CellResult::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("backend"), "{err}");
+    }
+
+    #[test]
+    fn shard_protocol_lines_roundtrip() {
+        let cell = CellResult {
+            index: 7,
+            cell: SweepCell {
+                scenario: "connected-er".into(),
+                seed: 3,
+                algorithm: Algorithm::Gp,
+                backend: CellBackend::Sparse,
+            },
+            final_cost: f64::INFINITY,
+            iterations: 80,
+            iters_to_1pct: 80,
+            wall_seconds: 1.5,
+        };
+        match parse_shard_line(&cell_line(&cell)).unwrap() {
+            ShardLine::Cell(c) => {
+                assert_eq!(c.index, 7);
+                assert_eq!(c.cell, cell.cell);
+                assert_eq!(c.final_cost.to_bits(), cell.final_cost.to_bits());
+            }
+            other => panic!("wrong line kind: {other:?}"),
+        }
+        match parse_shard_line(&done_line(1, 9)).unwrap() {
+            ShardLine::Done { shard, cells } => {
+                assert_eq!((shard, cells), (1, 9));
+            }
+            other => panic!("wrong line kind: {other:?}"),
+        }
+        match parse_shard_line(&error_line("boom: cell 3")).unwrap() {
+            ShardLine::Error { message } => assert!(message.contains("boom")),
+            other => panic!("wrong line kind: {other:?}"),
+        }
+        assert!(parse_shard_line("not json").is_err());
+        assert!(parse_shard_line("{\"type\":\"wat\"}").is_err());
+    }
+
+    #[test]
+    fn shard_arg_parses_one_based() {
+        assert_eq!(parse_shard_arg("1/4").unwrap(), (0, 4));
+        assert_eq!(parse_shard_arg("4/4").unwrap(), (3, 4));
+        assert!(parse_shard_arg("0/4").is_err());
+        assert!(parse_shard_arg("5/4").is_err());
+        assert!(parse_shard_arg("x/4").is_err());
+        assert!(parse_shard_arg("2").is_err());
+    }
+
+    #[test]
+    fn spec_args_roundtrip_through_the_parsers() {
+        let spec = SweepSpec {
+            scenarios: vec!["abilene".into(), "connected-er".into()],
+            seeds: vec![1, 5, 9],
+            algorithms: vec![Algorithm::Sgp, Algorithm::Gp],
+            backends: vec![CellBackend::Sparse, CellBackend::Native],
+            rate_scale: 1.25,
+            run: RunConfig {
+                max_iters: 33,
+                tol: 3e-6,
+                patience: 4,
+            },
+        };
+        let args = spec_to_args(&spec);
+        let get = |flag: &str| -> &str {
+            let i = args.iter().position(|a| a == flag).unwrap();
+            &args[i + 1]
+        };
+        assert_eq!(parse_scenarios(get("--scenarios")), spec.scenarios);
+        assert_eq!(parse_seeds(get("--seeds")).unwrap(), spec.seeds);
+        assert_eq!(parse_algorithms(get("--algos")).unwrap(), spec.algorithms);
+        assert_eq!(parse_backends(get("--backends")).unwrap(), spec.backends);
+        assert_eq!(get("--scale").parse::<f64>().unwrap(), spec.rate_scale);
+        assert_eq!(get("--iters").parse::<usize>().unwrap(), 33);
+        assert_eq!(get("--tol").parse::<f64>().unwrap().to_bits(), 3e-6f64.to_bits());
+        assert_eq!(get("--patience").parse::<usize>().unwrap(), 4);
     }
 
     #[test]
@@ -455,5 +1511,10 @@ mod tests {
             vec![Algorithm::Sgp, Algorithm::Lpr]
         );
         assert!(parse_algorithms("sgp,zzz").is_err());
+        assert_eq!(
+            parse_backends("sparse, native").unwrap(),
+            vec![CellBackend::Sparse, CellBackend::Native]
+        );
+        assert!(parse_backends("sparse,zzz").is_err());
     }
 }

@@ -6,7 +6,12 @@
 //!                    [--scale 1.0] [--schedule sync|async|accelerated]
 //!                    [--config path.json] [--out results/run.json]
 //! cecflow sweep      [--scenarios a,b] [--seeds 1,2,3 | 1..8] [--algos sgp,gp,lpr]
-//!                    [--workers N] [--iters N] [--scale X] [--out results/sweep.json]
+//!                    [--backends sparse,native,pjrt] [--workers N] [--iters N]
+//!                    [--tol X] [--patience N] [--scale X] [--out results/sweep.json]
+//!                    [--shards N [--shard-timeout SECS]]   process-sharded parent
+//!                    [--shard i/n]                         run one shard in-process
+//!                    [--shard-worker i/n]                  JSON-lines child protocol
+//!                    [--merge a.json,b.json]               merge shard reports
 //! cecflow experiment fig4|fig5b|fig5c|fig5d|table2  (see benches/ too)
 //! cecflow validate   [--scenario abilene] — XLA data plane vs native
 //! cecflow info       — environment, scenarios, artifact status
@@ -70,7 +75,12 @@ fn print_help() {
          \x20            --iters N --scale X --schedule sync|async|accelerated\n\
          \x20            --config FILE --out FILE\n\
          sweep flags:  --scenarios a,b --seeds 1,2,3|1..8 --algos sgp,gp,lpr\n\
-         \x20            --workers N --iters N --scale X --out FILE"
+         \x20            --backends sparse,native,pjrt --workers N --iters N\n\
+         \x20            --tol X --patience N --scale X --out FILE\n\
+         sweep shards: --shards N [--shard-timeout SECS]  spawn N child processes\n\
+         \x20            --shard i/n [--out FILE]           run shard i of n here\n\
+         \x20            --merge a.json,b.json              merge shard reports\n\
+         \x20            --shard-worker i/n                 (internal JSON-lines child)"
     );
 }
 
@@ -181,11 +191,49 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `cecflow sweep`: run a `scenario × seed × algorithm` grid on worker
-/// threads and print the aggregated [`cecflow::coordinator::SweepReport`].
+/// Write a sweep report to `--out` as pretty JSON, creating parent
+/// directories so `--out results/sweep.json` works on a fresh checkout.
+fn write_sweep_report(report: &cecflow::coordinator::SweepReport, out: &str) -> Result<()> {
+    if let Some(parent) = std::path::Path::new(out).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    std::fs::write(out, report.to_json().pretty()).with_context(|| format!("writing {out}"))
+}
+
+/// `cecflow sweep`: run a `scenario × seed × algorithm × backend` grid on
+/// worker threads — optionally sharded across child processes — and print
+/// the aggregated [`cecflow::coordinator::SweepReport`].
 fn cmd_sweep(args: &Args) -> Result<()> {
-    use cecflow::coordinator::sweep::{parse_algorithms, parse_scenarios, parse_seeds};
-    use cecflow::coordinator::{run_sweep, SweepSpec};
+    use cecflow::coordinator::sweep::{
+        cell_line, done_line, error_line, parse_algorithms, parse_backends, parse_scenarios,
+        parse_seeds, parse_shard_arg, run_sweep_shard, run_sweep_shard_with,
+    };
+    use cecflow::coordinator::{run_sweep, run_sweep_sharded, ShardOptions, SweepReport, SweepSpec};
+
+    // ---- merge mode: reassemble shard report artifacts ----
+    if let Some(list) = args.opt("merge") {
+        let mut parts = Vec::new();
+        for path in list.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let text =
+                std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            let doc = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+            parts.push(
+                SweepReport::from_json(&doc)
+                    .with_context(|| format!("loading shard report {path}"))?,
+            );
+        }
+        anyhow::ensure!(!parts.is_empty(), "--merge needs at least one report file");
+        let report = SweepReport::merge(parts)?;
+        println!("{}", report.render());
+        if let Some(out) = args.opt("out") {
+            write_sweep_report(&report, out)?;
+            println!("wrote {out}");
+        }
+        return Ok(());
+    }
 
     let mut spec = SweepSpec::default();
     if let Some(s) = args.opt("scenarios") {
@@ -197,23 +245,106 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if let Some(s) = args.opt("algos") {
         spec.algorithms = parse_algorithms(s)?;
     }
+    if let Some(s) = args.opt("backends") {
+        spec.backends = parse_backends(s)?;
+    }
     spec.rate_scale = args.opt_f64("scale", spec.rate_scale);
     spec.run.max_iters = args.opt_usize("iters", spec.run.max_iters);
+    spec.run.tol = args.opt_f64("tol", spec.run.tol);
+    spec.run.patience = args.opt_usize("patience", spec.run.patience);
 
     let default_workers = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
     let workers = args.opt_usize("workers", default_workers);
 
+    // ---- child protocol mode: JSON-lines cell results on stdout ----
+    // (stdout carries only protocol lines; any chatter goes to stderr)
+    if let Some(sw) = args.opt("shard-worker") {
+        use std::io::Write as _;
+        let (shard, count) = parse_shard_arg(sw)?;
+        let stdout = std::io::stdout();
+        let res = run_sweep_shard_with(&spec, shard, count, workers, |cell| {
+            let mut h = stdout.lock();
+            let _ = writeln!(h, "{}", cell_line(cell));
+            let _ = h.flush();
+        });
+        return match res {
+            Ok(report) => {
+                let mut h = stdout.lock();
+                let _ = writeln!(h, "{}", done_line(shard, report.cells.len()));
+                let _ = h.flush();
+                Ok(())
+            }
+            Err(err) => {
+                // the parent reads the error from the protocol stream; the
+                // nonzero exit (via the returned Err) is the backstop
+                let mut h = stdout.lock();
+                let _ = writeln!(h, "{}", error_line(&format!("{err:#}")));
+                let _ = h.flush();
+                drop(h);
+                Err(err)
+            }
+        };
+    }
+
+    // ---- manual shard mode: run shard i of n in this process ----
+    if let Some(sh) = args.opt("shard") {
+        let (shard, count) = parse_shard_arg(sh)?;
+        let total = spec.cells().len();
+        println!(
+            "sweep shard {}/{count}: {} of {total} cells on up to {workers} worker(s)",
+            shard + 1,
+            cecflow::coordinator::sweep::shard_cell_indices(total, shard, count).len(),
+        );
+        let report = run_sweep_shard(&spec, shard, count, workers)?;
+        println!("{}", report.render());
+        if let Some(out) = args.opt("out") {
+            write_sweep_report(&report, out)?;
+            println!("wrote {out} (reassemble with `cecflow sweep --merge a.json,b.json`)");
+        }
+        return Ok(());
+    }
+
+    let total = spec.cells().len();
     println!(
-        "sweep: {} scenario(s) × {} seed(s) × {} algorithm(s) = {} cells",
+        "sweep: {} scenario(s) × {} seed(s) × {} algorithm(s) × {} backend(s) = {} cells",
         spec.scenarios.len(),
         spec.seeds.len(),
         spec.algorithms.len(),
-        spec.cells().len(),
+        spec.backends.len(),
+        total,
     );
     let start = std::time::Instant::now();
-    let report = run_sweep(&spec, workers)?;
+
+    // ---- parent mode: partition cells over child processes ----
+    let report = if let Some(n) = args.opt("shards") {
+        let shards: usize = n
+            .parse()
+            .with_context(|| format!("--shards expects an integer, got '{n}'"))?;
+        anyhow::ensure!(shards >= 1, "--shards must be at least 1");
+        let timeout_s = args.opt_f64("shard-timeout", 0.0);
+        let timeout = if timeout_s > 0.0 {
+            Some(std::time::Duration::from_secs_f64(timeout_s))
+        } else {
+            None
+        };
+        let exe = std::env::current_exe()
+            .context("locating the cecflow binary to spawn sweep shards")?;
+        println!("spawning {} process shard(s) ...", shards.min(total.max(1)));
+        run_sweep_sharded(
+            &spec,
+            &exe,
+            &ShardOptions {
+                shards,
+                workers,
+                timeout,
+            },
+        )?
+    } else {
+        run_sweep(&spec, workers)?
+    };
+
     println!("{}", report.render());
     println!(
         "sweep wall time: {:.2}s on {} worker(s)",
@@ -222,8 +353,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     );
 
     if let Some(out) = args.opt("out") {
-        std::fs::write(out, report.to_json().pretty())
-            .with_context(|| format!("writing {out}"))?;
+        write_sweep_report(&report, out)?;
         println!("wrote {out}");
     }
     Ok(())

@@ -18,6 +18,11 @@
 //!   — the AOT `dense_eval` HLO artifact executed on the PJRT CPU client
 //!   (f32 data plane; see `rust/tests/xla_parity.rs` for the parity
 //!   tolerances).
+//!
+//! Callers select a backend per use: `optimize_accelerated` takes
+//! `&dyn DenseBackend` directly, and sweep cells pick one through
+//! `coordinator::CellBackend` (`cecflow sweep --backends sparse,native`),
+//! so a single grid prices both data planes side by side.
 
 use anyhow::Result;
 

@@ -171,6 +171,17 @@ fn golden_traces_pin_convergence_behavior() {
     // ---- golden comparison / bootstrap ----
     let path = golden_path();
     let update = std::env::var("CECFLOW_UPDATE_GOLDEN").is_ok();
+    // CI's second golden run sets CECFLOW_REQUIRE_GOLDEN=1: by then the
+    // file must exist (bootstrapped by the first run or committed), so a
+    // silent bootstrap can never masquerade as a passing comparison.
+    if !update && !path.exists() && std::env::var("CECFLOW_REQUIRE_GOLDEN").is_ok() {
+        panic!(
+            "golden file {path:?} is missing but CECFLOW_REQUIRE_GOLDEN=1 — run the test \
+             once without the variable to bootstrap it, and commit \
+             rust/tests/golden/convergence_traces.json so fresh checkouts compare \
+             instead of bootstrapping"
+        );
+    }
     if update || !path.exists() {
         let traces: Vec<Json> = specs
             .iter()

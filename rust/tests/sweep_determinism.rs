@@ -3,13 +3,14 @@
 //! per-cell results (costs compared bit-for-bit; only wall-clock timing
 //! may differ). This is the contract that makes sweep numbers citable.
 
-use cecflow::coordinator::{run_sweep, Algorithm, RunConfig, SweepSpec};
+use cecflow::coordinator::{run_sweep, Algorithm, CellBackend, RunConfig, SweepSpec};
 
 fn small_spec() -> SweepSpec {
     SweepSpec {
         scenarios: vec!["abilene".into()],
         seeds: vec![1, 2],
         algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
+        backends: vec![CellBackend::Sparse],
         rate_scale: 1.0,
         run: RunConfig::quick(),
     }
@@ -46,6 +47,22 @@ fn repeated_runs_are_identical() {
         assert_eq!(x.mean_cost.to_bits(), y.mean_cost.to_bits());
         assert_eq!(x.p95_cost.to_bits(), y.p95_cost.to_bits());
     }
+}
+
+#[test]
+fn dense_backend_cells_are_worker_count_independent_too() {
+    // The per-cell backend routing (SGP through `step_dense` +
+    // `NativeBackend`) must uphold the same determinism contract as the
+    // sparse path.
+    let spec = SweepSpec {
+        backends: vec![CellBackend::Sparse, CellBackend::Native],
+        ..small_spec()
+    };
+    let serial = run_sweep(&spec, 1).unwrap();
+    let parallel = run_sweep(&spec, 4).unwrap();
+    // sgp×sparse, sgp×native, lpr×sparse per seed
+    assert_eq!(serial.cells.len(), 6);
+    assert_eq!(serial.fingerprint(), parallel.fingerprint());
 }
 
 #[test]
