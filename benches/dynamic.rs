@@ -1,0 +1,137 @@
+//! Dynamic task-pattern smoke driver: the adaptivity claim measured over
+//! the scenario library, plus the schedule axis of the sweep grid.
+//! CI runs this with `CECFLOW_BENCH_FAST=1` (two scenarios, one
+//! schedule) as the dynamics smoke test.
+//!
+//! Shape checks (paper claims, not absolute values):
+//!   * warm-started re-optimization takes at most the cold-started
+//!     iteration count on every epoch after the first, on every
+//!     scenario × schedule pair in the grid;
+//!   * warm transient regret never exceeds cold;
+//!   * a sweep over the schedule axis is fingerprint-identical across
+//!     worker counts (dynamic cells honor the determinism contract).
+//!
+//! Run: `cargo bench --bench dynamic`   (CECFLOW_BENCH_FAST=1 shrinks the grid)
+
+use std::time::Instant;
+
+use cecflow::coordinator::report::write_csv;
+use cecflow::coordinator::{
+    run_sweep, AdaptiveRunner, Algorithm, CellBackend, PatternSchedule, RunConfig, SweepSpec,
+};
+use cecflow::util::table::fnum;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("CECFLOW_BENCH_FAST").is_ok();
+    let scenarios: Vec<&str> = if fast {
+        vec!["abilene", "grid-torus"]
+    } else {
+        vec!["abilene", "connected-er", "grid-torus", "scale-free", "fat-tree"]
+    };
+    let schedules: Vec<&str> = if fast {
+        vec!["step:3:1.5"]
+    } else {
+        vec!["step:3:1.5", "bursty:4:2", "diurnal:4:2", "churn:3:0.25", "rescale:3:1.25"]
+    };
+    let cfg = RunConfig::quick();
+
+    let mut ok = true;
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let start = Instant::now();
+    for scenario in &scenarios {
+        for label in &schedules {
+            let schedule = PatternSchedule::parse(label)?;
+            let warm = AdaptiveRunner::warm(cfg).run_scenario(scenario, 1, 1.0, schedule)?;
+            let cold = AdaptiveRunner::cold(cfg).run_scenario(scenario, 1, 1.0, schedule)?;
+            for (w, c) in warm.epochs.iter().zip(&cold.epochs) {
+                rows.push(vec![
+                    scenario.to_string(),
+                    label.to_string(),
+                    w.epoch.to_string(),
+                    fnum(w.final_cost),
+                    w.iterations.to_string(),
+                    c.iterations.to_string(),
+                    fnum(w.transient_regret),
+                    fnum(c.transient_regret),
+                ]);
+                if w.epoch == 0 {
+                    continue;
+                }
+                // Churn moves destinations, so the carried point can sit
+                // in a different basin than the all-local start — the
+                // warm-≤-cold bound is a theorem only for rate scalings;
+                // for churn it is reported, not enforced.
+                let advisory = label.starts_with("churn");
+                if w.iterations > c.iterations {
+                    println!(
+                        "{}: {scenario} under {label} epoch {}: warm took {} iterations \
+                         vs cold {}",
+                        if advisory { "note" } else { "SHAPE VIOLATION" },
+                        w.epoch,
+                        w.iterations,
+                        c.iterations
+                    );
+                    ok = ok && advisory;
+                }
+                if w.transient_regret > c.transient_regret + 1e-9 {
+                    println!(
+                        "{}: {scenario} under {label} epoch {}: warm regret {} vs cold {}",
+                        if advisory { "note" } else { "SHAPE VIOLATION" },
+                        w.epoch,
+                        fnum(w.transient_regret),
+                        fnum(c.transient_regret)
+                    );
+                    ok = ok && advisory;
+                }
+            }
+            println!(
+                "{scenario:>13} {label:<14} re-convergence: warm {:>3} vs cold {:>3} iters",
+                warm.reconvergence_iterations(),
+                cold.reconvergence_iterations()
+            );
+        }
+    }
+    write_csv(
+        "dynamic.csv",
+        &[
+            "scenario",
+            "schedule",
+            "epoch",
+            "final_cost",
+            "warm_iters",
+            "cold_iters",
+            "warm_regret",
+            "cold_regret",
+        ],
+        &rows,
+    )?;
+
+    // the schedule axis of the sweep grid stays deterministic
+    let spec = SweepSpec {
+        scenarios: scenarios.iter().map(|s| s.to_string()).collect(),
+        seeds: vec![1],
+        algorithms: vec![Algorithm::Sgp],
+        backends: vec![CellBackend::Sparse],
+        schedules: std::iter::once(PatternSchedule::static_())
+            .chain(schedules.iter().map(|l| PatternSchedule::parse(l).unwrap()))
+            .collect(),
+        rate_scale: 1.0,
+        run: cfg,
+    };
+    let serial = run_sweep(&spec, 1)?;
+    let parallel = run_sweep(&spec, 4)?;
+    if serial.fingerprint() != parallel.fingerprint() {
+        println!("SHAPE VIOLATION: dynamic sweep cells differ between 1 and 4 workers");
+        ok = false;
+    }
+
+    println!(
+        "dynamic bench wall time: {:.2}s — shape: {}",
+        start.elapsed().as_secs_f64(),
+        if ok { "OK" } else { "VIOLATIONS (see above)" }
+    );
+    if !ok {
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -19,7 +19,8 @@ use std::time::Instant;
 
 use cecflow::coordinator::report::{write_csv, write_json};
 use cecflow::coordinator::{
-    run_sweep, run_sweep_sharded, Algorithm, CellBackend, RunConfig, ShardOptions, SweepSpec,
+    run_sweep, run_sweep_sharded, Algorithm, CellBackend, PatternSchedule, RunConfig,
+    ShardOptions, SweepSpec,
 };
 use cecflow::util::table::fnum;
 
@@ -36,6 +37,8 @@ fn main() -> anyhow::Result<()> {
         // SGP additionally priced through the native dense backend
         // (step_dense + evaluate_batch) so sweeps exercise both planes
         backends: vec![CellBackend::Sparse, CellBackend::Native],
+        // static only: the schedule axis has its own driver, benches/dynamic.rs
+        schedules: vec![PatternSchedule::static_()],
         rate_scale: 1.0,
         run: RunConfig::quick(),
     };

@@ -75,12 +75,14 @@ fn main() -> anyhow::Result<()> {
 
     println!(
         "\npost-failure re-convergence (to within 1% of the degraded optimum):\n\
-         \x20 SGP: {} iterations (cost {} -> {})\n\
-         \x20 GP : {} iterations (cost {} -> {})",
+         \x20 SGP: {} iterations, recovered by absolute iteration {} (cost {} -> {})\n\
+         \x20 GP : {} iterations, recovered by absolute iteration {} (cost {} -> {})",
         sgp.reconverge_iters,
+        sgp.recovery_epoch,
         fnum(sgp.cost_after_failure),
         fnum(sgp.final_cost),
         gp.reconverge_iters,
+        gp.recovery_epoch,
         fnum(gp.cost_after_failure),
         fnum(gp.final_cost),
     );

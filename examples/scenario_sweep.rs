@@ -4,7 +4,9 @@
 //!
 //! Run: `cargo run --release --example scenario_sweep`
 
-use cecflow::coordinator::{run_sweep, Algorithm, CellBackend, RunConfig, SweepSpec};
+use cecflow::coordinator::{
+    run_sweep, Algorithm, CellBackend, PatternSchedule, RunConfig, SweepSpec,
+};
 
 fn main() -> anyhow::Result<()> {
     // A sweep is a cross product: every scenario is instantiated at every
@@ -18,6 +20,9 @@ fn main() -> anyhow::Result<()> {
         seeds: vec![1, 2, 3],
         algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
         backends: vec![CellBackend::Sparse, CellBackend::Native],
+        // every cell on the fixed base pattern; see examples/dynamic_patterns.rs
+        // for the time-varying schedule axis
+        schedules: vec![PatternSchedule::static_()],
         rate_scale: 1.0,
         run: RunConfig::quick(),
     };

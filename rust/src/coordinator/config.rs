@@ -58,6 +58,16 @@ impl Algorithm {
             Algorithm::Lpr,
         ]
     }
+
+    /// Algorithms the dynamic task-pattern engine
+    /// ([`crate::coordinator::dynamics`]) can re-optimize across epochs:
+    /// iterative optimizers that start from the plain all-local point
+    /// (SGP and GP). The one-shot LPR has no notion of re-convergence,
+    /// and SPOO/LCOR construct their own restricted starting points. The
+    /// sweep grid builder skips non-static schedules for everything else.
+    pub fn supports_dynamic(&self) -> bool {
+        matches!(self, Algorithm::Sgp | Algorithm::Gp)
+    }
 }
 
 /// Dense-evaluation route for one sweep cell's SGP run (per-cell backend

@@ -1,0 +1,825 @@
+//! Dynamic task-pattern engine: time-varying scenarios and warm-start
+//! re-optimization.
+//!
+//! The paper's distributed algorithm is "adaptive to changes in task
+//! pattern" (§IV): after a workload shift the current strategy is still a
+//! feasible point, so re-optimizing from it (warm start) should
+//! re-converge in far fewer iterations than starting from scratch. This
+//! module makes that claim testable:
+//!
+//! * [`PatternSchedule`] — a deterministic recipe that mutates a base
+//!   scenario's *task pattern* (input rates, task sources/destinations) at
+//!   epoch boundaries: step change, bursty on/off, diurnal ramp,
+//!   source/destination churn, or compounding rate rescale. Epoch `e` of a
+//!   schedule is a pure function of `(base network, seed, e)` — the same
+//!   cell is bitwise reproducible on any worker or shard.
+//! * [`AdaptiveRunner`] — re-optimizes every epoch either **warm-started**
+//!   from the previous epoch's converged strategy
+//!   ([`Strategy::retarget`]) or **cold-started** from the all-local
+//!   point, over the sparse, native-dense or PJRT evaluation routes.
+//! * [`EpochTrace`] / [`DynamicTrace`] — per-epoch cost trajectories,
+//!   iterations to re-convergence, iters-to-1%, and the transient regret
+//!   paid between the shift and the new steady state.
+//!
+//! The adaptivity contract (warm re-converges in ≤ the cold iteration
+//! count after every shift; an epoch that changes nothing costs exactly
+//! the convergence check) is pinned by `rust/tests/adaptive_runner.rs`,
+//! and schedules are a first-class sweep axis
+//! ([`super::sweep::SweepSpec::schedules`], CLI `cecflow sweep
+//! --schedules` / `cecflow dynamic`).
+
+use anyhow::{bail, Context, Result};
+
+use crate::algo::{Gp, Sgp};
+use crate::model::cost::CostFn;
+use crate::model::flows::compute_flows;
+use crate::model::network::Network;
+use crate::model::strategy::Strategy;
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+
+use super::runner::RunResult;
+use super::{build_scenario_network, metrics, runner, Algorithm, CellBackend, RunConfig};
+
+/// The five time-varying task-pattern families, plus the degenerate
+/// `Static` (one epoch, no mutation — the classic fixed-scenario run).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// No change: a single epoch on the base pattern.
+    Static,
+    /// One permanent shift: epochs `1..` run at `magnitude ×` the base
+    /// input rates (epochs after the first change nothing — the
+    /// zero-extra-iterations case of the adaptivity suite).
+    Step,
+    /// On/off burst: odd epochs at `magnitude ×`, even epochs at the base
+    /// rates.
+    Bursty,
+    /// Smooth diurnal ramp: epoch `e` runs at
+    /// `1 + (magnitude − 1)·½(1 − cos(2πe/epochs))` × the base rates
+    /// (one full day over the schedule; epoch 0 is the base).
+    Diurnal,
+    /// Source/destination churn: each epoch, a `magnitude` fraction of
+    /// the tasks (at least one) moves — new random destination, sources
+    /// relocated to fresh nodes carrying the same rates. Total demand is
+    /// preserved; *where* it enters and exits shifts.
+    Churn,
+    /// Compounding growth: epoch `e` runs at `magnitude^e ×` the base
+    /// rates.
+    Rescale,
+}
+
+impl ScheduleKind {
+    pub fn parse(name: &str) -> Option<ScheduleKind> {
+        Some(match name.to_ascii_lowercase().as_str() {
+            "static" | "none" => ScheduleKind::Static,
+            "step" => ScheduleKind::Step,
+            "bursty" | "burst" => ScheduleKind::Bursty,
+            "diurnal" => ScheduleKind::Diurnal,
+            "churn" => ScheduleKind::Churn,
+            "rescale" => ScheduleKind::Rescale,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleKind::Static => "static",
+            ScheduleKind::Step => "step",
+            ScheduleKind::Bursty => "bursty",
+            ScheduleKind::Diurnal => "diurnal",
+            ScheduleKind::Churn => "churn",
+            ScheduleKind::Rescale => "rescale",
+        }
+    }
+
+    pub fn all() -> &'static [ScheduleKind] {
+        &[
+            ScheduleKind::Static,
+            ScheduleKind::Step,
+            ScheduleKind::Bursty,
+            ScheduleKind::Diurnal,
+            ScheduleKind::Churn,
+            ScheduleKind::Rescale,
+        ]
+    }
+
+    /// Default shift magnitude when the label omits one: rate multipliers
+    /// for the scaling kinds, the churned task fraction for `Churn`.
+    fn default_magnitude(&self) -> f64 {
+        match self {
+            ScheduleKind::Static => 1.0,
+            ScheduleKind::Step => 1.5,
+            ScheduleKind::Bursty => 2.0,
+            ScheduleKind::Diurnal => 2.0,
+            ScheduleKind::Churn => 0.25,
+            ScheduleKind::Rescale => 1.25,
+        }
+    }
+
+    fn default_epochs(&self) -> usize {
+        if *self == ScheduleKind::Static {
+            1
+        } else {
+            3
+        }
+    }
+}
+
+/// A fully-specified task-pattern schedule: kind + epoch count + shift
+/// magnitude. The magnitude is stored as exact f64 bits so schedules have
+/// total equality and can sit inside sweep cells / fingerprints; the
+/// canonical string form (`step:3:1.5`, or just `static`) round-trips
+/// through [`PatternSchedule::parse`] and is what travels on the CLI, in
+/// report JSON and in the shard protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PatternSchedule {
+    pub kind: ScheduleKind,
+    epochs: usize,
+    magnitude_bits: u64,
+}
+
+impl PatternSchedule {
+    /// The no-op schedule: one epoch on the unmodified scenario.
+    pub fn static_() -> PatternSchedule {
+        PatternSchedule {
+            kind: ScheduleKind::Static,
+            epochs: 1,
+            magnitude_bits: 1.0f64.to_bits(),
+        }
+    }
+
+    /// Build a schedule, validating the epoch count and magnitude.
+    pub fn new(kind: ScheduleKind, epochs: usize, magnitude: f64) -> Result<PatternSchedule> {
+        if kind == ScheduleKind::Static {
+            // loud, not lossy: `--schedule static --epochs 5` must fail
+            // exactly like the label `static:5`, never silently run 1 epoch
+            anyhow::ensure!(
+                epochs == 1,
+                "the static schedule has exactly 1 epoch (got {epochs})"
+            );
+            anyhow::ensure!(
+                magnitude == 1.0,
+                "the static schedule has no shift magnitude (got {magnitude})"
+            );
+            return Ok(PatternSchedule::static_());
+        }
+        anyhow::ensure!(epochs >= 1, "schedule needs at least 1 epoch");
+        anyhow::ensure!(
+            magnitude.is_finite() && magnitude > 0.0,
+            "schedule magnitude must be a positive finite number, got {magnitude}"
+        );
+        if kind == ScheduleKind::Churn {
+            anyhow::ensure!(
+                magnitude <= 1.0,
+                "churn magnitude is the fraction of tasks moved per epoch and must be ≤ 1, \
+                 got {magnitude}"
+            );
+        }
+        Ok(PatternSchedule {
+            kind,
+            epochs,
+            magnitude_bits: magnitude.to_bits(),
+        })
+    }
+
+    /// Parse a schedule label: `kind[:epochs[:magnitude]]`, e.g. `static`,
+    /// `step`, `step:3`, `step:3:1.5`. Omitted fields take per-kind
+    /// defaults.
+    pub fn parse(label: &str) -> Result<PatternSchedule> {
+        let mut parts = label.split(':');
+        let kind_s = parts.next().unwrap_or("").trim();
+        let kind = ScheduleKind::parse(kind_s)
+            .with_context(|| format!("unknown schedule kind '{kind_s}' in '{label}'"))?;
+        let epochs = match parts.next() {
+            Some(e) => e
+                .trim()
+                .parse::<usize>()
+                .with_context(|| format!("bad epoch count in schedule '{label}'"))?,
+            None => kind.default_epochs(),
+        };
+        let magnitude = match parts.next() {
+            Some(m) => m
+                .trim()
+                .parse::<f64>()
+                .with_context(|| format!("bad magnitude in schedule '{label}'"))?,
+            None => kind.default_magnitude(),
+        };
+        anyhow::ensure!(
+            parts.next().is_none(),
+            "schedule '{label}' has trailing fields (expected kind[:epochs[:magnitude]])"
+        );
+        PatternSchedule::new(kind, epochs, magnitude)
+            .with_context(|| format!("bad schedule '{label}'"))
+    }
+
+    /// Canonical label (round-trips through [`PatternSchedule::parse`]):
+    /// `static`, or `kind:epochs:magnitude` with the shortest
+    /// round-tripping decimal for the magnitude.
+    pub fn label(&self) -> String {
+        if self.is_static() {
+            "static".to_string()
+        } else {
+            format!("{}:{}:{}", self.kind.name(), self.epochs, self.magnitude())
+        }
+    }
+
+    pub fn is_static(&self) -> bool {
+        self.kind == ScheduleKind::Static
+    }
+
+    pub fn epochs(&self) -> usize {
+        self.epochs
+    }
+
+    pub fn magnitude(&self) -> f64 {
+        f64::from_bits(self.magnitude_bits)
+    }
+
+    /// Override the epoch count (CLI `--epochs`).
+    pub fn with_epochs(self, epochs: usize) -> Result<PatternSchedule> {
+        PatternSchedule::new(self.kind, epochs, self.magnitude())
+    }
+
+    /// Override the magnitude (CLI `--magnitude`).
+    pub fn with_magnitude(self, magnitude: f64) -> Result<PatternSchedule> {
+        PatternSchedule::new(self.kind, self.epochs, magnitude)
+    }
+
+    /// Rate multiplier of epoch `e` relative to the *base* pattern (1.0
+    /// for `Static`/`Churn` — churn moves demand instead of scaling it).
+    pub fn rate_factor(&self, epoch: usize) -> f64 {
+        let m = self.magnitude();
+        match self.kind {
+            ScheduleKind::Static | ScheduleKind::Churn => 1.0,
+            ScheduleKind::Step => {
+                if epoch == 0 {
+                    1.0
+                } else {
+                    m
+                }
+            }
+            ScheduleKind::Bursty => {
+                if epoch % 2 == 1 {
+                    m
+                } else {
+                    1.0
+                }
+            }
+            ScheduleKind::Diurnal => {
+                let phase = std::f64::consts::TAU * epoch as f64 / self.epochs as f64;
+                1.0 + (m - 1.0) * 0.5 * (1.0 - phase.cos())
+            }
+            ScheduleKind::Rescale => m.powi(epoch as i32),
+        }
+    }
+
+    /// The epoch-`e` network: a pure function of `(base, seed, epoch)` —
+    /// never of the path taken to reach the epoch — so dynamic sweep
+    /// cells stay bit-deterministic across workers and shards. Epoch 0 —
+    /// and any epoch whose pattern coincides with the base, like a bursty
+    /// off-epoch — is the unmodified base, bit for bit. Only *mutated*
+    /// epochs pass through [`ensure_feasible`] (capacity tracks demand,
+    /// mirroring the §V feasibility guards of the scenario builders);
+    /// running the guard on an untouched epoch would put "base pattern"
+    /// epochs on a different cost surface than epoch 0 whenever the base
+    /// is tight (e.g. under `--scale`).
+    pub fn network_at(&self, base: &Network, seed: u64, epoch: usize) -> Network {
+        let mut net = base.clone();
+        if epoch == 0 || self.is_static() {
+            return net;
+        }
+        if self.kind == ScheduleKind::Churn {
+            // churn accumulates: epoch e folds rounds 1..=e over the base
+            for round in 1..=epoch {
+                churn_round(&mut net, seed, round as u64, self.magnitude());
+            }
+        } else {
+            let f = self.rate_factor(epoch);
+            if f == 1.0 {
+                return net;
+            }
+            net.scale_rates(f);
+        }
+        ensure_feasible(&mut net);
+        net
+    }
+}
+
+/// One churn round: move a `frac` fraction of the tasks (at least one) —
+/// fresh random destination, sources relocated to fresh distinct nodes
+/// carrying the *same* rate values (total demand preserved). All draws
+/// come from a stream keyed by `(seed, round)`, so the round is
+/// reproducible in isolation.
+fn churn_round(net: &mut Network, seed: u64, round: u64, frac: f64) {
+    let mut rng = Pcg::with_stream(seed ^ 0xd15c_0d15, 0x1157 + round);
+    let s = net.s();
+    let n = net.n();
+    let k = ((s as f64 * frac).ceil() as usize).clamp(1, s);
+    for &t in &rng.choose_distinct(s, k) {
+        net.tasks[t].dest = rng.below(n);
+        let vals: Vec<f64> = net.input_rate[t]
+            .iter()
+            .copied()
+            .filter(|&r| r > 0.0)
+            .collect();
+        if vals.is_empty() {
+            continue;
+        }
+        let targets = rng.choose_distinct(n, vals.len().min(n));
+        for r in net.input_rate[t].iter_mut() {
+            *r = 0.0;
+        }
+        for (v, &i) in vals.into_iter().zip(&targets) {
+            net.input_rate[t][i] = v;
+        }
+    }
+}
+
+/// Deterministic feasibility guard for mutated epochs, mirroring the two
+/// §V guards of the scenario builders ("we simulate on the scenarios
+/// where such pure-local computation is feasible"): queue computation
+/// capacities are bumped wherever the shifted local load saturates them,
+/// and queue link capacities are inflated geometrically until the
+/// all-local strategy has finite cost. Unlike the builders this draws no
+/// randomness — the guard is a pure function of the network, which the
+/// per-cell determinism contract requires.
+pub fn ensure_feasible(net: &mut Network) {
+    for i in 0..net.n() {
+        let mut load = 0.0;
+        for (s, task) in net.tasks.iter().enumerate() {
+            load += net.comp_weight[i][task.ctype] * net.input_rate[s][i];
+        }
+        if let CostFn::Queue { cap } = &mut net.comp_cost[i] {
+            if *cap <= 1.25 * load {
+                *cap = 1.5 * 1.25 * load + 1e-6;
+            }
+        }
+    }
+    for _round in 0..40 {
+        let phi0 = Strategy::local_compute_init(net);
+        let finite = compute_flows(net, &phi0)
+            .map(|f| f.total_cost.is_finite())
+            .unwrap_or(false);
+        if finite {
+            return;
+        }
+        for c in &mut net.link_cost {
+            if let CostFn::Queue { cap } = c {
+                *cap *= 1.3;
+            }
+        }
+    }
+}
+
+/// Per-epoch record of a dynamic run.
+#[derive(Clone, Debug)]
+pub struct EpochTrace {
+    pub epoch: usize,
+    /// Cost of the epoch's *starting* strategy on the shifted pattern —
+    /// the warm-carried point for warm runs, the all-local point for cold
+    /// runs (and for warm runs whose carried point saturated a queue; see
+    /// [`EpochTrace::warm_fallback`]).
+    pub shift_cost: f64,
+    /// Converged cost of the epoch.
+    pub final_cost: f64,
+    /// Iterations the epoch ran (the re-convergence count after a shift).
+    pub iterations: usize,
+    /// First iteration within 1% of the epoch's final cost.
+    pub iters_to_1pct: usize,
+    /// Transient regret vs. the epoch's converged cost:
+    /// `Σ_t max(0, T_t − T_final)` over the epoch's trajectory.
+    pub transient_regret: f64,
+    /// True when a warm start saturated a queue on the new pattern and the
+    /// runner fell back to the all-local point (mirrors
+    /// [`crate::sim::run_with_failure`]).
+    pub warm_fallback: bool,
+    /// Cost after each iteration of the epoch.
+    pub costs: Vec<f64>,
+}
+
+impl EpochTrace {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("epoch", Json::Num(self.epoch as f64))
+            .set("shift_cost", Json::Num(self.shift_cost))
+            .set("final_cost", Json::Num(self.final_cost))
+            .set(
+                "final_cost_bits",
+                Json::Str(format!("{:016x}", self.final_cost.to_bits())),
+            )
+            .set("iterations", Json::Num(self.iterations as f64))
+            .set("iters_to_1pct", Json::Num(self.iters_to_1pct as f64))
+            .set("transient_regret", Json::Num(self.transient_regret))
+            .set("warm_fallback", Json::Bool(self.warm_fallback))
+            .set("costs", Json::from_f64_slice(&self.costs));
+        o
+    }
+}
+
+/// A completed dynamic run: one epoch trace per schedule epoch.
+#[derive(Clone, Debug)]
+pub struct DynamicTrace {
+    pub scenario: String,
+    pub seed: u64,
+    pub schedule: PatternSchedule,
+    /// Algorithm label as reported by the per-epoch runs (`sgp`,
+    /// `sgp-native`, `gp`, …).
+    pub algorithm: String,
+    pub warm: bool,
+    pub epochs: Vec<EpochTrace>,
+}
+
+impl DynamicTrace {
+    /// Total iterations across the epochs *after* the first — the
+    /// re-convergence budget the warm-vs-cold comparison cares about.
+    pub fn reconvergence_iterations(&self) -> usize {
+        self.epochs.iter().skip(1).map(|e| e.iterations).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let epochs: Vec<Json> = self.epochs.iter().map(EpochTrace::to_json).collect();
+        let mut o = Json::obj();
+        o.set("scenario", Json::Str(self.scenario.clone()))
+            .set("seed", Json::Num(self.seed as f64))
+            .set("schedule", Json::Str(self.schedule.label()))
+            .set("algorithm", Json::Str(self.algorithm.clone()))
+            .set(
+                "mode",
+                Json::Str(if self.warm { "warm" } else { "cold" }.to_string()),
+            )
+            .set("epochs", Json::Arr(epochs));
+        o
+    }
+}
+
+/// Drives one scenario through a [`PatternSchedule`], re-optimizing every
+/// epoch from either the previous epoch's strategy (warm) or the
+/// all-local point (cold).
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveRunner {
+    /// Iterative algorithm to re-run each epoch: SGP (any backend) or GP
+    /// (sparse). See [`Algorithm::supports_dynamic`].
+    pub algorithm: Algorithm,
+    /// Dense-evaluation route for SGP epochs.
+    pub backend: CellBackend,
+    /// Warm-start each epoch from the previous strategy
+    /// ([`Strategy::retarget`]) instead of the all-local point.
+    pub warm: bool,
+    pub run: RunConfig,
+}
+
+impl AdaptiveRunner {
+    /// SGP on the sparse path, warm-started — the paper's adaptivity mode.
+    pub fn warm(run: RunConfig) -> AdaptiveRunner {
+        AdaptiveRunner {
+            algorithm: Algorithm::Sgp,
+            backend: CellBackend::Sparse,
+            warm: true,
+            run,
+        }
+    }
+
+    /// SGP on the sparse path, cold-started every epoch — the baseline the
+    /// adaptivity claim is measured against.
+    pub fn cold(run: RunConfig) -> AdaptiveRunner {
+        AdaptiveRunner {
+            warm: false,
+            ..AdaptiveRunner::warm(run)
+        }
+    }
+
+    /// Run a named scenario (see [`super::build_scenario_network`])
+    /// through `schedule`.
+    pub fn run_scenario(
+        &self,
+        scenario: &str,
+        seed: u64,
+        rate_scale: f64,
+        schedule: PatternSchedule,
+    ) -> Result<DynamicTrace> {
+        let base = build_scenario_network(scenario, seed, rate_scale)?;
+        self.run_network(scenario, &base, seed, schedule)
+    }
+
+    /// Run an already-built base network through `schedule`. `seed` keys
+    /// the churn draws (scaling kinds are deterministic without it).
+    pub fn run_network(
+        &self,
+        name: &str,
+        base: &Network,
+        seed: u64,
+        schedule: PatternSchedule,
+    ) -> Result<DynamicTrace> {
+        let mut epochs = Vec::with_capacity(schedule.epochs());
+        let mut algorithm = self.algorithm.name().to_string();
+        let mut prev: Option<(Network, Strategy)> = None;
+        for e in 0..schedule.epochs() {
+            let net = schedule.network_at(base, seed, e);
+            let mut warm_fallback = false;
+            let mut phi0 = match &prev {
+                Some((pnet, pphi)) if self.warm => pphi.retarget(pnet, &net),
+                _ => Strategy::local_compute_init(&net),
+            };
+            let mut shift_cost = compute_flows(&net, &phi0)
+                .with_context(|| format!("pricing the epoch-{e} starting strategy"))?
+                .total_cost;
+            if !shift_cost.is_finite() {
+                // The carried point can saturate a queue after the shift;
+                // fall back to the always-safe all-local strategy (the
+                // feasibility guard keeps it finite on every epoch).
+                let cold = Strategy::local_compute_init(&net);
+                let cold_cost = compute_flows(&net, &cold)?.total_cost;
+                anyhow::ensure!(
+                    cold_cost.is_finite(),
+                    "epoch {e} of schedule {} on {name} (seed {seed}) is infeasible even \
+                     under all-local computation",
+                    schedule.label()
+                );
+                phi0 = cold;
+                shift_cost = cold_cost;
+                warm_fallback = true;
+            }
+            let res = self
+                .optimize_epoch(&net, &phi0)
+                .with_context(|| format!("optimizing epoch {e} of schedule {}", schedule.label()))?;
+            algorithm = res.algorithm.clone();
+            epochs.push(EpochTrace {
+                epoch: e,
+                shift_cost,
+                final_cost: res.final_cost(),
+                iterations: res.costs.len(),
+                iters_to_1pct: res.iters_to_1pct,
+                transient_regret: metrics::transient_regret(&res.costs, res.final_cost()),
+                warm_fallback,
+                costs: res.costs.clone(),
+            });
+            prev = Some((net, res.phi));
+        }
+        Ok(DynamicTrace {
+            scenario: name.to_string(),
+            seed,
+            schedule,
+            algorithm,
+            warm: self.warm,
+            epochs,
+        })
+    }
+
+    /// One epoch's optimization from an explicit starting strategy. A
+    /// fresh optimizer per epoch keeps epochs independent (and matches the
+    /// Fig. 5b failure driver); the *strategy* is what carries across
+    /// epochs.
+    fn optimize_epoch(&self, net: &Network, phi0: &Strategy) -> Result<RunResult> {
+        match (self.algorithm, self.backend) {
+            (Algorithm::Sgp, CellBackend::Sparse) => {
+                let mut sgp = Sgp::new();
+                runner::optimize(net, &mut sgp, phi0, &self.run)
+            }
+            (Algorithm::Sgp, CellBackend::Native) => {
+                let mut sgp = Sgp::new();
+                runner::optimize_accelerated(
+                    net,
+                    &mut sgp,
+                    phi0,
+                    &self.run,
+                    &crate::runtime::NativeBackend,
+                )
+            }
+            (Algorithm::Sgp, CellBackend::Pjrt) => optimize_epoch_pjrt(net, phi0, &self.run),
+            (Algorithm::Gp, CellBackend::Sparse) => {
+                let mut gp = Gp::new(1.0);
+                runner::optimize(net, &mut gp, phi0, &self.run)
+            }
+            (algo, backend) => bail!(
+                "the dynamic engine re-optimizes sgp (any backend) and gp (sparse); got {} \
+                 on the {} backend",
+                algo.name(),
+                backend.name()
+            ),
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn optimize_epoch_pjrt(net: &Network, phi0: &Strategy, cfg: &RunConfig) -> Result<RunResult> {
+    use crate::runtime::{resolve_artifacts_dir, DenseEvaluator, Engine};
+    let engine = Engine::load(&resolve_artifacts_dir()?)?;
+    let eval = DenseEvaluator::new(&engine);
+    let mut sgp = Sgp::new();
+    runner::optimize_accelerated(net, &mut sgp, phi0, cfg, &eval)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn optimize_epoch_pjrt(_net: &Network, _phi0: &Strategy, _cfg: &RunConfig) -> Result<RunResult> {
+    anyhow::bail!(
+        "dynamic run requested the pjrt backend, but cecflow was built without the `pjrt` \
+         cargo feature — rebuild with `--features pjrt` (and run `make artifacts`), or \
+         select backend `native`"
+    )
+}
+
+/// Parse a comma-separated schedule list (`"static,step:3:1.5"`).
+pub fn parse_schedules(s: &str) -> Result<Vec<PatternSchedule>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(PatternSchedule::parse)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_labels_roundtrip() {
+        for label in [
+            "static",
+            "step:3:1.5",
+            "bursty:4:2",
+            "diurnal:6:2",
+            "churn:3:0.25",
+            "rescale:3:1.25",
+        ] {
+            let s = PatternSchedule::parse(label).unwrap();
+            let back = PatternSchedule::parse(&s.label()).unwrap();
+            assert_eq!(s, back, "{label}");
+        }
+        // defaults fill in
+        let s = PatternSchedule::parse("step").unwrap();
+        assert_eq!(s.kind, ScheduleKind::Step);
+        assert_eq!(s.epochs(), 3);
+        assert_eq!(s.magnitude(), 1.5);
+        assert_eq!(PatternSchedule::parse("static").unwrap(), PatternSchedule::static_());
+        // rejections
+        assert!(PatternSchedule::parse("zzz").is_err());
+        assert!(PatternSchedule::parse("step:0").is_err());
+        assert!(PatternSchedule::parse("step:3:-1").is_err());
+        assert!(PatternSchedule::parse("churn:3:2").is_err());
+        assert!(PatternSchedule::parse("step:3:1.5:x").is_err());
+        // static rejects overrides loudly on every input path — the CLI's
+        // `--schedule static --epochs 5` must not silently run 1 epoch
+        assert!(PatternSchedule::parse("static:5").is_err());
+        assert!(PatternSchedule::parse("static:1:2").is_err());
+        assert!(PatternSchedule::static_().with_epochs(5).is_err());
+        assert!(PatternSchedule::static_().with_magnitude(2.0).is_err());
+        assert!(PatternSchedule::static_().with_epochs(1).is_ok());
+    }
+
+    #[test]
+    fn rate_factors_match_the_kind() {
+        let step = PatternSchedule::parse("step:3:1.5").unwrap();
+        assert_eq!(step.rate_factor(0), 1.0);
+        assert_eq!(step.rate_factor(1), 1.5);
+        assert_eq!(step.rate_factor(2), 1.5);
+        let bursty = PatternSchedule::parse("bursty:4:2").unwrap();
+        assert_eq!(bursty.rate_factor(0), 1.0);
+        assert_eq!(bursty.rate_factor(1), 2.0);
+        assert_eq!(bursty.rate_factor(2), 1.0);
+        let rescale = PatternSchedule::parse("rescale:3:1.25").unwrap();
+        assert_eq!(rescale.rate_factor(0), 1.0);
+        assert_eq!(rescale.rate_factor(2), 1.25 * 1.25);
+        let diurnal = PatternSchedule::parse("diurnal:4:2").unwrap();
+        assert_eq!(diurnal.rate_factor(0), 1.0);
+        // the mid-schedule peak hits the full magnitude
+        assert!((diurnal.rate_factor(2) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn network_at_is_pure_and_epoch0_is_the_base() {
+        let base = super::super::build_scenario_network("abilene", 7, 1.0).unwrap();
+        for label in ["step:3:1.5", "bursty:4:2", "churn:3:0.25", "rescale:3:1.25"] {
+            let s = PatternSchedule::parse(label).unwrap();
+            for e in 0..s.epochs() {
+                let a = s.network_at(&base, 7, e);
+                let b = s.network_at(&base, 7, e);
+                assert_eq!(a.tasks, b.tasks, "{label} epoch {e}");
+                assert_eq!(a.input_rate, b.input_rate, "{label} epoch {e}");
+                assert!(a.validate().is_empty(), "{label} epoch {e}: {:?}", a.validate());
+                assert!(a.local_computation_feasible(), "{label} epoch {e}");
+                let phi0 = Strategy::local_compute_init(&a);
+                assert!(
+                    compute_flows(&a, &phi0).unwrap().total_cost.is_finite(),
+                    "{label} epoch {e}: infinite all-local cost"
+                );
+            }
+            let e0 = s.network_at(&base, 7, 0);
+            assert_eq!(e0.input_rate, base.input_rate, "{label}: epoch 0 mutated");
+            assert_eq!(e0.tasks, base.tasks, "{label}: epoch 0 mutated");
+        }
+    }
+
+    #[test]
+    fn unmutated_epochs_are_the_base_bit_for_bit() {
+        // A bursty off-epoch (rate factor 1.0) must be the *raw* base —
+        // including its cost parameters. Running the feasibility guard on
+        // it would silently repair a tight base and put "base pattern"
+        // epochs on a different cost surface than epoch 0.
+        let mut base = super::super::build_scenario_network("abilene", 7, 1.0).unwrap();
+        // tighten one queue so the guard *would* fire if (wrongly) applied
+        if let CostFn::Queue { cap } = &mut base.comp_cost[0] {
+            *cap *= 0.5;
+        }
+        let s = PatternSchedule::parse("bursty:4:2").unwrap();
+        let off = s.network_at(&base, 7, 2);
+        assert_eq!(off.input_rate, base.input_rate);
+        assert_eq!(off.comp_cost, base.comp_cost, "off-epoch cost params mutated");
+        assert_eq!(off.link_cost, base.link_cost, "off-epoch cost params mutated");
+    }
+
+    #[test]
+    fn step_epochs_after_the_shift_are_identical() {
+        let base = super::super::build_scenario_network("abilene", 3, 1.0).unwrap();
+        let s = PatternSchedule::parse("step:4:1.5").unwrap();
+        let e1 = s.network_at(&base, 3, 1);
+        let e3 = s.network_at(&base, 3, 3);
+        assert_eq!(e1.input_rate, e3.input_rate);
+        assert_eq!(e1.tasks, e3.tasks);
+    }
+
+    #[test]
+    fn churn_moves_demand_without_changing_the_total() {
+        let base = super::super::build_scenario_network("connected-er", 5, 1.0).unwrap();
+        let s = PatternSchedule::parse("churn:3:0.25").unwrap();
+        let e2 = s.network_at(&base, 5, 2);
+        assert_eq!(e2.s(), base.s());
+        let total =
+            |n: &Network| -> f64 { (0..n.s()).map(|t| n.task_input(t)).sum::<f64>() };
+        assert!(
+            (total(&e2) - total(&base)).abs() < 1e-9,
+            "churn changed total demand: {} vs {}",
+            total(&e2),
+            total(&base)
+        );
+        assert_ne!(
+            (e2.tasks.clone(), e2.input_rate.clone()),
+            (base.tasks.clone(), base.input_rate.clone()),
+            "churn changed nothing"
+        );
+    }
+
+    #[test]
+    fn warm_and_cold_share_epoch0_and_stay_finite() {
+        let cfg = RunConfig::quick();
+        let s = PatternSchedule::parse("step:3:1.5").unwrap();
+        let warm = AdaptiveRunner::warm(cfg)
+            .run_scenario("abilene", 1, 1.0, s)
+            .unwrap();
+        let cold = AdaptiveRunner::cold(cfg)
+            .run_scenario("abilene", 1, 1.0, s)
+            .unwrap();
+        assert_eq!(warm.epochs.len(), 3);
+        assert_eq!(cold.epochs.len(), 3);
+        assert_eq!(
+            warm.epochs[0].final_cost.to_bits(),
+            cold.epochs[0].final_cost.to_bits(),
+            "epoch 0 has no history — warm and cold must coincide"
+        );
+        for t in warm.epochs.iter().chain(&cold.epochs) {
+            assert!(t.final_cost.is_finite(), "epoch {} diverged", t.epoch);
+            assert!(t.final_cost <= t.shift_cost + 1e-9, "epoch {} ascended", t.epoch);
+            assert!(t.transient_regret >= 0.0);
+            assert!(t.iters_to_1pct >= 1 && t.iters_to_1pct <= t.iterations);
+        }
+    }
+
+    #[test]
+    fn dynamic_engine_rejects_non_iterative_algorithms() {
+        let runner = AdaptiveRunner {
+            algorithm: Algorithm::Lpr,
+            ..AdaptiveRunner::warm(RunConfig::quick())
+        };
+        let err = runner
+            .run_scenario("abilene", 1, 1.0, PatternSchedule::parse("step").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("sgp"), "{err}");
+    }
+
+    #[test]
+    fn trace_json_has_the_documented_shape() {
+        let cfg = RunConfig::quick();
+        let trace = AdaptiveRunner::warm(cfg)
+            .run_scenario("abilene", 1, 1.0, PatternSchedule::parse("step:2:1.5").unwrap())
+            .unwrap();
+        let doc = trace.to_json();
+        assert_eq!(doc.get("schedule").as_str(), Some("step:2:1.5"));
+        assert_eq!(doc.get("mode").as_str(), Some("warm"));
+        let epochs = doc.get("epochs").as_arr().unwrap();
+        assert_eq!(epochs.len(), 2);
+        assert!(epochs[0].get("final_cost_bits").as_str().is_some());
+        assert!(epochs[0].get("costs").as_arr().is_some());
+        // and it survives a parse round-trip
+        let back = Json::parse(&doc.pretty()).unwrap();
+        assert_eq!(back.get("epochs").as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn parse_schedule_lists() {
+        let xs = parse_schedules("static, step:3:1.5").unwrap();
+        assert_eq!(xs.len(), 2);
+        assert!(xs[0].is_static());
+        assert_eq!(xs[1].label(), "step:3:1.5");
+        assert!(parse_schedules("static,zzz").is_err());
+    }
+}

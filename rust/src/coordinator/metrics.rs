@@ -33,14 +33,15 @@ pub fn travel_distance(net: &Network, flows: &FlowState) -> TravelDistance {
     }
 }
 
-/// First iteration (1-based) whose cost is within 1% of the final cost —
-/// the convergence-speed metric of Fig. 5b, shared by [`super::runner`]
-/// and the [`super::sweep`] aggregator.
+/// First iteration (1-based) whose cost is within `frac` of the final
+/// cost — the generalized convergence-speed metric behind
+/// [`iters_to_1pct`] and the dynamic engine's per-epoch re-convergence
+/// counts ([`super::dynamics`]).
 ///
 /// Non-finite trajectories are handled conservatively: a run that never
 /// reaches a finite final cost "converges" only at its last iteration
 /// (`costs.len()`), never at iteration 1 via `x <= ∞`.
-pub fn iters_to_1pct(costs: &[f64]) -> usize {
+pub fn iters_to_within(costs: &[f64], frac: f64) -> usize {
     if costs.is_empty() {
         return 0;
     }
@@ -48,12 +49,35 @@ pub fn iters_to_1pct(costs: &[f64]) -> usize {
     if !fin.is_finite() {
         return costs.len();
     }
-    let thresh = fin * 1.01;
+    let thresh = fin * (1.0 + frac);
     costs
         .iter()
         .position(|&c| c <= thresh)
         .map(|p| p + 1)
         .unwrap_or(costs.len())
+}
+
+/// First iteration (1-based) whose cost is within 1% of the final cost —
+/// the convergence-speed metric of Fig. 5b, shared by [`super::runner`]
+/// and the [`super::sweep`] aggregator.
+pub fn iters_to_1pct(costs: &[f64]) -> usize {
+    iters_to_within(costs, 0.01)
+}
+
+/// Transient regret of a re-convergence trajectory: the area between the
+/// cost curve and its settled value, `Σ_t max(0, T_t − settled)` over the
+/// finite entries. This is the price paid for a workload shift while the
+/// optimizer catches up — the dynamic engine records it per epoch. A
+/// non-finite `settled` (a run that never recovered) yields `+∞`.
+pub fn transient_regret(costs: &[f64], settled: f64) -> f64 {
+    if !settled.is_finite() {
+        return f64::INFINITY;
+    }
+    costs
+        .iter()
+        .filter(|c| c.is_finite())
+        .map(|&c| (c - settled).max(0.0))
+        .sum()
 }
 
 /// Cost decomposition: communication vs computation share of `T`.
@@ -115,6 +139,28 @@ mod tests {
         assert_eq!(iters_to_1pct(&[10.0, f64::NAN]), 2);
         // early saturation followed by finite descent is fine
         assert_eq!(iters_to_1pct(&[f64::INFINITY, 2.0, 1.0]), 3);
+    }
+
+    #[test]
+    fn iters_to_within_generalizes_1pct() {
+        let costs = [10.0, 2.0, 1.005, 1.0];
+        assert_eq!(iters_to_within(&costs, 0.01), iters_to_1pct(&costs));
+        // a looser band converges earlier, a tighter one later
+        assert_eq!(iters_to_within(&costs, 1.5), 2);
+        assert_eq!(iters_to_within(&costs, 0.001), 4);
+        assert_eq!(iters_to_within(&[], 0.01), 0);
+    }
+
+    #[test]
+    fn transient_regret_measures_the_catchup_area() {
+        assert_eq!(transient_regret(&[12.0, 11.0, 10.0], 10.0), 3.0);
+        // flat trajectories pay nothing
+        assert_eq!(transient_regret(&[10.0, 10.0], 10.0), 0.0);
+        // dips below settled never give negative credit
+        assert_eq!(transient_regret(&[12.0, 9.0, 10.0], 10.0), 2.0);
+        // saturated iterations are excluded, unrecovered runs are +∞
+        assert_eq!(transient_regret(&[f64::INFINITY, 11.0, 10.0], 10.0), 1.0);
+        assert!(transient_regret(&[f64::INFINITY], f64::INFINITY).is_infinite());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! every bench build on.
 
 pub mod config;
+pub mod dynamics;
 pub mod metrics;
 pub mod report;
 pub mod runner;
@@ -18,6 +19,9 @@ use crate::model::network::Network;
 use crate::model::strategy::Strategy;
 
 pub use config::{Algorithm, CellBackend, ExperimentConfig, Schedule};
+pub use dynamics::{
+    AdaptiveRunner, DynamicTrace, EpochTrace, PatternSchedule, ScheduleKind,
+};
 pub use runner::{optimize, optimize_accelerated, RunConfig, RunResult};
 pub use scenario::{connected_er_servers, CostKind, Scenario, ScenarioSpec};
 pub use sweep::{

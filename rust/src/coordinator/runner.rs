@@ -38,6 +38,15 @@ impl RunConfig {
             patience: 3,
         }
     }
+
+    /// Fewest iterations a run can take while still attesting
+    /// convergence: the trailing window must fill before the convergence
+    /// check may fire. A dynamic epoch whose pattern did not change
+    /// re-converges in exactly this many iterations (pinned by
+    /// `rust/tests/adaptive_runner.rs`).
+    pub fn min_iters_to_converge(&self) -> usize {
+        self.patience + 1
+    }
 }
 
 /// Result of one optimization run.

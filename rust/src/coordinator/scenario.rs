@@ -81,8 +81,42 @@ impl ScenarioSpec {
         ]
     }
 
-    /// Find one Table II row by name ("sw-linear" / "sw-queue" variants
-    /// included).
+    /// Beyond-Table-II rows over the extended topology library (ISSUE 4):
+    /// a 5×4 torus grid, a Barabási–Albert scale-free graph and a k=4
+    /// fat-tree, at Table-II-like task densities — the diverse substrate
+    /// the dynamic task-pattern schedules run over.
+    pub fn extended() -> Vec<ScenarioSpec> {
+        use TopologyKind::*;
+        let mk = |name, topology, num_tasks, sources, link_mean, comp_mean| ScenarioSpec {
+            name,
+            topology,
+            num_tasks,
+            sources_per_task: sources,
+            link_kind: CostKind::Queue,
+            link_mean,
+            comp_kind: CostKind::Queue,
+            comp_mean,
+            num_types: 5,
+            r_min: 0.5,
+            r_max: 1.5,
+        };
+        vec![
+            mk("grid-torus", Torus, 20, 5, 15.0, 14.0),
+            mk("scale-free", ScaleFree, 25, 5, 15.0, 15.0),
+            mk("fat-tree", FatTree, 20, 5, 20.0, 15.0),
+        ]
+    }
+
+    /// The full scenario library: the seven Table II rows plus the
+    /// extended-topology rows.
+    pub fn all() -> Vec<ScenarioSpec> {
+        let mut specs = ScenarioSpec::table2();
+        specs.extend(ScenarioSpec::extended());
+        specs
+    }
+
+    /// Find one scenario row by name — Table II, the "sw-linear" /
+    /// "sw-queue" variants, and the extended-topology rows.
     pub fn by_name(name: &str) -> Option<ScenarioSpec> {
         if name.eq_ignore_ascii_case("sw-linear") {
             return Some(ScenarioSpec::table2()[6].clone().sw_linear());
@@ -90,7 +124,7 @@ impl ScenarioSpec {
         if name.eq_ignore_ascii_case("sw-queue") {
             return Some(ScenarioSpec::table2()[6].clone());
         }
-        ScenarioSpec::table2()
+        ScenarioSpec::all()
             .into_iter()
             .find(|s| s.name.eq_ignore_ascii_case(name))
     }
@@ -395,6 +429,24 @@ mod tests {
         assert!(ScenarioSpec::by_name("geant").is_some());
         assert!(ScenarioSpec::by_name("GEANT").is_some());
         assert!(ScenarioSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn extended_library_sizes() {
+        let expect = [
+            ("grid-torus", 20, 40, 20),
+            ("scale-free", 25, 47, 25),
+            ("fat-tree", 20, 32, 20),
+        ];
+        for (name, v, e_links, s) in expect {
+            let spec = ScenarioSpec::by_name(name).unwrap();
+            let sc = spec.build(7);
+            assert_eq!(sc.net.n(), v, "{name} |V|");
+            assert_eq!(sc.net.e(), 2 * e_links, "{name} |E|");
+            assert_eq!(sc.net.s(), s, "{name} |S|");
+            assert!(sc.net.local_computation_feasible(), "{name}");
+        }
+        assert_eq!(ScenarioSpec::all().len(), 10);
     }
 
     #[test]

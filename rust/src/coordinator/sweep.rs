@@ -1,9 +1,12 @@
 //! Parallel and process-sharded scenario sweeps: run a grid of
-//! `scenario × seed × algorithm × backend` cells across worker threads —
-//! and, with `cecflow sweep --shards N` / `--shard i/n`, across child
-//! *processes* — then aggregate the outcomes into one comparable report.
-//! This is the machinery behind the `cecflow sweep` subcommand and
-//! `benches/sweep.rs`.
+//! `scenario × seed × algorithm × backend × schedule` cells across worker
+//! threads — and, with `cecflow sweep --shards N` / `--shard i/n`, across
+//! child *processes* — then aggregate the outcomes into one comparable
+//! report. This is the machinery behind the `cecflow sweep` subcommand
+//! and `benches/sweep.rs`. Cells with a non-static
+//! [`PatternSchedule`] run the dynamic task-pattern engine
+//! ([`super::dynamics`]) warm-started, and additionally record their
+//! per-epoch final costs.
 //!
 //! Determinism is a hard contract, pinned by
 //! `rust/tests/sweep_determinism.rs` and `rust/tests/sweep_shard.rs`:
@@ -45,15 +48,18 @@ use crate::util::json::Json;
 use crate::util::stats::summarize;
 use crate::util::table::{fnum, Table};
 
+use super::dynamics::{AdaptiveRunner, PatternSchedule};
 use super::{
     build_scenario_network, metrics, run_algorithm_with_backend, Algorithm, CellBackend,
     RunConfig,
 };
 
 /// A sweep specification: the cell grid is the cross product
-/// `scenarios × seeds × algorithms × backends` (non-SGP algorithms only
-/// pair with [`CellBackend::Sparse`] — they have no dense path), every
-/// cell run at `rate_scale` under the same stopping rule.
+/// `scenarios × seeds × algorithms × backends × schedules` (non-SGP
+/// algorithms only pair with [`CellBackend::Sparse`] — they have no dense
+/// path — and non-static schedules only pair with the iterative
+/// [`Algorithm::supports_dynamic`] algorithms), every cell run at
+/// `rate_scale` under the same stopping rule.
 #[derive(Clone, Debug)]
 pub struct SweepSpec {
     pub scenarios: Vec<String>,
@@ -62,6 +68,10 @@ pub struct SweepSpec {
     /// Dense-evaluation routes to sweep SGP cells over. `[Sparse]` (the
     /// default) reproduces the pre-routing grid exactly.
     pub backends: Vec<CellBackend>,
+    /// Task-pattern schedules to sweep over. `[static]` (the default)
+    /// reproduces the pre-dynamics grid exactly; other entries run the
+    /// warm-started dynamic engine and report the last epoch's cost.
+    pub schedules: Vec<PatternSchedule>,
     pub rate_scale: f64,
     pub run: RunConfig,
 }
@@ -73,6 +83,7 @@ impl Default for SweepSpec {
             seeds: vec![1, 2, 3],
             algorithms: vec![Algorithm::Sgp, Algorithm::Gp, Algorithm::Lpr],
             backends: vec![CellBackend::Sparse],
+            schedules: vec![PatternSchedule::static_()],
             rate_scale: 1.0,
             run: RunConfig::quick(),
         }
@@ -80,13 +91,15 @@ impl Default for SweepSpec {
 }
 
 /// One grid cell: a scenario instance (name + seed) optimized by one
-/// algorithm through one dense-evaluation route.
+/// algorithm through one dense-evaluation route, under one task-pattern
+/// schedule.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SweepCell {
     pub scenario: String,
     pub seed: u64,
     pub algorithm: Algorithm,
     pub backend: CellBackend,
+    pub schedule: PatternSchedule,
 }
 
 /// The outcome of one cell, tagged with its global grid index so shard
@@ -100,14 +113,22 @@ pub struct CellResult {
     pub iterations: usize,
     pub iters_to_1pct: usize,
     pub wall_seconds: f64,
+    /// Per-epoch final costs of a dynamic (non-static-schedule) cell, in
+    /// epoch order; empty for static cells. Carried bit-exactly through
+    /// the shard protocol and report artifacts, and part of the
+    /// fingerprint — per-epoch results must be identical across worker
+    /// and shard counts.
+    pub epoch_costs: Vec<f64>,
 }
 
-/// Aggregate over the seeds of one `(scenario, algorithm, backend)` group.
+/// Aggregate over the seeds of one
+/// `(scenario, algorithm, backend, schedule)` group.
 #[derive(Clone, Debug)]
 pub struct GroupSummary {
     pub scenario: String,
     pub algorithm: String,
     pub backend: String,
+    pub schedule: String,
     pub cells: usize,
     pub mean_cost: f64,
     pub p95_cost: f64,
@@ -131,13 +152,19 @@ pub struct SweepReport {
 
 impl SweepSpec {
     /// The cell grid in canonical order: scenarios outermost, then seeds,
-    /// then algorithms, then backends. This order is part of the
-    /// determinism contract — reports compare cell-by-cell across runs,
-    /// worker counts and shard counts. Non-SGP × non-`Sparse`
-    /// combinations are skipped (no dense path exists for the baselines).
+    /// then algorithms, then backends, then schedules. This order is part
+    /// of the determinism contract — reports compare cell-by-cell across
+    /// runs, worker counts and shard counts. Non-SGP × non-`Sparse`
+    /// combinations are skipped (no dense path exists for the baselines),
+    /// as are non-static schedules on algorithms without a dynamic path
+    /// ([`Algorithm::supports_dynamic`]).
     pub fn cells(&self) -> Vec<SweepCell> {
         let mut out = Vec::with_capacity(
-            self.scenarios.len() * self.seeds.len() * self.algorithms.len() * self.backends.len(),
+            self.scenarios.len()
+                * self.seeds.len()
+                * self.algorithms.len()
+                * self.backends.len()
+                * self.schedules.len(),
         );
         for scenario in &self.scenarios {
             for &seed in &self.seeds {
@@ -146,12 +173,18 @@ impl SweepSpec {
                         if backend != CellBackend::Sparse && algorithm != Algorithm::Sgp {
                             continue;
                         }
-                        out.push(SweepCell {
-                            scenario: scenario.clone(),
-                            seed,
-                            algorithm,
-                            backend,
-                        });
+                        for &schedule in &self.schedules {
+                            if !schedule.is_static() && !algorithm.supports_dynamic() {
+                                continue;
+                            }
+                            out.push(SweepCell {
+                                scenario: scenario.clone(),
+                                seed,
+                                algorithm,
+                                backend,
+                                schedule,
+                            });
+                        }
                     }
                 }
             }
@@ -161,6 +194,9 @@ impl SweepSpec {
 }
 
 fn run_cell(index: usize, cell: &SweepCell, spec: &SweepSpec) -> Result<CellResult> {
+    if !cell.schedule.is_static() {
+        return run_dynamic_cell(index, cell, spec);
+    }
     let net = build_scenario_network(&cell.scenario, cell.seed, spec.rate_scale)?;
     let start = Instant::now();
     let out = run_algorithm_with_backend(&net, cell.algorithm, cell.backend, &spec.run)?;
@@ -176,6 +212,36 @@ fn run_cell(index: usize, cell: &SweepCell, spec: &SweepSpec) -> Result<CellResu
         iterations: out.iterations,
         iters_to_1pct: metrics::iters_to_1pct(&out.costs),
         wall_seconds: start.elapsed().as_secs_f64(),
+        epoch_costs: Vec::new(),
+    })
+}
+
+/// A dynamic (non-static-schedule) cell: the warm-started adaptive run
+/// over the cell's schedule. The reported cost is the *last* epoch's
+/// converged cost, iterations count the whole run, iters-to-1% is the
+/// **sum of the per-epoch counts** (each epoch measured against its own
+/// converged cost — an index into a concatenated trajectory would
+/// straddle epoch boundaries and measure nothing), and the per-epoch
+/// finals ride along in [`CellResult::epoch_costs`].
+fn run_dynamic_cell(index: usize, cell: &SweepCell, spec: &SweepSpec) -> Result<CellResult> {
+    let start = Instant::now();
+    let runner = AdaptiveRunner {
+        algorithm: cell.algorithm,
+        backend: cell.backend,
+        warm: true,
+        run: spec.run,
+    };
+    let trace = runner.run_scenario(&cell.scenario, cell.seed, spec.rate_scale, cell.schedule)?;
+    let sanitize = |x: f64| if x.is_nan() { f64::INFINITY } else { x };
+    let last = trace.epochs.last().expect("a schedule has at least 1 epoch");
+    Ok(CellResult {
+        index,
+        cell: cell.clone(),
+        final_cost: sanitize(last.final_cost),
+        iterations: trace.epochs.iter().map(|e| e.iterations).sum(),
+        iters_to_1pct: trace.epochs.iter().map(|e| e.iters_to_1pct).sum(),
+        wall_seconds: start.elapsed().as_secs_f64(),
+        epoch_costs: trace.epochs.iter().map(|e| sanitize(e.final_cost)).collect(),
     })
 }
 
@@ -198,6 +264,10 @@ pub fn spec_grid_hash(spec: &SweepSpec) -> u64 {
         eat(cell.algorithm.name().as_bytes());
         eat(&[0]);
         eat(cell.backend.name().as_bytes());
+        eat(&[0]);
+        // the schedule axis is identity-relevant: shard artifacts from
+        // different schedule grids must never merge silently
+        eat(cell.schedule.label().as_bytes());
         eat(&[0xff]);
     }
     eat(&spec.rate_scale.to_bits().to_le_bytes());
@@ -224,11 +294,12 @@ fn validate_spec(spec: &SweepSpec) -> Result<()> {
 /// Human-readable cell identity used in error contexts.
 fn describe_cell(index: usize, cell: &SweepCell) -> String {
     format!(
-        "sweep cell {index} ({} seed {} algo {} backend {})",
+        "sweep cell {index} ({} seed {} algo {} backend {} schedule {})",
         cell.scenario,
         cell.seed,
         cell.algorithm.name(),
-        cell.backend.name()
+        cell.backend.name(),
+        cell.schedule.label()
     )
 }
 
@@ -499,6 +570,8 @@ pub fn spec_to_args(spec: &SweepSpec) -> Vec<String> {
         join(spec.algorithms.iter().map(|a| a.name().to_string()).collect()),
         "--backends".to_string(),
         join(spec.backends.iter().map(|b| b.name().to_string()).collect()),
+        "--schedules".to_string(),
+        join(spec.schedules.iter().map(|s| s.label()).collect()),
         // f64 Display is the shortest round-tripping decimal, so the
         // child parses back the exact same value
         "--scale".to_string(),
@@ -785,8 +858,9 @@ pub fn run_sweep_sharded(spec: &SweepSpec, exe: &Path, opts: &ShardOptions) -> R
 // ---------------------------------------------------------------------------
 
 /// One cell's identity inside [`SweepReport::fingerprint`]: scenario,
-/// seed, algorithm, backend, cost bits, iterations, iters-to-1%.
-pub type CellFingerprint = (String, u64, String, String, u64, usize, usize);
+/// seed, algorithm, backend, schedule label, cost bits, per-epoch cost
+/// bits (empty for static cells), iterations, iters-to-1%.
+pub type CellFingerprint = (String, u64, String, String, String, u64, Vec<u64>, usize, usize);
 
 impl CellResult {
     /// Machine-readable cell record. `final_cost` is duplicated as exact
@@ -804,6 +878,7 @@ impl CellResult {
                 Json::Str(self.cell.algorithm.name().to_string()),
             )
             .set("backend", Json::Str(self.cell.backend.name().to_string()))
+            .set("schedule", Json::Str(self.cell.schedule.label()))
             .set("final_cost", Json::Num(self.final_cost))
             .set(
                 "final_cost_bits",
@@ -812,6 +887,17 @@ impl CellResult {
             .set("iterations", Json::Num(self.iterations as f64))
             .set("iters_to_1pct", Json::Num(self.iters_to_1pct as f64))
             .set("wall_seconds", Json::Num(self.wall_seconds));
+        if !self.epoch_costs.is_empty() {
+            o.set(
+                "epoch_cost_bits",
+                Json::Arr(
+                    self.epoch_costs
+                        .iter()
+                        .map(|c| Json::Str(format!("{:016x}", c.to_bits())))
+                        .collect(),
+                ),
+            );
+        }
         o
     }
 
@@ -837,6 +923,29 @@ impl CellResult {
                 .as_str()
                 .context("cell record missing backend")?;
             CellBackend::parse(b).with_context(|| format!("unknown backend '{b}'"))?
+        };
+        // hand-authored pre-dynamics records may omit the schedule; every
+        // writer since the schedule axis emits it, and the grid hash keeps
+        // mixed-schedule artifacts from merging regardless
+        let schedule = match doc.get("schedule").as_str() {
+            Some(s) => PatternSchedule::parse(s)
+                .with_context(|| format!("bad cell schedule '{s}'"))?,
+            None => PatternSchedule::static_(),
+        };
+        let epoch_costs = match doc.get("epoch_cost_bits").as_arr() {
+            Some(xs) => xs
+                .iter()
+                .enumerate()
+                .map(|(k, x)| {
+                    let hex = x
+                        .as_str()
+                        .with_context(|| format!("epoch_cost_bits[{k}] is not a string"))?;
+                    Ok(f64::from_bits(u64::from_str_radix(hex, 16).with_context(
+                        || format!("bad epoch_cost_bits[{k}] '{hex}'"),
+                    )?))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
         };
         let final_cost = match doc.get("final_cost_bits").as_str() {
             Some(hex) => f64::from_bits(
@@ -874,6 +983,7 @@ impl CellResult {
                 seed,
                 algorithm,
                 backend,
+                schedule,
             },
             final_cost,
             iterations: doc
@@ -885,21 +995,23 @@ impl CellResult {
                 .as_usize()
                 .context("cell record missing iters_to_1pct")?,
             wall_seconds: doc.get("wall_seconds").as_num().unwrap_or(0.0),
+            epoch_costs,
         })
     }
 }
 
 impl SweepReport {
-    /// Per-`(scenario, algorithm, backend)` aggregates in
+    /// Per-`(scenario, algorithm, backend, schedule)` aggregates in
     /// first-appearance order.
     pub fn groups(&self) -> Vec<GroupSummary> {
-        let mut order: Vec<(String, String, String)> = Vec::new();
+        let mut order: Vec<(String, String, String, String)> = Vec::new();
         let mut buckets: Vec<Vec<&CellResult>> = Vec::new();
         for cell in &self.cells {
             let key = (
                 cell.cell.scenario.clone(),
                 cell.cell.algorithm.name().to_string(),
                 cell.cell.backend.name().to_string(),
+                cell.cell.schedule.label(),
             );
             match order.iter().position(|k| *k == key) {
                 Some(i) => buckets[i].push(cell),
@@ -912,7 +1024,7 @@ impl SweepReport {
         order
             .into_iter()
             .zip(buckets)
-            .map(|((scenario, algorithm, backend), cells)| {
+            .map(|((scenario, algorithm, backend, schedule), cells)| {
                 let costs: Vec<f64> = cells.iter().map(|c| c.final_cost).collect();
                 let s = summarize(&costs);
                 let n = cells.len() as f64;
@@ -920,6 +1032,7 @@ impl SweepReport {
                     scenario,
                     algorithm,
                     backend,
+                    schedule,
                     cells: cells.len(),
                     mean_cost: s.mean,
                     p95_cost: s.p95,
@@ -949,7 +1062,9 @@ impl SweepReport {
                     c.cell.seed,
                     c.cell.algorithm.name().to_string(),
                     c.cell.backend.name().to_string(),
+                    c.cell.schedule.label(),
                     c.final_cost.to_bits(),
+                    c.epoch_costs.iter().map(|x| x.to_bits()).collect(),
                     c.iterations,
                     c.iters_to_1pct,
                 )
@@ -963,6 +1078,7 @@ impl SweepReport {
             "scenario",
             "algo",
             "backend",
+            "schedule",
             "cells",
             "mean T",
             "p95 T",
@@ -974,6 +1090,7 @@ impl SweepReport {
                 g.scenario,
                 g.algorithm,
                 g.backend,
+                g.schedule,
                 g.cells.to_string(),
                 fnum(g.mean_cost),
                 fnum(g.p95_cost),
@@ -997,6 +1114,7 @@ impl SweepReport {
                 o.set("scenario", Json::Str(g.scenario))
                     .set("algorithm", Json::Str(g.algorithm))
                     .set("backend", Json::Str(g.backend))
+                    .set("schedule", Json::Str(g.schedule))
                     .set("cells", Json::Num(g.cells as f64))
                     .set("mean_cost", Json::Num(g.mean_cost))
                     .set("p95_cost", Json::Num(g.p95_cost))
@@ -1153,6 +1271,10 @@ pub fn parse_backends(s: &str) -> Result<Vec<CellBackend>> {
         .collect()
 }
 
+/// Parse a comma-separated schedule list (`"static,step:3:1.5"`) — the
+/// `--schedules` CLI flag (re-exported from [`super::dynamics`]).
+pub use super::dynamics::parse_schedules;
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1163,6 +1285,7 @@ mod tests {
             seeds: vec![1, 2],
             algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
             backends: vec![CellBackend::Sparse],
+            schedules: vec![PatternSchedule::static_()],
             rate_scale: 1.0,
             run: RunConfig::quick(),
         }
@@ -1175,6 +1298,7 @@ mod tests {
             seeds: vec![1, 2],
             algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
             backends: vec![CellBackend::Sparse],
+            schedules: vec![PatternSchedule::static_()],
             rate_scale: 1.0,
             run: RunConfig::quick(),
         };
@@ -1195,6 +1319,7 @@ mod tests {
             seeds: vec![1],
             algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
             backends: vec![CellBackend::Sparse, CellBackend::Native],
+            schedules: vec![PatternSchedule::static_()],
             rate_scale: 1.0,
             run: RunConfig::quick(),
         };
@@ -1213,6 +1338,66 @@ mod tests {
             (cells[2].algorithm, cells[2].backend),
             (Algorithm::Lpr, CellBackend::Sparse)
         );
+    }
+
+    #[test]
+    fn grid_skips_dynamic_schedules_for_non_iterative_algorithms() {
+        let spec = SweepSpec {
+            scenarios: vec!["a".into()],
+            seeds: vec![1],
+            algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
+            backends: vec![CellBackend::Sparse],
+            schedules: vec![
+                PatternSchedule::static_(),
+                PatternSchedule::parse("step:3:1.5").unwrap(),
+            ],
+            rate_scale: 1.0,
+            run: RunConfig::quick(),
+        };
+        let cells = spec.cells();
+        // sgp×static, sgp×step, lpr×static — no lpr×step (LPR is one-shot)
+        assert_eq!(cells.len(), 3);
+        assert!(cells[0].schedule.is_static());
+        assert_eq!(cells[1].schedule.label(), "step:3:1.5");
+        assert_eq!(cells[1].algorithm, Algorithm::Sgp);
+        assert_eq!(cells[2].algorithm, Algorithm::Lpr);
+        assert!(cells[2].schedule.is_static());
+    }
+
+    #[test]
+    fn dynamic_cells_record_per_epoch_costs_and_group_separately() {
+        let spec = SweepSpec {
+            scenarios: vec!["abilene".into()],
+            seeds: vec![1],
+            algorithms: vec![Algorithm::Sgp],
+            backends: vec![CellBackend::Sparse],
+            schedules: vec![
+                PatternSchedule::static_(),
+                PatternSchedule::parse("step:3:1.5").unwrap(),
+            ],
+            rate_scale: 1.0,
+            run: RunConfig::quick(),
+        };
+        let report = run_sweep(&spec, 2).unwrap();
+        assert_eq!(report.cells.len(), 2);
+        assert!(report.cells[0].epoch_costs.is_empty());
+        assert_eq!(report.cells[1].epoch_costs.len(), 3);
+        assert_eq!(
+            report.cells[1].final_cost.to_bits(),
+            report.cells[1].epoch_costs[2].to_bits(),
+            "a dynamic cell reports its last epoch's cost"
+        );
+        let groups = report.groups();
+        assert_eq!(groups.len(), 2, "schedules must not pool in one group");
+        assert_eq!(groups[0].schedule, "static");
+        assert_eq!(groups[1].schedule, "step:3:1.5");
+        // the schedule axis shows up in the rendered table and the JSON
+        assert!(report.render().contains("step:3:1.5"));
+        let back = SweepReport::from_json(
+            &Json::parse(&report.to_json().pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.fingerprint(), report.fingerprint());
     }
 
     #[test]
@@ -1272,6 +1457,7 @@ mod tests {
             seeds: vec![1, 2, 3, 4],
             algorithms: vec![Algorithm::Lpr],
             backends: vec![CellBackend::Sparse],
+            schedules: vec![PatternSchedule::static_()],
             rate_scale: 1.0,
             run: RunConfig::quick(),
         };
@@ -1354,11 +1540,13 @@ mod tests {
                 seed: 1 + index as u64,
                 algorithm: Algorithm::Sgp,
                 backend: CellBackend::Native,
+                schedule: PatternSchedule::parse("step:2:1.5").unwrap(),
             },
             final_cost: cost,
             iterations: 5,
             iters_to_1pct: 2,
             wall_seconds: 0.25,
+            epoch_costs: vec![123.5, cost],
         };
         let report = SweepReport {
             cells: vec![mk(0, 123.456_789_012_345), mk(1, f64::INFINITY)],
@@ -1430,17 +1618,24 @@ mod tests {
                 seed: 3,
                 algorithm: Algorithm::Gp,
                 backend: CellBackend::Sparse,
+                schedule: PatternSchedule::parse("bursty:4:2").unwrap(),
             },
             final_cost: f64::INFINITY,
             iterations: 80,
             iters_to_1pct: 80,
             wall_seconds: 1.5,
+            epoch_costs: vec![10.0, f64::INFINITY, 9.5, f64::INFINITY],
         };
         match parse_shard_line(&cell_line(&cell)).unwrap() {
             ShardLine::Cell(c) => {
                 assert_eq!(c.index, 7);
                 assert_eq!(c.cell, cell.cell);
                 assert_eq!(c.final_cost.to_bits(), cell.final_cost.to_bits());
+                // per-epoch finals travel the protocol bit-exactly, ∞ included
+                assert_eq!(
+                    c.epoch_costs.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    cell.epoch_costs.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                );
             }
             other => panic!("wrong line kind: {other:?}"),
         }
@@ -1475,6 +1670,10 @@ mod tests {
             seeds: vec![1, 5, 9],
             algorithms: vec![Algorithm::Sgp, Algorithm::Gp],
             backends: vec![CellBackend::Sparse, CellBackend::Native],
+            schedules: vec![
+                PatternSchedule::static_(),
+                PatternSchedule::parse("step:3:1.5").unwrap(),
+            ],
             rate_scale: 1.25,
             run: RunConfig {
                 max_iters: 33,
@@ -1491,6 +1690,7 @@ mod tests {
         assert_eq!(parse_seeds(get("--seeds")).unwrap(), spec.seeds);
         assert_eq!(parse_algorithms(get("--algos")).unwrap(), spec.algorithms);
         assert_eq!(parse_backends(get("--backends")).unwrap(), spec.backends);
+        assert_eq!(parse_schedules(get("--schedules")).unwrap(), spec.schedules);
         assert_eq!(get("--scale").parse::<f64>().unwrap(), spec.rate_scale);
         assert_eq!(get("--iters").parse::<usize>().unwrap(), 33);
         assert_eq!(get("--tol").parse::<f64>().unwrap().to_bits(), 3e-6f64.to_bits());

@@ -26,6 +26,12 @@ pub enum TopologyKind {
     Lhc,
     Geant,
     SmallWorld,
+    /// 5×4 torus grid ([`grid_torus`]) — every node degree exactly 4.
+    Torus,
+    /// Barabási–Albert scale-free graph ([`barabasi_albert`], n=25, m=2).
+    ScaleFree,
+    /// k=4 fat-tree ([`fat_tree`]): 4 cores + 4 pods of 2 agg + 2 edge.
+    FatTree,
 }
 
 impl TopologyKind {
@@ -38,6 +44,9 @@ impl TopologyKind {
             "lhc" => TopologyKind::Lhc,
             "geant" => TopologyKind::Geant,
             "sw" | "small-world" | "small_world" => TopologyKind::SmallWorld,
+            "grid-torus" | "torus" | "grid_torus" => TopologyKind::Torus,
+            "scale-free" | "ba" | "scale_free" | "barabasi-albert" => TopologyKind::ScaleFree,
+            "fat-tree" | "fattree" | "fat_tree" => TopologyKind::FatTree,
             _ => return None,
         })
     }
@@ -51,6 +60,9 @@ impl TopologyKind {
             TopologyKind::Lhc => "lhc",
             TopologyKind::Geant => "geant",
             TopologyKind::SmallWorld => "sw",
+            TopologyKind::Torus => "grid-torus",
+            TopologyKind::ScaleFree => "scale-free",
+            TopologyKind::FatTree => "fat-tree",
         }
     }
 
@@ -63,10 +75,13 @@ impl TopologyKind {
             TopologyKind::Lhc,
             TopologyKind::Geant,
             TopologyKind::SmallWorld,
+            TopologyKind::Torus,
+            TopologyKind::ScaleFree,
+            TopologyKind::FatTree,
         ]
     }
 
-    /// Build the topology at its Table II size.
+    /// Build the topology at its Table II (or extended-library) size.
     pub fn build(&self, rng: &mut Pcg) -> DiGraph {
         match self {
             TopologyKind::ConnectedEr => connected_er(20, 40, rng),
@@ -76,6 +91,9 @@ impl TopologyKind {
             TopologyKind::Lhc => lhc(),
             TopologyKind::Geant => geant(),
             TopologyKind::SmallWorld => small_world(100, 320, rng),
+            TopologyKind::Torus => grid_torus(5, 4, true),
+            TopologyKind::ScaleFree => barabasi_albert(25, 2, rng),
+            TopologyKind::FatTree => fat_tree(4),
         }
     }
 }
@@ -308,6 +326,102 @@ pub fn small_world(n: usize, links: usize, rng: &mut Pcg) -> DiGraph {
         };
         if dist >= 3 {
             push(&mut pairs, &mut have, u, v);
+        }
+    }
+    from_undirected(n, &pairs)
+}
+
+/// Rectangular grid of `rows × cols` nodes (node `(r, c)` is `r·cols +
+/// c`), linked to the right/down neighbors; with `wrap` the rows and
+/// columns close into rings (a torus — every node degree exactly 4 when
+/// both dimensions are ≥ 3). Deterministic: no randomness enters the
+/// construction.
+pub fn grid_torus(rows: usize, cols: usize, wrap: bool) -> DiGraph {
+    assert!(rows >= 2 && cols >= 2, "grid needs at least 2×2 nodes");
+    if wrap {
+        assert!(
+            rows >= 3 && cols >= 3,
+            "torus wrap needs both dimensions ≥ 3 (2-rings would duplicate links)"
+        );
+    }
+    let id = |r: usize, c: usize| r * cols + c;
+    let mut pairs = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                pairs.push((id(r, c), id(r, c + 1)));
+            } else if wrap {
+                pairs.push((id(r, c), id(r, 0)));
+            }
+            if r + 1 < rows {
+                pairs.push((id(r, c), id(r + 1, c)));
+            } else if wrap {
+                pairs.push((id(r, c), id(0, c)));
+            }
+        }
+    }
+    from_undirected(rows * cols, &pairs)
+}
+
+/// Barabási–Albert scale-free graph: a complete seed graph on `m + 1`
+/// nodes, then each new node attaches to `m` distinct existing nodes
+/// chosen by preferential attachment (probability proportional to
+/// degree). Undirected link count is `m(m+1)/2 + (n − m − 1)·m`; connected
+/// by construction, and bitwise reproducible from the generator state.
+pub fn barabasi_albert(n: usize, m: usize, rng: &mut Pcg) -> DiGraph {
+    assert!(m >= 1, "BA needs m ≥ 1");
+    let m0 = m + 1;
+    assert!(n > m0, "BA needs n > m + 1 (got n={n}, m={m})");
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    // one entry per incident link end: sampling it uniformly is sampling
+    // nodes proportionally to degree
+    let mut stubs: Vec<usize> = Vec::new();
+    for u in 0..m0 {
+        for v in (u + 1)..m0 {
+            pairs.push((u, v));
+            stubs.push(u);
+            stubs.push(v);
+        }
+    }
+    for v in m0..n {
+        let mut chosen: Vec<usize> = Vec::with_capacity(m);
+        while chosen.len() < m {
+            let t = *rng.pick(&stubs);
+            if !chosen.contains(&t) {
+                chosen.push(t);
+            }
+        }
+        for &t in &chosen {
+            pairs.push((t, v));
+            stubs.push(t);
+            stubs.push(v);
+        }
+    }
+    from_undirected(n, &pairs)
+}
+
+/// k-ary fat-tree switching fabric (`k` even): `(k/2)²` core nodes and
+/// `k` pods of `k/2` aggregation + `k/2` edge nodes. Edge node `e` of a
+/// pod links to every aggregation node of its pod; aggregation node `a`
+/// links to the `k/2` cores of core group `a`. Node ids: cores first,
+/// then pod by pod (aggregation before edge). Max degree is exactly `k`
+/// (cores and aggregation), edge nodes have degree `k/2`.
+pub fn fat_tree(k: usize) -> DiGraph {
+    assert!(k >= 2 && k % 2 == 0, "fat-tree needs an even k ≥ 2");
+    let h = k / 2;
+    let cores = h * h;
+    let n = cores + k * k;
+    let mut pairs = Vec::new();
+    for p in 0..k {
+        let agg0 = cores + p * k;
+        let edge0 = agg0 + h;
+        for a in 0..h {
+            for e in 0..h {
+                pairs.push((agg0 + a, edge0 + e));
+            }
+            for c in 0..h {
+                pairs.push((a * h + c, agg0 + a));
+            }
         }
     }
     from_undirected(n, &pairs)

@@ -6,12 +6,17 @@
 //!                    [--scale 1.0] [--schedule sync|async|accelerated]
 //!                    [--config path.json] [--out results/run.json]
 //! cecflow sweep      [--scenarios a,b] [--seeds 1,2,3 | 1..8] [--algos sgp,gp,lpr]
-//!                    [--backends sparse,native,pjrt] [--workers N] [--iters N]
+//!                    [--backends sparse,native,pjrt] [--schedules static,step:3:1.5]
+//!                    [--workers N] [--iters N]
 //!                    [--tol X] [--patience N] [--scale X] [--out results/sweep.json]
 //!                    [--shards N [--shard-timeout SECS]]   process-sharded parent
 //!                    [--shard i/n]                         run one shard in-process
 //!                    [--shard-worker i/n]                  JSON-lines child protocol
 //!                    [--merge a.json,b.json]               merge shard reports
+//! cecflow dynamic    [--scenario abilene] [--seed 42] [--algo sgp|gp]
+//!                    [--backend sparse|native|pjrt] [--schedule step|bursty|diurnal|churn|rescale]
+//!                    [--epochs N] [--magnitude X] [--mode warm|cold|both]
+//!                    [--iters N] [--tol X] [--patience N] [--scale X] [--out trace.json]
 //! cecflow experiment fig4|fig5b|fig5c|fig5d|table2  (see benches/ too)
 //! cecflow validate   [--scenario abilene] — XLA data plane vs native
 //! cecflow info       — environment, scenarios, artifact status
@@ -49,6 +54,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(args),
         Some("sweep") => cmd_sweep(args),
+        Some("dynamic") => cmd_dynamic(args),
         Some("validate") => cmd_validate(args),
         Some("info") => cmd_info(),
         Some("experiment") => cmd_experiment(args),
@@ -67,6 +73,7 @@ fn print_help() {
          subcommands:\n\
          \x20 run         optimize one scenario with one algorithm\n\
          \x20 sweep       scenario × seed × algorithm grid on worker threads\n\
+         \x20 dynamic     time-varying task pattern: warm vs cold re-optimization\n\
          \x20 experiment  regenerate a paper figure (fig4|fig5b|fig5c|fig5d|table2)\n\
          \x20 validate    XLA dense data plane vs native evaluator parity\n\
          \x20 info        environment + scenario inventory\n\
@@ -76,11 +83,14 @@ fn print_help() {
          \x20            --config FILE --out FILE\n\
          sweep flags:  --scenarios a,b --seeds 1,2,3|1..8 --algos sgp,gp,lpr\n\
          \x20            --backends sparse,native,pjrt --workers N --iters N\n\
-         \x20            --tol X --patience N --scale X --out FILE\n\
+         \x20            --schedules static,step:3:1.5 --tol X --patience N\n\
+         \x20            --scale X --out FILE\n\
          sweep shards: --shards N [--shard-timeout SECS]  spawn N child processes\n\
          \x20            --shard i/n [--out FILE]           run shard i of n here\n\
          \x20            --merge a.json,b.json              merge shard reports\n\
-         \x20            --shard-worker i/n                 (internal JSON-lines child)"
+         \x20            --shard-worker i/n                 (internal JSON-lines child)\n\
+         dynamic flags: --schedule step|bursty|diurnal|churn|rescale --epochs N\n\
+         \x20            --magnitude X --mode warm|cold|both --backend sparse|native|pjrt"
     );
 }
 
@@ -209,7 +219,7 @@ fn write_sweep_report(report: &cecflow::coordinator::SweepReport, out: &str) -> 
 fn cmd_sweep(args: &Args) -> Result<()> {
     use cecflow::coordinator::sweep::{
         cell_line, done_line, error_line, parse_algorithms, parse_backends, parse_scenarios,
-        parse_seeds, parse_shard_arg, run_sweep_shard, run_sweep_shard_with,
+        parse_schedules, parse_seeds, parse_shard_arg, run_sweep_shard, run_sweep_shard_with,
     };
     use cecflow::coordinator::{run_sweep, run_sweep_sharded, ShardOptions, SweepReport, SweepSpec};
 
@@ -247,6 +257,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     if let Some(s) = args.opt("backends") {
         spec.backends = parse_backends(s)?;
+    }
+    if let Some(s) = args.opt("schedules") {
+        spec.schedules = parse_schedules(s)?;
     }
     spec.rate_scale = args.opt_f64("scale", spec.rate_scale);
     spec.run.max_iters = args.opt_usize("iters", spec.run.max_iters);
@@ -308,11 +321,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     let total = spec.cells().len();
     println!(
-        "sweep: {} scenario(s) × {} seed(s) × {} algorithm(s) × {} backend(s) = {} cells",
+        "sweep: {} scenario(s) × {} seed(s) × {} algorithm(s) × {} backend(s) × {} \
+         schedule(s) = {} cells",
         spec.scenarios.len(),
         spec.seeds.len(),
         spec.algorithms.len(),
         spec.backends.len(),
+        spec.schedules.len(),
         total,
     );
     let start = std::time::Instant::now();
@@ -354,6 +369,137 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     if let Some(out) = args.opt("out") {
         write_sweep_report(&report, out)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// `cecflow dynamic`: drive one scenario through a time-varying
+/// task-pattern schedule, re-optimizing at every epoch boundary —
+/// warm-started from the previous strategy, cold-started from the
+/// all-local point, or both side by side (the paper's "adaptive to
+/// changes in task pattern" claim, §IV, made observable).
+fn cmd_dynamic(args: &Args) -> Result<()> {
+    use cecflow::coordinator::{AdaptiveRunner, CellBackend, DynamicTrace, PatternSchedule};
+
+    let scenario = args.opt_or("scenario", "abilene");
+    let seed = args.opt_u64("seed", 42);
+    let rate_scale = args.opt_f64("scale", 1.0);
+    let algorithm = {
+        let a = args.opt_or("algo", "sgp");
+        Algorithm::parse(a).with_context(|| format!("unknown algo '{a}'"))?
+    };
+    let backend = {
+        let b = args.opt_or("backend", "sparse");
+        CellBackend::parse(b).with_context(|| format!("unknown backend '{b}'"))?
+    };
+    let schedule = {
+        let mut s = PatternSchedule::parse(args.opt_or("schedule", "step"))?;
+        if let Some(e) = args.opt("epochs") {
+            let epochs: usize = e
+                .parse()
+                .with_context(|| format!("--epochs expects an integer, got '{e}'"))?;
+            s = s.with_epochs(epochs)?;
+        }
+        if let Some(m) = args.opt("magnitude") {
+            let magnitude: f64 = m
+                .parse()
+                .with_context(|| format!("--magnitude expects a number, got '{m}'"))?;
+            s = s.with_magnitude(magnitude)?;
+        }
+        s
+    };
+    let run_cfg = RunConfig {
+        max_iters: args.opt_usize("iters", 120),
+        tol: args.opt_f64("tol", RunConfig::default().tol),
+        patience: args.opt_usize("patience", RunConfig::default().patience),
+    };
+    let mode = args.opt_or("mode", "both");
+    let (run_warm, run_cold) = match mode {
+        "warm" => (true, false),
+        "cold" => (false, true),
+        "both" => (true, true),
+        other => bail!("--mode expects warm|cold|both, got '{other}'"),
+    };
+
+    println!(
+        "dynamic: {scenario} (seed {seed}) under schedule {} ({} epoch(s), algo {}, \
+         backend {})",
+        schedule.label(),
+        schedule.epochs(),
+        algorithm.name(),
+        backend.name()
+    );
+
+    let mut runner = AdaptiveRunner::warm(run_cfg);
+    runner.algorithm = algorithm;
+    runner.backend = backend;
+    let mut traces: Vec<DynamicTrace> = Vec::new();
+    for warm in [true, false] {
+        if (warm && !run_warm) || (!warm && !run_cold) {
+            continue;
+        }
+        runner.warm = warm;
+        let trace = runner.run_scenario(scenario, seed, rate_scale, schedule)?;
+        let label = if warm { "warm" } else { "cold" };
+        let mut t = Table::new(&[
+            "epoch",
+            "shift T",
+            "final T",
+            "iters",
+            "iters->1%",
+            "regret",
+        ]);
+        for e in &trace.epochs {
+            t.row(vec![
+                e.epoch.to_string(),
+                fnum(e.shift_cost),
+                fnum(e.final_cost),
+                e.iterations.to_string(),
+                e.iters_to_1pct.to_string(),
+                fnum(e.transient_regret),
+            ]);
+        }
+        println!("\n{label} start ({}):", trace.algorithm);
+        t.print();
+        traces.push(trace);
+    }
+
+    if traces.len() == 2 {
+        let (warm, cold) = (&traces[0], &traces[1]);
+        println!(
+            "\nre-convergence iterations after the first epoch: warm {} vs cold {}",
+            warm.reconvergence_iterations(),
+            cold.reconvergence_iterations()
+        );
+        for (w, c) in warm.epochs.iter().zip(&cold.epochs).skip(1) {
+            if w.iterations > c.iterations {
+                println!(
+                    "note: epoch {}: warm took {} iterations vs cold {} — adaptivity \
+                     claim violated on this instance",
+                    w.epoch, w.iterations, c.iterations
+                );
+            }
+        }
+    }
+
+    if let Some(out) = args.opt("out") {
+        let mut doc = Json::obj();
+        doc.set("scenario", Json::Str(scenario.to_string()))
+            .set("seed", Json::Num(seed as f64))
+            .set("schedule", Json::Str(schedule.label()))
+            .set("rate_scale", Json::Num(rate_scale))
+            .set(
+                "runs",
+                Json::Arr(traces.iter().map(DynamicTrace::to_json).collect()),
+            );
+        if let Some(parent) = std::path::Path::new(out).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        std::fs::write(out, doc.pretty()).with_context(|| format!("writing {out}"))?;
         println!("wrote {out}");
     }
     Ok(())

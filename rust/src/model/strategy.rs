@@ -246,6 +246,49 @@ impl Strategy {
         phi
     }
 
+    /// Same-graph warm start across a *task-pattern* shift (the dynamic
+    /// engine's epoch boundary, [`crate::coordinator::dynamics`]): both
+    /// planes carry over untouched — rate changes never invalidate a
+    /// feasible strategy — except the result plane of tasks whose
+    /// destination moved, which is re-initialized along the new
+    /// shortest-path tree (loop-free by construction, and the old
+    /// destination's all-zero row becomes a forwarding row again). The
+    /// networks must share the graph and the task count; for *topology*
+    /// changes use [`Strategy::adapt_to`] instead.
+    pub fn retarget(&self, old_net: &Network, new_net: &Network) -> Strategy {
+        use crate::graph::algorithms::dijkstra_to;
+        assert_eq!(old_net.n(), new_net.n(), "retarget requires the same node set");
+        assert_eq!(old_net.e(), new_net.e(), "retarget requires the same edge set");
+        assert_eq!(old_net.s(), new_net.s(), "retarget requires the same task count");
+        let mut phi = self.clone();
+        let w0: Vec<f64> = new_net
+            .link_cost
+            .iter()
+            .map(|c| c.deriv_at_zero())
+            .collect();
+        for (s, task) in new_net.tasks.iter().enumerate() {
+            if old_net.tasks[s].dest == task.dest {
+                continue;
+            }
+            let (_, next) = dijkstra_to(&new_net.graph, task.dest, &w0);
+            for i in 0..new_net.n() {
+                phi.result[s][i] = vec![0.0; new_net.graph.out_degree(i)];
+                if i == task.dest {
+                    continue;
+                }
+                let nxt = next[i];
+                if nxt == usize::MAX {
+                    // disconnected from the destination: carries no traffic
+                    continue;
+                }
+                let slot = out_slot(&new_net.graph, i, nxt)
+                    .expect("shortest-path successor is a neighbor");
+                phi.result[s][i][slot] = 1.0;
+            }
+        }
+        phi
+    }
+
     /// Largest pairwise entry difference against another strategy —
     /// convergence metric for fixed-point comparisons.
     pub fn max_abs_diff(&self, other: &Strategy) -> f64 {
@@ -378,5 +421,36 @@ mod tests {
         let slot = out_slot(g, 0, 2).unwrap();
         assert_eq!(g.edge(g.out_edge_ids(0)[slot]).dst, 2);
         assert_eq!(out_slot(g, 0, 3), None); // not adjacent
+    }
+
+    #[test]
+    fn retarget_keeps_unchanged_tasks_bitwise() {
+        let old = line3();
+        let mut new = old.clone();
+        new.scale_rates(1.7); // rate shift only — no dest change
+        let phi = Strategy::local_compute_init(&old);
+        let carried = phi.retarget(&old, &new);
+        assert_eq!(carried.data, phi.data);
+        assert_eq!(carried.result, phi.result);
+        assert!(carried.is_feasible(&new));
+        assert!(carried.is_loop_free(&new));
+    }
+
+    #[test]
+    fn retarget_reroutes_moved_destinations() {
+        let old = line3();
+        let mut new = old.clone();
+        new.tasks[0].dest = 0; // was 2
+        let phi = Strategy::local_compute_init(&old);
+        let carried = phi.retarget(&old, &new);
+        // data plane untouched, result plane re-aimed at the new dest
+        assert_eq!(carried.data, phi.data);
+        assert!(carried.is_feasible(&new));
+        assert!(carried.is_loop_free(&new));
+        // the old destination forwards again; the new one terminates
+        assert!(carried.result[0][2].iter().sum::<f64>() > 0.5);
+        assert!(carried.result[0][0].iter().sum::<f64>() < 1e-12);
+        // the untouched task's plane is bitwise intact
+        assert_eq!(carried.result[1], phi.result[1]);
     }
 }

@@ -83,6 +83,10 @@ pub struct FailureRun {
     /// Iterations after the failure until the cost is within `tol_frac` of
     /// its post-failure steady state.
     pub reconverge_iters: usize,
+    /// Absolute iteration (1-based index into `costs`) at which the run
+    /// had recovered: `fail_at + reconverge_iters`. Previously implicit —
+    /// the adaptivity suite asserts recovery time directly against this.
+    pub recovery_epoch: usize,
     /// Cost immediately after adaptation (before re-optimizing).
     pub cost_after_failure: f64,
     /// Final steady-state cost on the degraded network.
@@ -147,9 +151,61 @@ pub fn run_with_failure<O: crate::algo::Optimizer>(
     Ok(FailureRun {
         costs,
         reconverge_iters,
+        recovery_epoch: fail_at + reconverge_iters,
         cost_after_failure,
         final_cost,
     })
+}
+
+/// Cost trajectories of an asynchronous run spanning task-pattern epochs.
+#[derive(Clone, Debug)]
+pub struct DynamicAsyncTrace {
+    /// One trajectory per epoch network (one entry per single-block
+    /// update).
+    pub epoch_costs: Vec<Vec<f64>>,
+    /// Final strategy on the last epoch's network.
+    pub phi: Strategy,
+}
+
+/// Asynchronous single-block updates across epoch boundaries: run
+/// `updates_per_epoch` random (node, task, plane) updates on each network
+/// of `nets` in turn, carrying the strategy over every boundary via
+/// [`Strategy::retarget`] — the asynchronous form of the paper's
+/// "adaptive to changes in task pattern" claim (Theorem 2 schedules keep
+/// converging; the shift just moves the fixed point). The epoch networks
+/// must share one graph (the dynamic engine's schedules only mutate task
+/// patterns); a carried point that saturates a queue on the new pattern
+/// falls back to the all-local strategy, mirroring [`run_with_failure`].
+pub fn run_async_dynamic(
+    nets: &[Network],
+    phi0: &Strategy,
+    updates_per_epoch: usize,
+    seed: u64,
+) -> Result<DynamicAsyncTrace> {
+    anyhow::ensure!(!nets.is_empty(), "need at least one epoch network");
+    let mut phi = phi0.clone();
+    let mut sgp = Sgp::new();
+    let mut epoch_costs = Vec::with_capacity(nets.len());
+    for (e, net) in nets.iter().enumerate() {
+        if e > 0 {
+            phi = phi.retarget(&nets[e - 1], net);
+            let carried = compute_flows(net, &phi)?.total_cost;
+            if !carried.is_finite() {
+                phi = Strategy::local_compute_init(net);
+            }
+        }
+        let mut rng = Pcg::with_stream(seed, 0xa57c + e as u64);
+        let mut costs = Vec::with_capacity(updates_per_epoch);
+        for _ in 0..updates_per_epoch {
+            let node = rng.below(net.n());
+            let task = rng.below(net.s());
+            let plane_result = rng.chance(0.5);
+            let t = sgp.update_single_node(net, &mut phi, node, task, plane_result)?;
+            costs.push(t);
+        }
+        epoch_costs.push(costs);
+    }
+    Ok(DynamicAsyncTrace { epoch_costs, phi })
 }
 
 #[cfg(test)]
@@ -208,6 +264,9 @@ mod tests {
         .unwrap();
         assert_eq!(run.costs.len(), 60);
         assert!(run.final_cost.is_finite());
+        // the recovery epoch is the absolute iteration of re-convergence
+        assert_eq!(run.recovery_epoch, 20 + run.reconverge_iters);
+        assert!(run.recovery_epoch <= 60);
         // degraded network must still be solvable and not cheaper than the
         // healthy optimum
         let healthy_opt = run.costs[19];
@@ -232,6 +291,37 @@ mod tests {
             sgp_run.reconverge_iters,
             gp_run.reconverge_iters
         );
+    }
+
+    #[test]
+    fn async_dynamic_descends_within_every_epoch() {
+        // Two epochs on the same graph: base diamond, then a 1.5× rate
+        // step (a hand-rolled Step schedule — sim must not depend on the
+        // coordinator layer).
+        let base = diamond(true);
+        let mut shifted = base.clone();
+        shifted.scale_rates(1.5);
+        let phi0 = Strategy::local_compute_init(&base);
+        let trace = run_async_dynamic(&[base.clone(), shifted.clone()], &phi0, 150, 11).unwrap();
+        assert_eq!(trace.epoch_costs.len(), 2);
+        for (e, costs) in trace.epoch_costs.iter().enumerate() {
+            assert_eq!(costs.len(), 150);
+            for w in costs.windows(2) {
+                assert!(w[1] <= w[0] + 1e-9, "epoch {e}: async cost increased");
+            }
+        }
+        // the carried point starts the shifted epoch below its all-local cost
+        let cold = compute_flows(&shifted, &Strategy::local_compute_init(&shifted))
+            .unwrap()
+            .total_cost;
+        assert!(
+            trace.epoch_costs[1][0] <= cold + 1e-9,
+            "warm-carried start {} worse than all-local {}",
+            trace.epoch_costs[1][0],
+            cold
+        );
+        assert!(trace.phi.is_loop_free(&shifted));
+        assert!(trace.phi.is_feasible(&shifted));
     }
 
     #[test]

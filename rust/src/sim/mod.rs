@@ -8,5 +8,8 @@ pub mod async_run;
 pub mod event;
 pub mod protocol;
 
-pub use async_run::{run_async, run_async_round_robin, run_with_failure, FailureRun};
+pub use async_run::{
+    run_async, run_async_dynamic, run_async_round_robin, run_with_failure, DynamicAsyncTrace,
+    FailureRun,
+};
 pub use protocol::{run_broadcast, ProtocolResult};

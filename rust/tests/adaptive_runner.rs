@@ -1,0 +1,238 @@
+//! Adaptivity regression suite (ISSUE 4 tentpole contract):
+//!
+//! * **warm ≤ cold** — after a step change in the task pattern, the
+//!   warm-started re-optimization (carrying the previous epoch's
+//!   converged strategy, the paper's §IV "adaptive to changes in task
+//!   pattern" claim) re-converges in no more iterations than the
+//!   cold-started baseline, on every epoch after the first, on at least
+//!   two scenarios (one Table-II topology, one extended-library
+//!   topology);
+//! * **zero-extra-iterations** — an epoch whose pattern did not change
+//!   costs exactly the convergence check
+//!   (`RunConfig::min_iters_to_converge`), nothing more;
+//! * **dynamic cells are deterministic** — per-epoch final costs of
+//!   dynamic sweep cells are bitwise identical across worker counts and
+//!   across `--shards 1` vs `--shards 2` (in-process shard merge *and*
+//!   real `cecflow` child processes), so the shard/merge protocol keeps
+//!   holding on the schedule axis.
+
+use std::path::Path;
+
+use cecflow::coordinator::{
+    run_sweep, run_sweep_shard, run_sweep_sharded, AdaptiveRunner, Algorithm, CellBackend,
+    PatternSchedule, RunConfig, ShardOptions, SweepReport, SweepSpec,
+};
+use cecflow::util::json::Json;
+
+/// The binary under test — cargo builds and exports it for integration
+/// tests.
+fn cecflow_bin() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_cecflow"))
+}
+
+/// One Table-II row and one extended-library row: the adaptivity claim
+/// must hold beyond the original scenario set.
+const SCENARIOS: [&str; 2] = ["abilene", "grid-torus"];
+
+#[test]
+fn warm_start_reconverges_in_at_most_the_cold_start_iterations() {
+    let cfg = RunConfig::quick();
+    let schedule = PatternSchedule::parse("step:3:1.5").unwrap();
+    for scenario in SCENARIOS {
+        let warm = AdaptiveRunner::warm(cfg)
+            .run_scenario(scenario, 1, 1.0, schedule)
+            .expect("warm dynamic run");
+        let cold = AdaptiveRunner::cold(cfg)
+            .run_scenario(scenario, 1, 1.0, schedule)
+            .expect("cold dynamic run");
+        assert_eq!(warm.epochs.len(), 3);
+        assert_eq!(cold.epochs.len(), 3);
+        // epoch 0 has no history: both modes start all-local and coincide
+        assert_eq!(
+            warm.epochs[0].final_cost.to_bits(),
+            cold.epochs[0].final_cost.to_bits(),
+            "{scenario}: epoch 0 must be mode-independent"
+        );
+        for (w, c) in warm.epochs.iter().zip(&cold.epochs).skip(1) {
+            assert!(
+                w.iterations <= c.iterations,
+                "{scenario} epoch {}: warm start took {} iterations, cold start {} — \
+                 the adaptivity claim is violated",
+                w.epoch,
+                w.iterations,
+                c.iterations
+            );
+            // both must land on (approximately) the same optimum, else the
+            // iteration comparison is apples to oranges
+            assert!(
+                (w.final_cost - c.final_cost).abs() <= 0.01 * c.final_cost.abs(),
+                "{scenario} epoch {}: warm settled at {} but cold at {}",
+                w.epoch,
+                w.final_cost,
+                c.final_cost
+            );
+            assert!(
+                !w.warm_fallback,
+                "{scenario} epoch {}: a 1.5× step must not saturate",
+                w.epoch
+            );
+        }
+        assert!(
+            warm.reconvergence_iterations() <= cold.reconvergence_iterations(),
+            "{scenario}: warm re-convergence budget {} exceeds cold {}",
+            warm.reconvergence_iterations(),
+            cold.reconvergence_iterations()
+        );
+        // a warm start begins at the carried (near-optimal) point: its
+        // transient regret after the shift can't exceed the cold start's,
+        // which pays the full all-local-to-optimum descent again
+        for (w, c) in warm.epochs.iter().zip(&cold.epochs).skip(1) {
+            assert!(
+                w.transient_regret <= c.transient_regret + 1e-9,
+                "{scenario} epoch {}: warm regret {} exceeds cold regret {}",
+                w.epoch,
+                w.transient_regret,
+                c.transient_regret
+            );
+        }
+    }
+}
+
+#[test]
+fn unchanged_epoch_costs_exactly_the_convergence_check() {
+    // Under `step:3`, epochs 1 and 2 run the *same* shifted pattern: a
+    // warm-started epoch 2 begins at its own fixed point, so the only
+    // iterations it may spend are the ones the convergence window needs
+    // to attest a steady state.
+    let cfg = RunConfig::quick();
+    let schedule = PatternSchedule::parse("step:3:1.5").unwrap();
+    for scenario in SCENARIOS {
+        let warm = AdaptiveRunner::warm(cfg)
+            .run_scenario(scenario, 1, 1.0, schedule)
+            .expect("warm dynamic run");
+        let unchanged = &warm.epochs[2];
+        assert_eq!(
+            unchanged.iterations,
+            cfg.min_iters_to_converge(),
+            "{scenario}: a no-op epoch must cost exactly the convergence check \
+             ({} iterations), not {}",
+            cfg.min_iters_to_converge(),
+            unchanged.iterations
+        );
+        // starting at the fixed point: no transient to pay down
+        assert!(
+            unchanged.transient_regret <= 1e-9 * unchanged.final_cost.abs(),
+            "{scenario}: no-op epoch paid transient regret {}",
+            unchanged.transient_regret
+        );
+        assert_eq!(unchanged.iters_to_1pct, 1, "{scenario}: already within 1% at iteration 1");
+        // and it settles where epoch 1 settled (same pattern, same point)
+        let prev = &warm.epochs[1];
+        assert!(
+            (unchanged.final_cost - prev.final_cost).abs() <= 1e-6 * prev.final_cost.abs(),
+            "{scenario}: no-op epoch drifted from {} to {}",
+            prev.final_cost,
+            unchanged.final_cost
+        );
+    }
+}
+
+/// A mixed static/dynamic grid over both planes of the determinism
+/// contract: 2 scenarios × 2 seeds × {static, step} = 8 cells, 3 epochs
+/// per dynamic cell.
+fn dynamic_spec() -> SweepSpec {
+    SweepSpec {
+        scenarios: vec!["abilene".into(), "grid-torus".into()],
+        seeds: vec![1, 2],
+        algorithms: vec![Algorithm::Sgp],
+        backends: vec![CellBackend::Sparse],
+        schedules: vec![
+            PatternSchedule::static_(),
+            PatternSchedule::parse("step:3:1.5").unwrap(),
+        ],
+        rate_scale: 1.0,
+        run: RunConfig::quick(),
+    }
+}
+
+#[test]
+fn dynamic_cells_are_worker_count_independent() {
+    let spec = dynamic_spec();
+    let one = run_sweep(&spec, 1).expect("1-worker sweep");
+    let four = run_sweep(&spec, 4).expect("4-worker sweep");
+    assert_eq!(one.cells.len(), 8);
+    // the fingerprint covers per-epoch cost bits — but compare the epochs
+    // explicitly too, so a fingerprint regression can't mask a drift
+    assert_eq!(one.fingerprint(), four.fingerprint());
+    for (a, b) in one.cells.iter().zip(&four.cells) {
+        assert_eq!(
+            a.epoch_costs.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.epoch_costs.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "per-epoch costs drifted across worker counts for {} seed {} schedule {}",
+            a.cell.scenario,
+            a.cell.seed,
+            a.cell.schedule.label()
+        );
+        if !a.cell.schedule.is_static() {
+            assert_eq!(a.epoch_costs.len(), 3, "dynamic cell must carry 3 epoch costs");
+            assert_eq!(
+                a.final_cost.to_bits(),
+                a.epoch_costs[2].to_bits(),
+                "a dynamic cell reports its last epoch's converged cost"
+            );
+        } else {
+            assert!(a.epoch_costs.is_empty(), "static cell grew epoch costs");
+        }
+    }
+}
+
+#[test]
+fn dynamic_cells_survive_in_process_shard_merge() {
+    let spec = dynamic_spec();
+    let whole = run_sweep(&spec, 2).expect("single-process sweep");
+    for count in [1usize, 2] {
+        let parts: Vec<SweepReport> = (0..count)
+            .map(|k| run_sweep_shard(&spec, k, count, 2).expect("shard run"))
+            .collect();
+        // round-trip through the JSON artifact first — per-epoch cost
+        // bits must survive serialization, not just the in-memory path
+        let parts: Vec<SweepReport> = parts
+            .iter()
+            .map(|p| {
+                SweepReport::from_json(&Json::parse(&p.to_json().pretty()).unwrap())
+                    .expect("shard report round-trip")
+            })
+            .collect();
+        let merged = SweepReport::merge(parts).expect("merge");
+        assert_eq!(
+            merged.fingerprint(),
+            whole.fingerprint(),
+            "{count} shard(s) drifted from the single-process dynamic sweep"
+        );
+    }
+}
+
+#[test]
+fn dynamic_cells_survive_process_sharding() {
+    // --shards 1 vs --shards 2 through real cecflow child processes: the
+    // JSON-lines protocol must carry dynamic cells bit-exactly.
+    let spec = dynamic_spec();
+    let mut fingerprints = Vec::new();
+    for shards in [1usize, 2] {
+        let report = run_sweep_sharded(
+            &spec,
+            cecflow_bin(),
+            &ShardOptions {
+                shards,
+                workers: 2,
+                timeout: None,
+            },
+        )
+        .expect("sharded dynamic sweep");
+        fingerprints.push(report.fingerprint());
+    }
+    assert_eq!(
+        fingerprints[0], fingerprints[1],
+        "--shards 1 and --shards 2 disagree on dynamic cells"
+    );
+}

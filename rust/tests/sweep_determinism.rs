@@ -3,7 +3,9 @@
 //! per-cell results (costs compared bit-for-bit; only wall-clock timing
 //! may differ). This is the contract that makes sweep numbers citable.
 
-use cecflow::coordinator::{run_sweep, Algorithm, CellBackend, RunConfig, SweepSpec};
+use cecflow::coordinator::{
+    run_sweep, Algorithm, CellBackend, PatternSchedule, RunConfig, SweepSpec,
+};
 
 fn small_spec() -> SweepSpec {
     SweepSpec {
@@ -11,6 +13,7 @@ fn small_spec() -> SweepSpec {
         seeds: vec![1, 2],
         algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
         backends: vec![CellBackend::Sparse],
+        schedules: vec![PatternSchedule::static_()],
         rate_scale: 1.0,
         run: RunConfig::quick(),
     }

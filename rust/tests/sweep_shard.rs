@@ -18,7 +18,7 @@ use std::process::Command;
 use cecflow::algo::Sgp;
 use cecflow::coordinator::{
     build_scenario_network, optimize_accelerated, run_sweep, run_sweep_shard, run_sweep_sharded,
-    Algorithm, CellBackend, RunConfig, ShardOptions, SweepReport, SweepSpec,
+    Algorithm, CellBackend, PatternSchedule, RunConfig, ShardOptions, SweepReport, SweepSpec,
 };
 use cecflow::model::strategy::Strategy;
 use cecflow::runtime::NativeBackend;
@@ -38,6 +38,7 @@ fn spec() -> SweepSpec {
         seeds: vec![1, 2],
         algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
         backends: vec![CellBackend::Sparse, CellBackend::Native],
+        schedules: vec![PatternSchedule::static_()],
         rate_scale: 1.0,
         run: RunConfig::quick(),
     }
@@ -100,6 +101,7 @@ fn native_routed_sweep_cell_is_bitwise_the_direct_dense_run() {
         seeds: vec![3],
         algorithms: vec![Algorithm::Sgp],
         backends: vec![CellBackend::Native],
+        schedules: vec![PatternSchedule::static_()],
         rate_scale: 1.0,
         run: RunConfig::quick(),
     };
@@ -199,6 +201,7 @@ fn failing_cell_in_a_shard_names_the_cell() {
         seeds: vec![1],
         algorithms: vec![Algorithm::Lpr],
         backends: vec![CellBackend::Sparse],
+        schedules: vec![PatternSchedule::static_()],
         rate_scale: 1.0,
         run: RunConfig::quick(),
     };
@@ -215,4 +218,40 @@ fn failing_cell_in_a_shard_names_the_cell() {
     let msg = format!("{err:#}");
     assert!(msg.contains("no-such-scenario"), "{msg}");
     assert!(msg.contains("shard"), "{msg}");
+}
+
+#[test]
+fn shards_of_different_schedule_grids_refuse_to_merge() {
+    // Two sweeps identical in every axis *except* the schedule — the
+    // grids have the same size and index range, so index coverage alone
+    // would interleave them silently. The grid hash must cover the
+    // schedule axis (ISSUE 4) and make this merge a loud error.
+    let base = SweepSpec {
+        scenarios: vec!["abilene".into()],
+        seeds: vec![1, 2],
+        algorithms: vec![Algorithm::Sgp],
+        backends: vec![CellBackend::Sparse],
+        schedules: vec![PatternSchedule::parse("step:2:1.5").unwrap()],
+        rate_scale: 1.0,
+        run: RunConfig::quick(),
+    };
+    let mut other = base.clone();
+    other.schedules = vec![PatternSchedule::parse("step:2:2").unwrap()];
+    assert_eq!(base.cells().len(), other.cells().len());
+
+    let a = run_sweep_shard(&base, 0, 2, 1).expect("shard 0 of the step:2:1.5 grid");
+    let b = run_sweep_shard(&other, 1, 2, 1).expect("shard 1 of the step:2:2 grid");
+    // the artifact path must refuse too, not just the in-memory structs
+    let reload = |r: &SweepReport| {
+        SweepReport::from_json(&Json::parse(&r.to_json().pretty()).unwrap()).unwrap()
+    };
+    let err = SweepReport::merge(vec![reload(&a), reload(&b)])
+        .expect_err("mixed-schedule shard reports must not merge");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("different sweep specs"), "{msg}");
+
+    // sanity: shards of the *same* schedule grid still merge cleanly
+    let b_same = run_sweep_shard(&base, 1, 2, 1).expect("shard 1 of the step:2:1.5 grid");
+    SweepReport::merge(vec![reload(&a), reload(&b_same)])
+        .expect("same-grid shards must keep merging");
 }
