@@ -149,7 +149,7 @@ fn main() -> anyhow::Result<()> {
         &ShardOptions {
             shards: 2,
             workers,
-            timeout: None,
+            ..Default::default()
         },
     )?;
     if sharded.fingerprint() != report.fingerprint() {

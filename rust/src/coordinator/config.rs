@@ -135,6 +135,70 @@ impl Schedule {
     }
 }
 
+// ---------------------------------------------------------------------------
+// CLI list parsers (the sweep grid axes)
+// ---------------------------------------------------------------------------
+
+/// Largest seed accepted from the CLI: seeds are reported in JSON, whose
+/// numbers are f64, so anything above 2^53 would silently collide with a
+/// neighbor in `sweep.json`.
+pub const MAX_SEED: u64 = 1 << 53;
+
+/// Parse a comma-separated scenario list (`"abilene,connected-er"`).
+pub fn parse_scenarios(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+/// Parse a comma-separated seed list (`"1,2,3"`) or an inclusive range
+/// (`"1..8"`). Seeds above 2^53 are rejected (not representable in the
+/// JSON report).
+pub fn parse_seeds(s: &str) -> Result<Vec<u64>> {
+    let check = |seed: u64| -> Result<u64> {
+        anyhow::ensure!(
+            seed <= MAX_SEED,
+            "seed {seed} exceeds 2^53 and would lose precision in the JSON report"
+        );
+        Ok(seed)
+    };
+    if let Some((lo, hi)) = s.split_once("..") {
+        let lo: u64 = lo.trim().parse().context("seed range start")?;
+        let hi: u64 = check(hi.trim().parse().context("seed range end")?)?;
+        anyhow::ensure!(lo <= hi, "empty seed range {lo}..{hi}");
+        return Ok((lo..=hi).collect());
+    }
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            t.parse::<u64>()
+                .with_context(|| format!("bad seed '{t}'"))
+                .and_then(check)
+        })
+        .collect()
+}
+
+/// Parse a comma-separated algorithm list (`"sgp,gp,lpr"`).
+pub fn parse_algorithms(s: &str) -> Result<Vec<Algorithm>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| Algorithm::parse(t).with_context(|| format!("unknown algorithm '{t}'")))
+        .collect()
+}
+
+/// Parse a comma-separated backend list (`"sparse,native"`).
+pub fn parse_backends(s: &str) -> Result<Vec<CellBackend>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| CellBackend::parse(t).with_context(|| format!("unknown backend '{t}'")))
+        .collect()
+}
+
 /// A full experiment configuration.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -269,6 +333,27 @@ mod tests {
         for a in Algorithm::all() {
             assert_eq!(Algorithm::parse(a.name()), Some(*a));
         }
+    }
+
+    #[test]
+    fn list_parsers() {
+        assert_eq!(parse_scenarios("a, b,"), vec!["a", "b"]);
+        assert_eq!(parse_seeds("1, 2,3").unwrap(), vec![1, 2, 3]);
+        assert_eq!(parse_seeds("4..6").unwrap(), vec![4, 5, 6]);
+        assert!(parse_seeds("9..2").is_err());
+        assert!(parse_seeds("x").is_err());
+        // seeds past 2^53 would alias in the f64-backed JSON report
+        assert!(parse_seeds("9007199254740993").is_err());
+        assert_eq!(
+            parse_algorithms("sgp,lpr").unwrap(),
+            vec![Algorithm::Sgp, Algorithm::Lpr]
+        );
+        assert!(parse_algorithms("sgp,zzz").is_err());
+        assert_eq!(
+            parse_backends("sparse, native").unwrap(),
+            vec![CellBackend::Sparse, CellBackend::Native]
+        );
+        assert!(parse_backends("sparse,zzz").is_err());
     }
 
     #[test]

@@ -38,6 +38,8 @@ use crate::model::strategy::Strategy;
 use crate::util::json::Json;
 use crate::util::rng::Pcg;
 
+use super::exec::grid::{Grid, GridCell, GridHasher};
+use super::exec::pool;
 use super::runner::RunResult;
 use super::{build_scenario_network, metrics, runner, Algorithm, CellBackend, RunConfig};
 
@@ -618,6 +620,80 @@ fn optimize_epoch_pjrt(_net: &Network, _phi0: &Strategy, _cfg: &RunConfig) -> Re
     )
 }
 
+/// One cell of the `cecflow dynamic` grid: a start mode (warm or cold)
+/// of the same `(scenario, seed, schedule)` instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DynamicCell {
+    /// Warm-start this trace from the previous epoch's strategy.
+    pub warm: bool,
+}
+
+impl GridCell for DynamicCell {
+    fn describe(&self, index: usize) -> String {
+        format!(
+            "dynamic cell {index} ({} start)",
+            if self.warm { "warm" } else { "cold" }
+        )
+    }
+
+    fn write_identity(&self, h: &mut GridHasher) {
+        h.eat(&[self.warm as u8]);
+    }
+}
+
+/// The `cecflow dynamic` grid *definition*: one [`DynamicCell`] per
+/// requested start mode of a single `(scenario, seed, schedule)`
+/// instance, routed through the execution engine's worker pool
+/// ([`super::exec::pool`]) so the warm and cold traces price
+/// concurrently. This is the same engine the sweep runs on — the dynamic
+/// subcommand is just a two-cell grid.
+#[derive(Clone, Debug)]
+pub struct DynamicSpec {
+    pub scenario: String,
+    pub seed: u64,
+    pub rate_scale: f64,
+    pub algorithm: Algorithm,
+    pub backend: CellBackend,
+    pub schedule: PatternSchedule,
+    pub run: RunConfig,
+    /// Start modes to trace, in output order (`true` = warm).
+    pub modes: Vec<bool>,
+}
+
+impl DynamicSpec {
+    /// The mode cells wrapped for the execution engine.
+    pub fn grid(&self) -> Grid<DynamicCell> {
+        Grid::new(self.modes.iter().map(|&warm| DynamicCell { warm }).collect())
+    }
+
+    /// Run every mode cell on up to `workers` pool threads and return the
+    /// traces in mode order. Each cell is an independent
+    /// [`AdaptiveRunner::run_scenario`] — results are bit-identical to
+    /// running the modes sequentially.
+    pub fn run(&self, workers: usize) -> Result<Vec<DynamicTrace>> {
+        let grid = self.grid();
+        anyhow::ensure!(
+            !grid.is_empty(),
+            "dynamic run needs at least one start mode (warm or cold)"
+        );
+        let cells = grid.indexed();
+        pool::run_cells(
+            &cells,
+            workers,
+            |_, cell| {
+                let runner = AdaptiveRunner {
+                    algorithm: self.algorithm,
+                    backend: self.backend,
+                    warm: cell.warm,
+                    run: self.run,
+                };
+                runner.run_scenario(&self.scenario, self.seed, self.rate_scale, self.schedule)
+            },
+            None,
+        )
+    }
+}
+
 /// Parse a comma-separated schedule list (`"static,step:3:1.5"`).
 pub fn parse_schedules(s: &str) -> Result<Vec<PatternSchedule>> {
     s.split(',')
@@ -812,6 +888,43 @@ mod tests {
         // and it survives a parse round-trip
         let back = Json::parse(&doc.pretty()).unwrap();
         assert_eq!(back.get("epochs").as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn dynamic_spec_routes_modes_through_the_pool_bit_identically() {
+        let cfg = RunConfig::quick();
+        let schedule = PatternSchedule::parse("step:2:1.5").unwrap();
+        let spec = DynamicSpec {
+            scenario: "abilene".into(),
+            seed: 1,
+            rate_scale: 1.0,
+            algorithm: Algorithm::Sgp,
+            backend: CellBackend::Sparse,
+            schedule,
+            run: cfg,
+            modes: vec![true, false],
+        };
+        let traces = spec.run(2).unwrap();
+        assert_eq!(traces.len(), 2);
+        assert!(traces[0].warm && !traces[1].warm, "mode order must hold");
+        let direct_warm = AdaptiveRunner::warm(cfg)
+            .run_scenario("abilene", 1, 1.0, schedule)
+            .unwrap();
+        let direct_cold = AdaptiveRunner::cold(cfg)
+            .run_scenario("abilene", 1, 1.0, schedule)
+            .unwrap();
+        for (engine, direct) in [(&traces[0], &direct_warm), (&traces[1], &direct_cold)] {
+            let bits = |t: &DynamicTrace| -> Vec<u64> {
+                t.epochs.iter().map(|e| e.final_cost.to_bits()).collect()
+            };
+            assert_eq!(bits(engine), bits(direct), "engine-routed trace drifted");
+        }
+        // an empty mode list is a loud error, not a silent no-op
+        let empty = DynamicSpec {
+            modes: vec![],
+            ..spec
+        };
+        assert!(empty.run(1).is_err());
     }
 
     #[test]

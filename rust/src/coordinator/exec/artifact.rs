@@ -1,0 +1,286 @@
+//! Artifact layer of the execution engine: shard reports as first-class
+//! JSON files — serialization, loading, and index- and hash-verified
+//! merge.
+//!
+//! A shard that ran with `--shard i/n --out f.json` leaves behind an
+//! artifact: its items (each tagged with a global grid index), the worker
+//! budget it used, and the [`super::grid::Grid::identity_hash`] of the grid it was
+//! cut from. Merging artifacts back into the full-grid report enforces
+//! two invariants:
+//!
+//! * **hash-verified** — every part with a known (nonzero) grid hash must
+//!   carry the *same* hash; shards of different grids with same-sized
+//!   index ranges would otherwise interleave silently.
+//! * **index-verified** — the merged indices must form exactly
+//!   `0..total`: a duplicate global index (an overlapping shard split) or
+//!   a gap (a missing shard) is a contextful error naming the colliding
+//!   or missing index. Duplicates are rejected at *load* time too — a
+//!   single corrupt artifact must not survive to a merge that happens to
+//!   cover the grid.
+//!
+//! Exact-bits helpers ([`f64_bits_hex`] / [`parse_f64_bits_hex`]) live
+//! here because every artifact and protocol writer needs them: JSON
+//! numbers cannot carry `±∞` and decimal round-trips are not part of the
+//! determinism contract, so costs travel as hex-encoded IEEE-754 bits.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// An artifact item: one per-cell result that knows its global grid
+/// index, can name itself in errors, and round-trips through JSON.
+pub trait ArtifactItem: Sized {
+    /// Global grid index of the cell this item came from.
+    fn index(&self) -> usize;
+    /// Human-readable identity for merge errors.
+    fn describe(&self) -> String;
+    /// Machine-readable record (must include enough to re-[`from_json`]).
+    ///
+    /// [`from_json`]: ArtifactItem::from_json
+    fn to_json(&self) -> Json;
+    /// Parse a record produced by [`ArtifactItem::to_json`].
+    fn from_json(doc: &Json) -> Result<Self>;
+}
+
+/// A loaded shard artifact (or a full report): items sorted by global
+/// index plus the worker/grid-identity metadata.
+#[derive(Clone, Debug)]
+pub struct Artifact<T> {
+    pub items: Vec<T>,
+    /// Worker threads used (metadata only, excluded from fingerprints).
+    pub workers: usize,
+    /// Identity of the generating grid; `0` when unknown (hand-built
+    /// artifacts), in which case merge skips the hash check for this part.
+    pub grid_hash: u64,
+}
+
+impl<T: ArtifactItem> Artifact<T> {
+    /// Serialize: `{workers, grid_hash, cells: […]}` — the shape every
+    /// report artifact shares (callers may add derived sections on top).
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.set("workers", Json::Num(self.workers as f64))
+            // hex string: u64 hashes exceed f64's exact-integer range
+            .set("grid_hash", Json::Str(u64_hex(self.grid_hash)))
+            .set(
+                "cells",
+                Json::Arr(self.items.iter().map(ArtifactItem::to_json).collect()),
+            );
+        doc
+    }
+
+    /// Parse an artifact written by [`Artifact::to_json`]. Items are
+    /// re-sorted by global index; a duplicate index inside one artifact
+    /// is rejected here, naming the colliding index — first-write-wins
+    /// loading could otherwise mask an overlapping shard split.
+    pub fn from_json(doc: &Json) -> Result<Artifact<T>> {
+        let cells_json = doc
+            .get("cells")
+            .as_arr()
+            .context("report artifact missing cells array")?;
+        let mut items = cells_json
+            .iter()
+            .enumerate()
+            .map(|(k, c)| T::from_json(c).with_context(|| format!("cell record {k}")))
+            .collect::<Result<Vec<_>>>()?;
+        items.sort_by_key(ArtifactItem::index);
+        for pair in items.windows(2) {
+            if pair[0].index() == pair[1].index() {
+                bail!(
+                    "artifact contains global cell index {} twice ({}) — overlapping or \
+                     corrupt shard output",
+                    pair[0].index(),
+                    pair[0].describe()
+                );
+            }
+        }
+        let grid_hash = match doc.get("grid_hash").as_str() {
+            Some(hex) => parse_u64_hex(hex).with_context(|| format!("bad grid_hash '{hex}'"))?,
+            None => 0,
+        };
+        Ok(Artifact {
+            items,
+            workers: doc.get("workers").as_usize().unwrap_or(0),
+            grid_hash,
+        })
+    }
+
+    /// Merge shard artifacts back into one full-grid artifact: every part
+    /// must carry the same nonzero grid hash (or none), and the combined
+    /// indices must form exactly `0..total` — duplicates and gaps are
+    /// contextful errors naming the index.
+    pub fn merge(parts: Vec<Artifact<T>>) -> Result<Artifact<T>> {
+        let mut grid_hash = 0u64;
+        for p in &parts {
+            if p.grid_hash == 0 {
+                continue; // hand-built artifact: no identity to check
+            }
+            if grid_hash == 0 {
+                grid_hash = p.grid_hash;
+            } else if p.grid_hash != grid_hash {
+                bail!(
+                    "shard merge: reports come from different sweep specs \
+                     (grid hash {} vs {})",
+                    u64_hex(grid_hash),
+                    u64_hex(p.grid_hash)
+                );
+            }
+        }
+        let workers = parts.iter().map(|p| p.workers).sum::<usize>().max(1);
+        let mut items: Vec<T> = parts.into_iter().flat_map(|p| p.items).collect();
+        anyhow::ensure!(!items.is_empty(), "merging empty shard reports");
+        items.sort_by_key(ArtifactItem::index);
+        for (k, item) in items.iter().enumerate() {
+            if item.index() != k {
+                if item.index() < k {
+                    bail!(
+                        "shard merge: duplicate result for global cell index {} ({})",
+                        item.index(),
+                        item.describe()
+                    );
+                }
+                bail!(
+                    "shard merge: missing cell index {k} — the shard reports do not cover \
+                     the whole grid"
+                );
+            }
+        }
+        Ok(Artifact {
+            items,
+            workers,
+            grid_hash,
+        })
+    }
+}
+
+/// Exact-bits hex encoding of an f64 (16 lowercase hex digits).
+pub fn f64_bits_hex(x: f64) -> String {
+    u64_hex(x.to_bits())
+}
+
+/// Decode [`f64_bits_hex`].
+pub fn parse_f64_bits_hex(hex: &str) -> Result<f64> {
+    Ok(f64::from_bits(parse_u64_hex(hex)?))
+}
+
+/// 16-digit lowercase hex encoding of a u64 (grid hashes, cost bits).
+pub fn u64_hex(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+/// Decode [`u64_hex`].
+pub fn parse_u64_hex(hex: &str) -> Result<u64> {
+    u64::from_str_radix(hex, 16).with_context(|| format!("bad hex u64 '{hex}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Clone, Debug, PartialEq)]
+    struct Item {
+        index: usize,
+        cost: f64,
+    }
+
+    impl ArtifactItem for Item {
+        fn index(&self) -> usize {
+            self.index
+        }
+        fn describe(&self) -> String {
+            format!("item {}", self.index)
+        }
+        fn to_json(&self) -> Json {
+            let mut o = Json::obj();
+            o.set("index", Json::Num(self.index as f64))
+                .set("cost_bits", Json::Str(f64_bits_hex(self.cost)));
+            o
+        }
+        fn from_json(doc: &Json) -> Result<Item> {
+            Ok(Item {
+                index: doc.get("index").as_usize().context("missing index")?,
+                cost: parse_f64_bits_hex(
+                    doc.get("cost_bits").as_str().context("missing cost_bits")?,
+                )?,
+            })
+        }
+    }
+
+    fn art(indices: &[usize]) -> Artifact<Item> {
+        Artifact {
+            items: indices
+                .iter()
+                .map(|&i| Item {
+                    index: i,
+                    cost: i as f64 + 0.5,
+                })
+                .collect(),
+            workers: 1,
+            grid_hash: 0xfeed,
+        }
+    }
+
+    #[test]
+    fn bits_roundtrip_including_infinity() {
+        for x in [1.5, f64::INFINITY, f64::NEG_INFINITY, -0.0, 123.456_789] {
+            assert_eq!(
+                parse_f64_bits_hex(&f64_bits_hex(x)).unwrap().to_bits(),
+                x.to_bits()
+            );
+        }
+        assert!(parse_f64_bits_hex("zz").is_err());
+    }
+
+    #[test]
+    fn artifact_json_roundtrips_and_sorts() {
+        let a = art(&[2, 0, 1]);
+        let back = Artifact::<Item>::from_json(&Json::parse(&a.to_json().pretty()).unwrap())
+            .unwrap();
+        assert_eq!(
+            back.items.iter().map(|i| i.index).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        assert_eq!(back.grid_hash, 0xfeed);
+        assert_eq!(back.workers, 1);
+    }
+
+    #[test]
+    fn loading_rejects_duplicate_indices_naming_the_index() {
+        let a = art(&[0, 1, 1]);
+        let err = Artifact::<Item>::from_json(&Json::parse(&a.to_json().pretty()).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("index 1 twice"), "{err}");
+    }
+
+    #[test]
+    fn merge_verifies_coverage_and_hashes() {
+        // clean merge
+        let merged = Artifact::merge(vec![art(&[0, 2]), art(&[1, 3])]).unwrap();
+        assert_eq!(merged.items.len(), 4);
+        assert_eq!(merged.workers, 2);
+        // duplicate across parts names the colliding index
+        let err = Artifact::merge(vec![art(&[0, 1]), art(&[1, 2])])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate"), "{err}");
+        assert!(err.contains("index 1"), "{err}");
+        // gap
+        let err = Artifact::merge(vec![art(&[0]), art(&[2])])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("missing cell index 1"), "{err}");
+        // different grids refuse
+        let mut other = art(&[1]);
+        other.grid_hash = 0xbeef;
+        let err = Artifact::merge(vec![art(&[0]), other])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("different sweep specs"), "{err}");
+        // unknown-hash parts merge with known-hash ones
+        let mut unknown = art(&[1]);
+        unknown.grid_hash = 0;
+        let merged = Artifact::merge(vec![art(&[0]), unknown]).unwrap();
+        assert_eq!(merged.grid_hash, 0xfeed);
+    }
+}

@@ -1,0 +1,225 @@
+//! Grid layer of the execution engine: a cell grid generic over the cell
+//! payload, owning index assignment, identity hashing and shard striding.
+//!
+//! A [`Grid`] is an ordered list of cells; the *position* of a cell in
+//! that list is its **global index**, the one identity that survives
+//! worker pools, child processes and report artifacts. Everything above
+//! this layer (the pool, the shard protocol, artifact merge) speaks in
+//! global indices; everything below it (the cell payload) is opaque to
+//! the engine except for the two hooks of [`GridCell`]:
+//!
+//! * [`GridCell::describe`] — the human-readable identity used in every
+//!   error message ("which cell failed?");
+//! * [`GridCell::write_identity`] — the byte-stream identity folded into
+//!   the [`Grid::identity_hash`] that artifact merge uses to refuse shard reports
+//!   from different grids ([`super::artifact`]).
+
+use anyhow::Context;
+
+/// A cell payload the execution engine can schedule, name and hash.
+pub trait GridCell: Clone + Send + Sync {
+    /// Human-readable identity of the cell at `index`, used in error
+    /// contexts ("sweep cell 3 (abilene seed 2 algo sgp …)").
+    fn describe(&self, index: usize) -> String;
+
+    /// Feed the cell's result-relevant identity into the grid hash. Two
+    /// cells that can produce different results must write different
+    /// byte streams.
+    fn write_identity(&self, h: &mut GridHasher);
+}
+
+/// Incremental FNV-1a over byte streams — the deterministic, dependency-
+/// free identity hash behind [`Grid::identity_hash`] and the sweep's
+/// `spec_grid_hash`.
+#[derive(Clone, Debug)]
+pub struct GridHasher {
+    h: u64,
+}
+
+impl GridHasher {
+    pub fn new() -> GridHasher {
+        GridHasher {
+            h: 0xcbf2_9ce4_8422_2325,
+        }
+    }
+
+    /// Fold `bytes` into the running hash.
+    pub fn eat(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.h ^= b as u64;
+            self.h = self.h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+impl Default for GridHasher {
+    fn default() -> Self {
+        GridHasher::new()
+    }
+}
+
+/// An indexed cell grid: the canonical cell order plus the operations the
+/// engine layers need (striding, subsetting, identity hashing).
+#[derive(Clone, Debug)]
+pub struct Grid<C: GridCell> {
+    cells: Vec<C>,
+}
+
+impl<C: GridCell> Grid<C> {
+    /// Wrap a cell list; the list order becomes the global index order.
+    pub fn new(cells: Vec<C>) -> Grid<C> {
+        Grid { cells }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    pub fn cells(&self) -> &[C] {
+        &self.cells
+    }
+
+    pub fn get(&self, index: usize) -> Option<&C> {
+        self.cells.get(index)
+    }
+
+    /// Human-readable identity of cell `index` (see
+    /// [`GridCell::describe`]); a placeholder for out-of-range indices so
+    /// error paths never panic.
+    pub fn describe(&self, index: usize) -> String {
+        match self.cells.get(index) {
+            Some(c) => c.describe(index),
+            None => format!("cell {index} (outside this {}-cell grid)", self.len()),
+        }
+    }
+
+    /// Every cell tagged with its global index — the work list the pool
+    /// layer consumes.
+    pub fn indexed(&self) -> Vec<(usize, C)> {
+        self.cells.iter().cloned().enumerate().collect()
+    }
+
+    /// The indexed cells owned by shard `shard` (0-based) of `count`: the
+    /// strided subset of [`shard_indices`].
+    pub fn shard(&self, shard: usize, count: usize) -> Vec<(usize, C)> {
+        shard_indices(self.len(), shard, count)
+            .into_iter()
+            .map(|i| (i, self.cells[i].clone()))
+            .collect()
+    }
+
+    /// An explicit indexed subset — the work list of a steal-worker
+    /// re-running another shard's unfinished cells. Out-of-range indices
+    /// are an error (the caller's cell list came from a different grid).
+    pub fn subset(&self, indices: &[usize]) -> anyhow::Result<Vec<(usize, C)>> {
+        indices
+            .iter()
+            .map(|&i| {
+                let cell = self.cells.get(i).cloned().with_context(|| {
+                    format!("cell index {i} outside this {}-cell grid", self.len())
+                })?;
+                Ok((i, cell))
+            })
+            .collect()
+    }
+
+    /// Deterministic identity of the grid: FNV-1a over every cell's
+    /// [`GridCell::write_identity`] stream, then over whatever extra
+    /// result-relevant spec bytes `tail` appends (stopping rule, rate
+    /// scale, …). Stamped into report artifacts so merge can refuse
+    /// shards of different grids.
+    pub fn identity_hash(&self, tail: impl FnOnce(&mut GridHasher)) -> u64 {
+        let mut h = GridHasher::new();
+        for cell in &self.cells {
+            cell.write_identity(&mut h);
+        }
+        tail(&mut h);
+        h.finish()
+    }
+}
+
+/// Global cell indices owned by shard `shard` (0-based) of `count`: the
+/// strided set `{shard, shard+count, shard+2·count, …}`. Striding
+/// balances expensive scenarios (grid order keeps one scenario's cells
+/// adjacent) across shards.
+pub fn shard_indices(total: usize, shard: usize, count: usize) -> Vec<usize> {
+    (shard..total).step_by(count.max(1)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Clone, Debug, PartialEq)]
+    struct TestCell(u64);
+
+    impl GridCell for TestCell {
+        fn describe(&self, index: usize) -> String {
+            format!("test cell {index} (payload {})", self.0)
+        }
+        fn write_identity(&self, h: &mut GridHasher) {
+            h.eat(&self.0.to_le_bytes());
+        }
+    }
+
+    fn grid(n: u64) -> Grid<TestCell> {
+        Grid::new((0..n).map(TestCell).collect())
+    }
+
+    #[test]
+    fn shard_indices_partition_the_grid() {
+        for count in [1usize, 2, 3, 4, 7] {
+            let mut seen = vec![false; 10];
+            for shard in 0..count {
+                for i in shard_indices(10, shard, count) {
+                    assert!(!seen[i], "index {i} assigned twice (count {count})");
+                    seen[i] = true;
+                    assert_eq!(i % count, shard, "striding violated");
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "indices dropped (count {count})");
+        }
+    }
+
+    #[test]
+    fn grid_shard_and_subset_agree_with_the_index_math() {
+        let g = grid(10);
+        let mine = g.shard(1, 3);
+        assert_eq!(
+            mine.iter().map(|(i, _)| *i).collect::<Vec<_>>(),
+            vec![1, 4, 7]
+        );
+        for (i, c) in &mine {
+            assert_eq!(c.0, *i as u64, "payload drifted from its index");
+        }
+        let sub = g.subset(&[7, 2]).unwrap();
+        assert_eq!(sub[0], (7, TestCell(7)));
+        assert_eq!(sub[1], (2, TestCell(2)));
+        let err = g.subset(&[10]).unwrap_err().to_string();
+        assert!(err.contains("10"), "{err}");
+    }
+
+    #[test]
+    fn hash_separates_grids_and_tails() {
+        let tail_a = |h: &mut GridHasher| h.eat(&1.0f64.to_bits().to_le_bytes());
+        let tail_b = |h: &mut GridHasher| h.eat(&2.0f64.to_bits().to_le_bytes());
+        assert_eq!(grid(4).identity_hash(tail_a), grid(4).identity_hash(tail_a));
+        assert_ne!(grid(4).identity_hash(tail_a), grid(5).identity_hash(tail_a));
+        assert_ne!(grid(4).identity_hash(tail_a), grid(4).identity_hash(tail_b));
+    }
+
+    #[test]
+    fn describe_never_panics_out_of_range() {
+        let g = grid(2);
+        assert!(g.describe(0).contains("payload 0"));
+        assert!(g.describe(9).contains("outside"));
+    }
+}

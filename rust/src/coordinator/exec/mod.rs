@@ -1,0 +1,33 @@
+//! The layered execution engine behind every grid runner (`cecflow
+//! sweep`, `cecflow dynamic`, the benches): generic machinery for running
+//! an indexed cell grid on worker threads and child processes and for
+//! reassembling the results into verified artifacts.
+//!
+//! The layers, bottom to top — each generic over the cell payload, so
+//! grid *definitions* ([`super::sweep`], [`super::dynamics`]) stay thin:
+//!
+//! * [`grid`] — the [`grid::Grid`]/[`grid::GridCell`] abstraction: index
+//!   assignment, human naming, identity hashing, shard striding.
+//! * [`pool`] — the panic-safe in-process worker pool
+//!   ([`pool::run_cells`]): atomic-cursor work stealing across
+//!   `std::thread` workers, first-failure cancellation.
+//! * [`shard`] — child-process execution ([`shard::run_sharded`]): the
+//!   JSON-lines stdout protocol, strided `--shard-worker i/n` children,
+//!   timeouts, and bounded shard retry + work re-stealing
+//!   (`--shard-retries`, `--steal-cells`).
+//! * [`artifact`] — shard reports as files ([`artifact::Artifact`]):
+//!   index- and hash-verified load and merge, exact-bits f64 transport.
+//!
+//! Determinism is the engine-wide contract: a cell is a pure function of
+//! its grid identity, results carry their global index, and every
+//! execution shape (worker counts, shard counts, mid-run kills with
+//! re-stealing) reassembles the same fingerprint.
+
+pub mod artifact;
+pub mod grid;
+pub mod pool;
+pub mod shard;
+
+pub use artifact::{Artifact, ArtifactItem};
+pub use grid::{Grid, GridCell, GridHasher};
+pub use shard::{ShardDriver, ShardLine, ShardOptions};

@@ -1,0 +1,202 @@
+//! Pool layer of the execution engine: the panic-safe in-process worker
+//! pool that runs a grid's indexed cells on `std::thread` workers.
+//!
+//! Workers pull cells from an atomic cursor (in-process work stealing),
+//! which keeps long cells from serializing behind a static partition, and
+//! write results into per-cell slots so the output order is the global
+//! index order regardless of which worker ran what.
+//!
+//! Failure discipline: the first failing cell raises a flag that stops
+//! workers from *claiming* further cells (a typo'd scenario name must not
+//! make the user wait out the healthy cells), and the whole run returns
+//! that cell's error with the cell named via [`GridCell::describe`]. A
+//! **panicking** cell cannot deadlock or poison the pool: the panic is
+//! caught at the cell boundary and surfaced as that cell's error (so
+//! `std::thread::scope` joins normally), and slot mutexes are read
+//! through `PoisonError::into_inner` so even a poisoned lock yields its
+//! data. Pinned by this module's injected-panic test and the sweep's
+//! determinism suites.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::grid::GridCell;
+
+/// Render a panic payload as text for the cell's error message.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run `cells` (global index + payload) on up to `workers` threads
+/// (clamped to `[1, #cells]`), calling `runner` per cell and `on_result`
+/// (from worker threads) as each cell finishes — the shard-worker
+/// streaming hook. Results come back in global-index order.
+pub fn run_cells<C, R, F>(
+    cells: &[(usize, C)],
+    workers: usize,
+    runner: F,
+    on_result: Option<&(dyn Fn(&R) + Sync)>,
+) -> Result<Vec<R>>
+where
+    C: GridCell,
+    R: Send,
+    F: Fn(usize, &C) -> Result<R> + Sync,
+{
+    anyhow::ensure!(!cells.is_empty(), "empty grid: no cells to run");
+    let workers = workers.clamp(1, cells.len());
+
+    let next = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    // one slot per cell; the Option<Result<R>> type is left to inference
+    let slots: Vec<_> = (0..cells.len()).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                if failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                if k >= cells.len() {
+                    break;
+                }
+                let (index, cell) = &cells[k];
+                let res = std::panic::catch_unwind(AssertUnwindSafe(|| runner(*index, cell)))
+                    .unwrap_or_else(|payload| {
+                        Err(anyhow::anyhow!(
+                            "cell panicked: {}",
+                            panic_message(payload.as_ref())
+                        ))
+                    });
+                match &res {
+                    Ok(r) => {
+                        if let Some(cb) = on_result {
+                            cb(r);
+                        }
+                    }
+                    Err(_) => failed.store(true, Ordering::Relaxed),
+                }
+                *slots[k].lock().unwrap_or_else(|p| p.into_inner()) = Some(res);
+            });
+        }
+    });
+
+    // The cursor hands out cells in order, so unclaimed (None) slots can
+    // only sit *after* every claimed one — the first error is always
+    // reached before any cancellation gap.
+    let mut out = Vec::with_capacity(cells.len());
+    let mut skipped: Option<usize> = None;
+    for (k, slot) in slots.into_iter().enumerate() {
+        match slot.into_inner().unwrap_or_else(|p| p.into_inner()) {
+            Some(res) => {
+                out.push(res.with_context(|| cells[k].1.describe(cells[k].0))?);
+            }
+            None => skipped = skipped.or(Some(k)),
+        }
+    }
+    if let Some(k) = skipped {
+        bail!(
+            "run aborted early ({} never ran) without a reported error",
+            cells[k].1.describe(cells[k].0)
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::grid::{GridCell, GridHasher};
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[derive(Clone, Debug)]
+    struct TestCell(usize);
+
+    impl GridCell for TestCell {
+        fn describe(&self, index: usize) -> String {
+            format!("pool cell {index}")
+        }
+        fn write_identity(&self, h: &mut GridHasher) {
+            h.eat(&self.0.to_le_bytes());
+        }
+    }
+
+    fn cells(n: usize) -> Vec<(usize, TestCell)> {
+        (0..n).map(|i| (i, TestCell(i))).collect()
+    }
+
+    #[test]
+    fn results_come_back_in_index_order_on_any_worker_count() {
+        for workers in [1usize, 2, 7] {
+            let out = run_cells(&cells(9), workers, |i, c| Ok(i * 10 + c.0), None).unwrap();
+            assert_eq!(out, (0..9).map(|i| i * 11).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn empty_grid_is_rejected() {
+        let none: Vec<(usize, TestCell)> = Vec::new();
+        assert!(run_cells(&none, 2, |_, _| Ok(0usize), None).is_err());
+    }
+
+    #[test]
+    fn first_failure_cancels_and_names_the_cell() {
+        let ran = AtomicUsize::new(0);
+        let err = run_cells(
+            &cells(64),
+            1,
+            |i, _| {
+                ran.fetch_add(1, Ordering::Relaxed);
+                anyhow::ensure!(i != 3, "boom at {i}");
+                Ok(i)
+            },
+            None,
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("boom at 3"), "{msg}");
+        assert!(msg.contains("pool cell 3"), "{msg}");
+        assert!(
+            ran.load(Ordering::Relaxed) < 64,
+            "failure did not cancel the remaining cells"
+        );
+    }
+
+    #[test]
+    fn panicking_cell_fails_cleanly_without_deadlock() {
+        let err = run_cells(
+            &cells(4),
+            2,
+            |i, _| {
+                if i == 1 {
+                    panic!("injected cell panic");
+                }
+                Ok(i)
+            },
+            None,
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("injected cell panic"), "{msg}");
+        assert!(msg.contains("pool cell 1"), "{msg}");
+    }
+
+    #[test]
+    fn on_result_streams_every_finished_cell() {
+        let seen = Mutex::new(Vec::new());
+        let hook = |r: &usize| seen.lock().unwrap().push(*r);
+        run_cells(&cells(5), 2, |i, _| Ok(i), Some(&hook)).unwrap();
+        let mut got = seen.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,564 @@
+//! Shard layer of the execution engine: child-process execution of a
+//! grid, with bounded shard retry and work re-stealing.
+//!
+//! A sharded run splits the grid over `n` child processes of the same
+//! binary. Shard `k` (1-based on the CLI) owns the strided index set of
+//! [`super::grid::shard_indices`]; each child re-parses the same spec
+//! flags ([`ShardDriver::child_args`]) and speaks a JSON-lines protocol
+//! on stdout: one `{"type":"cell",…}` object per finished cell (global
+//! index + exact result bits), a final `{"type":"done",…}`, or
+//! `{"type":"error",…}` on failure. The parent reassembles results by
+//! global index, so a sharded run is fingerprint-identical to the
+//! in-process run of the same grid.
+//!
+//! ## Retry and work re-stealing
+//!
+//! Child failure is no longer fatal by default. When a child dies — it
+//! reports an error cell, exits nonzero, gets killed mid-stream, or
+//! speaks garbage — the parent computes its **orphans** (assigned cells
+//! with no result yet; results streamed before the death are kept) and,
+//! while the shard's [`ShardOptions::retries`] budget lasts, re-queues
+//! them onto a fresh *steal-worker*: a respawned child running
+//! `--steal-cells i,j,…` alongside the surviving shards. Only when the
+//! budget is exhausted does the failure surface, naming the first
+//! unfinished cell. Because every cell is a pure function of its grid
+//! identity, a re-stolen run is bit-identical to the one that died —
+//! the merged report's fingerprint matches the single-process run even
+//! after a mid-sweep kill (pinned by `rust/tests/sweep_shard.rs` and the
+//! `retry-smoke` CI job). `--shard-retries 0` restores fail-fast.
+
+use std::io::BufRead;
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// How a grid plugs into the sharded orchestrator: the full cell list for
+/// validation and error naming, the argv a child needs to rebuild the
+/// same grid, and the payload-specific half of the stdout protocol.
+pub trait ShardDriver: Sync {
+    /// One finished cell's result as carried by the protocol.
+    type Item: Send;
+
+    /// Human noun for error messages (e.g. "sweep").
+    fn label(&self) -> &str {
+        "grid"
+    }
+
+    /// Total number of cells in the grid.
+    fn total(&self) -> usize;
+
+    /// Human-readable identity of cell `index` for error contexts.
+    fn describe(&self, index: usize) -> String;
+
+    /// Argv (subcommand + spec flags) a child of the same binary needs to
+    /// rebuild an identical grid; the engine appends the shard-mode and
+    /// worker flags.
+    fn child_args(&self) -> Vec<String>;
+
+    /// Parse a `"type":"cell"` protocol object into its global index and
+    /// item, verifying the payload identity against the grid (a result
+    /// for a cell not in this grid is an error).
+    fn parse_cell(&self, doc: &Json) -> Result<(usize, Self::Item)>;
+}
+
+/// One parsed line of the shard-worker stdout protocol.
+#[derive(Clone, Debug)]
+pub enum ShardLine<T> {
+    /// A finished cell, tagged with its global index.
+    Cell { index: usize, item: T },
+    /// Shard finished cleanly after reporting `cells` results.
+    Done { shard: usize, cells: usize },
+    /// Shard failed; the parent surfaces `message` (after retries).
+    Error { message: String },
+}
+
+/// Serialize the shard-completed protocol line (`shard` 0-based).
+pub fn done_line(shard: usize, cells: usize) -> String {
+    let mut o = Json::obj();
+    o.set("type", Json::Str("done".to_string()))
+        .set("shard", Json::Num(shard as f64))
+        .set("cells", Json::Num(cells as f64));
+    o.dump()
+}
+
+/// Serialize the shard-failed protocol line.
+pub fn error_line(message: &str) -> String {
+    let mut o = Json::obj();
+    o.set("type", Json::Str("error".to_string()))
+        .set("message", Json::Str(message.to_string()));
+    o.dump()
+}
+
+/// Parse one protocol line; `"cell"` payloads go through
+/// [`ShardDriver::parse_cell`].
+pub fn parse_line<D: ShardDriver + ?Sized>(driver: &D, line: &str) -> Result<ShardLine<D::Item>> {
+    let doc = Json::parse(line).with_context(|| format!("bad shard protocol line: {line}"))?;
+    match doc.get("type").as_str() {
+        Some("cell") => {
+            let (index, item) = driver.parse_cell(&doc)?;
+            Ok(ShardLine::Cell { index, item })
+        }
+        Some("done") => Ok(ShardLine::Done {
+            shard: doc.get("shard").as_usize().unwrap_or(0),
+            cells: doc.get("cells").as_usize().unwrap_or(0),
+        }),
+        Some("error") => Ok(ShardLine::Error {
+            message: doc
+                .get("message")
+                .as_str()
+                .unwrap_or("unknown shard error")
+                .to_string(),
+        }),
+        other => bail!("unknown shard protocol line type {other:?} in: {line}"),
+    }
+}
+
+/// Parse a `--shard i/n` / `--shard-worker i/n` argument (`i` 1-based on
+/// the CLI). Returns the 0-based shard index and the shard count.
+pub fn parse_shard_arg(s: &str) -> Result<(usize, usize)> {
+    let (i, n) = s
+        .split_once('/')
+        .with_context(|| format!("--shard expects i/n (e.g. 1/4), got '{s}'"))?;
+    let i: usize = i
+        .trim()
+        .parse()
+        .with_context(|| format!("bad shard index '{i}'"))?;
+    let n: usize = n
+        .trim()
+        .parse()
+        .with_context(|| format!("bad shard count '{n}'"))?;
+    anyhow::ensure!(n >= 1, "shard count must be at least 1");
+    anyhow::ensure!((1..=n).contains(&i), "shard index {i} out of range 1..={n}");
+    Ok((i - 1, n))
+}
+
+/// Parse a `--steal-cells i,j,…` argument: the explicit global cell
+/// indices a steal-worker re-runs.
+pub fn parse_cell_list(s: &str) -> Result<Vec<usize>> {
+    let out: Vec<usize> = s
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            t.parse::<usize>()
+                .with_context(|| format!("bad cell index '{t}' in --steal-cells"))
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!out.is_empty(), "--steal-cells needs at least one cell index");
+    Ok(out)
+}
+
+/// Options for [`run_sharded`].
+#[derive(Clone, Debug)]
+pub struct ShardOptions {
+    /// Number of child processes (clamped to `[1, #cells]`).
+    pub shards: usize,
+    /// Total worker-thread budget, divided evenly across children.
+    pub workers: usize,
+    /// Overall deadline for the whole sharded run; `None` waits forever.
+    /// On expiry every child is killed and the error names the first cell
+    /// still outstanding (no re-steal past the deadline).
+    pub timeout: Option<Duration>,
+    /// Re-steal budget **per shard**: how many times a failed child's
+    /// unfinished cells may be re-queued onto a fresh steal-worker before
+    /// the failure becomes the run's error. `0` restores fail-fast.
+    pub retries: usize,
+    /// Extra environment for spawned children — the failure-injection
+    /// hooks of the retry tests (`CECFLOW_FAIL_SHARD`) ride here so test
+    /// processes never mutate their own global environment.
+    pub extra_env: Vec<(String, String)>,
+}
+
+impl Default for ShardOptions {
+    fn default() -> ShardOptions {
+        ShardOptions {
+            shards: 1,
+            workers: 1,
+            timeout: None,
+            retries: 1,
+            extra_env: Vec::new(),
+        }
+    }
+}
+
+/// Book-keeping for one spawned child (original shard or steal-worker).
+struct Worker {
+    child: Child,
+    /// Original 0-based shard whose retry budget this worker draws on.
+    shard: usize,
+    /// Global cell indices this worker was asked to run.
+    assigned: Vec<usize>,
+    /// Saw the `done` protocol line.
+    done: bool,
+    /// First failure observed on this worker; once set, its further
+    /// output is ignored (a garbage-speaking child stays garbage).
+    failure: Option<String>,
+}
+
+enum Event {
+    Line(usize, String),
+    ReadError(usize, String),
+    Eof(usize),
+}
+
+fn kill_all(workers: &mut [Worker]) {
+    for w in workers.iter_mut() {
+        let _ = w.child.kill();
+        let _ = w.child.wait();
+    }
+}
+
+/// Wait for one child, bounded by the run's overall deadline: past the
+/// deadline the child is killed and an error returned, so
+/// [`ShardOptions::timeout`] holds even for a child that wedges *after*
+/// closing its stdout (the protocol loop can no longer observe it).
+fn wait_with_deadline(
+    child: &mut Child,
+    deadline: Option<Instant>,
+) -> Result<std::process::ExitStatus> {
+    loop {
+        if let Some(status) = child.try_wait().context("polling child status")? {
+            return Ok(status);
+        }
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            let _ = child.kill();
+            let _ = child.wait();
+            bail!("child did not exit before the run deadline");
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Run `driver`'s grid sharded across `opts.shards` child processes of
+/// the binary at `exe`, with bounded retry + work re-stealing (see the
+/// module docs). Returns the per-cell items in global-index order.
+pub fn run_sharded<D: ShardDriver>(
+    driver: &D,
+    exe: &Path,
+    opts: &ShardOptions,
+) -> Result<Vec<D::Item>> {
+    let total = driver.total();
+    anyhow::ensure!(total > 0, "empty grid: no cells to run");
+    let shards = opts.shards.clamp(1, total);
+    let child_workers = (opts.workers / shards).max(1);
+    let label = driver.label().to_string();
+
+    let (tx, rx) = mpsc::channel::<Event>();
+    let mut workers: Vec<Worker> = Vec::with_capacity(shards);
+    // per-shard re-steal budget already spent
+    let mut attempts = vec![0usize; shards];
+    let mut slots: Vec<Option<D::Item>> = std::iter::repeat_with(|| None).take(total).collect();
+
+    let spawn = |id: usize,
+                 shard: usize,
+                 mode_args: &[String],
+                 assigned: Vec<usize>,
+                 tx: &mpsc::Sender<Event>|
+     -> Result<Worker> {
+        let mut cmd = Command::new(exe);
+        cmd.args(driver.child_args())
+            .args(mode_args)
+            .arg("--workers")
+            .arg(child_workers.to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit());
+        for (k, v) in &opts.extra_env {
+            cmd.env(k, v);
+        }
+        let mut child = cmd.spawn().with_context(|| {
+            format!(
+                "spawning {label} shard {}/{shards} ({})",
+                shard + 1,
+                exe.display()
+            )
+        })?;
+        let stdout = child.stdout.take().expect("stdout was piped");
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            for line in std::io::BufReader::new(stdout).lines() {
+                match line {
+                    Ok(l) => {
+                        if tx.send(Event::Line(id, l)).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        // report the failure, then fall through to the Eof
+                        // send — the orchestrator's live-count and retry
+                        // bookkeeping only run at Eof, so a reader that
+                        // stopped without one would hang the whole run
+                        let _ = tx.send(Event::ReadError(id, e.to_string()));
+                        break;
+                    }
+                }
+            }
+            let _ = tx.send(Event::Eof(id));
+        });
+        Ok(Worker {
+            child,
+            shard,
+            assigned,
+            done: false,
+            failure: None,
+        })
+    };
+
+    for shard in 0..shards {
+        let assigned = super::grid::shard_indices(total, shard, shards);
+        let mode = vec![
+            "--shard-worker".to_string(),
+            format!("{}/{shards}", shard + 1),
+        ];
+        let w = spawn(shard, shard, &mode, assigned, &tx)?;
+        workers.push(w);
+    }
+
+    let deadline = opts.timeout.map(|t| Instant::now() + t);
+    let mut live = workers.len();
+    while live > 0 {
+        let timed_out = |slots: &[Option<D::Item>], workers: &mut [Worker]| {
+            let missing = slots.iter().position(|s| s.is_none());
+            kill_all(workers);
+            let what = missing
+                .map(|i| format!(" waiting for {}", driver.describe(i)))
+                .unwrap_or_default();
+            anyhow::anyhow!(
+                "sharded {label} timed out after {:.1}s{what}",
+                opts.timeout.unwrap_or_default().as_secs_f64()
+            )
+        };
+        let ev = if let Some(d) = deadline {
+            match d.checked_duration_since(Instant::now()) {
+                None => return Err(timed_out(&slots, &mut workers)),
+                Some(left) => match rx.recv_timeout(left) {
+                    Ok(ev) => ev,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        return Err(timed_out(&slots, &mut workers))
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                },
+            }
+        } else {
+            match rx.recv() {
+                Ok(ev) => ev,
+                Err(_) => break,
+            }
+        };
+        // Mark a worker failed and kill it; the retry-or-surface decision
+        // happens at its EOF, once every result it did stream is in.
+        let fail_worker = |workers: &mut [Worker], id: usize, msg: String| {
+            if workers[id].failure.is_none() {
+                workers[id].failure = Some(msg);
+            }
+            let _ = workers[id].child.kill();
+        };
+        match ev {
+            Event::Line(id, line) => {
+                if workers[id].failure.is_some() || line.trim().is_empty() {
+                    continue;
+                }
+                match parse_line(driver, &line) {
+                    Err(e) => fail_worker(
+                        &mut workers,
+                        id,
+                        format!("{:#}", e.context("spoke garbage on stdout")),
+                    ),
+                    Ok(ShardLine::Cell { index, item }) => {
+                        if index >= slots.len() {
+                            fail_worker(
+                                &mut workers,
+                                id,
+                                format!(
+                                    "reported cell index {index} outside the {total}-cell grid"
+                                ),
+                            );
+                        } else if slots[index].is_some() {
+                            fail_worker(
+                                &mut workers,
+                                id,
+                                format!("reported {} twice", driver.describe(index)),
+                            );
+                        } else {
+                            slots[index] = Some(item);
+                        }
+                    }
+                    Ok(ShardLine::Error { message }) => fail_worker(&mut workers, id, message),
+                    Ok(ShardLine::Done { .. }) => workers[id].done = true,
+                }
+            }
+            Event::ReadError(id, msg) => {
+                fail_worker(&mut workers, id, format!("reading its results: {msg}"));
+            }
+            Event::Eof(id) => {
+                live -= 1;
+                let status = match wait_with_deadline(&mut workers[id].child, deadline) {
+                    Ok(status) => status,
+                    Err(e) => {
+                        let shard = workers[id].shard;
+                        kill_all(&mut workers);
+                        return Err(e.context(format!(
+                            "waiting for {label} shard {}/{shards}",
+                            shard + 1
+                        )));
+                    }
+                };
+                let orphans: Vec<usize> = workers[id]
+                    .assigned
+                    .iter()
+                    .copied()
+                    .filter(|&i| slots[i].is_none())
+                    .collect();
+                // A child counts as healthy only if it finished its
+                // protocol cleanly.
+                let healthy =
+                    workers[id].done && workers[id].failure.is_none() && status.success();
+                if healthy {
+                    continue;
+                }
+                let shard = workers[id].shard;
+                let failed = workers[id].failure.is_some() || !status.success();
+                let msg = workers[id].failure.clone().unwrap_or_else(|| {
+                    if !status.success() {
+                        format!("exited with {status} before finishing its cells")
+                    } else {
+                        "closed stdout before finishing its cells".to_string()
+                    }
+                });
+                // retries == 0 is the documented fail-fast mode: any
+                // observed failure surfaces immediately, even one that
+                // orphaned no cells.
+                if failed && opts.retries == 0 {
+                    kill_all(&mut workers);
+                    bail!("{label} shard {}/{shards} failed: {msg}", shard + 1);
+                }
+                if orphans.is_empty() {
+                    // a death that orphaned nothing: every assigned result
+                    // already streamed and was index-verified, so there is
+                    // nothing to re-steal — keep the results, note the loss
+                    if failed {
+                        eprintln!(
+                            "{label} shard {}/{shards}: {msg}; all its cells were already \
+                             reported, nothing to re-steal",
+                            shard + 1
+                        );
+                    }
+                    continue;
+                }
+                if attempts[shard] < opts.retries {
+                    attempts[shard] += 1;
+                    eprintln!(
+                        "{label} shard {}/{shards}: {msg}; re-stealing {} unfinished cell(s) \
+                         onto a fresh worker (attempt {}/{})",
+                        shard + 1,
+                        orphans.len(),
+                        attempts[shard],
+                        opts.retries
+                    );
+                    let mode = vec![
+                        "--steal-cells".to_string(),
+                        orphans
+                            .iter()
+                            .map(usize::to_string)
+                            .collect::<Vec<_>>()
+                            .join(","),
+                    ];
+                    let id = workers.len();
+                    match spawn(id, shard, &mode, orphans, &tx) {
+                        Ok(w) => {
+                            workers.push(w);
+                            live += 1;
+                        }
+                        Err(e) => {
+                            kill_all(&mut workers);
+                            return Err(e.context("respawning a steal-worker"));
+                        }
+                    }
+                } else {
+                    kill_all(&mut workers);
+                    if opts.retries == 0 {
+                        bail!("{label} shard {}/{shards} failed: {msg}", shard + 1);
+                    }
+                    bail!(
+                        "{label} shard {}/{shards} failed after {} re-steal attempt(s): {msg} \
+                         ({} cell(s) unfinished, first: {})",
+                        shard + 1,
+                        attempts[shard],
+                        orphans.len(),
+                        driver.describe(orphans[0])
+                    );
+                }
+            }
+        }
+    }
+
+    let mut out = Vec::with_capacity(total);
+    for (i, slot) in slots.into_iter().enumerate() {
+        out.push(slot.with_context(|| {
+            format!(
+                "sharded {label} finished without a result for {}",
+                driver.describe(i)
+            )
+        })?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_arg_parses_one_based() {
+        assert_eq!(parse_shard_arg("1/4").unwrap(), (0, 4));
+        assert_eq!(parse_shard_arg("4/4").unwrap(), (3, 4));
+        assert!(parse_shard_arg("0/4").is_err());
+        assert!(parse_shard_arg("5/4").is_err());
+        assert!(parse_shard_arg("x/4").is_err());
+        assert!(parse_shard_arg("2").is_err());
+    }
+
+    #[test]
+    fn cell_lists_parse_and_reject_garbage() {
+        assert_eq!(parse_cell_list("3, 7,11").unwrap(), vec![3, 7, 11]);
+        assert!(parse_cell_list("").is_err());
+        assert!(parse_cell_list("1,x").is_err());
+    }
+
+    struct NoCells;
+    impl ShardDriver for NoCells {
+        type Item = ();
+        fn total(&self) -> usize {
+            3
+        }
+        fn describe(&self, index: usize) -> String {
+            format!("cell {index}")
+        }
+        fn child_args(&self) -> Vec<String> {
+            vec!["noop".to_string()]
+        }
+        fn parse_cell(&self, _doc: &Json) -> Result<(usize, ())> {
+            bail!("no cell payloads in this test driver")
+        }
+    }
+
+    #[test]
+    fn control_lines_roundtrip() {
+        let d = NoCells;
+        match parse_line(&d, &done_line(1, 9)).unwrap() {
+            ShardLine::Done { shard, cells } => assert_eq!((shard, cells), (1, 9)),
+            other => panic!("wrong line kind: {other:?}"),
+        }
+        match parse_line(&d, &error_line("boom: cell 3")).unwrap() {
+            ShardLine::Error { message } => assert!(message.contains("boom")),
+            other => panic!("wrong line kind: {other:?}"),
+        }
+        assert!(parse_line(&d, "not json").is_err());
+        assert!(parse_line(&d, "{\"type\":\"wat\"}").is_err());
+    }
+}

@@ -1,15 +1,17 @@
 //! The coordination layer: scenario construction (Table II), optimization
-//! loop driving, parallel scenario sweeps, metrics, reporting, and
-//! experiment configuration — the pieces `main.rs`, the examples and
-//! every bench build on.
+//! loop driving, the layered grid-execution engine ([`exec`]), parallel
+//! scenario sweeps, metrics, reporting, and experiment configuration —
+//! the pieces `main.rs`, the examples and every bench build on.
 
 pub mod config;
 pub mod dynamics;
+pub mod exec;
 pub mod metrics;
 pub mod report;
 pub mod runner;
 pub mod scenario;
 pub mod sweep;
+pub mod sweep_report;
 
 use anyhow::{Context, Result};
 
@@ -20,7 +22,8 @@ use crate::model::strategy::Strategy;
 
 pub use config::{Algorithm, CellBackend, ExperimentConfig, Schedule};
 pub use dynamics::{
-    AdaptiveRunner, DynamicTrace, EpochTrace, PatternSchedule, ScheduleKind,
+    AdaptiveRunner, DynamicCell, DynamicSpec, DynamicTrace, EpochTrace, PatternSchedule,
+    ScheduleKind,
 };
 pub use runner::{optimize, optimize_accelerated, RunConfig, RunResult};
 pub use scenario::{connected_er_servers, CostKind, Scenario, ScenarioSpec};

@@ -1,58 +1,49 @@
-//! Parallel and process-sharded scenario sweeps: run a grid of
-//! `scenario × seed × algorithm × backend × schedule` cells across worker
-//! threads — and, with `cecflow sweep --shards N` / `--shard i/n`, across
-//! child *processes* — then aggregate the outcomes into one comparable
-//! report. This is the machinery behind the `cecflow sweep` subcommand
-//! and `benches/sweep.rs`. Cells with a non-static
-//! [`PatternSchedule`] run the dynamic task-pattern engine
-//! ([`super::dynamics`]) warm-started, and additionally record their
-//! per-epoch final costs.
+//! The sweep grid *definition*: `scenario × seed × algorithm × backend ×
+//! schedule` cells, aggregated into one comparable [`SweepReport`]. This
+//! is the machinery behind the `cecflow sweep` subcommand and
+//! `benches/sweep.rs`.
+//!
+//! Execution is delegated to the layered engine in
+//! [`super::exec`]: the grid layer owns index assignment and identity
+//! hashing, the pool layer runs cells on worker threads, the shard layer
+//! spawns `--shard-worker i/n` child processes (with bounded retry and
+//! work re-stealing via `--shard-retries` / `--steal-cells`), and the
+//! artifact layer loads and merges `--shard i/n --out f.json` reports
+//! index- and hash-verified. This module only defines *what* a cell is
+//! (identity and execution); the report data model — aggregation, the
+//! fingerprint, serde, merge — lives in [`super::sweep_report`].
 //!
 //! Determinism is a hard contract, pinned by
 //! `rust/tests/sweep_determinism.rs` and `rust/tests/sweep_shard.rs`:
 //! every cell derives all randomness from its own `(scenario, seed)` pair
-//! (no RNG state is shared between workers), and results carry their
-//! global grid index, so the per-cell results of a sweep are identical for
-//! any worker count *and* any shard count — only wall-clock timings vary.
-//! Workers pull cells from an atomic cursor (work stealing), which keeps
-//! long cells (e.g. SW) from serializing behind a static partition.
-//!
-//! ## Process sharding
-//!
-//! A sharded sweep splits the cell grid over `n` `cecflow` child
-//! processes. Shard `k` (1-based on the CLI) owns the strided index set
-//! `{k-1, k-1+n, k-1+2n, …}` — striding balances expensive scenarios
-//! (grid order keeps one scenario's cells adjacent) across shards. Each
-//! child runs `cecflow sweep --shard-worker k/n` with the same spec flags
-//! and speaks a JSON-lines protocol on stdout: one `{"type":"cell",…}`
-//! object per finished cell (carrying the global index and the exact cost
-//! bits), a final `{"type":"done",…}`, or `{"type":"error",…}` on
-//! failure. The parent reassembles the slots by index, so the merged
-//! [`SweepReport`] fingerprint is identical to a single-process run of
-//! the same spec. Shard reports written with `--shard i/n --out f.json`
-//! are first-class artifacts: [`SweepReport::from_json`] +
-//! [`SweepReport::merge`] (CLI: `cecflow sweep --merge a.json,b.json`)
-//! reassemble them across hosts.
+//! and results carry their global grid index, so per-cell results are
+//! identical for any worker count, shard count, and retry/re-steal
+//! history — only wall-clock timings vary. Cells with a non-static
+//! [`PatternSchedule`] run the dynamic task-pattern engine
+//! ([`super::dynamics`]) warm-started and record per-epoch final costs.
 
-use std::io::BufRead;
-use std::panic::AssertUnwindSafe;
 use std::path::Path;
-use std::process::{Child, Command, Stdio};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::util::json::Json;
-use crate::util::stats::summarize;
-use crate::util::table::{fnum, Table};
 
 use super::dynamics::{AdaptiveRunner, PatternSchedule};
+use super::exec::grid::{Grid, GridCell, GridHasher};
+use super::exec::{pool, shard};
 use super::{
     build_scenario_network, metrics, run_algorithm_with_backend, Algorithm, CellBackend,
     RunConfig,
 };
+
+pub use super::config::{parse_algorithms, parse_backends, parse_scenarios, parse_seeds, MAX_SEED};
+pub use super::dynamics::parse_schedules;
+pub use super::exec::grid::shard_indices as shard_cell_indices;
+pub use super::exec::shard::{
+    done_line, error_line, parse_cell_list, parse_shard_arg, ShardOptions,
+};
+pub use super::sweep_report::{CellFingerprint, GroupSummary, SweepReport};
 
 /// A sweep specification: the cell grid is the cross product
 /// `scenarios × seeds × algorithms × backends × schedules` (non-SGP
@@ -102,52 +93,31 @@ pub struct SweepCell {
     pub schedule: PatternSchedule,
 }
 
-/// The outcome of one cell, tagged with its global grid index so shard
-/// outputs can be reassembled in canonical order.
-#[derive(Clone, Debug)]
-pub struct CellResult {
-    /// Position of this cell in [`SweepSpec::cells`] order.
-    pub index: usize,
-    pub cell: SweepCell,
-    pub final_cost: f64,
-    pub iterations: usize,
-    pub iters_to_1pct: usize,
-    pub wall_seconds: f64,
-    /// Per-epoch final costs of a dynamic (non-static-schedule) cell, in
-    /// epoch order; empty for static cells. Carried bit-exactly through
-    /// the shard protocol and report artifacts, and part of the
-    /// fingerprint — per-epoch results must be identical across worker
-    /// and shard counts.
-    pub epoch_costs: Vec<f64>,
-}
+impl GridCell for SweepCell {
+    fn describe(&self, index: usize) -> String {
+        format!(
+            "sweep cell {index} ({} seed {} algo {} backend {} schedule {})",
+            self.scenario,
+            self.seed,
+            self.algorithm.name(),
+            self.backend.name(),
+            self.schedule.label()
+        )
+    }
 
-/// Aggregate over the seeds of one
-/// `(scenario, algorithm, backend, schedule)` group.
-#[derive(Clone, Debug)]
-pub struct GroupSummary {
-    pub scenario: String,
-    pub algorithm: String,
-    pub backend: String,
-    pub schedule: String,
-    pub cells: usize,
-    pub mean_cost: f64,
-    pub p95_cost: f64,
-    pub mean_iters_to_1pct: f64,
-    pub mean_wall_seconds: f64,
-}
-
-/// A completed sweep: per-cell results in grid order plus aggregation.
-#[derive(Clone, Debug)]
-pub struct SweepReport {
-    pub cells: Vec<CellResult>,
-    /// Worker threads used (total budget for sharded runs). Metadata only
-    /// — like wall times, excluded from [`SweepReport::fingerprint`].
-    pub workers: usize,
-    /// Identity of the generating spec ([`spec_grid_hash`]); `0` when
-    /// unknown (hand-built reports). [`SweepReport::merge`] refuses to
-    /// combine shard reports whose nonzero hashes differ — index coverage
-    /// alone cannot tell two same-sized grids apart.
-    pub grid_hash: u64,
+    fn write_identity(&self, h: &mut GridHasher) {
+        h.eat(self.scenario.as_bytes());
+        h.eat(&[0]);
+        h.eat(&self.seed.to_le_bytes());
+        h.eat(self.algorithm.name().as_bytes());
+        h.eat(&[0]);
+        h.eat(self.backend.name().as_bytes());
+        h.eat(&[0]);
+        // the schedule axis is identity-relevant: shard artifacts from
+        // different schedule grids must never merge silently
+        h.eat(self.schedule.label().as_bytes());
+        h.eat(&[0xff]);
+    }
 }
 
 impl SweepSpec {
@@ -159,13 +129,7 @@ impl SweepSpec {
     /// as are non-static schedules on algorithms without a dynamic path
     /// ([`Algorithm::supports_dynamic`]).
     pub fn cells(&self) -> Vec<SweepCell> {
-        let mut out = Vec::with_capacity(
-            self.scenarios.len()
-                * self.seeds.len()
-                * self.algorithms.len()
-                * self.backends.len()
-                * self.schedules.len(),
-        );
+        let mut out = Vec::new();
         for scenario in &self.scenarios {
             for &seed in &self.seeds {
                 for &algorithm in &self.algorithms {
@@ -191,6 +155,29 @@ impl SweepSpec {
         }
         out
     }
+
+    /// The cell grid wrapped for the execution engine.
+    pub fn grid(&self) -> Grid<SweepCell> {
+        Grid::new(self.cells())
+    }
+}
+
+/// The outcome of one cell, tagged with its global grid index so shard
+/// outputs can be reassembled in canonical order.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    /// Position of this cell in [`SweepSpec::cells`] order.
+    pub index: usize,
+    pub cell: SweepCell,
+    pub final_cost: f64,
+    pub iterations: usize,
+    pub iters_to_1pct: usize,
+    pub wall_seconds: f64,
+    /// Per-epoch final costs of a dynamic (non-static-schedule) cell, in
+    /// epoch order; empty for static cells. Carried bit-exactly through
+    /// the shard protocol and report artifacts, and part of the
+    /// fingerprint.
+    pub epoch_costs: Vec<f64>,
 }
 
 fn run_cell(index: usize, cell: &SweepCell, spec: &SweepSpec) -> Result<CellResult> {
@@ -246,35 +233,24 @@ fn run_dynamic_cell(index: usize, cell: &SweepCell, spec: &SweepSpec) -> Result<
 }
 
 /// Deterministic identity of a sweep spec's result-relevant content:
-/// FNV-1a over the full cell grid plus the rate scale and stopping rule.
-/// Stamped into every report this module produces so [`SweepReport::merge`]
-/// can refuse shard artifacts that come from different sweeps.
+/// [`Grid::identity_hash`] over the full cell grid plus the rate scale and
+/// stopping rule. Stamped into every report this module produces so
+/// [`SweepReport::merge`] can refuse shard artifacts from different
+/// sweeps.
 pub fn spec_grid_hash(spec: &SweepSpec) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    let mut eat = |bytes: &[u8]| {
-        for &b in bytes {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100_0000_01b3);
-        }
-    };
-    for cell in spec.cells() {
-        eat(cell.scenario.as_bytes());
-        eat(&[0]);
-        eat(&cell.seed.to_le_bytes());
-        eat(cell.algorithm.name().as_bytes());
-        eat(&[0]);
-        eat(cell.backend.name().as_bytes());
-        eat(&[0]);
-        // the schedule axis is identity-relevant: shard artifacts from
-        // different schedule grids must never merge silently
-        eat(cell.schedule.label().as_bytes());
-        eat(&[0xff]);
-    }
-    eat(&spec.rate_scale.to_bits().to_le_bytes());
-    eat(&(spec.run.max_iters as u64).to_le_bytes());
-    eat(&spec.run.tol.to_bits().to_le_bytes());
-    eat(&(spec.run.patience as u64).to_le_bytes());
-    h
+    grid_hash_of(&spec.grid(), spec)
+}
+
+/// [`spec_grid_hash`] against an already-built grid — the entry points
+/// below reuse the grid they execute instead of rebuilding the whole
+/// cross product a second time just for the hash.
+fn grid_hash_of(grid: &Grid<SweepCell>, spec: &SweepSpec) -> u64 {
+    grid.identity_hash(|h| {
+        h.eat(&spec.rate_scale.to_bits().to_le_bytes());
+        h.eat(&(spec.run.max_iters as u64).to_le_bytes());
+        h.eat(&spec.run.tol.to_bits().to_le_bytes());
+        h.eat(&(spec.run.patience as u64).to_le_bytes());
+    })
 }
 
 /// Reject specs whose cells cannot round-trip through the JSON shard
@@ -291,111 +267,12 @@ fn validate_spec(spec: &SweepSpec) -> Result<()> {
     Ok(())
 }
 
-/// Human-readable cell identity used in error contexts.
-fn describe_cell(index: usize, cell: &SweepCell) -> String {
-    format!(
-        "sweep cell {index} ({} seed {} algo {} backend {} schedule {})",
-        cell.scenario,
-        cell.seed,
-        cell.algorithm.name(),
-        cell.backend.name(),
-        cell.schedule.label()
-    )
-}
-
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = payload.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = payload.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "non-string panic payload".to_string()
-    }
-}
-
-/// The worker pool shared by every sweep entry point: run `cells` (global
-/// index + cell) on up to `workers` threads, calling `on_cell` as each
-/// cell finishes (the `--shard-worker` streaming hook).
-///
-/// Failure discipline: the first failing cell raises a flag that stops
-/// workers from *claiming* further cells (a typo'd scenario name must not
-/// make the user wait out the healthy cells), and the whole sweep returns
-/// that cell's error with the cell named. A **panicking** cell cannot
-/// deadlock or poison the pool: the panic is caught at the cell boundary
-/// and surfaced as that cell's error (so `std::thread::scope` joins
-/// normally), and slot mutexes are read through `PoisonError::into_inner`
-/// so even a poisoned lock yields its data.
-fn run_cells_with<F>(
-    cells: &[(usize, SweepCell)],
-    workers: usize,
-    runner: F,
-    on_cell: Option<&(dyn Fn(&CellResult) + Sync)>,
-) -> Result<Vec<CellResult>>
-where
-    F: Fn(usize, &SweepCell) -> Result<CellResult> + Sync,
-{
+fn nonempty(grid: &Grid<SweepCell>) -> Result<()> {
     anyhow::ensure!(
-        !cells.is_empty(),
+        !grid.is_empty(),
         "empty sweep: need at least one scenario, seed and algorithm"
     );
-    let workers = workers.clamp(1, cells.len());
-
-    type CellSlot = Mutex<Option<Result<CellResult>>>;
-    let next = AtomicUsize::new(0);
-    let failed = AtomicBool::new(false);
-    let slots: Vec<CellSlot> = (0..cells.len()).map(|_| Mutex::new(None)).collect();
-
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                if failed.load(Ordering::Relaxed) {
-                    break;
-                }
-                let k = next.fetch_add(1, Ordering::Relaxed);
-                if k >= cells.len() {
-                    break;
-                }
-                let (index, cell) = &cells[k];
-                let res = std::panic::catch_unwind(AssertUnwindSafe(|| runner(*index, cell)))
-                    .unwrap_or_else(|payload| {
-                        Err(anyhow::anyhow!(
-                            "cell panicked: {}",
-                            panic_message(payload.as_ref())
-                        ))
-                    });
-                match &res {
-                    Ok(cr) => {
-                        if let Some(cb) = on_cell {
-                            cb(cr);
-                        }
-                    }
-                    Err(_) => failed.store(true, Ordering::Relaxed),
-                }
-                *slots[k].lock().unwrap_or_else(|p| p.into_inner()) = Some(res);
-            });
-        }
-    });
-
-    // The cursor hands out cells in order, so unclaimed (None) slots can
-    // only sit *after* every claimed one — the first error is always
-    // reached before any cancellation gap.
-    let mut out = Vec::with_capacity(cells.len());
-    let mut skipped: Option<usize> = None;
-    for (k, slot) in slots.into_iter().enumerate() {
-        match slot.into_inner().unwrap_or_else(|p| p.into_inner()) {
-            Some(res) => {
-                out.push(res.with_context(|| describe_cell(cells[k].0, &cells[k].1))?)
-            }
-            None => skipped = skipped.or(Some(k)),
-        }
-    }
-    if let Some(k) = skipped {
-        bail!(
-            "sweep aborted early ({} never ran) without a reported error",
-            describe_cell(cells[k].0, &cells[k].1)
-        );
-    }
-    Ok(out)
+    Ok(())
 }
 
 /// Execute every cell of `spec` on up to `workers` threads (clamped to
@@ -404,22 +281,19 @@ where
 /// named.
 pub fn run_sweep(spec: &SweepSpec, workers: usize) -> Result<SweepReport> {
     validate_spec(spec)?;
-    let cells: Vec<(usize, SweepCell)> = spec.cells().into_iter().enumerate().collect();
-    let results = run_cells_with(&cells, workers, |i, c| run_cell(i, c, spec), None)?;
+    let grid = spec.grid();
+    nonempty(&grid)?;
+    let grid_hash = grid_hash_of(&grid, spec);
+    let cells = grid.indexed();
+    let results = pool::run_cells(&cells, workers, |i, c| run_cell(i, c, spec), None)?;
     Ok(SweepReport {
         cells: results,
-        workers: workers.clamp(1, cells.len().max(1)),
-        grid_hash: spec_grid_hash(spec),
+        workers: workers.clamp(1, cells.len()),
+        grid_hash,
     })
 }
 
-/// Global cell indices owned by shard `shard` (0-based) of `count`: the
-/// strided set `{shard, shard+count, shard+2·count, …}`.
-pub fn shard_cell_indices(total: usize, shard: usize, count: usize) -> Vec<usize> {
-    (shard..total).step_by(count.max(1)).collect()
-}
-
-/// Run one shard of `spec` in-process: the cells of
+/// Run one shard of `spec` in-process: the strided cells of
 /// [`shard_cell_indices`], with `shard` 0-based. The report's cells carry
 /// their *global* grid indices, so shard reports merge back into the
 /// single-process report via [`SweepReport::merge`].
@@ -450,109 +324,60 @@ where
         "shard index {shard} out of range for {count} shard(s)"
     );
     validate_spec(spec)?;
-    let all = spec.cells();
-    anyhow::ensure!(
-        !all.is_empty(),
-        "empty sweep: need at least one scenario, seed and algorithm"
-    );
-    let mine: Vec<(usize, SweepCell)> = shard_cell_indices(all.len(), shard, count)
-        .into_iter()
-        .map(|i| (i, all[i].clone()))
-        .collect();
+    let grid = spec.grid();
+    nonempty(&grid)?;
+    let grid_hash = grid_hash_of(&grid, spec);
+    let mine = grid.shard(shard, count);
     if mine.is_empty() {
         // more shards than cells: this shard legitimately owns nothing
         return Ok(SweepReport {
             cells: Vec::new(),
             workers: 0,
-            grid_hash: spec_grid_hash(spec),
+            grid_hash,
         });
     }
-    let results = run_cells_with(&mine, workers, |i, c| run_cell(i, c, spec), Some(&on_cell))?;
+    let results = pool::run_cells(&mine, workers, |i, c| run_cell(i, c, spec), Some(&on_cell))?;
     Ok(SweepReport {
         cells: results,
         workers: workers.clamp(1, mine.len()),
-        grid_hash: spec_grid_hash(spec),
+        grid_hash,
     })
 }
 
-// ---------------------------------------------------------------------------
-// JSON-lines shard protocol (`--shard-worker` stdout)
-// ---------------------------------------------------------------------------
-
-/// One parsed line of the `--shard-worker` stdout protocol.
-#[derive(Clone, Debug)]
-pub enum ShardLine {
-    /// A finished cell (global index inside).
-    Cell(CellResult),
-    /// Shard finished cleanly after reporting `cells` results.
-    Done { shard: usize, cells: usize },
-    /// Shard failed; the parent surfaces `message` as its error.
-    Error { message: String },
+/// Run an explicit set of global cell indices of `spec` — the
+/// `--steal-cells` work-re-stealing mode: a replacement child re-runs
+/// exactly the cells a failed shard left unfinished (see
+/// [`super::exec::shard`]). Out-of-range indices are an error.
+pub fn run_sweep_cells_with<F>(
+    spec: &SweepSpec,
+    indices: &[usize],
+    workers: usize,
+    on_cell: F,
+) -> Result<SweepReport>
+where
+    F: Fn(&CellResult) + Sync,
+{
+    validate_spec(spec)?;
+    let grid = spec.grid();
+    nonempty(&grid)?;
+    let grid_hash = grid_hash_of(&grid, spec);
+    let mine = grid.subset(indices)?;
+    let results = pool::run_cells(&mine, workers, |i, c| run_cell(i, c, spec), Some(&on_cell))?;
+    Ok(SweepReport {
+        cells: results,
+        workers: workers.clamp(1, mine.len()),
+        grid_hash,
+    })
 }
 
-/// Serialize a finished cell as one protocol line (compact JSON, no
-/// newline). The cost travels as exact bits (`final_cost_bits`), so the
-/// parent's merged report is bit-identical to an in-process run.
+/// Serialize a finished cell as one `--shard-worker` protocol line
+/// (compact JSON, no newline). The cost travels as exact bits
+/// (`final_cost_bits`), so the parent's merged report is bit-identical to
+/// an in-process run.
 pub fn cell_line(cell: &CellResult) -> String {
     let mut o = cell.to_json();
     o.set("type", Json::Str("cell".to_string()));
     o.dump()
-}
-
-/// Serialize the shard-completed protocol line (`shard` 0-based).
-pub fn done_line(shard: usize, cells: usize) -> String {
-    let mut o = Json::obj();
-    o.set("type", Json::Str("done".to_string()))
-        .set("shard", Json::Num(shard as f64))
-        .set("cells", Json::Num(cells as f64));
-    o.dump()
-}
-
-/// Serialize the shard-failed protocol line.
-pub fn error_line(message: &str) -> String {
-    let mut o = Json::obj();
-    o.set("type", Json::Str("error".to_string()))
-        .set("message", Json::Str(message.to_string()));
-    o.dump()
-}
-
-/// Parse one protocol line.
-pub fn parse_shard_line(line: &str) -> Result<ShardLine> {
-    let doc = Json::parse(line).with_context(|| format!("bad shard protocol line: {line}"))?;
-    match doc.get("type").as_str() {
-        Some("cell") => Ok(ShardLine::Cell(CellResult::from_json(&doc)?)),
-        Some("done") => Ok(ShardLine::Done {
-            shard: doc.get("shard").as_usize().unwrap_or(0),
-            cells: doc.get("cells").as_usize().unwrap_or(0),
-        }),
-        Some("error") => Ok(ShardLine::Error {
-            message: doc
-                .get("message")
-                .as_str()
-                .unwrap_or("unknown shard error")
-                .to_string(),
-        }),
-        other => bail!("unknown shard protocol line type {other:?} in: {line}"),
-    }
-}
-
-/// Parse a `--shard i/n` / `--shard-worker i/n` argument (`i` 1-based on
-/// the CLI). Returns the 0-based shard index and the shard count.
-pub fn parse_shard_arg(s: &str) -> Result<(usize, usize)> {
-    let (i, n) = s
-        .split_once('/')
-        .with_context(|| format!("--shard expects i/n (e.g. 1/4), got '{s}'"))?;
-    let i: usize = i
-        .trim()
-        .parse()
-        .with_context(|| format!("bad shard index '{i}'"))?;
-    let n: usize = n
-        .trim()
-        .parse()
-        .with_context(|| format!("bad shard count '{n}'"))?;
-    anyhow::ensure!(n >= 1, "shard count must be at least 1");
-    anyhow::ensure!((1..=n).contains(&i), "shard index {i} out of range 1..={n}");
-    Ok((i - 1, n))
 }
 
 /// Reconstruct the `cecflow sweep` CLI flags describing `spec` — the
@@ -585,714 +410,76 @@ pub fn spec_to_args(spec: &SweepSpec) -> Vec<String> {
     ]
 }
 
-// ---------------------------------------------------------------------------
-// Process-sharded orchestration (parent side)
-// ---------------------------------------------------------------------------
-
-/// Options for [`run_sweep_sharded`].
-#[derive(Clone, Debug)]
-pub struct ShardOptions {
-    /// Number of child processes (clamped to `[1, #cells]`).
-    pub shards: usize,
-    /// Total worker-thread budget, divided evenly across children.
-    pub workers: usize,
-    /// Overall deadline for the whole sharded run; `None` waits forever.
-    /// On expiry every child is killed and the error names the first cell
-    /// still outstanding.
-    pub timeout: Option<Duration>,
+/// The sweep grid plugged into the engine's sharded orchestrator
+/// ([`shard::run_sharded`]): spec flags for the parent → child handoff
+/// plus identity-checked cell parsing.
+struct SweepShardDriver<'a> {
+    spec: &'a SweepSpec,
+    grid: Grid<SweepCell>,
 }
 
-fn kill_children(children: &mut [Child]) {
-    for c in children.iter_mut() {
-        let _ = c.kill();
-        let _ = c.wait();
+impl shard::ShardDriver for SweepShardDriver<'_> {
+    type Item = CellResult;
+
+    fn label(&self) -> &str {
+        "sweep"
     }
-}
 
-/// Wait for one child, bounded by the sharded sweep's overall deadline:
-/// past the deadline the child is killed and an error returned, so
-/// [`ShardOptions::timeout`] holds even for a child that wedges *after*
-/// closing its stdout (the protocol loop can no longer observe it).
-fn wait_with_deadline(
-    child: &mut Child,
-    deadline: Option<Instant>,
-) -> Result<std::process::ExitStatus> {
-    loop {
-        if let Some(status) = child.try_wait().context("polling child status")? {
-            return Ok(status);
+    fn total(&self) -> usize {
+        self.grid.len()
+    }
+
+    fn describe(&self, index: usize) -> String {
+        self.grid.describe(index)
+    }
+
+    fn child_args(&self) -> Vec<String> {
+        let mut args = vec!["sweep".to_string()];
+        args.extend(spec_to_args(self.spec));
+        args
+    }
+
+    fn parse_cell(&self, doc: &Json) -> Result<(usize, CellResult)> {
+        let item = CellResult::from_json(doc)?;
+        match self.grid.get(item.index) {
+            Some(c) if *c == item.cell => Ok((item.index, item)),
+            _ => bail!(
+                "reported a result for a cell not in this grid (index {})",
+                item.index
+            ),
         }
-        if deadline.is_some_and(|d| Instant::now() >= d) {
-            let _ = child.kill();
-            let _ = child.wait();
-            bail!("child did not exit before the sweep deadline");
-        }
-        std::thread::sleep(Duration::from_millis(10));
     }
 }
 
 /// Run `spec` sharded across `opts.shards` child processes of the
 /// `cecflow` binary at `exe` (the CLI passes `std::env::current_exe()`;
-/// tests pass `env!("CARGO_BIN_EXE_cecflow")`).
-///
-/// The parent partitions cells by [`shard_cell_indices`], spawns one
-/// `sweep --shard-worker k/n` child per shard (JSON-lines results over
-/// stdout, human chatter on inherited stderr), and reassembles the
-/// results by global index. Child failure, protocol corruption, nonzero
-/// exit and timeout all kill the remaining children and return a
-/// contextful error naming the shard and, where known, the cell.
+/// tests pass `env!("CARGO_BIN_EXE_cecflow")`), with bounded shard retry
+/// and work re-stealing per [`ShardOptions::retries`].
 ///
 /// Pinned by `rust/tests/sweep_shard.rs`: the merged report's
-/// [`SweepReport::fingerprint`] equals the single-process
-/// [`run_sweep`] fingerprint on the same spec.
+/// [`SweepReport::fingerprint`] equals the single-process [`run_sweep`]
+/// fingerprint on the same spec — including after an injected mid-sweep
+/// child kill recovered through re-stealing.
 pub fn run_sweep_sharded(spec: &SweepSpec, exe: &Path, opts: &ShardOptions) -> Result<SweepReport> {
     validate_spec(spec)?;
-    let cells = spec.cells();
-    anyhow::ensure!(
-        !cells.is_empty(),
-        "empty sweep: need at least one scenario, seed and algorithm"
-    );
-    let shards = opts.shards.clamp(1, cells.len());
-    let child_workers = (opts.workers / shards).max(1);
-
-    enum Event {
-        Line(usize, String),
-        ReadError(usize, String),
-        Eof(usize),
-    }
-
-    let (tx, rx) = mpsc::channel::<Event>();
-    let mut children: Vec<Child> = Vec::with_capacity(shards);
-    for shard in 0..shards {
-        let mut cmd = Command::new(exe);
-        cmd.arg("sweep")
-            .args(spec_to_args(spec))
-            .arg("--shard-worker")
-            .arg(format!("{}/{shards}", shard + 1))
-            .arg("--workers")
-            .arg(child_workers.to_string())
-            .stdin(Stdio::null())
-            .stdout(Stdio::piped())
-            .stderr(Stdio::inherit());
-        let mut child = cmd.spawn().with_context(|| {
-            format!(
-                "spawning sweep shard {}/{shards} ({})",
-                shard + 1,
-                exe.display()
-            )
-        })?;
-        let stdout = child.stdout.take().expect("stdout was piped");
-        let tx = tx.clone();
-        std::thread::spawn(move || {
-            for line in std::io::BufReader::new(stdout).lines() {
-                match line {
-                    Ok(l) => {
-                        if tx.send(Event::Line(shard, l)).is_err() {
-                            return;
-                        }
-                    }
-                    Err(e) => {
-                        let _ = tx.send(Event::ReadError(shard, e.to_string()));
-                        return;
-                    }
-                }
-            }
-            let _ = tx.send(Event::Eof(shard));
-        });
-        children.push(child);
-    }
-    drop(tx);
-
-    let deadline = opts.timeout.map(|t| Instant::now() + t);
-    let mut slots: Vec<Option<CellResult>> = vec![None; cells.len()];
-    let mut eofs = 0usize;
-    // which shards sent their `done` line — an EOF without it means the
-    // child died abnormally (OOM-kill, panic before the protocol started)
-    let mut done = vec![false; shards];
-    while eofs < shards {
-        let timed_out = |slots: &[Option<CellResult>], children: &mut [Child]| {
-            let missing = slots.iter().position(|s| s.is_none());
-            kill_children(children);
-            let what = missing
-                .map(|i| {
-                    format!(
-                        " waiting for {} (shard {}/{shards})",
-                        describe_cell(i, &cells[i]),
-                        i % shards + 1
-                    )
-                })
-                .unwrap_or_default();
-            anyhow::anyhow!(
-                "sharded sweep timed out after {:.1}s{what}",
-                opts.timeout.unwrap_or_default().as_secs_f64()
-            )
-        };
-        let ev = if let Some(d) = deadline {
-            match d.checked_duration_since(Instant::now()) {
-                None => return Err(timed_out(&slots, &mut children)),
-                Some(left) => match rx.recv_timeout(left) {
-                    Ok(ev) => ev,
-                    Err(mpsc::RecvTimeoutError::Timeout) => {
-                        return Err(timed_out(&slots, &mut children))
-                    }
-                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                },
-            }
-        } else {
-            match rx.recv() {
-                Ok(ev) => ev,
-                Err(_) => break,
-            }
-        };
-        match ev {
-            Event::Line(shard, line) => {
-                if line.trim().is_empty() {
-                    continue;
-                }
-                let parsed = match parse_shard_line(&line) {
-                    Ok(p) => p,
-                    Err(e) => {
-                        kill_children(&mut children);
-                        return Err(e.context(format!(
-                            "sweep shard {}/{shards} spoke garbage on stdout",
-                            shard + 1
-                        )));
-                    }
-                };
-                match parsed {
-                    ShardLine::Cell(c) => {
-                        let i = c.index;
-                        if i >= cells.len() || cells[i] != c.cell {
-                            kill_children(&mut children);
-                            bail!(
-                                "sweep shard {}/{shards} reported a result for a cell not in \
-                                 this grid (index {i})",
-                                shard + 1
-                            );
-                        }
-                        if slots[i].is_some() {
-                            kill_children(&mut children);
-                            bail!(
-                                "sweep shard {}/{shards} reported {} twice",
-                                shard + 1,
-                                describe_cell(i, &cells[i])
-                            );
-                        }
-                        slots[i] = Some(c);
-                    }
-                    ShardLine::Error { message } => {
-                        kill_children(&mut children);
-                        bail!("sweep shard {}/{shards} failed: {message}", shard + 1);
-                    }
-                    ShardLine::Done { .. } => done[shard] = true,
-                }
-            }
-            Event::ReadError(shard, msg) => {
-                kill_children(&mut children);
-                bail!(
-                    "reading results from sweep shard {}/{shards}: {msg}",
-                    shard + 1
-                );
-            }
-            Event::Eof(shard) => {
-                eofs += 1;
-                // Fail fast on abnormal child death: stdout closed without
-                // a `done` (or `error`) line. Don't let the healthy shards
-                // run out the clock producing a result that must be thrown
-                // away anyway.
-                if !done[shard] {
-                    if let Ok(Some(status)) = children[shard].try_wait() {
-                        if !status.success() {
-                            kill_children(&mut children);
-                            bail!(
-                                "sweep shard {}/{shards} exited with {status} before \
-                                 finishing its cells",
-                                shard + 1
-                            );
-                        }
-                    }
-                    // still running or exited 0: the wait loop and the
-                    // completeness check below decide
-                }
-            }
-        }
-    }
-
-    for shard in 0..shards {
-        let status = match wait_with_deadline(&mut children[shard], deadline) {
-            Ok(status) => status,
-            Err(e) => {
-                kill_children(&mut children);
-                return Err(
-                    e.context(format!("waiting for sweep shard {}/{shards}", shard + 1))
-                );
-            }
-        };
-        if !status.success() {
-            kill_children(&mut children);
-            bail!(
-                "sweep shard {}/{shards} exited with {status} without reporting an error cell",
-                shard + 1
-            );
-        }
-    }
-
-    let mut results = Vec::with_capacity(cells.len());
-    for (i, slot) in slots.into_iter().enumerate() {
-        results.push(slot.with_context(|| {
-            format!(
-                "sharded sweep finished without a result for {} (shard {}/{shards})",
-                describe_cell(i, &cells[i]),
-                i % shards + 1
-            )
-        })?);
-    }
+    let grid = spec.grid();
+    nonempty(&grid)?;
+    let grid_hash = grid_hash_of(&grid, spec);
+    let driver = SweepShardDriver { spec, grid };
+    let cells = shard::run_sharded(&driver, exe, opts)?;
     Ok(SweepReport {
-        cells: results,
+        cells,
         workers: opts.workers.max(1),
-        grid_hash: spec_grid_hash(spec),
+        grid_hash,
     })
 }
-
-// ---------------------------------------------------------------------------
-// Report: aggregation, fingerprint, serde, merge
-// ---------------------------------------------------------------------------
-
-/// One cell's identity inside [`SweepReport::fingerprint`]: scenario,
-/// seed, algorithm, backend, schedule label, cost bits, per-epoch cost
-/// bits (empty for static cells), iterations, iters-to-1%.
-pub type CellFingerprint = (String, u64, String, String, String, u64, Vec<u64>, usize, usize);
-
-impl CellResult {
-    /// Machine-readable cell record. `final_cost` is duplicated as exact
-    /// bits (`final_cost_bits`, hex): JSON numbers cannot carry `±∞`
-    /// (serialized as `null`) and decimal round-trips are not part of the
-    /// determinism contract — the bits field is authoritative for
-    /// [`CellResult::from_json`].
-    pub fn to_json(&self) -> Json {
-        let mut o = Json::obj();
-        o.set("index", Json::Num(self.index as f64))
-            .set("scenario", Json::Str(self.cell.scenario.clone()))
-            .set("seed", Json::Num(self.cell.seed as f64))
-            .set(
-                "algorithm",
-                Json::Str(self.cell.algorithm.name().to_string()),
-            )
-            .set("backend", Json::Str(self.cell.backend.name().to_string()))
-            .set("schedule", Json::Str(self.cell.schedule.label()))
-            .set("final_cost", Json::Num(self.final_cost))
-            .set(
-                "final_cost_bits",
-                Json::Str(format!("{:016x}", self.final_cost.to_bits())),
-            )
-            .set("iterations", Json::Num(self.iterations as f64))
-            .set("iters_to_1pct", Json::Num(self.iters_to_1pct as f64))
-            .set("wall_seconds", Json::Num(self.wall_seconds));
-        if !self.epoch_costs.is_empty() {
-            o.set(
-                "epoch_cost_bits",
-                Json::Arr(
-                    self.epoch_costs
-                        .iter()
-                        .map(|c| Json::Str(format!("{:016x}", c.to_bits())))
-                        .collect(),
-                ),
-            );
-        }
-        o
-    }
-
-    /// Parse a cell record produced by [`CellResult::to_json`] (or a
-    /// protocol line carrying the same fields).
-    pub fn from_json(doc: &Json) -> Result<CellResult> {
-        let scenario = doc
-            .get("scenario")
-            .as_str()
-            .context("cell record missing scenario")?
-            .to_string();
-        let seed = doc.get("seed").as_num().context("cell record missing seed")? as u64;
-        let algorithm = {
-            let a = doc
-                .get("algorithm")
-                .as_str()
-                .context("cell record missing algorithm")?;
-            Algorithm::parse(a).with_context(|| format!("unknown algorithm '{a}'"))?
-        };
-        let backend = {
-            let b = doc
-                .get("backend")
-                .as_str()
-                .context("cell record missing backend")?;
-            CellBackend::parse(b).with_context(|| format!("unknown backend '{b}'"))?
-        };
-        // hand-authored pre-dynamics records may omit the schedule; every
-        // writer since the schedule axis emits it, and the grid hash keeps
-        // mixed-schedule artifacts from merging regardless
-        let schedule = match doc.get("schedule").as_str() {
-            Some(s) => PatternSchedule::parse(s)
-                .with_context(|| format!("bad cell schedule '{s}'"))?,
-            None => PatternSchedule::static_(),
-        };
-        let epoch_costs = match doc.get("epoch_cost_bits").as_arr() {
-            Some(xs) => xs
-                .iter()
-                .enumerate()
-                .map(|(k, x)| {
-                    let hex = x
-                        .as_str()
-                        .with_context(|| format!("epoch_cost_bits[{k}] is not a string"))?;
-                    Ok(f64::from_bits(u64::from_str_radix(hex, 16).with_context(
-                        || format!("bad epoch_cost_bits[{k}] '{hex}'"),
-                    )?))
-                })
-                .collect::<Result<Vec<_>>>()?,
-            None => Vec::new(),
-        };
-        let final_cost = match doc.get("final_cost_bits").as_str() {
-            Some(hex) => f64::from_bits(
-                u64::from_str_radix(hex, 16)
-                    .with_context(|| format!("bad final_cost_bits '{hex}'"))?,
-            ),
-            None => {
-                // hand-authored records may carry only the decimal field;
-                // require it explicitly — a record with *neither* field is
-                // corrupt, not saturated. (The serializer writes non-finite
-                // costs as JSON null, so an explicit null means +∞.)
-                let present = doc
-                    .as_obj()
-                    .is_some_and(|m| m.contains_key("final_cost"));
-                anyhow::ensure!(
-                    present,
-                    "cell record missing final_cost_bits and final_cost"
-                );
-                match doc.get("final_cost") {
-                    Json::Num(x) => *x,
-                    Json::Null => f64::INFINITY,
-                    other => bail!(
-                        "cell record final_cost must be a number or null, got {other:?}"
-                    ),
-                }
-            }
-        };
-        Ok(CellResult {
-            index: doc
-                .get("index")
-                .as_usize()
-                .context("cell record missing index")?,
-            cell: SweepCell {
-                scenario,
-                seed,
-                algorithm,
-                backend,
-                schedule,
-            },
-            final_cost,
-            iterations: doc
-                .get("iterations")
-                .as_usize()
-                .context("cell record missing iterations")?,
-            iters_to_1pct: doc
-                .get("iters_to_1pct")
-                .as_usize()
-                .context("cell record missing iters_to_1pct")?,
-            wall_seconds: doc.get("wall_seconds").as_num().unwrap_or(0.0),
-            epoch_costs,
-        })
-    }
-}
-
-impl SweepReport {
-    /// Per-`(scenario, algorithm, backend, schedule)` aggregates in
-    /// first-appearance order.
-    pub fn groups(&self) -> Vec<GroupSummary> {
-        let mut order: Vec<(String, String, String, String)> = Vec::new();
-        let mut buckets: Vec<Vec<&CellResult>> = Vec::new();
-        for cell in &self.cells {
-            let key = (
-                cell.cell.scenario.clone(),
-                cell.cell.algorithm.name().to_string(),
-                cell.cell.backend.name().to_string(),
-                cell.cell.schedule.label(),
-            );
-            match order.iter().position(|k| *k == key) {
-                Some(i) => buckets[i].push(cell),
-                None => {
-                    order.push(key);
-                    buckets.push(vec![cell]);
-                }
-            }
-        }
-        order
-            .into_iter()
-            .zip(buckets)
-            .map(|((scenario, algorithm, backend, schedule), cells)| {
-                let costs: Vec<f64> = cells.iter().map(|c| c.final_cost).collect();
-                let s = summarize(&costs);
-                let n = cells.len() as f64;
-                GroupSummary {
-                    scenario,
-                    algorithm,
-                    backend,
-                    schedule,
-                    cells: cells.len(),
-                    mean_cost: s.mean,
-                    p95_cost: s.p95,
-                    mean_iters_to_1pct: cells
-                        .iter()
-                        .map(|c| c.iters_to_1pct as f64)
-                        .sum::<f64>()
-                        / n,
-                    mean_wall_seconds: cells.iter().map(|c| c.wall_seconds).sum::<f64>() / n,
-                }
-            })
-            .collect()
-    }
-
-    /// Deterministic identity of the sweep's results: everything except
-    /// wall-clock timing and worker/shard metadata, with costs compared
-    /// bit-for-bit. Two sweeps of the same spec must produce equal
-    /// fingerprints regardless of worker count
-    /// (`rust/tests/sweep_determinism.rs`) or shard count
-    /// (`rust/tests/sweep_shard.rs`).
-    pub fn fingerprint(&self) -> Vec<CellFingerprint> {
-        self.cells
-            .iter()
-            .map(|c| {
-                (
-                    c.cell.scenario.clone(),
-                    c.cell.seed,
-                    c.cell.algorithm.name().to_string(),
-                    c.cell.backend.name().to_string(),
-                    c.cell.schedule.label(),
-                    c.final_cost.to_bits(),
-                    c.epoch_costs.iter().map(|x| x.to_bits()).collect(),
-                    c.iterations,
-                    c.iters_to_1pct,
-                )
-            })
-            .collect()
-    }
-
-    /// Paper-style text table of the group aggregates.
-    pub fn render(&self) -> String {
-        let mut t = Table::new(&[
-            "scenario",
-            "algo",
-            "backend",
-            "schedule",
-            "cells",
-            "mean T",
-            "p95 T",
-            "iters->1%",
-            "mean wall s",
-        ]);
-        for g in self.groups() {
-            t.row(vec![
-                g.scenario,
-                g.algorithm,
-                g.backend,
-                g.schedule,
-                g.cells.to_string(),
-                fnum(g.mean_cost),
-                fnum(g.p95_cost),
-                format!("{:.1}", g.mean_iters_to_1pct),
-                format!("{:.3}", g.mean_wall_seconds),
-            ]);
-        }
-        t.render()
-    }
-
-    /// Machine-readable report (cells + groups). Shard reports written
-    /// this way are first-class artifacts: [`SweepReport::from_json`] +
-    /// [`SweepReport::merge`] reassemble them.
-    pub fn to_json(&self) -> Json {
-        let cells: Vec<Json> = self.cells.iter().map(CellResult::to_json).collect();
-        let groups: Vec<Json> = self
-            .groups()
-            .into_iter()
-            .map(|g| {
-                let mut o = Json::obj();
-                o.set("scenario", Json::Str(g.scenario))
-                    .set("algorithm", Json::Str(g.algorithm))
-                    .set("backend", Json::Str(g.backend))
-                    .set("schedule", Json::Str(g.schedule))
-                    .set("cells", Json::Num(g.cells as f64))
-                    .set("mean_cost", Json::Num(g.mean_cost))
-                    .set("p95_cost", Json::Num(g.p95_cost))
-                    .set("mean_iters_to_1pct", Json::Num(g.mean_iters_to_1pct))
-                    .set("mean_wall_seconds", Json::Num(g.mean_wall_seconds));
-                o
-            })
-            .collect();
-        let mut doc = Json::obj();
-        doc.set("workers", Json::Num(self.workers as f64))
-            // hex string: u64 hashes exceed f64's exact-integer range
-            .set("grid_hash", Json::Str(format!("{:016x}", self.grid_hash)))
-            .set("cells", Json::Arr(cells))
-            .set("groups", Json::Arr(groups));
-        doc
-    }
-
-    /// Parse a report (or shard report) written by [`SweepReport::to_json`].
-    /// Cells are re-sorted by their global index; the derived `groups`
-    /// section is ignored (it is recomputed on demand).
-    pub fn from_json(doc: &Json) -> Result<SweepReport> {
-        let cells_json = doc
-            .get("cells")
-            .as_arr()
-            .context("sweep report missing cells array")?;
-        let mut cells = cells_json
-            .iter()
-            .enumerate()
-            .map(|(k, c)| CellResult::from_json(c).with_context(|| format!("cell record {k}")))
-            .collect::<Result<Vec<_>>>()?;
-        cells.sort_by_key(|c| c.index);
-        let grid_hash = match doc.get("grid_hash").as_str() {
-            Some(hex) => u64::from_str_radix(hex, 16)
-                .with_context(|| format!("bad grid_hash '{hex}'"))?,
-            None => 0,
-        };
-        Ok(SweepReport {
-            cells,
-            workers: doc.get("workers").as_usize().unwrap_or(0),
-            grid_hash,
-        })
-    }
-
-    /// Merge shard reports back into one full-grid report: cells are
-    /// reassembled by global index, which must form exactly `0..total`
-    /// (duplicates and gaps are contextful errors), and every part must
-    /// carry the same [`spec_grid_hash`] — shards of *different* sweeps
-    /// with same-sized grids would otherwise interleave silently.
-    /// Fingerprint-identical to the single-process run of the same spec.
-    pub fn merge(parts: Vec<SweepReport>) -> Result<SweepReport> {
-        let mut grid_hash = 0u64;
-        for p in &parts {
-            if p.grid_hash == 0 {
-                continue; // hand-built report: no identity to check
-            }
-            if grid_hash == 0 {
-                grid_hash = p.grid_hash;
-            } else if p.grid_hash != grid_hash {
-                bail!(
-                    "shard merge: reports come from different sweep specs \
-                     (grid hash {:016x} vs {:016x})",
-                    grid_hash,
-                    p.grid_hash
-                );
-            }
-        }
-        let workers = parts.iter().map(|p| p.workers).sum::<usize>().max(1);
-        let mut cells: Vec<CellResult> = parts.into_iter().flat_map(|p| p.cells).collect();
-        anyhow::ensure!(!cells.is_empty(), "merging empty shard reports");
-        cells.sort_by_key(|c| c.index);
-        for (k, c) in cells.iter().enumerate() {
-            if c.index != k {
-                if c.index < k {
-                    bail!(
-                        "shard merge: duplicate result for {}",
-                        describe_cell(c.index, &c.cell)
-                    );
-                }
-                bail!(
-                    "shard merge: missing cell index {k} — the shard reports do not cover \
-                     the whole grid"
-                );
-            }
-        }
-        Ok(SweepReport {
-            cells,
-            workers,
-            grid_hash,
-        })
-    }
-}
-
-// ---------------------------------------------------------------------------
-// CLI list parsers
-// ---------------------------------------------------------------------------
-
-/// Parse a comma-separated scenario list (`"abilene,connected-er"`).
-pub fn parse_scenarios(s: &str) -> Vec<String> {
-    s.split(',')
-        .map(str::trim)
-        .filter(|t| !t.is_empty())
-        .map(str::to_string)
-        .collect()
-}
-
-/// Largest seed accepted from the CLI: seeds are reported in JSON, whose
-/// numbers are f64, so anything above 2^53 would silently collide with a
-/// neighbor in `sweep.json`.
-const MAX_SEED: u64 = 1 << 53;
-
-/// Parse a comma-separated seed list (`"1,2,3"`) or an inclusive range
-/// (`"1..8"`). Seeds above 2^53 are rejected (not representable in the
-/// JSON report).
-pub fn parse_seeds(s: &str) -> Result<Vec<u64>> {
-    let check = |seed: u64| -> Result<u64> {
-        anyhow::ensure!(
-            seed <= MAX_SEED,
-            "seed {seed} exceeds 2^53 and would lose precision in the JSON report"
-        );
-        Ok(seed)
-    };
-    if let Some((lo, hi)) = s.split_once("..") {
-        let lo: u64 = lo.trim().parse().context("seed range start")?;
-        let hi: u64 = check(hi.trim().parse().context("seed range end")?)?;
-        anyhow::ensure!(lo <= hi, "empty seed range {lo}..{hi}");
-        return Ok((lo..=hi).collect());
-    }
-    s.split(',')
-        .map(str::trim)
-        .filter(|t| !t.is_empty())
-        .map(|t| {
-            t.parse::<u64>()
-                .with_context(|| format!("bad seed '{t}'"))
-                .and_then(check)
-        })
-        .collect()
-}
-
-/// Parse a comma-separated algorithm list (`"sgp,gp,lpr"`).
-pub fn parse_algorithms(s: &str) -> Result<Vec<Algorithm>> {
-    s.split(',')
-        .map(str::trim)
-        .filter(|t| !t.is_empty())
-        .map(|t| Algorithm::parse(t).with_context(|| format!("unknown algorithm '{t}'")))
-        .collect()
-}
-
-/// Parse a comma-separated backend list (`"sparse,native"`).
-pub fn parse_backends(s: &str) -> Result<Vec<CellBackend>> {
-    s.split(',')
-        .map(str::trim)
-        .filter(|t| !t.is_empty())
-        .map(|t| CellBackend::parse(t).with_context(|| format!("unknown backend '{t}'")))
-        .collect()
-}
-
-/// Parse a comma-separated schedule list (`"static,step:3:1.5"`) — the
-/// `--schedules` CLI flag (re-exported from [`super::dynamics`]).
-pub use super::dynamics::parse_schedules;
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn abilene_spec() -> SweepSpec {
-        SweepSpec {
-            scenarios: vec!["abilene".into()],
-            seeds: vec![1, 2],
-            algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
-            backends: vec![CellBackend::Sparse],
-            schedules: vec![PatternSchedule::static_()],
-            rate_scale: 1.0,
-            run: RunConfig::quick(),
-        }
-    }
-
     #[test]
-    fn cell_grid_order_is_canonical() {
+    fn cell_grid_order_is_canonical_and_skips_invalid_pairings() {
         let spec = SweepSpec {
             scenarios: vec!["a".into(), "b".into()],
             seeds: vec![1, 2],
@@ -1310,120 +497,50 @@ mod tests {
         assert_eq!(cells[1].algorithm, Algorithm::Lpr);
         assert_eq!(cells[2].seed, 2);
         assert_eq!(cells[4].scenario, "b");
-    }
 
-    #[test]
-    fn grid_skips_dense_backends_for_baselines() {
+        // dense backends only pair with SGP; dynamic schedules only with
+        // the iterative algorithms
         let spec = SweepSpec {
             scenarios: vec!["a".into()],
             seeds: vec![1],
-            algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
             backends: vec![CellBackend::Sparse, CellBackend::Native],
-            schedules: vec![PatternSchedule::static_()],
-            rate_scale: 1.0,
-            run: RunConfig::quick(),
-        };
-        let cells = spec.cells();
-        // sgp×sparse, sgp×native, lpr×sparse — no lpr×native
-        assert_eq!(cells.len(), 3);
-        assert_eq!(
-            (cells[0].algorithm, cells[0].backend),
-            (Algorithm::Sgp, CellBackend::Sparse)
-        );
-        assert_eq!(
-            (cells[1].algorithm, cells[1].backend),
-            (Algorithm::Sgp, CellBackend::Native)
-        );
-        assert_eq!(
-            (cells[2].algorithm, cells[2].backend),
-            (Algorithm::Lpr, CellBackend::Sparse)
-        );
-    }
-
-    #[test]
-    fn grid_skips_dynamic_schedules_for_non_iterative_algorithms() {
-        let spec = SweepSpec {
-            scenarios: vec!["a".into()],
-            seeds: vec![1],
-            algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
-            backends: vec![CellBackend::Sparse],
             schedules: vec![
                 PatternSchedule::static_(),
                 PatternSchedule::parse("step:3:1.5").unwrap(),
             ],
-            rate_scale: 1.0,
-            run: RunConfig::quick(),
+            ..spec
         };
-        let cells = spec.cells();
-        // sgp×static, sgp×step, lpr×static — no lpr×step (LPR is one-shot)
-        assert_eq!(cells.len(), 3);
-        assert!(cells[0].schedule.is_static());
-        assert_eq!(cells[1].schedule.label(), "step:3:1.5");
-        assert_eq!(cells[1].algorithm, Algorithm::Sgp);
-        assert_eq!(cells[2].algorithm, Algorithm::Lpr);
-        assert!(cells[2].schedule.is_static());
+        let combos: Vec<(Algorithm, CellBackend, bool)> = spec
+            .cells()
+            .iter()
+            .map(|c| (c.algorithm, c.backend, c.schedule.is_static()))
+            .collect();
+        assert_eq!(
+            combos,
+            vec![
+                (Algorithm::Sgp, CellBackend::Sparse, true),
+                (Algorithm::Sgp, CellBackend::Sparse, false),
+                (Algorithm::Sgp, CellBackend::Native, true),
+                (Algorithm::Sgp, CellBackend::Native, false),
+                (Algorithm::Lpr, CellBackend::Sparse, true),
+            ]
+        );
     }
 
     #[test]
-    fn dynamic_cells_record_per_epoch_costs_and_group_separately() {
-        let spec = SweepSpec {
-            scenarios: vec!["abilene".into()],
-            seeds: vec![1],
-            algorithms: vec![Algorithm::Sgp],
-            backends: vec![CellBackend::Sparse],
-            schedules: vec![
-                PatternSchedule::static_(),
-                PatternSchedule::parse("step:3:1.5").unwrap(),
-            ],
-            rate_scale: 1.0,
-            run: RunConfig::quick(),
-        };
-        let report = run_sweep(&spec, 2).unwrap();
-        assert_eq!(report.cells.len(), 2);
-        assert!(report.cells[0].epoch_costs.is_empty());
-        assert_eq!(report.cells[1].epoch_costs.len(), 3);
-        assert_eq!(
-            report.cells[1].final_cost.to_bits(),
-            report.cells[1].epoch_costs[2].to_bits(),
-            "a dynamic cell reports its last epoch's cost"
-        );
-        let groups = report.groups();
-        assert_eq!(groups.len(), 2, "schedules must not pool in one group");
-        assert_eq!(groups[0].schedule, "static");
-        assert_eq!(groups[1].schedule, "step:3:1.5");
-        // the schedule axis shows up in the rendered table and the JSON
-        assert!(report.render().contains("step:3:1.5"));
-        let back = SweepReport::from_json(
-            &Json::parse(&report.to_json().pretty()).unwrap(),
-        )
-        .unwrap();
-        assert_eq!(back.fingerprint(), report.fingerprint());
-    }
-
-    #[test]
-    fn sweep_runs_and_aggregates() {
-        let spec = abilene_spec();
-        let report = run_sweep(&spec, 2).unwrap();
-        assert_eq!(report.cells.len(), 4);
-        // indices are the canonical grid positions
-        assert_eq!(
-            report.cells.iter().map(|c| c.index).collect::<Vec<_>>(),
-            vec![0, 1, 2, 3]
-        );
-        let groups = report.groups();
-        assert_eq!(groups.len(), 2);
-        assert_eq!(groups[0].algorithm, "sgp");
-        assert_eq!(groups[0].backend, "sparse");
-        assert_eq!(groups[0].cells, 2);
-        assert!(groups[0].mean_cost.is_finite());
-        // Fig. 4 headline on the means: SGP at or below LPR (same relative
-        // tolerance as the fig4 bench's shape check)
-        assert!(groups[0].mean_cost <= groups[1].mean_cost * 1.001);
-        let txt = report.render();
-        assert!(txt.contains("abilene"));
-        assert!(txt.contains("sgp"));
-        let doc = report.to_json();
-        assert_eq!(doc.get("cells").as_arr().unwrap().len(), 4);
+    fn grid_hash_tracks_every_axis_and_the_stopping_rule() {
+        let base = SweepSpec::default();
+        let h = spec_grid_hash(&base);
+        assert_eq!(h, spec_grid_hash(&base.clone()), "hash must be stable");
+        let mut other = base.clone();
+        other.seeds = vec![1, 2, 4];
+        assert_ne!(h, spec_grid_hash(&other));
+        let mut other = base.clone();
+        other.schedules = vec![PatternSchedule::parse("step:2:1.5").unwrap()];
+        assert_ne!(h, spec_grid_hash(&other));
+        let mut other = base.clone();
+        other.run.tol = base.run.tol * 2.0;
+        assert_ne!(h, spec_grid_hash(&other));
     }
 
     #[test]
@@ -1448,139 +565,10 @@ mod tests {
     }
 
     #[test]
-    fn panicking_cell_fails_cleanly_without_deadlock() {
-        // Inject a panic into one cell of a real grid: the pool must join
-        // all workers, skip unclaimed cells, and surface the panic as that
-        // cell's error — not deadlock, not propagate the unwind.
-        let spec = SweepSpec {
-            scenarios: vec!["abilene".into()],
-            seeds: vec![1, 2, 3, 4],
-            algorithms: vec![Algorithm::Lpr],
-            backends: vec![CellBackend::Sparse],
-            schedules: vec![PatternSchedule::static_()],
-            rate_scale: 1.0,
-            run: RunConfig::quick(),
-        };
-        let cells: Vec<(usize, SweepCell)> = spec.cells().into_iter().enumerate().collect();
-        let err = run_cells_with(
-            &cells,
-            2,
-            |i, c| {
-                if i == 1 {
-                    panic!("injected cell panic");
-                }
-                run_cell(i, c, &spec)
-            },
-            None,
-        )
-        .unwrap_err();
-        let msg = format!("{err:#}");
-        assert!(msg.contains("injected cell panic"), "{msg}");
-        assert!(msg.contains("sweep cell 1"), "{msg}");
-    }
-
-    #[test]
-    fn shard_indices_partition_the_grid() {
-        for count in [1usize, 2, 3, 4, 7] {
-            let mut seen = vec![false; 10];
-            for shard in 0..count {
-                for i in shard_cell_indices(10, shard, count) {
-                    assert!(!seen[i], "index {i} assigned twice (count {count})");
-                    seen[i] = true;
-                    assert_eq!(i % count, shard, "striding violated");
-                }
-            }
-            assert!(seen.iter().all(|&s| s), "indices dropped (count {count})");
-        }
-    }
-
-    #[test]
-    fn in_process_shards_merge_to_the_full_report() {
-        let spec = abilene_spec();
-        let whole = run_sweep(&spec, 2).unwrap();
-        for count in [1usize, 2, 4] {
-            let parts: Vec<SweepReport> = (0..count)
-                .map(|k| run_sweep_shard(&spec, k, count, 2).unwrap())
-                .collect();
-            let merged = SweepReport::merge(parts).unwrap();
-            assert_eq!(
-                merged.fingerprint(),
-                whole.fingerprint(),
-                "{count} shard(s) drifted from the single-process run"
-            );
-        }
-    }
-
-    #[test]
-    fn merge_rejects_gaps_and_duplicates() {
-        let spec = abilene_spec();
-        let a = run_sweep_shard(&spec, 0, 2, 1).unwrap();
-        let b = run_sweep_shard(&spec, 1, 2, 1).unwrap();
-        // missing shard
-        let err = SweepReport::merge(vec![a.clone()]).unwrap_err().to_string();
-        assert!(err.contains("missing cell index"), "{err}");
-        // duplicate shard
-        let err = SweepReport::merge(vec![a.clone(), a.clone(), b.clone()])
-            .unwrap_err()
-            .to_string();
-        assert!(err.contains("duplicate"), "{err}");
-        // correct merge still fine
-        assert!(SweepReport::merge(vec![a, b]).is_ok());
-    }
-
-    #[test]
-    fn report_json_roundtrip_is_bit_exact() {
-        // Hand-built report with awkward values (∞ cost from a saturated
-        // cell): serde must round-trip the fingerprint exactly even though
-        // JSON itself cannot represent ∞.
-        let mk = |index: usize, cost: f64| CellResult {
-            index,
-            cell: SweepCell {
-                scenario: "abilene".into(),
-                seed: 1 + index as u64,
-                algorithm: Algorithm::Sgp,
-                backend: CellBackend::Native,
-                schedule: PatternSchedule::parse("step:2:1.5").unwrap(),
-            },
-            final_cost: cost,
-            iterations: 5,
-            iters_to_1pct: 2,
-            wall_seconds: 0.25,
-            epoch_costs: vec![123.5, cost],
-        };
-        let report = SweepReport {
-            cells: vec![mk(0, 123.456_789_012_345), mk(1, f64::INFINITY)],
-            workers: 3,
-            grid_hash: 0xdead_beef_0042_1337,
-        };
-        let text = report.to_json().pretty();
-        let back = SweepReport::from_json(&Json::parse(&text).unwrap()).unwrap();
-        assert_eq!(report.fingerprint(), back.fingerprint());
-        assert!(back.cells[1].final_cost.is_infinite());
-        assert_eq!(back.workers, 3);
-        assert_eq!(back.grid_hash, report.grid_hash);
-    }
-
-    #[test]
-    fn merge_rejects_shards_of_different_specs() {
-        // equal-sized grids from different specs: index coverage alone
-        // would pass, the grid hash must not
-        let spec_a = abilene_spec();
-        let spec_b = SweepSpec {
-            seeds: vec![1, 3],
-            ..abilene_spec()
-        };
-        let a = run_sweep_shard(&spec_a, 0, 2, 1).unwrap();
-        let b = run_sweep_shard(&spec_b, 1, 2, 1).unwrap();
-        let err = SweepReport::merge(vec![a, b]).unwrap_err().to_string();
-        assert!(err.contains("different sweep specs"), "{err}");
-    }
-
-    #[test]
     fn oversized_seeds_rejected_before_running() {
         let spec = SweepSpec {
             seeds: vec![(1 << 53) + 1],
-            ..abilene_spec()
+            ..SweepSpec::default()
         };
         let err = run_sweep(&spec, 1).unwrap_err().to_string();
         assert!(err.contains("2^53"), "{err}");
@@ -1588,133 +576,25 @@ mod tests {
     }
 
     #[test]
-    fn corrupt_cell_records_are_rejected_not_defaulted() {
-        let base = r#"{"index":0,"scenario":"abilene","seed":1,"algorithm":"sgp",
-                       "backend":"sparse","iterations":3,"iters_to_1pct":1,
-                       "wall_seconds":0.1"#;
-        // neither final_cost_bits nor final_cost: corrupt, not saturated
-        let doc = Json::parse(&format!("{base}}}")).unwrap();
-        let err = CellResult::from_json(&doc).unwrap_err().to_string();
-        assert!(err.contains("final_cost"), "{err}");
-        // an explicit null cost (the serializer's spelling of ∞) still loads
-        let doc = Json::parse(&format!("{base},\"final_cost\":null}}")).unwrap();
-        assert!(CellResult::from_json(&doc).unwrap().final_cost.is_infinite());
-        // a missing backend is an error too (every writer emits it)
-        let doc = Json::parse(
-            r#"{"index":0,"scenario":"abilene","seed":1,"algorithm":"sgp",
-                "final_cost":2.5,"iterations":3,"iters_to_1pct":1,"wall_seconds":0.1}"#,
-        )
-        .unwrap();
-        let err = CellResult::from_json(&doc).unwrap_err().to_string();
-        assert!(err.contains("backend"), "{err}");
-    }
-
-    #[test]
-    fn shard_protocol_lines_roundtrip() {
-        let cell = CellResult {
-            index: 7,
-            cell: SweepCell {
-                scenario: "connected-er".into(),
-                seed: 3,
-                algorithm: Algorithm::Gp,
-                backend: CellBackend::Sparse,
-                schedule: PatternSchedule::parse("bursty:4:2").unwrap(),
-            },
-            final_cost: f64::INFINITY,
-            iterations: 80,
-            iters_to_1pct: 80,
-            wall_seconds: 1.5,
-            epoch_costs: vec![10.0, f64::INFINITY, 9.5, f64::INFINITY],
-        };
-        match parse_shard_line(&cell_line(&cell)).unwrap() {
-            ShardLine::Cell(c) => {
-                assert_eq!(c.index, 7);
-                assert_eq!(c.cell, cell.cell);
-                assert_eq!(c.final_cost.to_bits(), cell.final_cost.to_bits());
-                // per-epoch finals travel the protocol bit-exactly, ∞ included
-                assert_eq!(
-                    c.epoch_costs.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
-                    cell.epoch_costs.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
-                );
-            }
-            other => panic!("wrong line kind: {other:?}"),
-        }
-        match parse_shard_line(&done_line(1, 9)).unwrap() {
-            ShardLine::Done { shard, cells } => {
-                assert_eq!((shard, cells), (1, 9));
-            }
-            other => panic!("wrong line kind: {other:?}"),
-        }
-        match parse_shard_line(&error_line("boom: cell 3")).unwrap() {
-            ShardLine::Error { message } => assert!(message.contains("boom")),
-            other => panic!("wrong line kind: {other:?}"),
-        }
-        assert!(parse_shard_line("not json").is_err());
-        assert!(parse_shard_line("{\"type\":\"wat\"}").is_err());
-    }
-
-    #[test]
-    fn shard_arg_parses_one_based() {
-        assert_eq!(parse_shard_arg("1/4").unwrap(), (0, 4));
-        assert_eq!(parse_shard_arg("4/4").unwrap(), (3, 4));
-        assert!(parse_shard_arg("0/4").is_err());
-        assert!(parse_shard_arg("5/4").is_err());
-        assert!(parse_shard_arg("x/4").is_err());
-        assert!(parse_shard_arg("2").is_err());
-    }
-
-    #[test]
-    fn spec_args_roundtrip_through_the_parsers() {
+    fn steal_cells_run_the_exact_subset_with_global_indices() {
         let spec = SweepSpec {
-            scenarios: vec!["abilene".into(), "connected-er".into()],
-            seeds: vec![1, 5, 9],
-            algorithms: vec![Algorithm::Sgp, Algorithm::Gp],
-            backends: vec![CellBackend::Sparse, CellBackend::Native],
-            schedules: vec![
-                PatternSchedule::static_(),
-                PatternSchedule::parse("step:3:1.5").unwrap(),
-            ],
-            rate_scale: 1.25,
-            run: RunConfig {
-                max_iters: 33,
-                tol: 3e-6,
-                patience: 4,
-            },
+            scenarios: vec!["abilene".into()],
+            seeds: vec![1, 2],
+            algorithms: vec![Algorithm::Lpr],
+            backends: vec![CellBackend::Sparse],
+            schedules: vec![PatternSchedule::static_()],
+            rate_scale: 1.0,
+            run: RunConfig::quick(),
         };
-        let args = spec_to_args(&spec);
-        let get = |flag: &str| -> &str {
-            let i = args.iter().position(|a| a == flag).unwrap();
-            &args[i + 1]
-        };
-        assert_eq!(parse_scenarios(get("--scenarios")), spec.scenarios);
-        assert_eq!(parse_seeds(get("--seeds")).unwrap(), spec.seeds);
-        assert_eq!(parse_algorithms(get("--algos")).unwrap(), spec.algorithms);
-        assert_eq!(parse_backends(get("--backends")).unwrap(), spec.backends);
-        assert_eq!(parse_schedules(get("--schedules")).unwrap(), spec.schedules);
-        assert_eq!(get("--scale").parse::<f64>().unwrap(), spec.rate_scale);
-        assert_eq!(get("--iters").parse::<usize>().unwrap(), 33);
-        assert_eq!(get("--tol").parse::<f64>().unwrap().to_bits(), 3e-6f64.to_bits());
-        assert_eq!(get("--patience").parse::<usize>().unwrap(), 4);
-    }
-
-    #[test]
-    fn list_parsers() {
-        assert_eq!(parse_scenarios("a, b,"), vec!["a", "b"]);
-        assert_eq!(parse_seeds("1, 2,3").unwrap(), vec![1, 2, 3]);
-        assert_eq!(parse_seeds("4..6").unwrap(), vec![4, 5, 6]);
-        assert!(parse_seeds("9..2").is_err());
-        assert!(parse_seeds("x").is_err());
-        // seeds past 2^53 would alias in the f64-backed JSON report
-        assert!(parse_seeds("9007199254740993").is_err());
+        let whole = run_sweep(&spec, 1).unwrap();
+        let stolen = run_sweep_cells_with(&spec, &[1], 1, |_| {}).unwrap();
+        assert_eq!(stolen.cells.len(), 1);
+        assert_eq!(stolen.cells[0].index, 1);
         assert_eq!(
-            parse_algorithms("sgp,lpr").unwrap(),
-            vec![Algorithm::Sgp, Algorithm::Lpr]
+            stolen.cells[0].final_cost.to_bits(),
+            whole.cells[1].final_cost.to_bits(),
+            "a re-stolen cell must be bit-identical to its original run"
         );
-        assert!(parse_algorithms("sgp,zzz").is_err());
-        assert_eq!(
-            parse_backends("sparse, native").unwrap(),
-            vec![CellBackend::Sparse, CellBackend::Native]
-        );
-        assert!(parse_backends("sparse,zzz").is_err());
+        assert!(run_sweep_cells_with(&spec, &[99], 1, |_| {}).is_err());
     }
 }

@@ -1,0 +1,654 @@
+//! The sweep *report* data model: per-cell results aggregated into
+//! group summaries (including per-epoch mean/p95 trajectories for
+//! dynamic-schedule groups), the bit-exact result fingerprint, and the
+//! JSON artifact surface — serialization, index-verified loading, and
+//! hash-verified shard merge via the engine's artifact layer
+//! ([`crate::coordinator::exec::artifact`]).
+//!
+//! The grid *definition* and execution entry points live in
+//! [`super::sweep`]; this module owns everything about a sweep's
+//! *outputs*: [`SweepReport`], [`GroupSummary`], [`CellFingerprint`],
+//! and the serde impls of [`CellResult`].
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::stats::summarize;
+use crate::util::table::{fnum, Table};
+
+use super::dynamics::PatternSchedule;
+use super::exec::artifact::{f64_bits_hex, parse_f64_bits_hex, u64_hex, Artifact, ArtifactItem};
+use super::exec::grid::GridCell;
+use super::sweep::{CellResult, SweepCell};
+use super::{Algorithm, CellBackend};
+
+/// Aggregate over the seeds of one
+/// `(scenario, algorithm, backend, schedule)` group.
+#[derive(Clone, Debug)]
+pub struct GroupSummary {
+    pub scenario: String,
+    pub algorithm: String,
+    pub backend: String,
+    pub schedule: String,
+    pub cells: usize,
+    pub mean_cost: f64,
+    pub p95_cost: f64,
+    pub mean_iters_to_1pct: f64,
+    pub mean_wall_seconds: f64,
+    /// Per-epoch mean cost trajectory across the group's cells (empty for
+    /// static-schedule groups, whose cells record no epochs).
+    pub epoch_mean_cost: Vec<f64>,
+    /// Per-epoch p95 cost trajectory across the group's cells.
+    pub epoch_p95_cost: Vec<f64>,
+}
+
+/// A completed sweep: per-cell results in grid order plus aggregation.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub cells: Vec<CellResult>,
+    /// Worker threads used (total budget for sharded runs). Metadata only
+    /// — like wall times, excluded from [`SweepReport::fingerprint`].
+    pub workers: usize,
+    /// Identity of the generating spec ([`super::sweep::spec_grid_hash`]);
+    /// `0` when unknown (hand-built reports). [`SweepReport::merge`]
+    /// refuses to combine shard reports whose nonzero hashes differ.
+    pub grid_hash: u64,
+}
+
+/// One cell's identity inside [`SweepReport::fingerprint`]: scenario,
+/// seed, algorithm, backend, schedule label, cost bits, per-epoch cost
+/// bits (empty for static cells), iterations, iters-to-1%.
+pub type CellFingerprint = (String, u64, String, String, String, u64, Vec<u64>, usize, usize);
+
+impl CellResult {
+    /// Machine-readable cell record. `final_cost` is duplicated as exact
+    /// bits (`final_cost_bits`, hex): JSON numbers cannot carry `±∞`
+    /// (serialized as `null`) and decimal round-trips are not part of the
+    /// determinism contract — the bits field is authoritative for
+    /// [`CellResult::from_json`].
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("index", Json::Num(self.index as f64))
+            .set("scenario", Json::Str(self.cell.scenario.clone()))
+            .set("seed", Json::Num(self.cell.seed as f64))
+            .set(
+                "algorithm",
+                Json::Str(self.cell.algorithm.name().to_string()),
+            )
+            .set("backend", Json::Str(self.cell.backend.name().to_string()))
+            .set("schedule", Json::Str(self.cell.schedule.label()))
+            .set("final_cost", Json::Num(self.final_cost))
+            .set("final_cost_bits", Json::Str(f64_bits_hex(self.final_cost)))
+            .set("iterations", Json::Num(self.iterations as f64))
+            .set("iters_to_1pct", Json::Num(self.iters_to_1pct as f64))
+            .set("wall_seconds", Json::Num(self.wall_seconds));
+        if !self.epoch_costs.is_empty() {
+            o.set(
+                "epoch_cost_bits",
+                Json::Arr(
+                    self.epoch_costs
+                        .iter()
+                        .map(|c| Json::Str(f64_bits_hex(*c)))
+                        .collect(),
+                ),
+            );
+        }
+        o
+    }
+
+    /// Parse a cell record produced by [`CellResult::to_json`] (or a
+    /// protocol line carrying the same fields).
+    pub fn from_json(doc: &Json) -> Result<CellResult> {
+        let scenario = doc
+            .get("scenario")
+            .as_str()
+            .context("cell record missing scenario")?
+            .to_string();
+        let seed = doc.get("seed").as_num().context("cell record missing seed")? as u64;
+        let algorithm = {
+            let a = doc
+                .get("algorithm")
+                .as_str()
+                .context("cell record missing algorithm")?;
+            Algorithm::parse(a).with_context(|| format!("unknown algorithm '{a}'"))?
+        };
+        let backend = {
+            let b = doc
+                .get("backend")
+                .as_str()
+                .context("cell record missing backend")?;
+            CellBackend::parse(b).with_context(|| format!("unknown backend '{b}'"))?
+        };
+        // hand-authored pre-dynamics records may omit the schedule; every
+        // writer since the schedule axis emits it, and the grid hash keeps
+        // mixed-schedule artifacts from merging regardless
+        let schedule = match doc.get("schedule").as_str() {
+            Some(s) => {
+                PatternSchedule::parse(s).with_context(|| format!("bad cell schedule '{s}'"))?
+            }
+            None => PatternSchedule::static_(),
+        };
+        let epoch_costs = match doc.get("epoch_cost_bits").as_arr() {
+            Some(xs) => xs
+                .iter()
+                .enumerate()
+                .map(|(k, x)| {
+                    let hex = x
+                        .as_str()
+                        .with_context(|| format!("epoch_cost_bits[{k}] is not a string"))?;
+                    parse_f64_bits_hex(hex)
+                        .with_context(|| format!("bad epoch_cost_bits[{k}] '{hex}'"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        let final_cost = match doc.get("final_cost_bits").as_str() {
+            Some(hex) => parse_f64_bits_hex(hex)
+                .with_context(|| format!("bad final_cost_bits '{hex}'"))?,
+            None => {
+                // hand-authored records may carry only the decimal field;
+                // require it explicitly — a record with *neither* field is
+                // corrupt, not saturated. (The serializer writes non-finite
+                // costs as JSON null, so an explicit null means +∞.)
+                let present = doc
+                    .as_obj()
+                    .is_some_and(|m| m.contains_key("final_cost"));
+                anyhow::ensure!(
+                    present,
+                    "cell record missing final_cost_bits and final_cost"
+                );
+                match doc.get("final_cost") {
+                    Json::Num(x) => *x,
+                    Json::Null => f64::INFINITY,
+                    other => bail!(
+                        "cell record final_cost must be a number or null, got {other:?}"
+                    ),
+                }
+            }
+        };
+        Ok(CellResult {
+            index: doc
+                .get("index")
+                .as_usize()
+                .context("cell record missing index")?,
+            cell: SweepCell {
+                scenario,
+                seed,
+                algorithm,
+                backend,
+                schedule,
+            },
+            final_cost,
+            iterations: doc
+                .get("iterations")
+                .as_usize()
+                .context("cell record missing iterations")?,
+            iters_to_1pct: doc
+                .get("iters_to_1pct")
+                .as_usize()
+                .context("cell record missing iters_to_1pct")?,
+            wall_seconds: doc.get("wall_seconds").as_num().unwrap_or(0.0),
+            epoch_costs,
+        })
+    }
+}
+
+impl ArtifactItem for CellResult {
+    fn index(&self) -> usize {
+        self.index
+    }
+    fn describe(&self) -> String {
+        GridCell::describe(&self.cell, self.index)
+    }
+    fn to_json(&self) -> Json {
+        CellResult::to_json(self)
+    }
+    fn from_json(doc: &Json) -> Result<CellResult> {
+        CellResult::from_json(doc)
+    }
+}
+
+impl SweepReport {
+    fn from_artifact(a: Artifact<CellResult>) -> SweepReport {
+        SweepReport {
+            cells: a.items,
+            workers: a.workers,
+            grid_hash: a.grid_hash,
+        }
+    }
+
+    fn into_artifact(self) -> Artifact<CellResult> {
+        Artifact {
+            items: self.cells,
+            workers: self.workers,
+            grid_hash: self.grid_hash,
+        }
+    }
+
+    /// Per-`(scenario, algorithm, backend, schedule)` aggregates in
+    /// first-appearance order. Dynamic-schedule groups additionally carry
+    /// mean/p95 *per-epoch* cost trajectories across their cells.
+    pub fn groups(&self) -> Vec<GroupSummary> {
+        let mut order: Vec<(String, String, String, String)> = Vec::new();
+        let mut buckets: Vec<Vec<&CellResult>> = Vec::new();
+        for cell in &self.cells {
+            let key = (
+                cell.cell.scenario.clone(),
+                cell.cell.algorithm.name().to_string(),
+                cell.cell.backend.name().to_string(),
+                cell.cell.schedule.label(),
+            );
+            match order.iter().position(|k| *k == key) {
+                Some(i) => buckets[i].push(cell),
+                None => {
+                    order.push(key);
+                    buckets.push(vec![cell]);
+                }
+            }
+        }
+        order
+            .into_iter()
+            .zip(buckets)
+            .map(|((scenario, algorithm, backend, schedule), cells)| {
+                let costs: Vec<f64> = cells.iter().map(|c| c.final_cost).collect();
+                let s = summarize(&costs);
+                let n = cells.len() as f64;
+                // cells of one group share the schedule, hence the epoch
+                // count; aggregate each epoch column across seeds
+                let epochs = cells
+                    .iter()
+                    .map(|c| c.epoch_costs.len())
+                    .min()
+                    .unwrap_or(0);
+                let mut epoch_mean_cost = Vec::with_capacity(epochs);
+                let mut epoch_p95_cost = Vec::with_capacity(epochs);
+                for e in 0..epochs {
+                    let col: Vec<f64> = cells.iter().map(|c| c.epoch_costs[e]).collect();
+                    let es = summarize(&col);
+                    epoch_mean_cost.push(es.mean);
+                    epoch_p95_cost.push(es.p95);
+                }
+                GroupSummary {
+                    scenario,
+                    algorithm,
+                    backend,
+                    schedule,
+                    cells: cells.len(),
+                    mean_cost: s.mean,
+                    p95_cost: s.p95,
+                    mean_iters_to_1pct: cells
+                        .iter()
+                        .map(|c| c.iters_to_1pct as f64)
+                        .sum::<f64>()
+                        / n,
+                    mean_wall_seconds: cells.iter().map(|c| c.wall_seconds).sum::<f64>() / n,
+                    epoch_mean_cost,
+                    epoch_p95_cost,
+                }
+            })
+            .collect()
+    }
+
+    /// Deterministic identity of the sweep's results: everything except
+    /// wall-clock timing and worker/shard metadata, with costs compared
+    /// bit-for-bit. Two sweeps of the same spec must produce equal
+    /// fingerprints regardless of worker count, shard count, or
+    /// retry/re-steal history.
+    pub fn fingerprint(&self) -> Vec<CellFingerprint> {
+        self.cells
+            .iter()
+            .map(|c| {
+                (
+                    c.cell.scenario.clone(),
+                    c.cell.seed,
+                    c.cell.algorithm.name().to_string(),
+                    c.cell.backend.name().to_string(),
+                    c.cell.schedule.label(),
+                    c.final_cost.to_bits(),
+                    c.epoch_costs.iter().map(|x| x.to_bits()).collect(),
+                    c.iterations,
+                    c.iters_to_1pct,
+                )
+            })
+            .collect()
+    }
+
+    /// Paper-style text table of the group aggregates.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "scenario",
+            "algo",
+            "backend",
+            "schedule",
+            "cells",
+            "mean T",
+            "p95 T",
+            "iters->1%",
+            "mean wall s",
+        ]);
+        for g in self.groups() {
+            t.row(vec![
+                g.scenario,
+                g.algorithm,
+                g.backend,
+                g.schedule,
+                g.cells.to_string(),
+                fnum(g.mean_cost),
+                fnum(g.p95_cost),
+                format!("{:.1}", g.mean_iters_to_1pct),
+                format!("{:.3}", g.mean_wall_seconds),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Machine-readable report (cells + groups). Shard reports written
+    /// this way are first-class artifacts: [`SweepReport::from_json`] +
+    /// [`SweepReport::merge`] reassemble them.
+    pub fn to_json(&self) -> Json {
+        let cells: Vec<Json> = self.cells.iter().map(CellResult::to_json).collect();
+        let groups: Vec<Json> = self
+            .groups()
+            .into_iter()
+            .map(|g| {
+                let mut o = Json::obj();
+                o.set("scenario", Json::Str(g.scenario))
+                    .set("algorithm", Json::Str(g.algorithm))
+                    .set("backend", Json::Str(g.backend))
+                    .set("schedule", Json::Str(g.schedule))
+                    .set("cells", Json::Num(g.cells as f64))
+                    .set("mean_cost", Json::Num(g.mean_cost))
+                    .set("p95_cost", Json::Num(g.p95_cost))
+                    .set("mean_iters_to_1pct", Json::Num(g.mean_iters_to_1pct))
+                    .set("mean_wall_seconds", Json::Num(g.mean_wall_seconds));
+                if !g.epoch_mean_cost.is_empty() {
+                    o.set("epoch_mean_cost", Json::from_f64_slice(&g.epoch_mean_cost))
+                        .set("epoch_p95_cost", Json::from_f64_slice(&g.epoch_p95_cost));
+                }
+                o
+            })
+            .collect();
+        let mut doc = Json::obj();
+        doc.set("workers", Json::Num(self.workers as f64))
+            // hex string: u64 hashes exceed f64's exact-integer range
+            .set("grid_hash", Json::Str(u64_hex(self.grid_hash)))
+            .set("cells", Json::Arr(cells))
+            .set("groups", Json::Arr(groups));
+        doc
+    }
+
+    /// Parse a report (or shard report) written by [`SweepReport::to_json`]
+    /// through the index-verified artifact loader: cells are re-sorted by
+    /// global index, a duplicate index is rejected naming the collision,
+    /// and the derived `groups` section is ignored (recomputed on demand).
+    pub fn from_json(doc: &Json) -> Result<SweepReport> {
+        Ok(SweepReport::from_artifact(Artifact::from_json(doc)?))
+    }
+
+    /// Merge shard reports back into one full-grid report via the
+    /// hash- and index-verified [`Artifact::merge`]: cells are reassembled
+    /// by global index, which must form exactly `0..total` (duplicates and
+    /// gaps are contextful errors naming the index), and every part must
+    /// carry the same [`super::sweep::spec_grid_hash`].
+    /// Fingerprint-identical to the single-process run of the same spec.
+    pub fn merge(parts: Vec<SweepReport>) -> Result<SweepReport> {
+        let parts = parts.into_iter().map(SweepReport::into_artifact).collect();
+        Ok(SweepReport::from_artifact(Artifact::merge(parts)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sweep::{cell_line, run_sweep, run_sweep_shard, SweepSpec};
+    use super::super::RunConfig;
+    use super::*;
+
+    fn abilene_spec() -> SweepSpec {
+        SweepSpec {
+            scenarios: vec!["abilene".into()],
+            seeds: vec![1, 2],
+            algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
+            backends: vec![CellBackend::Sparse],
+            schedules: vec![PatternSchedule::static_()],
+            rate_scale: 1.0,
+            run: RunConfig::quick(),
+        }
+    }
+
+    #[test]
+    fn sweep_runs_and_aggregates() {
+        let report = run_sweep(&abilene_spec(), 2).unwrap();
+        assert_eq!(report.cells.len(), 4);
+        // indices are the canonical grid positions
+        assert_eq!(
+            report.cells.iter().map(|c| c.index).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+        let groups = report.groups();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].algorithm, "sgp");
+        assert_eq!(groups[0].backend, "sparse");
+        assert_eq!(groups[0].cells, 2);
+        assert!(groups[0].mean_cost.is_finite());
+        // Fig. 4 headline on the means: SGP at or below LPR
+        assert!(groups[0].mean_cost <= groups[1].mean_cost * 1.001);
+        let txt = report.render();
+        assert!(txt.contains("abilene"));
+        assert!(txt.contains("sgp"));
+        let doc = report.to_json();
+        assert_eq!(doc.get("cells").as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn dynamic_groups_carry_per_epoch_aggregates() {
+        let spec = SweepSpec {
+            scenarios: vec!["abilene".into()],
+            seeds: vec![1, 2],
+            algorithms: vec![Algorithm::Sgp],
+            backends: vec![CellBackend::Sparse],
+            schedules: vec![
+                PatternSchedule::static_(),
+                PatternSchedule::parse("step:3:1.5").unwrap(),
+            ],
+            rate_scale: 1.0,
+            run: RunConfig::quick(),
+        };
+        let report = run_sweep(&spec, 2).unwrap();
+        assert_eq!(report.cells.len(), 4);
+        assert!(report.cells[0].epoch_costs.is_empty());
+        assert_eq!(report.cells[1].epoch_costs.len(), 3);
+        assert_eq!(
+            report.cells[1].final_cost.to_bits(),
+            report.cells[1].epoch_costs[2].to_bits(),
+            "a dynamic cell reports its last epoch's cost"
+        );
+        let groups = report.groups();
+        assert_eq!(groups.len(), 2, "schedules must not pool in one group");
+        assert_eq!(groups[0].schedule, "static");
+        assert!(groups[0].epoch_mean_cost.is_empty());
+        assert_eq!(groups[1].schedule, "step:3:1.5");
+        // per-epoch trajectories aggregate the two seeds epoch by epoch
+        assert_eq!(groups[1].epoch_mean_cost.len(), 3);
+        assert_eq!(groups[1].epoch_p95_cost.len(), 3);
+        let dynamic: Vec<&CellResult> = report
+            .cells
+            .iter()
+            .filter(|c| !c.epoch_costs.is_empty())
+            .collect();
+        assert_eq!(dynamic.len(), 2);
+        for e in 0..3 {
+            let mean = (dynamic[0].epoch_costs[e] + dynamic[1].epoch_costs[e]) / 2.0;
+            assert!(
+                (groups[1].epoch_mean_cost[e] - mean).abs() <= 1e-12 * mean.abs(),
+                "epoch {e} mean drifted"
+            );
+            assert!(
+                groups[1].epoch_p95_cost[e]
+                    >= dynamic[0].epoch_costs[e].min(dynamic[1].epoch_costs[e])
+            );
+        }
+        // the trajectories survive the JSON report
+        let doc = report.to_json();
+        let gs = doc.get("groups").as_arr().unwrap();
+        let g1 = gs
+            .iter()
+            .find(|g| g.get("schedule").as_str() == Some("step:3:1.5"))
+            .unwrap();
+        assert_eq!(g1.get("epoch_mean_cost").as_arr().unwrap().len(), 3);
+        assert_eq!(g1.get("epoch_p95_cost").as_arr().unwrap().len(), 3);
+        // and the fingerprint round-trips
+        let back = SweepReport::from_json(&Json::parse(&doc.pretty()).unwrap()).unwrap();
+        assert_eq!(back.fingerprint(), report.fingerprint());
+    }
+
+    #[test]
+    fn in_process_shards_merge_to_the_full_report() {
+        let spec = abilene_spec();
+        let whole = run_sweep(&spec, 2).unwrap();
+        for count in [1usize, 2, 4] {
+            let parts: Vec<SweepReport> = (0..count)
+                .map(|k| run_sweep_shard(&spec, k, count, 2).unwrap())
+                .collect();
+            let merged = SweepReport::merge(parts).unwrap();
+            assert_eq!(
+                merged.fingerprint(),
+                whole.fingerprint(),
+                "{count} shard(s) drifted from the single-process run"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_rejects_gaps_and_duplicates() {
+        let spec = abilene_spec();
+        let a = run_sweep_shard(&spec, 0, 2, 1).unwrap();
+        let b = run_sweep_shard(&spec, 1, 2, 1).unwrap();
+        // missing shard
+        let err = SweepReport::merge(vec![a.clone()]).unwrap_err().to_string();
+        assert!(err.contains("missing cell index"), "{err}");
+        // duplicate shard: the error names the colliding global index
+        let err = SweepReport::merge(vec![a.clone(), a.clone(), b.clone()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate"), "{err}");
+        assert!(err.contains("index 0"), "{err}");
+        // correct merge still fine
+        assert!(SweepReport::merge(vec![a, b]).is_ok());
+    }
+
+    #[test]
+    fn merge_rejects_shards_of_different_specs() {
+        // equal-sized grids from different specs: index coverage alone
+        // would pass, the grid hash must not
+        let spec_a = abilene_spec();
+        let spec_b = SweepSpec {
+            seeds: vec![1, 3],
+            ..abilene_spec()
+        };
+        let a = run_sweep_shard(&spec_a, 0, 2, 1).unwrap();
+        let b = run_sweep_shard(&spec_b, 1, 2, 1).unwrap();
+        let err = SweepReport::merge(vec![a, b]).unwrap_err().to_string();
+        assert!(err.contains("different sweep specs"), "{err}");
+    }
+
+    #[test]
+    fn loading_an_artifact_with_duplicate_indices_is_rejected() {
+        // an overlapping shard split can produce one artifact carrying the
+        // same global index twice; first-write-wins loading would mask it
+        let a = run_sweep_shard(&abilene_spec(), 0, 2, 1).unwrap();
+        let mut doc = a.to_json();
+        let mut cells = doc.get("cells").as_arr().unwrap().to_vec();
+        cells.push(cells[0].clone());
+        doc.set("cells", Json::Arr(cells));
+        let err = SweepReport::from_json(&Json::parse(&doc.pretty()).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("twice"), "{err}");
+        assert!(err.contains("index 0"), "{err}");
+    }
+
+    #[test]
+    fn report_json_roundtrip_is_bit_exact() {
+        // Hand-built report with awkward values (∞ cost from a saturated
+        // cell): serde must round-trip the fingerprint exactly even though
+        // JSON itself cannot represent ∞.
+        let mk = |index: usize, cost: f64| CellResult {
+            index,
+            cell: SweepCell {
+                scenario: "abilene".into(),
+                seed: 1 + index as u64,
+                algorithm: Algorithm::Sgp,
+                backend: CellBackend::Native,
+                schedule: PatternSchedule::parse("step:2:1.5").unwrap(),
+            },
+            final_cost: cost,
+            iterations: 5,
+            iters_to_1pct: 2,
+            wall_seconds: 0.25,
+            epoch_costs: vec![123.5, cost],
+        };
+        let report = SweepReport {
+            cells: vec![mk(0, 123.456_789_012_345), mk(1, f64::INFINITY)],
+            workers: 3,
+            grid_hash: 0xdead_beef_0042_1337,
+        };
+        let text = report.to_json().pretty();
+        let back = SweepReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(report.fingerprint(), back.fingerprint());
+        assert!(back.cells[1].final_cost.is_infinite());
+        assert_eq!(back.workers, 3);
+        assert_eq!(back.grid_hash, report.grid_hash);
+    }
+
+    #[test]
+    fn corrupt_cell_records_are_rejected_not_defaulted() {
+        let base = r#"{"index":0,"scenario":"abilene","seed":1,"algorithm":"sgp",
+                       "backend":"sparse","iterations":3,"iters_to_1pct":1,
+                       "wall_seconds":0.1"#;
+        // neither final_cost_bits nor final_cost: corrupt, not saturated
+        let doc = Json::parse(&format!("{base}}}")).unwrap();
+        let err = CellResult::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("final_cost"), "{err}");
+        // an explicit null cost (the serializer's spelling of ∞) still loads
+        let doc = Json::parse(&format!("{base},\"final_cost\":null}}")).unwrap();
+        assert!(CellResult::from_json(&doc).unwrap().final_cost.is_infinite());
+        // a missing backend is an error too (every writer emits it)
+        let doc = Json::parse(
+            r#"{"index":0,"scenario":"abilene","seed":1,"algorithm":"sgp",
+                "final_cost":2.5,"iterations":3,"iters_to_1pct":1,"wall_seconds":0.1}"#,
+        )
+        .unwrap();
+        let err = CellResult::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("backend"), "{err}");
+    }
+
+    #[test]
+    fn cell_protocol_lines_roundtrip_bit_exactly() {
+        let cell = CellResult {
+            index: 7,
+            cell: SweepCell {
+                scenario: "connected-er".into(),
+                seed: 3,
+                algorithm: Algorithm::Gp,
+                backend: CellBackend::Sparse,
+                schedule: PatternSchedule::parse("bursty:4:2").unwrap(),
+            },
+            final_cost: f64::INFINITY,
+            iterations: 80,
+            iters_to_1pct: 80,
+            wall_seconds: 1.5,
+            epoch_costs: vec![10.0, f64::INFINITY, 9.5, f64::INFINITY],
+        };
+        let doc = Json::parse(&cell_line(&cell)).unwrap();
+        assert_eq!(doc.get("type").as_str(), Some("cell"));
+        let back = CellResult::from_json(&doc).unwrap();
+        assert_eq!(back.index, 7);
+        assert_eq!(back.cell, cell.cell);
+        assert_eq!(back.final_cost.to_bits(), cell.final_cost.to_bits());
+        // per-epoch finals travel the protocol bit-exactly, ∞ included
+        assert_eq!(
+            back.epoch_costs.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            cell.epoch_costs.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -9,9 +9,11 @@
 //!                    [--backends sparse,native,pjrt] [--schedules static,step:3:1.5]
 //!                    [--workers N] [--iters N]
 //!                    [--tol X] [--patience N] [--scale X] [--out results/sweep.json]
-//!                    [--shards N [--shard-timeout SECS]]   process-sharded parent
+//!                    [--shards N [--shard-timeout SECS] [--shard-retries N]]
+//!                                                          process-sharded parent
 //!                    [--shard i/n]                         run one shard in-process
 //!                    [--shard-worker i/n]                  JSON-lines child protocol
+//!                    [--steal-cells i,j,…]                 re-steal child (internal)
 //!                    [--merge a.json,b.json]               merge shard reports
 //! cecflow dynamic    [--scenario abilene] [--seed 42] [--algo sgp|gp]
 //!                    [--backend sparse|native|pjrt] [--schedule step|bursty|diurnal|churn|rescale]
@@ -86,9 +88,12 @@ fn print_help() {
          \x20            --schedules static,step:3:1.5 --tol X --patience N\n\
          \x20            --scale X --out FILE\n\
          sweep shards: --shards N [--shard-timeout SECS]  spawn N child processes\n\
+         \x20            --shard-retries N                  re-steal budget per failed\n\
+         \x20                                               shard (default 1; 0 = fail fast)\n\
          \x20            --shard i/n [--out FILE]           run shard i of n here\n\
          \x20            --merge a.json,b.json              merge shard reports\n\
          \x20            --shard-worker i/n                 (internal JSON-lines child)\n\
+         \x20            --steal-cells i,j,…                (internal re-steal child)\n\
          dynamic flags: --schedule step|bursty|diurnal|churn|rescale --epochs N\n\
          \x20            --magnitude X --mode warm|cold|both --backend sparse|native|pjrt"
     );
@@ -218,8 +223,9 @@ fn write_sweep_report(report: &cecflow::coordinator::SweepReport, out: &str) -> 
 /// the aggregated [`cecflow::coordinator::SweepReport`].
 fn cmd_sweep(args: &Args) -> Result<()> {
     use cecflow::coordinator::sweep::{
-        cell_line, done_line, error_line, parse_algorithms, parse_backends, parse_scenarios,
-        parse_schedules, parse_seeds, parse_shard_arg, run_sweep_shard, run_sweep_shard_with,
+        cell_line, done_line, error_line, parse_algorithms, parse_backends, parse_cell_list,
+        parse_scenarios, parse_schedules, parse_seeds, parse_shard_arg, run_sweep_cells_with,
+        run_sweep_shard, run_sweep_shard_with,
     };
     use cecflow::coordinator::{run_sweep, run_sweep_sharded, ShardOptions, SweepReport, SweepSpec};
 
@@ -271,18 +277,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .unwrap_or(1);
     let workers = args.opt_usize("workers", default_workers);
 
-    // ---- child protocol mode: JSON-lines cell results on stdout ----
+    // ---- child protocol modes: JSON-lines cell results on stdout ----
     // (stdout carries only protocol lines; any chatter goes to stderr)
-    if let Some(sw) = args.opt("shard-worker") {
+    let finish_worker = |shard: usize, res: anyhow::Result<SweepReport>| -> Result<()> {
         use std::io::Write as _;
-        let (shard, count) = parse_shard_arg(sw)?;
         let stdout = std::io::stdout();
-        let res = run_sweep_shard_with(&spec, shard, count, workers, |cell| {
-            let mut h = stdout.lock();
-            let _ = writeln!(h, "{}", cell_line(cell));
-            let _ = h.flush();
-        });
-        return match res {
+        match res {
             Ok(report) => {
                 let mut h = stdout.lock();
                 let _ = writeln!(h, "{}", done_line(shard, report.cells.len()));
@@ -298,7 +298,45 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 drop(h);
                 Err(err)
             }
-        };
+        }
+    };
+    if let Some(sw) = args.opt("shard-worker") {
+        use std::io::Write as _;
+        let (shard, count) = parse_shard_arg(sw)?;
+        // Failure-injection hook for the retry tests and the `retry-smoke`
+        // CI job: CECFLOW_FAIL_SHARD=k makes strided worker k (1-based)
+        // die abruptly after streaming its first cell — a stand-in for an
+        // OOM-kill. Steal-workers ignore the variable, so the parent's
+        // work re-stealing can prove recovery end to end.
+        let fail_here = std::env::var("CECFLOW_FAIL_SHARD")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            == Some(shard + 1);
+        let streamed = std::sync::atomic::AtomicUsize::new(0);
+        let stdout = std::io::stdout();
+        let res = run_sweep_shard_with(&spec, shard, count, workers, |cell| {
+            let mut h = stdout.lock();
+            let _ = writeln!(h, "{}", cell_line(cell));
+            let _ = h.flush();
+            drop(h);
+            if fail_here && streamed.fetch_add(1, std::sync::atomic::Ordering::Relaxed) == 0 {
+                std::process::exit(101);
+            }
+        });
+        return finish_worker(shard, res);
+    }
+
+    // ---- re-steal mode: re-run the exact cells a failed shard orphaned ----
+    if let Some(list) = args.opt("steal-cells") {
+        use std::io::Write as _;
+        let indices = parse_cell_list(list)?;
+        let stdout = std::io::stdout();
+        let res = run_sweep_cells_with(&spec, &indices, workers, |cell| {
+            let mut h = stdout.lock();
+            let _ = writeln!(h, "{}", cell_line(cell));
+            let _ = h.flush();
+        });
+        return finish_worker(0, res);
     }
 
     // ---- manual shard mode: run shard i of n in this process ----
@@ -344,6 +382,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         } else {
             None
         };
+        // re-steal budget per failed shard; 0 restores fail-fast
+        let retries = args.opt_usize("shard-retries", 1);
         let exe = std::env::current_exe()
             .context("locating the cecflow binary to spawn sweep shards")?;
         println!("spawning {} process shard(s) ...", shards.min(total.max(1)));
@@ -354,6 +394,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 shards,
                 workers,
                 timeout,
+                retries,
+                extra_env: Vec::new(),
             },
         )?
     } else {
@@ -378,9 +420,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 /// task-pattern schedule, re-optimizing at every epoch boundary —
 /// warm-started from the previous strategy, cold-started from the
 /// all-local point, or both side by side (the paper's "adaptive to
-/// changes in task pattern" claim, §IV, made observable).
+/// changes in task pattern" claim, §IV, made observable). The modes are
+/// a two-cell [`cecflow::coordinator::DynamicSpec`] grid routed through
+/// the execution engine's worker pool, so warm and cold price
+/// concurrently.
 fn cmd_dynamic(args: &Args) -> Result<()> {
-    use cecflow::coordinator::{AdaptiveRunner, CellBackend, DynamicTrace, PatternSchedule};
+    use cecflow::coordinator::{CellBackend, DynamicSpec, DynamicTrace, PatternSchedule};
 
     let scenario = args.opt_or("scenario", "abilene");
     let seed = args.opt_u64("seed", 42);
@@ -431,17 +476,27 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
         backend.name()
     );
 
-    let mut runner = AdaptiveRunner::warm(run_cfg);
-    runner.algorithm = algorithm;
-    runner.backend = backend;
-    let mut traces: Vec<DynamicTrace> = Vec::new();
-    for warm in [true, false] {
-        if (warm && !run_warm) || (!warm && !run_cold) {
-            continue;
-        }
-        runner.warm = warm;
-        let trace = runner.run_scenario(scenario, seed, rate_scale, schedule)?;
-        let label = if warm { "warm" } else { "cold" };
+    let mut modes = Vec::new();
+    if run_warm {
+        modes.push(true);
+    }
+    if run_cold {
+        modes.push(false);
+    }
+    let spec = DynamicSpec {
+        scenario: scenario.to_string(),
+        seed,
+        rate_scale,
+        algorithm,
+        backend,
+        schedule,
+        run: run_cfg,
+        modes,
+    };
+    // one pool worker per mode: warm and cold trace concurrently
+    let traces: Vec<DynamicTrace> = spec.run(2)?;
+    for trace in &traces {
+        let label = if trace.warm { "warm" } else { "cold" };
         let mut t = Table::new(&[
             "epoch",
             "shift T",
@@ -462,7 +517,6 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
         }
         println!("\n{label} start ({}):", trace.algorithm);
         t.print();
-        traces.push(trace);
     }
 
     if traces.len() == 2 {

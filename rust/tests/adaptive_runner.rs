@@ -225,7 +225,7 @@ fn dynamic_cells_survive_process_sharding() {
             &ShardOptions {
                 shards,
                 workers: 2,
-                timeout: None,
+                ..Default::default()
             },
         )
         .expect("sharded dynamic sweep");

@@ -1,4 +1,5 @@
-//! Process-sharded sweep determinism (ISSUE 3 tentpole):
+//! Process-sharded sweep determinism (ISSUE 3 tentpole, ISSUE 5 retry +
+//! work re-stealing):
 //!
 //! * merging the shard reports of `n ∈ {1, 2, 4}` shards —
 //!   in-process (`run_sweep_shard` + `SweepReport::merge`) *and* through
@@ -10,7 +11,10 @@
 //! * per-cell dense-backend routing: a `backend: native` sweep cell is
 //!   bitwise identical to a direct `optimize_accelerated` run
 //!   (`Sgp::step_dense` + `NativeBackend`) of the same instance;
-//! * child failure surfaces a contextful error naming the cell.
+//! * a shard-worker killed mid-sweep (the `CECFLOW_FAIL_SHARD` injection
+//!   hook) recovers through work re-stealing with a fingerprint identical
+//!   to the single-process run; `retries: 0` restores fail-fast; an
+//!   exhausted retry budget surfaces a contextful error naming the cell.
 
 use std::path::Path;
 use std::process::Command;
@@ -82,7 +86,7 @@ fn process_sharded_sweep_matches_single_process() {
             &ShardOptions {
                 shards,
                 workers: 2,
-                timeout: None,
+                ..Default::default()
             },
         )
         .expect("sharded sweep");
@@ -195,7 +199,68 @@ fn cli_shard_and_merge_artifacts_match_the_parent_orchestrator() {
 }
 
 #[test]
-fn failing_cell_in_a_shard_names_the_cell() {
+fn killed_shard_worker_recovers_via_work_restealing() {
+    // CECFLOW_FAIL_SHARD=2 makes the strided worker of shard 2/2 exit
+    // abruptly (no protocol goodbye) after streaming its first cell —
+    // shard 2 owns 3 of the 6 grid cells, so two are orphaned mid-sweep.
+    // With one retry the parent must re-steal them onto a fresh worker
+    // and reassemble a report bit-identical to the unkilled runs.
+    let spec = spec();
+    let whole = run_sweep(&spec, 2).expect("single-process sweep");
+    let sharded = run_sweep_sharded(
+        &spec,
+        cecflow_bin(),
+        &ShardOptions {
+            shards: 2,
+            workers: 2,
+            retries: 1,
+            extra_env: vec![("CECFLOW_FAIL_SHARD".into(), "2".into())],
+            ..Default::default()
+        },
+    )
+    .expect("re-stealing must recover the killed shard's cells");
+    assert_eq!(
+        sharded.fingerprint(),
+        whole.fingerprint(),
+        "recovered sharded sweep drifted from the single-process run"
+    );
+    // and bitwise identical to an (unkilled) --shards 1 engine run too
+    let single = run_sweep_sharded(
+        &spec,
+        cecflow_bin(),
+        &ShardOptions {
+            shards: 1,
+            workers: 2,
+            ..Default::default()
+        },
+    )
+    .expect("1-shard sweep");
+    assert_eq!(sharded.fingerprint(), single.fingerprint());
+}
+
+#[test]
+fn zero_retries_restore_fail_fast_on_a_killed_shard() {
+    let err = run_sweep_sharded(
+        &spec(),
+        cecflow_bin(),
+        &ShardOptions {
+            shards: 2,
+            workers: 2,
+            retries: 0,
+            extra_env: vec![("CECFLOW_FAIL_SHARD".into(), "2".into())],
+            ..Default::default()
+        },
+    )
+    .expect_err("retries: 0 must surface the killed shard immediately");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shard 2/2"), "{msg}");
+}
+
+#[test]
+fn failing_cell_in_a_shard_names_the_cell_after_retries_exhaust() {
+    // A deterministic cell failure (unknown scenario) fails identically on
+    // the re-stolen attempt, exhausting the budget — the surfaced error
+    // must name the re-steal attempt and the offending cell.
     let spec = SweepSpec {
         scenarios: vec!["abilene".into(), "no-such-scenario".into()],
         seeds: vec![1],
@@ -211,13 +276,59 @@ fn failing_cell_in_a_shard_names_the_cell() {
         &ShardOptions {
             shards: 2,
             workers: 2,
-            timeout: None,
+            retries: 1,
+            ..Default::default()
         },
     )
     .expect_err("unknown scenario must fail the sharded sweep");
     let msg = format!("{err:#}");
     assert!(msg.contains("no-such-scenario"), "{msg}");
     assert!(msg.contains("shard"), "{msg}");
+    assert!(msg.contains("re-steal"), "{msg}");
+}
+
+#[test]
+fn spec_args_roundtrip_through_the_parsers() {
+    // the parent → child handoff of the sharded sweep: every
+    // result-relevant spec field must survive spec_to_args + the CLI
+    // parsers, or children would silently run a different grid
+    use cecflow::coordinator::sweep::{
+        parse_algorithms, parse_backends, parse_scenarios, parse_schedules, parse_seeds,
+        spec_to_args,
+    };
+    let spec = SweepSpec {
+        scenarios: vec!["abilene".into(), "connected-er".into()],
+        seeds: vec![1, 5, 9],
+        algorithms: vec![Algorithm::Sgp, Algorithm::Gp],
+        backends: vec![CellBackend::Sparse, CellBackend::Native],
+        schedules: vec![
+            PatternSchedule::static_(),
+            PatternSchedule::parse("step:3:1.5").unwrap(),
+        ],
+        rate_scale: 1.25,
+        run: RunConfig {
+            max_iters: 33,
+            tol: 3e-6,
+            patience: 4,
+        },
+    };
+    let args = spec_to_args(&spec);
+    let get = |flag: &str| -> &str {
+        let i = args.iter().position(|a| a == flag).unwrap();
+        &args[i + 1]
+    };
+    assert_eq!(parse_scenarios(get("--scenarios")), spec.scenarios);
+    assert_eq!(parse_seeds(get("--seeds")).unwrap(), spec.seeds);
+    assert_eq!(parse_algorithms(get("--algos")).unwrap(), spec.algorithms);
+    assert_eq!(parse_backends(get("--backends")).unwrap(), spec.backends);
+    assert_eq!(parse_schedules(get("--schedules")).unwrap(), spec.schedules);
+    assert_eq!(get("--scale").parse::<f64>().unwrap(), spec.rate_scale);
+    assert_eq!(get("--iters").parse::<usize>().unwrap(), 33);
+    assert_eq!(
+        get("--tol").parse::<f64>().unwrap().to_bits(),
+        3e-6f64.to_bits()
+    );
+    assert_eq!(get("--patience").parse::<usize>().unwrap(), 4);
 }
 
 #[test]
