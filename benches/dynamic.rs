@@ -117,6 +117,7 @@ fn main() -> anyhow::Result<()> {
             .collect(),
         rate_scale: 1.0,
         run: cfg,
+        sim: None,
     };
     let serial = run_sweep(&spec, 1)?;
     let parallel = run_sweep(&spec, 4)?;

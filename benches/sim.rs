@@ -1,0 +1,124 @@
+//! PR 6 perf driver: the layered request-level simulator.
+//!
+//! Two planes, matching the engine's layering:
+//!
+//!  * `sim::core` raw calendar-queue throughput (events/sec under a
+//!    hold-1000 schedule/pop churn with pseudo-random forward delays);
+//!  * end-to-end `sim::tasks` throughput (requests/sec) releasing 10^5
+//!    and 10^6 Poisson requests through the converged SGP strategy on
+//!    abilene, with the tail quantiles sanity-checked (p50 ≤ p99 ≤
+//!    p99.9) and the peak in-flight count reported — the 10^6 tier is
+//!    the bounded-memory witness (slab + sketch, no per-request heap
+//!    growth).
+//!
+//! Emits the machine-readable perf-trajectory record (ROADMAP item 3) as
+//! `BENCH_6.json` in the working directory (`CECFLOW_BENCH_OUT`
+//! overrides the path). `CECFLOW_BENCH_FAST=1` shrinks both planes for
+//! the CI smoke run.
+//!
+//! Run: `cargo bench --bench sim`
+
+use std::time::Instant;
+
+use cecflow::coordinator::{build_scenario_network, run_algorithm, Algorithm, RunConfig};
+use cecflow::sim::core::EventQueue;
+use cecflow::sim::{simulate, ArrivalSpec, SimConfig, SimEpoch, SimPlan};
+use cecflow::util::json::Json;
+
+fn record(name: &str, per_sec: f64, count: u64, seconds: f64) -> Json {
+    let mut o = Json::obj();
+    o.set("name", Json::Str(name.to_string()))
+        .set("per_sec", Json::Num(per_sec))
+        .set("count", Json::Num(count as f64))
+        .set("seconds", Json::Num(seconds));
+    o
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("CECFLOW_BENCH_FAST").is_ok();
+    let mut records: Vec<Json> = Vec::new();
+
+    // ---- plane 1: raw calendar-queue churn ----------------------------
+    // Hold ~1000 events in flight and cycle schedule/pop with a cheap
+    // xorshift delay draw, so the measurement is queue overhead, not rng.
+    let total_events: u64 = if fast { 200_000 } else { 2_000_000 };
+    let mut q = EventQueue::new();
+    for i in 0..1_000u64 {
+        q.schedule(i as f64 * 1e-3, i);
+    }
+    let mut state = 0x9e37_79b9_7f4a_7c15u64;
+    let start = Instant::now();
+    let mut processed = 0u64;
+    while processed < total_events {
+        let ev = q.pop().expect("held events cannot drain");
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        let delay = (state >> 11) as f64 / (1u64 << 53) as f64;
+        q.schedule(delay, ev.payload);
+        processed += 1;
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let eps = processed as f64 / secs;
+    println!("calendar queue: {processed} events in {secs:.3}s = {eps:.0} events/s");
+    records.push(record("calendar_queue_events_per_sec", eps, processed, secs));
+
+    // ---- plane 2: end-to-end request-level simulation -----------------
+    let net = build_scenario_network("abilene", 1, 1.0)?;
+    let out = run_algorithm(&net, Algorithm::Sgp, &RunConfig::quick())?;
+    let plan = SimPlan {
+        epochs: vec![SimEpoch {
+            net,
+            phi: out.phi.expect("sgp yields a strategy"),
+        }],
+    };
+    let tiers: &[u64] = if fast {
+        &[20_000]
+    } else {
+        &[100_000, 1_000_000]
+    };
+    for &requests in tiers {
+        let cfg = SimConfig {
+            requests,
+            warmup: 0.05,
+            seed: 1,
+        };
+        let start = Instant::now();
+        let t = simulate(&plan, &ArrivalSpec::default(), &cfg)?;
+        let secs = start.elapsed().as_secs_f64();
+        let (p50, p99, p999) = t.tail();
+        assert!(
+            p50 <= p99 && p99 <= p999,
+            "quantiles disordered: {p50} {p99} {p999}"
+        );
+        assert_eq!(t.completed + t.stranded, requests, "requests lost");
+        let rps = requests as f64 / secs;
+        println!(
+            "simulate {requests} requests: {secs:.3}s = {rps:.0} req/s \
+             (p50 {p50:.4} p99 {p99:.4} p99.9 {p999:.4}, {} events, peak {} in flight)",
+            t.events, t.max_in_flight
+        );
+        records.push(record(
+            &format!("simulate_abilene_{requests}_requests_per_sec"),
+            rps,
+            requests,
+            secs,
+        ));
+    }
+
+    // ---- trajectory record --------------------------------------------
+    let path = std::env::var("CECFLOW_BENCH_OUT").unwrap_or_else(|_| "BENCH_6.json".to_string());
+    if let Some(parent) = std::path::Path::new(&path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut doc = Json::obj();
+    doc.set("pr", Json::Num(6.0))
+        .set("bench", Json::Str("sim".to_string()))
+        .set("fast_mode", Json::Bool(fast))
+        .set("records", Json::Arr(records));
+    std::fs::write(&path, doc.pretty())?;
+    println!("wrote {path}");
+    Ok(())
+}

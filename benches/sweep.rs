@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
         schedules: vec![PatternSchedule::static_()],
         rate_scale: 1.0,
         run: RunConfig::quick(),
+        sim: None,
     };
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())

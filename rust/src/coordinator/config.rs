@@ -68,6 +68,15 @@ impl Algorithm {
     pub fn supports_dynamic(&self) -> bool {
         matches!(self, Algorithm::Sgp | Algorithm::Gp)
     }
+
+    /// Algorithms whose outcome carries a concrete routing/offloading
+    /// strategy for the request-level simulator
+    /// ([`crate::sim::tasks::simulate`]) to walk. The one-shot LPR
+    /// computes a *bound*, not a strategy, so sweep cells with
+    /// tail-latency columns enabled must exclude it.
+    pub fn supports_simulation(&self) -> bool {
+        !matches!(self, Algorithm::Lpr)
+    }
 }
 
 /// Dense-evaluation route for one sweep cell's SGP run (per-cell backend

@@ -458,6 +458,16 @@ impl DynamicTrace {
 /// epoch from either the previous epoch's strategy (warm) or the
 /// all-local point (cold).
 #[derive(Clone, Copy, Debug)]
+/// One epoch's full output of the shared adaptive loop: the mutated
+/// network, the optimizer result (with its converged strategy), and the
+/// warm-start bookkeeping the [`EpochTrace`] reports.
+struct EpochRun {
+    net: Network,
+    res: RunResult,
+    shift_cost: f64,
+    warm_fallback: bool,
+}
+
 pub struct AdaptiveRunner {
     /// Iterative algorithm to re-run each epoch: SGP (any backend) or GP
     /// (sparse). See [`Algorithm::supports_dynamic`].
@@ -512,14 +522,71 @@ impl AdaptiveRunner {
         seed: u64,
         schedule: PatternSchedule,
     ) -> Result<DynamicTrace> {
-        let mut epochs = Vec::with_capacity(schedule.epochs());
-        let mut algorithm = self.algorithm.name().to_string();
-        let mut prev: Option<(Network, Strategy)> = None;
+        let runs = self.run_epochs(name, base, seed, &schedule)?;
+        let algorithm = runs
+            .last()
+            .map(|r| r.res.algorithm.clone())
+            .unwrap_or_else(|| self.algorithm.name().to_string());
+        let epochs = runs
+            .into_iter()
+            .enumerate()
+            .map(|(e, run)| EpochTrace {
+                epoch: e,
+                shift_cost: run.shift_cost,
+                final_cost: run.res.final_cost(),
+                iterations: run.res.costs.len(),
+                iters_to_1pct: run.res.iters_to_1pct,
+                transient_regret: metrics::transient_regret(
+                    &run.res.costs,
+                    run.res.final_cost(),
+                ),
+                warm_fallback: run.warm_fallback,
+                costs: run.res.costs,
+            })
+            .collect();
+        Ok(DynamicTrace {
+            scenario: name.to_string(),
+            seed,
+            schedule,
+            algorithm,
+            warm: self.warm,
+            epochs,
+        })
+    }
+
+    /// Per-epoch converged `(mutated network, strategy)` snapshots — the
+    /// input the request-level simulator ([`crate::sim::tasks`]) walks.
+    /// Same warm-start/fallback path as [`AdaptiveRunner::run_network`];
+    /// only the retained outputs differ.
+    pub fn converged_epochs(
+        &self,
+        name: &str,
+        base: &Network,
+        seed: u64,
+        schedule: &PatternSchedule,
+    ) -> Result<Vec<(Network, Strategy)>> {
+        Ok(self
+            .run_epochs(name, base, seed, schedule)?
+            .into_iter()
+            .map(|run| (run.net, run.res.phi))
+            .collect())
+    }
+
+    /// The shared epoch loop: mutate, warm-start (with infeasible-warm
+    /// fallback to all-local), re-optimize, carry the strategy forward.
+    fn run_epochs(
+        &self,
+        name: &str,
+        base: &Network,
+        seed: u64,
+        schedule: &PatternSchedule,
+    ) -> Result<Vec<EpochRun>> {
+        let mut runs: Vec<EpochRun> = Vec::with_capacity(schedule.epochs());
         for e in 0..schedule.epochs() {
             let net = schedule.network_at(base, seed, e);
             let mut warm_fallback = false;
-            let mut phi0 = match &prev {
-                Some((pnet, pphi)) if self.warm => pphi.retarget(pnet, &net),
+            let mut phi0 = match runs.last() {
+                Some(prev) if self.warm => prev.res.phi.retarget(&prev.net, &net),
                 _ => Strategy::local_compute_init(&net),
             };
             let mut shift_cost = compute_flows(&net, &phi0)
@@ -544,27 +611,14 @@ impl AdaptiveRunner {
             let res = self
                 .optimize_epoch(&net, &phi0)
                 .with_context(|| format!("optimizing epoch {e} of schedule {}", schedule.label()))?;
-            algorithm = res.algorithm.clone();
-            epochs.push(EpochTrace {
-                epoch: e,
+            runs.push(EpochRun {
+                net,
+                res,
                 shift_cost,
-                final_cost: res.final_cost(),
-                iterations: res.costs.len(),
-                iters_to_1pct: res.iters_to_1pct,
-                transient_regret: metrics::transient_regret(&res.costs, res.final_cost()),
                 warm_fallback,
-                costs: res.costs.clone(),
             });
-            prev = Some((net, res.phi));
         }
-        Ok(DynamicTrace {
-            scenario: name.to_string(),
-            seed,
-            schedule,
-            algorithm,
-            warm: self.warm,
-            epochs,
-        })
+        Ok(runs)
     }
 
     /// One epoch's optimization from an explicit starting strategy. A

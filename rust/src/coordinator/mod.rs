@@ -28,8 +28,8 @@ pub use dynamics::{
 pub use runner::{optimize, optimize_accelerated, RunConfig, RunResult};
 pub use scenario::{connected_er_servers, CostKind, Scenario, ScenarioSpec};
 pub use sweep::{
-    run_sweep, run_sweep_shard, run_sweep_sharded, CellResult, GroupSummary, ShardOptions,
-    SweepCell, SweepReport, SweepSpec,
+    run_sweep, run_sweep_shard, run_sweep_sharded, CellResult, CellSim, GroupSummary,
+    ShardOptions, SimSweepConfig, SweepCell, SweepReport, SweepSpec,
 };
 
 /// Unified outcome across iterative algorithms and the one-shot LPR.
@@ -44,6 +44,10 @@ pub struct AlgoOutcome {
     pub l_data: f64,
     pub l_result: f64,
     pub wall_seconds: f64,
+    /// Converged routing/offloading strategy, when the algorithm produces
+    /// one (iterative optimizers do; the one-shot LPR bound does not).
+    /// The request-level simulator ([`crate::sim::tasks`]) consumes this.
+    pub phi: Option<Strategy>,
 }
 
 /// Run one algorithm on a network to steady state and collect the §V
@@ -62,6 +66,7 @@ pub fn run_algorithm(net: &Network, algo: Algorithm, cfg: &RunConfig) -> Result<
                 l_data: sol.l_data,
                 l_result: sol.l_result,
                 wall_seconds: start.elapsed().as_secs_f64(),
+                phi: None,
             })
         }
         Algorithm::Sgp | Algorithm::Gp => {
@@ -100,14 +105,16 @@ fn finish_iterative_named(net: &Network, res: RunResult, name: &str) -> Result<A
     let flows = compute_flows(net, &res.phi)
         .context("evaluating final strategy")?;
     let td = metrics::travel_distance(net, &flows);
+    let final_cost = res.final_cost();
     Ok(AlgoOutcome {
         algorithm: name.to_string(),
-        final_cost: res.final_cost(),
+        final_cost,
         iterations: res.costs.len(),
         costs: res.costs,
         l_data: td.l_data,
         l_result: td.l_result,
         wall_seconds: res.wall_seconds,
+        phi: Some(res.phi),
     })
 }
 

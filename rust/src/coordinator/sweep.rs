@@ -25,8 +25,9 @@
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::sim::{self, ArrivalSpec, SimConfig, SimEpoch, SimPlan};
 use crate::util::json::Json;
 
 use super::dynamics::{AdaptiveRunner, PatternSchedule};
@@ -44,6 +45,52 @@ pub use super::exec::shard::{
     done_line, error_line, parse_cell_list, parse_shard_arg, ShardOptions,
 };
 pub use super::sweep_report::{CellFingerprint, GroupSummary, SweepReport};
+
+/// Opt-in request-level simulation of every cell's converged strategy
+/// (`cecflow sweep --sim-requests N`): after a cell's optimizer run, the
+/// discrete-event engine ([`crate::sim::tasks`]) releases `requests`
+/// stochastic requests through the strategy's routing splits and records
+/// streaming sojourn quantiles into [`CellSim`].
+///
+/// The config is part of the sweep's identity
+/// ([`spec_grid_hash`]): reports with and without simulation — or with
+/// different simulation parameters — refuse to merge, because their cells
+/// are not comparable. Restricted by [`validate_spec`] to static
+/// schedules (dynamic cells re-optimize per epoch; simulate those through
+/// `cecflow simulate --pattern` instead) and to algorithms that produce a
+/// strategy ([`Algorithm::supports_simulation`] — the one-shot LPR bound
+/// does not).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimSweepConfig {
+    /// Requests released per cell.
+    pub requests: u64,
+    /// Arrival process (`--sim-arrivals`, default Poisson).
+    pub arrivals: ArrivalSpec,
+    /// Warm-up fraction excluded from the sojourn sketch, in `[0, 1)`.
+    pub warmup: f64,
+}
+
+impl Default for SimSweepConfig {
+    fn default() -> Self {
+        SimSweepConfig {
+            requests: 20_000,
+            arrivals: ArrivalSpec::default(),
+            warmup: 0.05,
+        }
+    }
+}
+
+/// Tail-latency digest of one cell's request-level simulation: sojourn
+/// quantiles (seconds) plus the mean, straight from
+/// [`crate::sim::Telemetry`]. Carried bit-exactly through the shard
+/// protocol and report artifacts, and part of the fingerprint.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CellSim {
+    pub p50: f64,
+    pub p99: f64,
+    pub p999: f64,
+    pub mean: f64,
+}
 
 /// A sweep specification: the cell grid is the cross product
 /// `scenarios × seeds × algorithms × backends × schedules` (non-SGP
@@ -65,6 +112,9 @@ pub struct SweepSpec {
     pub schedules: Vec<PatternSchedule>,
     pub rate_scale: f64,
     pub run: RunConfig,
+    /// Request-level simulation of each cell's converged strategy
+    /// (`None`, the default, reproduces the analytic-only sweep exactly).
+    pub sim: Option<SimSweepConfig>,
 }
 
 impl Default for SweepSpec {
@@ -77,6 +127,7 @@ impl Default for SweepSpec {
             schedules: vec![PatternSchedule::static_()],
             rate_scale: 1.0,
             run: RunConfig::quick(),
+            sim: None,
         }
     }
 }
@@ -178,6 +229,9 @@ pub struct CellResult {
     /// the shard protocol and report artifacts, and part of the
     /// fingerprint.
     pub epoch_costs: Vec<f64>,
+    /// Simulated sojourn digest when the spec enabled request-level
+    /// simulation ([`SweepSpec::sim`]); `None` otherwise.
+    pub sim: Option<CellSim>,
 }
 
 fn run_cell(index: usize, cell: &SweepCell, spec: &SweepSpec) -> Result<CellResult> {
@@ -192,6 +246,41 @@ fn run_cell(index: usize, cell: &SweepCell, spec: &SweepSpec) -> Result<CellResu
     } else {
         out.final_cost
     };
+    let sim = match &spec.sim {
+        Some(cfg) => {
+            let phi = out.phi.as_ref().with_context(|| {
+                format!(
+                    "algorithm {} produced no strategy to simulate",
+                    cell.algorithm.name()
+                )
+            })?;
+            let plan = SimPlan {
+                epochs: vec![SimEpoch {
+                    net,
+                    phi: phi.clone(),
+                }],
+            };
+            // seeded by the cell's own seed: the simulated columns obey the
+            // same determinism contract as the analytic ones
+            let telemetry = sim::simulate(
+                &plan,
+                &cfg.arrivals,
+                &SimConfig {
+                    requests: cfg.requests,
+                    warmup: cfg.warmup,
+                    seed: cell.seed,
+                },
+            )?;
+            let (p50, p99, p999) = telemetry.tail();
+            Some(CellSim {
+                p50,
+                p99,
+                p999,
+                mean: telemetry.mean_sojourn(),
+            })
+        }
+        None => None,
+    };
     Ok(CellResult {
         index,
         cell: cell.clone(),
@@ -200,6 +289,7 @@ fn run_cell(index: usize, cell: &SweepCell, spec: &SweepSpec) -> Result<CellResu
         iters_to_1pct: metrics::iters_to_1pct(&out.costs),
         wall_seconds: start.elapsed().as_secs_f64(),
         epoch_costs: Vec::new(),
+        sim,
     })
 }
 
@@ -229,6 +319,7 @@ fn run_dynamic_cell(index: usize, cell: &SweepCell, spec: &SweepSpec) -> Result<
         iters_to_1pct: trace.epochs.iter().map(|e| e.iters_to_1pct).sum(),
         wall_seconds: start.elapsed().as_secs_f64(),
         epoch_costs: trace.epochs.iter().map(|e| sanitize(e.final_cost)).collect(),
+        sim: None,
     })
 }
 
@@ -250,12 +341,34 @@ fn grid_hash_of(grid: &Grid<SweepCell>, spec: &SweepSpec) -> u64 {
         h.eat(&(spec.run.max_iters as u64).to_le_bytes());
         h.eat(&spec.run.tol.to_bits().to_le_bytes());
         h.eat(&(spec.run.patience as u64).to_le_bytes());
+        // the simulation config is identity-relevant: cells with and
+        // without tail-latency columns (or with different request counts /
+        // arrival processes) are not comparable, so their shard artifacts
+        // must refuse to merge
+        match &spec.sim {
+            None => h.eat(&[0]),
+            Some(sim) => {
+                h.eat(&[1]);
+                h.eat(&sim.requests.to_le_bytes());
+                h.eat(sim.arrivals.label().as_bytes());
+                h.eat(&[0]);
+                h.eat(&sim.warmup.to_bits().to_le_bytes());
+            }
+        }
     })
 }
 
 /// Reject specs whose cells cannot round-trip through the JSON shard
-/// protocol / report artifacts (seeds above 2^53 lose precision as f64).
-/// The CLI seed parser enforces this too; this guard covers library users.
+/// protocol / report artifacts (seeds above 2^53 lose precision as f64),
+/// and simulation configs the grid cannot honor: request-level simulation
+/// needs a converged strategy per cell, so it is defined only for static
+/// schedules (a dynamic cell re-optimizes per epoch — simulate those via
+/// `cecflow simulate --pattern`) and for algorithms that produce one
+/// ([`Algorithm::supports_simulation`]). These are hard errors rather
+/// than silent cell skips: a skipped cell would change the grid between
+/// sim and no-sim runs without the user asking for it.
+/// The CLI seed parser enforces the seed bound too; this guard covers
+/// library users.
 fn validate_spec(spec: &SweepSpec) -> Result<()> {
     for &seed in &spec.seeds {
         anyhow::ensure!(
@@ -263,6 +376,30 @@ fn validate_spec(spec: &SweepSpec) -> Result<()> {
             "seed {seed} exceeds 2^53 and cannot round-trip through the sweep's JSON \
              protocol/artifacts"
         );
+    }
+    if let Some(sim) = &spec.sim {
+        anyhow::ensure!(sim.requests >= 1, "simulation needs at least 1 request");
+        anyhow::ensure!(
+            sim.warmup.is_finite() && (0.0..1.0).contains(&sim.warmup),
+            "simulation warm-up fraction must be in [0, 1), got {}",
+            sim.warmup
+        );
+        for algo in &spec.algorithms {
+            anyhow::ensure!(
+                algo.supports_simulation(),
+                "algorithm {} produces no strategy to simulate — drop it from --algos \
+                 or drop --sim-requests",
+                algo.name()
+            );
+        }
+        for schedule in &spec.schedules {
+            anyhow::ensure!(
+                schedule.is_static(),
+                "request-level sweep simulation is defined for static schedules only \
+                 (got {}); use `cecflow simulate --pattern` for dynamic scenarios",
+                schedule.label()
+            );
+        }
     }
     Ok(())
 }
@@ -386,7 +523,7 @@ pub fn cell_line(cell: &CellResult) -> String {
 /// rebuilds an identical grid and stopping rule.
 pub fn spec_to_args(spec: &SweepSpec) -> Vec<String> {
     let join = |parts: Vec<String>| parts.join(",");
-    vec![
+    let mut args = vec![
         "--scenarios".to_string(),
         spec.scenarios.join(","),
         "--seeds".to_string(),
@@ -407,7 +544,16 @@ pub fn spec_to_args(spec: &SweepSpec) -> Vec<String> {
         spec.run.tol.to_string(),
         "--patience".to_string(),
         spec.run.patience.to_string(),
-    ]
+    ];
+    if let Some(sim) = &spec.sim {
+        args.push("--sim-requests".to_string());
+        args.push(sim.requests.to_string());
+        args.push("--sim-arrivals".to_string());
+        args.push(sim.arrivals.label());
+        args.push("--sim-warmup".to_string());
+        args.push(sim.warmup.to_string());
+    }
+    args
 }
 
 /// The sweep grid plugged into the engine's sharded orchestrator
@@ -488,6 +634,7 @@ mod tests {
             schedules: vec![PatternSchedule::static_()],
             rate_scale: 1.0,
             run: RunConfig::quick(),
+            sim: None,
         };
         let cells = spec.cells();
         assert_eq!(cells.len(), 8);
@@ -541,6 +688,87 @@ mod tests {
         let mut other = base.clone();
         other.run.tol = base.run.tol * 2.0;
         assert_ne!(h, spec_grid_hash(&other));
+        // the simulation axis: no-sim vs sim, and different sim configs,
+        // must all hash apart (merge refusal for tail-latency artifacts)
+        let sgp_only = SweepSpec {
+            algorithms: vec![Algorithm::Sgp],
+            ..base.clone()
+        };
+        let h_plain = spec_grid_hash(&sgp_only);
+        let simmed = SweepSpec {
+            sim: Some(SimSweepConfig::default()),
+            ..sgp_only.clone()
+        };
+        let h_sim = spec_grid_hash(&simmed);
+        assert_ne!(h_plain, h_sim);
+        let mut more = simmed.clone();
+        more.sim.as_mut().unwrap().requests += 1;
+        assert_ne!(h_sim, spec_grid_hash(&more));
+        let mut bursty = simmed.clone();
+        bursty.sim.as_mut().unwrap().arrivals = ArrivalSpec::parse("mmpp:4:1").unwrap();
+        assert_ne!(h_sim, spec_grid_hash(&bursty));
+    }
+
+    #[test]
+    fn sim_specs_reject_strategyless_algorithms_and_dynamic_schedules() {
+        // lpr has no strategy to walk requests through
+        let spec = SweepSpec {
+            scenarios: vec!["abilene".into()],
+            seeds: vec![1],
+            sim: Some(SimSweepConfig::default()),
+            ..SweepSpec::default()
+        };
+        let err = run_sweep(&spec, 1).unwrap_err().to_string();
+        assert!(err.contains("lpr"), "{err}");
+        // dynamic schedules re-optimize per epoch; the sweep's per-cell
+        // simulation is defined for static cells only
+        let spec = SweepSpec {
+            scenarios: vec!["abilene".into()],
+            seeds: vec![1],
+            algorithms: vec![Algorithm::Sgp],
+            schedules: vec![PatternSchedule::parse("step:3:1.5").unwrap()],
+            sim: Some(SimSweepConfig::default()),
+            ..SweepSpec::default()
+        };
+        let err = run_sweep(&spec, 1).unwrap_err().to_string();
+        assert!(err.contains("static"), "{err}");
+        // and out-of-range warm-up fractions are named
+        let mut bad = SweepSpec {
+            scenarios: vec!["abilene".into()],
+            seeds: vec![1],
+            algorithms: vec![Algorithm::Sgp],
+            sim: Some(SimSweepConfig::default()),
+            ..SweepSpec::default()
+        };
+        bad.sim.as_mut().unwrap().warmup = 1.0;
+        let err = run_sweep(&bad, 1).unwrap_err().to_string();
+        assert!(err.contains("warm-up"), "{err}");
+    }
+
+    #[test]
+    fn simulated_cells_carry_a_tail_digest() {
+        let spec = SweepSpec {
+            scenarios: vec!["abilene".into()],
+            seeds: vec![1],
+            algorithms: vec![Algorithm::Sgp],
+            sim: Some(SimSweepConfig {
+                requests: 2_000,
+                ..SimSweepConfig::default()
+            }),
+            ..SweepSpec::default()
+        };
+        let report = run_sweep(&spec, 1).unwrap();
+        assert_eq!(report.cells.len(), 1);
+        let sim = report.cells[0].sim.expect("sim-enabled cell missing digest");
+        assert!(sim.p50 > 0.0 && sim.p50.is_finite());
+        assert!(sim.p50 <= sim.p99 && sim.p99 <= sim.p999, "{sim:?}");
+        assert!(sim.mean.is_finite());
+        // spec round-trip through the shard-child flag encoding
+        let args = spec_to_args(&spec);
+        let k = args.iter().position(|a| a == "--sim-requests").unwrap();
+        assert_eq!(args[k + 1], "2000");
+        assert!(args.contains(&"--sim-arrivals".to_string()));
+        assert!(args.contains(&"--sim-warmup".to_string()));
     }
 
     #[test]
@@ -585,6 +813,7 @@ mod tests {
             schedules: vec![PatternSchedule::static_()],
             rate_scale: 1.0,
             run: RunConfig::quick(),
+            sim: None,
         };
         let whole = run_sweep(&spec, 1).unwrap();
         let stolen = run_sweep_cells_with(&spec, &[1], 1, |_| {}).unwrap();

@@ -19,7 +19,7 @@ use crate::util::table::{fnum, Table};
 use super::dynamics::PatternSchedule;
 use super::exec::artifact::{f64_bits_hex, parse_f64_bits_hex, u64_hex, Artifact, ArtifactItem};
 use super::exec::grid::GridCell;
-use super::sweep::{CellResult, SweepCell};
+use super::sweep::{CellResult, CellSim, SweepCell};
 use super::{Algorithm, CellBackend};
 
 /// Aggregate over the seeds of one
@@ -40,6 +40,10 @@ pub struct GroupSummary {
     pub epoch_mean_cost: Vec<f64>,
     /// Per-epoch p95 cost trajectory across the group's cells.
     pub epoch_p95_cost: Vec<f64>,
+    /// Mean across the group's cells of the simulated sojourn digests
+    /// (p50, p99, p999, mean); `None` for groups without request-level
+    /// simulation ([`super::sweep::SweepSpec::sim`] unset).
+    pub sim_mean: Option<CellSim>,
 }
 
 /// A completed sweep: per-cell results in grid order plus aggregation.
@@ -57,8 +61,21 @@ pub struct SweepReport {
 
 /// One cell's identity inside [`SweepReport::fingerprint`]: scenario,
 /// seed, algorithm, backend, schedule label, cost bits, per-epoch cost
-/// bits (empty for static cells), iterations, iters-to-1%.
-pub type CellFingerprint = (String, u64, String, String, String, u64, Vec<u64>, usize, usize);
+/// bits (empty for static cells), iterations, iters-to-1%, and the
+/// simulated sojourn digest bits (`[p50, p99, p999, mean]`; empty when
+/// the cell ran without request-level simulation).
+pub type CellFingerprint = (
+    String,
+    u64,
+    String,
+    String,
+    String,
+    u64,
+    Vec<u64>,
+    usize,
+    usize,
+    Vec<u64>,
+);
 
 impl CellResult {
     /// Machine-readable cell record. `final_cost` is duplicated as exact
@@ -92,6 +109,19 @@ impl CellResult {
                         .collect(),
                 ),
             );
+        }
+        if let Some(sim) = &self.sim {
+            // readable decimals plus authoritative bits, like final_cost
+            let mut s = Json::obj();
+            s.set("p50", Json::Num(sim.p50))
+                .set("p50_bits", Json::Str(f64_bits_hex(sim.p50)))
+                .set("p99", Json::Num(sim.p99))
+                .set("p99_bits", Json::Str(f64_bits_hex(sim.p99)))
+                .set("p999", Json::Num(sim.p999))
+                .set("p999_bits", Json::Str(f64_bits_hex(sim.p999)))
+                .set("mean", Json::Num(sim.mean))
+                .set("mean_bits", Json::Str(f64_bits_hex(sim.mean)));
+            o.set("sim", s);
         }
         o
     }
@@ -166,6 +196,24 @@ impl CellResult {
                 }
             }
         };
+        let sim = match doc.get("sim") {
+            Json::Null => None,
+            s => {
+                let field = |name: &str| -> Result<f64> {
+                    let hex = s
+                        .get(name)
+                        .as_str()
+                        .with_context(|| format!("cell sim digest missing {name}"))?;
+                    parse_f64_bits_hex(hex).with_context(|| format!("bad sim {name} '{hex}'"))
+                };
+                Some(CellSim {
+                    p50: field("p50_bits")?,
+                    p99: field("p99_bits")?,
+                    p999: field("p999_bits")?,
+                    mean: field("mean_bits")?,
+                })
+            }
+        };
         Ok(CellResult {
             index: doc
                 .get("index")
@@ -189,6 +237,7 @@ impl CellResult {
                 .context("cell record missing iters_to_1pct")?,
             wall_seconds: doc.get("wall_seconds").as_num().unwrap_or(0.0),
             epoch_costs,
+            sim,
         })
     }
 }
@@ -268,6 +317,21 @@ impl SweepReport {
                     epoch_mean_cost.push(es.mean);
                     epoch_p95_cost.push(es.p95);
                 }
+                // the grid hash keeps sim and no-sim cells out of one
+                // report, so within a group either all cells carry a
+                // digest or none do
+                let sims: Vec<&CellSim> = cells.iter().filter_map(|c| c.sim.as_ref()).collect();
+                let sim_mean = if sims.is_empty() {
+                    None
+                } else {
+                    let k = sims.len() as f64;
+                    Some(CellSim {
+                        p50: sims.iter().map(|s| s.p50).sum::<f64>() / k,
+                        p99: sims.iter().map(|s| s.p99).sum::<f64>() / k,
+                        p999: sims.iter().map(|s| s.p999).sum::<f64>() / k,
+                        mean: sims.iter().map(|s| s.mean).sum::<f64>() / k,
+                    })
+                };
                 GroupSummary {
                     scenario,
                     algorithm,
@@ -284,6 +348,7 @@ impl SweepReport {
                     mean_wall_seconds: cells.iter().map(|c| c.wall_seconds).sum::<f64>() / n,
                     epoch_mean_cost,
                     epoch_p95_cost,
+                    sim_mean,
                 }
             })
             .collect()
@@ -308,14 +373,27 @@ impl SweepReport {
                     c.epoch_costs.iter().map(|x| x.to_bits()).collect(),
                     c.iterations,
                     c.iters_to_1pct,
+                    match &c.sim {
+                        Some(s) => vec![
+                            s.p50.to_bits(),
+                            s.p99.to_bits(),
+                            s.p999.to_bits(),
+                            s.mean.to_bits(),
+                        ],
+                        None => Vec::new(),
+                    },
                 )
             })
             .collect()
     }
 
-    /// Paper-style text table of the group aggregates.
+    /// Paper-style text table of the group aggregates. Reports whose
+    /// cells carry a simulated sojourn digest grow three tail-latency
+    /// columns (mean across the group's seeds of each cell's simulated
+    /// p50/p99/p99.9 request sojourn).
     pub fn render(&self) -> String {
-        let mut t = Table::new(&[
+        let simulated = self.cells.iter().any(|c| c.sim.is_some());
+        let mut headers = vec![
             "scenario",
             "algo",
             "backend",
@@ -325,9 +403,13 @@ impl SweepReport {
             "p95 T",
             "iters->1%",
             "mean wall s",
-        ]);
+        ];
+        if simulated {
+            headers.extend(["sim p50", "sim p99", "sim p99.9"]);
+        }
+        let mut t = Table::new(&headers);
         for g in self.groups() {
-            t.row(vec![
+            let mut row = vec![
                 g.scenario,
                 g.algorithm,
                 g.backend,
@@ -337,7 +419,14 @@ impl SweepReport {
                 fnum(g.p95_cost),
                 format!("{:.1}", g.mean_iters_to_1pct),
                 format!("{:.3}", g.mean_wall_seconds),
-            ]);
+            ];
+            if simulated {
+                match g.sim_mean {
+                    Some(s) => row.extend([fnum(s.p50), fnum(s.p99), fnum(s.p999)]),
+                    None => row.extend(["-".to_string(), "-".to_string(), "-".to_string()]),
+                }
+            }
+            t.row(row);
         }
         t.render()
     }
@@ -364,6 +453,12 @@ impl SweepReport {
                 if !g.epoch_mean_cost.is_empty() {
                     o.set("epoch_mean_cost", Json::from_f64_slice(&g.epoch_mean_cost))
                         .set("epoch_p95_cost", Json::from_f64_slice(&g.epoch_p95_cost));
+                }
+                if let Some(s) = g.sim_mean {
+                    o.set("sim_mean_p50", Json::Num(s.p50))
+                        .set("sim_mean_p99", Json::Num(s.p99))
+                        .set("sim_mean_p999", Json::Num(s.p999))
+                        .set("sim_mean_sojourn", Json::Num(s.mean));
                 }
                 o
             })
@@ -412,6 +507,7 @@ mod tests {
             schedules: vec![PatternSchedule::static_()],
             rate_scale: 1.0,
             run: RunConfig::quick(),
+            sim: None,
         }
     }
 
@@ -452,6 +548,7 @@ mod tests {
             ],
             rate_scale: 1.0,
             run: RunConfig::quick(),
+            sim: None,
         };
         let report = run_sweep(&spec, 2).unwrap();
         assert_eq!(report.cells.len(), 4);
@@ -586,6 +683,13 @@ mod tests {
             iters_to_1pct: 2,
             wall_seconds: 0.25,
             epoch_costs: vec![123.5, cost],
+            // a digest with awkward values: serde must carry it bit-exactly
+            sim: Some(CellSim {
+                p50: 0.125,
+                p99: cost,
+                p999: f64::INFINITY,
+                mean: 0.1 + 0.2,
+            }),
         };
         let report = SweepReport {
             cells: vec![mk(0, 123.456_789_012_345), mk(1, f64::INFINITY)],
@@ -598,6 +702,13 @@ mod tests {
         assert!(back.cells[1].final_cost.is_infinite());
         assert_eq!(back.workers, 3);
         assert_eq!(back.grid_hash, report.grid_hash);
+        // the sojourn digest round-trips bit-exactly, ∞ included, and the
+        // text table grows the tail columns for simulated reports
+        let s = back.cells[1].sim.expect("sim digest lost in round-trip");
+        assert_eq!(s.p999.to_bits(), f64::INFINITY.to_bits());
+        assert_eq!(s.mean.to_bits(), (0.1f64 + 0.2).to_bits());
+        let txt = report.render();
+        assert!(txt.contains("sim p99"), "{txt}");
     }
 
     #[test]
@@ -638,6 +749,7 @@ mod tests {
             iters_to_1pct: 80,
             wall_seconds: 1.5,
             epoch_costs: vec![10.0, f64::INFINITY, 9.5, f64::INFINITY],
+            sim: None,
         };
         let doc = Json::parse(&cell_line(&cell)).unwrap();
         assert_eq!(doc.get("type").as_str(), Some("cell"));

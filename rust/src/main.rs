@@ -19,6 +19,10 @@
 //!                    [--backend sparse|native|pjrt] [--schedule step|bursty|diurnal|churn|rescale]
 //!                    [--epochs N] [--magnitude X] [--mode warm|cold|both]
 //!                    [--iters N] [--tol X] [--patience N] [--scale X] [--out trace.json]
+//! cecflow simulate   [--scenario abilene] [--seed 42] [--algo sgp|gp|spoo|lcor]
+//!                    [--requests N] [--arrivals poisson|mmpp[:b[:s]]|diurnal[:d]]
+//!                    [--warmup F] [--pattern static|step:3:1.5|…] [--scale X]
+//!                    [--iters N] [--tol X] [--patience N] [--out telemetry.json]
 //! cecflow experiment fig4|fig5b|fig5c|fig5d|table2  (see benches/ too)
 //! cecflow validate   [--scenario abilene] — XLA data plane vs native
 //! cecflow info       — environment, scenarios, artifact status
@@ -57,6 +61,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("run") => cmd_run(args),
         Some("sweep") => cmd_sweep(args),
         Some("dynamic") => cmd_dynamic(args),
+        Some("simulate") => cmd_simulate(args),
         Some("validate") => cmd_validate(args),
         Some("info") => cmd_info(),
         Some("experiment") => cmd_experiment(args),
@@ -76,6 +81,7 @@ fn print_help() {
          \x20 run         optimize one scenario with one algorithm\n\
          \x20 sweep       scenario × seed × algorithm grid on worker threads\n\
          \x20 dynamic     time-varying task pattern: warm vs cold re-optimization\n\
+         \x20 simulate    request-level discrete-event run of a converged strategy\n\
          \x20 experiment  regenerate a paper figure (fig4|fig5b|fig5c|fig5d|table2)\n\
          \x20 validate    XLA dense data plane vs native evaluator parity\n\
          \x20 info        environment + scenario inventory\n\
@@ -87,6 +93,8 @@ fn print_help() {
          \x20            --backends sparse,native,pjrt --workers N --iters N\n\
          \x20            --schedules static,step:3:1.5 --tol X --patience N\n\
          \x20            --scale X --out FILE\n\
+         \x20            --sim-requests N [--sim-arrivals SPEC] [--sim-warmup F]\n\
+         \x20                                               tail-latency columns per cell\n\
          sweep shards: --shards N [--shard-timeout SECS]  spawn N child processes\n\
          \x20            --shard-retries N                  re-steal budget per failed\n\
          \x20                                               shard (default 1; 0 = fail fast)\n\
@@ -95,7 +103,9 @@ fn print_help() {
          \x20            --shard-worker i/n                 (internal JSON-lines child)\n\
          \x20            --steal-cells i,j,…                (internal re-steal child)\n\
          dynamic flags: --schedule step|bursty|diurnal|churn|rescale --epochs N\n\
-         \x20            --magnitude X --mode warm|cold|both --backend sparse|native|pjrt"
+         \x20            --magnitude X --mode warm|cold|both --backend sparse|native|pjrt\n\
+         simulate flags: --requests N --arrivals poisson|mmpp[:burst[:switch]]|diurnal[:depth]\n\
+         \x20            --warmup F --pattern static|step:3:1.5|… --out FILE"
     );
 }
 
@@ -157,6 +167,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 l_data: td.l_data,
                 l_result: td.l_result,
                 wall_seconds: 0.0,
+                phi: Some(trace.phi),
             }
         }
         Schedule::Accelerated => {
@@ -177,6 +188,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 l_data: td.l_data,
                 l_result: td.l_result,
                 wall_seconds: res.wall_seconds,
+                phi: Some(res.phi),
             }
         }
     };
@@ -271,6 +283,27 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     spec.run.max_iters = args.opt_usize("iters", spec.run.max_iters);
     spec.run.tol = args.opt_f64("tol", spec.run.tol);
     spec.run.patience = args.opt_usize("patience", spec.run.patience);
+    // request-level simulation opt-in: --sim-requests switches it on, the
+    // other two flags refine it (and are rejected without it — silently
+    // ignoring them would misreport what the sweep measured)
+    if let Some(n) = args.opt("sim-requests") {
+        let mut sim = cecflow::coordinator::SimSweepConfig {
+            requests: n
+                .parse()
+                .with_context(|| format!("--sim-requests expects an integer, got '{n}'"))?,
+            ..Default::default()
+        };
+        if let Some(a) = args.opt("sim-arrivals") {
+            sim.arrivals = cecflow::sim::ArrivalSpec::parse(a)?;
+        }
+        sim.warmup = args.opt_f64("sim-warmup", sim.warmup);
+        spec.sim = Some(sim);
+    } else {
+        anyhow::ensure!(
+            args.opt("sim-arrivals").is_none() && args.opt("sim-warmup").is_none(),
+            "--sim-arrivals/--sim-warmup require --sim-requests"
+        );
+    }
 
     let default_workers = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -547,6 +580,128 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
                 "runs",
                 Json::Arr(traces.iter().map(DynamicTrace::to_json).collect()),
             );
+        if let Some(parent) = std::path::Path::new(out).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        std::fs::write(out, doc.pretty()).with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// `cecflow simulate`: optimize a scenario to convergence, then release a
+/// stream of stochastic requests through the converged strategy's routing
+/// splits on the discrete-event engine (`sim::tasks`) and report
+/// streaming sojourn quantiles. With a non-static `--pattern`, the
+/// warm-started adaptive loop ([`cecflow::coordinator::AdaptiveRunner`])
+/// converges every epoch first and each request is routed by its arrival
+/// epoch's strategy.
+fn cmd_simulate(args: &Args) -> Result<()> {
+    use cecflow::coordinator::{AdaptiveRunner, CellBackend, PatternSchedule};
+    use cecflow::sim::{simulate, ArrivalSpec, SimConfig, SimEpoch, SimPlan};
+
+    let scenario = args.opt_or("scenario", "abilene");
+    let seed = args.opt_u64("seed", 42);
+    let rate_scale = args.opt_f64("scale", 1.0);
+    let algorithm = {
+        let a = args.opt_or("algo", "sgp");
+        Algorithm::parse(a).with_context(|| format!("unknown algo '{a}'"))?
+    };
+    anyhow::ensure!(
+        algorithm.supports_simulation(),
+        "algorithm {} produces no strategy to simulate — pick an iterative optimizer \
+         (sgp|gp|spoo|lcor)",
+        algorithm.name()
+    );
+    let arrivals = ArrivalSpec::parse(args.opt_or("arrivals", "poisson"))?;
+    let pattern = PatternSchedule::parse(args.opt_or("pattern", "static"))?;
+    let run_cfg = RunConfig {
+        max_iters: args.opt_usize("iters", 200),
+        tol: args.opt_f64("tol", RunConfig::default().tol),
+        patience: args.opt_usize("patience", RunConfig::default().patience),
+    };
+    let sim_cfg = SimConfig {
+        requests: args.opt_u64("requests", 100_000),
+        warmup: args.opt_f64("warmup", 0.05),
+        seed,
+    };
+
+    let net = build_scenario_network(scenario, seed, rate_scale)?;
+    println!(
+        "simulate: {scenario} (seed {seed}) algo {} pattern {} arrivals {} — optimizing ...",
+        algorithm.name(),
+        pattern.label(),
+        arrivals.label()
+    );
+    let opt_start = std::time::Instant::now();
+    let plan = if pattern.is_static() {
+        let out = run_algorithm(&net, algorithm, &run_cfg)?;
+        let phi = out.phi.context("optimizer returned no strategy")?;
+        println!(
+            "converged: T = {} after {} iteration(s) ({:.2}s)",
+            fnum(out.final_cost),
+            out.iterations,
+            opt_start.elapsed().as_secs_f64()
+        );
+        SimPlan {
+            epochs: vec![SimEpoch { net, phi }],
+        }
+    } else {
+        let runner = AdaptiveRunner {
+            algorithm,
+            backend: CellBackend::Sparse,
+            warm: true,
+            run: run_cfg,
+        };
+        let epochs = runner.converged_epochs(scenario, &net, seed, &pattern)?;
+        println!(
+            "converged {} epoch(s) in {:.2}s",
+            epochs.len(),
+            opt_start.elapsed().as_secs_f64()
+        );
+        SimPlan {
+            epochs: epochs
+                .into_iter()
+                .map(|(net, phi)| SimEpoch { net, phi })
+                .collect(),
+        }
+    };
+
+    let sim_start = std::time::Instant::now();
+    let telemetry = simulate(&plan, &arrivals, &sim_cfg)?;
+    let (p50, p99, p999) = telemetry.tail();
+    println!(
+        "released {} request(s), {} completed, {} stranded — {} events over {:.1} \
+         simulated time unit(s) in {:.2}s",
+        telemetry.arrived,
+        telemetry.completed,
+        telemetry.stranded,
+        telemetry.events,
+        telemetry.end_time,
+        sim_start.elapsed().as_secs_f64()
+    );
+    println!(
+        "sojourn: mean {}  p50 {}  p99 {}  p99.9 {}",
+        fnum(telemetry.mean_sojourn()),
+        fnum(p50),
+        fnum(p99),
+        fnum(p999)
+    );
+
+    if let Some(out) = args.opt("out") {
+        let mut doc = Json::obj();
+        doc.set("scenario", Json::Str(scenario.to_string()))
+            .set("seed", Json::Num(seed as f64))
+            .set("algorithm", Json::Str(algorithm.name().to_string()))
+            .set("pattern", Json::Str(pattern.label()))
+            .set("arrivals", Json::Str(arrivals.label()))
+            .set("requests", Json::Num(sim_cfg.requests as f64))
+            .set("warmup", Json::Num(sim_cfg.warmup))
+            .set("rate_scale", Json::Num(rate_scale))
+            .set("telemetry", telemetry.to_json());
         if let Some(parent) = std::path::Path::new(out).parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent)

@@ -1,7 +1,8 @@
 //! Thread-based actor deployment of the broadcast protocol.
 //!
-//! `sim::protocol` models the two-stage broadcast on a virtual clock; this
-//! module runs it with *real* concurrency — one OS thread per network node,
+//! `sim::protocol` models the two-stage broadcast on the virtual clock of
+//! the [`super::core`] calendar queue; this module runs the same protocol
+//! with *real* concurrency instead — one OS thread per network node,
 //! mpsc channels as links — demonstrating that the protocol is genuinely
 //! asynchronous: no barriers, nodes fire purely on message arrival, in
 //! whatever order the scheduler produces. (tokio is unavailable offline;

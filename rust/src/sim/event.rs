@@ -1,9 +1,13 @@
-//! Discrete-event engine for the distributed-protocol simulation.
+//! Legacy binary-heap event queue, kept as the reference implementation.
 //!
 //! A minimal time-ordered event queue: events carry an opaque payload and
 //! fire in (time, sequence) order, so simultaneous events are processed in
-//! deterministic FIFO order. Used by `sim::protocol` to model broadcast
-//! message propagation with per-message latency `t_c` (§IV Complexity).
+//! deterministic FIFO order. Production callers (`sim::protocol`, the
+//! request-level `sim::tasks` engine) now run on the O(1)-amortized
+//! calendar queue in [`super::core`]; this heap version stays because its
+//! O(log n) semantics are trivially auditable, which makes it the oracle
+//! for the randomized ordering-parity test in `rust/tests/sim_engine.rs`
+//! that pins the calendar queue's behaviour.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -65,8 +69,16 @@ impl<P> EventQueue<P> {
     }
 
     /// Schedule `payload` to fire `delay` from now.
+    ///
+    /// Non-finite delays are rejected: `Event::cmp` falls back to
+    /// `Ordering::Equal` when times are incomparable, so a NaN time would
+    /// silently corrupt the heap order rather than fail loudly, and an
+    /// infinite time would pin the clock at `+∞` on pop.
     pub fn schedule(&mut self, delay: f64, payload: P) {
-        assert!(delay >= 0.0, "negative delay");
+        assert!(
+            delay.is_finite() && delay >= 0.0,
+            "event delay must be finite and non-negative, got {delay}"
+        );
         let ev = Event {
             time: self.now + delay,
             seq: self.seq,
@@ -143,5 +155,19 @@ mod tests {
     fn negative_delay_rejected() {
         let mut q: EventQueue<()> = EventQueue::new();
         q.schedule(-1.0, ());
+    }
+
+    #[test]
+    #[should_panic]
+    fn nan_delay_rejected() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        q.schedule(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic]
+    fn infinite_delay_rejected() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        q.schedule(f64::INFINITY, ());
     }
 }

@@ -1,15 +1,38 @@
-//! Distributed-protocol simulation: the paper's two-stage marginal
-//! broadcast (§IV) on a discrete-event engine, asynchronous update
-//! schedules (Theorem 2), mid-run failure injection (Fig. 5b), and a
-//! thread-per-node actor deployment demonstrating true asynchrony.
+//! Discrete-event simulation, layered (PR 6):
+//!
+//! * [`core`] — the indexed calendar queue: O(1)-amortized event
+//!   scheduling with the deterministic `(time, seq)` FIFO tie-break
+//!   ([`event`] keeps the legacy binary-heap queue as the parity oracle);
+//! * [`workload`] — request arrival processes (Poisson, MMPP, diurnal)
+//!   over the per-epoch rates of a `PatternSchedule`;
+//! * [`tasks`] — arena-allocated request state machines walking
+//!   data-flow hops, computation service and result-flow hops through
+//!   per-link/per-CPU FIFO queues, per a converged [`Strategy`];
+//! * [`telemetry`] — streaming tail-latency sketches and utilization
+//!   counters (bounded memory, bit-reproducible).
+//!
+//! Plus the original protocol layer: the paper's two-stage marginal
+//! broadcast (§IV) in [`protocol`], asynchronous update schedules
+//! (Theorem 2) in [`async_run`], mid-run failure injection (Fig. 5b), and
+//! a thread-per-node actor deployment ([`actors`]) demonstrating true
+//! asynchrony.
+//!
+//! [`Strategy`]: crate::model::strategy::Strategy
 
 pub mod actors;
 pub mod async_run;
+pub mod core;
 pub mod event;
 pub mod protocol;
+pub mod tasks;
+pub mod telemetry;
+pub mod workload;
 
 pub use async_run::{
     run_async, run_async_dynamic, run_async_round_robin, run_with_failure, DynamicAsyncTrace,
     FailureRun,
 };
 pub use protocol::{run_broadcast, ProtocolResult};
+pub use tasks::{simulate, SimConfig, SimEpoch, SimPlan};
+pub use telemetry::Telemetry;
+pub use workload::{ArrivalSpec, ArrivalStream, EpochRates};

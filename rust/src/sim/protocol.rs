@@ -26,7 +26,9 @@ use crate::model::marginals::Marginals;
 use crate::model::network::Network;
 use crate::model::strategy::Strategy;
 
-use super::event::EventQueue;
+// The broadcast runs on the O(1)-amortized calendar queue; the legacy heap
+// queue in `super::event` remains only as the parity-test oracle.
+use super::core::EventQueue;
 
 /// A broadcast message for one task: either a stage-1 (`∂T/∂t⁺`) or
 /// stage-2 (`∂T/∂r`) value, from `from`, delivered to `to`.

@@ -1,0 +1,585 @@
+//! Request-level task engine: individual requests walking a converged
+//! strategy through FIFO queues.
+//!
+//! The optimizer prices *flows*; this engine releases *requests* and
+//! measures what the paper's convex link/CPU costs only promise on
+//! average: sojourn time, including its tail. Each request walks the
+//! three-leg journey of §II — data-flow hops from its source toward a
+//! computation site (strategy slot 0 = compute here, slot k+1 = forward on
+//! the k-th out-edge), exponential computation service, then result-flow
+//! hops (size `a_m ×` the data size) to the task's destination — with
+//! every routing choice drawn from the converged `Strategy`'s probability
+//! rows, so the simulated demand splits exactly like the optimized flows.
+//!
+//! Service model per [`CostFn`]: `Queue{cap}` is a single-server FIFO with
+//! exponential service of mean `size/cap` — an M/M/1 queue whose expected
+//! occupancy is the paper's cost term `F/(cap−F)`, so measured mean delay
+//! and analytic cost agree when the strategy keeps every flow under
+//! capacity. `Linear{unit}` is a pure propagation delay (infinite server),
+//! and `SmoothCap{slope,cap,..}` is the rate-capped server plus its
+//! deterministic `slope·size` propagation term.
+//!
+//! Engineering constraints (acceptance criteria of the PR 6 issue):
+//!
+//! * request state lives in a generation-indexed slab arena — after
+//!   warm-up the engine performs **no per-request heap allocation**
+//!   (slab and free list grow to peak concurrency, then recycle);
+//! * the event set rides the O(1)-amortized calendar queue
+//!   ([`super::core`]);
+//! * telemetry streams into bounded-memory sketches
+//!   ([`super::telemetry`]) — total memory is independent of the number
+//!   of requests simulated.
+//!
+//! Time-varying runs pin each request to the epoch it arrived in: routing,
+//! sizes and destinations come from that epoch's `(Network, Strategy)`
+//! snapshot while the physical FIFO servers are shared across epochs
+//! (capacities are epoch-invariant under every `PatternSchedule` kind —
+//! the schedules mutate rates and endpoints, not hardware).
+
+use anyhow::{bail, Result};
+
+use crate::model::cost::CostFn;
+use crate::model::network::Network;
+use crate::model::strategy::Strategy;
+use crate::util::rng::Pcg;
+
+use super::core::EventQueue;
+use super::telemetry::Telemetry;
+use super::workload::{Arrival, ArrivalSpec, ArrivalStream, EpochRates};
+
+/// One epoch's world: the mutated scenario and the strategy the optimizer
+/// converged to on it.
+pub struct SimEpoch {
+    pub net: Network,
+    pub phi: Strategy,
+}
+
+/// The full simulation input: at least one epoch; all epochs must share
+/// the same node/edge sets (strategies are retargeted, not re-wired).
+pub struct SimPlan {
+    pub epochs: Vec<SimEpoch>,
+}
+
+/// Engine parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// Total requests to release.
+    pub requests: u64,
+    /// Fraction of requests (by arrival order) excluded from the sojourn
+    /// sketch as warm-up transient.
+    pub warmup: f64,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            requests: 100_000,
+            warmup: 0.05,
+            seed: 1,
+        }
+    }
+}
+
+/// Hard ceiling on concurrently in-flight requests: an overloaded
+/// (infeasible) strategy grows queues without bound; failing fast beats
+/// exhausting memory on a run whose tail latency is divergent anyway.
+const MAX_IN_FLIGHT: usize = 4_000_000;
+
+/// Sentinel for "no link hop in progress".
+const NO_LINK: u32 = u32::MAX;
+
+/// What a request is currently waiting for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    /// A data-flow link hop is in service; on completion, decide again at
+    /// the new node.
+    Data,
+    /// Computation is in service; on completion, start the result flow.
+    Compute,
+    /// A result-flow link hop is in service.
+    Result,
+}
+
+/// Slab slot: generation-checked request state.
+struct Slot {
+    gen: u32,
+    live: bool,
+    task: u32,
+    node: u32,
+    epoch: u32,
+    /// Edge id of the link hop in service ([`NO_LINK`] when computing or
+    /// making the first decision), so completion releases the right FIFO.
+    hop_edge: u32,
+    phase: Phase,
+    arrival: f64,
+    ordinal: u64,
+    rng: Pcg,
+}
+
+/// Single-server FIFO state for one link or one CPU.
+#[derive(Clone, Copy, Debug, Default)]
+struct Server {
+    next_free: f64,
+    in_system: u64,
+    peak: u64,
+    busy: f64,
+}
+
+impl Server {
+    fn enter(&mut self) {
+        self.in_system += 1;
+        self.peak = self.peak.max(self.in_system);
+    }
+}
+
+enum Ev {
+    /// The next arrival from the workload stream fires.
+    Arrive,
+    /// A service (link hop or computation) finished for slab slot `slot`,
+    /// valid only while the slot's generation still matches `gen`.
+    HopDone { slot: u32, gen: u32 },
+}
+
+struct Engine<'a> {
+    plan: &'a SimPlan,
+    queue: EventQueue<Ev>,
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    in_flight: usize,
+    links: Vec<Server>,
+    cpus: Vec<Server>,
+    telemetry: Telemetry,
+    stream: ArrivalStream,
+    /// The arrival whose `Ev::Arrive` event is currently scheduled.
+    pending: Option<Arrival>,
+    rng_requests: Pcg,
+    ordinal: u64,
+    warm_count: u64,
+}
+
+/// Run the request-level simulation and return its streaming telemetry.
+pub fn simulate(plan: &SimPlan, arrivals: &ArrivalSpec, cfg: &SimConfig) -> Result<Telemetry> {
+    if plan.epochs.is_empty() {
+        bail!("simulation plan has no epochs");
+    }
+    let (n, e) = (plan.epochs[0].net.n(), plan.epochs[0].net.e());
+    for ep in &plan.epochs[1..] {
+        if ep.net.n() != n || ep.net.e() != e {
+            bail!("simulation epochs must share the node/edge sets");
+        }
+    }
+    if !(0.0..1.0).contains(&cfg.warmup) {
+        bail!("warmup fraction must be in [0,1), got {}", cfg.warmup);
+    }
+    let rates: Vec<EpochRates> = plan
+        .epochs
+        .iter()
+        .map(|ep| EpochRates::of(&ep.net))
+        .collect();
+    let stream = ArrivalStream::new(arrivals, rates, cfg.requests, cfg.seed)?;
+    let mut engine = Engine {
+        plan,
+        queue: EventQueue::new(),
+        slots: Vec::new(),
+        free: Vec::new(),
+        in_flight: 0,
+        links: vec![Server::default(); e],
+        cpus: vec![Server::default(); n],
+        telemetry: Telemetry::new(n, e),
+        stream,
+        pending: None,
+        rng_requests: Pcg::with_stream(cfg.seed, 0x7a5c_0de),
+        ordinal: 0,
+        warm_count: (cfg.warmup * cfg.requests as f64).floor() as u64,
+    };
+    engine.run()?;
+    Ok(engine.into_telemetry())
+}
+
+impl Engine<'_> {
+    fn run(&mut self) -> Result<()> {
+        self.schedule_next_arrival();
+        while let Some(ev) = self.queue.pop() {
+            match ev.payload {
+                Ev::Arrive => {
+                    let a = self.pending.take().expect("Arrive event without arrival");
+                    self.schedule_next_arrival();
+                    self.admit(a)?;
+                }
+                Ev::HopDone { slot, gen } => {
+                    let idx = slot as usize;
+                    // A stale generation would mean the slot was freed
+                    // while a service was still in flight — an engine
+                    // bug, since each request has one pending service.
+                    debug_assert!(
+                        self.slots[idx].live && self.slots[idx].gen == gen,
+                        "stale hop event"
+                    );
+                    self.advance(idx)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn into_telemetry(mut self) -> Telemetry {
+        self.telemetry.end_time = self.queue.now();
+        self.telemetry.events = self.queue.processed;
+        for (i, srv) in self.cpus.iter().enumerate() {
+            self.telemetry.node_busy[i] = srv.busy;
+            self.telemetry.node_peak[i] = srv.peak;
+        }
+        for (e, srv) in self.links.iter().enumerate() {
+            self.telemetry.link_busy[e] = srv.busy;
+            self.telemetry.link_peak[e] = srv.peak;
+        }
+        self.telemetry
+    }
+
+    fn schedule_next_arrival(&mut self) {
+        if let Some(a) = self.stream.next() {
+            let delay = (a.time - self.queue.now()).max(0.0);
+            self.pending = Some(a);
+            self.queue.schedule(delay, Ev::Arrive);
+        }
+    }
+
+    /// Inject one request: allocate a slab slot and make its first
+    /// data-plane decision at the source node.
+    fn admit(&mut self, a: Arrival) -> Result<()> {
+        if self.in_flight >= MAX_IN_FLIGHT {
+            bail!(
+                "over {MAX_IN_FLIGHT} requests in flight — the strategy is \
+                 overloaded (some queue has utilization ≥ 1); aborting"
+            );
+        }
+        let now = self.queue.now();
+        let epoch = self.stream.epoch_of(a.time) as u32;
+        let ordinal = self.ordinal;
+        self.ordinal += 1;
+        let rng = self.rng_requests.fork(ordinal);
+        let idx = match self.free.pop() {
+            Some(i) => {
+                let s = &mut self.slots[i as usize];
+                s.live = true;
+                s.task = a.task as u32;
+                s.node = a.source as u32;
+                s.epoch = epoch;
+                s.hop_edge = NO_LINK;
+                s.phase = Phase::Data;
+                s.arrival = now;
+                s.ordinal = ordinal;
+                s.rng = rng;
+                i as usize
+            }
+            None => {
+                self.slots.push(Slot {
+                    gen: 0,
+                    live: true,
+                    task: a.task as u32,
+                    node: a.source as u32,
+                    epoch,
+                    hop_edge: NO_LINK,
+                    phase: Phase::Data,
+                    arrival: now,
+                    ordinal,
+                    rng,
+                });
+                self.slots.len() - 1
+            }
+        };
+        self.in_flight += 1;
+        self.telemetry.arrived += 1;
+        self.telemetry.max_in_flight = self.telemetry.max_in_flight.max(self.in_flight as u64);
+        self.decide_data(idx)
+    }
+
+    /// A service completed: release its server and take the next step.
+    fn advance(&mut self, idx: usize) -> Result<()> {
+        let hop = self.slots[idx].hop_edge;
+        if hop != NO_LINK {
+            self.links[hop as usize].in_system -= 1;
+            self.slots[idx].hop_edge = NO_LINK;
+        }
+        match self.slots[idx].phase {
+            Phase::Data => self.decide_data(idx),
+            Phase::Compute => {
+                self.cpus[self.slots[idx].node as usize].in_system -= 1;
+                self.slots[idx].phase = Phase::Result;
+                self.decide_result(idx)
+            }
+            Phase::Result => self.decide_result(idx),
+        }
+    }
+
+    /// Data plane at the request's current node: compute here (slot 0) or
+    /// forward along an out-edge, per the strategy row.
+    fn decide_data(&mut self, idx: usize) -> Result<()> {
+        let plan = self.plan;
+        let (task, node, epoch) = {
+            let s = &self.slots[idx];
+            (s.task as usize, s.node as usize, s.epoch as usize)
+        };
+        let ep = &plan.epochs[epoch];
+        let row = &ep.phi.data[task][node];
+        let Some(choice) = sample_row(row, &mut self.slots[idx].rng) else {
+            return self.strand(idx);
+        };
+        if choice == 0 {
+            // Compute here: CPU service of requirement w_im × unit size.
+            let size = ep.net.w_of(node, task);
+            self.slots[idx].phase = Phase::Compute;
+            self.cpus[node].enter();
+            let done = self.serve(SrvRef::Cpu(node), &ep.net.comp_cost[node], size, idx);
+            self.schedule_hop(idx, done);
+        } else {
+            let eid = ep.net.graph.out_edge_ids(node)[choice - 1];
+            let dst = ep.net.graph.edge(eid).dst;
+            self.slots[idx].phase = Phase::Data;
+            self.slots[idx].node = dst as u32;
+            self.slots[idx].hop_edge = eid as u32;
+            self.links[eid].enter();
+            let done = self.serve(SrvRef::Link(eid), &ep.net.link_cost[eid], 1.0, idx);
+            self.schedule_hop(idx, done);
+        }
+        Ok(())
+    }
+
+    /// Result plane: complete at the destination or forward the result
+    /// (size `a_m`) along an out-edge per the result strategy row.
+    fn decide_result(&mut self, idx: usize) -> Result<()> {
+        let plan = self.plan;
+        let (task, node, epoch) = {
+            let s = &self.slots[idx];
+            (s.task as usize, s.node as usize, s.epoch as usize)
+        };
+        let ep = &plan.epochs[epoch];
+        if node == ep.net.tasks[task].dest {
+            self.complete(idx);
+            return Ok(());
+        }
+        let row = &ep.phi.result[task][node];
+        let Some(k) = sample_row(row, &mut self.slots[idx].rng) else {
+            return self.strand(idx);
+        };
+        let eid = ep.net.graph.out_edge_ids(node)[k];
+        let dst = ep.net.graph.edge(eid).dst;
+        let size = ep.net.a_of(task);
+        self.slots[idx].node = dst as u32;
+        self.slots[idx].hop_edge = eid as u32;
+        self.links[eid].enter();
+        let done = self.serve(SrvRef::Link(eid), &ep.net.link_cost[eid], size, idx);
+        self.schedule_hop(idx, done);
+        Ok(())
+    }
+
+    /// Occupy a server and return the absolute completion time.
+    fn serve(&mut self, srv: SrvRef, cost: &CostFn, size: f64, idx: usize) -> f64 {
+        let now = self.queue.now();
+        let rng = &mut self.slots[idx].rng;
+        // (queued service draw, deterministic propagation term)
+        let (svc, extra) = match cost {
+            CostFn::Linear { unit } => (None, unit * size),
+            CostFn::Queue { cap } => (Some(draw_service(rng, size / cap)), 0.0),
+            CostFn::SmoothCap { slope, cap, .. } => {
+                (Some(draw_service(rng, size / cap)), slope * size)
+            }
+        };
+        let state = match srv {
+            SrvRef::Cpu(i) => &mut self.cpus[i],
+            SrvRef::Link(e) => &mut self.links[e],
+        };
+        match svc {
+            // Infinite-server delay element: busy time still accrues so
+            // "utilization" reports offered work.
+            None => {
+                state.busy += extra;
+                now + extra
+            }
+            Some(svc) => {
+                let start = now.max(state.next_free);
+                state.next_free = start + svc;
+                state.busy += svc;
+                start + svc + extra
+            }
+        }
+    }
+
+    fn schedule_hop(&mut self, idx: usize, done: f64) {
+        let gen = self.slots[idx].gen;
+        let delay = (done - self.queue.now()).max(0.0);
+        self.queue.schedule(
+            delay,
+            Ev::HopDone {
+                slot: idx as u32,
+                gen,
+            },
+        );
+    }
+
+    fn complete(&mut self, idx: usize) {
+        let sojourn = self.queue.now() - self.slots[idx].arrival;
+        let warmed = self.slots[idx].ordinal >= self.warm_count;
+        self.telemetry.record_completion(sojourn, warmed);
+        self.release(idx);
+    }
+
+    /// Dead-end in the strategy (no positive slot): count and drop. A
+    /// feasible, loop-free strategy never strands a request — tests
+    /// assert the counter stays 0.
+    fn strand(&mut self, idx: usize) -> Result<()> {
+        self.telemetry.stranded += 1;
+        self.release(idx);
+        Ok(())
+    }
+
+    fn release(&mut self, idx: usize) {
+        let s = &mut self.slots[idx];
+        s.live = false;
+        s.gen = s.gen.wrapping_add(1);
+        self.free.push(idx as u32);
+        self.in_flight -= 1;
+    }
+}
+
+/// Server identity (which FIFO a service occupies).
+#[derive(Clone, Copy)]
+enum SrvRef {
+    Cpu(usize),
+    Link(usize),
+}
+
+/// Exponential service draw with mean `mean`; zero-requirement services
+/// (e.g. a task with zero compute weight) complete instantly.
+fn draw_service(rng: &mut Pcg, mean: f64) -> f64 {
+    if mean > 0.0 && mean.is_finite() {
+        rng.exponential(mean)
+    } else {
+        0.0
+    }
+}
+
+/// Sample an index from a probability row (sums to ≈1): slot 0 = local
+/// compute for data rows, out-edge k for result rows. Returns `None` when
+/// the row has no positive entry.
+fn sample_row(row: &[f64], rng: &mut Pcg) -> Option<usize> {
+    let u = rng.f64();
+    let mut acc = 0.0;
+    let mut last_pos = None;
+    for (k, &p) in row.iter().enumerate() {
+        if p > 0.0 {
+            acc += p;
+            last_pos = Some(k);
+            if u < acc {
+                return Some(k);
+            }
+        }
+    }
+    // Float drift: the row sums to 1 − ε and u landed in the gap.
+    last_pos
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::network::testnet::{diamond, line3};
+
+    fn plan_of(net: Network, phi: Strategy) -> SimPlan {
+        SimPlan {
+            epochs: vec![SimEpoch { net, phi }],
+        }
+    }
+
+    fn poisson() -> ArrivalSpec {
+        ArrivalSpec::parse("poisson").unwrap()
+    }
+
+    #[test]
+    fn local_compute_diamond_completes_everything() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let plan = plan_of(net, phi);
+        let cfg = SimConfig {
+            requests: 5_000,
+            warmup: 0.1,
+            seed: 3,
+        };
+        let t = simulate(&plan, &poisson(), &cfg).unwrap();
+        assert_eq!(t.arrived, 5_000);
+        assert_eq!(t.completed, 5_000);
+        assert_eq!(t.stranded, 0);
+        let (p50, p99, p999) = t.tail();
+        assert!(p50 > 0.0 && p50 <= p99 && p99 <= p999, "{p50} {p99} {p999}");
+        assert!(t.mean_sojourn() > 0.0);
+        assert!(t.end_time > 0.0);
+        // M/M/1 sanity: every Queue server must be stable.
+        for (e, &b) in t.link_busy.iter().enumerate() {
+            assert!(b / t.end_time < 1.0, "link {e} overloaded");
+        }
+    }
+
+    #[test]
+    fn line3_compute_at_dest_routes_over_links() {
+        let net = line3();
+        let phi = Strategy::compute_at_dest_init(&net);
+        let plan = plan_of(net, phi);
+        let cfg = SimConfig {
+            requests: 4_000,
+            warmup: 0.05,
+            seed: 7,
+        };
+        let t = simulate(&plan, &poisson(), &cfg).unwrap();
+        assert_eq!(t.completed + t.stranded, 4_000);
+        assert_eq!(t.stranded, 0);
+        // Forwarding to the destination must exercise at least one link.
+        assert!(t.link_busy.iter().any(|&b| b > 0.0));
+        assert!(t.link_peak.iter().any(|&p| p > 0));
+    }
+
+    #[test]
+    fn bit_identical_across_runs() {
+        let cfg = SimConfig {
+            requests: 2_000,
+            warmup: 0.05,
+            seed: 11,
+        };
+        let run = || {
+            let net = diamond(true);
+            let phi = Strategy::local_compute_init(&net);
+            simulate(&plan_of(net, phi), &poisson(), &cfg)
+                .unwrap()
+                .to_json()
+                .dump()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn warmup_fraction_excluded() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let cfg = SimConfig {
+            requests: 1_000,
+            warmup: 0.25,
+            seed: 5,
+        };
+        let t = simulate(&plan_of(net, phi), &poisson(), &cfg).unwrap();
+        assert_eq!(t.warmup_skipped, 250);
+        assert_eq!(t.sojourn.count(), 750);
+    }
+
+    #[test]
+    fn rejects_empty_plan_and_bad_warmup() {
+        let plan = SimPlan { epochs: vec![] };
+        assert!(simulate(&plan, &poisson(), &SimConfig::default()).is_err());
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let cfg = SimConfig {
+            requests: 10,
+            warmup: 1.0,
+            seed: 1,
+        };
+        assert!(simulate(&plan_of(net, phi), &poisson(), &cfg).is_err());
+    }
+}

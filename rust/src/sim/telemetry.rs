@@ -1,0 +1,205 @@
+//! Streaming telemetry for the request-level engine: tail latency without
+//! storing samples.
+//!
+//! A 10^6-request run must not keep 10^6 sojourn times around just to sort
+//! them at the end — the whole point of the layered engine is bounded
+//! memory. Sojourn times therefore stream into a
+//! [`QuantileSketch`](crate::util::stats::QuantileSketch) (log-bucketed,
+//! ≤ 1% relative error by default, memory independent of request count)
+//! plus a Welford mean; per-node/per-link utilization is accumulated as
+//! busy time and queue pressure as an in-system high-water mark. Everything
+//! here is a pure fold over the event stream, so two runs that process the
+//! same events produce bit-identical telemetry — the property the
+//! determinism regression in `rust/tests/sim_engine.rs` pins.
+
+use crate::util::json::Json;
+use crate::util::stats::{QuantileSketch, Welford};
+
+/// Hex-encoded IEEE-754 bits, mirroring `coordinator::exec::artifact`'s
+/// convention (`sim::` must not depend on `coordinator::`, so the one-line
+/// encoder is repeated rather than imported).
+fn bits_hex(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+/// Streaming counters and sketches for one simulation run.
+#[derive(Clone, Debug)]
+pub struct Telemetry {
+    /// Sojourn-time sketch over post-warm-up completions.
+    pub sojourn: QuantileSketch,
+    mean: Welford,
+    /// Requests injected by the arrival process.
+    pub arrived: u64,
+    /// Requests that reached their task's destination.
+    pub completed: u64,
+    /// Completions excluded from the sketch as warm-up.
+    pub warmup_skipped: u64,
+    /// Requests abandoned because the strategy offered no outgoing slot —
+    /// always 0 for a feasible, loop-free strategy (asserted in tests).
+    pub stranded: u64,
+    /// Busy time per compute node (CPU utilization = busy / end_time).
+    pub node_busy: Vec<f64>,
+    /// Busy time per directed link.
+    pub link_busy: Vec<f64>,
+    /// High-water mark of requests in system per compute node.
+    pub node_peak: Vec<u64>,
+    /// High-water mark of requests in system per link.
+    pub link_peak: Vec<u64>,
+    /// Simulation clock when the last event fired.
+    pub end_time: f64,
+    /// Total events processed by the calendar queue.
+    pub events: u64,
+    /// Peak concurrent in-flight requests (arena high-water mark).
+    pub max_in_flight: u64,
+}
+
+impl Telemetry {
+    pub fn new(nodes: usize, links: usize) -> Self {
+        Telemetry {
+            sojourn: QuantileSketch::with_default_error(),
+            mean: Welford::default(),
+            arrived: 0,
+            completed: 0,
+            warmup_skipped: 0,
+            stranded: 0,
+            node_busy: vec![0.0; nodes],
+            link_busy: vec![0.0; links],
+            node_peak: vec![0; nodes],
+            link_peak: vec![0; links],
+            end_time: 0.0,
+            events: 0,
+            max_in_flight: 0,
+        }
+    }
+
+    /// Record one completed request's sojourn time; warm-up completions
+    /// count but do not enter the sketch.
+    pub fn record_completion(&mut self, sojourn: f64, warmed_up: bool) {
+        self.completed += 1;
+        if warmed_up {
+            self.sojourn.record(sojourn);
+            self.mean.push(sojourn);
+        } else {
+            self.warmup_skipped += 1;
+        }
+    }
+
+    pub fn mean_sojourn(&self) -> f64 {
+        if self.mean.count() == 0 {
+            f64::NAN
+        } else {
+            self.mean.mean()
+        }
+    }
+
+    /// The three headline tail quantiles (p50, p99, p999).
+    pub fn tail(&self) -> (f64, f64, f64) {
+        (
+            self.sojourn.quantile(0.50),
+            self.sojourn.quantile(0.99),
+            self.sojourn.quantile(0.999),
+        )
+    }
+
+    /// Utilization vectors busy/elapsed (empty horizon ⇒ zeros).
+    fn utilization(busy: &[f64], elapsed: f64) -> Json {
+        let xs: Vec<f64> = busy
+            .iter()
+            .map(|&b| if elapsed > 0.0 { b / elapsed } else { 0.0 })
+            .collect();
+        Json::from_f64_slice(&xs)
+    }
+
+    /// Full JSON report. Quantiles carry both a human-readable number and
+    /// authoritative `_bits` hex so determinism checks compare exact bits.
+    pub fn to_json(&self) -> Json {
+        let (p50, p99, p999) = self.tail();
+        let mean = self.mean_sojourn();
+        let mut soj = Json::obj();
+        soj.set("count", Json::Num(self.sojourn.count() as f64))
+            .set("error_bound", Json::Num(self.sojourn.relative_error_bound()))
+            .set("p50", Json::Num(p50))
+            .set("p50_bits", Json::Str(bits_hex(p50)))
+            .set("p99", Json::Num(p99))
+            .set("p99_bits", Json::Str(bits_hex(p99)))
+            .set("p999", Json::Num(p999))
+            .set("p999_bits", Json::Str(bits_hex(p999)))
+            .set("mean", Json::Num(mean))
+            .set("mean_bits", Json::Str(bits_hex(mean)))
+            .set("max", Json::Num(self.sojourn.max()));
+        let mut j = Json::obj();
+        j.set("arrived", Json::Num(self.arrived as f64))
+            .set("completed", Json::Num(self.completed as f64))
+            .set("warmup_skipped", Json::Num(self.warmup_skipped as f64))
+            .set("stranded", Json::Num(self.stranded as f64))
+            .set("events", Json::Num(self.events as f64))
+            .set("end_time", Json::Num(self.end_time))
+            .set("end_time_bits", Json::Str(bits_hex(self.end_time)))
+            .set("max_in_flight", Json::Num(self.max_in_flight as f64))
+            .set("sojourn", soj)
+            .set(
+                "node_utilization",
+                Self::utilization(&self.node_busy, self.end_time),
+            )
+            .set(
+                "link_utilization",
+                Self::utilization(&self.link_busy, self.end_time),
+            )
+            .set(
+                "node_queue_peak",
+                Json::Arr(self.node_peak.iter().map(|&p| Json::Num(p as f64)).collect()),
+            )
+            .set(
+                "link_queue_peak",
+                Json::Arr(self.link_peak.iter().map(|&p| Json::Num(p as f64)).collect()),
+            );
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_completions_do_not_enter_sketch() {
+        let mut t = Telemetry::new(2, 3);
+        t.record_completion(9.0, false);
+        t.record_completion(1.0, true);
+        t.record_completion(2.0, true);
+        assert_eq!(t.completed, 3);
+        assert_eq!(t.warmup_skipped, 1);
+        assert_eq!(t.sojourn.count(), 2);
+        assert!((t.mean_sojourn() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_are_ordered() {
+        let mut t = Telemetry::new(1, 1);
+        for i in 1..=1000 {
+            t.record_completion(f64::from(i) * 0.01, true);
+        }
+        let (p50, p99, p999) = t.tail();
+        assert!(p50 <= p99 && p99 <= p999, "{p50} {p99} {p999}");
+    }
+
+    #[test]
+    fn json_roundtrips_and_carries_bits() {
+        let mut t = Telemetry::new(1, 2);
+        t.arrived = 5;
+        t.record_completion(0.5, true);
+        t.end_time = 2.0;
+        t.node_busy[0] = 1.0;
+        let j = t.to_json();
+        let back = Json::parse(&j.dump()).unwrap();
+        assert_eq!(back.path("sojourn.count").as_usize(), Some(1));
+        assert_eq!(
+            back.path("node_utilization").as_arr().unwrap()[0].as_num(),
+            Some(0.5)
+        );
+        assert_eq!(
+            back.path("sojourn.p50_bits").as_str().unwrap().len(),
+            16
+        );
+    }
+}

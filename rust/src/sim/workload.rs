@@ -1,0 +1,386 @@
+//! Request arrival processes for the request-level engine.
+//!
+//! The optimizer sees demand as *rates* (`Network::input_rate`); the
+//! simulator needs individual requests. This module turns the per-epoch
+//! rate matrices — the same epochs the PR 4
+//! [`PatternSchedule`](crate::coordinator::dynamics::PatternSchedule)
+//! mutates and the optimizer re-converges on — into a single merged
+//! arrival stream via thinning: candidates fire as a Poisson process at
+//! the peak rate `λ_max` and are accepted with probability `λ(t)/λ_max`,
+//! where `λ(t)` composes the epoch's total input rate with the arrival
+//! kind's intra-epoch modulation:
+//!
+//! * **Poisson** — constant factor 1 (time-homogeneous within an epoch);
+//! * **MMPP** — a two-state Markov-modulated factor alternating between
+//!   `2b/(1+b)` (bursty) and `2/(1+b)` (quiet) with exponential holding
+//!   times, normalized so the long-run mean factor is 1 and the
+//!   burst-to-quiet ratio is exactly `b`;
+//! * **Diurnal** — `1 + depth·sin(2πt/horizon)`: one smooth "day" over
+//!   the run, mean 1.
+//!
+//! Accepted arrivals are attributed to a `(task, source)` pair by a draw
+//! proportional to that epoch's individual input rates, so the simulated
+//! demand matches the flow model the strategy was optimized for. All
+//! randomness derives from a single seed through forked
+//! [`Pcg`](crate::util::rng::Pcg) streams — the stream is a pure function
+//! of `(spec, epoch rates, requests, seed)`.
+
+use anyhow::{bail, Result};
+
+use crate::model::network::Network;
+use crate::util::rng::Pcg;
+
+/// Arrival-process family plus its parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalKind {
+    /// Homogeneous Poisson within each epoch.
+    Poisson,
+    /// Markov-modulated Poisson: `burst` ≥ 1 is the high/low rate ratio,
+    /// `switch` > 0 the state-switch rate (expected switches per unit
+    /// simulated time).
+    Mmpp { burst: f64, switch: f64 },
+    /// Sinusoidal day curve with relative amplitude `depth` ∈ [0, 1].
+    Diurnal { depth: f64 },
+}
+
+/// Parsed arrival specification (CLI `--arrivals`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ArrivalSpec {
+    pub kind: ArrivalKind,
+}
+
+impl Default for ArrivalSpec {
+    /// Plain Poisson — the memoryless baseline every queueing formula in
+    /// the paper's cost model assumes.
+    fn default() -> Self {
+        ArrivalSpec {
+            kind: ArrivalKind::Poisson,
+        }
+    }
+}
+
+impl ArrivalSpec {
+    /// Parse `poisson` | `mmpp[:burst[:switch]]` | `diurnal[:depth]`.
+    pub fn parse(label: &str) -> Result<ArrivalSpec> {
+        let mut parts = label.split(':');
+        let head = parts.next().unwrap_or("").to_ascii_lowercase();
+        let arg = |p: Option<&str>, default: f64| -> Result<f64> {
+            match p {
+                None => Ok(default),
+                Some(s) => s
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("bad arrival parameter {s:?} in {label:?}")),
+            }
+        };
+        let kind = match head.as_str() {
+            "poisson" => ArrivalKind::Poisson,
+            "mmpp" => {
+                let burst = arg(parts.next(), 4.0)?;
+                let switch = arg(parts.next(), 1.0)?;
+                if burst.is_nan() || burst < 1.0 || burst.is_infinite() {
+                    bail!("mmpp burst ratio must be finite and ≥ 1, got {burst}");
+                }
+                if switch.is_nan() || switch <= 0.0 || switch.is_infinite() {
+                    bail!("mmpp switch rate must be finite and > 0, got {switch}");
+                }
+                ArrivalKind::Mmpp { burst, switch }
+            }
+            "diurnal" => {
+                let depth = arg(parts.next(), 0.8)?;
+                if !(0.0..=1.0).contains(&depth) {
+                    bail!("diurnal depth must be in [0,1], got {depth}");
+                }
+                ArrivalKind::Diurnal { depth }
+            }
+            _ => bail!("unknown arrival kind {label:?} (poisson|mmpp|diurnal)"),
+        };
+        if parts.next().is_some() {
+            bail!("too many parameters in arrival spec {label:?}");
+        }
+        Ok(ArrivalSpec { kind })
+    }
+
+    /// Canonical label; `parse(label())` round-trips.
+    pub fn label(&self) -> String {
+        match self.kind {
+            ArrivalKind::Poisson => "poisson".to_string(),
+            ArrivalKind::Mmpp { burst, switch } => format!("mmpp:{burst}:{switch}"),
+            ArrivalKind::Diurnal { depth } => format!("diurnal:{depth}"),
+        }
+    }
+
+    /// Maximum modulation factor (for the thinning envelope).
+    fn peak_factor(&self) -> f64 {
+        match self.kind {
+            ArrivalKind::Poisson => 1.0,
+            ArrivalKind::Mmpp { burst, .. } => 2.0 * burst / (1.0 + burst),
+            ArrivalKind::Diurnal { depth } => 1.0 + depth,
+        }
+    }
+}
+
+/// One epoch's demand: total rate plus the cumulative per-(task, source)
+/// rate table used to attribute accepted arrivals.
+#[derive(Clone, Debug)]
+pub struct EpochRates {
+    pub total: f64,
+    /// `(task, source, cumulative rate)`, ascending.
+    cum: Vec<(u32, u32, f64)>,
+}
+
+impl EpochRates {
+    /// Extract the positive input-rate entries of `net`.
+    pub fn of(net: &Network) -> EpochRates {
+        let mut cum = Vec::new();
+        let mut acc = 0.0;
+        for s in 0..net.s() {
+            for i in 0..net.n() {
+                let r = net.input_rate[s][i];
+                if r > 0.0 {
+                    acc += r;
+                    cum.push((s as u32, i as u32, acc));
+                }
+            }
+        }
+        EpochRates { total: acc, cum }
+    }
+
+    /// Attribute a uniform draw `u ∈ [0, total)` to a `(task, source)`.
+    fn pick(&self, u: f64) -> (usize, usize) {
+        let k = self.cum.partition_point(|&(_, _, c)| c <= u);
+        let (s, i, _) = self.cum[k.min(self.cum.len() - 1)];
+        (s as usize, i as usize)
+    }
+}
+
+/// One generated request arrival.
+#[derive(Clone, Copy, Debug)]
+pub struct Arrival {
+    pub time: f64,
+    pub task: usize,
+    pub source: usize,
+}
+
+/// Deterministic merged arrival stream over all `(task, source)` pairs.
+pub struct ArrivalStream {
+    spec: ArrivalSpec,
+    epochs: Vec<EpochRates>,
+    /// Expected-count horizon; epoch boundaries split it evenly.
+    horizon: f64,
+    epoch_len: f64,
+    lambda_max: f64,
+    remaining: u64,
+    clock: f64,
+    rng: Pcg,
+    /// Dedicated stream for MMPP state switches, so modulation and
+    /// thinning draws never interleave.
+    rng_switch: Pcg,
+    /// MMPP state: true = bursty phase.
+    mmpp_high: bool,
+    mmpp_next_switch: f64,
+}
+
+impl ArrivalStream {
+    /// Stream generating exactly `requests` arrivals whose expected span
+    /// is `horizon = requests / mean epoch rate`.
+    pub fn new(
+        spec: &ArrivalSpec,
+        epochs: Vec<EpochRates>,
+        requests: u64,
+        seed: u64,
+    ) -> Result<ArrivalStream> {
+        if epochs.is_empty() {
+            bail!("arrival stream needs at least one epoch");
+        }
+        if requests == 0 {
+            bail!("arrival stream needs requests > 0");
+        }
+        let mean: f64 = epochs.iter().map(|e| e.total).sum::<f64>() / epochs.len() as f64;
+        if mean <= 0.0 || mean.is_nan() {
+            bail!("scenario has zero total input rate; nothing to simulate");
+        }
+        let peak = epochs.iter().fold(0.0f64, |m, e| m.max(e.total));
+        let mut root = Pcg::with_stream(seed, 0x5e9_a11a);
+        let rng = root.fork(1);
+        let mut rng_switch = root.fork(2);
+        let horizon = requests as f64 / mean;
+        let first_switch = match spec.kind {
+            ArrivalKind::Mmpp { switch, .. } => rng_switch.exponential(1.0 / switch),
+            _ => f64::INFINITY,
+        };
+        Ok(ArrivalStream {
+            spec: *spec,
+            epoch_len: horizon / epochs.len() as f64,
+            horizon,
+            lambda_max: peak * spec.peak_factor(),
+            epochs,
+            remaining: requests,
+            clock: 0.0,
+            rng,
+            rng_switch,
+            mmpp_high: true,
+            mmpp_next_switch: first_switch,
+        })
+    }
+
+    pub fn horizon(&self) -> f64 {
+        self.horizon
+    }
+
+    /// Epoch index at time `t` (clamped to the last epoch past the
+    /// horizon, so overruns keep the final pattern).
+    pub fn epoch_of(&self, t: f64) -> usize {
+        ((t / self.epoch_len) as usize).min(self.epochs.len() - 1)
+    }
+
+    /// Instantaneous modulation factor of the arrival kind at time `t`,
+    /// advancing the MMPP state chain up to `t` when applicable.
+    fn factor_at(&mut self, t: f64) -> f64 {
+        match self.spec.kind {
+            ArrivalKind::Poisson => 1.0,
+            ArrivalKind::Mmpp { burst, switch } => {
+                while t >= self.mmpp_next_switch {
+                    self.mmpp_high = !self.mmpp_high;
+                    self.mmpp_next_switch += self.rng_switch.exponential(1.0 / switch);
+                }
+                if self.mmpp_high {
+                    2.0 * burst / (1.0 + burst)
+                } else {
+                    2.0 / (1.0 + burst)
+                }
+            }
+            ArrivalKind::Diurnal { depth } => {
+                1.0 + depth * (2.0 * std::f64::consts::PI * t / self.horizon).sin()
+            }
+        }
+    }
+
+    /// Next arrival, or `None` once `requests` have been generated.
+    pub fn next(&mut self) -> Option<Arrival> {
+        if self.remaining == 0 {
+            return None;
+        }
+        loop {
+            self.clock += self.rng.exponential(1.0 / self.lambda_max);
+            let t = self.clock;
+            let e = self.epoch_of(t);
+            let lambda = self.epochs[e].total * self.factor_at(t);
+            debug_assert!(lambda <= self.lambda_max * (1.0 + 1e-12));
+            if self.rng.f64() * self.lambda_max < lambda {
+                let u = self.rng.f64() * self.epochs[e].total;
+                let (task, source) = self.epochs[e].pick(u);
+                self.remaining -= 1;
+                return Some(Arrival {
+                    time: t,
+                    task,
+                    source,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::network::testnet::diamond;
+
+    fn stream(spec: &str, requests: u64, seed: u64) -> ArrivalStream {
+        let net = diamond(true);
+        let spec = ArrivalSpec::parse(spec).unwrap();
+        ArrivalStream::new(&spec, vec![EpochRates::of(&net)], requests, seed).unwrap()
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        for label in ["poisson", "mmpp:4:1", "mmpp:2.5:0.25", "diurnal:0.8"] {
+            let spec = ArrivalSpec::parse(label).unwrap();
+            assert_eq!(ArrivalSpec::parse(&spec.label()).unwrap(), spec);
+        }
+        assert!(ArrivalSpec::parse("weibull").is_err());
+        assert!(ArrivalSpec::parse("mmpp:0.5").is_err());
+        assert!(ArrivalSpec::parse("diurnal:2").is_err());
+        assert!(ArrivalSpec::parse("poisson:1:2:3").is_err());
+    }
+
+    #[test]
+    fn generates_exactly_n_increasing_arrivals() {
+        let mut st = stream("poisson", 500, 42);
+        let mut last = 0.0;
+        let mut n = 0;
+        while let Some(a) = st.next() {
+            assert!(a.time >= last);
+            last = a.time;
+            n += 1;
+        }
+        assert_eq!(n, 500);
+        assert!(st.next().is_none());
+    }
+
+    #[test]
+    fn poisson_span_matches_rate() {
+        let net = diamond(true);
+        let rates = EpochRates::of(&net);
+        let total = rates.total;
+        let n = 20_000u64;
+        let mut st =
+            ArrivalStream::new(&ArrivalSpec::parse("poisson").unwrap(), vec![rates], n, 7)
+                .unwrap();
+        let mut last = 0.0;
+        while let Some(a) = st.next() {
+            last = a.time;
+        }
+        let expected = n as f64 / total;
+        assert!(
+            (last - expected).abs() / expected < 0.05,
+            "span {last} vs expected {expected}"
+        );
+    }
+
+    #[test]
+    fn mmpp_preserves_mean_rate() {
+        let mut st = stream("mmpp:4:5", 20_000, 11);
+        let mut last = 0.0;
+        while let Some(a) = st.next() {
+            last = a.time;
+        }
+        // Mean factor is 1, so the span still matches requests / rate.
+        let expected = st.horizon();
+        assert!(
+            (last - expected).abs() / expected < 0.10,
+            "span {last} vs horizon {expected}"
+        );
+    }
+
+    #[test]
+    fn attribution_tracks_input_rates() {
+        let net = diamond(true);
+        let mut counts = vec![vec![0u64; net.n()]; net.s()];
+        let mut st = stream("poisson", 50_000, 3);
+        while let Some(a) = st.next() {
+            counts[a.task][a.source] += 1;
+        }
+        let total_rate: f64 = net.input_rate.iter().flatten().sum();
+        for s in 0..net.s() {
+            for i in 0..net.n() {
+                let expect = 50_000.0 * net.input_rate[s][i] / total_rate;
+                let got = counts[s][i] as f64;
+                assert!(
+                    (got - expect).abs() <= 5.0 * expect.sqrt().max(3.0),
+                    "task {s} node {i}: {got} vs {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn identical_seeds_identical_streams() {
+        let mut a = stream("diurnal:0.5", 1000, 9);
+        let mut b = stream("diurnal:0.5", 1000, 9);
+        while let Some(x) = a.next() {
+            let y = b.next().unwrap();
+            assert_eq!(x.time.to_bits(), y.time.to_bits());
+            assert_eq!((x.task, x.source), (y.task, y.source));
+        }
+    }
+}

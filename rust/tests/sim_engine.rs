@@ -1,0 +1,228 @@
+//! PR 6 pins for the layered discrete-event engine:
+//!
+//! * calendar-queue ordering parity against the legacy binary-heap queue
+//!   under adversarial random schedules (ties, zero delays, far-future
+//!   jumps, interleaved scheduling and popping);
+//! * the streaming quantile sketch against exact nearest-rank quantiles,
+//!   within its documented relative-error bound;
+//! * end-to-end determinism: identical `(scenario, seed, arrival spec)`
+//!   inputs produce bit-identical telemetry JSON across repeated runs,
+//!   and sweep tail-latency columns are identical across worker counts;
+//! * a converged strategy strands no requests (every routing row the
+//!   walker visits sums to 1).
+
+use cecflow::coordinator::{
+    build_scenario_network, run_algorithm, run_sweep, Algorithm, RunConfig, SimSweepConfig,
+    SweepSpec,
+};
+use cecflow::sim::{core, event, simulate, ArrivalSpec, SimConfig, SimEpoch, SimPlan};
+use cecflow::util::rng::Pcg;
+use cecflow::util::stats::{percentile_sorted, QuantileSketch};
+
+// ---- calendar queue vs legacy heap ------------------------------------
+
+/// Drive both queue implementations through the same random op sequence
+/// and require bit-identical `(time, seq, payload)` pop streams. The
+/// schedule deliberately mixes the regimes the calendar queue handles
+/// specially: exact ties (FIFO tie-break), zero delays, dense clusters,
+/// and sparse far-future jumps that force the bucket-walk fallback.
+#[test]
+fn calendar_queue_matches_heap_queue_on_random_schedules() {
+    for seed in 0..20u64 {
+        let mut rng = Pcg::with_stream(seed, 0xca1e_17da);
+        let mut heap = event::EventQueue::new();
+        let mut cal = core::EventQueue::new();
+        let mut next_id = 0u32;
+        let mut last_delay = 0.0f64;
+        for _ in 0..400 {
+            if rng.chance(0.6) || heap.is_empty() {
+                // both queues share `now` (pops are mirrored), so the same
+                // relative delay lands both events at the same absolute time
+                let delay = match rng.below(5) {
+                    0 => 0.0,                          // simultaneous with now
+                    1 => last_delay,                   // deliberate tie shape
+                    2 => rng.uniform(0.0, 1.0),        // dense cluster
+                    3 => rng.uniform(0.0, 50.0),       // moderate spread
+                    _ => rng.uniform(1.0e4, 1.0e6),    // far-future jump
+                };
+                last_delay = delay;
+                // duplicate payloads under one timestamp: only the seq
+                // tie-break can order them
+                let copies = 1 + rng.below(3);
+                for _ in 0..copies {
+                    heap.schedule(delay, next_id);
+                    cal.schedule(delay, next_id);
+                    next_id += 1;
+                }
+            } else {
+                let a = heap.pop().expect("heap non-empty");
+                let b = cal.pop().expect("parity: calendar must match heap len");
+                assert_eq!(a.time.to_bits(), b.time.to_bits(), "seed {seed}");
+                assert_eq!(a.seq, b.seq, "seed {seed}");
+                assert_eq!(a.payload, b.payload, "seed {seed}");
+                assert_eq!(heap.now().to_bits(), cal.now().to_bits());
+            }
+            assert_eq!(heap.len(), cal.len());
+        }
+        // drain: the full residual order must agree too
+        while let Some(a) = heap.pop() {
+            let b = cal.pop().expect("calendar drained early");
+            assert_eq!(a.time.to_bits(), b.time.to_bits(), "seed {seed}");
+            assert_eq!(a.seq, b.seq, "seed {seed}");
+            assert_eq!(a.payload, b.payload, "seed {seed}");
+        }
+        assert!(cal.pop().is_none(), "calendar queue held extra events");
+    }
+}
+
+/// Simultaneous events pop in scheduling order from both queues — the
+/// FIFO guarantee `sim::protocol` relies on for reproducible broadcasts.
+#[test]
+fn simultaneous_events_pop_in_scheduling_order() {
+    let mut heap = event::EventQueue::new();
+    let mut cal = core::EventQueue::new();
+    for id in 0..100u32 {
+        heap.schedule(2.5, id);
+        cal.schedule(2.5, id);
+    }
+    for id in 0..100u32 {
+        assert_eq!(heap.pop().unwrap().payload, id);
+        assert_eq!(cal.pop().unwrap().payload, id);
+    }
+}
+
+// ---- sketch vs exact quantiles ----------------------------------------
+
+/// Random heavy-tailed samples: every queried quantile of the sketch must
+/// sit within its documented relative-error bound of the exact
+/// nearest-rank quantile.
+#[test]
+fn sketch_matches_exact_quantiles_on_random_heavy_tails() {
+    for seed in 0..10u64 {
+        let mut rng = Pcg::with_stream(seed, 0x5_e7c4);
+        let mut sketch = QuantileSketch::with_default_error();
+        let mut exact = Vec::with_capacity(20_000);
+        for _ in 0..20_000 {
+            // mix of exponential bulk and a polynomial tail
+            let x = if rng.chance(0.9) {
+                rng.exponential(1.0)
+            } else {
+                1.0 / (1.0 - rng.f64()).powi(2)
+            };
+            sketch.record(x);
+            exact.push(x);
+        }
+        exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let bound = sketch.relative_error_bound();
+        for q in [0.01, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let approx = sketch.quantile(q);
+            let truth = percentile_sorted(&exact, q);
+            let rel = (approx - truth).abs() / truth.abs().max(1e-300);
+            assert!(
+                rel <= bound + 1e-12,
+                "seed {seed} q={q}: sketch {approx} vs exact {truth} (rel {rel:.3e} > {bound})"
+            );
+        }
+    }
+}
+
+// ---- end-to-end determinism -------------------------------------------
+
+fn table2_plan(scenario: &str, seed: u64) -> SimPlan {
+    let net = build_scenario_network(scenario, seed, 1.0).unwrap();
+    let out = run_algorithm(&net, Algorithm::Sgp, &RunConfig::quick()).unwrap();
+    SimPlan {
+        epochs: vec![SimEpoch {
+            net,
+            phi: out.phi.expect("sgp yields a strategy"),
+        }],
+    }
+}
+
+/// Identical `(scenario, seed, arrival spec)` → bit-identical telemetry
+/// JSON, for every arrival family. The dump includes the `_bits` hex
+/// fields, so equality here is bit equality of every quantile, counter
+/// and utilization figure.
+#[test]
+fn repeated_simulations_are_bit_identical() {
+    let plan = table2_plan("abilene", 7);
+    for arrivals in ["poisson", "mmpp:3:2", "diurnal:0.5"] {
+        let spec = ArrivalSpec::parse(arrivals).unwrap();
+        let cfg = SimConfig {
+            requests: 20_000,
+            warmup: 0.1,
+            seed: 7,
+        };
+        let a = simulate(&plan, &spec, &cfg).unwrap();
+        let b = simulate(&plan, &spec, &cfg).unwrap();
+        assert_eq!(
+            a.to_json().pretty(),
+            b.to_json().pretty(),
+            "{arrivals}: telemetry drifted between identical runs"
+        );
+        // and a different seed actually changes the stream (the contract
+        // is determinism, not a constant)
+        let c = simulate(
+            &plan,
+            &spec,
+            &SimConfig {
+                seed: 8,
+                ..cfg
+            },
+        )
+        .unwrap();
+        assert_ne!(a.to_json().pretty(), c.to_json().pretty(), "{arrivals}");
+    }
+}
+
+/// The sweep's simulated tail columns obey the same determinism contract
+/// as its analytic columns: fingerprints are identical across worker
+/// counts.
+#[test]
+fn sweep_tail_columns_identical_across_worker_counts() {
+    let spec = SweepSpec {
+        scenarios: vec!["abilene".into()],
+        seeds: vec![1, 2],
+        algorithms: vec![Algorithm::Sgp],
+        sim: Some(SimSweepConfig {
+            requests: 5_000,
+            ..SimSweepConfig::default()
+        }),
+        ..SweepSpec::default()
+    };
+    let serial = run_sweep(&spec, 1).unwrap();
+    let parallel = run_sweep(&spec, 4).unwrap();
+    assert_eq!(serial.fingerprint(), parallel.fingerprint());
+    // the digest really is in the fingerprint: perturbing it must show
+    let mut tampered = serial.clone();
+    tampered.cells[0].sim.as_mut().unwrap().p99 += 1.0;
+    assert_ne!(tampered.fingerprint(), serial.fingerprint());
+}
+
+/// A converged strategy routes every request to completion: flow
+/// conservation (Eq. 2) means every routing row the walker can reach
+/// sums to one, so no request is ever stranded.
+#[test]
+fn converged_strategies_strand_no_requests() {
+    for scenario in ["abilene", "connected-er"] {
+        let plan = table2_plan(scenario, 3);
+        let telemetry = simulate(
+            &plan,
+            &ArrivalSpec::default(),
+            &SimConfig {
+                requests: 10_000,
+                warmup: 0.05,
+                seed: 3,
+            },
+        )
+        .unwrap();
+        assert_eq!(telemetry.arrived, 10_000, "{scenario}");
+        assert_eq!(telemetry.stranded, 0, "{scenario}");
+        assert_eq!(telemetry.completed, 10_000, "{scenario}");
+        let (p50, p99, p999) = telemetry.tail();
+        assert!(
+            p50 > 0.0 && p50 <= p99 && p99 <= p999 && p999.is_finite(),
+            "{scenario}: quantiles disordered ({p50}, {p99}, {p999})"
+        );
+    }
+}

@@ -16,6 +16,7 @@ fn small_spec() -> SweepSpec {
         schedules: vec![PatternSchedule::static_()],
         rate_scale: 1.0,
         run: RunConfig::quick(),
+        sim: None,
     }
 }
 

@@ -45,6 +45,7 @@ fn spec() -> SweepSpec {
         schedules: vec![PatternSchedule::static_()],
         rate_scale: 1.0,
         run: RunConfig::quick(),
+        sim: None,
     }
 }
 
@@ -108,6 +109,7 @@ fn native_routed_sweep_cell_is_bitwise_the_direct_dense_run() {
         schedules: vec![PatternSchedule::static_()],
         rate_scale: 1.0,
         run: RunConfig::quick(),
+        sim: None,
     };
     let report = run_sweep(&spec, 1).expect("sweep");
     assert_eq!(report.cells.len(), 1);
@@ -269,6 +271,7 @@ fn failing_cell_in_a_shard_names_the_cell_after_retries_exhaust() {
         schedules: vec![PatternSchedule::static_()],
         rate_scale: 1.0,
         run: RunConfig::quick(),
+        sim: None,
     };
     let err = run_sweep_sharded(
         &spec,
@@ -311,6 +314,7 @@ fn spec_args_roundtrip_through_the_parsers() {
             tol: 3e-6,
             patience: 4,
         },
+        sim: None,
     };
     let args = spec_to_args(&spec);
     let get = |flag: &str| -> &str {
@@ -345,6 +349,7 @@ fn shards_of_different_schedule_grids_refuse_to_merge() {
         schedules: vec![PatternSchedule::parse("step:2:1.5").unwrap()],
         rate_scale: 1.0,
         run: RunConfig::quick(),
+        sim: None,
     };
     let mut other = base.clone();
     other.schedules = vec![PatternSchedule::parse("step:2:2").unwrap()];
