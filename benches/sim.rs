@@ -82,6 +82,7 @@ fn main() -> anyhow::Result<()> {
             requests,
             warmup: 0.05,
             seed: 1,
+            ..SimConfig::default()
         };
         let start = Instant::now();
         let t = simulate(&plan, &ArrivalSpec::default(), &cfg)?;

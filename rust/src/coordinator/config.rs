@@ -190,6 +190,21 @@ pub fn parse_seeds(s: &str) -> Result<Vec<u64>> {
         .collect()
 }
 
+/// Parse a strictly-positive finite flag value — shared by
+/// `simulate --validate`, `simulate --reoptimize-every` and
+/// `sweep --sim-validate`, which all reject zero/negative/non-finite
+/// tolerances and intervals.
+pub fn parse_positive_f64(flag: &str, raw: &str) -> Result<f64> {
+    let x: f64 = raw
+        .parse()
+        .with_context(|| format!("{flag} expects a number, got '{raw}'"))?;
+    anyhow::ensure!(
+        x.is_finite() && x > 0.0,
+        "{flag} must be finite and positive, got {raw}"
+    );
+    Ok(x)
+}
+
 /// Parse a comma-separated algorithm list (`"sgp,gp,lpr"`).
 pub fn parse_algorithms(s: &str) -> Result<Vec<Algorithm>> {
     s.split(',')

@@ -454,10 +454,6 @@ impl DynamicTrace {
     }
 }
 
-/// Drives one scenario through a [`PatternSchedule`], re-optimizing every
-/// epoch from either the previous epoch's strategy (warm) or the
-/// all-local point (cold).
-#[derive(Clone, Copy, Debug)]
 /// One epoch's full output of the shared adaptive loop: the mutated
 /// network, the optimizer result (with its converged strategy), and the
 /// warm-start bookkeeping the [`EpochTrace`] reports.
@@ -468,6 +464,10 @@ struct EpochRun {
     warm_fallback: bool,
 }
 
+/// Drives one scenario through a [`PatternSchedule`], re-optimizing every
+/// epoch from either the previous epoch's strategy (warm) or the
+/// all-local point (cold).
+#[derive(Clone, Copy, Debug)]
 pub struct AdaptiveRunner {
     /// Iterative algorithm to re-run each epoch: SGP (any backend) or GP
     /// (sparse). See [`Algorithm::supports_dynamic`].

@@ -28,8 +28,8 @@ pub use dynamics::{
 pub use runner::{optimize, optimize_accelerated, RunConfig, RunResult};
 pub use scenario::{connected_er_servers, CostKind, Scenario, ScenarioSpec};
 pub use sweep::{
-    run_sweep, run_sweep_shard, run_sweep_sharded, CellResult, CellSim, GroupSummary,
-    ShardOptions, SimSweepConfig, SweepCell, SweepReport, SweepSpec,
+    run_sweep, run_sweep_shard, run_sweep_sharded, CellDivergence, CellResult, CellSim,
+    GroupSummary, ShardOptions, SimSweepConfig, SweepCell, SweepReport, SweepSpec,
 };
 
 /// Unified outcome across iterative algorithms and the one-shot LPR.

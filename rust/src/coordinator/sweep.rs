@@ -68,6 +68,12 @@ pub struct SimSweepConfig {
     pub arrivals: ArrivalSpec,
     /// Warm-up fraction excluded from the sojourn sketch, in `[0, 1)`.
     pub warmup: f64,
+    /// Closed-loop validation tolerance (`--sim-validate`): when set, each
+    /// simulated cell is compared against its analytic steady state
+    /// ([`crate::sim::validate`]) and the headline divergence metrics ride
+    /// along in [`CellSim::divergence`]. An alarmed cell is a *measured
+    /// result*, not a sweep failure.
+    pub validate: Option<f64>,
 }
 
 impl Default for SimSweepConfig {
@@ -76,6 +82,7 @@ impl Default for SimSweepConfig {
             requests: 20_000,
             arrivals: ArrivalSpec::default(),
             warmup: 0.05,
+            validate: None,
         }
     }
 }
@@ -90,6 +97,24 @@ pub struct CellSim {
     pub p99: f64,
     pub p999: f64,
     pub mean: f64,
+    /// Closed-loop divergence digest when the spec enabled
+    /// `--sim-validate`; `None` otherwise.
+    pub divergence: Option<CellDivergence>,
+}
+
+/// Headline numbers of one cell's closed-loop validation
+/// ([`crate::sim::validate`]): aggregate and worst per-server relative
+/// error, plus whether the hard alarm fired. Carried bit-exactly through
+/// the shard protocol and report artifacts, and part of the fingerprint.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CellDivergence {
+    /// `rel_diff` of analytic `T/λ` vs simulated mean sojourn.
+    pub mean_rel_err: f64,
+    /// Worst per-server occupancy error among loaded servers.
+    pub max_server_rel_err: f64,
+    /// The validator's alarm verdict (saturation, overload drops, empty
+    /// telemetry, or tolerance breach).
+    pub alarm: bool,
 }
 
 /// A sweep specification: the cell grid is the cross product
@@ -269,14 +294,30 @@ fn run_cell(index: usize, cell: &SweepCell, spec: &SweepSpec) -> Result<CellResu
                     requests: cfg.requests,
                     warmup: cfg.warmup,
                     seed: cell.seed,
+                    ..SimConfig::default()
                 },
             )?;
+            let divergence = match cfg.validate {
+                Some(tol) => {
+                    // an alarmed cell is a measured outcome of the grid,
+                    // recorded in the artifact rather than failing the sweep
+                    let ep = &plan.epochs[0];
+                    let report = sim::validate(&ep.net, &ep.phi, &telemetry, tol)?;
+                    Some(CellDivergence {
+                        mean_rel_err: report.mean_rel_error,
+                        max_server_rel_err: report.max_server_rel_error,
+                        alarm: report.alarm,
+                    })
+                }
+                None => None,
+            };
             let (p50, p99, p999) = telemetry.tail();
             Some(CellSim {
                 p50,
                 p99,
                 p999,
                 mean: telemetry.mean_sojourn(),
+                divergence,
             })
         }
         None => None,
@@ -353,6 +394,14 @@ fn grid_hash_of(grid: &Grid<SweepCell>, spec: &SweepSpec) -> u64 {
                 h.eat(sim.arrivals.label().as_bytes());
                 h.eat(&[0]);
                 h.eat(&sim.warmup.to_bits().to_le_bytes());
+                // validated and unvalidated cells carry different digests
+                match sim.validate {
+                    None => h.eat(&[0]),
+                    Some(tol) => {
+                        h.eat(&[1]);
+                        h.eat(&tol.to_bits().to_le_bytes());
+                    }
+                }
             }
         }
     })
@@ -384,6 +433,12 @@ fn validate_spec(spec: &SweepSpec) -> Result<()> {
             "simulation warm-up fraction must be in [0, 1), got {}",
             sim.warmup
         );
+        if let Some(tol) = sim.validate {
+            anyhow::ensure!(
+                tol.is_finite() && tol > 0.0,
+                "--sim-validate tolerance must be finite and positive, got {tol}"
+            );
+        }
         for algo in &spec.algorithms {
             anyhow::ensure!(
                 algo.supports_simulation(),
@@ -552,6 +607,10 @@ pub fn spec_to_args(spec: &SweepSpec) -> Vec<String> {
         args.push(sim.arrivals.label());
         args.push("--sim-warmup".to_string());
         args.push(sim.warmup.to_string());
+        if let Some(tol) = sim.validate {
+            args.push("--sim-validate".to_string());
+            args.push(tol.to_string());
+        }
     }
     args
 }
@@ -707,6 +766,15 @@ mod tests {
         let mut bursty = simmed.clone();
         bursty.sim.as_mut().unwrap().arrivals = ArrivalSpec::parse("mmpp:4:1").unwrap();
         assert_ne!(h_sim, spec_grid_hash(&bursty));
+        // the closed-loop validation axis: validated vs not, and different
+        // tolerances, must hash apart too
+        let mut validated = simmed.clone();
+        validated.sim.as_mut().unwrap().validate = Some(0.25);
+        let h_val = spec_grid_hash(&validated);
+        assert_ne!(h_sim, h_val);
+        let mut tighter = validated.clone();
+        tighter.sim.as_mut().unwrap().validate = Some(0.1);
+        assert_ne!(h_val, spec_grid_hash(&tighter));
     }
 
     #[test]
@@ -769,6 +837,40 @@ mod tests {
         assert_eq!(args[k + 1], "2000");
         assert!(args.contains(&"--sim-arrivals".to_string()));
         assert!(args.contains(&"--sim-warmup".to_string()));
+        assert!(!args.contains(&"--sim-validate".to_string()));
+    }
+
+    #[test]
+    fn validated_cells_carry_a_divergence_digest() {
+        let spec = SweepSpec {
+            scenarios: vec!["abilene".into()],
+            seeds: vec![1],
+            algorithms: vec![Algorithm::Sgp],
+            sim: Some(SimSweepConfig {
+                requests: 2_000,
+                validate: Some(0.9),
+                ..SimSweepConfig::default()
+            }),
+            ..SweepSpec::default()
+        };
+        let report = run_sweep(&spec, 1).unwrap();
+        let sim = report.cells[0].sim.expect("sim-enabled cell missing digest");
+        let d = sim.divergence.expect("validated cell missing divergence");
+        assert!(d.mean_rel_err.is_finite() && d.mean_rel_err >= 0.0, "{d:?}");
+        assert!(d.max_server_rel_err >= 0.0, "{d:?}");
+        // a converged SGP cell on the stock scenario is stable, so the
+        // alarm can only be a tolerance breach — impossible at tol 0.9
+        // (rel_diff of two finite same-sign values is < 1)
+        assert!(!d.alarm, "{d:?}");
+        // the validate flag survives the shard-child handoff
+        let args = spec_to_args(&spec);
+        let k = args.iter().position(|a| a == "--sim-validate").unwrap();
+        assert_eq!(args[k + 1], "0.9");
+        // degenerate tolerances are named before any cell runs
+        let mut bad = spec.clone();
+        bad.sim.as_mut().unwrap().validate = Some(0.0);
+        let err = run_sweep(&bad, 1).unwrap_err().to_string();
+        assert!(err.contains("sim-validate"), "{err}");
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::util::table::{fnum, Table};
 use super::dynamics::PatternSchedule;
 use super::exec::artifact::{f64_bits_hex, parse_f64_bits_hex, u64_hex, Artifact, ArtifactItem};
 use super::exec::grid::GridCell;
-use super::sweep::{CellResult, CellSim, SweepCell};
+use super::sweep::{CellDivergence, CellResult, CellSim, SweepCell};
 use super::{Algorithm, CellBackend};
 
 /// Aggregate over the seeds of one
@@ -44,6 +44,11 @@ pub struct GroupSummary {
     /// (p50, p99, p999, mean); `None` for groups without request-level
     /// simulation ([`super::sweep::SweepSpec::sim`] unset).
     pub sim_mean: Option<CellSim>,
+    /// Mean of the cells' closed-loop `mean_rel_err`; `None` for groups
+    /// without `--sim-validate`.
+    pub sim_mean_rel_err: Option<f64>,
+    /// Number of the group's cells whose validation alarm fired.
+    pub sim_alarms: usize,
 }
 
 /// A completed sweep: per-cell results in grid order plus aggregation.
@@ -63,7 +68,9 @@ pub struct SweepReport {
 /// seed, algorithm, backend, schedule label, cost bits, per-epoch cost
 /// bits (empty for static cells), iterations, iters-to-1%, and the
 /// simulated sojourn digest bits (`[p50, p99, p999, mean]`; empty when
-/// the cell ran without request-level simulation).
+/// the cell ran without request-level simulation; extended with
+/// `[mean_rel_err, max_server_rel_err, alarm]` bits when the cell was
+/// closed-loop validated).
 pub type CellFingerprint = (
     String,
     u64,
@@ -121,6 +128,16 @@ impl CellResult {
                 .set("p999_bits", Json::Str(f64_bits_hex(sim.p999)))
                 .set("mean", Json::Num(sim.mean))
                 .set("mean_bits", Json::Str(f64_bits_hex(sim.mean)));
+            if let Some(d) = &sim.divergence {
+                s.set("mean_rel_err", Json::Num(d.mean_rel_err))
+                    .set("mean_rel_err_bits", Json::Str(f64_bits_hex(d.mean_rel_err)))
+                    .set("max_server_rel_err", Json::Num(d.max_server_rel_err))
+                    .set(
+                        "max_server_rel_err_bits",
+                        Json::Str(f64_bits_hex(d.max_server_rel_err)),
+                    )
+                    .set("alarm", Json::Bool(d.alarm));
+            }
             o.set("sim", s);
         }
         o
@@ -206,11 +223,25 @@ impl CellResult {
                         .with_context(|| format!("cell sim digest missing {name}"))?;
                     parse_f64_bits_hex(hex).with_context(|| format!("bad sim {name} '{hex}'"))
                 };
+                // divergence digest: present iff the sweep ran with
+                // --sim-validate (keyed on the authoritative bits field)
+                let divergence = match s.get("mean_rel_err_bits") {
+                    Json::Null => None,
+                    _ => Some(CellDivergence {
+                        mean_rel_err: field("mean_rel_err_bits")?,
+                        max_server_rel_err: field("max_server_rel_err_bits")?,
+                        alarm: s
+                            .get("alarm")
+                            .as_bool()
+                            .context("cell sim divergence missing alarm")?,
+                    }),
+                };
                 Some(CellSim {
                     p50: field("p50_bits")?,
                     p99: field("p99_bits")?,
                     p999: field("p999_bits")?,
                     mean: field("mean_bits")?,
+                    divergence,
                 })
             }
         };
@@ -330,8 +361,24 @@ impl SweepReport {
                         p99: sims.iter().map(|s| s.p99).sum::<f64>() / k,
                         p999: sims.iter().map(|s| s.p999).sum::<f64>() / k,
                         mean: sims.iter().map(|s| s.mean).sum::<f64>() / k,
+                        // the per-cell digests keep their own divergence;
+                        // the group-level aggregate lives in the dedicated
+                        // sim_mean_rel_err / sim_alarms fields below
+                        divergence: None,
                     })
                 };
+                // likewise grid-hash-guarded: either every digest in the
+                // group carries a divergence record or none does
+                let divs: Vec<CellDivergence> =
+                    sims.iter().filter_map(|s| s.divergence).collect();
+                let sim_mean_rel_err = if divs.is_empty() {
+                    None
+                } else {
+                    Some(
+                        divs.iter().map(|d| d.mean_rel_err).sum::<f64>() / divs.len() as f64,
+                    )
+                };
+                let sim_alarms = divs.iter().filter(|d| d.alarm).count();
                 GroupSummary {
                     scenario,
                     algorithm,
@@ -349,6 +396,8 @@ impl SweepReport {
                     epoch_mean_cost,
                     epoch_p95_cost,
                     sim_mean,
+                    sim_mean_rel_err,
+                    sim_alarms,
                 }
             })
             .collect()
@@ -374,12 +423,22 @@ impl SweepReport {
                     c.iterations,
                     c.iters_to_1pct,
                     match &c.sim {
-                        Some(s) => vec![
-                            s.p50.to_bits(),
-                            s.p99.to_bits(),
-                            s.p999.to_bits(),
-                            s.mean.to_bits(),
-                        ],
+                        Some(s) => {
+                            let mut bits = vec![
+                                s.p50.to_bits(),
+                                s.p99.to_bits(),
+                                s.p999.to_bits(),
+                                s.mean.to_bits(),
+                            ];
+                            if let Some(d) = &s.divergence {
+                                bits.extend([
+                                    d.mean_rel_err.to_bits(),
+                                    d.max_server_rel_err.to_bits(),
+                                    d.alarm as u64,
+                                ]);
+                            }
+                            bits
+                        }
                         None => Vec::new(),
                     },
                 )
@@ -390,9 +449,15 @@ impl SweepReport {
     /// Paper-style text table of the group aggregates. Reports whose
     /// cells carry a simulated sojourn digest grow three tail-latency
     /// columns (mean across the group's seeds of each cell's simulated
-    /// p50/p99/p99.9 request sojourn).
+    /// p50/p99/p99.9 request sojourn); closed-loop-validated reports
+    /// additionally grow a divergence column (mean relative error of
+    /// simulated vs analytic sojourn) and an alarm count.
     pub fn render(&self) -> String {
         let simulated = self.cells.iter().any(|c| c.sim.is_some());
+        let validated = self
+            .cells
+            .iter()
+            .any(|c| c.sim.as_ref().is_some_and(|s| s.divergence.is_some()));
         let mut headers = vec![
             "scenario",
             "algo",
@@ -406,6 +471,9 @@ impl SweepReport {
         ];
         if simulated {
             headers.extend(["sim p50", "sim p99", "sim p99.9"]);
+        }
+        if validated {
+            headers.extend(["sim div err", "alarms"]);
         }
         let mut t = Table::new(&headers);
         for g in self.groups() {
@@ -424,6 +492,12 @@ impl SweepReport {
                 match g.sim_mean {
                     Some(s) => row.extend([fnum(s.p50), fnum(s.p99), fnum(s.p999)]),
                     None => row.extend(["-".to_string(), "-".to_string(), "-".to_string()]),
+                }
+            }
+            if validated {
+                match g.sim_mean_rel_err {
+                    Some(e) => row.extend([fnum(e), g.sim_alarms.to_string()]),
+                    None => row.extend(["-".to_string(), "-".to_string()]),
                 }
             }
             t.row(row);
@@ -459,6 +533,10 @@ impl SweepReport {
                         .set("sim_mean_p99", Json::Num(s.p99))
                         .set("sim_mean_p999", Json::Num(s.p999))
                         .set("sim_mean_sojourn", Json::Num(s.mean));
+                }
+                if let Some(e) = g.sim_mean_rel_err {
+                    o.set("sim_mean_rel_err", Json::Num(e))
+                        .set("sim_alarms", Json::Num(g.sim_alarms as f64));
                 }
                 o
             })
@@ -689,6 +767,11 @@ mod tests {
                 p99: cost,
                 p999: f64::INFINITY,
                 mean: 0.1 + 0.2,
+                divergence: Some(CellDivergence {
+                    mean_rel_err: 0.1 + 0.2,
+                    max_server_rel_err: f64::INFINITY,
+                    alarm: index == 1,
+                }),
             }),
         };
         let report = SweepReport {
@@ -707,8 +790,21 @@ mod tests {
         let s = back.cells[1].sim.expect("sim digest lost in round-trip");
         assert_eq!(s.p999.to_bits(), f64::INFINITY.to_bits());
         assert_eq!(s.mean.to_bits(), (0.1f64 + 0.2).to_bits());
+        // the divergence digest round-trips too, alarm flag included
+        let d = s.divergence.expect("divergence digest lost in round-trip");
+        assert_eq!(d.mean_rel_err.to_bits(), (0.1f64 + 0.2).to_bits());
+        assert_eq!(d.max_server_rel_err.to_bits(), f64::INFINITY.to_bits());
+        assert!(d.alarm);
+        assert!(!back.cells[0].sim.unwrap().divergence.unwrap().alarm);
         let txt = report.render();
         assert!(txt.contains("sim p99"), "{txt}");
+        assert!(txt.contains("sim div err"), "{txt}");
+        assert!(txt.contains("alarms"), "{txt}");
+        // the group surface carries the validation aggregate
+        let doc = Json::parse(&text).unwrap();
+        let g0 = &doc.get("groups").as_arr().unwrap()[0];
+        assert!(g0.get("sim_mean_rel_err").as_num().is_some());
+        assert_eq!(g0.get("sim_alarms").as_num(), Some(1.0));
     }
 
     #[test]

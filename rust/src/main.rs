@@ -22,6 +22,7 @@
 //! cecflow simulate   [--scenario abilene] [--seed 42] [--algo sgp|gp|spoo|lcor]
 //!                    [--requests N] [--arrivals poisson|mmpp[:b[:s]]|diurnal[:d]]
 //!                    [--warmup F] [--pattern static|step:3:1.5|…] [--scale X]
+//!                    [--validate TOL] [--reoptimize-every T] [--max-in-flight N]
 //!                    [--iters N] [--tol X] [--patience N] [--out telemetry.json]
 //! cecflow experiment fig4|fig5b|fig5c|fig5d|table2  (see benches/ too)
 //! cecflow validate   [--scenario abilene] — XLA data plane vs native
@@ -95,6 +96,7 @@ fn print_help() {
          \x20            --scale X --out FILE\n\
          \x20            --sim-requests N [--sim-arrivals SPEC] [--sim-warmup F]\n\
          \x20                                               tail-latency columns per cell\n\
+         \x20            --sim-validate TOL                 closed-loop divergence columns\n\
          sweep shards: --shards N [--shard-timeout SECS]  spawn N child processes\n\
          \x20            --shard-retries N                  re-steal budget per failed\n\
          \x20                                               shard (default 1; 0 = fail fast)\n\
@@ -105,7 +107,12 @@ fn print_help() {
          dynamic flags: --schedule step|bursty|diurnal|churn|rescale --epochs N\n\
          \x20            --magnitude X --mode warm|cold|both --backend sparse|native|pjrt\n\
          simulate flags: --requests N --arrivals poisson|mmpp[:burst[:switch]]|diurnal[:depth]\n\
-         \x20            --warmup F --pattern static|step:3:1.5|… --out FILE"
+         \x20            --warmup F --pattern static|step:3:1.5|… --out FILE\n\
+         \x20            --validate TOL         analytic-vs-simulated divergence report\n\
+         \x20                                   (static pattern; nonzero exit on alarm)\n\
+         \x20            --reoptimize-every T   in-simulation SGP re-optimization ticks\n\
+         \x20            --max-in-flight N      admission cap; excess arrivals are\n\
+         \x20                                   dropped and counted, never fatal"
     );
 }
 
@@ -297,11 +304,19 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             sim.arrivals = cecflow::sim::ArrivalSpec::parse(a)?;
         }
         sim.warmup = args.opt_f64("sim-warmup", sim.warmup);
+        if let Some(v) = args.opt("sim-validate") {
+            sim.validate = Some(cecflow::coordinator::config::parse_positive_f64(
+                "--sim-validate",
+                v,
+            )?);
+        }
         spec.sim = Some(sim);
     } else {
         anyhow::ensure!(
-            args.opt("sim-arrivals").is_none() && args.opt("sim-warmup").is_none(),
-            "--sim-arrivals/--sim-warmup require --sim-requests"
+            args.opt("sim-arrivals").is_none()
+                && args.opt("sim-warmup").is_none()
+                && args.opt("sim-validate").is_none(),
+            "--sim-arrivals/--sim-warmup/--sim-validate require --sim-requests"
         );
     }
 
@@ -599,9 +614,17 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
 /// warm-started adaptive loop ([`cecflow::coordinator::AdaptiveRunner`])
 /// converges every epoch first and each request is routed by its arrival
 /// epoch's strategy.
+///
+/// Closed-loop extensions ([`cecflow::sim::closedloop`]):
+/// `--validate TOL` compares the simulated sojourn against the converged
+/// strategy's analytic steady state and exits nonzero on alarm (after
+/// writing `--out`, so the divergence report survives the failure);
+/// `--reoptimize-every T` skips per-epoch offline convergence and instead
+/// schedules asynchronous SGP update ticks on the simulation clock.
 fn cmd_simulate(args: &Args) -> Result<()> {
+    use cecflow::coordinator::config::parse_positive_f64;
     use cecflow::coordinator::{AdaptiveRunner, CellBackend, PatternSchedule};
-    use cecflow::sim::{simulate, ArrivalSpec, SimConfig, SimEpoch, SimPlan};
+    use cecflow::sim::{simulate, ArrivalSpec, ReoptConfig, SimConfig, SimEpoch, SimPlan};
 
     let scenario = args.opt_or("scenario", "abilene");
     let seed = args.opt_u64("seed", 42);
@@ -627,7 +650,33 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         requests: args.opt_u64("requests", 100_000),
         warmup: args.opt_f64("warmup", 0.05),
         seed,
+        max_in_flight: args.opt_usize("max-in-flight", SimConfig::default().max_in_flight),
     };
+    let validate_tol = match args.opt("validate") {
+        Some(v) => Some(parse_positive_f64("--validate", v)?),
+        None => None,
+    };
+    let reopt = match args.opt("reoptimize-every") {
+        Some(v) => Some(ReoptConfig::every(parse_positive_f64(
+            "--reoptimize-every",
+            v,
+        )?)?),
+        None => None,
+    };
+    anyhow::ensure!(
+        !(validate_tol.is_some() && reopt.is_some()),
+        "--validate compares against the *converged* strategy's analytic flows; \
+         --reoptimize-every deliberately walks away from that strategy mid-run, so the \
+         two cannot combine"
+    );
+    if validate_tol.is_some() {
+        anyhow::ensure!(
+            pattern.is_static(),
+            "--validate needs a steady state to compare against — use the static \
+             pattern (got {})",
+            pattern.label()
+        );
+    }
 
     let net = build_scenario_network(scenario, seed, rate_scale)?;
     println!(
@@ -649,6 +698,30 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         SimPlan {
             epochs: vec![SimEpoch { net, phi }],
         }
+    } else if reopt.is_some() {
+        // in-simulation re-optimization: converge only epoch 0 offline;
+        // later epochs start from the retargeted epoch-0 strategy and
+        // adapt through the SGP ticks riding the calendar queue
+        let out = run_algorithm(&net, algorithm, &run_cfg)?;
+        let phi0 = out.phi.context("optimizer returned no strategy")?;
+        println!(
+            "converged epoch 0: T = {} after {} iteration(s) ({:.2}s); later epochs \
+             adapt in-simulation",
+            fnum(out.final_cost),
+            out.iterations,
+            opt_start.elapsed().as_secs_f64()
+        );
+        let epochs = (0..pattern.epochs())
+            .map(|e| {
+                let net_e = pattern.network_at(&net, seed, e);
+                let phi_e = phi0.retarget(&net, &net_e);
+                SimEpoch {
+                    net: net_e,
+                    phi: phi_e,
+                }
+            })
+            .collect();
+        SimPlan { epochs }
     } else {
         let runner = AdaptiveRunner {
             algorithm,
@@ -671,7 +744,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     };
 
     let sim_start = std::time::Instant::now();
-    let telemetry = simulate(&plan, &arrivals, &sim_cfg)?;
+    let telemetry = match &reopt {
+        Some(r) => cecflow::sim::simulate_adaptive(&plan, &arrivals, &sim_cfg, r)?,
+        None => simulate(&plan, &arrivals, &sim_cfg)?,
+    };
     let (p50, p99, p999) = telemetry.tail();
     println!(
         "released {} request(s), {} completed, {} stranded — {} events over {:.1} \
@@ -690,6 +766,29 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         fnum(p99),
         fnum(p999)
     );
+    if telemetry.overload_dropped > 0 {
+        println!(
+            "overload: {} arrival(s) dropped at the admission cap ({}) — the strategy \
+             is infeasible at this load",
+            telemetry.overload_dropped, sim_cfg.max_in_flight
+        );
+    }
+    if telemetry.reopt_events > 0 {
+        println!(
+            "re-optimization: {} tick(s), {} node update(s) applied, {} skipped",
+            telemetry.reopt_events, telemetry.reopt_updates, telemetry.reopt_skipped
+        );
+    }
+
+    let report = match validate_tol {
+        Some(tol) => {
+            let ep = &plan.epochs[0];
+            let r = cecflow::sim::validate(&ep.net, &ep.phi, &telemetry, tol)?;
+            println!("{}", r.render());
+            Some(r)
+        }
+        None => None,
+    };
 
     if let Some(out) = args.opt("out") {
         let mut doc = Json::obj();
@@ -702,6 +801,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             .set("warmup", Json::Num(sim_cfg.warmup))
             .set("rate_scale", Json::Num(rate_scale))
             .set("telemetry", telemetry.to_json());
+        if let Some(r) = &report {
+            doc.set("validation", r.to_json());
+        }
         if let Some(parent) = std::path::Path::new(out).parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent)
@@ -710,6 +812,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         }
         std::fs::write(out, doc.pretty()).with_context(|| format!("writing {out}"))?;
         println!("wrote {out}");
+    }
+    // the hard alarm: nonzero exit *after* the artifact is on disk, so an
+    // alarmed CI run still leaves the divergence report to inspect
+    if let Some(r) = &report {
+        anyhow::ensure!(
+            !r.alarm,
+            "closed-loop validation alarm: {}",
+            r.alarm_reasons.join("; ")
+        );
     }
     Ok(())
 }

@@ -1,0 +1,485 @@
+//! Closed-loop layer: analytic-vs-simulated validation and in-simulation
+//! re-optimization.
+//!
+//! The paper's optimality theorem is a statement about the *analytic*
+//! congestion cost `T = Σ D_ij(F_ij) + Σ C_i(G_i)`; the request-level
+//! engine ([`super::tasks`]) measures *simulated* sojourn. This module
+//! closes the loop between them in both directions:
+//!
+//! * **Validation** ([`validate`]): by Little's law the analytic expected
+//!   sojourn of a steady-state run is `T / λ` (λ = total arrival rate),
+//!   because every cost term `value(F)` is an expected number-in-system —
+//!   `F/(cap−F)` for the M/M/1 `Queue` cost, `unit·F` for the
+//!   infinite-server `Linear` delay. The validator derives `T` from the
+//!   converged flows ([`compute_flows`]), compares against the simulated
+//!   mean sojourn, and emits a per-server divergence report comparing each
+//!   server's analytic occupancy `value(F)` with its simulated
+//!   time-average number in system. A **hard alarm** fires when the
+//!   aggregate relative error exceeds the configured bound, when any
+//!   capacitated server is saturated (`F ≥ cap`), when arrivals were
+//!   dropped at the in-flight ceiling, or when there are no post-warm-up
+//!   samples to compare.
+//!
+//!   Tolerance semantics: the headline check is the *aggregate mean*
+//!   (`rel_diff(T/λ, simulated mean)` ≤ tol). Per-server rows are
+//!   diagnostic: a server fed by heterogeneous request sizes is M/G/1
+//!   (hyperexponential service), not the M/M/1 the closed form assumes,
+//!   so per-server error is reported and folded into
+//!   `max_server_rel_error` but does not by itself trip the alarm.
+//!
+//! * **Re-optimization** ([`simulate_adaptive`] / [`ReoptConfig`]): instead
+//!   of pre-converging every epoch offline (`AdaptiveRunner`), schedule
+//!   SGP ticks on the calendar queue that re-run the paper's asynchronous
+//!   single-node update against arrival rates estimated from accumulated
+//!   telemetry — the strategy adapts *inside* the run, the asynchronous
+//!   operation of Theorem 2 rather than an offline oracle.
+
+use anyhow::{ensure, Result};
+
+use crate::model::cost::CostFn;
+use crate::model::flows::compute_flows;
+use crate::model::network::Network;
+use crate::model::strategy::Strategy;
+use crate::util::json::Json;
+use crate::util::stats::rel_diff;
+use crate::util::table::{fnum, Table};
+
+use super::tasks::{simulate_with, SimConfig, SimPlan};
+use super::telemetry::{bits_hex, Telemetry};
+use super::workload::ArrivalSpec;
+
+/// Servers with analytic utilization below this floor are excluded from
+/// the headline `max_server_rel_error`: a near-idle server's occupancy is
+/// dominated by sampling noise, so its relative error is meaningless. The
+/// rows still appear in the report.
+pub const RHO_FLOOR: f64 = 0.05;
+
+/// In-simulation re-optimization parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ReoptConfig {
+    /// Simulated time between SGP ticks; each tick updates one node
+    /// (round-robin) across every task and both planes.
+    pub interval: f64,
+    /// Minimum arrivals in the observation window before the rate
+    /// estimate is refreshed from telemetry — below it, ticks keep
+    /// pricing against the previous estimate.
+    pub min_window: u64,
+}
+
+impl ReoptConfig {
+    /// Tick every `interval` simulated time units with the default
+    /// observation-window floor.
+    pub fn every(interval: f64) -> Result<ReoptConfig> {
+        ensure!(
+            interval.is_finite() && interval > 0.0,
+            "re-optimization interval must be finite and positive, got {interval}"
+        );
+        Ok(ReoptConfig {
+            interval,
+            min_window: 50,
+        })
+    }
+}
+
+/// Run the request-level simulation with in-loop asynchronous
+/// re-optimization ([`ReoptConfig`]). Deterministic: the tick schedule
+/// rides the same calendar queue as the workload, and the SGP update is
+/// randomness-free, so repeated runs are bit-identical.
+pub fn simulate_adaptive(
+    plan: &SimPlan,
+    arrivals: &ArrivalSpec,
+    cfg: &SimConfig,
+    reopt: &ReoptConfig,
+) -> Result<Telemetry> {
+    simulate_with(plan, arrivals, cfg, Some(reopt))
+}
+
+/// One server's analytic-vs-simulated occupancy comparison.
+#[derive(Clone, Debug)]
+pub struct ServerDivergence {
+    /// `cpu:<node>` or `link:<edge>`.
+    pub name: String,
+    /// Analytic flow through the server (`G_i` or `F_ij`).
+    pub flow: f64,
+    /// Analytic utilization `flow / cap` (0 for uncapacitated servers).
+    pub rho: f64,
+    /// Analytic expected number in system, `CostFn::value(flow)`.
+    pub analytic: f64,
+    /// Simulated time-average number in system.
+    pub simulated: f64,
+    /// `rel_diff(analytic, simulated)`; +∞ when either is non-finite.
+    pub rel_error: f64,
+    /// Analytic flow at or beyond capacity — the queue is divergent.
+    pub saturated: bool,
+}
+
+/// Outcome of [`validate`]: the aggregate comparison, per-server rows, and
+/// the alarm verdict with human-readable reasons.
+#[derive(Clone, Debug)]
+pub struct ValidationReport {
+    pub tol: f64,
+    /// Total arrival rate λ = Σ_m Σ_i r_i^m.
+    pub lambda: f64,
+    /// Analytic total cost `T` from the converged flows.
+    pub analytic_cost: f64,
+    /// Little's law: `T / λ`.
+    pub analytic_mean_sojourn: f64,
+    pub simulated_mean_sojourn: f64,
+    /// `rel_diff` of the two means; +∞ when incomparable (saturation,
+    /// zero samples).
+    pub mean_rel_error: f64,
+    /// Largest per-server `rel_error` among servers with ρ ≥ [`RHO_FLOOR`].
+    pub max_server_rel_error: f64,
+    /// Post-warm-up completions backing the simulated mean.
+    pub samples: u64,
+    pub overload_dropped: u64,
+    pub servers: Vec<ServerDivergence>,
+    pub alarm: bool,
+    pub alarm_reasons: Vec<String>,
+}
+
+/// `rel_diff` that stays meaningful under saturation: non-finite inputs
+/// compare as +∞ (maximally divergent), never NaN.
+fn guarded_rel(a: f64, b: f64) -> f64 {
+    if a.is_finite() && b.is_finite() {
+        rel_diff(a, b)
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// Compare the analytic steady-state prediction of `(net, phi)` against
+/// the simulated telemetry of the same pair. See the module docs for the
+/// tolerance semantics and alarm conditions.
+pub fn validate(
+    net: &Network,
+    phi: &Strategy,
+    t: &Telemetry,
+    tol: f64,
+) -> Result<ValidationReport> {
+    ensure!(
+        tol.is_finite() && tol > 0.0,
+        "validation tolerance must be finite and positive, got {tol}"
+    );
+    ensure!(
+        t.node_occupancy.len() == net.n() && t.link_occupancy.len() == net.e(),
+        "telemetry dimensions ({} nodes, {} links) do not match the network ({}, {})",
+        t.node_occupancy.len(),
+        t.link_occupancy.len(),
+        net.n(),
+        net.e()
+    );
+    let flows = compute_flows(net, phi).map_err(anyhow::Error::new)?;
+    let lambda: f64 = net.input_rate.iter().flat_map(|r| r.iter()).sum();
+    ensure!(lambda > 0.0, "network offers no traffic (λ = 0)");
+
+    let mut servers = Vec::with_capacity(net.n() + net.e());
+    let mut push = |name: String, cost: &CostFn, flow: f64, simulated: f64| {
+        let (rho, saturated) = match cost.capacity() {
+            Some(cap) => (flow / cap, flow >= cap),
+            None => (0.0, false),
+        };
+        let analytic = cost.value(flow);
+        servers.push(ServerDivergence {
+            name,
+            flow,
+            rho,
+            analytic,
+            simulated,
+            rel_error: guarded_rel(analytic, simulated),
+            saturated,
+        });
+    };
+    for i in 0..net.n() {
+        push(
+            format!("cpu:{i}"),
+            &net.comp_cost[i],
+            flows.workload[i],
+            t.node_occupancy[i],
+        );
+    }
+    for e in 0..net.e() {
+        push(
+            format!("link:{e}"),
+            &net.link_cost[e],
+            flows.link_flow[e],
+            t.link_occupancy[e],
+        );
+    }
+
+    let analytic_cost = flows.total_cost;
+    let analytic_mean = analytic_cost / lambda;
+    let simulated_mean = t.mean_sojourn();
+    let samples = t.sojourn.count();
+    let mean_rel_error = if samples == 0 {
+        f64::INFINITY
+    } else {
+        guarded_rel(analytic_mean, simulated_mean)
+    };
+    let max_server_rel_error = servers
+        .iter()
+        .filter(|s| s.rho >= RHO_FLOOR)
+        .map(|s| s.rel_error)
+        .fold(0.0, f64::max);
+
+    let mut reasons = Vec::new();
+    for s in servers.iter().filter(|s| s.saturated) {
+        reasons.push(format!(
+            "{}: analytic flow {} ≥ capacity — queue divergent",
+            s.name,
+            fnum(s.flow)
+        ));
+    }
+    if t.overload_dropped > 0 {
+        reasons.push(format!(
+            "{} arrival(s) dropped at the in-flight ceiling — strategy overloaded",
+            t.overload_dropped
+        ));
+    }
+    if samples == 0 {
+        reasons.push("no post-warm-up completions to compare".to_string());
+    } else if mean_rel_error > tol {
+        reasons.push(format!(
+            "mean sojourn diverges: analytic {} vs simulated {} (rel err {} > tol {})",
+            fnum(analytic_mean),
+            fnum(simulated_mean),
+            fnum(mean_rel_error),
+            fnum(tol)
+        ));
+    }
+    let alarm = !reasons.is_empty();
+    Ok(ValidationReport {
+        tol,
+        lambda,
+        analytic_cost,
+        analytic_mean_sojourn: analytic_mean,
+        simulated_mean_sojourn: simulated_mean,
+        mean_rel_error,
+        max_server_rel_error,
+        samples,
+        overload_dropped: t.overload_dropped,
+        servers,
+        alarm,
+        alarm_reasons: reasons,
+    })
+}
+
+impl ValidationReport {
+    /// Human-readable divergence report: aggregate line, per-server table,
+    /// alarm verdict.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "closed-loop validation (tol {}):\n  λ = {}  analytic cost T = {}\n  \
+             mean sojourn: analytic T/λ = {} vs simulated {}  (rel err {}, {} sample(s))\n",
+            fnum(self.tol),
+            fnum(self.lambda),
+            fnum(self.analytic_cost),
+            fnum(self.analytic_mean_sojourn),
+            fnum(self.simulated_mean_sojourn),
+            fnum(self.mean_rel_error),
+            self.samples
+        ));
+        let mut tbl = Table::new(&[
+            "server",
+            "flow",
+            "rho",
+            "analytic L",
+            "simulated L",
+            "rel err",
+            "status",
+        ]);
+        for s in &self.servers {
+            let status = if s.saturated {
+                "SATURATED".to_string()
+            } else if s.rho >= RHO_FLOOR && s.rel_error > self.tol {
+                "divergent".to_string()
+            } else {
+                "ok".to_string()
+            };
+            tbl.row(vec![
+                s.name.clone(),
+                fnum(s.flow),
+                fnum(s.rho),
+                fnum(s.analytic),
+                fnum(s.simulated),
+                fnum(s.rel_error),
+                status,
+            ]);
+        }
+        out.push_str(&tbl.render());
+        if self.alarm {
+            out.push_str("ALARM:\n");
+            for r in &self.alarm_reasons {
+                out.push_str(&format!("  - {r}\n"));
+            }
+        } else {
+            out.push_str(
+                "alarm quiet: simulated sojourn matches the analytic model within tolerance\n",
+            );
+        }
+        out
+    }
+
+    /// JSON report; headline numbers carry `_bits` hex for exact-bits
+    /// determinism checks.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("tol", Json::Num(self.tol))
+            .set("lambda", Json::Num(self.lambda))
+            .set("analytic_cost", Json::Num(self.analytic_cost))
+            .set("analytic_mean_sojourn", Json::Num(self.analytic_mean_sojourn))
+            .set(
+                "analytic_mean_sojourn_bits",
+                Json::Str(bits_hex(self.analytic_mean_sojourn)),
+            )
+            .set(
+                "simulated_mean_sojourn",
+                Json::Num(self.simulated_mean_sojourn),
+            )
+            .set(
+                "simulated_mean_sojourn_bits",
+                Json::Str(bits_hex(self.simulated_mean_sojourn)),
+            )
+            .set("mean_rel_error", Json::Num(self.mean_rel_error))
+            .set("mean_rel_error_bits", Json::Str(bits_hex(self.mean_rel_error)))
+            .set("max_server_rel_error", Json::Num(self.max_server_rel_error))
+            .set(
+                "max_server_rel_error_bits",
+                Json::Str(bits_hex(self.max_server_rel_error)),
+            )
+            .set("samples", Json::Num(self.samples as f64))
+            .set("overload_dropped", Json::Num(self.overload_dropped as f64))
+            .set("alarm", Json::Bool(self.alarm))
+            .set(
+                "alarm_reasons",
+                Json::Arr(
+                    self.alarm_reasons
+                        .iter()
+                        .map(|r| Json::Str(r.clone()))
+                        .collect(),
+                ),
+            )
+            .set(
+                "servers",
+                Json::Arr(
+                    self.servers
+                        .iter()
+                        .map(|s| {
+                            let mut so = Json::obj();
+                            so.set("name", Json::Str(s.name.clone()))
+                                .set("flow", Json::Num(s.flow))
+                                .set("rho", Json::Num(s.rho))
+                                .set("analytic_occupancy", Json::Num(s.analytic))
+                                .set("simulated_occupancy", Json::Num(s.simulated))
+                                .set("rel_error", Json::Num(s.rel_error))
+                                .set("saturated", Json::Bool(s.saturated));
+                            so
+                        })
+                        .collect(),
+                ),
+            );
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::network::testnet::diamond;
+    use crate::sim::tasks::{simulate, SimEpoch};
+
+    fn poisson() -> ArrivalSpec {
+        ArrivalSpec::parse("poisson").unwrap()
+    }
+
+    #[test]
+    fn reopt_config_rejects_degenerate_intervals() {
+        assert!(ReoptConfig::every(0.0).is_err());
+        assert!(ReoptConfig::every(-1.0).is_err());
+        assert!(ReoptConfig::every(f64::INFINITY).is_err());
+        assert!(ReoptConfig::every(f64::NAN).is_err());
+        assert!(ReoptConfig::every(2.5).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_tolerances() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let t = Telemetry::new(net.n(), net.e());
+        assert!(validate(&net, &phi, &t, 0.0).is_err());
+        assert!(validate(&net, &phi, &t, f64::NAN).is_err());
+        let wrong = Telemetry::new(1, 1);
+        assert!(validate(&net, &phi, &wrong, 0.1).is_err());
+    }
+
+    #[test]
+    fn empty_telemetry_raises_the_alarm() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let t = Telemetry::new(net.n(), net.e());
+        let report = validate(&net, &phi, &t, 0.1).unwrap();
+        assert!(report.alarm);
+        assert_eq!(report.samples, 0);
+        assert!(report.mean_rel_error.is_infinite());
+        assert!(report
+            .alarm_reasons
+            .iter()
+            .any(|r| r.contains("no post-warm-up completions")));
+    }
+
+    #[test]
+    fn lightly_loaded_diamond_validates_quietly() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let plan = SimPlan {
+            epochs: vec![SimEpoch {
+                net: net.clone(),
+                phi: phi.clone(),
+            }],
+        };
+        let cfg = SimConfig {
+            requests: 20_000,
+            warmup: 0.1,
+            seed: 17,
+            ..SimConfig::default()
+        };
+        let t = simulate(&plan, &poisson(), &cfg).unwrap();
+        let report = validate(&net, &phi, &t, 0.25).unwrap();
+        assert!(
+            !report.alarm,
+            "expected quiet alarm, got: {:?}",
+            report.alarm_reasons
+        );
+        assert_eq!(report.servers.len(), net.n() + net.e());
+        assert!(report.lambda > 0.0 && report.analytic_cost.is_finite());
+        assert!(report.mean_rel_error <= 0.25, "{}", report.mean_rel_error);
+        // The rendered report and JSON must both carry the verdict.
+        assert!(report.render().contains("alarm quiet"));
+        assert_eq!(report.to_json().get("alarm").as_bool(), Some(false));
+    }
+
+    #[test]
+    fn adaptive_simulation_ticks_and_stays_deterministic() {
+        let run = || {
+            let net = diamond(true);
+            let phi = Strategy::local_compute_init(&net);
+            let plan = SimPlan {
+                epochs: vec![SimEpoch { net, phi }],
+            };
+            let cfg = SimConfig {
+                requests: 3_000,
+                warmup: 0.1,
+                seed: 23,
+                ..SimConfig::default()
+            };
+            let reopt = ReoptConfig::every(25.0).unwrap();
+            simulate_adaptive(&plan, &poisson(), &cfg, &reopt).unwrap()
+        };
+        let a = run();
+        assert!(a.reopt_events > 0, "no re-optimization tick fired");
+        assert_eq!(a.completed + a.stranded + a.overload_dropped, a.arrived);
+        let b = run();
+        assert_eq!(a.to_json().dump(), b.to_json().dump());
+    }
+}

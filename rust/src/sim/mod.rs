@@ -9,7 +9,10 @@
 //!   data-flow hops, computation service and result-flow hops through
 //!   per-link/per-CPU FIFO queues, per a converged [`Strategy`];
 //! * [`telemetry`] — streaming tail-latency sketches and utilization
-//!   counters (bounded memory, bit-reproducible).
+//!   counters (bounded memory, bit-reproducible);
+//! * [`closedloop`] — analytic-vs-simulated validation (per-server
+//!   divergence report + hard alarm) and in-simulation asynchronous
+//!   re-optimization (SGP ticks on the calendar queue).
 //!
 //! Plus the original protocol layer: the paper's two-stage marginal
 //! broadcast (§IV) in [`protocol`], asynchronous update schedules
@@ -21,6 +24,7 @@
 
 pub mod actors;
 pub mod async_run;
+pub mod closedloop;
 pub mod core;
 pub mod event;
 pub mod protocol;
@@ -31,6 +35,9 @@ pub mod workload;
 pub use async_run::{
     run_async, run_async_dynamic, run_async_round_robin, run_with_failure, DynamicAsyncTrace,
     FailureRun,
+};
+pub use closedloop::{
+    simulate_adaptive, validate, ReoptConfig, ServerDivergence, ValidationReport,
 };
 pub use protocol::{run_broadcast, ProtocolResult};
 pub use tasks::{simulate, SimConfig, SimEpoch, SimPlan};

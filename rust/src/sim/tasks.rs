@@ -35,14 +35,25 @@
 //! snapshot while the physical FIFO servers are shared across epochs
 //! (capacities are epoch-invariant under every `PatternSchedule` kind —
 //! the schedules mutate rates and endpoints, not hardware).
+//!
+//! Two closed-loop extensions ride the same event set
+//! ([`super::closedloop`]): every server integrates its number-in-system
+//! over time so the validator can compare time-average occupancy against
+//! the analytic cost value, and an optional [`ReoptConfig`] schedules
+//! `Ev::Reopt` ticks that re-run the paper's asynchronous single-node SGP
+//! update against arrival rates estimated from accumulated telemetry —
+//! strategies then adapt *inside* the run instead of only at offline
+//! epoch boundaries.
 
 use anyhow::{bail, Result};
 
+use crate::algo::Sgp;
 use crate::model::cost::CostFn;
 use crate::model::network::Network;
 use crate::model::strategy::Strategy;
 use crate::util::rng::Pcg;
 
+use super::closedloop::ReoptConfig;
 use super::core::EventQueue;
 use super::telemetry::Telemetry;
 use super::workload::{Arrival, ArrivalSpec, ArrivalStream, EpochRates};
@@ -69,6 +80,12 @@ pub struct SimConfig {
     /// sketch as warm-up transient.
     pub warmup: f64,
     pub seed: u64,
+    /// Ceiling on concurrently in-flight requests. Arrivals beyond it are
+    /// *dropped and counted* (`Telemetry::overload_dropped`) instead of
+    /// aborting the run, so an overloaded strategy produces a measured
+    /// outcome the closed-loop validator can alarm on. The default is high
+    /// enough that only a genuinely divergent queue ever reaches it.
+    pub max_in_flight: usize,
 }
 
 impl Default for SimConfig {
@@ -77,13 +94,14 @@ impl Default for SimConfig {
             requests: 100_000,
             warmup: 0.05,
             seed: 1,
+            max_in_flight: MAX_IN_FLIGHT,
         }
     }
 }
 
-/// Hard ceiling on concurrently in-flight requests: an overloaded
-/// (infeasible) strategy grows queues without bound; failing fast beats
-/// exhausting memory on a run whose tail latency is divergent anyway.
+/// Default ceiling on concurrently in-flight requests: an overloaded
+/// (infeasible) strategy grows queues without bound; dropping beyond this
+/// point bounds memory on a run whose tail latency is divergent anyway.
 const MAX_IN_FLIGHT: usize = 4_000_000;
 
 /// Sentinel for "no link hop in progress".
@@ -124,12 +142,37 @@ struct Server {
     in_system: u64,
     peak: u64,
     busy: f64,
+    /// Time-integral of `in_system` up to `last_change`, so
+    /// `area / end_time` is the time-average number in system — the
+    /// quantity the closed-loop validator compares against the analytic
+    /// occupancy `CostFn::value(F)`.
+    area: f64,
+    last_change: f64,
 }
 
 impl Server {
-    fn enter(&mut self) {
+    fn enter(&mut self, now: f64) {
+        self.settle(now);
         self.in_system += 1;
         self.peak = self.peak.max(self.in_system);
+    }
+
+    fn exit(&mut self, now: f64) {
+        self.settle(now);
+        self.in_system -= 1;
+    }
+
+    fn settle(&mut self, now: f64) {
+        self.area += self.in_system as f64 * (now - self.last_change);
+        self.last_change = now;
+    }
+
+    /// Time-average number in system over `[0, end]`.
+    fn occupancy(&self, end: f64) -> f64 {
+        if end <= 0.0 {
+            return 0.0;
+        }
+        (self.area + self.in_system as f64 * (end - self.last_change)) / end
     }
 }
 
@@ -139,6 +182,25 @@ enum Ev {
     /// A service (link hop or computation) finished for slab slot `slot`,
     /// valid only while the slot's generation still matches `gen`.
     HopDone { slot: u32, gen: u32 },
+    /// In-simulation re-optimization tick ([`ReoptConfig`]).
+    Reopt,
+}
+
+/// Live state of in-simulation re-optimization: the asynchronous SGP
+/// optimizer plus the telemetry-estimated arrival rates it prices against.
+struct ReoptState {
+    cfg: ReoptConfig,
+    sgp: Sgp,
+    /// Round-robin node cursor — each tick updates one node's data and
+    /// result rows for every task, the paper's asynchronous schedule.
+    cursor: usize,
+    /// Current `[task][node]` arrival-rate estimate, seeded from the
+    /// epoch-0 pattern and refreshed from the observation window.
+    rates: Vec<Vec<f64>>,
+    /// Arrivals observed per `[task][node]` since `window_start`.
+    window: Vec<Vec<u64>>,
+    window_total: u64,
+    window_start: f64,
 }
 
 struct Engine<'a> {
@@ -147,12 +209,18 @@ struct Engine<'a> {
     slots: Vec<Slot>,
     free: Vec<u32>,
     in_flight: usize,
+    inflight_cap: usize,
     links: Vec<Server>,
     cpus: Vec<Server>,
     telemetry: Telemetry,
     stream: ArrivalStream,
     /// The arrival whose `Ev::Arrive` event is currently scheduled.
     pending: Option<Arrival>,
+    /// Per-epoch working copies of the plan's strategies. Routing reads
+    /// these, not `plan.epochs[..].phi`, so re-optimization ticks can
+    /// mutate the strategy mid-run without touching the caller's plan.
+    phis: Vec<Strategy>,
+    reopt: Option<ReoptState>,
     rng_requests: Pcg,
     ordinal: u64,
     warm_count: u64,
@@ -160,6 +228,17 @@ struct Engine<'a> {
 
 /// Run the request-level simulation and return its streaming telemetry.
 pub fn simulate(plan: &SimPlan, arrivals: &ArrivalSpec, cfg: &SimConfig) -> Result<Telemetry> {
+    simulate_with(plan, arrivals, cfg, None)
+}
+
+/// [`simulate`] with optional in-loop re-optimization — the public entry
+/// point for the adaptive mode is [`super::closedloop::simulate_adaptive`].
+pub(crate) fn simulate_with(
+    plan: &SimPlan,
+    arrivals: &ArrivalSpec,
+    cfg: &SimConfig,
+    reopt: Option<&ReoptConfig>,
+) -> Result<Telemetry> {
     if plan.epochs.is_empty() {
         bail!("simulation plan has no epochs");
     }
@@ -172,6 +251,30 @@ pub fn simulate(plan: &SimPlan, arrivals: &ArrivalSpec, cfg: &SimConfig) -> Resu
     if !(0.0..1.0).contains(&cfg.warmup) {
         bail!("warmup fraction must be in [0,1), got {}", cfg.warmup);
     }
+    let reopt_state = match reopt {
+        Some(rc) => {
+            if !(rc.interval.is_finite() && rc.interval > 0.0) {
+                bail!(
+                    "re-optimization interval must be finite and positive, got {}",
+                    rc.interval
+                );
+            }
+            let s = plan.epochs[0].net.s();
+            if plan.epochs.iter().any(|ep| ep.net.s() != s) {
+                bail!("re-optimization requires every epoch to share the task set");
+            }
+            Some(ReoptState {
+                cfg: *rc,
+                sgp: Sgp::new(),
+                cursor: 0,
+                rates: plan.epochs[0].net.input_rate.clone(),
+                window: vec![vec![0; n]; s],
+                window_total: 0,
+                window_start: 0.0,
+            })
+        }
+        None => None,
+    };
     let rates: Vec<EpochRates> = plan
         .epochs
         .iter()
@@ -184,15 +287,21 @@ pub fn simulate(plan: &SimPlan, arrivals: &ArrivalSpec, cfg: &SimConfig) -> Resu
         slots: Vec::new(),
         free: Vec::new(),
         in_flight: 0,
+        inflight_cap: cfg.max_in_flight,
         links: vec![Server::default(); e],
         cpus: vec![Server::default(); n],
         telemetry: Telemetry::new(n, e),
         stream,
         pending: None,
+        phis: plan.epochs.iter().map(|ep| ep.phi.clone()).collect(),
+        reopt: reopt_state,
         rng_requests: Pcg::with_stream(cfg.seed, 0x7a5c_0de),
         ordinal: 0,
         warm_count: (cfg.warmup * cfg.requests as f64).floor() as u64,
     };
+    if let Some(r) = &engine.reopt {
+        engine.queue.schedule(r.cfg.interval, Ev::Reopt);
+    }
     engine.run()?;
     Ok(engine.into_telemetry())
 }
@@ -218,6 +327,7 @@ impl Engine<'_> {
                     );
                     self.advance(idx)?;
                 }
+                Ev::Reopt => self.reopt_tick()?,
             }
         }
         Ok(())
@@ -226,13 +336,16 @@ impl Engine<'_> {
     fn into_telemetry(mut self) -> Telemetry {
         self.telemetry.end_time = self.queue.now();
         self.telemetry.events = self.queue.processed;
+        let end = self.telemetry.end_time;
         for (i, srv) in self.cpus.iter().enumerate() {
             self.telemetry.node_busy[i] = srv.busy;
             self.telemetry.node_peak[i] = srv.peak;
+            self.telemetry.node_occupancy[i] = srv.occupancy(end);
         }
         for (e, srv) in self.links.iter().enumerate() {
             self.telemetry.link_busy[e] = srv.busy;
             self.telemetry.link_peak[e] = srv.peak;
+            self.telemetry.link_occupancy[e] = srv.occupancy(end);
         }
         self.telemetry
     }
@@ -248,11 +361,19 @@ impl Engine<'_> {
     /// Inject one request: allocate a slab slot and make its first
     /// data-plane decision at the source node.
     fn admit(&mut self, a: Arrival) -> Result<()> {
-        if self.in_flight >= MAX_IN_FLIGHT {
-            bail!(
-                "over {MAX_IN_FLIGHT} requests in flight — the strategy is \
-                 overloaded (some queue has utilization ≥ 1); aborting"
-            );
+        if let Some(r) = self.reopt.as_mut() {
+            // Offered load, dropped or not, informs the rate estimate.
+            r.window[a.task][a.source] += 1;
+            r.window_total += 1;
+        }
+        if self.in_flight >= self.inflight_cap {
+            // Structured overload: drop the arrival and keep running, so
+            // the run ends with telemetry the validator can alarm on
+            // ("strategy infeasible / queue divergent") instead of a
+            // process error that discards everything measured so far.
+            self.telemetry.arrived += 1;
+            self.telemetry.overload_dropped += 1;
+            return Ok(());
         }
         let now = self.queue.now();
         let epoch = self.stream.epoch_of(a.time) as u32;
@@ -297,15 +418,16 @@ impl Engine<'_> {
 
     /// A service completed: release its server and take the next step.
     fn advance(&mut self, idx: usize) -> Result<()> {
+        let now = self.queue.now();
         let hop = self.slots[idx].hop_edge;
         if hop != NO_LINK {
-            self.links[hop as usize].in_system -= 1;
+            self.links[hop as usize].exit(now);
             self.slots[idx].hop_edge = NO_LINK;
         }
         match self.slots[idx].phase {
             Phase::Data => self.decide_data(idx),
             Phase::Compute => {
-                self.cpus[self.slots[idx].node as usize].in_system -= 1;
+                self.cpus[self.slots[idx].node as usize].exit(now);
                 self.slots[idx].phase = Phase::Result;
                 self.decide_result(idx)
             }
@@ -322,15 +444,16 @@ impl Engine<'_> {
             (s.task as usize, s.node as usize, s.epoch as usize)
         };
         let ep = &plan.epochs[epoch];
-        let row = &ep.phi.data[task][node];
+        let row = &self.phis[epoch].data[task][node];
         let Some(choice) = sample_row(row, &mut self.slots[idx].rng) else {
             return self.strand(idx);
         };
+        let now = self.queue.now();
         if choice == 0 {
             // Compute here: CPU service of requirement w_im × unit size.
             let size = ep.net.w_of(node, task);
             self.slots[idx].phase = Phase::Compute;
-            self.cpus[node].enter();
+            self.cpus[node].enter(now);
             let done = self.serve(SrvRef::Cpu(node), &ep.net.comp_cost[node], size, idx);
             self.schedule_hop(idx, done);
         } else {
@@ -339,7 +462,7 @@ impl Engine<'_> {
             self.slots[idx].phase = Phase::Data;
             self.slots[idx].node = dst as u32;
             self.slots[idx].hop_edge = eid as u32;
-            self.links[eid].enter();
+            self.links[eid].enter(now);
             let done = self.serve(SrvRef::Link(eid), &ep.net.link_cost[eid], 1.0, idx);
             self.schedule_hop(idx, done);
         }
@@ -359,7 +482,7 @@ impl Engine<'_> {
             self.complete(idx);
             return Ok(());
         }
-        let row = &ep.phi.result[task][node];
+        let row = &self.phis[epoch].result[task][node];
         let Some(k) = sample_row(row, &mut self.slots[idx].rng) else {
             return self.strand(idx);
         };
@@ -368,9 +491,63 @@ impl Engine<'_> {
         let size = ep.net.a_of(task);
         self.slots[idx].node = dst as u32;
         self.slots[idx].hop_edge = eid as u32;
-        self.links[eid].enter();
+        self.links[eid].enter(self.queue.now());
         let done = self.serve(SrvRef::Link(eid), &ep.net.link_cost[eid], size, idx);
         self.schedule_hop(idx, done);
+        Ok(())
+    }
+
+    /// One asynchronous re-optimization tick: refresh the arrival-rate
+    /// estimate from the observation window, then run the paper's
+    /// single-node SGP update (data + result planes, every task) for the
+    /// next node in round-robin order against the *estimated* network.
+    /// Unpriceable states (e.g. estimated rates that saturate a server)
+    /// skip the update rather than kill the run — the next window
+    /// re-estimates. Fully deterministic: no randomness, and the tick
+    /// order is fixed by the calendar queue.
+    fn reopt_tick(&mut self) -> Result<()> {
+        let Some(mut r) = self.reopt.take() else {
+            return Ok(());
+        };
+        // Drain tick after the workload is exhausted: nothing left to
+        // adapt for, so don't reschedule and let the queue empty.
+        if self.pending.is_none() && self.in_flight == 0 {
+            self.reopt = Some(r);
+            return Ok(());
+        }
+        let now = self.queue.now();
+        let epoch = self.stream.epoch_of(now);
+        self.telemetry.reopt_events += 1;
+        let elapsed = now - r.window_start;
+        if elapsed > 0.0 && r.window_total >= r.cfg.min_window {
+            for (m, per_node) in r.window.iter_mut().enumerate() {
+                for (i, c) in per_node.iter_mut().enumerate() {
+                    r.rates[m][i] = *c as f64 / elapsed;
+                    *c = 0;
+                }
+            }
+            r.window_total = 0;
+            r.window_start = now;
+        }
+        let mut est = self.plan.epochs[epoch].net.clone();
+        est.input_rate = r.rates.clone();
+        let node = r.cursor % est.n();
+        r.cursor += 1;
+        for task in 0..est.s() {
+            for plane_result in [false, true] {
+                match r
+                    .sgp
+                    .update_single_node(&est, &mut self.phis[epoch], node, task, plane_result)
+                {
+                    Ok(_) => self.telemetry.reopt_updates += 1,
+                    Err(_) => self.telemetry.reopt_skipped += 1,
+                }
+            }
+        }
+        if self.pending.is_some() {
+            self.queue.schedule(r.cfg.interval, Ev::Reopt);
+        }
+        self.reopt = Some(r);
         Ok(())
     }
 
@@ -504,11 +681,13 @@ mod tests {
             requests: 5_000,
             warmup: 0.1,
             seed: 3,
+            ..SimConfig::default()
         };
         let t = simulate(&plan, &poisson(), &cfg).unwrap();
         assert_eq!(t.arrived, 5_000);
         assert_eq!(t.completed, 5_000);
         assert_eq!(t.stranded, 0);
+        assert_eq!(t.overload_dropped, 0);
         let (p50, p99, p999) = t.tail();
         assert!(p50 > 0.0 && p50 <= p99 && p99 <= p999, "{p50} {p99} {p999}");
         assert!(t.mean_sojourn() > 0.0);
@@ -517,6 +696,12 @@ mod tests {
         for (e, &b) in t.link_busy.iter().enumerate() {
             assert!(b / t.end_time < 1.0, "link {e} overloaded");
         }
+        // Occupancy integrals are finite and non-negative everywhere, and
+        // some CPU actually held requests.
+        for &occ in t.node_occupancy.iter().chain(t.link_occupancy.iter()) {
+            assert!(occ.is_finite() && occ >= 0.0, "bad occupancy {occ}");
+        }
+        assert!(t.node_occupancy.iter().any(|&occ| occ > 0.0));
     }
 
     #[test]
@@ -528,6 +713,7 @@ mod tests {
             requests: 4_000,
             warmup: 0.05,
             seed: 7,
+            ..SimConfig::default()
         };
         let t = simulate(&plan, &poisson(), &cfg).unwrap();
         assert_eq!(t.completed + t.stranded, 4_000);
@@ -543,6 +729,7 @@ mod tests {
             requests: 2_000,
             warmup: 0.05,
             seed: 11,
+            ..SimConfig::default()
         };
         let run = || {
             let net = diamond(true);
@@ -563,10 +750,49 @@ mod tests {
             requests: 1_000,
             warmup: 0.25,
             seed: 5,
+            ..SimConfig::default()
         };
         let t = simulate(&plan_of(net, phi), &poisson(), &cfg).unwrap();
         assert_eq!(t.warmup_skipped, 250);
         assert_eq!(t.sojourn.count(), 750);
+    }
+
+    #[test]
+    fn overload_drops_are_counted_not_fatal() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let cfg = SimConfig {
+            requests: 2_000,
+            warmup: 0.0,
+            seed: 9,
+            max_in_flight: 1,
+        };
+        let t = simulate(&plan_of(net, phi), &poisson(), &cfg).unwrap();
+        assert!(t.overload_dropped > 0, "ceiling of 1 must drop arrivals");
+        // Conservation: every arrival either completed, stranded, or was
+        // dropped at the ceiling — and the run still finished cleanly.
+        assert_eq!(t.arrived, 2_000);
+        assert_eq!(t.completed + t.stranded + t.overload_dropped, t.arrived);
+        assert!(t.max_in_flight <= 1);
+    }
+
+    #[test]
+    fn zero_capacity_run_completes_with_empty_telemetry() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let cfg = SimConfig {
+            requests: 100,
+            warmup: 0.0,
+            seed: 2,
+            max_in_flight: 0,
+        };
+        let t = simulate(&plan_of(net, phi), &poisson(), &cfg).unwrap();
+        assert_eq!(t.overload_dropped, 100);
+        assert_eq!(t.completed, 0);
+        // Empty telemetry still serializes to parseable, finite JSON
+        // (satellite: no NaN→null leaks from the empty sketch).
+        let dump = t.to_json().dump();
+        assert!(!dump.contains("null"), "empty telemetry leaked null: {dump}");
     }
 
     #[test]
@@ -579,6 +805,7 @@ mod tests {
             requests: 10,
             warmup: 1.0,
             seed: 1,
+            ..SimConfig::default()
         };
         assert!(simulate(&plan_of(net, phi), &poisson(), &cfg).is_err());
     }

@@ -11,6 +11,12 @@
 //! here is a pure fold over the event stream, so two runs that process the
 //! same events produce bit-identical telemetry — the property the
 //! determinism regression in `rust/tests/sim_engine.rs` pins.
+//!
+//! Empty-telemetry contract: a run with zero post-warm-up completions
+//! reports **explicit zeros** for the mean and every quantile, with
+//! `sojourn.count = 0` as the marker — never NaN, which the JSON layer
+//! would serialize as `null` and break artifact consumers. The underlying
+//! sketch keeps its NaN-on-empty contract; the gating happens here.
 
 use crate::util::json::Json;
 use crate::util::stats::{QuantileSketch, Welford};
@@ -18,7 +24,7 @@ use crate::util::stats::{QuantileSketch, Welford};
 /// Hex-encoded IEEE-754 bits, mirroring `coordinator::exec::artifact`'s
 /// convention (`sim::` must not depend on `coordinator::`, so the one-line
 /// encoder is repeated rather than imported).
-fn bits_hex(x: f64) -> String {
+pub(crate) fn bits_hex(x: f64) -> String {
     format!("{:016x}", x.to_bits())
 }
 
@@ -37,6 +43,10 @@ pub struct Telemetry {
     /// Requests abandoned because the strategy offered no outgoing slot —
     /// always 0 for a feasible, loop-free strategy (asserted in tests).
     pub stranded: u64,
+    /// Arrivals dropped at the in-flight ceiling
+    /// (`SimConfig::max_in_flight`) — nonzero means the strategy is
+    /// overloaded and the closed-loop validator must alarm.
+    pub overload_dropped: u64,
     /// Busy time per compute node (CPU utilization = busy / end_time).
     pub node_busy: Vec<f64>,
     /// Busy time per directed link.
@@ -45,12 +55,24 @@ pub struct Telemetry {
     pub node_peak: Vec<u64>,
     /// High-water mark of requests in system per link.
     pub link_peak: Vec<u64>,
+    /// Time-average number in system per compute node — the simulated
+    /// counterpart of the analytic occupancy `CostFn::value(F)` that the
+    /// closed-loop validator compares per server.
+    pub node_occupancy: Vec<f64>,
+    /// Time-average number in system per directed link.
+    pub link_occupancy: Vec<f64>,
     /// Simulation clock when the last event fired.
     pub end_time: f64,
     /// Total events processed by the calendar queue.
     pub events: u64,
     /// Peak concurrent in-flight requests (arena high-water mark).
     pub max_in_flight: u64,
+    /// In-loop re-optimization ticks that ran (0 without `ReoptConfig`).
+    pub reopt_events: u64,
+    /// Single-node SGP updates applied across all ticks.
+    pub reopt_updates: u64,
+    /// Single-node SGP updates skipped (unpriceable estimated state).
+    pub reopt_skipped: u64,
 }
 
 impl Telemetry {
@@ -62,13 +84,19 @@ impl Telemetry {
             completed: 0,
             warmup_skipped: 0,
             stranded: 0,
+            overload_dropped: 0,
             node_busy: vec![0.0; nodes],
             link_busy: vec![0.0; links],
             node_peak: vec![0; nodes],
             link_peak: vec![0; links],
+            node_occupancy: vec![0.0; nodes],
+            link_occupancy: vec![0.0; links],
             end_time: 0.0,
             events: 0,
             max_in_flight: 0,
+            reopt_events: 0,
+            reopt_updates: 0,
+            reopt_skipped: 0,
         }
     }
 
@@ -84,16 +112,22 @@ impl Telemetry {
         }
     }
 
+    /// Mean post-warm-up sojourn; explicit 0.0 when no sample was recorded
+    /// (`sojourn.count() == 0` is the empties marker).
     pub fn mean_sojourn(&self) -> f64 {
         if self.mean.count() == 0 {
-            f64::NAN
+            0.0
         } else {
             self.mean.mean()
         }
     }
 
-    /// The three headline tail quantiles (p50, p99, p999).
+    /// The three headline tail quantiles (p50, p99, p999); explicit zeros
+    /// when the sketch is empty.
     pub fn tail(&self) -> (f64, f64, f64) {
+        if self.sojourn.is_empty() {
+            return (0.0, 0.0, 0.0);
+        }
         (
             self.sojourn.quantile(0.50),
             self.sojourn.quantile(0.99),
@@ -112,9 +146,15 @@ impl Telemetry {
 
     /// Full JSON report. Quantiles carry both a human-readable number and
     /// authoritative `_bits` hex so determinism checks compare exact bits.
+    /// Empty runs emit zeros (with `sojourn.count = 0`), never `null`.
     pub fn to_json(&self) -> Json {
         let (p50, p99, p999) = self.tail();
         let mean = self.mean_sojourn();
+        let max = if self.sojourn.is_empty() {
+            0.0
+        } else {
+            self.sojourn.max()
+        };
         let mut soj = Json::obj();
         soj.set("count", Json::Num(self.sojourn.count() as f64))
             .set("error_bound", Json::Num(self.sojourn.relative_error_bound()))
@@ -126,16 +166,20 @@ impl Telemetry {
             .set("p999_bits", Json::Str(bits_hex(p999)))
             .set("mean", Json::Num(mean))
             .set("mean_bits", Json::Str(bits_hex(mean)))
-            .set("max", Json::Num(self.sojourn.max()));
+            .set("max", Json::Num(max));
         let mut j = Json::obj();
         j.set("arrived", Json::Num(self.arrived as f64))
             .set("completed", Json::Num(self.completed as f64))
             .set("warmup_skipped", Json::Num(self.warmup_skipped as f64))
             .set("stranded", Json::Num(self.stranded as f64))
+            .set("overload_dropped", Json::Num(self.overload_dropped as f64))
             .set("events", Json::Num(self.events as f64))
             .set("end_time", Json::Num(self.end_time))
             .set("end_time_bits", Json::Str(bits_hex(self.end_time)))
             .set("max_in_flight", Json::Num(self.max_in_flight as f64))
+            .set("reopt_events", Json::Num(self.reopt_events as f64))
+            .set("reopt_updates", Json::Num(self.reopt_updates as f64))
+            .set("reopt_skipped", Json::Num(self.reopt_skipped as f64))
             .set("sojourn", soj)
             .set(
                 "node_utilization",
@@ -144,6 +188,14 @@ impl Telemetry {
             .set(
                 "link_utilization",
                 Self::utilization(&self.link_busy, self.end_time),
+            )
+            .set(
+                "node_occupancy",
+                Json::from_f64_slice(&self.node_occupancy),
+            )
+            .set(
+                "link_occupancy",
+                Json::from_f64_slice(&self.link_occupancy),
             )
             .set(
                 "node_queue_peak",
@@ -201,5 +253,20 @@ mod tests {
             back.path("sojourn.p50_bits").as_str().unwrap().len(),
             16
         );
+    }
+
+    #[test]
+    fn empty_telemetry_serializes_zeros_not_nulls() {
+        let t = Telemetry::new(2, 1);
+        assert_eq!(t.mean_sojourn(), 0.0);
+        assert_eq!(t.tail(), (0.0, 0.0, 0.0));
+        let dump = t.to_json().dump();
+        assert!(!dump.contains("null"), "empty telemetry leaked null: {dump}");
+        let back = Json::parse(&dump).unwrap();
+        assert_eq!(back.path("sojourn.count").as_usize(), Some(0));
+        assert_eq!(back.path("sojourn.p50").as_num(), Some(0.0));
+        assert_eq!(back.path("sojourn.mean").as_num(), Some(0.0));
+        assert_eq!(back.path("sojourn.max").as_num(), Some(0.0));
+        assert_eq!(back.path("overload_dropped").as_num(), Some(0.0));
     }
 }

@@ -210,6 +210,14 @@ impl QuantileSketch {
         self.total
     }
 
+    /// True before any insert. Serialization layers must gate on this:
+    /// `quantile`/`min`/`max` return NaN on an empty sketch, and the JSON
+    /// layer writes NaN as `null` — emit explicit zeros with a zero count
+    /// marker instead (see `sim::telemetry`).
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
     /// Smallest recorded value (NaN before any insert).
     pub fn min(&self) -> f64 {
         if self.total == 0 {
@@ -378,6 +386,16 @@ mod tests {
         sk.record(5.0);
         assert_eq!(sk.quantile(0.25), 0.0);
         assert!((sk.quantile(1.0) - 5.0).abs() / 5.0 <= 0.01);
+    }
+
+    #[test]
+    fn sketch_emptiness_is_queryable() {
+        let mut sk = QuantileSketch::with_default_error();
+        assert!(sk.is_empty());
+        // The NaN contract stands — is_empty is how serializers gate it.
+        assert!(sk.min().is_nan() && sk.max().is_nan());
+        sk.record(1.0);
+        assert!(!sk.is_empty());
     }
 
     #[test]

@@ -152,6 +152,7 @@ fn repeated_simulations_are_bit_identical() {
             requests: 20_000,
             warmup: 0.1,
             seed: 7,
+            ..SimConfig::default()
         };
         let a = simulate(&plan, &spec, &cfg).unwrap();
         let b = simulate(&plan, &spec, &cfg).unwrap();
@@ -213,6 +214,7 @@ fn converged_strategies_strand_no_requests() {
                 requests: 10_000,
                 warmup: 0.05,
                 seed: 3,
+                ..SimConfig::default()
             },
         )
         .unwrap();
