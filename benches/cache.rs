@@ -1,0 +1,142 @@
+//! PR 8 perf driver: the content-addressed strategy store.
+//!
+//! Three planes:
+//!
+//!  * raw sparse SGP optimizer throughput (iterations/sec on abilene) —
+//!    the work a cache hit avoids, for scale;
+//!  * cold sweep throughput (cells/sec) populating a fresh `FsStore`;
+//!  * cache-hit sweep throughput (cells/sec) re-running the same grid
+//!    against the populated store, with the hit rate and the
+//!    fingerprint-identity to the cold run asserted — the speedup ratio
+//!    is the headline number of the store layer.
+//!
+//! Emits the machine-readable perf-trajectory record as `BENCH_8.json`
+//! in the working directory (`CECFLOW_BENCH_OUT` overrides the path).
+//! `CECFLOW_BENCH_FAST=1` shrinks the grid for the CI smoke run.
+//!
+//! Run: `cargo bench --bench cache`
+
+use std::time::Instant;
+
+use cecflow::algo::Sgp;
+use cecflow::coordinator::{
+    build_scenario_network, optimize, run_sweep, Algorithm, CellBackend, PatternSchedule,
+    RunConfig, SweepSpec,
+};
+use cecflow::model::strategy::Strategy;
+use cecflow::util::json::Json;
+
+fn record(name: &str, per_sec: f64, count: u64, seconds: f64) -> Json {
+    let mut o = Json::obj();
+    o.set("name", Json::Str(name.to_string()))
+        .set("per_sec", Json::Num(per_sec))
+        .set("count", Json::Num(count as f64))
+        .set("seconds", Json::Num(seconds));
+    o
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("CECFLOW_BENCH_FAST").is_ok();
+    let mut records: Vec<Json> = Vec::new();
+
+    // ---- plane 1: raw sparse SGP iteration throughput -----------------
+    // Repeated full solves under a generous iteration budget; the metric
+    // is optimizer iterations/sec — the unit of work a store hit avoids.
+    let net = build_scenario_network("abilene", 1, 1.0)?;
+    let phi0 = Strategy::local_compute_init(&net);
+    let max_iters = if fast { 40 } else { 200 };
+    let cfg = RunConfig {
+        max_iters,
+        tol: 0.0,
+        // a patience window longer than the budget can never fill: every
+        // solve runs the full budget, so the metric is steps, not
+        // convergence luck
+        patience: max_iters,
+    };
+    let solves = if fast { 3 } else { 10 };
+    let mut iters = 0u64;
+    let start = Instant::now();
+    for _ in 0..solves {
+        let res = optimize(&net, &mut Sgp::new(), &phi0, &cfg)?;
+        iters += res.costs.len() as u64;
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let ips = iters as f64 / secs;
+    println!("sparse sgp: {iters} iterations in {secs:.3}s = {ips:.0} iters/s");
+    records.push(record("sparse_sgp_iterations_per_sec", ips, iters, secs));
+
+    // ---- planes 2+3: cold vs cache-hit sweep --------------------------
+    let dir = std::env::temp_dir().join(format!("cecflow-bench-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = SweepSpec {
+        scenarios: vec!["abilene".into(), "connected-er".into()],
+        seeds: if fast { vec![1, 2] } else { (1..=6).collect() },
+        algorithms: vec![Algorithm::Sgp, Algorithm::Gp],
+        backends: vec![CellBackend::Sparse],
+        schedules: vec![PatternSchedule::static_()],
+        rate_scale: 1.0,
+        run: RunConfig::quick(),
+        sim: None,
+        cache: Some(dir.display().to_string()),
+    };
+    let cells = spec.cells().len() as u64;
+
+    let start = Instant::now();
+    let cold = run_sweep(&spec, 2)?;
+    let cold_secs = start.elapsed().as_secs_f64();
+    let cold_cps = cells as f64 / cold_secs;
+    println!("cold sweep: {cells} cells in {cold_secs:.3}s = {cold_cps:.1} cells/s");
+    records.push(record("sweep_cells_cold_per_sec", cold_cps, cells, cold_secs));
+
+    let start = Instant::now();
+    let warm = run_sweep(&spec, 2)?;
+    let warm_secs = start.elapsed().as_secs_f64();
+    let warm_cps = cells as f64 / warm_secs;
+    let hits = warm
+        .cells
+        .iter()
+        .filter(|c| c.cache.is_some_and(|k| k.hit))
+        .count();
+    let saved: usize = warm
+        .cells
+        .iter()
+        .filter_map(|c| c.cache.map(|k| k.iters_saved))
+        .sum();
+    // saturated cells (∞ cost) are deliberately never stored; every
+    // finite cell must come back as a verified hit
+    let finite = warm
+        .cells
+        .iter()
+        .filter(|c| c.final_cost.is_finite())
+        .count();
+    assert_eq!(hits, finite, "warmed sweep must hit on every finite cell");
+    assert!(saved > 0, "hits must save iterations");
+    assert_eq!(
+        warm.fingerprint(),
+        cold.fingerprint(),
+        "cache-hit sweep drifted from the cold run"
+    );
+    println!(
+        "cache-hit sweep: {cells} cells in {warm_secs:.3}s = {warm_cps:.1} cells/s \
+         ({hits} hits, {saved} iterations saved, {:.1}x cold)",
+        warm_cps / cold_cps
+    );
+    records.push(record("sweep_cells_cache_hit_per_sec", warm_cps, cells, warm_secs));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // ---- trajectory record --------------------------------------------
+    let path = std::env::var("CECFLOW_BENCH_OUT").unwrap_or_else(|_| "BENCH_8.json".to_string());
+    if let Some(parent) = std::path::Path::new(&path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut doc = Json::obj();
+    doc.set("pr", Json::Num(8.0))
+        .set("bench", Json::Str("cache".to_string()))
+        .set("fast_mode", Json::Bool(fast))
+        .set("records", Json::Arr(records));
+    std::fs::write(&path, doc.pretty())?;
+    println!("wrote {path}");
+    Ok(())
+}

@@ -118,6 +118,7 @@ fn main() -> anyhow::Result<()> {
         rate_scale: 1.0,
         run: cfg,
         sim: None,
+        cache: None,
     };
     let serial = run_sweep(&spec, 1)?;
     let parallel = run_sweep(&spec, 4)?;

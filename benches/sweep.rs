@@ -42,6 +42,7 @@ fn main() -> anyhow::Result<()> {
         rate_scale: 1.0,
         run: RunConfig::quick(),
         sim: None,
+        cache: None,
     };
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())

@@ -25,6 +25,8 @@ fn main() -> anyhow::Result<()> {
         schedules: vec![PatternSchedule::static_()],
         rate_scale: 1.0,
         run: RunConfig::quick(),
+        sim: None,
+        cache: None,
     };
 
     // Workers pull cells from a shared cursor; per-cell results are

@@ -69,6 +69,19 @@ impl Algorithm {
         matches!(self, Algorithm::Sgp | Algorithm::Gp)
     }
 
+    /// Algorithms the strategy store ([`crate::coordinator::store`]) can
+    /// warm-start: the iterative optimizers that accept an *arbitrary*
+    /// feasible initial point. Same set as [`Algorithm::supports_dynamic`]
+    /// today, but named separately because the contracts differ — the
+    /// dynamic engine needs re-convergence across epochs, the store needs
+    /// [`crate::coordinator::run_algorithm_warm`] to accept a cached
+    /// strategy as the initial point. SPOO/LCOR construct their own
+    /// restricted starting points and the one-shot LPR has no iteration
+    /// to warm, so sweep cells for those never consult the store.
+    pub fn supports_warm_start(&self) -> bool {
+        matches!(self, Algorithm::Sgp | Algorithm::Gp)
+    }
+
     /// Algorithms whose outcome carries a concrete routing/offloading
     /// strategy for the request-level simulator
     /// ([`crate::sim::tasks::simulate`]) to walk. The one-shot LPR

@@ -16,7 +16,13 @@
 //! * [`AdaptiveRunner`] — re-optimizes every epoch either **warm-started**
 //!   from the previous epoch's converged strategy
 //!   ([`Strategy::retarget`]) or **cold-started** from the all-local
-//!   point, over the sparse, native-dense or PJRT evaluation routes.
+//!   point, over the sparse, native-dense or PJRT evaluation routes. The
+//!   epoch-to-epoch strategy carry rides the content-addressed strategy
+//!   store ([`super::store`]): by default a private in-memory carrier,
+//!   or — under `cecflow dynamic --cache-dir` — a filesystem store whose
+//!   verified entries let a re-run adopt previously converged epochs
+//!   without re-solving, and whose traces ship the per-epoch converged
+//!   strategies ([`EpochTrace::phi`]).
 //! * [`EpochTrace`] / [`DynamicTrace`] — per-epoch cost trajectories,
 //!   iterations to re-convergence, iters-to-1%, and the transient regret
 //!   paid between the shift and the new steady state.
@@ -28,9 +34,10 @@
 //! ([`super::sweep::SweepSpec::schedules`], CLI `cecflow sweep
 //! --schedules` / `cecflow dynamic`).
 
+use std::path::Path;
+
 use anyhow::{bail, Context, Result};
 
-use crate::algo::{Gp, Sgp};
 use crate::model::cost::CostFn;
 use crate::model::flows::compute_flows;
 use crate::model::network::Network;
@@ -40,8 +47,8 @@ use crate::util::rng::Pcg;
 
 use super::exec::grid::{Grid, GridCell, GridHasher};
 use super::exec::pool;
-use super::runner::RunResult;
-use super::{build_scenario_network, metrics, runner, Algorithm, CellBackend, RunConfig};
+use super::store::{self, FsStore, MemStore, StoredRun, StrategyStore};
+use super::{build_scenario_network, metrics, AlgoOutcome, Algorithm, CellBackend, RunConfig};
 
 /// The five time-varying task-pattern families, plus the degenerate
 /// `Static` (one epoch, no mutation — the classic fixed-scenario run).
@@ -395,6 +402,16 @@ pub struct EpochTrace {
     /// runner fell back to the all-local point (mirrors
     /// [`crate::sim::run_with_failure`]).
     pub warm_fallback: bool,
+    /// Strategy-store outcome for this epoch: `Some(true)` when a
+    /// verified entry was adopted instead of re-solving, `Some(false)`
+    /// for a counted miss, `None` when no external store was consulted
+    /// (the default path) — excluded from trace JSON in that case, so
+    /// store-less traces stay byte-identical to prior releases.
+    pub cache_hit: Option<bool>,
+    /// The epoch's converged strategy — shipped only on store-backed runs
+    /// (`--cache-dir`), carrying the strategy through the artifact;
+    /// `None` (and absent from JSON) otherwise.
+    pub phi: Option<Strategy>,
     /// Cost after each iteration of the epoch.
     pub costs: Vec<f64>,
 }
@@ -414,6 +431,12 @@ impl EpochTrace {
             .set("transient_regret", Json::Num(self.transient_regret))
             .set("warm_fallback", Json::Bool(self.warm_fallback))
             .set("costs", Json::from_f64_slice(&self.costs));
+        if let Some(hit) = self.cache_hit {
+            o.set("cache_hit", Json::Bool(hit));
+        }
+        if let Some(phi) = &self.phi {
+            o.set("strategy", phi.to_json());
+        }
         o
     }
 }
@@ -455,13 +478,24 @@ impl DynamicTrace {
 }
 
 /// One epoch's full output of the shared adaptive loop: the mutated
-/// network, the optimizer result (with its converged strategy), and the
-/// warm-start bookkeeping the [`EpochTrace`] reports.
+/// network, the (solved or store-adopted) cost trajectory with its
+/// converged strategy, and the warm-start bookkeeping the [`EpochTrace`]
+/// reports.
 struct EpochRun {
     net: Network,
-    res: RunResult,
+    algorithm: String,
+    costs: Vec<f64>,
+    iters_to_1pct: usize,
+    phi: Strategy,
     shift_cost: f64,
     warm_fallback: bool,
+    cache_hit: Option<bool>,
+}
+
+impl EpochRun {
+    fn final_cost(&self) -> f64 {
+        *self.costs.last().expect("epochs run at least one iteration")
+    }
 }
 
 /// Drives one scenario through a [`PatternSchedule`], re-optimizing every
@@ -513,6 +547,23 @@ impl AdaptiveRunner {
         self.run_network(scenario, &base, seed, schedule)
     }
 
+    /// [`AdaptiveRunner::run_scenario`] riding an external strategy store
+    /// (the `cecflow dynamic --cache-dir` path): each epoch consults the
+    /// store before solving — a verified entry is adopted wholesale — and
+    /// the per-epoch converged strategies ship in the trace
+    /// ([`EpochTrace::phi`]).
+    pub fn run_scenario_with_store(
+        &self,
+        scenario: &str,
+        seed: u64,
+        rate_scale: f64,
+        schedule: PatternSchedule,
+        store: &dyn StrategyStore,
+    ) -> Result<DynamicTrace> {
+        let base = build_scenario_network(scenario, seed, rate_scale)?;
+        self.run_network_with_store(scenario, &base, seed, schedule, Some(store))
+    }
+
     /// Run an already-built base network through `schedule`. `seed` keys
     /// the churn draws (scaling kinds are deterministic without it).
     pub fn run_network(
@@ -522,26 +573,43 @@ impl AdaptiveRunner {
         seed: u64,
         schedule: PatternSchedule,
     ) -> Result<DynamicTrace> {
-        let runs = self.run_epochs(name, base, seed, &schedule)?;
+        self.run_network_with_store(name, base, seed, schedule, None)
+    }
+
+    /// [`AdaptiveRunner::run_network`] with an optional external strategy
+    /// store. `store = None` is bit-for-bit `run_network`, and its trace
+    /// JSON is byte-identical to prior releases (no `cache_hit`, no
+    /// shipped strategies).
+    pub fn run_network_with_store(
+        &self,
+        name: &str,
+        base: &Network,
+        seed: u64,
+        schedule: PatternSchedule,
+        store: Option<&dyn StrategyStore>,
+    ) -> Result<DynamicTrace> {
+        let runs = self.run_epochs(name, base, seed, &schedule, store)?;
         let algorithm = runs
             .last()
-            .map(|r| r.res.algorithm.clone())
+            .map(|r| r.algorithm.clone())
             .unwrap_or_else(|| self.algorithm.name().to_string());
         let epochs = runs
             .into_iter()
             .enumerate()
-            .map(|(e, run)| EpochTrace {
-                epoch: e,
-                shift_cost: run.shift_cost,
-                final_cost: run.res.final_cost(),
-                iterations: run.res.costs.len(),
-                iters_to_1pct: run.res.iters_to_1pct,
-                transient_regret: metrics::transient_regret(
-                    &run.res.costs,
-                    run.res.final_cost(),
-                ),
-                warm_fallback: run.warm_fallback,
-                costs: run.res.costs,
+            .map(|(e, run)| {
+                let final_cost = run.final_cost();
+                EpochTrace {
+                    epoch: e,
+                    shift_cost: run.shift_cost,
+                    final_cost,
+                    iterations: run.costs.len(),
+                    iters_to_1pct: run.iters_to_1pct,
+                    transient_regret: metrics::transient_regret(&run.costs, final_cost),
+                    warm_fallback: run.warm_fallback,
+                    cache_hit: run.cache_hit,
+                    phi: run.cache_hit.is_some().then_some(run.phi),
+                    costs: run.costs,
+                }
             })
             .collect();
         Ok(DynamicTrace {
@@ -566,27 +634,88 @@ impl AdaptiveRunner {
         schedule: &PatternSchedule,
     ) -> Result<Vec<(Network, Strategy)>> {
         Ok(self
-            .run_epochs(name, base, seed, schedule)?
+            .run_epochs(name, base, seed, schedule, None)?
             .into_iter()
-            .map(|run| (run.net, run.res.phi))
+            .map(|run| (run.net, run.phi))
             .collect())
+    }
+
+    /// Store key of one epoch of this runner's trace: the pre-solve
+    /// identity `(scenario name, seed, algorithm, backend, schedule
+    /// label, start mode, stopping rule, epoch)` folded into the salted
+    /// store hasher (`store::key_hasher`). The base network itself is
+    /// deliberately not folded in ([`AdaptiveRunner::run_network`]
+    /// accepts a prebuilt base, e.g. under `--scale`): a key collision
+    /// across bases is caught by re-pricing verification and degrades to
+    /// a counted miss, never a wrong adoption.
+    fn epoch_store_key(
+        &self,
+        name: &str,
+        seed: u64,
+        schedule: &PatternSchedule,
+        epoch: usize,
+    ) -> u64 {
+        let mut h = store::key_hasher();
+        h.eat(b"dynamic-epoch");
+        h.eat(&[0]);
+        h.eat(name.as_bytes());
+        h.eat(&[0]);
+        h.eat(&seed.to_le_bytes());
+        h.eat(self.algorithm.name().as_bytes());
+        h.eat(&[0]);
+        h.eat(self.backend.name().as_bytes());
+        h.eat(&[0]);
+        h.eat(schedule.label().as_bytes());
+        h.eat(&[0]);
+        h.eat(&[self.warm as u8]);
+        h.eat(&(self.run.max_iters as u64).to_le_bytes());
+        h.eat(&self.run.tol.to_bits().to_le_bytes());
+        h.eat(&(self.run.patience as u64).to_le_bytes());
+        h.eat(&(epoch as u64).to_le_bytes());
+        h.finish()
     }
 
     /// The shared epoch loop: mutate, warm-start (with infeasible-warm
     /// fallback to all-local), re-optimize, carry the strategy forward.
+    ///
+    /// The epoch-to-epoch carry rides a [`StrategyStore`]: every solved
+    /// epoch is saved under `epoch_store_key` and the next epoch's warm
+    /// start loads it back. Without an external store the carrier is a
+    /// private [`MemStore`], reproducing the old `runs.last()` warm path
+    /// bit for bit (entries round-trip bits-exact). With one
+    /// (`--cache-dir`), each epoch additionally *consults* the store
+    /// before solving: a verified entry for the epoch itself is adopted
+    /// wholesale — its stored trajectory is reported and the solve is
+    /// skipped — while the starting strategy, shift cost and fallback
+    /// bookkeeping are recomputed exactly as in a solving run, so the
+    /// trace keeps fingerprint equality with the store-less run.
     fn run_epochs(
         &self,
         name: &str,
         base: &Network,
         seed: u64,
         schedule: &PatternSchedule,
+        external: Option<&dyn StrategyStore>,
     ) -> Result<Vec<EpochRun>> {
+        let carrier = MemStore::new();
+        let store: &dyn StrategyStore = external.unwrap_or(&carrier);
         let mut runs: Vec<EpochRun> = Vec::with_capacity(schedule.epochs());
         for e in 0..schedule.epochs() {
             let net = schedule.network_at(base, seed, e);
             let mut warm_fallback = false;
             let mut phi0 = match runs.last() {
-                Some(prev) if self.warm => prev.res.phi.retarget(&prev.net, &net),
+                Some(prev) if self.warm => {
+                    // the carried point comes from the store (saved by the
+                    // previous loop turn — identical bits to `prev.phi`);
+                    // a foreign, stale or unsaved entry falls back to the
+                    // in-hand strategy
+                    let carried = store
+                        .load(self.epoch_store_key(name, seed, schedule, e - 1))
+                        .filter(|entry| entry.verifies_on(&prev.net))
+                        .map(|entry| entry.phi)
+                        .unwrap_or_else(|| prev.phi.clone());
+                    carried.retarget(&prev.net, &net)
+                }
                 _ => Strategy::local_compute_init(&net),
             };
             let mut shift_cost = compute_flows(&net, &phi0)
@@ -608,44 +737,80 @@ impl AdaptiveRunner {
                 shift_cost = cold_cost;
                 warm_fallback = true;
             }
-            let res = self
-                .optimize_epoch(&net, &phi0)
-                .with_context(|| format!("optimizing epoch {e} of schedule {}", schedule.label()))?;
+            // Only an external store is consulted for the epoch itself —
+            // the private carrier cannot hold epoch `e` before it runs.
+            let key = self.epoch_store_key(name, seed, schedule, e);
+            let mut cache_hit = external.map(|_| false);
+            let mut adopted: Option<StoredRun> = None;
+            if external.is_some() {
+                match store.load(key) {
+                    Some(entry) if entry.verifies_on(&net) => {
+                        cache_hit = Some(true);
+                        adopted = Some(entry);
+                    }
+                    Some(_) => eprintln!(
+                        "warning: strategy store: entry {key:016x} failed re-pricing \
+                         verification; re-running epoch {e} cold"
+                    ),
+                    None => {}
+                }
+            }
+            let (algorithm, costs, iters_to_1pct, phi) = match adopted {
+                Some(entry) => {
+                    let costs = entry.costs();
+                    (entry.algorithm, costs, entry.iters_to_1pct, entry.phi)
+                }
+                None => {
+                    let out = self.optimize_epoch(&net, &phi0).with_context(|| {
+                        format!("optimizing epoch {e} of schedule {}", schedule.label())
+                    })?;
+                    let iters_to_1pct = metrics::iters_to_1pct(&out.costs);
+                    let phi = out
+                        .phi
+                        .context("iterative dynamic optimizer returned no strategy")?;
+                    // best-effort save, sealed with the re-priced cost so
+                    // a later consult can verify; a saturated run is not
+                    // worth warming from and is skipped
+                    match compute_flows(&net, &phi) {
+                        Ok(f) if f.total_cost.is_finite() => store.save(
+                            key,
+                            &StoredRun::capture(
+                                &out.algorithm,
+                                &out.costs,
+                                iters_to_1pct,
+                                f.total_cost,
+                                &phi,
+                            ),
+                        ),
+                        _ => {}
+                    }
+                    (out.algorithm, out.costs, iters_to_1pct, phi)
+                }
+            };
             runs.push(EpochRun {
                 net,
-                res,
+                algorithm,
+                costs,
+                iters_to_1pct,
+                phi,
                 shift_cost,
                 warm_fallback,
+                cache_hit,
             });
         }
         Ok(runs)
     }
 
-    /// One epoch's optimization from an explicit starting strategy. A
-    /// fresh optimizer per epoch keeps epochs independent (and matches the
+    /// One epoch's optimization from an explicit starting strategy,
+    /// routed through the shared warm entry point
+    /// ([`super::run_algorithm_with_backend_warm`]) — the same
+    /// sparse / native / pjrt plumbing the sweep cells use. A fresh
+    /// optimizer per epoch keeps epochs independent (and matches the
     /// Fig. 5b failure driver); the *strategy* is what carries across
     /// epochs.
-    fn optimize_epoch(&self, net: &Network, phi0: &Strategy) -> Result<RunResult> {
+    fn optimize_epoch(&self, net: &Network, phi0: &Strategy) -> Result<AlgoOutcome> {
         match (self.algorithm, self.backend) {
-            (Algorithm::Sgp, CellBackend::Sparse) => {
-                let mut sgp = Sgp::new();
-                runner::optimize(net, &mut sgp, phi0, &self.run)
-            }
-            (Algorithm::Sgp, CellBackend::Native) => {
-                let mut sgp = Sgp::new();
-                runner::optimize_accelerated(
-                    net,
-                    &mut sgp,
-                    phi0,
-                    &self.run,
-                    &crate::runtime::NativeBackend,
-                )
-            }
-            (Algorithm::Sgp, CellBackend::Pjrt) => optimize_epoch_pjrt(net, phi0, &self.run),
-            (Algorithm::Gp, CellBackend::Sparse) => {
-                let mut gp = Gp::new(1.0);
-                runner::optimize(net, &mut gp, phi0, &self.run)
-            }
+            (Algorithm::Sgp, _) | (Algorithm::Gp, CellBackend::Sparse) => {}
             (algo, backend) => bail!(
                 "the dynamic engine re-optimizes sgp (any backend) and gp (sparse); got {} \
                  on the {} backend",
@@ -653,25 +818,8 @@ impl AdaptiveRunner {
                 backend.name()
             ),
         }
+        super::run_algorithm_with_backend_warm(net, self.algorithm, self.backend, &self.run, Some(phi0))
     }
-}
-
-#[cfg(feature = "pjrt")]
-fn optimize_epoch_pjrt(net: &Network, phi0: &Strategy, cfg: &RunConfig) -> Result<RunResult> {
-    use crate::runtime::{resolve_artifacts_dir, DenseEvaluator, Engine};
-    let engine = Engine::load(&resolve_artifacts_dir()?)?;
-    let eval = DenseEvaluator::new(&engine);
-    let mut sgp = Sgp::new();
-    runner::optimize_accelerated(net, &mut sgp, phi0, cfg, &eval)
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn optimize_epoch_pjrt(_net: &Network, _phi0: &Strategy, _cfg: &RunConfig) -> Result<RunResult> {
-    anyhow::bail!(
-        "dynamic run requested the pjrt backend, but cecflow was built without the `pjrt` \
-         cargo feature — rebuild with `--features pjrt` (and run `make artifacts`), or \
-         select backend `native`"
-    )
 }
 
 /// One cell of the `cecflow dynamic` grid: a start mode (warm or cold)
@@ -712,6 +860,11 @@ pub struct DynamicSpec {
     pub run: RunConfig,
     /// Start modes to trace, in output order (`true` = warm).
     pub modes: Vec<bool>,
+    /// Strategy-store directory (CLI `--cache-dir`): when set, every mode
+    /// cell consults/feeds an [`FsStore`] there and its trace ships the
+    /// per-epoch converged strategies. `None` keeps the output
+    /// byte-identical to a store-less build.
+    pub cache: Option<String>,
 }
 
 impl DynamicSpec {
@@ -730,6 +883,13 @@ impl DynamicSpec {
             !grid.is_empty(),
             "dynamic run needs at least one start mode (warm or cold)"
         );
+        let fs = match &self.cache {
+            Some(dir) => {
+                anyhow::ensure!(!dir.is_empty(), "--cache-dir needs a non-empty directory path");
+                Some(FsStore::open(Path::new(dir))?)
+            }
+            None => None,
+        };
         let cells = grid.indexed();
         pool::run_cells(
             &cells,
@@ -741,7 +901,21 @@ impl DynamicSpec {
                     warm: cell.warm,
                     run: self.run,
                 };
-                runner.run_scenario(&self.scenario, self.seed, self.rate_scale, self.schedule)
+                match &fs {
+                    Some(s) => runner.run_scenario_with_store(
+                        &self.scenario,
+                        self.seed,
+                        self.rate_scale,
+                        self.schedule,
+                        s,
+                    ),
+                    None => runner.run_scenario(
+                        &self.scenario,
+                        self.seed,
+                        self.rate_scale,
+                        self.schedule,
+                    ),
+                }
             },
             None,
         )
@@ -957,6 +1131,7 @@ mod tests {
             schedule,
             run: cfg,
             modes: vec![true, false],
+            cache: None,
         };
         let traces = spec.run(2).unwrap();
         assert_eq!(traces.len(), 2);
@@ -979,6 +1154,57 @@ mod tests {
             ..spec
         };
         assert!(empty.run(1).is_err());
+    }
+
+    #[test]
+    fn store_backed_rerun_adopts_epochs_bit_for_bit() {
+        let cfg = RunConfig::quick();
+        let s = PatternSchedule::parse("step:3:1.5").unwrap();
+        let runner = AdaptiveRunner::warm(cfg);
+        let bits = |t: &DynamicTrace| -> Vec<u64> {
+            t.epochs.iter().map(|e| e.final_cost.to_bits()).collect()
+        };
+        let plain = runner.run_scenario("abilene", 1, 1.0, s).unwrap();
+        assert!(plain
+            .epochs
+            .iter()
+            .all(|e| e.cache_hit.is_none() && e.phi.is_none()));
+        let doc = plain.to_json();
+        let e0 = &doc.get("epochs").as_arr().unwrap()[0];
+        assert!(
+            e0.get("strategy").as_obj().is_none(),
+            "store-less trace shipped a strategy"
+        );
+        assert!(e0.get("cache_hit").as_bool().is_none());
+
+        // first store-backed run: all misses, same bits, store populated
+        let store = MemStore::new();
+        let first = runner
+            .run_scenario_with_store("abilene", 1, 1.0, s, &store)
+            .unwrap();
+        assert_eq!(bits(&first), bits(&plain), "store participation changed the trace");
+        assert!(first.epochs.iter().all(|e| e.cache_hit == Some(false)));
+        assert!(first.epochs.iter().all(|e| e.phi.is_some()));
+        assert_eq!(store.len(), 3);
+
+        // second run: every epoch adopted, full per-epoch bit equality
+        let second = runner
+            .run_scenario_with_store("abilene", 1, 1.0, s, &store)
+            .unwrap();
+        assert!(second.epochs.iter().all(|e| e.cache_hit == Some(true)));
+        for (a, b) in plain.epochs.iter().zip(&second.epochs) {
+            assert_eq!(a.shift_cost.to_bits(), b.shift_cost.to_bits(), "epoch {}", a.epoch);
+            assert_eq!(a.iterations, b.iterations, "epoch {}", a.epoch);
+            assert_eq!(a.iters_to_1pct, b.iters_to_1pct, "epoch {}", a.epoch);
+            assert_eq!(a.warm_fallback, b.warm_fallback, "epoch {}", a.epoch);
+            let ca: Vec<u64> = a.costs.iter().map(|c| c.to_bits()).collect();
+            let cb: Vec<u64> = b.costs.iter().map(|c| c.to_bits()).collect();
+            assert_eq!(ca, cb, "epoch {}", a.epoch);
+        }
+        let sdoc = second.to_json();
+        let se0 = &sdoc.get("epochs").as_arr().unwrap()[0];
+        assert!(se0.get("strategy").as_obj().is_some(), "store run must ship strategies");
+        assert_eq!(se0.get("cache_hit").as_bool(), Some(true));
     }
 
     #[test]

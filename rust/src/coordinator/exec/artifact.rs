@@ -18,6 +18,13 @@
 //!   single corrupt artifact must not survive to a merge that happens to
 //!   cover the grid.
 //!
+//! Items are free to ship more than their fingerprint: a store-enabled
+//! sweep cell ([`crate::coordinator::store`]) carries its converged
+//! strategy and cache outcome through the artifact, exactly-bits like
+//! everything else. The strategy-store configuration folds into the grid
+//! hash as an enabled bit, so cached and uncached shard artifacts refuse
+//! to merge via the hash check above.
+//!
 //! Exact-bits helpers ([`f64_bits_hex`] / [`parse_f64_bits_hex`]) live
 //! here because every artifact and protocol writer needs them: JSON
 //! numbers cannot carry `±∞` and decimal round-trips are not part of the

@@ -10,6 +10,7 @@ pub mod metrics;
 pub mod report;
 pub mod runner;
 pub mod scenario;
+pub mod store;
 pub mod sweep;
 pub mod sweep_report;
 
@@ -27,9 +28,10 @@ pub use dynamics::{
 };
 pub use runner::{optimize, optimize_accelerated, RunConfig, RunResult};
 pub use scenario::{connected_er_servers, CostKind, Scenario, ScenarioSpec};
+pub use store::{FsStore, MemStore, StoredRun, StrategyStore};
 pub use sweep::{
-    run_sweep, run_sweep_shard, run_sweep_sharded, CellDivergence, CellResult, CellSim,
-    GroupSummary, ShardOptions, SimSweepConfig, SweepCell, SweepReport, SweepSpec,
+    run_sweep, run_sweep_shard, run_sweep_sharded, CellCache, CellDivergence, CellResult,
+    CellSim, GroupSummary, ShardOptions, SimSweepConfig, SweepCell, SweepReport, SweepSpec,
 };
 
 /// Unified outcome across iterative algorithms and the one-shot LPR.
@@ -52,8 +54,40 @@ pub struct AlgoOutcome {
 
 /// Run one algorithm on a network to steady state and collect the §V
 /// metrics. This is the single entry point the Fig. 4 / 5c / 5d benches
-/// loop over.
+/// loop over. Always the shortest-path cold start — the warm variant is
+/// [`run_algorithm_warm`].
 pub fn run_algorithm(net: &Network, algo: Algorithm, cfg: &RunConfig) -> Result<AlgoOutcome> {
+    run_algorithm_warm(net, algo, cfg, None)
+}
+
+/// [`run_algorithm`] with an optional warm start: when `warm` is given,
+/// the iterative optimizers (SGP, GP) start from it instead of the
+/// shortest-path cold init [`Strategy::local_compute_init`] — the
+/// adaptive engine ([`dynamics`]) and the strategy store ([`store`])
+/// route through here. `warm = None` is bit-for-bit [`run_algorithm`].
+///
+/// Warm starts are only defined for the algorithms that accept an
+/// arbitrary feasible initial point ([`Algorithm::supports_warm_start`]):
+/// SPOO/LCOR construct their own restricted starting points and LPR is
+/// one-shot, so passing `warm` with those is an error, as is a strategy
+/// whose shape does not match `net`.
+pub fn run_algorithm_warm(
+    net: &Network,
+    algo: Algorithm,
+    cfg: &RunConfig,
+    warm: Option<&Strategy>,
+) -> Result<AlgoOutcome> {
+    if let Some(w) = warm {
+        anyhow::ensure!(
+            algo.supports_warm_start(),
+            "{} cannot be warm-started (only sgp and gp accept an arbitrary initial point)",
+            algo.name()
+        );
+        anyhow::ensure!(
+            w.matches(net),
+            "warm-start strategy shape does not match the network"
+        );
+    }
     match algo {
         Algorithm::Lpr => {
             let start = std::time::Instant::now();
@@ -70,7 +104,7 @@ pub fn run_algorithm(net: &Network, algo: Algorithm, cfg: &RunConfig) -> Result<
             })
         }
         Algorithm::Sgp | Algorithm::Gp => {
-            let phi0 = Strategy::local_compute_init(net);
+            let phi0 = warm_or_cold(net, warm);
             let res = match algo {
                 Algorithm::Sgp => {
                     let mut opt = Sgp::new();
@@ -93,6 +127,16 @@ pub fn run_algorithm(net: &Network, algo: Algorithm, cfg: &RunConfig) -> Result<
             let res = optimize(net, &mut opt, &phi0, cfg)?;
             finish_iterative_named(net, res, "lcor")
         }
+    }
+}
+
+/// The warm-start decision point shared by every route: an explicit
+/// initial strategy when one is supplied (callers have already validated
+/// shape), else the paper's shortest-path cold init.
+fn warm_or_cold(net: &Network, warm: Option<&Strategy>) -> Strategy {
+    match warm {
+        Some(w) => w.clone(),
+        None => Strategy::local_compute_init(net),
     }
 }
 
@@ -139,8 +183,22 @@ pub fn run_algorithm_with_backend(
     backend: CellBackend,
     cfg: &RunConfig,
 ) -> Result<AlgoOutcome> {
+    run_algorithm_with_backend_warm(net, algo, backend, cfg, None)
+}
+
+/// [`run_algorithm_with_backend`] with an optional warm start, covering
+/// all three routes (sparse / native / pjrt) — see [`run_algorithm_warm`]
+/// for the warm-start rules. `warm = None` is bit-for-bit
+/// [`run_algorithm_with_backend`].
+pub fn run_algorithm_with_backend_warm(
+    net: &Network,
+    algo: Algorithm,
+    backend: CellBackend,
+    cfg: &RunConfig,
+    warm: Option<&Strategy>,
+) -> Result<AlgoOutcome> {
     if backend == CellBackend::Sparse {
-        return run_algorithm(net, algo, cfg);
+        return run_algorithm_warm(net, algo, cfg, warm);
     }
     anyhow::ensure!(
         algo == Algorithm::Sgp,
@@ -148,9 +206,15 @@ pub fn run_algorithm_with_backend(
         backend.name(),
         algo.name()
     );
+    if let Some(w) = warm {
+        anyhow::ensure!(
+            w.matches(net),
+            "warm-start strategy shape does not match the network"
+        );
+    }
     match backend {
         CellBackend::Native => {
-            let phi0 = Strategy::local_compute_init(net);
+            let phi0 = warm_or_cold(net, warm);
             let mut sgp = Sgp::new();
             let res = runner::optimize_accelerated(
                 net,
@@ -161,29 +225,33 @@ pub fn run_algorithm_with_backend(
             )?;
             finish_iterative(net, res)
         }
-        CellBackend::Pjrt => run_sgp_pjrt(net, cfg),
+        CellBackend::Pjrt => run_sgp_pjrt(net, cfg, warm),
         CellBackend::Sparse => unreachable!("handled above"),
     }
 }
 
 #[cfg(feature = "pjrt")]
-fn run_sgp_pjrt(net: &Network, cfg: &RunConfig) -> Result<AlgoOutcome> {
+fn run_sgp_pjrt(net: &Network, cfg: &RunConfig, warm: Option<&Strategy>) -> Result<AlgoOutcome> {
     use crate::runtime::{resolve_artifacts_dir, DenseEvaluator, Engine};
     // Engine::load compiles every size class; loading per cell keeps the
     // sweep workers independent (no shared client across threads). Cache
     // at engine level once the real xla client's thread-safety is pinned.
     let engine = Engine::load(&resolve_artifacts_dir()?)?;
     let eval = DenseEvaluator::new(&engine);
-    let phi0 = Strategy::local_compute_init(net);
+    let phi0 = warm_or_cold(net, warm);
     let mut sgp = Sgp::new();
     let res = runner::optimize_accelerated(net, &mut sgp, &phi0, cfg, &eval)?;
     finish_iterative(net, res)
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn run_sgp_pjrt(_net: &Network, _cfg: &RunConfig) -> Result<AlgoOutcome> {
+fn run_sgp_pjrt(
+    _net: &Network,
+    _cfg: &RunConfig,
+    _warm: Option<&Strategy>,
+) -> Result<AlgoOutcome> {
     anyhow::bail!(
-        "sweep cell requested the pjrt backend, but cecflow was built without the \
+        "this run requested the pjrt backend, but cecflow was built without the \
          `pjrt` cargo feature — rebuild with `--features pjrt` (and run `make \
          artifacts`), or select backend `native`"
     )
@@ -271,6 +339,92 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("sgp"), "{err}");
+    }
+
+    #[test]
+    fn warm_none_is_bitwise_the_cold_path() {
+        let net = build_scenario_network("abilene", 3, 1.0).unwrap();
+        let cfg = RunConfig::quick();
+        for &algo in Algorithm::all() {
+            let cold = run_algorithm(&net, algo, &cfg).unwrap();
+            let warm = run_algorithm_warm(&net, algo, &cfg, None).unwrap();
+            assert_eq!(cold.final_cost.to_bits(), warm.final_cost.to_bits());
+            assert_eq!(cold.iterations, warm.iterations);
+        }
+    }
+
+    #[test]
+    fn warm_start_from_converged_point_reconverges_fast() {
+        let net = build_scenario_network("abilene", 3, 1.0).unwrap();
+        let cfg = RunConfig::quick();
+        for algo in [Algorithm::Sgp, Algorithm::Gp] {
+            let cold = run_algorithm(&net, algo, &cfg).unwrap();
+            let warm =
+                run_algorithm_warm(&net, algo, &cfg, cold.phi.as_ref()).unwrap();
+            assert!(
+                warm.iterations < cold.iterations,
+                "{}: warm {} !< cold {}",
+                algo.name(),
+                warm.iterations,
+                cold.iterations
+            );
+            // re-convergence stays at the cold optimum (costs are within
+            // tolerance; exact-bits equality is the *store's* contract and
+            // is enforced by re-pricing, not by re-running)
+            let rel = (warm.final_cost - cold.final_cost).abs() / cold.final_cost.abs();
+            assert!(rel < 1e-4, "{}: drifted {rel}", algo.name());
+        }
+    }
+
+    #[test]
+    fn warm_start_rejected_for_fixed_init_algorithms() {
+        let net = build_scenario_network("abilene", 3, 1.0).unwrap();
+        let cfg = RunConfig::quick();
+        let phi = Strategy::local_compute_init(&net);
+        for algo in [Algorithm::Lpr, Algorithm::Spoo, Algorithm::Lcor] {
+            let err = run_algorithm_warm(&net, algo, &cfg, Some(&phi))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("warm"), "{err}");
+        }
+    }
+
+    #[test]
+    fn warm_start_rejects_shape_mismatch() {
+        let net = build_scenario_network("abilene", 3, 1.0).unwrap();
+        let other = build_scenario_network("geant", 3, 1.0).unwrap();
+        let phi = Strategy::local_compute_init(&other);
+        let cfg = RunConfig::quick();
+        for backend in [CellBackend::Sparse, CellBackend::Native] {
+            let err = run_algorithm_with_backend_warm(
+                &net,
+                Algorithm::Sgp,
+                backend,
+                &cfg,
+                Some(&phi),
+            )
+            .unwrap_err()
+            .to_string();
+            assert!(err.contains("shape"), "{err}");
+        }
+    }
+
+    #[test]
+    fn warm_native_route_runs_the_dense_loop() {
+        let net = build_scenario_network("abilene", 3, 1.0).unwrap();
+        let cfg = RunConfig::quick();
+        let cold =
+            run_algorithm_with_backend(&net, Algorithm::Sgp, CellBackend::Native, &cfg).unwrap();
+        let warm = run_algorithm_with_backend_warm(
+            &net,
+            Algorithm::Sgp,
+            CellBackend::Native,
+            &cfg,
+            cold.phi.as_ref(),
+        )
+        .unwrap();
+        assert_eq!(warm.algorithm, "sgp-native");
+        assert!(warm.iterations < cold.iterations);
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -1,0 +1,500 @@
+//! Content-addressed store of converged strategies — the warm-start layer
+//! (ROADMAP item 4b, "Exploiting Storage for Computing", arxiv 2401.03620).
+//!
+//! A [`StoredRun`] is the reusable residue of one cold solve: the
+//! converged strategy plus the exact cost trajectory that produced it,
+//! everything serialized bits-exact ([`Strategy::to_json`]). Entries are
+//! addressed by a caller-built FNV key over the *pre-solve* identity of
+//! the work (the cell-identity prefix of the sweep fingerprint: scenario,
+//! seed, algorithm, backend, schedule, stopping rule, rate scale — see
+//! `sweep::cell_store_key` and `dynamics::epoch_store_key`), because the
+//! consult happens before any solving.
+//!
+//! Two implementations of [`StrategyStore`]:
+//!
+//! * [`MemStore`] — in-process, the default carrier between dynamic
+//!   epochs (`AdaptiveRunner::run_epochs` rides it instead of its old
+//!   bespoke `runs.last()` warm path);
+//! * [`FsStore`] — one file per key under `--cache-dir`, shared by sweep
+//!   shard children and surviving across sessions.
+//!
+//! **Failure contract:** a corrupt, truncated, tampered or wrong-key
+//! entry is a counted *miss* with a stderr warning — never a panic and
+//! never an error. **Determinism contract:** a hit is only *adopted*
+//! after verification: the stored strategy is re-priced on the freshly
+//! built network and must reproduce the stored cost bits exactly
+//! ([`StoredRun::price_bits`]); an entry that fails re-pricing is
+//! discarded and the cell re-runs cold, counted as a verification miss
+//! (`sweep::run_cell`). Artifacts therefore keep fingerprint equality
+//! whether the cache is cold, warm, or hostile.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::model::flows::compute_flows;
+use crate::model::network::Network;
+use crate::model::strategy::Strategy;
+use crate::util::json::Json;
+
+use super::exec::artifact::{parse_u64_hex, u64_hex};
+use super::exec::GridHasher;
+
+/// Format salt folded into every store key (via [`key_hasher`]): bumping
+/// it orphans all existing entries when the entry layout changes, turning
+/// a format migration into plain misses instead of parse warnings.
+const STORE_FORMAT: &[u8] = b"cecflow-strategy-store-v1";
+
+/// A [`GridHasher`] pre-seeded with the store format salt — the starting
+/// point for every store key.
+pub fn key_hasher() -> GridHasher {
+    let mut h = GridHasher::new();
+    h.eat(STORE_FORMAT);
+    h
+}
+
+/// The stored residue of one converged cold solve.
+#[derive(Clone, Debug)]
+pub struct StoredRun {
+    /// Label of the optimizer that produced the run (`"sgp"`,
+    /// `"sgp-native"`, …) — informational; the key already pins it.
+    pub algorithm: String,
+    /// Exact per-iteration cost bits; `last()` is the final cost the
+    /// adopting cell reports, `len()` the iteration count a verified hit
+    /// avoids re-running.
+    pub cost_bits: Vec<u64>,
+    /// First iteration (1-based) within 1% of the final cost.
+    pub iters_to_1pct: usize,
+    /// The verification seal: `compute_flows(net, phi).total_cost` bits
+    /// at save time. A consult re-prices the stored strategy on the
+    /// freshly built network and must reproduce these bits exactly —
+    /// re-pricing is a pure function of (network, strategy) bits, so an
+    /// honest entry always verifies, while a stale or colliding one
+    /// (which internal digests cannot catch) fails and falls back to a
+    /// cold solve. This is deliberately *not* `cost_bits.last()`: the
+    /// optimizer's in-step cost accounting need not be bit-identical to
+    /// a fresh flow evaluation.
+    pub price_bits: u64,
+    /// The converged strategy (digest-sealed through serde).
+    pub phi: Strategy,
+}
+
+impl StoredRun {
+    pub fn iterations(&self) -> usize {
+        self.cost_bits.len()
+    }
+
+    pub fn final_cost_bits(&self) -> u64 {
+        *self.cost_bits.last().expect("entry validated non-empty")
+    }
+
+    pub fn final_cost(&self) -> f64 {
+        f64::from_bits(self.final_cost_bits())
+    }
+
+    pub fn costs(&self) -> Vec<f64> {
+        self.cost_bits.iter().map(|&b| f64::from_bits(b)).collect()
+    }
+
+    /// Re-pricing verification against a freshly built network: the
+    /// stored strategy must fit the network's shape and re-pricing it
+    /// must reproduce [`StoredRun::price_bits`] exactly. Pure in
+    /// (network, strategy) bits, so an honest entry always verifies; a
+    /// stale or key-colliding one fails and the caller re-runs cold.
+    pub fn verifies_on(&self, net: &Network) -> bool {
+        self.phi.matches(net)
+            && compute_flows(net, &self.phi)
+                .map(|f| f.total_cost.to_bits() == self.price_bits)
+                .unwrap_or(false)
+    }
+
+    /// Capture a finished run: the cost trajectory (exact bits), the
+    /// 1%-convergence marker, the re-pricing seal and the converged
+    /// strategy.
+    pub fn capture(
+        algorithm: &str,
+        costs: &[f64],
+        iters_to_1pct: usize,
+        price: f64,
+        phi: &Strategy,
+    ) -> StoredRun {
+        assert!(!costs.is_empty(), "cannot store an empty run");
+        StoredRun {
+            algorithm: algorithm.to_string(),
+            cost_bits: costs.iter().map(|c| c.to_bits()).collect(),
+            iters_to_1pct,
+            price_bits: price.to_bits(),
+            phi: phi.clone(),
+        }
+    }
+
+    /// FNV-1a seal over every field (including the strategy's own
+    /// digest), embedded in the JSON form: editing *any* field of an
+    /// entry on disk without re-forging this is detected on load.
+    pub fn entry_digest(&self) -> u64 {
+        let mut h = key_hasher();
+        h.eat(self.algorithm.as_bytes());
+        h.eat(&[0]);
+        h.eat(&(self.iters_to_1pct as u64).to_le_bytes());
+        for &b in &self.cost_bits {
+            h.eat(&b.to_le_bytes());
+        }
+        h.eat(&self.price_bits.to_le_bytes());
+        h.eat(&self.phi.digest().to_le_bytes());
+        h.finish()
+    }
+
+    /// Serialize with the key stamped in, so an entry copied under another
+    /// key's address is detected as tampering on load.
+    pub fn to_json(&self, key: u64) -> Json {
+        let mut o = Json::obj();
+        o.set("key", Json::Str(u64_hex(key)))
+            .set("algorithm", Json::Str(self.algorithm.clone()))
+            .set("iters_to_1pct", Json::Num(self.iters_to_1pct as f64))
+            .set(
+                "cost_bits",
+                Json::Arr(
+                    self.cost_bits
+                        .iter()
+                        .map(|&b| Json::Str(u64_hex(b)))
+                        .collect(),
+                ),
+            )
+            .set("price_bits", Json::Str(u64_hex(self.price_bits)))
+            .set("strategy", self.phi.to_json())
+            .set("entry_digest", Json::Str(u64_hex(self.entry_digest())));
+        o
+    }
+
+    /// Strict parse + integrity checks (the store impls downgrade any
+    /// error here to a counted miss): key must match the address, the
+    /// trajectory must be non-empty with a consistent 1% marker, the
+    /// strategy digest must verify, and the whole-entry digest must
+    /// match.
+    pub fn from_json(doc: &Json, key: u64) -> Result<StoredRun> {
+        let stored_key = doc
+            .get("key")
+            .as_str()
+            .context("store entry missing key")?;
+        let stored_key = parse_u64_hex(stored_key)?;
+        anyhow::ensure!(
+            stored_key == key,
+            "store entry key {stored_key:016x} does not match its address {key:016x}"
+        );
+        let algorithm = doc
+            .get("algorithm")
+            .as_str()
+            .context("store entry missing algorithm")?
+            .to_string();
+        let cost_bits = doc
+            .get("cost_bits")
+            .as_arr()
+            .context("store entry missing cost_bits")?
+            .iter()
+            .map(|b| parse_u64_hex(b.as_str().context("non-string cost bits")?))
+            .collect::<Result<Vec<u64>>>()?;
+        anyhow::ensure!(!cost_bits.is_empty(), "store entry has an empty trajectory");
+        let iters_to_1pct = doc
+            .get("iters_to_1pct")
+            .as_usize()
+            .context("store entry missing iters_to_1pct")?;
+        anyhow::ensure!(
+            (1..=cost_bits.len()).contains(&iters_to_1pct),
+            "store entry iters_to_1pct {iters_to_1pct} outside 1..={}",
+            cost_bits.len()
+        );
+        let price_bits = parse_u64_hex(
+            doc.get("price_bits")
+                .as_str()
+                .context("store entry missing price_bits")?,
+        )?;
+        let phi = Strategy::from_json(doc.get("strategy")).context("store entry strategy")?;
+        let run = StoredRun {
+            algorithm,
+            cost_bits,
+            iters_to_1pct,
+            price_bits,
+            phi,
+        };
+        let want = parse_u64_hex(
+            doc.get("entry_digest")
+                .as_str()
+                .context("store entry missing entry_digest")?,
+        )?;
+        let got = run.entry_digest();
+        anyhow::ensure!(
+            got == want,
+            "store entry digest mismatch: stored {want:016x}, recomputed {got:016x}"
+        );
+        Ok(run)
+    }
+}
+
+/// A content-addressed strategy store. `load` returning `None` means
+/// *miss* — absent, unreadable, or failed integrity checks (with a
+/// warning); `save` is best-effort and never fails the run.
+pub trait StrategyStore: Send + Sync {
+    fn load(&self, key: u64) -> Option<StoredRun>;
+    fn save(&self, key: u64, run: &StoredRun);
+    /// Human-readable identity for logs ("memory", "dir /tmp/cache").
+    fn describe(&self) -> String;
+}
+
+/// In-process store. Entries are kept *serialized* so `load` exercises
+/// the exact same parse-and-verify path as [`FsStore`] — MemStore and
+/// FsStore are observably identical modulo persistence.
+#[derive(Default)]
+pub struct MemStore {
+    map: Mutex<HashMap<u64, String>>,
+}
+
+impl MemStore {
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("store mutex").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl StrategyStore for MemStore {
+    fn load(&self, key: u64) -> Option<StoredRun> {
+        let text = self.map.lock().expect("store mutex").get(&key).cloned()?;
+        match Json::parse(&text)
+            .map_err(anyhow::Error::from)
+            .and_then(|doc| StoredRun::from_json(&doc, key))
+        {
+            Ok(run) => Some(run),
+            Err(err) => {
+                eprintln!(
+                    "warning: strategy store: discarding in-memory entry {:016x}: {err:#}",
+                    key
+                );
+                None
+            }
+        }
+    }
+
+    fn save(&self, key: u64, run: &StoredRun) {
+        self.map
+            .lock()
+            .expect("store mutex")
+            .insert(key, run.to_json(key).dump());
+    }
+
+    fn describe(&self) -> String {
+        "memory".to_string()
+    }
+}
+
+/// Filesystem store: one `<key-hex>.json` per entry under a directory
+/// (the `--cache-dir` flag), shared by concurrent sweep shard children —
+/// writes go through a rename so a reader never sees a half-written
+/// entry, and two children racing on one key write identical bytes
+/// (entries are deterministic), so either winner is correct.
+pub struct FsStore {
+    dir: PathBuf,
+}
+
+impl FsStore {
+    /// Open (creating if needed) a cache directory.
+    pub fn open(dir: &Path) -> Result<FsStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating cache dir {dir:?}"))?;
+        Ok(FsStore {
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    fn entry_path(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("{key:016x}.json"))
+    }
+}
+
+impl StrategyStore for FsStore {
+    fn load(&self, key: u64) -> Option<StoredRun> {
+        let path = self.entry_path(key);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(text) => text,
+            Err(err) if err.kind() == std::io::ErrorKind::NotFound => return None,
+            Err(err) => {
+                eprintln!("warning: strategy store: cannot read {path:?}: {err}");
+                return None;
+            }
+        };
+        match Json::parse(&text)
+            .map_err(anyhow::Error::from)
+            .and_then(|doc| StoredRun::from_json(&doc, key))
+        {
+            Ok(run) => Some(run),
+            Err(err) => {
+                eprintln!("warning: strategy store: discarding {path:?}: {err:#}");
+                None
+            }
+        }
+    }
+
+    fn save(&self, key: u64, run: &StoredRun) {
+        let path = self.entry_path(key);
+        let tmp = self.dir.join(format!("{key:016x}.tmp.{}", std::process::id()));
+        let text = run.to_json(key).pretty();
+        let result = std::fs::write(&tmp, &text).and_then(|()| std::fs::rename(&tmp, &path));
+        if let Err(err) = result {
+            let _ = std::fs::remove_file(&tmp);
+            eprintln!("warning: strategy store: cannot persist {path:?}: {err}");
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("dir {}", self.dir.display())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::network::testnet::diamond;
+
+    fn sample_run() -> StoredRun {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        StoredRun::capture("sgp", &[12.5, 11.0 + 1e-13, 10.75], 2, 10.75 + 1e-13, &phi)
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "cecflow-store-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn entry_roundtrip_is_bitwise() {
+        let run = sample_run();
+        let back = StoredRun::from_json(&run.to_json(7), 7).unwrap();
+        assert_eq!(back.cost_bits, run.cost_bits);
+        assert_eq!(back.iters_to_1pct, run.iters_to_1pct);
+        assert_eq!(back.algorithm, run.algorithm);
+        assert_eq!(back.phi, run.phi);
+        assert_eq!(back.price_bits, run.price_bits);
+        assert_eq!(back.final_cost_bits(), 10.75f64.to_bits());
+        assert_eq!(back.iterations(), 3);
+    }
+
+    #[test]
+    fn entry_rejects_key_and_shape_tampering() {
+        let run = sample_run();
+        // copied under another address
+        let err = StoredRun::from_json(&run.to_json(7), 8).unwrap_err().to_string();
+        assert!(err.contains("does not match"), "{err}");
+        // truncated trajectory
+        let mut doc = run.to_json(7);
+        doc.set("cost_bits", Json::Arr(Vec::new()));
+        assert!(StoredRun::from_json(&doc, 7).is_err());
+        // 1% marker outside the trajectory
+        let mut doc = run.to_json(7);
+        doc.set("iters_to_1pct", Json::Num(99.0));
+        assert!(StoredRun::from_json(&doc, 7).is_err());
+        // edited trajectory bits behind an unchanged entry digest
+        let mut doc = run.to_json(7);
+        let mut forged = run.clone();
+        forged.cost_bits[0] ^= 1;
+        doc.set(
+            "cost_bits",
+            forged.to_json(7).get("cost_bits").clone(),
+        );
+        let err = StoredRun::from_json(&doc, 7).unwrap_err().to_string();
+        assert!(err.contains("entry digest mismatch"), "{err}");
+    }
+
+    #[test]
+    fn mem_store_roundtrip_and_miss() {
+        let store = MemStore::new();
+        assert!(store.load(1).is_none());
+        let run = sample_run();
+        store.save(1, &run);
+        assert_eq!(store.len(), 1);
+        let back = store.load(1).expect("hit");
+        assert_eq!(back.cost_bits, run.cost_bits);
+        assert_eq!(back.phi, run.phi);
+        assert!(store.load(2).is_none());
+    }
+
+    #[test]
+    fn fs_store_roundtrip_and_corruption_misses() {
+        let dir = tmp_dir("corrupt");
+        let store = FsStore::open(&dir).unwrap();
+        assert!(store.describe().contains("dir"));
+        let run = sample_run();
+        store.save(3, &run);
+        assert_eq!(store.load(3).expect("hit").cost_bits, run.cost_bits);
+
+        // truncated entry → miss, not a panic
+        let path = dir.join(format!("{:016x}.json", 3u64));
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        assert!(store.load(3).is_none());
+
+        // garbage entry → miss
+        std::fs::write(&path, "not json at all").unwrap();
+        assert!(store.load(3).is_none());
+
+        // an entry renamed to another key's address → key-mismatch miss
+        store.save(4, &run);
+        std::fs::copy(dir.join(format!("{:016x}.json", 4u64)), &path).unwrap();
+        assert!(store.load(3).is_none());
+        assert!(store.load(4).is_some(), "the honest entry still hits");
+
+        // flipped strategy bits behind an unchanged digest → miss
+        let path4 = dir.join(format!("{:016x}.json", 4u64));
+        let tampered = std::fs::read_to_string(&path4)
+            .unwrap()
+            .replacen("3ff0000000000000", "3ff0000000000001", 1);
+        std::fs::write(&path4, tampered).unwrap();
+        assert!(store.load(4).is_none());
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn verification_demands_the_exact_price_bits() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let price = compute_flows(&net, &phi).unwrap().total_cost;
+        let good = StoredRun::capture("sgp", &[price], 1, price, &phi);
+        assert!(good.verifies_on(&net));
+        // one flipped price bit → the seal breaks
+        let mut bad = good.clone();
+        bad.price_bits ^= 1;
+        assert!(!bad.verifies_on(&net));
+        // same shape, different cost surface (linear vs queue) → the
+        // re-priced bits differ and the stale entry is rejected
+        let other = diamond(false);
+        assert!(good.phi.matches(&other), "test needs a shape-compatible net");
+        assert!(!good.verifies_on(&other));
+    }
+
+    #[test]
+    fn key_hasher_is_salted_and_deterministic() {
+        let k = |bytes: &[u8]| {
+            let mut h = key_hasher();
+            h.eat(bytes);
+            h.finish()
+        };
+        assert_eq!(k(b"abc"), k(b"abc"));
+        assert_ne!(k(b"abc"), k(b"abd"));
+        // the salt moves keys away from a bare FNV of the same bytes
+        let mut bare = GridHasher::new();
+        bare.eat(b"abc");
+        assert_ne!(k(b"abc"), bare.finish());
+    }
+}

@@ -27,12 +27,15 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::model::flows::compute_flows;
+use crate::model::strategy::Strategy;
 use crate::sim::{self, ArrivalSpec, SimConfig, SimEpoch, SimPlan};
 use crate::util::json::Json;
 
 use super::dynamics::{AdaptiveRunner, PatternSchedule};
 use super::exec::grid::{Grid, GridCell, GridHasher};
 use super::exec::{pool, shard};
+use super::store::{self, FsStore, StoredRun, StrategyStore};
 use super::{
     build_scenario_network, metrics, run_algorithm_with_backend, Algorithm, CellBackend,
     RunConfig,
@@ -117,6 +120,26 @@ pub struct CellDivergence {
     pub alarm: bool,
 }
 
+/// Strategy-store consultation outcome of one cell, recorded when the
+/// sweep ran with a cache ([`SweepSpec::cache`]) on an algorithm that can
+/// reuse a stored strategy ([`Algorithm::supports_warm_start`]); `None`
+/// otherwise. Carried bit-exactly through the shard protocol and report
+/// artifacts, but — like wall times and worker counts — excluded from the
+/// fingerprint: whether a cell's result came out of the store must not
+/// change what the sweep *measured*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CellCache {
+    /// The store supplied an entry that passed re-pricing verification
+    /// (see [`StoredRun::price_bits`]), and the cell adopted its stored
+    /// cold trajectory without solving.
+    pub hit: bool,
+    /// Optimizer iterations the hit avoided executing (the stored
+    /// trajectory's length); `0` on a miss. The cell's reported
+    /// `iterations` stays the canonical cold count either way — this
+    /// field is where the saved work shows up.
+    pub iters_saved: usize,
+}
+
 /// A sweep specification: the cell grid is the cross product
 /// `scenarios × seeds × algorithms × backends × schedules` (non-SGP
 /// algorithms only pair with [`CellBackend::Sparse`] — they have no dense
@@ -140,6 +163,12 @@ pub struct SweepSpec {
     /// Request-level simulation of each cell's converged strategy
     /// (`None`, the default, reproduces the analytic-only sweep exactly).
     pub sim: Option<SimSweepConfig>,
+    /// Strategy-store directory (`--cache-dir`): when set, every
+    /// warm-startable cell consults an [`FsStore`] there before solving
+    /// and inserts its converged run after, and cell records grow cache
+    /// columns plus the converged strategy. `None` (the default)
+    /// reproduces the store-less sweep byte-for-byte.
+    pub cache: Option<String>,
 }
 
 impl Default for SweepSpec {
@@ -153,6 +182,7 @@ impl Default for SweepSpec {
             rate_scale: 1.0,
             run: RunConfig::quick(),
             sim: None,
+            cache: None,
         }
     }
 }
@@ -257,23 +287,133 @@ pub struct CellResult {
     /// Simulated sojourn digest when the spec enabled request-level
     /// simulation ([`SweepSpec::sim`]); `None` otherwise.
     pub sim: Option<CellSim>,
+    /// Strategy-store outcome when the spec ran with a cache
+    /// ([`SweepSpec::cache`]) and the cell's algorithm can reuse a stored
+    /// strategy; `None` otherwise. Excluded from the fingerprint.
+    pub cache: Option<CellCache>,
+    /// The cell's converged strategy, shipped through the shard protocol
+    /// and report artifacts when the spec ran with a cache (bits-exact,
+    /// digest-sealed — [`Strategy::to_json`]); `None` otherwise, keeping
+    /// store-less artifacts byte-identical to earlier versions. Excluded
+    /// from the fingerprint.
+    pub phi: Option<Strategy>,
 }
 
-fn run_cell(index: usize, cell: &SweepCell, spec: &SweepSpec) -> Result<CellResult> {
+/// Content address of one static cell's converged run in a
+/// [`StrategyStore`]: the *pre-solve* prefix of the cell fingerprint —
+/// cell identity (scenario, seed, algorithm, backend, schedule) plus
+/// everything else that determines the solve (rate scale, stopping rule)
+/// — hashed with the store-format salt ([`store::key_hasher`]). The
+/// post-solve fingerprint proper cannot address the store: the consult
+/// happens before any solving.
+fn cell_store_key(cell: &SweepCell, spec: &SweepSpec) -> u64 {
+    let mut h = store::key_hasher();
+    cell.write_identity(&mut h);
+    h.eat(&spec.rate_scale.to_bits().to_le_bytes());
+    h.eat(&(spec.run.max_iters as u64).to_le_bytes());
+    h.eat(&spec.run.tol.to_bits().to_le_bytes());
+    h.eat(&(spec.run.patience as u64).to_le_bytes());
+    h.finish()
+}
+
+/// Open the spec's strategy store, if any ([`SweepSpec::cache`]).
+fn open_store(spec: &SweepSpec) -> Result<Option<FsStore>> {
+    spec.cache
+        .as_deref()
+        .map(|dir| FsStore::open(Path::new(dir)))
+        .transpose()
+}
+
+fn run_cell(
+    index: usize,
+    cell: &SweepCell,
+    spec: &SweepSpec,
+    store: Option<&dyn StrategyStore>,
+) -> Result<CellResult> {
     if !cell.schedule.is_static() {
         return run_dynamic_cell(index, cell, spec);
     }
     let net = build_scenario_network(&cell.scenario, cell.seed, spec.rate_scale)?;
     let start = Instant::now();
-    let out = run_algorithm_with_backend(&net, cell.algorithm, cell.backend, &spec.run)?;
-    let final_cost = if out.final_cost.is_nan() {
+    // Only algorithms that can reuse an arbitrary feasible strategy
+    // participate in the store; other cells record no cache outcome.
+    let store = store.filter(|_| cell.algorithm.supports_warm_start());
+    let key = store.map(|_| cell_store_key(cell, spec));
+    let mut adopted: Option<StoredRun> = None;
+    let mut cache = None;
+    if let (Some(s), Some(key)) = (store, key) {
+        match s.load(key) {
+            Some(entry) if entry.verifies_on(&net) => {
+                cache = Some(CellCache {
+                    hit: true,
+                    iters_saved: entry.iterations(),
+                });
+                adopted = Some(entry);
+            }
+            Some(_) => {
+                // a verification miss: the entry parsed but does not
+                // reproduce this cell's costs — stale key collision or a
+                // changed scenario builder; re-run cold and overwrite
+                eprintln!(
+                    "warning: strategy store: entry {key:016x} failed re-pricing \
+                     verification; re-running cold"
+                );
+                cache = Some(CellCache {
+                    hit: false,
+                    iters_saved: 0,
+                });
+            }
+            None => {
+                cache = Some(CellCache {
+                    hit: false,
+                    iters_saved: 0,
+                });
+            }
+        }
+    }
+    let (final_cost, iterations, iters_to_1pct, phi) = match adopted {
+        // A verified hit adopts the stored cold trajectory without
+        // solving: final cost, iteration count and the 1% marker are the
+        // cold run's own (bits-exact), so the fingerprint cannot tell a
+        // hit from a cold solve.
+        Some(entry) => (
+            entry.final_cost(),
+            entry.iterations(),
+            entry.iters_to_1pct,
+            Some(entry.phi),
+        ),
+        None => {
+            let out = run_algorithm_with_backend(&net, cell.algorithm, cell.backend, &spec.run)?;
+            let iters_to_1pct = metrics::iters_to_1pct(&out.costs);
+            if let (Some(s), Some(key), Some(phi)) = (store, key, out.phi.as_ref()) {
+                // best-effort insert. A saturated run is not stored: its
+                // non-finite price bits are a brittle verification seal
+                // and there is nothing worth warming from.
+                match compute_flows(&net, phi) {
+                    Ok(f) if f.total_cost.is_finite() => s.save(
+                        key,
+                        &StoredRun::capture(
+                            &out.algorithm,
+                            &out.costs,
+                            iters_to_1pct,
+                            f.total_cost,
+                            phi,
+                        ),
+                    ),
+                    _ => {}
+                }
+            }
+            (out.final_cost, out.iterations, iters_to_1pct, out.phi)
+        }
+    };
+    let final_cost = if final_cost.is_nan() {
         f64::INFINITY
     } else {
-        out.final_cost
+        final_cost
     };
     let sim = match &spec.sim {
         Some(cfg) => {
-            let phi = out.phi.as_ref().with_context(|| {
+            let phi = phi.as_ref().with_context(|| {
                 format!(
                     "algorithm {} produced no strategy to simulate",
                     cell.algorithm.name()
@@ -326,11 +466,15 @@ fn run_cell(index: usize, cell: &SweepCell, spec: &SweepSpec) -> Result<CellResu
         index,
         cell: cell.clone(),
         final_cost,
-        iterations: out.iterations,
-        iters_to_1pct: metrics::iters_to_1pct(&out.costs),
+        iterations,
+        iters_to_1pct,
         wall_seconds: start.elapsed().as_secs_f64(),
         epoch_costs: Vec::new(),
         sim,
+        cache,
+        // the strategy rides the artifact only for store-enabled cells;
+        // store-less artifacts stay byte-identical to earlier versions
+        phi: if store.is_some() { phi } else { None },
     })
 }
 
@@ -361,6 +505,11 @@ fn run_dynamic_cell(index: usize, cell: &SweepCell, spec: &SweepSpec) -> Result<
         wall_seconds: start.elapsed().as_secs_f64(),
         epoch_costs: trace.epochs.iter().map(|e| sanitize(e.final_cost)).collect(),
         sim: None,
+        // dynamic cells never consult a cross-session store: each epoch
+        // warm-starts from its predecessor in-process, and an adopted
+        // strategy would change the very trajectory being measured
+        cache: None,
+        phi: None,
     })
 }
 
@@ -403,6 +552,14 @@ fn grid_hash_of(grid: &Grid<SweepCell>, spec: &SweepSpec) -> u64 {
                     }
                 }
             }
+        }
+        // the cache axis folds in as an enabled bit only: cached and
+        // uncached artifacts refuse to merge (their records differ —
+        // cache columns and shipped strategies), but runs warming from
+        // *different* directories are still the same sweep
+        match &spec.cache {
+            None => h.eat(&[0]),
+            Some(_) => h.eat(&[1]),
         }
     })
 }
@@ -456,6 +613,9 @@ fn validate_spec(spec: &SweepSpec) -> Result<()> {
             );
         }
     }
+    if let Some(dir) = &spec.cache {
+        anyhow::ensure!(!dir.is_empty(), "--cache-dir needs a non-empty directory path");
+    }
     Ok(())
 }
 
@@ -477,7 +637,9 @@ pub fn run_sweep(spec: &SweepSpec, workers: usize) -> Result<SweepReport> {
     nonempty(&grid)?;
     let grid_hash = grid_hash_of(&grid, spec);
     let cells = grid.indexed();
-    let results = pool::run_cells(&cells, workers, |i, c| run_cell(i, c, spec), None)?;
+    let fs = open_store(spec)?;
+    let st = fs.as_ref().map(|s| s as &dyn StrategyStore);
+    let results = pool::run_cells(&cells, workers, |i, c| run_cell(i, c, spec, st), None)?;
     Ok(SweepReport {
         cells: results,
         workers: workers.clamp(1, cells.len()),
@@ -528,7 +690,9 @@ where
             grid_hash,
         });
     }
-    let results = pool::run_cells(&mine, workers, |i, c| run_cell(i, c, spec), Some(&on_cell))?;
+    let fs = open_store(spec)?;
+    let st = fs.as_ref().map(|s| s as &dyn StrategyStore);
+    let results = pool::run_cells(&mine, workers, |i, c| run_cell(i, c, spec, st), Some(&on_cell))?;
     Ok(SweepReport {
         cells: results,
         workers: workers.clamp(1, mine.len()),
@@ -554,7 +718,9 @@ where
     nonempty(&grid)?;
     let grid_hash = grid_hash_of(&grid, spec);
     let mine = grid.subset(indices)?;
-    let results = pool::run_cells(&mine, workers, |i, c| run_cell(i, c, spec), Some(&on_cell))?;
+    let fs = open_store(spec)?;
+    let st = fs.as_ref().map(|s| s as &dyn StrategyStore);
+    let results = pool::run_cells(&mine, workers, |i, c| run_cell(i, c, spec, st), Some(&on_cell))?;
     Ok(SweepReport {
         cells: results,
         workers: workers.clamp(1, mine.len()),
@@ -611,6 +777,12 @@ pub fn spec_to_args(spec: &SweepSpec) -> Vec<String> {
             args.push("--sim-validate".to_string());
             args.push(tol.to_string());
         }
+    }
+    if let Some(dir) = &spec.cache {
+        // shard children share the parent's store directory: whichever
+        // child solves a cell first persists it for every later run
+        args.push("--cache-dir".to_string());
+        args.push(dir.clone());
     }
     args
 }
@@ -694,6 +866,7 @@ mod tests {
             rate_scale: 1.0,
             run: RunConfig::quick(),
             sim: None,
+            cache: None,
         };
         let cells = spec.cells();
         assert_eq!(cells.len(), 8);
@@ -916,6 +1089,7 @@ mod tests {
             rate_scale: 1.0,
             run: RunConfig::quick(),
             sim: None,
+            cache: None,
         };
         let whole = run_sweep(&spec, 1).unwrap();
         let stolen = run_sweep_cells_with(&spec, &[1], 1, |_| {}).unwrap();
@@ -927,5 +1101,112 @@ mod tests {
             "a re-stolen cell must be bit-identical to its original run"
         );
         assert!(run_sweep_cells_with(&spec, &[99], 1, |_| {}).is_err());
+    }
+
+    #[test]
+    fn grid_hash_tracks_the_cache_bit_but_not_the_directory() {
+        let base = SweepSpec::default();
+        let cached = SweepSpec {
+            cache: Some("/tmp/a".into()),
+            ..base.clone()
+        };
+        assert_ne!(
+            spec_grid_hash(&base),
+            spec_grid_hash(&cached),
+            "cached and uncached artifacts must refuse to merge"
+        );
+        let elsewhere = SweepSpec {
+            cache: Some("/tmp/b".into()),
+            ..base.clone()
+        };
+        assert_eq!(
+            spec_grid_hash(&cached),
+            spec_grid_hash(&elsewhere),
+            "the directory itself is not part of the sweep's identity"
+        );
+        // the shard-child handoff carries the flag
+        let args = spec_to_args(&cached);
+        let k = args.iter().position(|a| a == "--cache-dir").unwrap();
+        assert_eq!(args[k + 1], "/tmp/a");
+        assert!(!spec_to_args(&base).contains(&"--cache-dir".to_string()));
+        // degenerate cache dirs are named before any cell runs
+        let bad = SweepSpec {
+            cache: Some(String::new()),
+            ..base
+        };
+        let err = run_sweep(&bad, 1).unwrap_err().to_string();
+        assert!(err.contains("cache-dir"), "{err}");
+    }
+
+    #[test]
+    fn cached_rerun_reproduces_the_cold_fingerprint_without_solving() {
+        let dir = std::env::temp_dir().join(format!(
+            "cecflow-sweep-cache-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cold_spec = SweepSpec {
+            scenarios: vec!["abilene".into()],
+            seeds: vec![1, 2],
+            algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
+            ..SweepSpec::default()
+        };
+        let cold = run_sweep(&cold_spec, 1).unwrap();
+        let spec = SweepSpec {
+            cache: Some(dir.display().to_string()),
+            ..cold_spec
+        };
+        // first store-enabled run: everything misses, inserts, and still
+        // lands on the cold fingerprint
+        let first = run_sweep(&spec, 2).unwrap();
+        assert_eq!(first.fingerprint(), cold.fingerprint());
+        for c in &first.cells {
+            match c.cell.algorithm {
+                Algorithm::Sgp => {
+                    let cache = c.cache.expect("sgp cell missing cache record");
+                    assert!(!cache.hit);
+                    assert_eq!(cache.iters_saved, 0);
+                    assert!(c.phi.is_some(), "store-enabled cells ship the strategy");
+                }
+                _ => {
+                    assert!(c.cache.is_none(), "lpr cells take no part in the store");
+                    assert!(c.phi.is_none());
+                }
+            }
+        }
+        // second run: every sgp cell is a verified hit adopting the stored
+        // trajectory — identical fingerprint, zero iterations executed
+        let second = run_sweep(&spec, 1).unwrap();
+        assert_eq!(second.fingerprint(), cold.fingerprint());
+        for c in &second.cells {
+            if c.cell.algorithm == Algorithm::Sgp {
+                let cache = c.cache.expect("sgp cell missing cache record");
+                assert!(cache.hit, "second run must hit");
+                assert_eq!(cache.iters_saved, c.iterations);
+                assert!(cache.iters_saved > 0);
+            }
+        }
+        // tampering with one entry downgrades it to a miss, not a failure
+        let entry = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .find(|p| p.extension().is_some_and(|x| x == "json"))
+            .unwrap();
+        std::fs::write(&entry, "garbage").unwrap();
+        let third = run_sweep(&spec, 1).unwrap();
+        assert_eq!(third.fingerprint(), cold.fingerprint());
+        let hits = third
+            .cells
+            .iter()
+            .filter(|c| c.cache.is_some_and(|k| k.hit))
+            .count();
+        let misses = third
+            .cells
+            .iter()
+            .filter(|c| c.cache.is_some_and(|k| !k.hit))
+            .count();
+        assert_eq!(hits, 1, "the untouched entry still hits");
+        assert_eq!(misses, 1, "the corrupted entry re-runs cold");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -12,6 +12,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::model::strategy::Strategy;
 use crate::util::json::Json;
 use crate::util::stats::summarize;
 use crate::util::table::{fnum, Table};
@@ -19,7 +20,7 @@ use crate::util::table::{fnum, Table};
 use super::dynamics::PatternSchedule;
 use super::exec::artifact::{f64_bits_hex, parse_f64_bits_hex, u64_hex, Artifact, ArtifactItem};
 use super::exec::grid::GridCell;
-use super::sweep::{CellDivergence, CellResult, CellSim, SweepCell};
+use super::sweep::{CellCache, CellDivergence, CellResult, CellSim, SweepCell};
 use super::{Algorithm, CellBackend};
 
 /// Aggregate over the seeds of one
@@ -49,6 +50,11 @@ pub struct GroupSummary {
     pub sim_mean_rel_err: Option<f64>,
     /// Number of the group's cells whose validation alarm fired.
     pub sim_alarms: usize,
+    /// Strategy-store aggregate across the group's cells with a cache
+    /// record: `(verified hits, iterations those hits avoided)`. `None`
+    /// when no cell in the group consulted a store (cache off, or an
+    /// algorithm outside [`Algorithm::supports_warm_start`]).
+    pub cache_hits: Option<(usize, usize)>,
 }
 
 /// A completed sweep: per-cell results in grid order plus aggregation.
@@ -139,6 +145,18 @@ impl CellResult {
                     .set("alarm", Json::Bool(d.alarm));
             }
             o.set("sim", s);
+        }
+        if let Some(cache) = &self.cache {
+            let mut c = Json::obj();
+            c.set("hit", Json::Bool(cache.hit))
+                .set("iters_saved", Json::Num(cache.iters_saved as f64));
+            o.set("cache", c);
+        }
+        if let Some(phi) = &self.phi {
+            // bits-exact and digest-sealed (Strategy::to_json): the shard
+            // protocol and report artifacts carry the converged strategy
+            // itself when the sweep ran store-enabled
+            o.set("strategy", phi.to_json());
         }
         o
     }
@@ -245,6 +263,23 @@ impl CellResult {
                 })
             }
         };
+        let cache = match doc.get("cache") {
+            Json::Null => None,
+            c => Some(CellCache {
+                hit: c
+                    .get("hit")
+                    .as_bool()
+                    .context("cell cache record missing hit")?,
+                iters_saved: c
+                    .get("iters_saved")
+                    .as_usize()
+                    .context("cell cache record missing iters_saved")?,
+            }),
+        };
+        let phi = match doc.get("strategy") {
+            Json::Null => None,
+            s => Some(Strategy::from_json(s).context("cell strategy")?),
+        };
         Ok(CellResult {
             index: doc
                 .get("index")
@@ -269,6 +304,8 @@ impl CellResult {
             wall_seconds: doc.get("wall_seconds").as_num().unwrap_or(0.0),
             epoch_costs,
             sim,
+            cache,
+            phi,
         })
     }
 }
@@ -379,6 +416,19 @@ impl SweepReport {
                     )
                 };
                 let sim_alarms = divs.iter().filter(|d| d.alarm).count();
+                // grid-hash-guarded like the sim digests: within one report
+                // either the store-eligible cells all carry a cache record
+                // or none does
+                let caches: Vec<CellCache> =
+                    cells.iter().filter_map(|c| c.cache).collect();
+                let cache_hits = if caches.is_empty() {
+                    None
+                } else {
+                    Some((
+                        caches.iter().filter(|k| k.hit).count(),
+                        caches.iter().map(|k| k.iters_saved).sum(),
+                    ))
+                };
                 GroupSummary {
                     scenario,
                     algorithm,
@@ -398,6 +448,7 @@ impl SweepReport {
                     sim_mean,
                     sim_mean_rel_err,
                     sim_alarms,
+                    cache_hits,
                 }
             })
             .collect()
@@ -475,6 +526,10 @@ impl SweepReport {
         if validated {
             headers.extend(["sim div err", "alarms"]);
         }
+        let cached = self.cells.iter().any(|c| c.cache.is_some());
+        if cached {
+            headers.extend(["cache hits", "iters saved"]);
+        }
         let mut t = Table::new(&headers);
         for g in self.groups() {
             let mut row = vec![
@@ -497,6 +552,14 @@ impl SweepReport {
             if validated {
                 match g.sim_mean_rel_err {
                     Some(e) => row.extend([fnum(e), g.sim_alarms.to_string()]),
+                    None => row.extend(["-".to_string(), "-".to_string()]),
+                }
+            }
+            if cached {
+                match g.cache_hits {
+                    Some((hits, saved)) => {
+                        row.extend([format!("{hits}/{}", g.cells), saved.to_string()])
+                    }
                     None => row.extend(["-".to_string(), "-".to_string()]),
                 }
             }
@@ -537,6 +600,10 @@ impl SweepReport {
                 if let Some(e) = g.sim_mean_rel_err {
                     o.set("sim_mean_rel_err", Json::Num(e))
                         .set("sim_alarms", Json::Num(g.sim_alarms as f64));
+                }
+                if let Some((hits, saved)) = g.cache_hits {
+                    o.set("cache_hits", Json::Num(hits as f64))
+                        .set("cache_iters_saved", Json::Num(saved as f64));
                 }
                 o
             })
@@ -586,6 +653,7 @@ mod tests {
             rate_scale: 1.0,
             run: RunConfig::quick(),
             sim: None,
+            cache: None,
         }
     }
 
@@ -627,6 +695,7 @@ mod tests {
             rate_scale: 1.0,
             run: RunConfig::quick(),
             sim: None,
+            cache: None,
         };
         let report = run_sweep(&spec, 2).unwrap();
         assert_eq!(report.cells.len(), 4);
@@ -773,6 +842,13 @@ mod tests {
                     alarm: index == 1,
                 }),
             }),
+            cache: Some(CellCache {
+                hit: index == 0,
+                iters_saved: 40 * (1 - index),
+            }),
+            phi: Some(Strategy::local_compute_init(
+                &crate::model::network::testnet::diamond(true),
+            )),
         };
         let report = SweepReport {
             cells: vec![mk(0, 123.456_789_012_345), mk(1, f64::INFINITY)],
@@ -796,15 +872,36 @@ mod tests {
         assert_eq!(d.max_server_rel_err.to_bits(), f64::INFINITY.to_bits());
         assert!(d.alarm);
         assert!(!back.cells[0].sim.unwrap().divergence.unwrap().alarm);
+        // the cache record and the shipped strategy round-trip too
+        assert_eq!(
+            back.cells[0].cache,
+            Some(CellCache {
+                hit: true,
+                iters_saved: 40
+            })
+        );
+        assert_eq!(
+            back.cells[1].cache,
+            Some(CellCache {
+                hit: false,
+                iters_saved: 0
+            })
+        );
+        assert_eq!(back.cells[0].phi, report.cells[0].phi);
         let txt = report.render();
         assert!(txt.contains("sim p99"), "{txt}");
         assert!(txt.contains("sim div err"), "{txt}");
         assert!(txt.contains("alarms"), "{txt}");
+        assert!(txt.contains("cache hits"), "{txt}");
+        assert!(txt.contains("iters saved"), "{txt}");
         // the group surface carries the validation aggregate
         let doc = Json::parse(&text).unwrap();
         let g0 = &doc.get("groups").as_arr().unwrap()[0];
         assert!(g0.get("sim_mean_rel_err").as_num().is_some());
         assert_eq!(g0.get("sim_alarms").as_num(), Some(1.0));
+        // ... and the store aggregate: 1 hit across the group, 40 saved
+        assert_eq!(g0.get("cache_hits").as_num(), Some(1.0));
+        assert_eq!(g0.get("cache_iters_saved").as_num(), Some(40.0));
     }
 
     #[test]
@@ -846,6 +943,13 @@ mod tests {
             wall_seconds: 1.5,
             epoch_costs: vec![10.0, f64::INFINITY, 9.5, f64::INFINITY],
             sim: None,
+            cache: Some(CellCache {
+                hit: true,
+                iters_saved: 80,
+            }),
+            phi: Some(Strategy::local_compute_init(
+                &crate::model::network::testnet::diamond(true),
+            )),
         };
         let doc = Json::parse(&cell_line(&cell)).unwrap();
         assert_eq!(doc.get("type").as_str(), Some("cell"));
@@ -853,6 +957,9 @@ mod tests {
         assert_eq!(back.index, 7);
         assert_eq!(back.cell, cell.cell);
         assert_eq!(back.final_cost.to_bits(), cell.final_cost.to_bits());
+        // the cache record and strategy travel the protocol too
+        assert_eq!(back.cache, cell.cache);
+        assert_eq!(back.phi, cell.phi);
         // per-epoch finals travel the protocol bit-exactly, ∞ included
         assert_eq!(
             back.epoch_costs.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),

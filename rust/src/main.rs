@@ -7,7 +7,7 @@
 //!                    [--config path.json] [--out results/run.json]
 //! cecflow sweep      [--scenarios a,b] [--seeds 1,2,3 | 1..8] [--algos sgp,gp,lpr]
 //!                    [--backends sparse,native,pjrt] [--schedules static,step:3:1.5]
-//!                    [--workers N] [--iters N]
+//!                    [--workers N] [--iters N] [--cache-dir DIR]
 //!                    [--tol X] [--patience N] [--scale X] [--out results/sweep.json]
 //!                    [--shards N [--shard-timeout SECS] [--shard-retries N]]
 //!                                                          process-sharded parent
@@ -17,7 +17,7 @@
 //!                    [--merge a.json,b.json]               merge shard reports
 //! cecflow dynamic    [--scenario abilene] [--seed 42] [--algo sgp|gp]
 //!                    [--backend sparse|native|pjrt] [--schedule step|bursty|diurnal|churn|rescale]
-//!                    [--epochs N] [--magnitude X] [--mode warm|cold|both]
+//!                    [--epochs N] [--magnitude X] [--mode warm|cold|both] [--cache-dir DIR]
 //!                    [--iters N] [--tol X] [--patience N] [--scale X] [--out trace.json]
 //! cecflow simulate   [--scenario abilene] [--seed 42] [--algo sgp|gp|spoo|lcor]
 //!                    [--requests N] [--arrivals poisson|mmpp[:b[:s]]|diurnal[:d]]
@@ -97,6 +97,9 @@ fn print_help() {
          \x20            --sim-requests N [--sim-arrivals SPEC] [--sim-warmup F]\n\
          \x20                                               tail-latency columns per cell\n\
          \x20            --sim-validate TOL                 closed-loop divergence columns\n\
+         \x20            --cache-dir DIR                    content-addressed strategy store:\n\
+         \x20                                               adopt verified previous solves,\n\
+         \x20                                               report cache hit columns\n\
          sweep shards: --shards N [--shard-timeout SECS]  spawn N child processes\n\
          \x20            --shard-retries N                  re-steal budget per failed\n\
          \x20                                               shard (default 1; 0 = fail fast)\n\
@@ -106,6 +109,7 @@ fn print_help() {
          \x20            --steal-cells i,j,…                (internal re-steal child)\n\
          dynamic flags: --schedule step|bursty|diurnal|churn|rescale --epochs N\n\
          \x20            --magnitude X --mode warm|cold|both --backend sparse|native|pjrt\n\
+         \x20            --cache-dir DIR  per-epoch strategy store (adopt verified solves)\n\
          simulate flags: --requests N --arrivals poisson|mmpp[:burst[:switch]]|diurnal[:depth]\n\
          \x20            --warmup F --pattern static|step:3:1.5|… --out FILE\n\
          \x20            --validate TOL         analytic-vs-simulated divergence report\n\
@@ -318,6 +322,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 && args.opt("sim-validate").is_none(),
             "--sim-arrivals/--sim-warmup/--sim-validate require --sim-requests"
         );
+    }
+    // strategy-store opt-in: warm-start cells from a content-addressed
+    // cache directory. Parsed before the child-protocol modes below so
+    // shard workers and steal children honor the parent's store.
+    if let Some(dir) = args.opt("cache-dir") {
+        spec.cache = Some(dir.to_string());
     }
 
     let default_workers = std::thread::available_parallelism()
@@ -540,9 +550,31 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
         schedule,
         run: run_cfg,
         modes,
+        cache: args.opt("cache-dir").map(str::to_string),
     };
     // one pool worker per mode: warm and cold trace concurrently
     let traces: Vec<DynamicTrace> = spec.run(2)?;
+    if spec.cache.is_some() {
+        for trace in &traces {
+            let hits = trace
+                .epochs
+                .iter()
+                .filter(|e| e.cache_hit == Some(true))
+                .count();
+            let saved: usize = trace
+                .epochs
+                .iter()
+                .filter(|e| e.cache_hit == Some(true))
+                .map(|e| e.iterations)
+                .sum();
+            println!(
+                "strategy store ({} start): {hits}/{} epoch(s) adopted, {saved} \
+                 iteration(s) of solving avoided",
+                if trace.warm { "warm" } else { "cold" },
+                trace.epochs.len()
+            );
+        }
+    }
     for trace in &traces {
         let label = if trace.warm { "warm" } else { "cold" };
         let mut t = Table::new(&[

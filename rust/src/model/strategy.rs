@@ -17,8 +17,11 @@
 //! round trip — the paper's footnote 1 — which is why the two planes are
 //! checked independently).
 
+use anyhow::{Context, Result};
+
 use crate::graph::algorithms::{dijkstra_to, has_cycle_masked};
 use crate::graph::DiGraph;
+use crate::util::json::Json;
 
 use super::network::Network;
 
@@ -289,6 +292,104 @@ impl Strategy {
         phi
     }
 
+    /// Shape compatibility with `net`: task count, node count and every
+    /// per-node slot count line up with the graph's out-edge order. A
+    /// strategy deserialized from a store keyed by the wrong network can
+    /// never be *applied* to this one — callers treat a mismatch as a
+    /// cache miss, never an index panic.
+    pub fn matches(&self, net: &Network) -> bool {
+        let (n, s) = (net.n(), net.s());
+        if self.data.len() != s || self.result.len() != s {
+            return false;
+        }
+        for t in 0..s {
+            if self.data[t].len() != n || self.result[t].len() != n {
+                return false;
+            }
+            for i in 0..n {
+                let deg = net.graph.out_degree(i);
+                if self.data[t][i].len() != deg + 1 || self.result[t][i].len() != deg {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// FNV-1a digest over both planes' exact shape and f64 bits — the
+    /// integrity seal embedded by [`Strategy::to_json`] and verified by
+    /// [`Strategy::from_json`]. Row/plane lengths are folded in, so
+    /// truncating a row collides only by forging the digest too.
+    pub fn digest(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for plane in [&self.data, &self.result] {
+            fnv_eat(&mut h, &(plane.len() as u64).to_le_bytes());
+            for task in plane.iter() {
+                fnv_eat(&mut h, &(task.len() as u64).to_le_bytes());
+                for row in task.iter() {
+                    fnv_eat(&mut h, &(row.len() as u64).to_le_bytes());
+                    for &x in row.iter() {
+                        fnv_eat(&mut h, &x.to_bits().to_le_bytes());
+                    }
+                }
+            }
+        }
+        h
+    }
+
+    /// Exact-bits JSON form: every fraction as a 16-digit hex bit pattern
+    /// (the shard protocol's convention — JSON numbers would round-trip
+    /// through decimal and lose bits), plus the [`Strategy::digest`] seal.
+    /// This is how a strategy leaves the process: store entries, shard
+    /// artifacts and dynamic traces all carry this shape.
+    pub fn to_json(&self) -> Json {
+        let plane = |p: &Vec<Vec<Vec<f64>>>| {
+            Json::Arr(
+                p.iter()
+                    .map(|task| {
+                        Json::Arr(
+                            task.iter()
+                                .map(|row| {
+                                    Json::Arr(
+                                        row.iter()
+                                            .map(|&x| Json::Str(f64_bits_hex(x)))
+                                            .collect(),
+                                    )
+                                })
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            )
+        };
+        let mut o = Json::obj();
+        o.set("data", plane(&self.data))
+            .set("result", plane(&self.result))
+            .set("digest", Json::Str(format!("{:016x}", self.digest())));
+        o
+    }
+
+    /// Parse the [`Strategy::to_json`] form, rejecting tampering: bad hex,
+    /// a missing plane and a digest mismatch are all hard errors here —
+    /// the *store* layer downgrades them to counted misses.
+    pub fn from_json(doc: &Json) -> Result<Strategy> {
+        let data = parse_plane(doc.get("data"), "data")?;
+        let result = parse_plane(doc.get("result"), "result")?;
+        let want = doc
+            .get("digest")
+            .as_str()
+            .context("strategy JSON missing digest")?;
+        let want = u64::from_str_radix(want, 16)
+            .with_context(|| format!("bad strategy digest '{want}'"))?;
+        let phi = Strategy { data, result };
+        let got = phi.digest();
+        anyhow::ensure!(
+            got == want,
+            "strategy digest mismatch: stored {want:016x}, recomputed {got:016x}"
+        );
+        Ok(phi)
+    }
+
     /// Largest pairwise entry difference against another strategy —
     /// convergence metric for fixed-point comparisons.
     pub fn max_abs_diff(&self, other: &Strategy) -> f64 {
@@ -316,6 +417,67 @@ pub fn out_slot(g: &DiGraph, i: usize, j: usize) -> Option<usize> {
     g.out_edge_ids(i)
         .iter()
         .position(|&eid| g.edge(eid).dst == j)
+}
+
+// --- exact-bits serde internals -------------------------------------------
+//
+// The bits-hex convention matches `coordinator::exec::artifact`, but the
+// model layer must not depend on the coordinator, so the two tiny helpers
+// are restated here rather than imported.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+fn fnv_eat(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+fn f64_bits_hex(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+fn parse_f64_bits_hex(s: &str) -> Result<f64> {
+    anyhow::ensure!(s.len() == 16, "bits-hex must be 16 digits, got '{s}'");
+    let bits =
+        u64::from_str_radix(s, 16).with_context(|| format!("bad bits-hex '{s}'"))?;
+    Ok(f64::from_bits(bits))
+}
+
+fn parse_plane(doc: &Json, name: &str) -> Result<Vec<Vec<Vec<f64>>>> {
+    let tasks = doc
+        .as_arr()
+        .with_context(|| format!("strategy JSON missing '{name}' plane"))?;
+    tasks
+        .iter()
+        .enumerate()
+        .map(|(s, task)| {
+            let rows = task
+                .as_arr()
+                .with_context(|| format!("{name} plane task {s} is not an array"))?;
+            rows.iter()
+                .enumerate()
+                .map(|(i, row)| {
+                    let slots = row.as_arr().with_context(|| {
+                        format!("{name} plane task {s} node {i} is not an array")
+                    })?;
+                    slots
+                        .iter()
+                        .map(|x| {
+                            let hex = x.as_str().with_context(|| {
+                                format!("{name} plane task {s} node {i}: non-string slot")
+                            })?;
+                            parse_f64_bits_hex(hex).with_context(|| {
+                                format!("{name} plane task {s} node {i}")
+                            })
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -434,6 +596,83 @@ mod tests {
         assert_eq!(carried.result, phi.result);
         assert!(carried.is_feasible(&new));
         assert!(carried.is_loop_free(&new));
+    }
+
+    #[test]
+    fn json_roundtrip_is_bitwise() {
+        for net in [diamond(true), diamond(false), line3()] {
+            let mut phi = Strategy::local_compute_init(&net);
+            // plant awkward bit patterns: subnormal, negative zero, and a
+            // long non-dyadic fraction — decimal JSON numbers would mangle
+            // all three, bits-hex must not
+            phi.data[0][0][0] = 0.1f64 + 0.2f64;
+            phi.data[0][1][0] = -0.0;
+            if !phi.result[0][0].is_empty() {
+                phi.result[0][0][0] = f64::from_bits(1); // smallest subnormal
+            }
+            let back = Strategy::from_json(&phi.to_json()).unwrap();
+            assert_eq!(bits_of(&phi), bits_of(&back), "round-trip lost bits");
+            // and through the text form too
+            let text = phi.to_json().dump();
+            let back =
+                Strategy::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(bits_of(&phi), bits_of(&back));
+        }
+    }
+
+    fn bits_of(phi: &Strategy) -> Vec<u64> {
+        phi.data
+            .iter()
+            .chain(phi.result.iter())
+            .flatten()
+            .flatten()
+            .map(|x| x.to_bits())
+            .collect()
+    }
+
+    #[test]
+    fn json_shape_matches_network() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        assert!(phi.matches(&net));
+        let other = line3();
+        assert!(!phi.matches(&other));
+        let mut truncated = phi.clone();
+        truncated.data[0][0].pop();
+        assert!(!truncated.matches(&net));
+    }
+
+    #[test]
+    fn tampered_json_is_rejected() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        // flipped value without a matching digest
+        let mut doc = phi.to_json();
+        let mut evil = phi.clone();
+        evil.data[0][0][0] = 0.5;
+        doc.set("data", evil.to_json().get("data").clone());
+        let err = Strategy::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("digest mismatch"), "{err}");
+        // truncated row without a matching digest
+        let mut doc = phi.to_json();
+        let mut short = phi.clone();
+        short.result[0][0].pop();
+        doc.set("result", short.to_json().get("result").clone());
+        assert!(Strategy::from_json(&doc).is_err());
+        // garbage hex
+        let mut doc = phi.to_json();
+        doc.set(
+            "data",
+            Json::Arr(vec![Json::Arr(vec![Json::Arr(vec![Json::Str(
+                "zz".to_string(),
+            )])])]),
+        );
+        assert!(Strategy::from_json(&doc).is_err());
+        // missing digest entirely
+        let mut doc = phi.to_json();
+        doc.set("digest", Json::Null);
+        let err = Strategy::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("digest"), "{err}");
     }
 
     #[test]

@@ -153,6 +153,7 @@ fn dynamic_spec() -> SweepSpec {
         rate_scale: 1.0,
         run: RunConfig::quick(),
         sim: None,
+        cache: None,
     }
 }
 

@@ -1,0 +1,242 @@
+//! Strategy store end-to-end (ISSUE 8): exact-bits `Strategy` serde,
+//! tamper-rejection of store entries, and the warm-start determinism
+//! contract — a cache-hit sweep is fingerprint-identical to the cold
+//! sweep across worker counts and shard counts, in-process and through
+//! real `cecflow` child processes sharing one `--cache-dir`.
+
+use std::path::Path;
+use std::process::Command;
+
+use cecflow::algo::Sgp;
+use cecflow::coordinator::{
+    build_scenario_network, optimize, run_sweep, run_sweep_shard, Algorithm, CellBackend, FsStore,
+    PatternSchedule, RunConfig, StoredRun, StrategyStore, SweepReport, SweepSpec,
+};
+use cecflow::model::flows::compute_flows;
+use cecflow::model::strategy::Strategy;
+use cecflow::util::json::Json;
+
+fn cecflow_bin() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_cecflow"))
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("cecflow-store-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Converge SGP on a scenario instance — the source of "random feasible
+/// strategies": every (scenario, seed) pair yields a different interior
+/// point of the feasible polytope.
+fn converged(scenario: &str, seed: u64) -> (cecflow::model::network::Network, Strategy) {
+    let net = build_scenario_network(scenario, seed, 1.0).unwrap();
+    let phi0 = Strategy::local_compute_init(&net);
+    let res = optimize(&net, &mut Sgp::new(), &phi0, &RunConfig::quick()).unwrap();
+    (net, res.phi)
+}
+
+#[test]
+fn strategy_serde_round_trips_bitwise_on_random_feasible_strategies() {
+    for (scenario, seed) in [
+        ("abilene", 1u64),
+        ("abilene", 7),
+        ("abilene", 42),
+        ("connected-er", 3),
+        ("connected-er", 11),
+    ] {
+        let (net, phi) = converged(scenario, seed);
+        let text = phi.to_json().pretty();
+        let back = Strategy::from_json(&Json::parse(&text).unwrap())
+            .unwrap_or_else(|e| panic!("{scenario} seed {seed}: {e:#}"));
+        assert!(back.matches(&net), "{scenario} seed {seed}: shape drifted");
+        assert_eq!(
+            back.digest(),
+            phi.digest(),
+            "{scenario} seed {seed}: serde round-trip is not bitwise"
+        );
+        // the decisive check: the round-tripped strategy re-prices to the
+        // exact same cost bits — this is what store verification relies on
+        let a = compute_flows(&net, &phi).unwrap().total_cost;
+        let b = compute_flows(&net, &back).unwrap().total_cost;
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn tampered_and_truncated_entries_are_counted_misses_not_panics() {
+    let dir = temp_dir("tamper");
+    let store = FsStore::open(&dir).unwrap();
+    let (net, phi) = converged("abilene", 5);
+    let price = compute_flows(&net, &phi).unwrap().total_cost;
+    let entry = StoredRun::capture("sgp", &[price * 1.5, price], 2, price, &phi);
+    let key = 0x5eed_0000_0000_0001u64;
+    store.save(key, &entry);
+    let path = dir.join(format!("{key:016x}.json"));
+    let intact = std::fs::read_to_string(&path).unwrap();
+
+    // the intact entry loads and verifies
+    let loaded = store.load(key).expect("intact entry must load");
+    assert_eq!(loaded.entry_digest(), entry.entry_digest());
+    assert!(loaded.verifies_on(&net));
+
+    // truncated mid-document: parse failure -> miss
+    std::fs::write(&path, &intact[..intact.len() / 2]).unwrap();
+    assert!(store.load(key).is_none(), "truncated entry must be a miss");
+
+    // tampered field (price_bits edited without re-forging the digest)
+    let doctored = intact.replace(
+        &format!("{:016x}", price.to_bits()),
+        &format!("{:016x}", price.to_bits() ^ 1),
+    );
+    assert_ne!(doctored, intact, "tamper target not found in entry JSON");
+    std::fs::write(&path, doctored).unwrap();
+    assert!(store.load(key).is_none(), "tampered entry must be a miss");
+
+    // entry copied under another key's address: key seal -> miss
+    let other = key + 1;
+    std::fs::write(dir.join(format!("{other:016x}.json")), &intact).unwrap();
+    assert!(store.load(other).is_none(), "relocated entry must be a miss");
+
+    // and the original address still works once restored
+    std::fs::write(&path, &intact).unwrap();
+    assert!(store.load(key).is_some());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// sgp (warm-startable, sparse + native routes) and lpr (not
+/// warm-startable) over two seeds: six cells, four of which are
+/// store-eligible.
+fn spec(cache: Option<String>) -> SweepSpec {
+    SweepSpec {
+        scenarios: vec!["abilene".into()],
+        seeds: vec![1, 2],
+        algorithms: vec![Algorithm::Sgp, Algorithm::Lpr],
+        backends: vec![CellBackend::Sparse, CellBackend::Native],
+        schedules: vec![PatternSchedule::static_()],
+        rate_scale: 1.0,
+        run: RunConfig::quick(),
+        sim: None,
+        cache,
+    }
+}
+
+fn hits(report: &SweepReport) -> (usize, usize, usize) {
+    let caches: Vec<_> = report.cells.iter().filter_map(|c| c.cache).collect();
+    (
+        caches.len(),
+        caches.iter().filter(|k| k.hit).count(),
+        caches.iter().map(|k| k.iters_saved).sum(),
+    )
+}
+
+#[test]
+fn cache_hit_sweep_is_fingerprint_identical_across_workers_and_shards() {
+    let dir = temp_dir("inproc");
+    let cached = spec(Some(dir.display().to_string()));
+
+    // the reference: no store at all
+    let cold = run_sweep(&spec(None), 2).expect("store-less sweep");
+    assert!(cold.cells.iter().all(|c| c.cache.is_none()));
+
+    // first store-backed run populates the cache (all misses)...
+    let first = run_sweep(&cached, 1).expect("populating sweep");
+    let (eligible, hit, saved) = hits(&first);
+    assert_eq!(eligible, 4, "sgp cells on both backends consult the store");
+    assert_eq!((hit, saved), (0, 0), "an empty store cannot hit");
+    // ...and measures exactly what the store-less sweep measures
+    assert_eq!(first.fingerprint(), cold.fingerprint());
+
+    // warmed re-runs: every eligible cell is a verified hit with saved
+    // iterations, on any worker count, with an unchanged fingerprint
+    for workers in [1usize, 2, 4] {
+        let warm = run_sweep(&cached, workers).expect("warmed sweep");
+        let (eligible, hit, saved) = hits(&warm);
+        assert_eq!((eligible, hit), (4, 4), "{workers} workers: partial hits");
+        assert!(saved > 0, "{workers} workers: hits must save iterations");
+        assert_eq!(
+            warm.fingerprint(),
+            cold.fingerprint(),
+            "{workers}-worker warmed sweep drifted from the cold run"
+        );
+    }
+
+    // shard splits ride the same store: 1-shard and 2-shard runs merge to
+    // the cold fingerprint, all hits
+    for count in [1usize, 2] {
+        let parts: Vec<SweepReport> = (0..count)
+            .map(|k| run_sweep_shard(&cached, k, count, 2).expect("shard run"))
+            .collect();
+        let merged = SweepReport::merge(parts).expect("merge");
+        let (eligible, hit, _) = hits(&merged);
+        assert_eq!((eligible, hit), (4, 4), "{count} shard(s): partial hits");
+        assert_eq!(
+            merged.fingerprint(),
+            cold.fingerprint(),
+            "{count}-shard warmed sweep drifted from the cold run"
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn child_processes_sharing_a_cache_dir_reproduce_the_cold_fingerprint() {
+    let dir = temp_dir("cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cache_dir = dir.join("store");
+
+    let spec_flags = [
+        "--scenarios",
+        "abilene",
+        "--seeds",
+        "1,2",
+        "--algos",
+        "sgp,lpr",
+        "--backends",
+        "sparse,native",
+    ];
+    let cache_flag = cache_dir.display().to_string();
+    let run = |extra: &[&str], out: &Path| {
+        let status = Command::new(cecflow_bin())
+            .arg("sweep")
+            .args(spec_flags)
+            .args(["--cache-dir", cache_flag.as_str()])
+            .args(extra)
+            .arg("--out")
+            .arg(out)
+            .status()
+            .expect("spawn cecflow sweep");
+        assert!(status.success(), "sweep {extra:?} failed: {status}");
+    };
+    let load = |p: &Path| -> SweepReport {
+        let text = std::fs::read_to_string(p).unwrap_or_else(|e| panic!("reading {p:?}: {e}"));
+        SweepReport::from_json(&Json::parse(&text).expect("report JSON")).expect("report shape")
+    };
+
+    // populate cold through one child, then warm through a 2-shard parent
+    // whose workers share the same cache directory
+    let cold_out = dir.join("cold.json");
+    run(&[], &cold_out);
+    let warm_out = dir.join("warm.json");
+    run(&["--shards", "2", "--shard-timeout", "600"], &warm_out);
+
+    let cold = load(&cold_out);
+    let warm = load(&warm_out);
+    let (_, cold_hits, cold_saved) = hits(&cold);
+    assert_eq!((cold_hits, cold_saved), (0, 0));
+    let (eligible, hit, saved) = hits(&warm);
+    assert_eq!((eligible, hit), (4, 4), "children missed the shared store");
+    assert!(saved > 0, "warmed children must report saved iterations");
+    assert_eq!(
+        warm.fingerprint(),
+        cold.fingerprint(),
+        "warmed sharded child run drifted from the cold child run"
+    );
+    // both equal the in-process store-less reference
+    let reference = run_sweep(&spec(None), 2).expect("in-process reference");
+    assert_eq!(cold.fingerprint(), reference.fingerprint());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -17,6 +17,7 @@ fn small_spec() -> SweepSpec {
         rate_scale: 1.0,
         run: RunConfig::quick(),
         sim: None,
+        cache: None,
     }
 }
 

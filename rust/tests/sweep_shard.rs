@@ -46,6 +46,7 @@ fn spec() -> SweepSpec {
         rate_scale: 1.0,
         run: RunConfig::quick(),
         sim: None,
+        cache: None,
     }
 }
 
@@ -110,6 +111,7 @@ fn native_routed_sweep_cell_is_bitwise_the_direct_dense_run() {
         rate_scale: 1.0,
         run: RunConfig::quick(),
         sim: None,
+        cache: None,
     };
     let report = run_sweep(&spec, 1).expect("sweep");
     assert_eq!(report.cells.len(), 1);
@@ -272,6 +274,7 @@ fn failing_cell_in_a_shard_names_the_cell_after_retries_exhaust() {
         rate_scale: 1.0,
         run: RunConfig::quick(),
         sim: None,
+        cache: None,
     };
     let err = run_sweep_sharded(
         &spec,
@@ -315,6 +318,7 @@ fn spec_args_roundtrip_through_the_parsers() {
             patience: 4,
         },
         sim: None,
+        cache: None,
     };
     let args = spec_to_args(&spec);
     let get = |flag: &str| -> &str {
@@ -350,6 +354,7 @@ fn shards_of_different_schedule_grids_refuse_to_merge() {
         rate_scale: 1.0,
         run: RunConfig::quick(),
         sim: None,
+        cache: None,
     };
     let mut other = base.clone();
     other.schedules = vec![PatternSchedule::parse("step:2:2").unwrap()];
