@@ -77,6 +77,12 @@ pub struct SimSweepConfig {
     /// along in [`CellSim::divergence`]. An alarmed cell is a *measured
     /// result*, not a sweep failure.
     pub validate: Option<f64>,
+    /// Per-queue FIFO capacity (`--sim-queue-cap`): when set, every
+    /// simulated server admits at most K requests (M/M/1/K semantics) and
+    /// cells grow drop/blocking columns. Part of the grid hash — capped
+    /// and uncapped artifacts refuse to merge. `None` (the default)
+    /// reproduces the unbounded-FIFO sweep byte-for-byte.
+    pub queue_cap: Option<u64>,
 }
 
 impl Default for SimSweepConfig {
@@ -86,6 +92,7 @@ impl Default for SimSweepConfig {
             arrivals: ArrivalSpec::default(),
             warmup: 0.05,
             validate: None,
+            queue_cap: None,
         }
     }
 }
@@ -103,6 +110,13 @@ pub struct CellSim {
     /// Closed-loop divergence digest when the spec enabled
     /// `--sim-validate`; `None` otherwise.
     pub divergence: Option<CellDivergence>,
+    /// Requests dropped at full per-queue FIFOs when the spec enabled
+    /// `--sim-queue-cap`; `None` on uncapped sweeps (whose artifacts stay
+    /// byte-identical to the pre-admission-control format).
+    pub queue_dropped: Option<u64>,
+    /// Worst per-server simulated blocking rate (`blocked/offered`) when
+    /// the spec enabled `--sim-queue-cap`; `None` otherwise.
+    pub max_blocking: Option<f64>,
 }
 
 /// Headline numbers of one cell's closed-loop validation
@@ -434,6 +448,7 @@ fn run_cell(
                     requests: cfg.requests,
                     warmup: cfg.warmup,
                     seed: cell.seed,
+                    queue_cap: cfg.queue_cap,
                     ..SimConfig::default()
                 },
             )?;
@@ -452,12 +467,32 @@ fn run_cell(
                 None => None,
             };
             let (p50, p99, p999) = telemetry.tail();
+            // capped columns exist exactly when the spec asked for a cap,
+            // so uncapped artifacts keep their historical bytes
+            let (queue_dropped, max_blocking) = match cfg.queue_cap {
+                Some(_) => {
+                    let rate = |blocked: &[u64], offered: &[u64]| {
+                        blocked
+                            .iter()
+                            .zip(offered)
+                            .filter(|&(_, &o)| o > 0)
+                            .map(|(&b, &o)| b as f64 / o as f64)
+                            .fold(0.0, f64::max)
+                    };
+                    let mb = rate(&telemetry.node_blocked, &telemetry.node_offered)
+                        .max(rate(&telemetry.link_blocked, &telemetry.link_offered));
+                    (Some(telemetry.queue_dropped), Some(mb))
+                }
+                None => (None, None),
+            };
             Some(CellSim {
                 p50,
                 p99,
                 p999,
                 mean: telemetry.mean_sojourn(),
                 divergence,
+                queue_dropped,
+                max_blocking,
             })
         }
         None => None,
@@ -551,6 +586,13 @@ fn grid_hash_of(grid: &Grid<SweepCell>, spec: &SweepSpec) -> u64 {
                         h.eat(&tol.to_bits().to_le_bytes());
                     }
                 }
+                // capped and uncapped cells measure different queues and
+                // carry different columns; an uncapped spec eats NOTHING
+                // here so pre-admission-control hashes are preserved
+                if let Some(cap) = sim.queue_cap {
+                    h.eat(&[2]);
+                    h.eat(&cap.to_le_bytes());
+                }
             }
         }
         // the cache axis folds in as an enabled bit only: cached and
@@ -594,6 +636,12 @@ fn validate_spec(spec: &SweepSpec) -> Result<()> {
             anyhow::ensure!(
                 tol.is_finite() && tol > 0.0,
                 "--sim-validate tolerance must be finite and positive, got {tol}"
+            );
+        }
+        if let Some(cap) = sim.queue_cap {
+            anyhow::ensure!(
+                cap >= 1,
+                "--sim-queue-cap must be ≥ 1 (a zero-capacity queue admits nothing)"
             );
         }
         for algo in &spec.algorithms {
@@ -777,6 +825,10 @@ pub fn spec_to_args(spec: &SweepSpec) -> Vec<String> {
             args.push("--sim-validate".to_string());
             args.push(tol.to_string());
         }
+        if let Some(cap) = sim.queue_cap {
+            args.push("--sim-queue-cap".to_string());
+            args.push(cap.to_string());
+        }
     }
     if let Some(dir) = &spec.cache {
         // shard children share the parent's store directory: whichever
@@ -948,6 +1000,16 @@ mod tests {
         let mut tighter = validated.clone();
         tighter.sim.as_mut().unwrap().validate = Some(0.1);
         assert_ne!(h_val, spec_grid_hash(&tighter));
+        // the admission-control axis: capped vs uncapped, and different
+        // caps, must hash apart (capped artifacts refuse to merge into
+        // uncapped sweeps and vice versa)
+        let mut capped = simmed.clone();
+        capped.sim.as_mut().unwrap().queue_cap = Some(8);
+        let h_cap = spec_grid_hash(&capped);
+        assert_ne!(h_sim, h_cap);
+        let mut tighter_cap = capped.clone();
+        tighter_cap.sim.as_mut().unwrap().queue_cap = Some(4);
+        assert_ne!(h_cap, spec_grid_hash(&tighter_cap));
     }
 
     #[test]
@@ -1011,6 +1073,40 @@ mod tests {
         assert!(args.contains(&"--sim-arrivals".to_string()));
         assert!(args.contains(&"--sim-warmup".to_string()));
         assert!(!args.contains(&"--sim-validate".to_string()));
+        assert!(!args.contains(&"--sim-queue-cap".to_string()));
+        // uncapped cells carry no admission-control columns
+        assert!(sim.queue_dropped.is_none() && sim.max_blocking.is_none());
+    }
+
+    #[test]
+    fn capped_cells_carry_drop_columns_and_reject_zero_caps() {
+        let spec = SweepSpec {
+            scenarios: vec!["abilene".into()],
+            seeds: vec![1],
+            algorithms: vec![Algorithm::Sgp],
+            sim: Some(SimSweepConfig {
+                requests: 2_000,
+                queue_cap: Some(1),
+                ..SimSweepConfig::default()
+            }),
+            ..SweepSpec::default()
+        };
+        let report = run_sweep(&spec, 1).unwrap();
+        let sim = report.cells[0].sim.expect("sim-enabled cell missing digest");
+        let dropped = sim.queue_dropped.expect("capped cell missing drop column");
+        let mb = sim.max_blocking.expect("capped cell missing blocking column");
+        // a converged strategy at cap 1 sheds load somewhere
+        assert!(dropped > 0, "{sim:?}");
+        assert!((0.0..=1.0).contains(&mb) && mb > 0.0, "{sim:?}");
+        // the cap survives the shard-child handoff
+        let args = spec_to_args(&spec);
+        let k = args.iter().position(|a| a == "--sim-queue-cap").unwrap();
+        assert_eq!(args[k + 1], "1");
+        // zero caps are named before any cell runs
+        let mut bad = spec.clone();
+        bad.sim.as_mut().unwrap().queue_cap = Some(0);
+        let err = run_sweep(&bad, 1).unwrap_err().to_string();
+        assert!(err.contains("sim-queue-cap"), "{err}");
     }
 
     #[test]

@@ -144,6 +144,13 @@ impl CellResult {
                     )
                     .set("alarm", Json::Bool(d.alarm));
             }
+            // admission-control columns: present iff the sweep ran with
+            // --sim-queue-cap; uncapped records keep their historical bytes
+            if let (Some(dropped), Some(mb)) = (sim.queue_dropped, sim.max_blocking) {
+                s.set("queue_dropped", crate::sim::telemetry::num_u64(dropped))
+                    .set("max_blocking", Json::Num(mb))
+                    .set("max_blocking_bits", Json::Str(f64_bits_hex(mb)));
+            }
             o.set("sim", s);
         }
         if let Some(cache) = &self.cache {
@@ -254,12 +261,24 @@ impl CellResult {
                             .context("cell sim divergence missing alarm")?,
                     }),
                 };
+                // admission-control columns: present iff the sweep ran
+                // capped (keyed on the drop counter)
+                let (queue_dropped, max_blocking) = match s.get("queue_dropped") {
+                    Json::Null => (None, None),
+                    d => (
+                        Some(d.as_num().context("cell sim queue_dropped is not a number")?
+                            as u64),
+                        Some(field("max_blocking_bits")?),
+                    ),
+                };
                 Some(CellSim {
                     p50: field("p50_bits")?,
                     p99: field("p99_bits")?,
                     p999: field("p999_bits")?,
                     mean: field("mean_bits")?,
                     divergence,
+                    queue_dropped,
+                    max_blocking,
                 })
             }
         };
@@ -402,6 +421,10 @@ impl SweepReport {
                         // the group-level aggregate lives in the dedicated
                         // sim_mean_rel_err / sim_alarms fields below
                         divergence: None,
+                        // per-cell drop columns stay per-cell: a mean of
+                        // drop totals across seeds measures nothing
+                        queue_dropped: None,
+                        max_blocking: None,
                     })
                 };
                 // likewise grid-hash-guarded: either every digest in the
@@ -487,6 +510,13 @@ impl SweepReport {
                                     d.max_server_rel_err.to_bits(),
                                     d.alarm as u64,
                                 ]);
+                            }
+                            // capped sweeps measure a different queue:
+                            // their drop columns are identity-relevant
+                            if let (Some(dropped), Some(mb)) =
+                                (s.queue_dropped, s.max_blocking)
+                            {
+                                bits.extend([dropped, mb.to_bits()]);
                             }
                             bits
                         }
@@ -841,6 +871,8 @@ mod tests {
                     max_server_rel_err: f64::INFINITY,
                     alarm: index == 1,
                 }),
+                queue_dropped: Some(7 + index as u64),
+                max_blocking: Some(0.1 + 0.2),
             }),
             cache: Some(CellCache {
                 hit: index == 0,
@@ -872,6 +904,9 @@ mod tests {
         assert_eq!(d.max_server_rel_err.to_bits(), f64::INFINITY.to_bits());
         assert!(d.alarm);
         assert!(!back.cells[0].sim.unwrap().divergence.unwrap().alarm);
+        // the admission-control columns round-trip bit-exactly too
+        assert_eq!(s.queue_dropped, Some(8));
+        assert_eq!(s.max_blocking.unwrap().to_bits(), (0.1f64 + 0.2).to_bits());
         // the cache record and the shipped strategy round-trip too
         assert_eq!(
             back.cells[0].cache,

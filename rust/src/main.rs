@@ -23,6 +23,7 @@
 //!                    [--requests N] [--arrivals poisson|mmpp[:b[:s]]|diurnal[:d]]
 //!                    [--warmup F] [--pattern static|step:3:1.5|…] [--scale X]
 //!                    [--validate TOL] [--reoptimize-every T] [--max-in-flight N]
+//!                    [--queue-cap K] [--cpu-queue-cap K] [--link-queue-cap K]
 //!                    [--iters N] [--tol X] [--patience N] [--out telemetry.json]
 //! cecflow experiment fig4|fig5b|fig5c|fig5d|table2  (see benches/ too)
 //! cecflow validate   [--scenario abilene] — XLA data plane vs native
@@ -97,6 +98,10 @@ fn print_help() {
          \x20            --sim-requests N [--sim-arrivals SPEC] [--sim-warmup F]\n\
          \x20                                               tail-latency columns per cell\n\
          \x20            --sim-validate TOL                 closed-loop divergence columns\n\
+         \x20            --sim-queue-cap K                  per-queue FIFO caps in the sim\n\
+         \x20                                               columns (folded into the grid\n\
+         \x20                                               hash: capped/uncapped artifacts\n\
+         \x20                                               refuse to merge)\n\
          \x20            --cache-dir DIR                    content-addressed strategy store:\n\
          \x20                                               adopt verified previous solves,\n\
          \x20                                               report cache hit columns\n\
@@ -116,7 +121,12 @@ fn print_help() {
          \x20                                   (static pattern; nonzero exit on alarm)\n\
          \x20            --reoptimize-every T   in-simulation SGP re-optimization ticks\n\
          \x20            --max-in-flight N      admission cap; excess arrivals are\n\
-         \x20                                   dropped and counted, never fatal"
+         \x20                                   dropped and counted, never fatal\n\
+         \x20            --queue-cap K          finite per-queue FIFO capacity: arrivals\n\
+         \x20                                   to a full CPU/link queue are dropped and\n\
+         \x20                                   counted per server (M/M/1/K semantics)\n\
+         \x20            --cpu-queue-cap K      per-kind overrides of --queue-cap\n\
+         \x20            --link-queue-cap K"
     );
 }
 
@@ -314,13 +324,20 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 v,
             )?);
         }
+        if let Some(k) = args.opt("sim-queue-cap") {
+            sim.queue_cap = Some(k.parse().with_context(|| {
+                format!("--sim-queue-cap expects an integer, got '{k}'")
+            })?);
+        }
         spec.sim = Some(sim);
     } else {
         anyhow::ensure!(
             args.opt("sim-arrivals").is_none()
                 && args.opt("sim-warmup").is_none()
-                && args.opt("sim-validate").is_none(),
-            "--sim-arrivals/--sim-warmup/--sim-validate require --sim-requests"
+                && args.opt("sim-validate").is_none()
+                && args.opt("sim-queue-cap").is_none(),
+            "--sim-arrivals/--sim-warmup/--sim-validate/--sim-queue-cap require \
+             --sim-requests"
         );
     }
     // strategy-store opt-in: warm-start cells from a content-addressed
@@ -678,11 +695,24 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         tol: args.opt_f64("tol", RunConfig::default().tol),
         patience: args.opt_usize("patience", RunConfig::default().patience),
     };
+    // Optional per-queue FIFO caps: absent flags leave the run uncapped and
+    // bit-identical to pre-admission-control artifacts.
+    let opt_cap = |name: &str| -> Result<Option<u64>> {
+        args.opt(name)
+            .map(|s| {
+                s.parse::<u64>()
+                    .with_context(|| format!("--{name} expects an integer, got '{s}'"))
+            })
+            .transpose()
+    };
     let sim_cfg = SimConfig {
         requests: args.opt_u64("requests", 100_000),
         warmup: args.opt_f64("warmup", 0.05),
         seed,
         max_in_flight: args.opt_usize("max-in-flight", SimConfig::default().max_in_flight),
+        queue_cap: opt_cap("queue-cap")?,
+        cpu_queue_cap: opt_cap("cpu-queue-cap")?,
+        link_queue_cap: opt_cap("link-queue-cap")?,
     };
     let validate_tol = match args.opt("validate") {
         Some(v) => Some(parse_positive_f64("--validate", v)?),
@@ -803,6 +833,22 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             "overload: {} arrival(s) dropped at the admission cap ({}) — the strategy \
              is infeasible at this load",
             telemetry.overload_dropped, sim_cfg.max_in_flight
+        );
+    }
+    if let Some((cpu_cap, link_cap)) = telemetry.queue_caps {
+        let show = |c: u64| {
+            if c == u64::MAX {
+                "unbounded".to_string()
+            } else {
+                c.to_string()
+            }
+        };
+        println!(
+            "per-queue admission (cpu cap {}, link cap {}): {} request(s) dropped at \
+             full FIFOs",
+            show(cpu_cap),
+            show(link_cap),
+            telemetry.queue_dropped
         );
     }
     if telemetry.reopt_events > 0 {

@@ -8,24 +8,45 @@
 //!
 //! * **Validation** ([`validate`]): by Little's law the analytic expected
 //!   sojourn of a steady-state run is `T / λ` (λ = total arrival rate),
-//!   because every cost term `value(F)` is an expected number-in-system —
-//!   `F/(cap−F)` for the M/M/1 `Queue` cost, `unit·F` for the
-//!   infinite-server `Linear` delay. The validator derives `T` from the
-//!   converged flows ([`compute_flows`]), compares against the simulated
-//!   mean sojourn, and emits a per-server divergence report comparing each
-//!   server's analytic occupancy `value(F)` with its simulated
-//!   time-average number in system. A **hard alarm** fires when the
-//!   aggregate relative error exceeds the configured bound, when any
-//!   capacitated server is saturated (`F ≥ cap`), when arrivals were
-//!   dropped at the in-flight ceiling, or when there are no post-warm-up
+//!   because every cost term is an expected number-in-system. The
+//!   validator derives per-server request classes from the converged
+//!   flows ([`compute_flows`]), prices each queued server with the
+//!   Pollaczek–Khinchine M/G/1 mean — the service distribution is a
+//!   hyperexponential mixture of one exponential class per task, so
+//!   `L = ρ + λ²·E[S²] / (2(1−ρ))` with `λ·E[S²] = Σ_k λ_k·2s_k²` — and
+//!   compares it against the simulated time-average number in system. A
+//!   server whose classes share one service mean is plain M/M/1 and gets
+//!   the `Queue` closed form `F/(cap−F)` **bit-for-bit**, so homogeneous
+//!   validation artifacts keep their pre-M/G/1 exact bits. A **hard
+//!   alarm** fires when the M/G/1 aggregate mean diverges beyond the
+//!   configured bound, when a per-server row diverges (relative error
+//!   above tol *and* absolute occupancy gap above
+//!   [`SERVER_ABS_FLOOR`] — heterogeneous servers are hard checks now,
+//!   not diagnostics), when any uncapped capacitated server is saturated
+//!   (`F ≥ cap`), when arrivals were dropped at the in-flight ceiling,
+//!   when simulated per-server blocking exceeds the Erlang prediction by
+//!   more than tol (capped runs), or when there are no post-warm-up
 //!   samples to compare.
 //!
-//!   Tolerance semantics: the headline check is the *aggregate mean*
-//!   (`rel_diff(T/λ, simulated mean)` ≤ tol). Per-server rows are
-//!   diagnostic: a server fed by heterogeneous request sizes is M/G/1
-//!   (hyperexponential service), not the M/M/1 the closed form assumes,
-//!   so per-server error is reported and folded into
-//!   `max_server_rel_error` but does not by itself trip the alarm.
+//!   Tolerance semantics: `mean_rel_error` keeps its historical
+//!   definition (`rel_diff(T/λ, simulated)` over the optimizer's cost
+//!   `T = Σ value(F)`) for artifact continuity, while the headline hard
+//!   check rides `pk_mean_rel_error`, the M/G/1 aggregate. Per-server
+//!   rows below [`RHO_FLOOR`] utilization or with an absolute gap under
+//!   [`SERVER_ABS_FLOOR`] stay diagnostic — near-idle occupancy is
+//!   sampling noise.
+//!
+//!   Finite-capacity runs (`SimConfig::queue_cap`): each capped server is
+//!   an M/M/1/K loss queue, so its analytic occupancy row uses the
+//!   truncated-geometric mean (finite even at ρ ≥ 1 — a full FIFO blocks
+//!   instead of diverging) and gains an Erlang-style expected-blocking
+//!   column `(1−ρ)ρ^K/(1−ρ^{K+1})` checked one-sidedly against the
+//!   simulated per-server drop rate `blocked/offered`: service-time
+//!   variance and arrival burstiness only push true blocking *above* the
+//!   M/M/1/K baseline, so only an excess alarms. The aggregate mean is
+//!   compared against Little's law at the *admitted* rate
+//!   `λ·(1 − dropped/arrived)`, since blocked arrivals never contribute a
+//!   sojourn sample.
 //!
 //! * **Re-optimization** ([`simulate_adaptive`] / [`ReoptConfig`]): instead
 //!   of pre-converging every epoch offline (`AdaptiveRunner`), schedule
@@ -45,7 +66,7 @@ use crate::util::stats::rel_diff;
 use crate::util::table::{fnum, Table};
 
 use super::tasks::{simulate_with, SimConfig, SimPlan};
-use super::telemetry::{bits_hex, Telemetry};
+use super::telemetry::{bits_hex, num_u64, Telemetry};
 use super::workload::ArrivalSpec;
 
 /// Servers with analytic utilization below this floor are excluded from
@@ -53,6 +74,116 @@ use super::workload::ArrivalSpec;
 /// dominated by sampling noise, so its relative error is meaningless. The
 /// rows still appear in the report.
 pub const RHO_FLOOR: f64 = 0.05;
+
+/// Absolute occupancy gap (in requests) below which a per-server row stays
+/// diagnostic even when its relative error exceeds the tolerance: a queue
+/// holding fractions of a request has a relative error dominated by
+/// sampling noise, and alarming on it would punish exactly the lightly
+/// loaded scenarios that validate best.
+pub const SERVER_ABS_FLOOR: f64 = 0.1;
+
+/// One `(request rate, mean service time)` class feeding a server — the
+/// ingredients of the Pollaczek–Khinchine second moment. Each task
+/// contributes one exponential class per server it touches: its data hops,
+/// its result hops (size `a_m`), and its compute requirement `w_im`.
+struct SvcClass {
+    rate: f64,
+    mean: f64,
+}
+
+/// Analytic expected number in system for one server fed by `classes`.
+///
+/// * `Linear{unit}` — infinite-server delay: `unit·F`, unchanged.
+/// * Capped FIFO (`fifo = Some(K)`) — M/M/1/K truncated-geometric mean at
+///   offered load ρ = F/cap ([`mm1k_occupancy`]), finite for every ρ.
+/// * Uncapped `Queue`/`SmoothCap` — the M/G/1 Pollaczek–Khinchine mean
+///   over the hyperexponential mixture. When every class shares one
+///   service mean the mixture degenerates to M/M/1 and the `Queue` closed
+///   form `F/(cap−F)` is returned bit-for-bit, keeping homogeneous
+///   validation artifacts byte-stable across the M/G/1 upgrade.
+///
+/// `SmoothCap` adds its deterministic propagation term `slope·F` to the
+/// queue part (the simulator holds a request in system through that extra
+/// delay); the optimizer's log-barrier surrogate never described the
+/// simulated queue and is no longer used here.
+fn analytic_occupancy(cost: &CostFn, flow: f64, classes: &[SvcClass], fifo: Option<u64>) -> f64 {
+    let Some(cap) = cost.capacity() else {
+        return cost.value(flow);
+    };
+    let extra = match *cost {
+        CostFn::SmoothCap { slope, .. } => slope * flow,
+        _ => 0.0,
+    };
+    if let Some(k) = fifo {
+        return mm1k_occupancy((flow / cap).max(0.0), k) + extra;
+    }
+    if flow >= cap {
+        return f64::INFINITY;
+    }
+    let homogeneous = classes
+        .windows(2)
+        .all(|w| w[0].mean.to_bits() == w[1].mean.to_bits());
+    if homogeneous {
+        if let CostFn::Queue { .. } = cost {
+            return cost.value(flow);
+        }
+    }
+    let lambda: f64 = classes.iter().map(|c| c.rate).sum();
+    if lambda <= 0.0 {
+        return extra;
+    }
+    let rho = flow / cap;
+    // λ·E[S²] of the mixture: exponential classes have E[S_k²] = 2·s_k².
+    let lam_es2: f64 = classes.iter().map(|c| c.rate * 2.0 * c.mean * c.mean).sum();
+    rho + lambda * lam_es2 / (2.0 * (1.0 - rho)) + extra
+}
+
+/// Expected number in system of an M/M/1/K loss queue at offered load ρ:
+/// the truncated-geometric mean `Σ_{n≤K} n·ρ^n / Σ_{n≤K} ρ^n`. Finite for
+/// every ρ — a full FIFO blocks instead of diverging.
+fn mm1k_occupancy(rho: f64, k: u64) -> f64 {
+    let kf = k as f64;
+    if rho <= 0.0 {
+        return 0.0;
+    }
+    if (rho - 1.0).abs() < 1e-9 {
+        return kf / 2.0;
+    }
+    let rk = rho.powf(kf);
+    if !rk.is_finite() {
+        // Deep overload: the distribution piles up at n = K, a geometric
+        // tail of ratio 1/ρ hanging below it.
+        return (kf - 1.0 / (rho - 1.0)).max(0.0);
+    }
+    let rk1 = rk * rho;
+    let s0 = (1.0 - rk1) / (1.0 - rho);
+    let s1 = rho * (1.0 - (kf + 1.0) * rk + kf * rk1) / ((1.0 - rho) * (1.0 - rho));
+    s1 / s0
+}
+
+/// Erlang-style blocking probability of an M/M/1/K loss queue at offered
+/// load ρ: `(1−ρ)ρ^K / (1−ρ^{K+1})`, `1/(K+1)` at ρ = 1. This is the
+/// analytic prediction for per-server drop rates under `--queue-cap`; the
+/// validator's check is one-sided because service-time variance (for
+/// K > 1) and arrival burstiness only push true blocking above this
+/// baseline.
+fn erlang_blocking(rho: f64, k: u64) -> f64 {
+    if !rho.is_finite() || rho < 0.0 {
+        return 1.0;
+    }
+    if rho == 0.0 {
+        return 0.0;
+    }
+    if (rho - 1.0).abs() < 1e-9 {
+        return 1.0 / (k as f64 + 1.0);
+    }
+    let rk = rho.powf(k as f64);
+    if !rk.is_finite() {
+        // ρ > 1 with a deep FIFO: blocking tends to the fluid limit.
+        return (rho - 1.0) / rho;
+    }
+    (1.0 - rho) * rk / (1.0 - rho * rk)
+}
 
 /// In-simulation re-optimization parameters.
 #[derive(Clone, Copy, Debug)]
@@ -103,14 +234,27 @@ pub struct ServerDivergence {
     pub flow: f64,
     /// Analytic utilization `flow / cap` (0 for uncapacitated servers).
     pub rho: f64,
-    /// Analytic expected number in system, `CostFn::value(flow)`.
+    /// Analytic expected number in system: Pollaczek–Khinchine M/G/1 for
+    /// uncapped queued servers (exactly `CostFn::value(flow)` when the
+    /// service classes are homogeneous), the M/M/1/K truncated mean for
+    /// capped servers, `unit·F` for `Linear`.
     pub analytic: f64,
     /// Simulated time-average number in system.
     pub simulated: f64,
     /// `rel_diff(analytic, simulated)`; +∞ when either is non-finite.
     pub rel_error: f64,
-    /// Analytic flow at or beyond capacity — the queue is divergent.
+    /// Analytic flow at or beyond capacity on an *unbounded* FIFO — the
+    /// queue is divergent. A capped server at ρ ≥ 1 is a stable loss
+    /// queue (its excess is counted as blocking) and is not flagged.
     pub saturated: bool,
+    /// Finite FIFO capacity applied to this server in the simulated run;
+    /// `None` on uncapped runs or for a kind left unbounded.
+    pub queue_cap: Option<u64>,
+    /// Erlang-style analytic blocking probability at the offered load
+    /// ([`erlang_blocking`]); populated exactly when `queue_cap` is.
+    pub expected_blocking: Option<f64>,
+    /// Simulated per-server blocking rate `blocked / offered`.
+    pub simulated_blocking: Option<f64>,
 }
 
 /// Outcome of [`validate`]: the aggregate comparison, per-server rows, and
@@ -126,13 +270,26 @@ pub struct ValidationReport {
     pub analytic_mean_sojourn: f64,
     pub simulated_mean_sojourn: f64,
     /// `rel_diff` of the two means; +∞ when incomparable (saturation,
-    /// zero samples).
+    /// zero samples). Kept on the historical `T = Σ value(F)` definition
+    /// for artifact continuity — the hard check is `pk_mean_rel_error`.
     pub mean_rel_error: f64,
+    /// M/G/1 aggregate prediction: Σ per-server analytic occupancy,
+    /// divided by the admitted arrival rate (Little's law; the admitted
+    /// rate is λ scaled by the fraction of arrivals not dropped).
+    pub pk_mean_sojourn: f64,
+    /// `rel_diff` of the M/G/1 aggregate against the simulated mean — the
+    /// headline hard check.
+    pub pk_mean_rel_error: f64,
     /// Largest per-server `rel_error` among servers with ρ ≥ [`RHO_FLOOR`].
     pub max_server_rel_error: f64,
     /// Post-warm-up completions backing the simulated mean.
     pub samples: u64,
     pub overload_dropped: u64,
+    /// Requests dropped at full per-queue FIFOs (0 on uncapped runs).
+    pub queue_dropped: u64,
+    /// Effective `(cpu, link)` FIFO caps of the validated run (`u64::MAX`
+    /// = kind unbounded); `None` for an uncapped run.
+    pub queue_caps: Option<(u64, u64)>,
     pub servers: Vec<ServerDivergence>,
     pub alarm: bool,
     pub alarm_reasons: Vec<String>,
@@ -173,13 +330,77 @@ pub fn validate(
     let lambda: f64 = net.input_rate.iter().flat_map(|r| r.iter()).sum();
     ensure!(lambda > 0.0, "network offers no traffic (λ = 0)");
 
+    // Per-server service classes from the converged flows: one exponential
+    // class per task touching the server. CPU i serves task m at rate
+    // g_m(i) with mean w_im/cap; link e serves data at rate f⁻ with unit
+    // size and results at request rate f⁺/a_m with size a_m.
+    let mut cpu_classes: Vec<Vec<SvcClass>> = (0..net.n()).map(|_| Vec::new()).collect();
+    let mut link_classes: Vec<Vec<SvcClass>> = (0..net.e()).map(|_| Vec::new()).collect();
+    for m in 0..net.s() {
+        let a = net.a_of(m);
+        for (i, classes) in cpu_classes.iter_mut().enumerate() {
+            let g = flows.g[m][i];
+            if g > 0.0 {
+                if let Some(cap) = net.comp_cost[i].capacity() {
+                    classes.push(SvcClass {
+                        rate: g,
+                        mean: net.w_of(i, m) / cap,
+                    });
+                }
+            }
+        }
+        for (e, classes) in link_classes.iter_mut().enumerate() {
+            let Some(cap) = net.link_cost[e].capacity() else {
+                continue;
+            };
+            let fd = flows.f_minus[m][e];
+            if fd > 0.0 {
+                classes.push(SvcClass {
+                    rate: fd,
+                    mean: 1.0 / cap,
+                });
+            }
+            let fr = flows.f_plus[m][e];
+            if fr > 0.0 && a > 0.0 {
+                classes.push(SvcClass {
+                    rate: fr / a,
+                    mean: a / cap,
+                });
+            }
+        }
+    }
+
+    let queue_caps = t.queue_caps;
+    let (cpu_fifo, link_fifo) = queue_caps.unwrap_or((u64::MAX, u64::MAX));
+    let fifo_of = |kind_cap: u64, cost: &CostFn| {
+        (kind_cap != u64::MAX && cost.capacity().is_some()).then_some(kind_cap)
+    };
     let mut servers = Vec::with_capacity(net.n() + net.e());
-    let mut push = |name: String, cost: &CostFn, flow: f64, simulated: f64| {
+    let mut push = |name: String,
+                    cost: &CostFn,
+                    flow: f64,
+                    simulated: f64,
+                    classes: &[SvcClass],
+                    kind_cap: u64,
+                    blocked: u64,
+                    offered: u64| {
+        let fifo = fifo_of(kind_cap, cost);
         let (rho, saturated) = match cost.capacity() {
-            Some(cap) => (flow / cap, flow >= cap),
+            Some(cap) => (flow / cap, flow >= cap && fifo.is_none()),
             None => (0.0, false),
         };
-        let analytic = cost.value(flow);
+        let analytic = analytic_occupancy(cost, flow, classes, fifo);
+        let (expected_blocking, simulated_blocking) = match fifo {
+            Some(k) => (
+                Some(erlang_blocking(rho, k)),
+                Some(if offered > 0 {
+                    blocked as f64 / offered as f64
+                } else {
+                    0.0
+                }),
+            ),
+            None => (None, None),
+        };
         servers.push(ServerDivergence {
             name,
             flow,
@@ -188,6 +409,9 @@ pub fn validate(
             simulated,
             rel_error: guarded_rel(analytic, simulated),
             saturated,
+            queue_cap: fifo,
+            expected_blocking,
+            simulated_blocking,
         });
     };
     for i in 0..net.n() {
@@ -196,6 +420,10 @@ pub fn validate(
             &net.comp_cost[i],
             flows.workload[i],
             t.node_occupancy[i],
+            &cpu_classes[i],
+            cpu_fifo,
+            t.node_blocked[i],
+            t.node_offered[i],
         );
     }
     for e in 0..net.e() {
@@ -204,6 +432,10 @@ pub fn validate(
             &net.link_cost[e],
             flows.link_flow[e],
             t.link_occupancy[e],
+            &link_classes[e],
+            link_fifo,
+            t.link_blocked[e],
+            t.link_offered[e],
         );
     }
 
@@ -215,6 +447,25 @@ pub fn validate(
         f64::INFINITY
     } else {
         guarded_rel(analytic_mean, simulated_mean)
+    };
+    // M/G/1 aggregate: Little's law over the per-server analytic
+    // occupancies, at the *admitted* rate on capped runs — blocked
+    // arrivals hold no queue slot and contribute no sojourn sample.
+    let pk_cost: f64 = servers.iter().map(|s| s.analytic).sum();
+    let admitted_frac = if queue_caps.is_some() && t.arrived > 0 {
+        (t.arrived - t.overload_dropped - t.queue_dropped) as f64 / t.arrived as f64
+    } else {
+        1.0
+    };
+    let pk_mean = if admitted_frac > 0.0 {
+        pk_cost / (lambda * admitted_frac)
+    } else {
+        f64::INFINITY
+    };
+    let pk_mean_rel_error = if samples == 0 {
+        f64::INFINITY
+    } else {
+        guarded_rel(pk_mean, simulated_mean)
     };
     let max_server_rel_error = servers
         .iter()
@@ -230,6 +481,41 @@ pub fn validate(
             fnum(s.flow)
         ));
     }
+    // Per-server M/G/1 hard check (graduated from the old diagnostic-only
+    // rows): meaningful utilization, meaningful absolute gap, relative
+    // error beyond tolerance. Saturated servers already alarmed above.
+    for s in servers.iter().filter(|s| !s.saturated) {
+        if s.rho >= RHO_FLOOR
+            && s.rel_error > tol
+            && (s.analytic - s.simulated).abs() > SERVER_ABS_FLOOR
+        {
+            reasons.push(format!(
+                "{}: simulated occupancy {} diverges from the M/G/1 analytic {} \
+                 (rel err {} > tol {})",
+                s.name,
+                fnum(s.simulated),
+                fnum(s.analytic),
+                fnum(s.rel_error),
+                fnum(tol)
+            ));
+        }
+    }
+    // One-sided Erlang blocking check: simulated drop rates above the
+    // analytic prediction mean the loss queue is worse than its model.
+    for s in &servers {
+        if let (Some(eb), Some(sb)) = (s.expected_blocking, s.simulated_blocking) {
+            if sb > eb + tol {
+                reasons.push(format!(
+                    "{}: simulated blocking {} exceeds the Erlang prediction {} \
+                     by more than tol {}",
+                    s.name,
+                    fnum(sb),
+                    fnum(eb),
+                    fnum(tol)
+                ));
+            }
+        }
+    }
     if t.overload_dropped > 0 {
         reasons.push(format!(
             "{} arrival(s) dropped at the in-flight ceiling — strategy overloaded",
@@ -238,12 +524,12 @@ pub fn validate(
     }
     if samples == 0 {
         reasons.push("no post-warm-up completions to compare".to_string());
-    } else if mean_rel_error > tol {
+    } else if pk_mean_rel_error > tol {
         reasons.push(format!(
-            "mean sojourn diverges: analytic {} vs simulated {} (rel err {} > tol {})",
-            fnum(analytic_mean),
+            "mean sojourn diverges: analytic (M/G/1) {} vs simulated {} (rel err {} > tol {})",
+            fnum(pk_mean),
             fnum(simulated_mean),
-            fnum(mean_rel_error),
+            fnum(pk_mean_rel_error),
             fnum(tol)
         ));
     }
@@ -255,9 +541,13 @@ pub fn validate(
         analytic_mean_sojourn: analytic_mean,
         simulated_mean_sojourn: simulated_mean,
         mean_rel_error,
+        pk_mean_sojourn: pk_mean,
+        pk_mean_rel_error,
         max_server_rel_error,
         samples,
         overload_dropped: t.overload_dropped,
+        queue_dropped: t.queue_dropped,
+        queue_caps,
         servers,
         alarm,
         alarm_reasons: reasons,
@@ -265,30 +555,38 @@ pub fn validate(
 }
 
 impl ValidationReport {
-    /// Human-readable divergence report: aggregate line, per-server table,
-    /// alarm verdict.
+    /// Human-readable divergence report: aggregate line, per-server table
+    /// (blocking columns appear on capped runs), alarm verdict.
     pub fn render(&self) -> String {
+        let capped = self.queue_caps.is_some();
         let mut out = String::new();
         out.push_str(&format!(
             "closed-loop validation (tol {}):\n  λ = {}  analytic cost T = {}\n  \
-             mean sojourn: analytic T/λ = {} vs simulated {}  (rel err {}, {} sample(s))\n",
+             mean sojourn: analytic T/λ = {} vs simulated {}  (rel err {}, {} sample(s))\n  \
+             M/G/1 mean sojourn: analytic {} vs simulated {}  (rel err {})\n",
             fnum(self.tol),
             fnum(self.lambda),
             fnum(self.analytic_cost),
             fnum(self.analytic_mean_sojourn),
             fnum(self.simulated_mean_sojourn),
             fnum(self.mean_rel_error),
-            self.samples
+            self.samples,
+            fnum(self.pk_mean_sojourn),
+            fnum(self.simulated_mean_sojourn),
+            fnum(self.pk_mean_rel_error),
         ));
-        let mut tbl = Table::new(&[
-            "server",
-            "flow",
-            "rho",
-            "analytic L",
-            "simulated L",
-            "rel err",
-            "status",
-        ]);
+        if capped {
+            out.push_str(&format!(
+                "  per-queue admission: {} request(s) dropped at full FIFOs\n",
+                self.queue_dropped
+            ));
+        }
+        let mut headers = vec!["server", "flow", "rho", "analytic L", "simulated L", "rel err"];
+        if capped {
+            headers.extend(["cap", "erlang B", "sim B"]);
+        }
+        headers.push("status");
+        let mut tbl = Table::new(&headers);
         for s in &self.servers {
             let status = if s.saturated {
                 "SATURATED".to_string()
@@ -297,15 +595,21 @@ impl ValidationReport {
             } else {
                 "ok".to_string()
             };
-            tbl.row(vec![
+            let mut row = vec![
                 s.name.clone(),
                 fnum(s.flow),
                 fnum(s.rho),
                 fnum(s.analytic),
                 fnum(s.simulated),
                 fnum(s.rel_error),
-                status,
-            ]);
+            ];
+            if capped {
+                row.push(s.queue_cap.map_or("-".to_string(), |k| k.to_string()));
+                row.push(s.expected_blocking.map_or("-".to_string(), fnum));
+                row.push(s.simulated_blocking.map_or("-".to_string(), fnum));
+            }
+            row.push(status);
+            tbl.row(row);
         }
         out.push_str(&tbl.render());
         if self.alarm {
@@ -343,13 +647,23 @@ impl ValidationReport {
             )
             .set("mean_rel_error", Json::Num(self.mean_rel_error))
             .set("mean_rel_error_bits", Json::Str(bits_hex(self.mean_rel_error)))
+            .set("pk_mean_sojourn", Json::Num(self.pk_mean_sojourn))
+            .set(
+                "pk_mean_sojourn_bits",
+                Json::Str(bits_hex(self.pk_mean_sojourn)),
+            )
+            .set("pk_mean_rel_error", Json::Num(self.pk_mean_rel_error))
+            .set(
+                "pk_mean_rel_error_bits",
+                Json::Str(bits_hex(self.pk_mean_rel_error)),
+            )
             .set("max_server_rel_error", Json::Num(self.max_server_rel_error))
             .set(
                 "max_server_rel_error_bits",
                 Json::Str(bits_hex(self.max_server_rel_error)),
             )
-            .set("samples", Json::Num(self.samples as f64))
-            .set("overload_dropped", Json::Num(self.overload_dropped as f64))
+            .set("samples", num_u64(self.samples))
+            .set("overload_dropped", num_u64(self.overload_dropped))
             .set("alarm", Json::Bool(self.alarm))
             .set(
                 "alarm_reasons",
@@ -374,11 +688,44 @@ impl ValidationReport {
                                 .set("simulated_occupancy", Json::Num(s.simulated))
                                 .set("rel_error", Json::Num(s.rel_error))
                                 .set("saturated", Json::Bool(s.saturated));
+                            // Blocking columns exist exactly when this
+                            // server ran under a finite FIFO cap, keeping
+                            // uncapped reports byte-stable.
+                            if let (Some(k), Some(eb), Some(sb)) = (
+                                s.queue_cap,
+                                s.expected_blocking,
+                                s.simulated_blocking,
+                            ) {
+                                so.set("queue_cap", num_u64(k))
+                                    .set("expected_blocking", Json::Num(eb))
+                                    .set(
+                                        "expected_blocking_bits",
+                                        Json::Str(bits_hex(eb)),
+                                    )
+                                    .set("simulated_blocking", Json::Num(sb))
+                                    .set(
+                                        "simulated_blocking_bits",
+                                        Json::Str(bits_hex(sb)),
+                                    );
+                            }
                             so
                         })
                         .collect(),
                 ),
             );
+        if let Some((cpu_cap, link_cap)) = self.queue_caps {
+            let cap_json = |c: u64| {
+                if c == u64::MAX {
+                    Json::Str("unbounded".to_string())
+                } else {
+                    num_u64(c)
+                }
+            };
+            let mut caps = Json::obj();
+            caps.set("cpu", cap_json(cpu_cap)).set("link", cap_json(link_cap));
+            o.set("queue_cap", caps)
+                .set("queue_dropped", num_u64(self.queue_dropped));
+        }
         o
     }
 }
@@ -386,11 +733,110 @@ impl ValidationReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::from_undirected;
     use crate::model::network::testnet::diamond;
+    use crate::model::network::Task;
     use crate::sim::tasks::{simulate, SimEpoch};
 
     fn poisson() -> ArrivalSpec {
         ArrivalSpec::parse("poisson").unwrap()
+    }
+
+    /// Single node pair where both tasks compute locally at node 0 with
+    /// wildly different service sizes (0.05 vs 0.8): an M/M/1 fit is off by
+    /// ~3x while the M/G/1 form is exact.
+    fn hetero_net() -> Network {
+        Network {
+            graph: from_undirected(2, &[(0, 1)]),
+            tasks: vec![Task { dest: 0, ctype: 0 }, Task { dest: 0, ctype: 1 }],
+            num_types: 2,
+            input_rate: vec![vec![4.0, 0.0], vec![0.5, 0.0]],
+            result_ratio: vec![0.05, 0.05],
+            comp_weight: vec![vec![0.05, 0.8]; 2],
+            link_cost: vec![CostFn::Queue { cap: 50.0 }; 2],
+            comp_cost: vec![CostFn::Queue { cap: 1.0 }; 2],
+        }
+    }
+
+    #[test]
+    fn mm1k_and_erlang_formulas_match_hand_computations() {
+        // M/M/1/2 at ρ = 0.5: L = 4/7, B = 1/7.
+        assert!((mm1k_occupancy(0.5, 2) - 4.0 / 7.0).abs() < 1e-12);
+        assert!((erlang_blocking(0.5, 2) - 1.0 / 7.0).abs() < 1e-12);
+        // ρ = 1 limits: L = K/2, B = 1/(K+1).
+        assert!((mm1k_occupancy(1.0, 2) - 1.0).abs() < 1e-9);
+        assert!((erlang_blocking(1.0, 2) - 1.0 / 3.0).abs() < 1e-9);
+        // Overloaded loss queue stays finite: ρ = 1.5, K = 2 → L = 6/4.75.
+        assert!((mm1k_occupancy(1.5, 2) - 6.0 / 4.75).abs() < 1e-12);
+        assert!((erlang_blocking(1.5, 2) - 1.125 / 2.375).abs() < 1e-12);
+        // Degenerate inputs are tame.
+        assert_eq!(mm1k_occupancy(0.0, 4), 0.0);
+        assert_eq!(erlang_blocking(0.0, 4), 0.0);
+        assert!(erlang_blocking(f64::NAN, 4) == 1.0);
+        // Huge ρ^K overflow guards: blocking → (ρ−1)/ρ, occupancy → K − 1/(ρ−1).
+        assert!((erlang_blocking(2.0, 4096) - 0.5).abs() < 1e-12);
+        assert!(mm1k_occupancy(2.0, 4096).is_finite());
+    }
+
+    #[test]
+    fn heterogeneous_service_graduates_to_a_hard_check() {
+        let net = hetero_net();
+        let phi = Strategy::local_compute_init(&net);
+        let plan = SimPlan {
+            epochs: vec![SimEpoch {
+                net: net.clone(),
+                phi: phi.clone(),
+            }],
+        };
+        let cfg = SimConfig {
+            requests: 80_000,
+            warmup: 0.1,
+            seed: 11,
+            ..SimConfig::default()
+        };
+        let t = simulate(&plan, &poisson(), &cfg).unwrap();
+        let report = validate(&net, &phi, &t, 0.25).unwrap();
+        let cpu0 = &report.servers[0];
+        assert_eq!(cpu0.name, "cpu:0");
+        // ρ = 4·0.05 + 0.5·0.8 = 0.6; P-K with λ·E[S²] = 0.66 gives
+        // L = 0.6 + 4.5·0.66/0.8 = 4.3125, vs the M/M/1 fit of 1.5.
+        assert!(
+            (cpu0.analytic - 4.3125).abs() < 1e-6,
+            "P-K occupancy {} != 4.3125",
+            cpu0.analytic
+        );
+        assert!(
+            cpu0.rel_error <= 0.25,
+            "M/G/1 row diverged: {}",
+            cpu0.rel_error
+        );
+        // The M/M/1 closed form the validator used to trust is ~3x off the
+        // simulated occupancy — the scenario the hard check must catch.
+        let mm1 = net.comp_cost[0].value(cpu0.flow);
+        assert!(
+            rel_diff(mm1, cpu0.simulated) > 0.25,
+            "M/M/1 fit {mm1} unexpectedly matches simulated {}",
+            cpu0.simulated
+        );
+        // Value-based aggregate (historical column) fails; the M/G/1
+        // headline passes, so the report stays quiet.
+        assert!(report.mean_rel_error > 0.25, "{}", report.mean_rel_error);
+        assert!(
+            report.pk_mean_rel_error <= 0.25,
+            "{}",
+            report.pk_mean_rel_error
+        );
+        assert!(
+            !report.alarm,
+            "expected quiet alarm, got: {:?}",
+            report.alarm_reasons
+        );
+        // Uncapped run: no blocking columns, no capped report keys.
+        assert!(report.queue_caps.is_none());
+        assert!(cpu0.queue_cap.is_none() && cpu0.expected_blocking.is_none());
+        let dump = report.to_json().dump();
+        assert!(!dump.contains("\"queue_cap\"") && !dump.contains("queue_dropped"));
+        assert!(dump.contains("pk_mean_rel_error_bits"));
     }
 
     #[test]

@@ -19,6 +19,17 @@
 //! and `SmoothCap{slope,cap,..}` is the rate-capped server plus its
 //! deterministic `slope·size` propagation term.
 //!
+//! Admission control happens at two granularities. A **global** in-flight
+//! ceiling (`SimConfig::max_in_flight`) refuses arrivals before they touch
+//! any queue (`Telemetry::overload_dropped`). A **per-queue** finite
+//! capacity (`SimConfig::queue_cap` plus per-kind overrides) turns each
+//! queued server into an M/M/1/K loss queue: a request whose next FIFO is
+//! full is dropped where it stands, counted once against that server's
+//! `blocked` counter and once in the global `Telemetry::queue_dropped` —
+//! never against the overload counter, which was settled earlier in
+//! `admit`. Uncapped runs take the exact pre-capacity code path and stay
+//! bit-identical.
+//!
 //! Engineering constraints (acceptance criteria of the PR 6 issue):
 //!
 //! * request state lives in a generation-indexed slab arena — after
@@ -86,6 +97,21 @@ pub struct SimConfig {
     /// outcome the closed-loop validator can alarm on. The default is high
     /// enough that only a genuinely divergent queue ever reaches it.
     pub max_in_flight: usize,
+    /// Finite per-server FIFO capacity (queue + in service — the `K` of an
+    /// M/M/1/K loss queue), applied to every queued server. A request that
+    /// finds its next FIFO full is dropped where it stands: the server's
+    /// `blocked` counter and the global `Telemetry::queue_dropped` each
+    /// move by exactly one. `None` (the default) keeps every FIFO
+    /// unbounded — bit-identical to the engine before per-queue admission
+    /// control existed. `Linear` servers are infinite-server delay
+    /// elements with nothing to overflow and never block.
+    pub queue_cap: Option<u64>,
+    /// Per-kind override: FIFO capacity for compute servers only. Takes
+    /// precedence over `queue_cap` for CPUs when set.
+    pub cpu_queue_cap: Option<u64>,
+    /// Per-kind override: FIFO capacity for link servers only. Takes
+    /// precedence over `queue_cap` for links when set.
+    pub link_queue_cap: Option<u64>,
 }
 
 impl Default for SimConfig {
@@ -95,7 +121,29 @@ impl Default for SimConfig {
             warmup: 0.05,
             seed: 1,
             max_in_flight: MAX_IN_FLIGHT,
+            queue_cap: None,
+            cpu_queue_cap: None,
+            link_queue_cap: None,
         }
+    }
+}
+
+impl SimConfig {
+    /// Effective `(cpu, link)` FIFO capacities after folding the per-kind
+    /// overrides over the global default; `None` when no cap was set at
+    /// all (the unbounded pre-admission-control engine). A kind left
+    /// unbounded by a partial override is reported as `u64::MAX`.
+    pub fn effective_queue_caps(&self) -> Option<(u64, u64)> {
+        if self.queue_cap.is_none()
+            && self.cpu_queue_cap.is_none()
+            && self.link_queue_cap.is_none()
+        {
+            return None;
+        }
+        Some((
+            self.cpu_queue_cap.or(self.queue_cap).unwrap_or(u64::MAX),
+            self.link_queue_cap.or(self.queue_cap).unwrap_or(u64::MAX),
+        ))
     }
 }
 
@@ -148,6 +196,12 @@ struct Server {
     /// occupancy `CostFn::value(F)`.
     area: f64,
     last_change: f64,
+    /// Admission attempts refused because the FIFO held its full
+    /// `queue_cap` complement (0 on unbounded runs).
+    blocked: u64,
+    /// Admission attempts, accepted or blocked — the exact denominator of
+    /// this server's simulated blocking rate `blocked / offered`.
+    offered: u64,
 }
 
 impl Server {
@@ -210,6 +264,11 @@ struct Engine<'a> {
     free: Vec<u32>,
     in_flight: usize,
     inflight_cap: usize,
+    /// Effective `(cpu, link)` FIFO capacities (`SimConfig::
+    /// effective_queue_caps`); `None` leaves every queue unbounded.
+    queue_caps: Option<(u64, u64)>,
+    cpu_cap: u64,
+    link_cap: u64,
     links: Vec<Server>,
     cpus: Vec<Server>,
     telemetry: Telemetry,
@@ -251,6 +310,14 @@ pub(crate) fn simulate_with(
     if !(0.0..1.0).contains(&cfg.warmup) {
         bail!("warmup fraction must be in [0,1), got {}", cfg.warmup);
     }
+    for c in [cfg.queue_cap, cfg.cpu_queue_cap, cfg.link_queue_cap]
+        .into_iter()
+        .flatten()
+    {
+        if c == 0 {
+            bail!("per-queue capacity must be ≥ 1 (a zero-slot FIFO would block every request)");
+        }
+    }
     let reopt_state = match reopt {
         Some(rc) => {
             if !(rc.interval.is_finite() && rc.interval > 0.0) {
@@ -281,6 +348,8 @@ pub(crate) fn simulate_with(
         .map(|ep| EpochRates::of(&ep.net))
         .collect();
     let stream = ArrivalStream::new(arrivals, rates, cfg.requests, cfg.seed)?;
+    let queue_caps = cfg.effective_queue_caps();
+    let (cpu_cap, link_cap) = queue_caps.unwrap_or((u64::MAX, u64::MAX));
     let mut engine = Engine {
         plan,
         queue: EventQueue::new(),
@@ -288,6 +357,9 @@ pub(crate) fn simulate_with(
         free: Vec::new(),
         in_flight: 0,
         inflight_cap: cfg.max_in_flight,
+        queue_caps,
+        cpu_cap,
+        link_cap,
         links: vec![Server::default(); e],
         cpus: vec![Server::default(); n],
         telemetry: Telemetry::new(n, e),
@@ -336,16 +408,21 @@ impl Engine<'_> {
     fn into_telemetry(mut self) -> Telemetry {
         self.telemetry.end_time = self.queue.now();
         self.telemetry.events = self.queue.processed;
+        self.telemetry.queue_caps = self.queue_caps;
         let end = self.telemetry.end_time;
         for (i, srv) in self.cpus.iter().enumerate() {
             self.telemetry.node_busy[i] = srv.busy;
             self.telemetry.node_peak[i] = srv.peak;
             self.telemetry.node_occupancy[i] = srv.occupancy(end);
+            self.telemetry.node_blocked[i] = srv.blocked;
+            self.telemetry.node_offered[i] = srv.offered;
         }
         for (e, srv) in self.links.iter().enumerate() {
             self.telemetry.link_busy[e] = srv.busy;
             self.telemetry.link_peak[e] = srv.peak;
             self.telemetry.link_occupancy[e] = srv.occupancy(end);
+            self.telemetry.link_blocked[e] = srv.blocked;
+            self.telemetry.link_offered[e] = srv.offered;
         }
         self.telemetry
     }
@@ -452,17 +529,21 @@ impl Engine<'_> {
         if choice == 0 {
             // Compute here: CPU service of requirement w_im × unit size.
             let size = ep.net.w_of(node, task);
+            if !self.try_enter(SrvRef::Cpu(node), &ep.net.comp_cost[node], now) {
+                return self.block(idx);
+            }
             self.slots[idx].phase = Phase::Compute;
-            self.cpus[node].enter(now);
             let done = self.serve(SrvRef::Cpu(node), &ep.net.comp_cost[node], size, idx);
             self.schedule_hop(idx, done);
         } else {
             let eid = ep.net.graph.out_edge_ids(node)[choice - 1];
             let dst = ep.net.graph.edge(eid).dst;
+            if !self.try_enter(SrvRef::Link(eid), &ep.net.link_cost[eid], now) {
+                return self.block(idx);
+            }
             self.slots[idx].phase = Phase::Data;
             self.slots[idx].node = dst as u32;
             self.slots[idx].hop_edge = eid as u32;
-            self.links[eid].enter(now);
             let done = self.serve(SrvRef::Link(eid), &ep.net.link_cost[eid], 1.0, idx);
             self.schedule_hop(idx, done);
         }
@@ -489,11 +570,57 @@ impl Engine<'_> {
         let eid = ep.net.graph.out_edge_ids(node)[k];
         let dst = ep.net.graph.edge(eid).dst;
         let size = ep.net.a_of(task);
+        let now = self.queue.now();
+        if !self.try_enter(SrvRef::Link(eid), &ep.net.link_cost[eid], now) {
+            return self.block(idx);
+        }
         self.slots[idx].node = dst as u32;
         self.slots[idx].hop_edge = eid as u32;
-        self.links[eid].enter(self.queue.now());
         let done = self.serve(SrvRef::Link(eid), &ep.net.link_cost[eid], size, idx);
         self.schedule_hop(idx, done);
+        Ok(())
+    }
+
+    /// Admit one request into a server's FIFO unless finite capacity
+    /// refuses it. Only queued kinds can block — `Linear` is an
+    /// infinite-server delay element with nothing to overflow — and
+    /// capacity counts queue plus in-service occupants
+    /// (`Server::in_system`), the `K` of an M/M/1/K loss queue. Every
+    /// attempt is recorded as offered so per-server blocking rates carry
+    /// an exact denominator. With the default unbounded caps the
+    /// admission test can never fire and the engine's event and RNG
+    /// streams are bit-identical to the pre-capacity engine.
+    fn try_enter(&mut self, srv: SrvRef, cost: &CostFn, now: f64) -> bool {
+        let cap = match srv {
+            SrvRef::Cpu(_) => self.cpu_cap,
+            SrvRef::Link(_) => self.link_cap,
+        };
+        let queued = !matches!(cost, CostFn::Linear { .. });
+        let state = match srv {
+            SrvRef::Cpu(i) => &mut self.cpus[i],
+            SrvRef::Link(e) => &mut self.links[e],
+        };
+        state.offered += 1;
+        if queued && state.in_system >= cap {
+            state.blocked += 1;
+            return false;
+        }
+        state.enter(now);
+        true
+    }
+
+    /// A full FIFO refused the next hop: count the drop under its own name
+    /// and release the slot. Kept separate from `strand` (strategy
+    /// dead-end) and from `overload_dropped` (global in-flight ceiling,
+    /// counted in `admit` before any queue is consulted), so the three
+    /// drop reasons can never double-count one arrival and the widened
+    /// conservation invariant stays exact:
+    /// `completed + stranded + overload_dropped + queue_dropped == arrived`.
+    /// The reopt observation window saw this arrival exactly once, in
+    /// `admit` — blocked offered load still informs the rate estimate.
+    fn block(&mut self, idx: usize) -> Result<()> {
+        self.telemetry.queue_dropped += 1;
+        self.release(idx);
         Ok(())
     }
 
@@ -766,6 +893,7 @@ mod tests {
             warmup: 0.0,
             seed: 9,
             max_in_flight: 1,
+            ..SimConfig::default()
         };
         let t = simulate(&plan_of(net, phi), &poisson(), &cfg).unwrap();
         assert!(t.overload_dropped > 0, "ceiling of 1 must drop arrivals");
@@ -785,6 +913,7 @@ mod tests {
             warmup: 0.0,
             seed: 2,
             max_in_flight: 0,
+            ..SimConfig::default()
         };
         let t = simulate(&plan_of(net, phi), &poisson(), &cfg).unwrap();
         assert_eq!(t.overload_dropped, 100);
@@ -793,6 +922,97 @@ mod tests {
         // (satellite: no NaN→null leaks from the empty sketch).
         let dump = t.to_json().dump();
         assert!(!dump.contains("null"), "empty telemetry leaked null: {dump}");
+    }
+
+    #[test]
+    fn tight_queue_cap_blocks_and_conserves() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let cfg = SimConfig {
+            requests: 4_000,
+            warmup: 0.0,
+            seed: 13,
+            queue_cap: Some(1),
+            ..SimConfig::default()
+        };
+        let t = simulate(&plan_of(net, phi), &poisson(), &cfg).unwrap();
+        assert!(t.queue_dropped > 0, "cap of 1 must block some arrivals");
+        assert_eq!(t.overload_dropped, 0, "global ceiling must stay out of it");
+        // Widened conservation: every arrival is accounted for exactly once.
+        assert_eq!(
+            t.completed + t.stranded + t.overload_dropped + t.queue_dropped,
+            t.arrived
+        );
+        // Per-server blocked counters decompose the global drop counter.
+        let blocked: u64 =
+            t.node_blocked.iter().sum::<u64>() + t.link_blocked.iter().sum::<u64>();
+        assert_eq!(blocked, t.queue_dropped);
+        // Capacity binds the in-system high-water marks.
+        for &p in t.node_peak.iter().chain(t.link_peak.iter()) {
+            assert!(p <= 1, "peak {p} escaped the FIFO capacity");
+        }
+        assert_eq!(t.queue_caps, Some((1, 1)));
+    }
+
+    #[test]
+    fn per_kind_override_caps_only_that_kind() {
+        let net = line3();
+        let phi = Strategy::compute_at_dest_init(&net);
+        let cfg = SimConfig {
+            requests: 3_000,
+            warmup: 0.0,
+            seed: 19,
+            cpu_queue_cap: Some(2),
+            ..SimConfig::default()
+        };
+        let t = simulate(&plan_of(net, phi), &poisson(), &cfg).unwrap();
+        assert_eq!(t.queue_caps, Some((2, u64::MAX)));
+        // Links are unbounded: no link ever blocks.
+        assert_eq!(t.link_blocked.iter().sum::<u64>(), 0);
+        for &p in t.node_peak.iter() {
+            assert!(p <= 2, "cpu peak {p} escaped the per-kind capacity");
+        }
+        assert_eq!(
+            t.completed + t.stranded + t.overload_dropped + t.queue_dropped,
+            t.arrived
+        );
+    }
+
+    #[test]
+    fn uncapped_runs_emit_no_queue_cap_telemetry() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let cfg = SimConfig {
+            requests: 500,
+            warmup: 0.0,
+            seed: 4,
+            ..SimConfig::default()
+        };
+        let t = simulate(&plan_of(net, phi), &poisson(), &cfg).unwrap();
+        assert_eq!(t.queue_caps, None);
+        let dump = t.to_json().dump();
+        for key in ["queue_dropped", "queue_cap", "node_blocked", "link_blocked"] {
+            assert!(!dump.contains(key), "uncapped dump leaked {key}: {dump}");
+        }
+    }
+
+    #[test]
+    fn zero_queue_cap_is_rejected() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let plan = plan_of(net, phi);
+        for cfg in [
+            SimConfig {
+                queue_cap: Some(0),
+                ..SimConfig::default()
+            },
+            SimConfig {
+                link_queue_cap: Some(0),
+                ..SimConfig::default()
+            },
+        ] {
+            assert!(simulate(&plan, &poisson(), &cfg).is_err());
+        }
     }
 
     #[test]

@@ -28,6 +28,18 @@ pub(crate) fn bits_hex(x: f64) -> String {
     format!("{:016x}", x.to_bits())
 }
 
+/// Largest `u64` a JSON number (an `f64`) can carry exactly: 2^53.
+pub(crate) const JSON_EXACT_MAX: u64 = 1 << 53;
+
+/// Counter → JSON number, exact up to [`JSON_EXACT_MAX`] and saturating
+/// beyond it. A `x as f64` cast above 2^53 silently rounds to an even
+/// neighbor — a counter that quietly loses its low bits is worse than one
+/// pinned at a documented ceiling, and every consumer can detect the
+/// ceiling exactly.
+pub(crate) fn num_u64(x: u64) -> Json {
+    Json::Num(x.min(JSON_EXACT_MAX) as f64)
+}
+
 /// Streaming counters and sketches for one simulation run.
 #[derive(Clone, Debug)]
 pub struct Telemetry {
@@ -47,6 +59,28 @@ pub struct Telemetry {
     /// (`SimConfig::max_in_flight`) — nonzero means the strategy is
     /// overloaded and the closed-loop validator must alarm.
     pub overload_dropped: u64,
+    /// Requests dropped at a full per-server FIFO
+    /// (`SimConfig::queue_cap`). Disjoint from `overload_dropped` — the
+    /// global ceiling refuses an arrival before any queue is consulted —
+    /// so the widened conservation invariant is exact:
+    /// `completed + stranded + overload_dropped + queue_dropped == arrived`.
+    pub queue_dropped: u64,
+    /// Admissions refused per compute node because its FIFO was full.
+    pub node_blocked: Vec<u64>,
+    /// Admissions refused per directed link because its FIFO was full.
+    pub link_blocked: Vec<u64>,
+    /// Admission attempts per compute node (accepted + blocked) — the
+    /// denominator of the simulated blocking rate the validator compares
+    /// against the Erlang prediction.
+    pub node_offered: Vec<u64>,
+    /// Admission attempts per directed link.
+    pub link_offered: Vec<u64>,
+    /// Effective `(cpu, link)` FIFO capacities of the run (`u64::MAX`
+    /// marks a kind left unbounded by a partial override); `None` for an
+    /// uncapped run. Doubles as the serialization gate: uncapped runs
+    /// emit none of the queue-cap telemetry keys and their JSON is
+    /// bit-identical to the pre-admission-control engine.
+    pub queue_caps: Option<(u64, u64)>,
     /// Busy time per compute node (CPU utilization = busy / end_time).
     pub node_busy: Vec<f64>,
     /// Busy time per directed link.
@@ -85,6 +119,12 @@ impl Telemetry {
             warmup_skipped: 0,
             stranded: 0,
             overload_dropped: 0,
+            queue_dropped: 0,
+            node_blocked: vec![0; nodes],
+            link_blocked: vec![0; links],
+            node_offered: vec![0; nodes],
+            link_offered: vec![0; links],
+            queue_caps: None,
             node_busy: vec![0.0; nodes],
             link_busy: vec![0.0; links],
             node_peak: vec![0; nodes],
@@ -147,6 +187,9 @@ impl Telemetry {
     /// Full JSON report. Quantiles carry both a human-readable number and
     /// authoritative `_bits` hex so determinism checks compare exact bits.
     /// Empty runs emit zeros (with `sojourn.count = 0`), never `null`.
+    /// Counters serialize through [`num_u64`] (exact to 2^53, saturating
+    /// beyond), and every queue-cap key is gated on `queue_caps` so an
+    /// uncapped run's JSON is byte-identical to the pre-capacity engine.
     pub fn to_json(&self) -> Json {
         let (p50, p99, p999) = self.tail();
         let mean = self.mean_sojourn();
@@ -155,8 +198,9 @@ impl Telemetry {
         } else {
             self.sojourn.max()
         };
+        let counters = |xs: &[u64]| Json::Arr(xs.iter().map(|&x| num_u64(x)).collect());
         let mut soj = Json::obj();
-        soj.set("count", Json::Num(self.sojourn.count() as f64))
+        soj.set("count", num_u64(self.sojourn.count()))
             .set("error_bound", Json::Num(self.sojourn.relative_error_bound()))
             .set("p50", Json::Num(p50))
             .set("p50_bits", Json::Str(bits_hex(p50)))
@@ -168,18 +212,18 @@ impl Telemetry {
             .set("mean_bits", Json::Str(bits_hex(mean)))
             .set("max", Json::Num(max));
         let mut j = Json::obj();
-        j.set("arrived", Json::Num(self.arrived as f64))
-            .set("completed", Json::Num(self.completed as f64))
-            .set("warmup_skipped", Json::Num(self.warmup_skipped as f64))
-            .set("stranded", Json::Num(self.stranded as f64))
-            .set("overload_dropped", Json::Num(self.overload_dropped as f64))
-            .set("events", Json::Num(self.events as f64))
+        j.set("arrived", num_u64(self.arrived))
+            .set("completed", num_u64(self.completed))
+            .set("warmup_skipped", num_u64(self.warmup_skipped))
+            .set("stranded", num_u64(self.stranded))
+            .set("overload_dropped", num_u64(self.overload_dropped))
+            .set("events", num_u64(self.events))
             .set("end_time", Json::Num(self.end_time))
             .set("end_time_bits", Json::Str(bits_hex(self.end_time)))
-            .set("max_in_flight", Json::Num(self.max_in_flight as f64))
-            .set("reopt_events", Json::Num(self.reopt_events as f64))
-            .set("reopt_updates", Json::Num(self.reopt_updates as f64))
-            .set("reopt_skipped", Json::Num(self.reopt_skipped as f64))
+            .set("max_in_flight", num_u64(self.max_in_flight))
+            .set("reopt_events", num_u64(self.reopt_events))
+            .set("reopt_updates", num_u64(self.reopt_updates))
+            .set("reopt_skipped", num_u64(self.reopt_skipped))
             .set("sojourn", soj)
             .set(
                 "node_utilization",
@@ -197,14 +241,26 @@ impl Telemetry {
                 "link_occupancy",
                 Json::from_f64_slice(&self.link_occupancy),
             )
-            .set(
-                "node_queue_peak",
-                Json::Arr(self.node_peak.iter().map(|&p| Json::Num(p as f64)).collect()),
-            )
-            .set(
-                "link_queue_peak",
-                Json::Arr(self.link_peak.iter().map(|&p| Json::Num(p as f64)).collect()),
-            );
+            .set("node_queue_peak", counters(&self.node_peak))
+            .set("link_queue_peak", counters(&self.link_peak));
+        if let Some((cpu_cap, link_cap)) = self.queue_caps {
+            let cap_json = |c: u64| {
+                if c == u64::MAX {
+                    Json::Str("unbounded".to_string())
+                } else {
+                    num_u64(c)
+                }
+            };
+            let mut caps = Json::obj();
+            caps.set("cpu", cap_json(cpu_cap))
+                .set("link", cap_json(link_cap));
+            j.set("queue_cap", caps)
+                .set("queue_dropped", num_u64(self.queue_dropped))
+                .set("node_blocked", counters(&self.node_blocked))
+                .set("link_blocked", counters(&self.link_blocked))
+                .set("node_offered", counters(&self.node_offered))
+                .set("link_offered", counters(&self.link_offered));
+        }
         j
     }
 }
@@ -252,6 +308,58 @@ mod tests {
         assert_eq!(
             back.path("sojourn.p50_bits").as_str().unwrap().len(),
             16
+        );
+    }
+
+    #[test]
+    fn counter_serialization_is_exact_to_2_pow_53_then_saturates() {
+        // Below and at the boundary: the f64 carries the exact integer.
+        for x in [0u64, 1, JSON_EXACT_MAX - 1, JSON_EXACT_MAX] {
+            assert_eq!(num_u64(x).as_num(), Some(x as f64));
+            assert_eq!(num_u64(x).as_num().map(|f| f as u64), Some(x));
+        }
+        // Above it: saturate to the documented ceiling instead of rounding
+        // to an even neighbor the way `as f64` silently would.
+        for x in [JSON_EXACT_MAX + 1, JSON_EXACT_MAX + 3, u64::MAX] {
+            assert_eq!(num_u64(x).as_num(), Some(JSON_EXACT_MAX as f64));
+        }
+        // The boundary matters: 2^53 + 1 is the first unrepresentable u64.
+        assert_eq!((JSON_EXACT_MAX + 1) as f64, JSON_EXACT_MAX as f64);
+        // A saturating counter round-trips through dump/parse losslessly.
+        let mut t = Telemetry::new(1, 1);
+        t.events = u64::MAX;
+        let back = Json::parse(&t.to_json().dump()).unwrap();
+        assert_eq!(back.path("events").as_num(), Some(JSON_EXACT_MAX as f64));
+    }
+
+    #[test]
+    fn queue_cap_keys_are_gated_on_capped_runs() {
+        let mut t = Telemetry::new(2, 1);
+        let uncapped = t.to_json().dump();
+        for key in ["queue_cap", "queue_dropped", "node_blocked", "node_offered"] {
+            assert!(!uncapped.contains(key), "uncapped dump leaked {key}");
+        }
+        t.queue_caps = Some((4, u64::MAX));
+        t.queue_dropped = 7;
+        t.node_blocked[1] = 7;
+        t.node_offered[1] = 10;
+        let j = t.to_json();
+        let dump = j.dump();
+        assert!(!dump.contains("null"), "capped telemetry leaked null: {dump}");
+        assert_eq!(j.path("queue_cap.cpu").as_num(), Some(4.0));
+        assert_eq!(
+            j.path("queue_cap.link").as_str(),
+            Some("unbounded"),
+            "partial override must mark the unbounded kind"
+        );
+        assert_eq!(j.path("queue_dropped").as_num(), Some(7.0));
+        assert_eq!(
+            j.get("node_blocked").as_arr().unwrap()[1].as_num(),
+            Some(7.0)
+        );
+        assert_eq!(
+            j.get("node_offered").as_arr().unwrap()[1].as_num(),
+            Some(10.0)
         );
     }
 

@@ -105,6 +105,7 @@ fn under_capacitated_strategy_fires_the_alarm() {
         warmup: 0.05,
         seed: 5,
         max_in_flight: 256,
+        ..SimConfig::default()
     };
     let t = simulate(&plan, &poisson(), &cfg).unwrap();
     assert!(t.overload_dropped > 0, "overload never hit the ceiling");
@@ -196,6 +197,7 @@ fn zero_sample_artifacts_stay_parseable() {
         warmup: 0.05,
         seed: 3,
         max_in_flight: 0,
+        ..SimConfig::default()
     };
     let t = simulate(&plan, &poisson(), &cfg).unwrap();
     assert_eq!(t.overload_dropped, t.arrived);

@@ -1,0 +1,191 @@
+//! Per-queue finite-capacity admission control end to end: blocking must
+//! be monotone non-increasing in the FIFO capacity, every capped run must
+//! satisfy the widened conservation invariant
+//! `completed + stranded + overload_dropped + queue_dropped == arrived`,
+//! an effectively-unbounded cap must reproduce the uncapped engine's
+//! headline numbers bit-for-bit (same RNG draws — a cap that never binds
+//! must not perturb the event stream), and a capped M/M/1/K scenario must
+//! pass the validator's Erlang blocking check.
+
+use cecflow::graph::from_undirected;
+use cecflow::model::cost::CostFn;
+use cecflow::model::network::{Network, Task};
+use cecflow::model::strategy::Strategy;
+use cecflow::sim::{simulate, validate, ArrivalSpec, SimConfig, SimEpoch, SimPlan, Telemetry};
+
+/// Two nodes, one bidirectional link; one task whose data enters and
+/// completes at node 0, so the all-local strategy drives an isolated
+/// M/M/1 (or M/M/1/K when capped) queue at node 0's CPU.
+fn two_node(cap0: f64, lambda: f64) -> Network {
+    let graph = from_undirected(2, &[(0, 1)]);
+    let e = graph.edge_count();
+    Network {
+        graph,
+        tasks: vec![Task { dest: 0, ctype: 0 }],
+        num_types: 1,
+        input_rate: vec![vec![lambda, 0.0]],
+        result_ratio: vec![0.5],
+        comp_weight: vec![vec![1.0]; 2],
+        link_cost: vec![CostFn::Queue { cap: 10.0 }; e],
+        comp_cost: vec![CostFn::Queue { cap: cap0 }, CostFn::Queue { cap: 8.0 }],
+    }
+}
+
+fn run(net: &Network, cfg: &SimConfig) -> Telemetry {
+    let phi = Strategy::local_compute_init(net);
+    let plan = SimPlan {
+        epochs: vec![SimEpoch {
+            net: net.clone(),
+            phi: phi.clone(),
+        }],
+    };
+    simulate(&plan, &ArrivalSpec::parse("poisson").unwrap(), cfg).unwrap()
+}
+
+fn assert_conserved(t: &Telemetry) {
+    assert_eq!(
+        t.completed + t.stranded + t.overload_dropped + t.queue_dropped,
+        t.arrived,
+        "conservation invariant violated"
+    );
+    let blocked: u64 = t.node_blocked.iter().chain(t.link_blocked.iter()).sum();
+    assert_eq!(
+        blocked, t.queue_dropped,
+        "per-server blocked counters must sum to the global drop count"
+    );
+}
+
+/// ρ = 0.75 at node 0: every tested capacity binds, and a larger FIFO can
+/// only admit more — the drop count must be monotone non-increasing in K.
+#[test]
+fn blocking_is_monotone_non_increasing_in_capacity() {
+    let net = two_node(2.0, 1.5);
+    net.assert_valid();
+    let mut last = u64::MAX;
+    for cap in [1u64, 2, 4, 8] {
+        let t = run(
+            &net,
+            &SimConfig {
+                requests: 10_000,
+                warmup: 0.0,
+                seed: 29,
+                queue_cap: Some(cap),
+                ..SimConfig::default()
+            },
+        );
+        assert_conserved(&t);
+        assert!(t.queue_dropped > 0, "cap {cap} never blocked at ρ = 0.75");
+        assert_eq!(t.overload_dropped, 0, "per-queue drops must not double-count");
+        assert!(
+            t.queue_dropped <= last,
+            "blocking increased from {last} to {} when the cap grew to {cap}",
+            t.queue_dropped
+        );
+        last = t.queue_dropped;
+        // the FIFO really is bounded: peak in-system never exceeds K
+        assert!(t.node_peak.iter().all(|&p| p <= cap), "{:?}", t.node_peak);
+    }
+}
+
+/// A cap that never binds must not perturb the engine: same RNG draws,
+/// same event stream, bit-identical headline telemetry — and the uncapped
+/// run's JSON must not grow any admission-control keys (the determinism
+/// contract: absent flags reproduce pre-admission-control artifacts).
+#[test]
+fn unbound_cap_reproduces_uncapped_run_bit_for_bit() {
+    let net = two_node(2.0, 1.0);
+    let cfg = SimConfig {
+        requests: 8_000,
+        warmup: 0.05,
+        seed: 41,
+        ..SimConfig::default()
+    };
+    let plain = run(&net, &cfg);
+    let huge = run(
+        &net,
+        &SimConfig {
+            queue_cap: Some(1 << 40),
+            ..cfg
+        },
+    );
+    assert_eq!(plain.queue_caps, None);
+    assert_eq!(huge.queue_caps, Some((1 << 40, 1 << 40)));
+    assert_eq!(huge.queue_dropped, 0);
+    // headline numbers agree bit-for-bit with the uncapped run
+    assert_eq!(plain.arrived, huge.arrived);
+    assert_eq!(plain.completed, huge.completed);
+    assert_eq!(plain.events, huge.events);
+    assert_eq!(plain.end_time.to_bits(), huge.end_time.to_bits());
+    assert_eq!(
+        plain.mean_sojourn().to_bits(),
+        huge.mean_sojourn().to_bits()
+    );
+    let (p50a, p99a, p999a) = plain.tail();
+    let (p50b, p99b, p999b) = huge.tail();
+    assert_eq!(p50a.to_bits(), p50b.to_bits());
+    assert_eq!(p99a.to_bits(), p99b.to_bits());
+    assert_eq!(p999a.to_bits(), p999b.to_bits());
+    // the uncapped artifact carries none of the new keys...
+    let dump = plain.to_json().dump();
+    for key in ["queue_cap", "queue_dropped", "node_blocked", "link_blocked"] {
+        assert!(!dump.contains(key), "uncapped telemetry grew '{key}'");
+    }
+    // ...while the capped one is gated on and self-describing
+    let dump = huge.to_json().dump();
+    assert!(dump.contains("\"queue_dropped\""), "{dump}");
+    assert!(dump.contains("\"queue_cap\""), "{dump}");
+}
+
+/// λ = 1, μ = 2, K = 2 at node 0: an M/M/1/2 loss queue. The validator
+/// must predict Erlang blocking `(1−ρ)ρ²/(1−ρ³) = 1/7`, see simulated
+/// blocking within tolerance of it, price the queue with the truncated
+/// occupancy `L = 4/7`, and keep the alarm quiet — a saturated-style
+/// false alarm here would mean the analytic side still assumes an
+/// unbounded FIFO.
+#[test]
+fn capped_mm1k_run_passes_the_erlang_check() {
+    let net = two_node(2.0, 1.0);
+    let phi = Strategy::local_compute_init(&net);
+    let t = run(
+        &net,
+        &SimConfig {
+            requests: 30_000,
+            warmup: 0.05,
+            seed: 17,
+            queue_cap: Some(2),
+            ..SimConfig::default()
+        },
+    );
+    assert_conserved(&t);
+    assert!(t.queue_dropped > 0, "K = 2 at ρ = 0.5 must block sometimes");
+    let report = validate(&net, &phi, &t, 0.25).unwrap();
+    assert!(
+        !report.alarm,
+        "expected quiet alarm, got: {:?}",
+        report.alarm_reasons
+    );
+    assert_eq!(report.queue_caps, Some((2, 2)));
+    assert_eq!(report.queue_dropped, t.queue_dropped);
+    let cpu0 = &report.servers[0];
+    assert_eq!(cpu0.name, "cpu:0");
+    assert!(!cpu0.saturated, "a capped queue is a loss system, not divergent");
+    assert_eq!(cpu0.queue_cap, Some(2));
+    let eb = cpu0.expected_blocking.unwrap();
+    assert!((eb - 1.0 / 7.0).abs() < 1e-9, "Erlang column {eb} != 1/7");
+    let sb = cpu0.simulated_blocking.unwrap();
+    assert!((sb - eb).abs() < 0.1, "simulated blocking {sb} far from {eb}");
+    // truncated-geometric occupancy, not the unbounded M/M/1 form
+    assert!(
+        (cpu0.analytic - 4.0 / 7.0).abs() < 1e-9,
+        "M/M/1/2 occupancy {} != 4/7",
+        cpu0.analytic
+    );
+    // the capped report JSON carries the blocking columns bit-exactly
+    let dump = report.to_json().dump();
+    assert!(dump.contains("expected_blocking_bits"), "{dump}");
+    assert!(dump.contains("\"queue_dropped\""), "{dump}");
+    // the render grows the blocking columns too
+    let txt = report.render();
+    assert!(txt.contains("erlang B"), "{txt}");
+    assert!(txt.contains("per-queue admission"), "{txt}");
+}
