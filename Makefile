@@ -3,7 +3,7 @@
 
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: all build test artifacts bench-smoke clean-artifacts
+.PHONY: all build test artifacts bench-smoke opt-bench clean-artifacts pgo clean-pgo
 
 all: build
 
@@ -24,3 +24,37 @@ bench-smoke:
 
 clean-artifacts:
 	rm -rf $(ARTIFACTS_DIR)
+
+# PR 10 optimizer bench: emits BENCH_10.json (CECFLOW_BENCH_FAST=1 for
+# the CI smoke variant).
+opt-bench:
+	cargo bench --bench opt
+
+# ---- profile-guided optimization --------------------------------------
+#
+# Three passes (see perf.md for measured results):
+#   1. build the CLI under [profile.release-pgo] with -Cprofile-generate,
+#   2. run a representative workload — a small multi-scenario sweep plus
+#      a dynamic trace, covering the sparse SGP hot path, the GP
+#      baseline, and the epoch re-optimization loop,
+#   3. merge the .profraw shards and rebuild with -Cprofile-use.
+# The final binary lands in target/release-pgo/cecflow. Requires
+# llvm-profdata matching the rustc LLVM version (shipped as
+# `cargo profdata` via llvm-tools, or the system llvm-profdata).
+PGO_DIR ?= target/pgo-profiles
+LLVM_PROFDATA ?= llvm-profdata
+
+pgo:
+	rm -rf $(PGO_DIR)
+	RUSTFLAGS="-Cprofile-generate=$(PGO_DIR)" \
+		cargo build --profile release-pgo --bin cecflow
+	./target/release-pgo/cecflow sweep \
+		--scenarios abilene,connected-er --seeds 1..4 --algos sgp,gp
+	./target/release-pgo/cecflow dynamic \
+		--scenario abilene --seed 1 --schedule bursty:6:1.5
+	$(LLVM_PROFDATA) merge -o $(PGO_DIR)/merged.profdata $(PGO_DIR)
+	RUSTFLAGS="-Cprofile-use=$(PGO_DIR)/merged.profdata" \
+		cargo build --profile release-pgo --bin cecflow
+
+clean-pgo:
+	rm -rf $(PGO_DIR) target/release-pgo

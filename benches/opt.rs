@@ -1,0 +1,184 @@
+//! PR 10 perf driver: the allocation-free optimizer hot path.
+//!
+//! Four planes, each a record in the perf-trajectory file:
+//!
+//!  * `sparse_step_iters_per_sec` — full Gauss–Seidel SGP sweeps through
+//!    one persistent [`OptWorkspace`] (the steady-state hot path: zero
+//!    heap allocation per iteration after warm-up). A side-by-side run of
+//!    the legacy allocating wrapper (`sparse_step_legacy_iters_per_sec`)
+//!    uses the same seed and iteration budget, and the two cost
+//!    trajectories are asserted bitwise identical — the speedup ratio is
+//!    the headline number of the workspace layer, and the assert is the
+//!    determinism contract it rides on.
+//!  * `dense_step_iters_per_sec` — batched dense-ladder SGP through the
+//!    pure-rust [`NativeBackend`], workspace-pooled candidates.
+//!  * `marginals_per_sec` — raw [`compute_marginals_into`] throughput on
+//!    a warm [`MarginalScratch`] (the broadcast recursion every iteration
+//!    pays at least once).
+//!  * `dynamic_epochs_per_sec` — warm-started re-optimization epochs
+//!    through a bursty [`PatternSchedule`], one workspace reused across
+//!    the whole trace.
+//!
+//! Emits the machine-readable record as `BENCH_10.json` in the working
+//! directory (`CECFLOW_BENCH_OUT` overrides the path).
+//! `CECFLOW_BENCH_FAST=1` shrinks every budget for the CI smoke run.
+//!
+//! Run: `cargo bench --bench opt`
+
+use std::time::Instant;
+
+use cecflow::algo::{OptWorkspace, Optimizer, Sgp};
+use cecflow::coordinator::{
+    build_scenario_network, optimize_accelerated, AdaptiveRunner, PatternSchedule, RunConfig,
+    ScheduleKind,
+};
+use cecflow::model::flows::compute_flows;
+use cecflow::model::marginals::{compute_marginals_into, MarginalScratch};
+use cecflow::model::strategy::Strategy;
+use cecflow::runtime::NativeBackend;
+use cecflow::util::json::Json;
+
+fn record(name: &str, per_sec: f64, count: u64, seconds: f64) -> Json {
+    let mut o = Json::obj();
+    o.set("name", Json::Str(name.to_string()))
+        .set("per_sec", Json::Num(per_sec))
+        .set("count", Json::Num(count as f64))
+        .set("seconds", Json::Num(seconds));
+    o
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("CECFLOW_BENCH_FAST").is_ok();
+    let mut records: Vec<Json> = Vec::new();
+
+    let net = build_scenario_network("abilene", 1, 1.0)?;
+    let phi0 = Strategy::local_compute_init(&net);
+    let iters = if fast { 60 } else { 400 };
+
+    // ---- plane 1: sparse sweeps, legacy wrapper vs persistent arena ---
+    // Manual stepping (no convergence stop) so both paths run the exact
+    // same number of sweeps from the exact same start point.
+    let mut phi_legacy = phi0.clone();
+    let mut sgp = Sgp::new();
+    let mut legacy_costs = Vec::with_capacity(iters);
+    let start = Instant::now();
+    for _ in 0..iters {
+        // the allocating wrapper: a throwaway workspace per call
+        let st = sgp.step(&net, &mut phi_legacy)?;
+        legacy_costs.push(st.total_cost);
+    }
+    let legacy_secs = start.elapsed().as_secs_f64();
+    let legacy_ips = iters as f64 / legacy_secs;
+    println!(
+        "sparse legacy: {iters} iterations in {legacy_secs:.3}s = {legacy_ips:.0} iters/s"
+    );
+    records.push(record(
+        "sparse_step_legacy_iters_per_sec",
+        legacy_ips,
+        iters as u64,
+        legacy_secs,
+    ));
+
+    let mut phi_ws = phi0.clone();
+    let mut sgp = Sgp::new();
+    let mut ws = OptWorkspace::new();
+    let mut ws_costs = Vec::with_capacity(iters);
+    let start = Instant::now();
+    for _ in 0..iters {
+        let st = sgp.step_ws(&net, &mut phi_ws, &mut ws)?;
+        ws_costs.push(st.total_cost);
+    }
+    let ws_secs = start.elapsed().as_secs_f64();
+    let ws_ips = iters as f64 / ws_secs;
+    println!(
+        "sparse workspace: {iters} iterations in {ws_secs:.3}s = {ws_ips:.0} iters/s \
+         ({:.2}x legacy)",
+        ws_ips / legacy_ips
+    );
+    records.push(record(
+        "sparse_step_iters_per_sec",
+        ws_ips,
+        iters as u64,
+        ws_secs,
+    ));
+
+    // the determinism contract: same FP op order, bitwise-equal costs
+    assert_eq!(legacy_costs.len(), ws_costs.len());
+    for (k, (a, b)) in legacy_costs.iter().zip(&ws_costs).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "workspace trajectory diverged from legacy at iteration {k}: {a} vs {b}"
+        );
+    }
+
+    // ---- plane 2: dense batched ladder on the native backend ----------
+    let dense_iters = if fast { 40 } else { 200 };
+    let cfg = RunConfig {
+        max_iters: dense_iters,
+        tol: 0.0,
+        patience: dense_iters,
+    };
+    let solves = if fast { 2 } else { 5 };
+    let mut dense_total = 0u64;
+    let start = Instant::now();
+    for _ in 0..solves {
+        let res = optimize_accelerated(&net, &mut Sgp::new(), &phi0, &cfg, &NativeBackend)?;
+        dense_total += res.costs.len() as u64;
+    }
+    let dense_secs = start.elapsed().as_secs_f64();
+    let dense_ips = dense_total as f64 / dense_secs;
+    println!(
+        "dense: {dense_total} iterations in {dense_secs:.3}s = {dense_ips:.0} iters/s"
+    );
+    records.push(record(
+        "dense_step_iters_per_sec",
+        dense_ips,
+        dense_total,
+        dense_secs,
+    ));
+
+    // ---- plane 3: raw marginal-broadcast throughput -------------------
+    // One converged-ish strategy, flows held fixed, the recursion rerun
+    // on a warm scratch: this is the floor every sweep pays per task.
+    let flows = compute_flows(&net, &phi_ws)?;
+    let mut scratch = MarginalScratch::new();
+    compute_marginals_into(&net, &phi_ws, &flows, &mut scratch)?; // warm-up
+    let marg_reps: u64 = if fast { 200 } else { 5_000 };
+    let start = Instant::now();
+    for _ in 0..marg_reps {
+        compute_marginals_into(&net, &phi_ws, &flows, &mut scratch)?;
+    }
+    let marg_secs = start.elapsed().as_secs_f64();
+    let marg_ps = marg_reps as f64 / marg_secs;
+    println!("marginals: {marg_reps} passes in {marg_secs:.3}s = {marg_ps:.0} passes/s");
+    records.push(record("marginals_per_sec", marg_ps, marg_reps, marg_secs));
+
+    // ---- plane 4: dynamic re-optimization epochs ----------------------
+    let epochs = if fast { 4 } else { 12 };
+    let schedule = PatternSchedule::new(ScheduleKind::Bursty, epochs, 1.5)?;
+    let runner = AdaptiveRunner::warm(RunConfig::quick());
+    let start = Instant::now();
+    let trace = runner.run_scenario("abilene", 1, 1.0, schedule)?;
+    let dyn_secs = start.elapsed().as_secs_f64();
+    let n_epochs = trace.epochs.len() as u64;
+    let eps = n_epochs as f64 / dyn_secs;
+    println!("dynamic: {n_epochs} epochs in {dyn_secs:.3}s = {eps:.1} epochs/s");
+    records.push(record("dynamic_epochs_per_sec", eps, n_epochs, dyn_secs));
+
+    // ---- trajectory record --------------------------------------------
+    let path = std::env::var("CECFLOW_BENCH_OUT").unwrap_or_else(|_| "BENCH_10.json".to_string());
+    if let Some(parent) = std::path::Path::new(&path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut doc = Json::obj();
+    doc.set("pr", Json::Num(10.0))
+        .set("bench", Json::Str("opt".to_string()))
+        .set("fast_mode", Json::Bool(fast))
+        .set("records", Json::Arr(records));
+    std::fs::write(&path, doc.pretty())?;
+    println!("wrote {path}");
+    Ok(())
+}

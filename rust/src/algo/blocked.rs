@@ -20,9 +20,17 @@
 //! In the distributed implementation the improper tag is piggybacked on
 //! the broadcast messages (§IV); here we compute it centrally with one
 //! reverse-topological sweep per task and plane.
+//!
+//! All entry points are generic over [`MargView`], so they accept both the
+//! nested [`crate::model::marginals::Marginals`] and the flat workspace
+//! scratch with identical results, and each has an `_into` form writing
+//! into caller-owned buffers for the allocation-free optimizer loop.
 
+use std::cmp::Ordering;
+
+use crate::graph::algorithms::{topo_order_masked_into, TopoScratch};
 use crate::graph::DiGraph;
-use crate::model::marginals::Marginals;
+use crate::model::marginals::MargView;
 use crate::model::network::Network;
 use crate::model::strategy::Strategy;
 
@@ -39,27 +47,66 @@ pub struct BlockedSets {
 /// part of blocked-set construction, computed once and shared by every
 /// node's row query (the per-node Gauss–Seidel sweep would otherwise pay
 /// O(N) full reconstructions per task per position).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct PlaneTags {
     pub data_tag: Vec<bool>,
     pub result_tag: Vec<bool>,
 }
 
+/// Mask/topo scratch for [`plane_tags_into`] — one per worker thread.
+#[derive(Clone, Debug, Default)]
+pub struct BlockScratch {
+    mask: Vec<bool>,
+    topo: TopoScratch,
+    order: Vec<usize>,
+}
+
 /// Compute the improper tags for `task` under the current marginals.
-pub fn plane_tags(net: &Network, phi: &Strategy, marg: &Marginals, task: usize) -> PlaneTags {
+pub fn plane_tags<M: MargView + ?Sized>(
+    net: &Network,
+    phi: &Strategy,
+    marg: &M,
+    task: usize,
+) -> PlaneTags {
+    let mut scratch = BlockScratch::default();
+    let mut tags = PlaneTags::default();
+    plane_tags_into(net, phi, marg, task, &mut scratch, &mut tags);
+    tags
+}
+
+/// [`plane_tags`] into caller-owned buffers — allocation-free after
+/// warm-up, identical tags.
+pub fn plane_tags_into<M: MargView + ?Sized>(
+    net: &Network,
+    phi: &Strategy,
+    marg: &M,
+    task: usize,
+    scratch: &mut BlockScratch,
+    tags: &mut PlaneTags,
+) {
     let g = &net.graph;
-    let rmask = phi.result_active_mask(net, task);
-    let result_tag = tagged_nodes(g, &rmask, &marg.dt_plus[task]);
-    let dmask = phi.data_active_mask(net, task);
-    let data_tag = tagged_nodes(g, &dmask, &marg.dt_r[task]);
-    PlaneTags {
-        data_tag,
-        result_tag,
-    }
+    phi.result_active_mask_into(net, task, &mut scratch.mask);
+    tagged_nodes_into(
+        g,
+        &scratch.mask,
+        marg.dt_plus_task(task),
+        &mut scratch.topo,
+        &mut scratch.order,
+        &mut tags.result_tag,
+    );
+    phi.data_active_mask_into(net, task, &mut scratch.mask);
+    tagged_nodes_into(
+        g,
+        &scratch.mask,
+        marg.dt_r_task(task),
+        &mut scratch.topo,
+        &mut scratch.order,
+        &mut tags.data_tag,
+    );
 }
 
 /// Blocked slots of one node for one task (slot layouts match Strategy).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct NodeBlocked {
     /// `[1 + out_degree]`, slot 0 = local computation (never blocked).
     pub data: Vec<bool>,
@@ -68,60 +115,90 @@ pub struct NodeBlocked {
 }
 
 /// Per-node blocked rows given precomputed tags — O(out_degree).
-pub fn blocked_rows_for_node(
+pub fn blocked_rows_for_node<M: MargView + ?Sized>(
     net: &Network,
     phi: &Strategy,
-    marg: &Marginals,
+    marg: &M,
     tags: &PlaneTags,
     task: usize,
     i: usize,
 ) -> NodeBlocked {
+    let mut out = NodeBlocked::default();
+    blocked_rows_for_node_into(net, phi, marg, tags, task, i, &mut out);
+    out
+}
+
+/// [`blocked_rows_for_node`] into a caller-owned row pair —
+/// allocation-free after warm-up, identical rows.
+pub fn blocked_rows_for_node_into<M: MargView + ?Sized>(
+    net: &Network,
+    phi: &Strategy,
+    marg: &M,
+    tags: &PlaneTags,
+    task: usize,
+    i: usize,
+    out: &mut NodeBlocked,
+) {
     let g = &net.graph;
     let deg = g.out_degree(i);
+    let dt_plus = marg.dt_plus_task(task);
+    let dt_r = marg.dt_r_task(task);
+    let d_link = marg.d_link();
 
-    let mut result = vec![false; deg];
+    let result = &mut out.result;
+    result.clear();
+    result.resize(deg, false);
     if i != net.tasks[task].dest {
         for (k, &eid) in g.out_edge_ids(i).iter().enumerate() {
             let j = g.edge(eid).dst;
             if phi.result[task][i][k] > 0.0 {
                 continue; // active neighbors stay available
             }
-            if marg.dt_plus[task][j] >= marg.dt_plus[task][i] || tags.result_tag[j] {
+            if dt_plus[j] >= dt_plus[i] || tags.result_tag[j] {
                 result[k] = true;
             }
         }
-        // never block every slot: keep the minimum-marginal neighbor
-        ensure_one_free(&mut result, || {
-            g.out_edge_ids(i)
-                .iter()
-                .enumerate()
-                .map(|(k, &eid)| (k, marg.d_link[eid] + marg.dt_plus[task][g.edge(eid).dst]))
-                .collect()
-        });
+        // Never block every slot: if the heuristics blocked everything,
+        // unblock the minimum-marginal neighbor (first wins on ties, the
+        // convention `Iterator::min_by` used here before).
+        if !result.is_empty() && result.iter().all(|&b| b) {
+            let mut best_k = 0usize;
+            let mut best_v = f64::INFINITY;
+            let mut first = true;
+            for (k, &eid) in g.out_edge_ids(i).iter().enumerate() {
+                let val = d_link[eid] + dt_plus[g.edge(eid).dst];
+                if first || val.partial_cmp(&best_v).unwrap() == Ordering::Less {
+                    best_k = k;
+                    best_v = val;
+                    first = false;
+                }
+            }
+            result[best_k] = false;
+        }
     }
 
     // slot 0 (local computation) is never blocked: it cannot create a
     // routing loop.
-    let mut data = vec![false; deg + 1];
+    let data = &mut out.data;
+    data.clear();
+    data.resize(deg + 1, false);
     for (k, &eid) in g.out_edge_ids(i).iter().enumerate() {
         let j = g.edge(eid).dst;
         if phi.data[task][i][k + 1] > 0.0 {
             continue;
         }
-        if marg.dt_r[task][j] >= marg.dt_r[task][i] || tags.data_tag[j] {
+        if dt_r[j] >= dt_r[i] || tags.data_tag[j] {
             data[k + 1] = true;
         }
     }
-
-    NodeBlocked { data, result }
 }
 
 /// Compute the per-task blocked sets (all nodes) from the current
 /// marginals — the Jacobi-style full construction used by `step_dense`.
-pub fn blocked_sets(
+pub fn blocked_sets<M: MargView + ?Sized>(
     net: &Network,
     phi: &Strategy,
-    marg: &Marginals,
+    marg: &M,
     task: usize,
 ) -> BlockedSets {
     let tags = plane_tags(net, phi, marg, task);
@@ -140,10 +217,20 @@ pub fn blocked_sets(
 /// with `marginal[q] ≥ marginal[p]`. One reverse-topological sweep: node
 /// `p` is tagged if one of its active out-links is improper or leads to a
 /// tagged node.
-fn tagged_nodes(g: &DiGraph, active: &[bool], marginal: &[f64]) -> Vec<bool> {
-    let order = crate::graph::algorithms::topo_order_masked(g, active)
-        .expect("active subgraph must be loop-free");
-    let mut tag = vec![false; g.node_count()];
+fn tagged_nodes_into(
+    g: &DiGraph,
+    active: &[bool],
+    marginal: &[f64],
+    topo: &mut TopoScratch,
+    order: &mut Vec<usize>,
+    tag: &mut Vec<bool>,
+) {
+    assert!(
+        topo_order_masked_into(g, active, topo, order),
+        "active subgraph must be loop-free"
+    );
+    tag.clear();
+    tag.resize(g.node_count(), false);
     for &p in order.iter().rev() {
         for &eid in g.out_edge_ids(p) {
             if !active[eid] {
@@ -156,28 +243,22 @@ fn tagged_nodes(g: &DiGraph, active: &[bool], marginal: &[f64]) -> Vec<bool> {
             }
         }
     }
-    tag
 }
 
-/// If the heuristics blocked every slot, unblock the one with the lowest
-/// Theorem-1 marginal so the node always has a feasible strategy.
-fn ensure_one_free<F: FnOnce() -> Vec<(usize, f64)>>(slots: &mut [bool], candidates: F) {
-    if !slots.is_empty() && slots.iter().all(|&b| b) {
-        let cands = candidates();
-        if let Some((k, _)) = cands
-            .into_iter()
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-        {
-            slots[k] = false;
-        }
-    }
+#[cfg(test)]
+fn tagged_nodes(g: &DiGraph, active: &[bool], marginal: &[f64]) -> Vec<bool> {
+    let mut topo = TopoScratch::default();
+    let mut order = Vec::new();
+    let mut tag = Vec::new();
+    tagged_nodes_into(g, active, marginal, &mut topo, &mut order, &mut tag);
+    tag
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::flows::compute_flows;
-    use crate::model::marginals::compute_marginals;
+    use crate::model::marginals::{compute_marginals, Marginals};
     use crate::model::network::testnet::diamond;
     use crate::model::strategy::out_slot;
 
@@ -264,6 +345,31 @@ mod tests {
                     b.result[i].iter().any(|&x| !x),
                     "node {i} result plane fully blocked"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn into_forms_match_allocating_forms() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let m = setup(&net, &phi);
+        let mut scratch = BlockScratch::default();
+        let mut tags_buf = PlaneTags::default();
+        let mut row_buf = NodeBlocked::default();
+        for task in 0..net.s() {
+            let tags = plane_tags(&net, &phi, &m, task);
+            // reused (dirty) buffers must match the fresh computation
+            plane_tags_into(&net, &phi, &m, task, &mut scratch, &mut tags_buf);
+            assert_eq!(tags.data_tag, tags_buf.data_tag);
+            assert_eq!(tags.result_tag, tags_buf.result_tag);
+            for i in 0..net.n() {
+                let rows = blocked_rows_for_node(&net, &phi, &m, &tags, task, i);
+                blocked_rows_for_node_into(
+                    &net, &phi, &m, &tags, task, i, &mut row_buf,
+                );
+                assert_eq!(rows.data, row_buf.data);
+                assert_eq!(rows.result, row_buf.result);
             }
         }
     }

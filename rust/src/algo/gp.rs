@@ -10,12 +10,15 @@
 
 use anyhow::{bail, Result};
 
-use crate::model::flows::compute_flows;
-use crate::model::marginals::{compute_marginals, theorem1_residual, Marginals};
+use crate::model::flows::compute_flows_with;
+use crate::model::marginals::{
+    compute_marginals_into, delta_minus_into, delta_plus_into, theorem1_residual_with,
+};
 use crate::model::network::Network;
 use crate::model::strategy::Strategy;
 
 use super::blocked::{blocked_sets, BlockedSets};
+use super::workspace::OptWorkspace;
 use super::{IterationStats, Optimizer};
 
 /// Non-scaled gradient projection with step parameter `β`.
@@ -39,6 +42,8 @@ impl Gp {
 
     /// Gallager-style shift on one simplex vector. `delta` and `blocked`
     /// are slot-aligned with `phi_vec`; `traffic` is `t_i`.
+    /// Allocating wrapper over [`Gp::shift_into`].
+    #[cfg(test)]
     fn shift(
         phi_vec: &[f64],
         delta: &[f64],
@@ -46,21 +51,37 @@ impl Gp {
         traffic: f64,
         beta: f64,
     ) -> Vec<f64> {
-        let mut v = phi_vec.to_vec();
+        let mut v = Vec::new();
+        Self::shift_into(phi_vec, delta, blocked, traffic, beta, &mut v);
+        v
+    }
+
+    /// Gallager shift into a caller-owned output vector — allocation-free
+    /// after warm-up, identical arithmetic.
+    fn shift_into(
+        phi_vec: &[f64],
+        delta: &[f64],
+        blocked: &[bool],
+        traffic: f64,
+        beta: f64,
+        v: &mut Vec<f64>,
+    ) {
+        v.clear();
+        v.extend_from_slice(phi_vec);
         // receiving slot: min marginal among unblocked
         let jmin = match (0..v.len())
             .filter(|&j| !blocked[j])
             .min_by(|&a, &b| delta[a].partial_cmp(&delta[b]).unwrap())
         {
             Some(j) => j,
-            None => return v,
+            None => return,
         };
         if traffic <= 0.0 {
             // zero-traffic node: jump entirely to the best slot (needed to
             // satisfy Theorem 1 where Lemma 1 is vacuous)
             v.iter_mut().for_each(|x| *x = 0.0);
             v[jmin] = 1.0;
-            return v;
+            return;
         }
         let mut moved = 0.0;
         for j in 0..v.len() {
@@ -73,43 +94,6 @@ impl Gp {
             moved += take;
         }
         v[jmin] += moved;
-        v
-    }
-
-    fn propose(
-        &self,
-        net: &Network,
-        phi: &Strategy,
-        marg: &Marginals,
-        flows: &crate::model::flows::FlowState,
-        blocked_all: &[BlockedSets],
-        beta: f64,
-    ) -> Strategy {
-        let mut cand = phi.clone();
-        for s in 0..net.s() {
-            let blocked = &blocked_all[s];
-            for i in 0..net.n() {
-                let delta = marg.delta_minus(net, s, i);
-                cand.data[s][i] = Self::shift(
-                    &phi.data[s][i],
-                    &delta,
-                    &blocked.data[i],
-                    flows.t_minus[s][i],
-                    beta,
-                );
-                if i != net.tasks[s].dest && net.graph.out_degree(i) > 0 {
-                    let delta = marg.delta_plus(net, s, i);
-                    cand.result[s][i] = Self::shift(
-                        &phi.result[s][i],
-                        &delta,
-                        &blocked.result[i],
-                        flows.t_plus[s][i],
-                        beta,
-                    );
-                }
-            }
-        }
-        cand
     }
 }
 
@@ -118,38 +102,89 @@ impl Optimizer for Gp {
         "gp"
     }
 
+    /// Allocating wrapper over [`Optimizer::step_ws`] with a throwaway
+    /// workspace — identical results.
     fn step(&mut self, net: &Network, phi: &mut Strategy) -> Result<IterationStats> {
-        let flows = compute_flows(net, phi).map_err(anyhow::Error::new)?;
-        if !flows.total_cost.is_finite() {
+        let mut ws = OptWorkspace::new();
+        self.step_ws(net, phi, &mut ws)
+    }
+
+    fn step_ws(
+        &mut self,
+        net: &Network,
+        phi: &mut Strategy,
+        ws: &mut OptWorkspace,
+    ) -> Result<IterationStats> {
+        ws.ensure(net);
+        compute_flows_with(net, phi, &mut ws.flows, &mut ws.flow_scratch)
+            .map_err(anyhow::Error::new)?;
+        if !ws.flows.total_cost.is_finite() {
             bail!("initial strategy has infinite cost");
         }
-        let marg = compute_marginals(net, phi, &flows).map_err(anyhow::Error::new)?;
+        compute_marginals_into(net, phi, &ws.flows, &mut ws.marg).map_err(anyhow::Error::new)?;
+        // Jacobi full blocked-set construction (GP proposes all nodes at
+        // once); this path keeps the allocating form — GP is a baseline,
+        // only the SGP sweep is under the zero-allocation contract.
         let blocked_all: Vec<BlockedSets> = (0..net.s())
-            .map(|s| blocked_sets(net, phi, &marg, s))
+            .map(|s| blocked_sets(net, phi, &ws.marg, s))
             .collect();
 
+        if ws.cand_pool.is_empty() {
+            ws.cand_pool.push(phi.clone());
+        }
         let mut beta = self.beta;
         for _attempt in 0..40 {
-            let cand = self.propose(net, phi, &marg, &flows, &blocked_all, beta);
-            if cand.is_loop_free(net) {
-                if let Ok(fs) = compute_flows(net, &cand) {
-                    if fs.total_cost.is_finite()
-                        && (!self.safeguard || fs.total_cost <= flows.total_cost + 1e-12)
-                    {
-                        *phi = cand;
-                        break;
+            let cand = &mut ws.cand_pool[0];
+            cand.clone_from(phi);
+            for s in 0..net.s() {
+                let blocked = &blocked_all[s];
+                for i in 0..net.n() {
+                    delta_minus_into(&ws.marg, net, s, i, &mut ws.bufs.delta);
+                    Self::shift_into(
+                        &phi.data[s][i],
+                        &ws.bufs.delta,
+                        &blocked.data[i],
+                        ws.flows.t_minus[s][i],
+                        beta,
+                        &mut cand.data[s][i],
+                    );
+                    if i != net.tasks[s].dest && net.graph.out_degree(i) > 0 {
+                        delta_plus_into(&ws.marg, net, s, i, &mut ws.bufs.delta);
+                        Self::shift_into(
+                            &phi.result[s][i],
+                            &ws.bufs.delta,
+                            &blocked.result[i],
+                            ws.flows.t_plus[s][i],
+                            beta,
+                            &mut cand.result[s][i],
+                        );
                     }
+                }
+            }
+            if cand.is_loop_free(net) {
+                let priced =
+                    match compute_flows_with(net, cand, &mut ws.shadow, &mut ws.flow_scratch) {
+                        Ok(()) => ws.shadow.total_cost.is_finite(),
+                        Err(_) => false,
+                    };
+                if priced
+                    && (!self.safeguard
+                        || ws.shadow.total_cost <= ws.flows.total_cost + 1e-12)
+                {
+                    phi.clone_from(&ws.cand_pool[0]);
+                    break;
                 }
             }
             self.retries += 1;
             beta *= 0.25;
         }
 
-        let flows2 = compute_flows(net, phi).map_err(anyhow::Error::new)?;
-        let marg2 = compute_marginals(net, phi, &flows2).map_err(anyhow::Error::new)?;
+        compute_flows_with(net, phi, &mut ws.flows, &mut ws.flow_scratch)
+            .map_err(anyhow::Error::new)?;
+        compute_marginals_into(net, phi, &ws.flows, &mut ws.marg).map_err(anyhow::Error::new)?;
         Ok(IterationStats {
-            total_cost: flows2.total_cost,
-            residual: theorem1_residual(net, phi, &marg2),
+            total_cost: ws.flows.total_cost,
+            residual: theorem1_residual_with(net, phi, &ws.marg, &mut ws.bufs.delta),
         })
     }
 }
@@ -158,6 +193,7 @@ impl Optimizer for Gp {
 mod tests {
     use super::*;
     use crate::algo::sgp::Sgp;
+    use crate::model::flows::compute_flows;
     use crate::model::network::testnet::diamond;
 
     #[test]
@@ -172,6 +208,24 @@ mod tests {
             last = st.total_cost;
             assert!(phi.is_loop_free(&net));
         }
+    }
+
+    #[test]
+    fn persistent_workspace_matches_throwaway_step() {
+        let net = diamond(true);
+        let mut phi_a = Strategy::local_compute_init(&net);
+        let mut phi_b = phi_a.clone();
+        let mut gp_a = Gp::new(1.0);
+        let mut gp_b = Gp::new(1.0);
+        let mut ws = OptWorkspace::new();
+        for it in 0..25 {
+            let sa = gp_a.step(&net, &mut phi_a).unwrap();
+            let sb = gp_b.step_ws(&net, &mut phi_b, &mut ws).unwrap();
+            assert_eq!(sa.total_cost.to_bits(), sb.total_cost.to_bits(), "iter {it}");
+            assert_eq!(sa.residual.to_bits(), sb.residual.to_bits(), "iter {it}");
+            assert_eq!(phi_a.data, phi_b.data, "iter {it}");
+        }
+        assert_eq!(gp_a.retries, gp_b.retries);
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub mod lpr;
 pub mod sgp;
 pub mod simplex_qp;
 pub mod spoo;
+pub mod workspace;
 
 use anyhow::Result;
 
@@ -33,6 +34,21 @@ pub trait Optimizer {
 
     /// One synchronous network-wide iteration.
     fn step(&mut self, net: &Network, phi: &mut Strategy) -> Result<IterationStats>;
+
+    /// [`Optimizer::step`] with a caller-owned [`OptWorkspace`] scratch
+    /// arena, reused across iterations so the hot path is
+    /// allocation-free after warm-up. Results are bitwise identical to
+    /// `step`. Optimizers without a workspace-aware path fall back to
+    /// `step` and ignore the workspace.
+    fn step_ws(
+        &mut self,
+        net: &Network,
+        phi: &mut Strategy,
+        ws: &mut workspace::OptWorkspace,
+    ) -> Result<IterationStats> {
+        let _ = ws;
+        self.step(net, phi)
+    }
 }
 
 pub use gp::Gp;
@@ -40,3 +56,4 @@ pub use lcor::lcor_optimizer;
 pub use lpr::Lpr;
 pub use sgp::{Restriction, Sgp};
 pub use spoo::spoo_optimizer;
+pub use workspace::OptWorkspace;

@@ -16,49 +16,33 @@
 //!    the local-computation slot (the paper's eq. 16 only covers link
 //!    entries; see DESIGN.md §3.3).
 //!
+//! The hot path is allocation-free after warm-up: all intermediate state
+//! lives in a caller-owned [`OptWorkspace`] threaded through
+//! [`Optimizer::step_ws`] / [`Sgp::update_single_node_ws`]. The
+//! workspace changes only where values live, never the floating-point
+//! operation order, so results are bitwise identical to the allocating
+//! wrappers (pinned by `tests/opt_workspace.rs`).
+//!
 //! Asynchronous (one node at a time) updates — Theorem 2's schedule — are
 //! driven by `sim::async_run` through [`Sgp::update_single_node`].
 
 use anyhow::{bail, Result};
 
-use crate::model::flows::{compute_flows, FlowState};
-use crate::model::marginals::{compute_marginals, theorem1_residual, Marginals};
+use crate::graph::algorithms::has_cycle_masked_into;
+use crate::model::flows::{
+    compute_flows_with, recompute_task_flows_with, refresh_total_cost, FlowState,
+};
+use crate::model::marginals::{
+    compute_marginals_into, delta_minus_into, delta_plus_into, theorem1_residual,
+    theorem1_residual_with, MargView, Marginals,
+};
 use crate::model::network::Network;
 use crate::model::strategy::Strategy;
 
-use super::blocked::{blocked_sets, BlockedSets};
-use super::simplex_qp::scaled_simplex_qp;
+use super::blocked::{blocked_rows_for_node_into, blocked_sets, plane_tags_into, BlockedSets};
+use super::simplex_qp::scaled_simplex_qp_into;
+use super::workspace::{OptWorkspace, ProposeBufs};
 use super::{IterationStats, Optimizer};
-
-/// Snapshot of one task's flow slices, for exact rollback of an
-/// incremental re-flow (the Gauss–Seidel safeguard's rejection path).
-struct TaskFlowSnap {
-    t_minus: Vec<f64>,
-    t_plus: Vec<f64>,
-    g: Vec<f64>,
-    f_minus: Vec<f64>,
-    f_plus: Vec<f64>,
-}
-
-impl TaskFlowSnap {
-    fn take(fs: &FlowState, s: usize) -> TaskFlowSnap {
-        TaskFlowSnap {
-            t_minus: fs.t_minus[s].clone(),
-            t_plus: fs.t_plus[s].clone(),
-            g: fs.g[s].clone(),
-            f_minus: fs.f_minus[s].clone(),
-            f_plus: fs.f_plus[s].clone(),
-        }
-    }
-
-    fn restore(&self, fs: &mut FlowState, s: usize) {
-        fs.t_minus[s].clone_from(&self.t_minus);
-        fs.t_plus[s].clone_from(&self.t_plus);
-        fs.g[s].clone_from(&self.g);
-        fs.f_minus[s].clone_from(&self.f_minus);
-        fs.f_plus[s].clone_from(&self.f_plus);
-    }
-}
 
 /// Which planes an optimizer instance may update — the restriction hook
 /// reused by the SPOO (data offloading only) and LCOR (result routing
@@ -113,6 +97,20 @@ pub struct Sgp {
     /// safe eq-16 level and beyond), and let `trust` adapt between
     /// iterations toward the largest step the safeguard accepts.
     trust: f64,
+}
+
+/// Put the node's saved plane rows back into `phi` — the row-level
+/// rollback of a rejected Gauss–Seidel attempt.
+fn restore_rows(
+    phi: &mut Strategy,
+    node: usize,
+    saved_data: &[Vec<f64>],
+    saved_result: &[Vec<f64>],
+) {
+    for s in 0..saved_data.len() {
+        phi.data[s][node].clone_from(&saved_data[s]);
+        phi.result[s][node].clone_from(&saved_result[s]);
+    }
 }
 
 impl Sgp {
@@ -189,8 +187,9 @@ impl Sgp {
             && !Self::positive_traffic_changed(net, flows, phi, cand)
     }
 
-    /// Scaling-matrix diagonal for the data plane of `(task, node)`,
-    /// aligned with the strategy slot layout.
+    /// Scaling-matrix diagonal for the data plane of `(task, node)`, into
+    /// a caller-owned buffer aligned with the strategy slot layout —
+    /// allocation-free after warm-up.
     ///
     /// Eq. 16 builds the diagonal from worst-case curvature bounds
     /// `A_ij(T⁰)`; we use the *current* second derivatives instead
@@ -202,20 +201,22 @@ impl Sgp {
     /// networks (one tiny-capacity link dominates the max and freezes all
     /// steps); the descent safeguard + trust adaptation supply the
     /// convergence guarantee the bound was providing. See DESIGN.md §3.3.
-    fn data_scale(
+    fn data_scale_into<M: MargView + ?Sized>(
         &self,
         net: &Network,
         flows: &FlowState,
-        marg: &Marginals,
+        marg: &M,
         task: usize,
         node: usize,
         inflate: f64,
-    ) -> Vec<f64> {
+        out: &mut Vec<f64>,
+    ) {
         let g = &net.graph;
         let t_i = flows.t_minus[task][node];
         let a_m = net.a_of(task);
         let w_im = net.w_of(node, task);
-        let mut scale = Vec::with_capacity(g.out_degree(node) + 1);
+        out.clear();
+        out.reserve(g.out_degree(node) + 1);
         // slot 0: local computation. Curvature from C'' (chain factor w²)
         // plus the induced result-plane curvature (chain factor a_m²)
         // accumulated along the node's result path.
@@ -226,39 +227,40 @@ impl Sgp {
             .map(|&eid| net.link_cost[eid].second_deriv(flows.link_flow[eid]))
             .fold(0.0f64, f64::max);
         let comp_entry = w_im * w_im * d2_comp
-            + a_m * a_m * (1.0 + marg.h_plus[task][node] as f64) * out_d2_max;
-        scale.push(self.floor(t_i / 2.0 * inflate * comp_entry, inflate));
+            + a_m * a_m * (1.0 + marg.h_plus_task(task)[node] as f64) * out_d2_max;
+        out.push(self.floor(t_i / 2.0 * inflate * comp_entry, inflate));
+        let h_minus = marg.h_minus_task(task);
         for &eid in g.out_edge_ids(node) {
             let j = g.edge(eid).dst;
             let d2 = net.link_cost[eid].second_deriv(flows.link_flow[eid]);
-            let entry = d2 * (1.0 + marg.h_minus[task][j] as f64);
-            scale.push(self.floor(t_i / 2.0 * inflate * entry, inflate));
+            let entry = d2 * (1.0 + h_minus[j] as f64);
+            out.push(self.floor(t_i / 2.0 * inflate * entry, inflate));
         }
-        scale
     }
 
     /// Scaling-matrix diagonal for the result plane (same construction on
-    /// `t⁺` and `h⁺`).
-    fn result_scale(
+    /// `t⁺` and `h⁺`), into a caller-owned buffer.
+    fn result_scale_into<M: MargView + ?Sized>(
         &self,
         net: &Network,
         flows: &FlowState,
-        marg: &Marginals,
+        marg: &M,
         task: usize,
         node: usize,
         inflate: f64,
-    ) -> Vec<f64> {
+        out: &mut Vec<f64>,
+    ) {
         let g = &net.graph;
         let t_i = flows.t_plus[task][node];
-        g.out_edge_ids(node)
-            .iter()
-            .map(|&eid| {
-                let j = g.edge(eid).dst;
-                let d2 = net.link_cost[eid].second_deriv(flows.link_flow[eid]);
-                let entry = d2 * (1.0 + marg.h_plus[task][j] as f64);
-                self.floor(t_i / 2.0 * inflate * entry, inflate)
-            })
-            .collect()
+        out.clear();
+        out.reserve(g.out_degree(node));
+        let h_plus = marg.h_plus_task(task);
+        for &eid in g.out_edge_ids(node) {
+            let j = g.edge(eid).dst;
+            let d2 = net.link_cost[eid].second_deriv(flows.link_flow[eid]);
+            let entry = d2 * (1.0 + h_plus[j] as f64);
+            out.push(self.floor(t_i / 2.0 * inflate * entry, inflate));
+        }
     }
 
     fn floor(&self, x: f64, inflate: f64) -> f64 {
@@ -269,43 +271,55 @@ impl Sgp {
     }
 
     /// One tentative joint (all nodes, all tasks) update with the given
-    /// scaling inflation. Returns the candidate strategy.
-    fn propose(
+    /// scaling inflation, written into the pooled candidate `cand`
+    /// (`clone_from(phi)` then row-wise QP overwrites — no per-candidate
+    /// strategy allocation once the pool is warm).
+    #[allow(clippy::too_many_arguments)]
+    fn propose_into<M: MargView + ?Sized>(
         &self,
         net: &Network,
         phi: &Strategy,
         flows: &FlowState,
-        marg: &Marginals,
+        marg: &M,
         blocked_all: &[BlockedSets],
         inflate: f64,
-    ) -> Strategy {
-        let mut cand = phi.clone();
+        bufs: &mut ProposeBufs,
+        cand: &mut Strategy,
+    ) {
+        cand.clone_from(phi);
+        let ProposeBufs {
+            delta,
+            scale,
+            blocked: blocked_buf,
+            qp,
+        } = bufs;
         for s in 0..net.s() {
             let blocked = &blocked_all[s];
             for i in 0..net.n() {
                 if !self.restriction.freeze_data {
-                    let mut blocked_slots = blocked.data[i].clone();
+                    blocked_buf.clone_from(&blocked.data[i]);
                     if let Some(extra) = &self.restriction.extra_blocked_data {
-                        for (b, &x) in blocked_slots.iter_mut().zip(&extra[s][i]) {
+                        for (b, &x) in blocked_buf.iter_mut().zip(&extra[s][i]) {
                             *b |= x;
                         }
                     }
                     // keep currently-active slots available even under
                     // extra restrictions (they hold mass)
-                    for (slot, b) in blocked_slots.iter_mut().enumerate() {
+                    for (slot, b) in blocked_buf.iter_mut().enumerate() {
                         if phi.data[s][i][slot] > 0.0 {
                             *b = false;
                         }
                     }
-                    if blocked_slots.iter().any(|&b| !b) {
-                        let delta = marg.delta_minus(net, s, i);
-                        let scale =
-                            self.data_scale(net, flows, marg, s, i, inflate);
-                        cand.data[s][i] = scaled_simplex_qp(
+                    if blocked_buf.iter().any(|&b| !b) {
+                        delta_minus_into(marg, net, s, i, delta);
+                        self.data_scale_into(net, flows, marg, s, i, inflate, scale);
+                        scaled_simplex_qp_into(
                             &phi.data[s][i],
-                            &delta,
-                            &scale,
-                            &blocked_slots,
+                            delta,
+                            scale,
+                            blocked_buf,
+                            qp,
+                            &mut cand.data[s][i],
                         );
                     }
                 }
@@ -315,25 +329,27 @@ impl Sgp {
                 {
                     let blocked_slots = &blocked.result[i];
                     if blocked_slots.iter().any(|&b| !b) {
-                        let delta = marg.delta_plus(net, s, i);
-                        let scale =
-                            self.result_scale(net, flows, marg, s, i, inflate);
-                        cand.result[s][i] = scaled_simplex_qp(
+                        delta_plus_into(marg, net, s, i, delta);
+                        self.result_scale_into(net, flows, marg, s, i, inflate, scale);
+                        scaled_simplex_qp_into(
                             &phi.result[s][i],
-                            &delta,
-                            &scale,
+                            delta,
+                            scale,
                             blocked_slots,
+                            qp,
+                            &mut cand.result[s][i],
                         );
                     }
                 }
             }
         }
-        cand
     }
 
     /// Asynchronous single-node update (Theorem 2 schedule): recompute the
     /// global state, then update only `(node, task, plane)`.
     /// `plane_result=false` updates the data plane.
+    ///
+    /// Allocating wrapper over [`Sgp::update_single_node_ws`].
     pub fn update_single_node(
         &mut self,
         net: &Network,
@@ -342,55 +358,126 @@ impl Sgp {
         task: usize,
         plane_result: bool,
     ) -> Result<f64> {
-        let flows = compute_flows(net, phi).map_err(anyhow::Error::new)?;
+        let mut ws = OptWorkspace::new();
+        self.update_single_node_ws(net, phi, node, task, plane_result, &mut ws)
+    }
+
+    /// [`Sgp::update_single_node`] with a caller-owned workspace —
+    /// allocation-free after warm-up, bitwise-identical updates. The
+    /// candidate row is projected in place (the QP input is the saved
+    /// row, constant across the retry ladder, exactly as the cloning
+    /// form's input was) and priced through the workspace's shadow flow
+    /// state; a failed ladder restores the saved row.
+    pub fn update_single_node_ws(
+        &mut self,
+        net: &Network,
+        phi: &mut Strategy,
+        node: usize,
+        task: usize,
+        plane_result: bool,
+        ws: &mut OptWorkspace,
+    ) -> Result<f64> {
+        ws.ensure(net);
+        let OptWorkspace {
+            flows,
+            shadow,
+            flow_scratch,
+            marg,
+            tags,
+            block_scratch,
+            node_blocked,
+            saved_data,
+            saved_result,
+            bufs,
+            ..
+        } = ws;
+        let ProposeBufs {
+            delta, scale, qp, ..
+        } = bufs;
+
+        compute_flows_with(net, phi, flows, flow_scratch).map_err(anyhow::Error::new)?;
         if !flows.total_cost.is_finite() {
             bail!("infinite cost at async update start");
         }
-        let marg = compute_marginals(net, phi, &flows).map_err(anyhow::Error::new)?;
-        let blocked = blocked_sets(net, phi, &marg, task);
+        compute_marginals_into(net, phi, flows, marg).map_err(anyhow::Error::new)?;
+        if plane_result && (node == net.tasks[task].dest || net.graph.out_degree(node) == 0) {
+            return Ok(flows.total_cost);
+        }
+        plane_tags_into(net, phi, marg, task, block_scratch, &mut tags[task]);
+        blocked_rows_for_node_into(net, phi, marg, &tags[task], task, node, &mut node_blocked[task]);
+
+        // The QP input of every ladder attempt is the *current* row; save
+        // it once (the in-place projection overwrites the live row).
+        if plane_result {
+            saved_result[task].clone_from(&phi.result[task][node]);
+        } else {
+            saved_data[task].clone_from(&phi.data[task][node]);
+        }
 
         let mut inflate = self.trust;
         for _attempt in 0..40 {
-            let mut cand = phi.clone();
             if plane_result {
-                if node == net.tasks[task].dest || net.graph.out_degree(node) == 0 {
-                    return Ok(flows.total_cost);
-                }
-                let delta = marg.delta_plus(net, task, node);
-                let scale =
-                    self.result_scale(net, &flows, &marg, task, node, inflate);
-                cand.result[task][node] = scaled_simplex_qp(
-                    &phi.result[task][node],
-                    &delta,
-                    &scale,
-                    &blocked.result[node],
+                delta_plus_into(marg, net, task, node, delta);
+                self.result_scale_into(net, flows, marg, task, node, inflate, scale);
+                scaled_simplex_qp_into(
+                    &saved_result[task],
+                    delta,
+                    scale,
+                    &node_blocked[task].result,
+                    qp,
+                    &mut phi.result[task][node],
                 );
             } else {
-                let delta = marg.delta_minus(net, task, node);
-                let scale =
-                    self.data_scale(net, &flows, &marg, task, node, inflate);
-                cand.data[task][node] = scaled_simplex_qp(
-                    &phi.data[task][node],
-                    &delta,
-                    &scale,
-                    &blocked.data[node],
+                delta_minus_into(marg, net, task, node, delta);
+                self.data_scale_into(net, flows, marg, task, node, inflate, scale);
+                scaled_simplex_qp_into(
+                    &saved_data[task],
+                    delta,
+                    scale,
+                    &node_blocked[task].data,
+                    qp,
+                    &mut phi.data[task][node],
                 );
             }
-            match compute_flows(net, &cand) {
-                Ok(fs)
-                    if fs.total_cost.is_finite()
-                        && self.accepts(net, &flows, phi, &cand, fs.total_cost, 1e-12) =>
-                {
-                    *phi = cand;
-                    return Ok(fs.total_cost);
-                }
-                Ok(_) | Err(_) => {
-                    self.retries += 1;
-                    inflate *= 4.0;
+            let priced = match compute_flows_with(net, phi, shadow, flow_scratch) {
+                Ok(()) => shadow.total_cost.is_finite(),
+                Err(_) => false,
+            };
+            if priced {
+                // Safeguard acceptance, specialized to a single changed
+                // row: the candidate differs from the saved strategy only
+                // at `(task, node, plane)`, so the loaded-block test of
+                // `positive_traffic_changed` reduces to that one row.
+                let cand_cost = shadow.total_cost;
+                let accept = if !self.safeguard {
+                    true
+                } else if cand_cost < flows.total_cost - 1e-12 {
+                    true
+                } else if cand_cost <= flows.total_cost + 1e-12 {
+                    let changed = if plane_result {
+                        flows.t_plus[task][node] > 1e-12
+                            && phi.result[task][node] != saved_result[task]
+                    } else {
+                        flows.t_minus[task][node] > 1e-12
+                            && phi.data[task][node] != saved_data[task]
+                    };
+                    !changed
+                } else {
+                    false
+                };
+                if accept {
+                    return Ok(cand_cost);
                 }
             }
+            self.retries += 1;
+            inflate *= 4.0;
         }
         // No improving step found: keep the current point.
+        if plane_result {
+            phi.result[task][node].clone_from(&saved_result[task]);
+        } else {
+            phi.data[task][node].clone_from(&saved_data[task]);
+        }
         Ok(flows.total_cost)
     }
 }
@@ -404,13 +491,36 @@ impl Sgp {
     /// The control plane (blocked sets, scaling, QP, safeguard) stays in
     /// rust; candidate costs inside the safeguard are also priced by the
     /// backend.
+    ///
+    /// Allocating wrapper over [`Sgp::step_dense_ws`].
     pub fn step_dense(
         &mut self,
         net: &Network,
         phi: &mut Strategy,
         evaluator: &dyn crate::runtime::DenseBackend,
     ) -> Result<IterationStats> {
+        let mut ws = OptWorkspace::new();
+        self.step_dense_ws(net, phi, evaluator, &mut ws)
+    }
+
+    /// [`Sgp::step_dense`] with a caller-owned workspace: the ladder's
+    /// candidate strategies come from the workspace pool (`clone_from`
+    /// reuse) and each row projection runs through the shared QP buffers.
+    /// Backend evaluations still allocate (their output crosses an FFI
+    /// boundary on accelerated backends); the dense path is not under the
+    /// zero-allocation contract, only the sparse sweep is.
+    pub fn step_dense_ws(
+        &mut self,
+        net: &Network,
+        phi: &mut Strategy,
+        evaluator: &dyn crate::runtime::DenseBackend,
+        ws: &mut OptWorkspace,
+    ) -> Result<IterationStats> {
         use crate::graph::algorithms::longest_path_to_sink;
+
+        ws.ensure(net);
+        let cand_pool = &mut ws.cand_pool;
+        let bufs = &mut ws.bufs;
 
         let assemble = |ev: crate::runtime::DenseEval,
                         phi: &Strategy|
@@ -477,7 +587,6 @@ impl Sgp {
         let mut accepted: Option<(crate::runtime::DenseEval, f64, usize)> = None;
         while attempts < MAX_ATTEMPTS && accepted.is_none() {
             let chunk = if attempts == 0 { 1 } else { RETRY_BATCH };
-            let mut batch: Vec<Strategy> = Vec::with_capacity(chunk);
             // (inflation, 1-based attempt index) per batched candidate
             let mut meta: Vec<(f64, usize)> = Vec::with_capacity(chunk);
             // attempt indices of loop-forming (dropped) candidates; the
@@ -485,9 +594,14 @@ impl Sgp {
             // the accepted attempt, so rollbacks are tallied after the
             // scan decides where acceptance lands.
             let mut loop_attempts: Vec<usize> = Vec::new();
-            while batch.len() < chunk && attempts < MAX_ATTEMPTS {
+            let mut batch_len = 0usize;
+            while batch_len < chunk && attempts < MAX_ATTEMPTS {
                 attempts += 1;
-                let cand = self.propose(net, phi, &flows, &marg, &blocked_all, inflate);
+                if cand_pool.len() == batch_len {
+                    cand_pool.push(phi.clone());
+                }
+                let cand = &mut cand_pool[batch_len];
+                self.propose_into(net, phi, &flows, &marg, &blocked_all, inflate, bufs, cand);
                 let cand_inflate = inflate;
                 inflate *= 4.0;
                 if !cand.is_loop_free(net) {
@@ -495,14 +609,14 @@ impl Sgp {
                     continue;
                 }
                 meta.push((cand_inflate, attempts));
-                batch.push(cand);
+                batch_len += 1;
             }
-            let mut evals = evaluator.evaluate_batch(net, &batch)?;
+            let mut evals = evaluator.evaluate_batch(net, &cand_pool[..batch_len])?;
             let mut chosen: Option<usize> = None;
-            for k in 0..batch.len() {
+            for k in 0..batch_len {
                 let cand_cost = evals[k].total_cost;
                 if cand_cost.is_finite()
-                    && self.accepts(net, &flows, phi, &batch[k], cand_cost, slack)
+                    && self.accepts(net, &flows, phi, &cand_pool[k], cand_cost, slack)
                 {
                     chosen = Some(k);
                     break;
@@ -515,7 +629,7 @@ impl Sgp {
                 .filter(|&&a| a < accepted_attempt)
                 .count();
             if let Some(k) = chosen {
-                *phi = batch.swap_remove(k);
+                phi.clone_from(&cand_pool[k]);
                 accepted = Some((evals.swap_remove(k), meta[k].0, meta[k].1));
             }
         }
@@ -554,6 +668,14 @@ impl Optimizer for Sgp {
         "sgp"
     }
 
+    /// Allocating wrapper over [`Optimizer::step_ws`] with a throwaway
+    /// workspace — identical results; use `step_ws` with a persistent
+    /// workspace on hot paths.
+    fn step(&mut self, net: &Network, phi: &mut Strategy) -> Result<IterationStats> {
+        let mut ws = OptWorkspace::new();
+        self.step_ws(net, phi, &mut ws)
+    }
+
     /// One iteration = one **Gauss–Seidel sweep**: every node solves its
     /// individual QP (15) against *fresh* flows and marginals (the
     /// distributed algorithm re-broadcasts between individual updates —
@@ -561,41 +683,84 @@ impl Optimizer for Sgp {
     /// only stable with far smaller steps). Each node's joint
     /// (all tasks, both planes) update passes the descent safeguard
     /// before the sweep moves on.
-    fn step(&mut self, net: &Network, phi: &mut Strategy) -> Result<IterationStats> {
-        use super::blocked::{blocked_rows_for_node, plane_tags};
+    ///
+    /// The entire sweep runs out of the workspace arena: flat marginal
+    /// tables, per-node blocked rows, row-save buffers, QP scratch, and a
+    /// double-buffered flow pair for the safeguard's exact rollback. In
+    /// steady state (workspace warm, shapes unchanged) the per-node inner
+    /// loop performs **zero heap allocations**.
+    fn step_ws(
+        &mut self,
+        net: &Network,
+        phi: &mut Strategy,
+        ws: &mut OptWorkspace,
+    ) -> Result<IterationStats> {
+        ws.ensure(net);
+        let OptWorkspace {
+            flows,
+            shadow,
+            flow_scratch,
+            marg,
+            tags,
+            block_scratch,
+            node_blocked,
+            saved_data,
+            saved_result,
+            bufs,
+            added_data,
+            added_result,
+            task_dirty,
+            dirty,
+            mask,
+            topo,
+            order,
+            ..
+        } = ws;
+        let ProposeBufs {
+            delta,
+            scale,
+            blocked: blocked_buf,
+            qp,
+        } = bufs;
 
-        let mut flows = compute_flows(net, phi).map_err(anyhow::Error::new)?;
+        compute_flows_with(net, phi, flows, flow_scratch).map_err(anyhow::Error::new)?;
         if !flows.total_cost.is_finite() {
             bail!("initial strategy has infinite cost");
         }
-
-        // Reusable row-save buffers: a node's candidate differs from φ only
-        // in its own rows, so the safeguard swaps rows in place instead of
-        // cloning the whole strategy (a 100×+ memory-traffic saving at SW
-        // scale — EXPERIMENTS.md §Perf).
-        let mut saved_data: Vec<Vec<f64>> = vec![Vec::new(); net.s()];
-        let mut saved_result: Vec<Vec<f64>> = vec![Vec::new(); net.s()];
 
         let refresh = if self.marg_refresh == 0 {
             (net.n() / 25).max(1)
         } else {
             self.marg_refresh
         };
-        let mut marg = compute_marginals(net, phi, &flows).map_err(anyhow::Error::new)?;
-        let mut tags_all: Vec<super::blocked::PlaneTags> =
-            (0..net.s()).map(|s| plane_tags(net, phi, &marg, s)).collect();
+        compute_marginals_into(net, phi, flows, marg).map_err(anyhow::Error::new)?;
+        for s in 0..net.s() {
+            plane_tags_into(net, phi, marg, s, block_scratch, &mut tags[s]);
+        }
         for node in 0..net.n() {
             if node > 0 && node % refresh == 0 {
-                marg = compute_marginals(net, phi, &flows).map_err(anyhow::Error::new)?;
-                tags_all = (0..net.s())
-                    .map(|s| plane_tags(net, phi, &marg, s))
-                    .collect();
+                compute_marginals_into(net, phi, flows, marg).map_err(anyhow::Error::new)?;
+                for s in 0..net.s() {
+                    plane_tags_into(net, phi, marg, s, block_scratch, &mut tags[s]);
+                }
             }
             // Only this node's blocked rows are needed (O(deg) given tags).
-            let node_blocked: Vec<super::blocked::NodeBlocked> = (0..net.s())
-                .map(|s| blocked_rows_for_node(net, phi, &marg, &tags_all[s], s, node))
-                .collect();
+            for s in 0..net.s() {
+                blocked_rows_for_node_into(
+                    net,
+                    phi,
+                    marg,
+                    &tags[s],
+                    s,
+                    node,
+                    &mut node_blocked[s],
+                );
+            }
 
+            // A node's candidate differs from φ only in its own rows, so
+            // the safeguard swaps rows in place instead of cloning the
+            // whole strategy (a 100×+ memory-traffic saving at SW scale —
+            // EXPERIMENTS.md §Perf).
             for s in 0..net.s() {
                 saved_data[s].clone_from(&phi.data[s][node]);
                 saved_result[s].clone_from(&phi.result[s][node]);
@@ -610,35 +775,39 @@ impl Optimizer for Sgp {
                 // Which planes gained a previously-inactive edge? Only
                 // those can create a routing loop, so the (expensive)
                 // cycle re-check is restricted to them.
-                let mut added_data: Vec<bool> = vec![false; net.s()];
-                let mut added_result: Vec<bool> = vec![false; net.s()];
+                added_data.clear();
+                added_data.resize(net.s(), false);
+                added_result.clear();
+                added_result.resize(net.s(), false);
                 // Which tasks' flows are affected at all? (row changed AND
                 // the node carries traffic on that plane) — only those are
                 // re-flowed incrementally.
-                let mut task_dirty: Vec<bool> = vec![false; net.s()];
+                task_dirty.clear();
+                task_dirty.resize(net.s(), false);
                 for s in 0..net.s() {
-                    let blocked = &node_blocked[s];
+                    let nb = &node_blocked[s];
                     if !self.restriction.freeze_data {
-                        let mut blocked_slots = blocked.data.clone();
+                        blocked_buf.clone_from(&nb.data);
                         if let Some(extra) = &self.restriction.extra_blocked_data {
-                            for (b, &x) in blocked_slots.iter_mut().zip(&extra[s][node]) {
+                            for (b, &x) in blocked_buf.iter_mut().zip(&extra[s][node]) {
                                 *b |= x;
                             }
                         }
-                        for (slot, b) in blocked_slots.iter_mut().enumerate() {
+                        for (slot, b) in blocked_buf.iter_mut().enumerate() {
                             if saved_data[s][slot] > 0.0 {
                                 *b = false;
                             }
                         }
-                        if blocked_slots.iter().any(|&b| !b) {
-                            let delta = marg.delta_minus(net, s, node);
-                            let scale =
-                                self.data_scale(net, &flows, &marg, s, node, inflate);
-                            phi.data[s][node] = scaled_simplex_qp(
+                        if blocked_buf.iter().any(|&b| !b) {
+                            delta_minus_into(marg, net, s, node, delta);
+                            self.data_scale_into(net, flows, marg, s, node, inflate, scale);
+                            scaled_simplex_qp_into(
                                 &saved_data[s],
-                                &delta,
-                                &scale,
-                                &blocked_slots,
+                                delta,
+                                scale,
+                                blocked_buf,
+                                qp,
+                                &mut phi.data[s][node],
                             );
                             if flows.t_minus[s][node] > 1e-12
                                 && phi.data[s][node] != saved_data[s]
@@ -660,16 +829,17 @@ impl Optimizer for Sgp {
                     if !self.restriction.freeze_result
                         && node != net.tasks[s].dest
                         && net.graph.out_degree(node) > 0
-                        && blocked.result.iter().any(|&b| !b)
+                        && nb.result.iter().any(|&b| !b)
                     {
-                        let delta = marg.delta_plus(net, s, node);
-                        let scale =
-                            self.result_scale(net, &flows, &marg, s, node, inflate);
-                        phi.result[s][node] = scaled_simplex_qp(
+                        delta_plus_into(marg, net, s, node, delta);
+                        self.result_scale_into(net, flows, marg, s, node, inflate, scale);
+                        scaled_simplex_qp_into(
                             &saved_result[s],
-                            &delta,
-                            &scale,
-                            &blocked.result,
+                            delta,
+                            scale,
+                            &nb.result,
+                            qp,
+                            &mut phi.result[s][node],
                         );
                         if flows.t_plus[s][node] > 1e-12
                             && phi.result[s][node] != saved_result[s]
@@ -689,49 +859,37 @@ impl Optimizer for Sgp {
                     }
                 }
 
-                let restore = |phi: &mut Strategy,
-                               saved_data: &[Vec<f64>],
-                               saved_result: &[Vec<f64>]| {
-                    for s in 0..net.s() {
-                        phi.data[s][node].clone_from(&saved_data[s]);
-                        phi.result[s][node].clone_from(&saved_result[s]);
-                    }
-                };
-
                 // Cycle re-check, restricted to planes that gained edges
                 // (mass removal/shifting among active edges cannot close a
                 // loop). With blocked sets this almost never fires.
                 let mut loop_found = false;
                 for s in 0..net.s() {
-                    if added_data[s]
-                        && crate::graph::algorithms::has_cycle_masked(
-                            &net.graph,
-                            &phi.data_active_mask(net, s),
-                        )
-                    {
-                        loop_found = true;
-                        break;
+                    if added_data[s] {
+                        phi.data_active_mask_into(net, s, mask);
+                        if has_cycle_masked_into(&net.graph, mask, topo, order) {
+                            loop_found = true;
+                            break;
+                        }
                     }
-                    if added_result[s]
-                        && crate::graph::algorithms::has_cycle_masked(
-                            &net.graph,
-                            &phi.result_active_mask(net, s),
-                        )
-                    {
-                        loop_found = true;
-                        break;
+                    if added_result[s] {
+                        phi.result_active_mask_into(net, s, mask);
+                        if has_cycle_masked_into(&net.graph, mask, topo, order) {
+                            loop_found = true;
+                            break;
+                        }
                     }
                 }
                 if loop_found {
                     self.rollbacks += 1;
-                    restore(phi, &saved_data, &saved_result);
+                    restore_rows(phi, node, saved_data, saved_result);
                     inflate *= 4.0;
                     continue;
                 }
                 // Incrementally re-flow only the dirty tasks; snapshot the
-                // previous state so a rejection can roll back exactly.
-                let dirty: Vec<usize> =
-                    (0..net.s()).filter(|&s| task_dirty[s]).collect();
+                // previous state into the shadow flow buffer so a
+                // rejection can roll back exactly.
+                dirty.clear();
+                dirty.extend((0..net.s()).filter(|&s| task_dirty[s]));
                 if dirty.is_empty() {
                     // zero-traffic re-pointing only: flows (and cost) are
                     // unchanged; accept iff nothing loaded moved.
@@ -739,21 +897,19 @@ impl Optimizer for Sgp {
                         accepted = true;
                         break;
                     }
-                    restore(phi, &saved_data, &saved_result);
+                    restore_rows(phi, node, saved_data, saved_result);
                     inflate *= 4.0;
                     self.retries += 1;
                     continue;
                 }
                 let old_cost = flows.total_cost;
-                let snap: Vec<TaskFlowSnap> =
-                    dirty.iter().map(|&s| TaskFlowSnap::take(&flows, s)).collect();
-                let old_link_flow = flows.link_flow.clone();
-                let old_workload = flows.workload.clone();
+                for &s in dirty.iter() {
+                    shadow.copy_task_from(flows, s);
+                }
+                shadow.copy_aggregates_from(flows);
                 let mut flow_err = false;
-                for &s in &dirty {
-                    if crate::model::flows::recompute_task_flows(net, phi, &mut flows, s)
-                        .is_err()
-                    {
+                for &s in dirty.iter() {
+                    if recompute_task_flows_with(net, phi, flows, s, flow_scratch).is_err() {
                         flow_err = true;
                         break;
                     }
@@ -761,7 +917,7 @@ impl Optimizer for Sgp {
                 let new_cost = if flow_err {
                     f64::INFINITY
                 } else {
-                    crate::model::flows::refresh_total_cost(net, &mut flows)
+                    refresh_total_cost(net, flows)
                 };
                 if new_cost.is_finite()
                     && (!self.safeguard
@@ -772,13 +928,11 @@ impl Optimizer for Sgp {
                     break;
                 }
                 // rollback flows + rows
-                for (snap, &s) in snap.iter().zip(&dirty) {
-                    snap.restore(&mut flows, s);
+                for &s in dirty.iter() {
+                    flows.copy_task_from(shadow, s);
                 }
-                flows.link_flow = old_link_flow;
-                flows.workload = old_workload;
-                flows.total_cost = old_cost;
-                restore(phi, &saved_data, &saved_result);
+                flows.copy_aggregates_from(shadow);
+                restore_rows(phi, node, saved_data, saved_result);
                 self.retries += 1;
                 inflate *= 4.0;
             }
@@ -791,10 +945,10 @@ impl Optimizer for Sgp {
             }
         }
 
-        let marg2 = compute_marginals(net, phi, &flows).map_err(anyhow::Error::new)?;
+        compute_marginals_into(net, phi, flows, marg).map_err(anyhow::Error::new)?;
         Ok(IterationStats {
             total_cost: flows.total_cost,
-            residual: theorem1_residual(net, phi, &marg2),
+            residual: theorem1_residual_with(net, phi, marg, delta),
         })
     }
 }
@@ -802,6 +956,7 @@ impl Optimizer for Sgp {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::flows::compute_flows;
     use crate::model::network::testnet::{diamond, line3};
 
     fn run(net: &Network, iters: usize) -> (Strategy, Vec<IterationStats>) {
@@ -893,6 +1048,29 @@ mod tests {
                 assert!(phi.is_loop_free(&net));
             }
         }
+    }
+
+    #[test]
+    fn persistent_workspace_matches_throwaway_step() {
+        // The workspace is a layout change only: a persistent, reused
+        // arena must produce bit-for-bit the trajectory of per-call fresh
+        // workspaces (which is what `step` uses).
+        let net = diamond(true);
+        let mut phi_a = Strategy::local_compute_init(&net);
+        let mut phi_b = phi_a.clone();
+        let mut sgp_a = Sgp::new();
+        let mut sgp_b = Sgp::new();
+        let mut ws = OptWorkspace::new();
+        for it in 0..25 {
+            let sa = sgp_a.step(&net, &mut phi_a).unwrap();
+            let sb = sgp_b.step_ws(&net, &mut phi_b, &mut ws).unwrap();
+            assert_eq!(sa.total_cost.to_bits(), sb.total_cost.to_bits(), "iter {it}");
+            assert_eq!(sa.residual.to_bits(), sb.residual.to_bits(), "iter {it}");
+            assert_eq!(phi_a.data, phi_b.data, "iter {it}");
+            assert_eq!(phi_a.result, phi_b.result, "iter {it}");
+        }
+        assert_eq!(sgp_a.retries, sgp_b.retries);
+        assert_eq!(sgp_a.rollbacks, sgp_b.rollbacks);
     }
 
     #[test]

@@ -16,6 +16,18 @@
 //! simplex-projection algorithm, cf. Held–Wolfe–Crowder), with a bisection
 //! fallback exercised in tests for cross-validation.
 
+use std::cmp::Ordering;
+
+/// Reusable buffers for [`scaled_simplex_qp_into`] — one per worker
+/// thread, owned by the optimizer workspace.
+#[derive(Clone, Debug, Default)]
+pub struct QpScratch {
+    free: Vec<usize>,
+    y: Vec<f64>,
+    u: Vec<f64>,
+    bps: Vec<(f64, usize)>,
+}
+
 /// Solve the scaled projection QP. `phi`, `delta`, `scale` are parallel
 /// slot vectors; `blocked[j]` forces `v_j = 0`. `scale` entries must be
 /// positive for unblocked slots (callers floor them at an epsilon).
@@ -29,19 +41,42 @@ pub fn scaled_simplex_qp(
     scale: &[f64],
     blocked: &[bool],
 ) -> Vec<f64> {
+    let mut scratch = QpScratch::default();
+    let mut v = Vec::new();
+    scaled_simplex_qp_into(phi, delta, scale, blocked, &mut scratch, &mut v);
+    v
+}
+
+/// [`scaled_simplex_qp`] into caller-owned scratch and output buffers —
+/// allocation-free after warm-up, bitwise-identical result. The breakpoint
+/// sort is a stable insertion sort under the same descending comparator,
+/// so it yields exactly the permutation the allocating form's stable
+/// `sort_by` produced (equal keys keep their relative order in both).
+pub fn scaled_simplex_qp_into(
+    phi: &[f64],
+    delta: &[f64],
+    scale: &[f64],
+    blocked: &[bool],
+    scratch: &mut QpScratch,
+    v: &mut Vec<f64>,
+) {
     let n = phi.len();
     assert_eq!(delta.len(), n);
     assert_eq!(scale.len(), n);
     assert_eq!(blocked.len(), n);
-    let free: Vec<usize> = (0..n).filter(|&j| !blocked[j]).collect();
+    let QpScratch { free, y, u, bps } = scratch;
+    free.clear();
+    free.extend((0..n).filter(|&j| !blocked[j]));
     assert!(!free.is_empty(), "all slots blocked");
 
     // Unconstrained minimizer y_j and its inverse weights u_j = 1/(2 m_j).
     // v_j(λ) = max(0, y_j − λ u_j) is non-increasing in λ; find λ* with
     // Σ v_j(λ*) = 1.
-    let mut y = vec![0.0; n];
-    let mut u = vec![0.0; n];
-    for &j in &free {
+    y.clear();
+    y.resize(n, 0.0);
+    u.clear();
+    u.resize(n, 0.0);
+    for &j in free.iter() {
         debug_assert!(scale[j] > 0.0, "non-positive scale {} at slot {j}", scale[j]);
         u[j] = 1.0 / (2.0 * scale[j]);
         y[j] = phi[j] - delta[j] * u[j];
@@ -49,8 +84,15 @@ pub fn scaled_simplex_qp(
 
     // Breakpoints: λ_j = y_j / u_j is where slot j hits zero.
     // Sort descending; scan adding slots to the active set.
-    let mut bps: Vec<(f64, usize)> = free.iter().map(|&j| (y[j] / u[j], j)).collect();
-    bps.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    bps.clear();
+    bps.extend(free.iter().map(|&j| (y[j] / u[j], j)));
+    for i in 1..bps.len() {
+        let mut k = i;
+        while k > 0 && bps[k - 1].0.partial_cmp(&bps[k].0).unwrap() == Ordering::Less {
+            bps.swap(k - 1, k);
+            k -= 1;
+        }
+    }
 
     // With active set A: Σ_{j∈A} (y_j − λ u_j) = 1
     //   ⇒ λ = (Σ_A y_j − 1) / Σ_A u_j.
@@ -75,18 +117,19 @@ pub fn scaled_simplex_qp(
         // Breakpoint scan can miss a prefix under extreme scalings (ties,
         // near-infinite diagonals from saturated curvature). Bisection is
         // slower but unconditionally robust.
-        lambda = bisect_lambda(&y, &u, &free);
+        lambda = bisect_lambda(y, u, free);
     }
 
-    let mut v = vec![0.0; n];
+    v.clear();
+    v.resize(n, 0.0);
     let mut sum = 0.0;
-    for &j in &free {
+    for &j in free.iter() {
         v[j] = (y[j] - lambda * u[j]).max(0.0);
         sum += v[j];
     }
     // Renormalize away accumulated floating-point error (sum ≈ 1).
     if sum > 0.0 {
-        for &j in &free {
+        for &j in free.iter() {
             v[j] /= sum;
         }
     } else {
@@ -98,7 +141,6 @@ pub fn scaled_simplex_qp(
             .unwrap();
         v[best] = 1.0;
     }
-    v
 }
 
 /// Bisection fallback for λ (cross-validation in tests + defensive path).
@@ -347,6 +389,61 @@ mod tests {
                     (v[j] - vb).abs() < 1e-6,
                     "slot {j}: exact {} vs bisect {vb}",
                     v[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn into_form_reuse_is_bitwise_identical() {
+        let mut rng = Pcg::new(77);
+        let mut scratch = QpScratch::default();
+        let mut out = Vec::new();
+        for trial in 0..300 {
+            let n = rng.int_range(1, 9);
+            let mut phi: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let s: f64 = phi.iter().sum();
+            if s == 0.0 {
+                continue;
+            }
+            phi.iter_mut().for_each(|x| *x /= s);
+            // discrete values on some trials force duplicate breakpoints,
+            // exercising sort stability
+            let discrete = trial % 3 == 0;
+            let delta: Vec<f64> = (0..n)
+                .map(|_| {
+                    if discrete {
+                        rng.int_range(0, 3) as f64
+                    } else {
+                        rng.uniform(-2.0, 5.0)
+                    }
+                })
+                .collect();
+            let scale: Vec<f64> = (0..n)
+                .map(|_| {
+                    if discrete {
+                        1.0
+                    } else {
+                        rng.uniform(0.1, 3.0)
+                    }
+                })
+                .collect();
+            let mut blocked = vec![false; n];
+            for b in blocked.iter_mut() {
+                *b = rng.chance(0.2);
+            }
+            if blocked.iter().all(|&b| b) {
+                blocked[0] = false;
+            }
+            let fresh = scaled_simplex_qp(&phi, &delta, &scale, &blocked);
+            // reused (dirty) scratch must reproduce the fresh result bitwise
+            scaled_simplex_qp_into(&phi, &delta, &scale, &blocked, &mut scratch, &mut out);
+            assert_eq!(fresh.len(), out.len(), "trial {trial}");
+            for j in 0..n {
+                assert_eq!(
+                    fresh[j].to_bits(),
+                    out[j].to_bits(),
+                    "trial {trial} slot {j}"
                 );
             }
         }

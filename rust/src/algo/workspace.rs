@@ -1,0 +1,191 @@
+//! Reusable scratch arena for the optimizer hot path.
+//!
+//! [`OptWorkspace`] owns every buffer the SGP/GP inner loops need —
+//! flat marginal tables, a double-buffered flow pair, blocked-set rows,
+//! QP scratch, per-attempt flag vectors — so a steady-state
+//! [`Sgp::step_ws`](super::Sgp) sweep performs **zero heap allocation**
+//! after warm-up. One workspace per worker thread (or per sweep cell /
+//! dynamics run / re-optimization state); never share one across threads.
+//!
+//! Results are **bitwise identical** to the allocating paths: the
+//! workspace only changes where intermediate values live, never the
+//! order of floating-point operations (pinned by
+//! `tests/opt_workspace.rs`).
+//!
+//! # Zero-allocation audit of the steady-state sparse sweep
+//!
+//! Every buffer a `step_ws` iteration touches, and why it cannot
+//! allocate once warm (warm = one prior full sweep on the same-shaped
+//! network; certified mechanically by the counting `#[global_allocator]`
+//! in `tests/opt_workspace.rs`):
+//!
+//! * `flows` / `shadow` — shaped by [`FlowState::zeroed`] in
+//!   [`OptWorkspace::ensure`]; `compute_flows_with`,
+//!   `recompute_task_flows_with`, `copy_task_from`, and
+//!   `copy_aggregates_from` only overwrite in place.
+//! * `flow_scratch` / `marg` / `block_scratch` / `topo` — self-ensuring
+//!   scratch types; their `ensure` paths resize only on a dimension
+//!   change.
+//! * `tags` / `node_blocked` — count-shaped in `ensure`; per-row `Vec`s
+//!   inside are `clear` + `resize`d to the same lengths every use.
+//! * `saved_data` / `saved_result` — one row per task, refilled with
+//!   `clone_from`; row capacity grows to the sweep's max row width
+//!   during the first full sweep and is never exceeded after.
+//! * `bufs` (`delta`/`scale`/`blocked` + QP scratch) — `clear` +
+//!   `reserve(deg+1)`-style refills bounded by the max out-degree seen
+//!   in the first sweep.
+//! * `added_*` / `task_dirty` / `dirty` / `mask` / `order` — `clear` +
+//!   `resize`/`extend` bounded by task/edge/node counts.
+//! * `cand_pool` — dense/GP path only; slots are created on first use
+//!   and refilled with `clone_from` after (the dense path's backend
+//!   evaluation itself is exempt from the contract — see
+//!   [`Sgp::step_dense_ws`](super::Sgp::step_dense_ws)).
+//!
+//! Only error paths (`anyhow!`/`bail!`) allocate; they abort the sweep.
+
+use crate::graph::algorithms::TopoScratch;
+use crate::model::flows::{FlowScratch, FlowState};
+use crate::model::marginals::MarginalScratch;
+use crate::model::network::Network;
+use crate::model::strategy::Strategy;
+
+use super::blocked::{BlockScratch, NodeBlocked, PlaneTags};
+use super::simplex_qp::QpScratch;
+
+/// Per-row QP input/output buffers shared by the sparse sweep, the dense
+/// batched proposer, and the async single-node update.
+#[derive(Debug, Default)]
+pub(crate) struct ProposeBufs {
+    /// Marginal vector `δ±` for the row being projected.
+    pub(crate) delta: Vec<f64>,
+    /// Scaling-matrix diagonal for the row being projected.
+    pub(crate) scale: Vec<f64>,
+    /// Blocked-slot overlay (base blocked row ∪ restriction extras, minus
+    /// currently-active slots).
+    pub(crate) blocked: Vec<bool>,
+    /// Breakpoint / free-set scratch of the simplex QP.
+    pub(crate) qp: QpScratch,
+}
+
+/// The optimizer scratch arena. Construct once with
+/// [`OptWorkspace::new`] and pass to every `step_ws` /
+/// `update_single_node_ws` call; [`OptWorkspace::ensure`] reshapes the
+/// buffers whenever the network dimensions change, so one workspace can
+/// serve differently-shaped networks back to back (grow or shrink).
+#[derive(Debug)]
+pub struct OptWorkspace {
+    /// Current flow state (the optimizer's working copy).
+    pub(crate) flows: FlowState,
+    /// Shadow flow state: rollback snapshot for the Gauss–Seidel
+    /// safeguard, candidate pricing for the async update.
+    pub(crate) shadow: FlowState,
+    /// Mask/topo scratch of the flow computations.
+    pub(crate) flow_scratch: FlowScratch,
+    /// Flat marginal tables (`δ` ingredients, `h±`).
+    pub(crate) marg: MarginalScratch,
+    /// Improper-link tags per task.
+    pub(crate) tags: Vec<PlaneTags>,
+    /// Mask/topo scratch of the tag construction.
+    pub(crate) block_scratch: BlockScratch,
+    /// Blocked rows of the node currently being updated, per task.
+    pub(crate) node_blocked: Vec<NodeBlocked>,
+    /// Saved data-plane rows of the node being updated (rollback + QP
+    /// input), per task.
+    pub(crate) saved_data: Vec<Vec<f64>>,
+    /// Saved result-plane rows, per task.
+    pub(crate) saved_result: Vec<Vec<f64>>,
+    /// Row-level QP buffers.
+    pub(crate) bufs: ProposeBufs,
+    /// Per-task "gained a previously-inactive data edge" flags.
+    pub(crate) added_data: Vec<bool>,
+    /// Per-task "gained a previously-inactive result edge" flags.
+    pub(crate) added_result: Vec<bool>,
+    /// Per-task "flows affected" flags.
+    pub(crate) task_dirty: Vec<bool>,
+    /// Dirty-task index list (compacted from `task_dirty`).
+    pub(crate) dirty: Vec<usize>,
+    /// Active-edge mask for the safeguard's cycle re-check.
+    pub(crate) mask: Vec<bool>,
+    /// Topo scratch for the cycle re-check.
+    pub(crate) topo: TopoScratch,
+    /// Topo order output for the cycle re-check.
+    pub(crate) order: Vec<usize>,
+    /// Candidate-strategy pool for the dense batched ladder (and GP's
+    /// single candidate) — refilled with `clone_from`, so row shapes
+    /// adapt without reallocating on same-shaped networks.
+    pub(crate) cand_pool: Vec<Strategy>,
+    /// Network shape `(n, e, s)` the sized buffers currently match.
+    shape: Option<(usize, usize, usize)>,
+}
+
+fn empty_flow_state() -> FlowState {
+    FlowState {
+        t_minus: Vec::new(),
+        t_plus: Vec::new(),
+        g: Vec::new(),
+        f_minus: Vec::new(),
+        f_plus: Vec::new(),
+        link_flow: Vec::new(),
+        workload: Vec::new(),
+        total_cost: 0.0,
+    }
+}
+
+impl OptWorkspace {
+    /// An empty workspace; buffers are shaped lazily by
+    /// [`OptWorkspace::ensure`] on first use.
+    pub fn new() -> OptWorkspace {
+        OptWorkspace {
+            flows: empty_flow_state(),
+            shadow: empty_flow_state(),
+            flow_scratch: FlowScratch::default(),
+            marg: MarginalScratch::new(),
+            tags: Vec::new(),
+            block_scratch: BlockScratch::default(),
+            node_blocked: Vec::new(),
+            saved_data: Vec::new(),
+            saved_result: Vec::new(),
+            bufs: ProposeBufs::default(),
+            added_data: Vec::new(),
+            added_result: Vec::new(),
+            task_dirty: Vec::new(),
+            dirty: Vec::new(),
+            mask: Vec::new(),
+            topo: TopoScratch::default(),
+            order: Vec::new(),
+            cand_pool: Vec::new(),
+            shape: None,
+        }
+    }
+
+    /// Reshape the dimension-sized buffers for `net` if its `(n, e, s)`
+    /// shape differs from the last use. Buffers that are fully rewritten
+    /// on every use (masks, rows, QP scratch) are left alone — they
+    /// resize themselves in place.
+    pub fn ensure(&mut self, net: &Network) {
+        let key = (net.n(), net.e(), net.s());
+        if self.shape == Some(key) {
+            return;
+        }
+        self.flows = FlowState::zeroed(net);
+        self.shadow = FlowState::zeroed(net);
+        self.tags.clear();
+        self.tags.resize_with(net.s(), PlaneTags::default);
+        self.node_blocked.clear();
+        self.node_blocked.resize_with(net.s(), NodeBlocked::default);
+        self.saved_data.clear();
+        self.saved_data.resize_with(net.s(), Vec::new);
+        self.saved_result.clear();
+        self.saved_result.resize_with(net.s(), Vec::new);
+        // Pool candidates are cloned from live strategies; shapes from a
+        // previous network must not survive a dimension change.
+        self.cand_pool.clear();
+        self.shape = Some(key);
+    }
+}
+
+impl Default for OptWorkspace {
+    fn default() -> Self {
+        OptWorkspace::new()
+    }
+}

@@ -38,6 +38,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::algo::OptWorkspace;
 use crate::model::cost::CostFn;
 use crate::model::flows::compute_flows;
 use crate::model::network::Network;
@@ -699,6 +700,10 @@ impl AdaptiveRunner {
     ) -> Result<Vec<EpochRun>> {
         let carrier = MemStore::new();
         let store: &dyn StrategyStore = external.unwrap_or(&carrier);
+        // One optimizer workspace for the whole trace: epochs reuse the
+        // arena (reshaped automatically when churn changes the edge
+        // count), so steady-state epochs re-optimize allocation-free.
+        let mut ws = OptWorkspace::new();
         let mut runs: Vec<EpochRun> = Vec::with_capacity(schedule.epochs());
         for e in 0..schedule.epochs() {
             let net = schedule.network_at(base, seed, e);
@@ -761,7 +766,7 @@ impl AdaptiveRunner {
                     (entry.algorithm, costs, entry.iters_to_1pct, entry.phi)
                 }
                 None => {
-                    let out = self.optimize_epoch(&net, &phi0).with_context(|| {
+                    let out = self.optimize_epoch(&net, &phi0, &mut ws).with_context(|| {
                         format!("optimizing epoch {e} of schedule {}", schedule.label())
                     })?;
                     let iters_to_1pct = metrics::iters_to_1pct(&out.costs);
@@ -808,7 +813,12 @@ impl AdaptiveRunner {
     /// optimizer per epoch keeps epochs independent (and matches the
     /// Fig. 5b failure driver); the *strategy* is what carries across
     /// epochs.
-    fn optimize_epoch(&self, net: &Network, phi0: &Strategy) -> Result<AlgoOutcome> {
+    fn optimize_epoch(
+        &self,
+        net: &Network,
+        phi0: &Strategy,
+        ws: &mut OptWorkspace,
+    ) -> Result<AlgoOutcome> {
         match (self.algorithm, self.backend) {
             (Algorithm::Sgp, _) | (Algorithm::Gp, CellBackend::Sparse) => {}
             (algo, backend) => bail!(
@@ -818,7 +828,14 @@ impl AdaptiveRunner {
                 backend.name()
             ),
         }
-        super::run_algorithm_with_backend_warm(net, self.algorithm, self.backend, &self.run, Some(phi0))
+        super::run_algorithm_with_backend_warm_ws(
+            net,
+            self.algorithm,
+            self.backend,
+            &self.run,
+            Some(phi0),
+            ws,
+        )
     }
 }
 

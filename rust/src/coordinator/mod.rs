@@ -16,7 +16,7 @@ pub mod sweep_report;
 
 use anyhow::{Context, Result};
 
-use crate::algo::{lcor_optimizer, spoo_optimizer, Gp, Lpr, Sgp};
+use crate::algo::{lcor_optimizer, spoo_optimizer, Gp, Lpr, OptWorkspace, Sgp};
 use crate::model::flows::compute_flows;
 use crate::model::network::Network;
 use crate::model::strategy::Strategy;
@@ -26,7 +26,9 @@ pub use dynamics::{
     AdaptiveRunner, DynamicCell, DynamicSpec, DynamicTrace, EpochTrace, PatternSchedule,
     ScheduleKind,
 };
-pub use runner::{optimize, optimize_accelerated, RunConfig, RunResult};
+pub use runner::{
+    optimize, optimize_accelerated, optimize_accelerated_ws, optimize_ws, RunConfig, RunResult,
+};
 pub use scenario::{connected_er_servers, CostKind, Scenario, ScenarioSpec};
 pub use store::{FsStore, MemStore, StoredRun, StrategyStore};
 pub use sweep::{
@@ -77,6 +79,22 @@ pub fn run_algorithm_warm(
     cfg: &RunConfig,
     warm: Option<&Strategy>,
 ) -> Result<AlgoOutcome> {
+    let mut ws = OptWorkspace::new();
+    run_algorithm_warm_ws(net, algo, cfg, warm, &mut ws)
+}
+
+/// [`run_algorithm_warm`] with a caller-owned [`OptWorkspace`]: the sweep
+/// engine keeps one per cell and the adaptive engine one per run, so
+/// repeated invocations reuse the optimizer scratch instead of
+/// reallocating it. Results are identical to [`run_algorithm_warm`].
+/// Never share one workspace across threads.
+pub fn run_algorithm_warm_ws(
+    net: &Network,
+    algo: Algorithm,
+    cfg: &RunConfig,
+    warm: Option<&Strategy>,
+    ws: &mut OptWorkspace,
+) -> Result<AlgoOutcome> {
     if let Some(w) = warm {
         anyhow::ensure!(
             algo.supports_warm_start(),
@@ -108,23 +126,23 @@ pub fn run_algorithm_warm(
             let res = match algo {
                 Algorithm::Sgp => {
                     let mut opt = Sgp::new();
-                    optimize(net, &mut opt, &phi0, cfg)?
+                    runner::optimize_ws(net, &mut opt, &phi0, cfg, ws)?
                 }
                 _ => {
                     let mut opt = Gp::new(1.0);
-                    optimize(net, &mut opt, &phi0, cfg)?
+                    runner::optimize_ws(net, &mut opt, &phi0, cfg, ws)?
                 }
             };
             finish_iterative(net, res)
         }
         Algorithm::Spoo => {
             let (mut opt, phi0) = spoo_optimizer(net);
-            let res = optimize(net, &mut opt, &phi0, cfg)?;
+            let res = runner::optimize_ws(net, &mut opt, &phi0, cfg, ws)?;
             finish_iterative_named(net, res, "spoo")
         }
         Algorithm::Lcor => {
             let (mut opt, phi0) = lcor_optimizer(net);
-            let res = optimize(net, &mut opt, &phi0, cfg)?;
+            let res = runner::optimize_ws(net, &mut opt, &phi0, cfg, ws)?;
             finish_iterative_named(net, res, "lcor")
         }
     }
@@ -197,8 +215,22 @@ pub fn run_algorithm_with_backend_warm(
     cfg: &RunConfig,
     warm: Option<&Strategy>,
 ) -> Result<AlgoOutcome> {
+    let mut ws = OptWorkspace::new();
+    run_algorithm_with_backend_warm_ws(net, algo, backend, cfg, warm, &mut ws)
+}
+
+/// [`run_algorithm_with_backend_warm`] with a caller-owned
+/// [`OptWorkspace`] (see [`run_algorithm_warm_ws`]). Identical results.
+pub fn run_algorithm_with_backend_warm_ws(
+    net: &Network,
+    algo: Algorithm,
+    backend: CellBackend,
+    cfg: &RunConfig,
+    warm: Option<&Strategy>,
+    ws: &mut OptWorkspace,
+) -> Result<AlgoOutcome> {
     if backend == CellBackend::Sparse {
-        return run_algorithm_warm(net, algo, cfg, warm);
+        return run_algorithm_warm_ws(net, algo, cfg, warm, ws);
     }
     anyhow::ensure!(
         algo == Algorithm::Sgp,
@@ -216,12 +248,13 @@ pub fn run_algorithm_with_backend_warm(
         CellBackend::Native => {
             let phi0 = warm_or_cold(net, warm);
             let mut sgp = Sgp::new();
-            let res = runner::optimize_accelerated(
+            let res = runner::optimize_accelerated_ws(
                 net,
                 &mut sgp,
                 &phi0,
                 cfg,
                 &crate::runtime::NativeBackend,
+                ws,
             )?;
             finish_iterative(net, res)
         }

@@ -5,7 +5,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::algo::{Optimizer, Sgp};
+use crate::algo::{OptWorkspace, Optimizer, Sgp};
 use crate::model::network::Network;
 use crate::model::strategy::Strategy;
 use crate::runtime::DenseBackend;
@@ -123,18 +123,34 @@ fn record(costs: &mut Vec<f64>, residuals: &mut Vec<f64>, st: &crate::algo::Iter
 }
 
 /// Run any [`Optimizer`] to steady state (native evaluation).
+/// Allocates a run-local workspace; use [`optimize_ws`] to reuse one
+/// across runs (sweep cells, dynamic epochs).
 pub fn optimize(
     net: &Network,
     opt: &mut dyn Optimizer,
     phi0: &Strategy,
     cfg: &RunConfig,
 ) -> Result<RunResult> {
+    let mut ws = OptWorkspace::new();
+    optimize_ws(net, opt, phi0, cfg, &mut ws)
+}
+
+/// [`optimize`] with a caller-owned [`OptWorkspace`], reused across every
+/// iteration (and across calls) — the optimizer hot path allocates
+/// nothing once the workspace is warm. Identical results to `optimize`.
+pub fn optimize_ws(
+    net: &Network,
+    opt: &mut dyn Optimizer,
+    phi0: &Strategy,
+    cfg: &RunConfig,
+    ws: &mut OptWorkspace,
+) -> Result<RunResult> {
     let mut phi = phi0.clone();
     let mut costs = Vec::new();
     let mut residuals = Vec::new();
     let start = Instant::now();
     for _ in 0..cfg.max_iters {
-        let st = opt.step(net, &mut phi)?;
+        let st = opt.step_ws(net, &mut phi, ws)?;
         record(&mut costs, &mut residuals, &st);
         if converged(&costs, cfg) {
             break;
@@ -163,12 +179,27 @@ pub fn optimize_accelerated(
     cfg: &RunConfig,
     evaluator: &dyn DenseBackend,
 ) -> Result<RunResult> {
+    let mut ws = OptWorkspace::new();
+    optimize_accelerated_ws(net, sgp, phi0, cfg, evaluator, &mut ws)
+}
+
+/// [`optimize_accelerated`] with a caller-owned [`OptWorkspace`] (shared
+/// QP buffers and pooled ladder candidates across iterations). Identical
+/// results.
+pub fn optimize_accelerated_ws(
+    net: &Network,
+    sgp: &mut Sgp,
+    phi0: &Strategy,
+    cfg: &RunConfig,
+    evaluator: &dyn DenseBackend,
+    ws: &mut OptWorkspace,
+) -> Result<RunResult> {
     let mut phi = phi0.clone();
     let mut costs = Vec::new();
     let mut residuals = Vec::new();
     let start = Instant::now();
     for _ in 0..cfg.max_iters {
-        let st = sgp.step_dense(net, &mut phi, evaluator)?;
+        let st = sgp.step_dense_ws(net, &mut phi, evaluator, ws)?;
         record(&mut costs, &mut residuals, &st);
         if converged(&costs, cfg) {
             break;

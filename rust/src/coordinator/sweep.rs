@@ -37,9 +37,10 @@ use super::exec::grid::{Grid, GridCell, GridHasher};
 use super::exec::{pool, shard};
 use super::store::{self, FsStore, StoredRun, StrategyStore};
 use super::{
-    build_scenario_network, metrics, run_algorithm_with_backend, Algorithm, CellBackend,
+    build_scenario_network, metrics, run_algorithm_with_backend_warm_ws, Algorithm, CellBackend,
     RunConfig,
 };
+use crate::algo::OptWorkspace;
 
 pub use super::config::{parse_algorithms, parse_backends, parse_scenarios, parse_seeds, MAX_SEED};
 pub use super::dynamics::parse_schedules;
@@ -397,7 +398,18 @@ fn run_cell(
             Some(entry.phi),
         ),
         None => {
-            let out = run_algorithm_with_backend(&net, cell.algorithm, cell.backend, &spec.run)?;
+            // One workspace per cell (cells may run on different worker
+            // threads; a workspace is single-threaded state) — every
+            // iteration of the cell's run reuses the same arena.
+            let mut ws = OptWorkspace::new();
+            let out = run_algorithm_with_backend_warm_ws(
+                &net,
+                cell.algorithm,
+                cell.backend,
+                &spec.run,
+                None,
+                &mut ws,
+            )?;
             let iters_to_1pct = metrics::iters_to_1pct(&out.costs);
             if let (Some(s), Some(key), Some(phi)) = (store, key, out.phi.as_ref()) {
                 // best-effort insert. A saturated run is not stored: its

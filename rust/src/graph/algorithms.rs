@@ -144,20 +144,40 @@ pub fn strongly_connected(g: &DiGraph) -> bool {
     reach(true) == n && reach(false) == n
 }
 
-/// Kahn topological order over a subgraph given by an edge mask
-/// (`active[edge_id]`). Nodes not touching active edges still appear.
-/// Returns `None` if the active subgraph has a cycle.
-pub fn topo_order_masked(g: &DiGraph, active: &[bool]) -> Option<Vec<usize>> {
+/// Reusable scratch for the masked-topological-sort family so hot callers
+/// (flat marginal recomputation, the SGP loop-freedom re-checks) run
+/// allocation-free after warm-up.
+#[derive(Clone, Debug, Default)]
+pub struct TopoScratch {
+    indeg: Vec<usize>,
+    queue: Vec<usize>,
+}
+
+/// Allocation-free form of [`topo_order_masked`]: writes the order into
+/// `order` and returns `true` iff the active subgraph is acyclic. The
+/// traversal (Kahn with a LIFO stack seeded `0..n`) is identical to the
+/// allocating form, so downstream FP reductions see the same node order.
+pub fn topo_order_masked_into(
+    g: &DiGraph,
+    active: &[bool],
+    scratch: &mut TopoScratch,
+    order: &mut Vec<usize>,
+) -> bool {
     assert_eq!(active.len(), g.edge_count());
     let n = g.node_count();
-    let mut indeg = vec![0usize; n];
+    let indeg = &mut scratch.indeg;
+    indeg.clear();
+    indeg.resize(n, 0);
     for (eid, &on) in active.iter().enumerate() {
         if on {
             indeg[g.edge(eid).dst] += 1;
         }
     }
-    let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
-    let mut order = Vec::with_capacity(n);
+    let queue = &mut scratch.queue;
+    queue.clear();
+    queue.extend((0..n).filter(|&i| indeg[i] == 0));
+    order.clear();
+    order.reserve(n);
     while let Some(u) = queue.pop() {
         order.push(u);
         for &eid in g.out_edge_ids(u) {
@@ -170,7 +190,16 @@ pub fn topo_order_masked(g: &DiGraph, active: &[bool]) -> Option<Vec<usize>> {
             }
         }
     }
-    if order.len() == n {
+    order.len() == n
+}
+
+/// Kahn topological order over a subgraph given by an edge mask
+/// (`active[edge_id]`). Nodes not touching active edges still appear.
+/// Returns `None` if the active subgraph has a cycle.
+pub fn topo_order_masked(g: &DiGraph, active: &[bool]) -> Option<Vec<usize>> {
+    let mut scratch = TopoScratch::default();
+    let mut order = Vec::new();
+    if topo_order_masked_into(g, active, &mut scratch, &mut order) {
         Some(order)
     } else {
         None // cycle among the remaining nodes
@@ -182,14 +211,30 @@ pub fn has_cycle_masked(g: &DiGraph, active: &[bool]) -> bool {
     topo_order_masked(g, active).is_none()
 }
 
-/// Longest path length (hop count) ending analysis over a DAG given by the
-/// edge mask: `h[i]` = max hops from `i` along active edges to any sink.
-/// Returns `None` on cycles. This is the paper's `h±` statistic feeding the
-/// scaling matrices (16).
-pub fn longest_path_to_sink(g: &DiGraph, active: &[bool]) -> Option<Vec<usize>> {
-    let order = topo_order_masked(g, active)?;
-    let n = g.node_count();
-    let mut h = vec![0usize; n];
+/// Allocation-free cycle check reusing caller-owned scratch.
+pub fn has_cycle_masked_into(
+    g: &DiGraph,
+    active: &[bool],
+    scratch: &mut TopoScratch,
+    order: &mut Vec<usize>,
+) -> bool {
+    !topo_order_masked_into(g, active, scratch, order)
+}
+
+/// Allocation-free companion to [`longest_path_to_sink`] for callers that
+/// already hold a topological order of the *same* active mask: fills
+/// `h[i]` = max hops from `i` to a sink along active edges. `h.len()` must
+/// equal the node count.
+pub fn longest_path_to_sink_into(
+    g: &DiGraph,
+    active: &[bool],
+    order: &[usize],
+    h: &mut [usize],
+) {
+    debug_assert_eq!(h.len(), g.node_count());
+    for x in h.iter_mut() {
+        *x = 0;
+    }
     // process in reverse topological order so successors are final
     for &u in order.iter().rev() {
         for &eid in g.out_edge_ids(u) {
@@ -199,6 +244,16 @@ pub fn longest_path_to_sink(g: &DiGraph, active: &[bool]) -> Option<Vec<usize>> 
             }
         }
     }
+}
+
+/// Longest path length (hop count) ending analysis over a DAG given by the
+/// edge mask: `h[i]` = max hops from `i` along active edges to any sink.
+/// Returns `None` on cycles. This is the paper's `h±` statistic feeding the
+/// scaling matrices (16).
+pub fn longest_path_to_sink(g: &DiGraph, active: &[bool]) -> Option<Vec<usize>> {
+    let order = topo_order_masked(g, active)?;
+    let mut h = vec![0usize; g.node_count()];
+    longest_path_to_sink_into(g, active, &order, &mut h);
     Some(h)
 }
 

@@ -6,7 +6,7 @@
 //! no tolerance). Results follow the same pattern on the result plane with
 //! source term `a_m · g_i`.
 
-use crate::graph::algorithms::topo_order_masked;
+use crate::graph::algorithms::{topo_order_masked_into, TopoScratch};
 
 use super::network::Network;
 use super::strategy::Strategy;
@@ -81,6 +81,16 @@ pub fn compute_flows(net: &Network, phi: &Strategy) -> Result<FlowState, FlowErr
     Ok(fs)
 }
 
+/// Reusable scratch (active-edge mask + topological-sort buffers) for the
+/// allocation-free flow entry points [`compute_flows_with`] and
+/// [`recompute_task_flows_with`]. One per worker thread; never shared.
+#[derive(Clone, Debug, Default)]
+pub struct FlowScratch {
+    mask: Vec<bool>,
+    topo: TopoScratch,
+    order: Vec<usize>,
+}
+
 /// [`compute_flows`] into a caller-owned [`FlowState`] buffer (shaped by
 /// [`FlowState::zeroed`] for the same network). The arithmetic — loop
 /// order, accumulation order — is byte-for-byte the one `compute_flows`
@@ -93,6 +103,21 @@ pub fn compute_flows_into(
     net: &Network,
     phi: &Strategy,
     fs: &mut FlowState,
+) -> Result<(), FlowError> {
+    let mut scratch = FlowScratch::default();
+    compute_flows_with(net, phi, fs, &mut scratch)
+}
+
+/// [`compute_flows_into`] with caller-owned mask/topo scratch as well, so
+/// the whole flow computation is allocation-free after warm-up. Arithmetic
+/// (loop order, accumulation order) is identical to [`compute_flows`]:
+/// the mask and topological order come out of the same algorithms, only
+/// written into reused buffers.
+pub fn compute_flows_with(
+    net: &Network,
+    phi: &Strategy,
+    fs: &mut FlowState,
+    scratch: &mut FlowScratch,
 ) -> Result<(), FlowError> {
     let n = net.n();
     let e = net.e();
@@ -117,10 +142,12 @@ pub fn compute_flows_into(
         let a_m = net.a_of(s);
 
         // ---- data plane ----
-        let dmask = phi.data_active_mask(net, s);
-        let order = topo_order_masked(g_ref, &dmask)
-            .ok_or(FlowError::DataLoop { task: s })?;
-        for &i in &order {
+        phi.data_active_mask_into(net, s, &mut scratch.mask);
+        if !topo_order_masked_into(g_ref, &scratch.mask, &mut scratch.topo, &mut scratch.order)
+        {
+            return Err(FlowError::DataLoop { task: s });
+        }
+        for &i in &scratch.order {
             let t = net.input_rate[s][i]
                 + g_ref
                     .in_edge_ids(i)
@@ -136,10 +163,12 @@ pub fn compute_flows_into(
         }
 
         // ---- result plane ----
-        let rmask = phi.result_active_mask(net, s);
-        let order = topo_order_masked(g_ref, &rmask)
-            .ok_or(FlowError::ResultLoop { task: s })?;
-        for &i in &order {
+        phi.result_active_mask_into(net, s, &mut scratch.mask);
+        if !topo_order_masked_into(g_ref, &scratch.mask, &mut scratch.topo, &mut scratch.order)
+        {
+            return Err(FlowError::ResultLoop { task: s });
+        }
+        for &i in &scratch.order {
             let t = a_m * fs.g[s][i]
                 + g_ref
                     .in_edge_ids(i)
@@ -191,6 +220,19 @@ pub fn recompute_task_flows(
     fs: &mut FlowState,
     s: usize,
 ) -> Result<(), FlowError> {
+    let mut scratch = FlowScratch::default();
+    recompute_task_flows_with(net, phi, fs, s, &mut scratch)
+}
+
+/// [`recompute_task_flows`] with caller-owned mask/topo scratch — the
+/// allocation-free form used by the SGP workspace inner loop.
+pub fn recompute_task_flows_with(
+    net: &Network,
+    phi: &Strategy,
+    fs: &mut FlowState,
+    s: usize,
+    scratch: &mut FlowScratch,
+) -> Result<(), FlowError> {
     let g_ref = &net.graph;
     let n = net.n();
     let e = net.e();
@@ -214,9 +256,11 @@ pub fn recompute_task_flows(
     fs.g[s].fill(0.0);
 
     // recompute the task exactly as in compute_flows
-    let dmask = phi.data_active_mask(net, s);
-    let order = topo_order_masked(g_ref, &dmask).ok_or(FlowError::DataLoop { task: s })?;
-    for &i in &order {
+    phi.data_active_mask_into(net, s, &mut scratch.mask);
+    if !topo_order_masked_into(g_ref, &scratch.mask, &mut scratch.topo, &mut scratch.order) {
+        return Err(FlowError::DataLoop { task: s });
+    }
+    for &i in &scratch.order {
         let t = net.input_rate[s][i]
             + g_ref
                 .in_edge_ids(i)
@@ -229,9 +273,11 @@ pub fn recompute_task_flows(
             fs.f_minus[s][eid] = t * phi.data[s][i][k + 1];
         }
     }
-    let rmask = phi.result_active_mask(net, s);
-    let order = topo_order_masked(g_ref, &rmask).ok_or(FlowError::ResultLoop { task: s })?;
-    for &i in &order {
+    phi.result_active_mask_into(net, s, &mut scratch.mask);
+    if !topo_order_masked_into(g_ref, &scratch.mask, &mut scratch.topo, &mut scratch.order) {
+        return Err(FlowError::ResultLoop { task: s });
+    }
+    for &i in &scratch.order {
         let t = a_m * fs.g[s][i]
             + g_ref
                 .in_edge_ids(i)
@@ -268,6 +314,93 @@ pub fn refresh_total_cost(net: &Network, fs: &mut FlowState) -> f64 {
 }
 
 impl FlowState {
+    /// Overwrite this state's per-task planes for task `s` from `other`
+    /// (shapes must match). Snapshot/rollback primitive of the optimizer
+    /// workspace's double-buffered flow pair — no allocation.
+    pub fn copy_task_from(&mut self, other: &FlowState, s: usize) {
+        self.t_minus[s].copy_from_slice(&other.t_minus[s]);
+        self.t_plus[s].copy_from_slice(&other.t_plus[s]);
+        self.g[s].copy_from_slice(&other.g[s]);
+        self.f_minus[s].copy_from_slice(&other.f_minus[s]);
+        self.f_plus[s].copy_from_slice(&other.f_plus[s]);
+    }
+
+    /// Overwrite the aggregates (`link_flow`, `workload`, `total_cost`)
+    /// from `other` — the companion of [`FlowState::copy_task_from`].
+    pub fn copy_aggregates_from(&mut self, other: &FlowState) {
+        self.link_flow.copy_from_slice(&other.link_flow);
+        self.workload.copy_from_slice(&other.workload);
+        self.total_cost = other.total_cost;
+    }
+
+    /// Fast boolean form of [`FlowState::conservation_violations`]: same
+    /// checks, same tolerances, but returns at the first violation and
+    /// formats no `String`s. Hot-path callers that only test emptiness
+    /// should use this.
+    pub fn is_conserved(&self, net: &Network, phi: &Strategy) -> bool {
+        let g_ref = &net.graph;
+        let tol = 1e-8;
+        for s in 0..net.s() {
+            let a_m = net.a_of(s);
+            let dest = net.tasks[s].dest;
+            for i in 0..net.n() {
+                let arr: f64 = g_ref
+                    .in_edge_ids(i)
+                    .iter()
+                    .map(|&eid| self.f_minus[s][eid])
+                    .sum::<f64>()
+                    + net.input_rate[s][i];
+                if (arr - self.t_minus[s][i]).abs() > tol {
+                    return false;
+                }
+                if (self.g[s][i] - self.t_minus[s][i] * phi.data[s][i][0]).abs() > tol {
+                    return false;
+                }
+                for (k, &eid) in g_ref.out_edge_ids(i).iter().enumerate() {
+                    if (self.f_minus[s][eid] - self.t_minus[s][i] * phi.data[s][i][k + 1]).abs()
+                        > tol
+                    {
+                        return false;
+                    }
+                    if (self.f_plus[s][eid] - self.t_plus[s][i] * phi.result[s][i][k]).abs() > tol
+                    {
+                        return false;
+                    }
+                }
+                let arr_p: f64 = g_ref
+                    .in_edge_ids(i)
+                    .iter()
+                    .map(|&eid| self.f_plus[s][eid])
+                    .sum::<f64>()
+                    + a_m * self.g[s][i];
+                if (arr_p - self.t_plus[s][i]).abs() > tol {
+                    return false;
+                }
+                if i == dest {
+                    let fwd: f64 = g_ref
+                        .out_edge_ids(i)
+                        .iter()
+                        .map(|&eid| self.f_plus[s][eid])
+                        .sum();
+                    if fwd.abs() > tol {
+                        return false;
+                    }
+                }
+            }
+            let total_in: f64 = net.input_rate[s].iter().sum();
+            let total_g: f64 = self.g[s].iter().sum();
+            if (total_in - total_g).abs() > tol * (1.0 + total_in) {
+                return false;
+            }
+            let total_res: f64 = a_m * total_g;
+            let delivered = self.t_plus[s][dest];
+            if (total_res - delivered).abs() > tol * (1.0 + total_res) {
+                return false;
+            }
+        }
+        true
+    }
+
     /// Verify flow conservation (eqs 1–7) against the generating strategy;
     /// returns violations (used by property tests).
     pub fn conservation_violations(&self, net: &Network, phi: &Strategy) -> Vec<String> {
@@ -362,7 +495,7 @@ mod tests {
         assert!((fs.workload[0] - 1.0).abs() < 1e-12);
         // results (a=0.5) delivered to dest 3
         assert!((fs.t_plus[0][3] - 0.5).abs() < 1e-12);
-        assert!(fs.conservation_violations(&net, &phi).is_empty());
+        assert!(fs.is_conserved(&net, &phi));
         assert!(fs.total_cost.is_finite());
     }
 
@@ -378,7 +511,7 @@ mod tests {
         // data flowed over 2 hops
         let used: usize = fs.f_minus[0].iter().filter(|&&f| f > 1e-12).count();
         assert_eq!(used, 2);
-        assert!(fs.conservation_violations(&net, &phi).is_empty());
+        assert!(fs.is_conserved(&net, &phi));
     }
 
     #[test]
@@ -402,7 +535,7 @@ mod tests {
         assert!((fs.t_minus[0][2] - 0.5).abs() < 1e-12);
         assert!((fs.t_minus[0][3] - 1.0).abs() < 1e-12);
         assert!((fs.g[0][3] - 1.0).abs() < 1e-12);
-        assert!(fs.conservation_violations(&net, &phi).is_empty());
+        assert!(fs.is_conserved(&net, &phi));
     }
 
     #[test]
@@ -428,7 +561,7 @@ mod tests {
         assert!((fs.f_plus[0][e13] - 0.2).abs() < 1e-12);
         // total link flow on (1,3) = 0.6 data + 0.2 result
         assert!((fs.link_flow[e13] - 0.8).abs() < 1e-12);
-        assert!(fs.conservation_violations(&net, &phi).is_empty());
+        assert!(fs.is_conserved(&net, &phi));
     }
 
     #[test]
@@ -466,7 +599,7 @@ mod tests {
         assert!((fs.workload[1] - 0.75).abs() < 1e-12);
         // node 2 computes task-1 input 0.8 with w=1 -> workload 0.8
         assert!((fs.workload[2] - 0.8).abs() < 1e-12);
-        assert!(fs.conservation_violations(&net, &phi).is_empty());
+        assert!(fs.is_conserved(&net, &phi));
         // task 1 has a=2.0: results delivered at node 0 = 1.6
         assert!((fs.t_plus[1][0] - 1.6).abs() < 1e-12);
     }
@@ -510,6 +643,40 @@ mod tests {
         let fresh = compute_flows(&net, &good).unwrap();
         assert_eq!(scratch.link_flow, fresh.link_flow);
         assert_eq!(scratch.total_cost.to_bits(), fresh.total_cost.to_bits());
+    }
+
+    #[test]
+    fn is_conserved_agrees_with_violation_list() {
+        let net = diamond(true);
+        let phi = Strategy::local_compute_init(&net);
+        let mut fs = compute_flows(&net, &phi).unwrap();
+        assert!(fs.is_conserved(&net, &phi));
+        assert!(fs.conservation_violations(&net, &phi).is_empty());
+        // tamper with a flow entry: both forms must flag it
+        fs.t_minus[0][1] += 1.0;
+        assert!(!fs.is_conserved(&net, &phi));
+        assert!(!fs.conservation_violations(&net, &phi).is_empty());
+    }
+
+    #[test]
+    fn task_and_aggregate_copies_roundtrip() {
+        let net = line3();
+        let a = Strategy::local_compute_init(&net);
+        let b = Strategy::compute_at_dest_init(&net);
+        let fa = compute_flows(&net, &a).unwrap();
+        let mut shadow = compute_flows(&net, &b).unwrap();
+        for s in 0..net.s() {
+            shadow.copy_task_from(&fa, s);
+        }
+        shadow.copy_aggregates_from(&fa);
+        assert_eq!(shadow.t_minus, fa.t_minus);
+        assert_eq!(shadow.t_plus, fa.t_plus);
+        assert_eq!(shadow.g, fa.g);
+        assert_eq!(shadow.f_minus, fa.f_minus);
+        assert_eq!(shadow.f_plus, fa.f_plus);
+        assert_eq!(shadow.link_flow, fa.link_flow);
+        assert_eq!(shadow.workload, fa.workload);
+        assert_eq!(shadow.total_cost.to_bits(), fa.total_cost.to_bits());
     }
 
     #[test]

@@ -8,11 +8,32 @@
 //! paper's two-stage distributed broadcast and an integration test pins
 //! them to each other.
 
-use crate::graph::algorithms::{longest_path_to_sink, topo_order_masked};
+use crate::graph::algorithms::{
+    longest_path_to_sink_into, topo_order_masked_into, TopoScratch,
+};
 
 use super::flows::{FlowError, FlowState};
 use super::network::Network;
 use super::strategy::Strategy;
+
+/// Read-only view over marginal-cost state, implemented by both the nested
+/// [`Marginals`] and the flat [`MarginalScratch`], so the optimizer layers
+/// (blocked sets, scaling matrices, Theorem-1 residuals) are generic over
+/// the storage layout and bit-identical on either.
+pub trait MargView {
+    /// `D'_ij(F_ij)` per directed edge.
+    fn d_link(&self) -> &[f64];
+    /// `C'_i(G_i)` per node.
+    fn c_node(&self) -> &[f64];
+    /// `∂T/∂t⁺` row of task `s` (length `n`).
+    fn dt_plus_task(&self, s: usize) -> &[f64];
+    /// `∂T/∂r` row of task `s` (length `n`).
+    fn dt_r_task(&self, s: usize) -> &[f64];
+    /// `h⁺` row of task `s`.
+    fn h_plus_task(&self, s: usize) -> &[usize];
+    /// `h⁻` row of task `s`.
+    fn h_minus_task(&self, s: usize) -> &[usize];
+}
 
 /// Marginal-cost state for one `(network, strategy, flows)` triple.
 #[derive(Clone, Debug)]
@@ -32,6 +53,124 @@ pub struct Marginals {
     pub h_minus: Vec<Vec<usize>>,
 }
 
+/// Flat, row-major scratch arena for marginal computation: the nested
+/// `Vec<Vec<..>>` tables of [`Marginals`] become `len = s·n` buffers with
+/// stride-`n` indexing, plus the mask/topo scratch the recursions need, so
+/// [`compute_marginals_into`] performs zero heap allocation after warm-up.
+/// One per worker thread; never shared.
+#[derive(Clone, Debug, Default)]
+pub struct MarginalScratch {
+    d_link: Vec<f64>,
+    c_node: Vec<f64>,
+    /// Flat `[task][node]` with stride `n`: `dt_plus[s*n + i]`.
+    dt_plus: Vec<f64>,
+    dt_r: Vec<f64>,
+    h_plus: Vec<usize>,
+    h_minus: Vec<usize>,
+    /// Row stride (node count of the network last `ensure`d).
+    n: usize,
+    mask: Vec<bool>,
+    topo: TopoScratch,
+    order: Vec<usize>,
+}
+
+impl MarginalScratch {
+    pub fn new() -> MarginalScratch {
+        MarginalScratch::default()
+    }
+
+    /// Resize every buffer for `net`'s shape. Growing and shrinking are
+    /// both fine — a workspace may be reused across differently-shaped
+    /// networks; [`compute_marginals_into`] re-fills every row it reads.
+    pub fn ensure(&mut self, net: &Network) {
+        let n = net.n();
+        let e = net.e();
+        let s = net.s();
+        self.n = n;
+        self.d_link.resize(e, 0.0);
+        self.c_node.resize(n, 0.0);
+        self.dt_plus.resize(s * n, 0.0);
+        self.dt_r.resize(s * n, 0.0);
+        self.h_plus.resize(s * n, 0);
+        self.h_minus.resize(s * n, 0);
+        // shrink paths: resize only truncates, lengths must match exactly
+        self.d_link.truncate(e);
+        self.c_node.truncate(n);
+        self.dt_plus.truncate(s * n);
+        self.dt_r.truncate(s * n);
+        self.h_plus.truncate(s * n);
+        self.h_minus.truncate(s * n);
+    }
+
+    /// Unpack into the nested [`Marginals`] layout (pure copies — every
+    /// value is bitwise the one the flat computation produced).
+    pub fn to_marginals(&self) -> Marginals {
+        let n = self.n;
+        let unpack_f = |flat: &[f64]| -> Vec<Vec<f64>> {
+            if n == 0 {
+                return Vec::new();
+            }
+            flat.chunks(n).map(|row| row.to_vec()).collect()
+        };
+        let unpack_u = |flat: &[usize]| -> Vec<Vec<usize>> {
+            if n == 0 {
+                return Vec::new();
+            }
+            flat.chunks(n).map(|row| row.to_vec()).collect()
+        };
+        Marginals {
+            d_link: self.d_link.clone(),
+            c_node: self.c_node.clone(),
+            dt_plus: unpack_f(&self.dt_plus),
+            dt_r: unpack_f(&self.dt_r),
+            h_plus: unpack_u(&self.h_plus),
+            h_minus: unpack_u(&self.h_minus),
+        }
+    }
+}
+
+impl MargView for MarginalScratch {
+    fn d_link(&self) -> &[f64] {
+        &self.d_link
+    }
+    fn c_node(&self) -> &[f64] {
+        &self.c_node
+    }
+    fn dt_plus_task(&self, s: usize) -> &[f64] {
+        &self.dt_plus[s * self.n..(s + 1) * self.n]
+    }
+    fn dt_r_task(&self, s: usize) -> &[f64] {
+        &self.dt_r[s * self.n..(s + 1) * self.n]
+    }
+    fn h_plus_task(&self, s: usize) -> &[usize] {
+        &self.h_plus[s * self.n..(s + 1) * self.n]
+    }
+    fn h_minus_task(&self, s: usize) -> &[usize] {
+        &self.h_minus[s * self.n..(s + 1) * self.n]
+    }
+}
+
+impl MargView for Marginals {
+    fn d_link(&self) -> &[f64] {
+        &self.d_link
+    }
+    fn c_node(&self) -> &[f64] {
+        &self.c_node
+    }
+    fn dt_plus_task(&self, s: usize) -> &[f64] {
+        &self.dt_plus[s]
+    }
+    fn dt_r_task(&self, s: usize) -> &[f64] {
+        &self.dt_r[s]
+    }
+    fn h_plus_task(&self, s: usize) -> &[usize] {
+        &self.h_plus[s]
+    }
+    fn h_minus_task(&self, s: usize) -> &[usize] {
+        &self.h_minus[s]
+    }
+}
+
 /// Compute all marginal quantities. Fails only on routing loops (which
 /// [`super::flows::compute_flows`] would already have rejected).
 pub fn compute_marginals(
@@ -39,33 +178,64 @@ pub fn compute_marginals(
     phi: &Strategy,
     flows: &FlowState,
 ) -> Result<Marginals, FlowError> {
+    let mut scratch = MarginalScratch::new();
+    compute_marginals_into(net, phi, flows, &mut scratch)?;
+    Ok(scratch.to_marginals())
+}
+
+/// [`compute_marginals`] into a reusable flat scratch arena —
+/// allocation-free after warm-up. Arithmetic is identical to the nested
+/// form: the recursions walk the same deterministic topological order and
+/// accumulate in the same slot order, and each `dt` row is re-zeroed
+/// before its recursion so fractions in `(0, ACTIVE_EPS]` (excluded from
+/// the active mask but read with `> 0.0`) see exactly the zeros a fresh
+/// allocation would give them.
+pub fn compute_marginals_into(
+    net: &Network,
+    phi: &Strategy,
+    flows: &FlowState,
+    scratch: &mut MarginalScratch,
+) -> Result<(), FlowError> {
+    scratch.ensure(net);
     let n = net.n();
     let s_count = net.s();
     let g_ref = &net.graph;
 
-    let d_link: Vec<f64> = (0..net.e())
-        .map(|eid| net.link_cost[eid].deriv(flows.link_flow[eid]))
-        .collect();
-    let c_node: Vec<f64> = (0..n)
-        .map(|i| net.comp_cost[i].deriv(flows.workload[i]))
-        .collect();
+    let MarginalScratch {
+        d_link,
+        c_node,
+        dt_plus,
+        dt_r,
+        h_plus,
+        h_minus,
+        mask,
+        topo,
+        order,
+        ..
+    } = scratch;
 
-    let mut dt_plus = vec![vec![0.0; n]; s_count];
-    let mut dt_r = vec![vec![0.0; n]; s_count];
-    let mut h_plus = vec![vec![0usize; n]; s_count];
-    let mut h_minus = vec![vec![0usize; n]; s_count];
+    for (eid, d) in d_link.iter_mut().enumerate() {
+        *d = net.link_cost[eid].deriv(flows.link_flow[eid]);
+    }
+    for (i, c) in c_node.iter_mut().enumerate() {
+        *c = net.comp_cost[i].deriv(flows.workload[i]);
+    }
 
     for s in 0..s_count {
         let a_m = net.a_of(s);
         let ctype = net.tasks[s].ctype;
+        let base = s * n;
 
         // ---- result plane: ∂T/∂t⁺ via (12), destination pinned to 0 ----
-        let rmask = phi.result_active_mask(net, s);
-        let order =
-            topo_order_masked(g_ref, &rmask).ok_or(FlowError::ResultLoop { task: s })?;
+        phi.result_active_mask_into(net, s, mask);
+        if !topo_order_masked_into(g_ref, mask, topo, order) {
+            return Err(FlowError::ResultLoop { task: s });
+        }
+        let dtp = &mut dt_plus[base..base + n];
+        dtp.fill(0.0);
         for &i in order.iter().rev() {
             if i == net.tasks[s].dest {
-                dt_plus[s][i] = 0.0;
+                dtp[i] = 0.0;
                 continue;
             }
             let mut acc = 0.0;
@@ -73,71 +243,97 @@ pub fn compute_marginals(
                 let frac = phi.result[s][i][k];
                 if frac > 0.0 {
                     let j = g_ref.edge(eid).dst;
-                    acc += frac * (d_link[eid] + dt_plus[s][j]);
+                    acc += frac * (d_link[eid] + dtp[j]);
                 }
             }
-            dt_plus[s][i] = acc;
+            dtp[i] = acc;
         }
-        h_plus[s] = longest_path_to_sink(g_ref, &rmask)
-            .ok_or(FlowError::ResultLoop { task: s })?;
+        longest_path_to_sink_into(g_ref, mask, order, &mut h_plus[base..base + n]);
 
         // ---- data plane: ∂T/∂r via (11) ----
-        let dmask = phi.data_active_mask(net, s);
-        let order =
-            topo_order_masked(g_ref, &dmask).ok_or(FlowError::DataLoop { task: s })?;
+        phi.data_active_mask_into(net, s, mask);
+        if !topo_order_masked_into(g_ref, mask, topo, order) {
+            return Err(FlowError::DataLoop { task: s });
+        }
+        let dtp = &dt_plus[base..base + n];
+        let dtr = &mut dt_r[base..base + n];
+        dtr.fill(0.0);
         for &i in order.iter().rev() {
             let mut acc = phi.data[s][i][0]
-                * (net.comp_weight[i][ctype] * c_node[i] + a_m * dt_plus[s][i]);
+                * (net.comp_weight[i][ctype] * c_node[i] + a_m * dtp[i]);
             for (k, &eid) in g_ref.out_edge_ids(i).iter().enumerate() {
                 let frac = phi.data[s][i][k + 1];
                 if frac > 0.0 {
                     let j = g_ref.edge(eid).dst;
-                    acc += frac * (d_link[eid] + dt_r[s][j]);
+                    acc += frac * (d_link[eid] + dtr[j]);
                 }
             }
-            dt_r[s][i] = acc;
+            dtr[i] = acc;
         }
-        h_minus[s] = longest_path_to_sink(g_ref, &dmask)
-            .ok_or(FlowError::DataLoop { task: s })?;
+        longest_path_to_sink_into(g_ref, mask, order, &mut h_minus[base..base + n]);
     }
+    Ok(())
+}
 
-    Ok(Marginals {
-        d_link,
-        c_node,
-        dt_plus,
-        dt_r,
-        h_plus,
-        h_minus,
-    })
+/// Theorem-1 data-plane marginals `δ⁻_i(d,m)` written into a caller-owned
+/// buffer: slot 0 is the local-computation entry `w_im C'_i + a_m ∂T/∂t⁺_i`,
+/// slot `k+1` is `D'_ij + ∂T/∂r_j` for the k-th out-edge (eq. 13).
+/// Allocation-free once `out`'s capacity covers the out-degree.
+pub fn delta_minus_into<M: MargView + ?Sized>(
+    marg: &M,
+    net: &Network,
+    s: usize,
+    i: usize,
+    out: &mut Vec<f64>,
+) {
+    let ctype = net.tasks[s].ctype;
+    let a_m = net.a_of(s);
+    let g_ref = &net.graph;
+    out.clear();
+    out.reserve(g_ref.out_degree(i) + 1);
+    out.push(net.comp_weight[i][ctype] * marg.c_node()[i] + a_m * marg.dt_plus_task(s)[i]);
+    let d_link = marg.d_link();
+    let dt_r = marg.dt_r_task(s);
+    for &eid in g_ref.out_edge_ids(i) {
+        let j = g_ref.edge(eid).dst;
+        out.push(d_link[eid] + dt_r[j]);
+    }
+}
+
+/// Theorem-1 result-plane marginals `δ⁺_i(d,m)` into a caller-owned buffer:
+/// slot `k` is `D'_ij + ∂T/∂t⁺_j` for the k-th out-edge (eq. 13).
+pub fn delta_plus_into<M: MargView + ?Sized>(
+    marg: &M,
+    net: &Network,
+    s: usize,
+    i: usize,
+    out: &mut Vec<f64>,
+) {
+    let g_ref = &net.graph;
+    out.clear();
+    out.reserve(g_ref.out_degree(i));
+    let d_link = marg.d_link();
+    let dt_plus = marg.dt_plus_task(s);
+    for &eid in g_ref.out_edge_ids(i) {
+        let j = g_ref.edge(eid).dst;
+        out.push(d_link[eid] + dt_plus[j]);
+    }
 }
 
 impl Marginals {
-    /// Theorem-1 data-plane marginals `δ⁻_i(d,m)` for node `i`, task `s`:
-    /// slot 0 is the local-computation entry
-    /// `w_im C'_i + a_m ∂T/∂t⁺_i`, slot `k+1` is
-    /// `D'_ij + ∂T/∂r_j` for the k-th out-edge (eq. 13).
+    /// Theorem-1 data-plane marginals `δ⁻_i(d,m)` for node `i`, task `s`
+    /// (see [`delta_minus_into`]).
     pub fn delta_minus(&self, net: &Network, s: usize, i: usize) -> Vec<f64> {
-        let ctype = net.tasks[s].ctype;
-        let a_m = net.a_of(s);
-        let g_ref = &net.graph;
-        let mut out = Vec::with_capacity(g_ref.out_degree(i) + 1);
-        out.push(net.comp_weight[i][ctype] * self.c_node[i] + a_m * self.dt_plus[s][i]);
-        for &eid in g_ref.out_edge_ids(i) {
-            let j = g_ref.edge(eid).dst;
-            out.push(self.d_link[eid] + self.dt_r[s][j]);
-        }
+        let mut out = Vec::new();
+        delta_minus_into(self, net, s, i, &mut out);
         out
     }
 
     /// Theorem-1 result-plane marginals `δ⁺_i(d,m)`: slot `k` is
     /// `D'_ij + ∂T/∂t⁺_j` for the k-th out-edge (eq. 13).
     pub fn delta_plus(&self, net: &Network, s: usize, i: usize) -> Vec<f64> {
-        let g_ref = &net.graph;
-        let mut out = Vec::with_capacity(g_ref.out_degree(i));
-        for &eid in g_ref.out_edge_ids(i) {
-            let j = g_ref.edge(eid).dst;
-            out.push(self.d_link[eid] + self.dt_plus[s][j]);
-        }
+        let mut out = Vec::new();
+        delta_plus_into(self, net, s, i, &mut out);
         out
     }
 
@@ -174,22 +370,39 @@ impl Marginals {
 /// `max over (s,i) active slots of φ · (δ − min_k δ_k)`.
 /// Zero (≤ tol) ⇔ the sufficient optimality conditions hold ⇔ `φ` is
 /// globally optimal.
-pub fn theorem1_residual(net: &Network, phi: &Strategy, marg: &Marginals) -> f64 {
+pub fn theorem1_residual<M: MargView + ?Sized>(
+    net: &Network,
+    phi: &Strategy,
+    marg: &M,
+) -> f64 {
+    let mut buf = Vec::new();
+    theorem1_residual_with(net, phi, marg, &mut buf)
+}
+
+/// [`theorem1_residual`] with a caller-owned δ buffer (allocation-free
+/// after warm-up). `δ⁻` is fully consumed before `δ⁺` overwrites the
+/// buffer, so one buffer serves both planes with identical arithmetic.
+pub fn theorem1_residual_with<M: MargView + ?Sized>(
+    net: &Network,
+    phi: &Strategy,
+    marg: &M,
+    buf: &mut Vec<f64>,
+) -> f64 {
     let mut worst = 0.0f64;
     for s in 0..net.s() {
         for i in 0..net.n() {
-            let dm = marg.delta_minus(net, s, i);
-            let dmin = dm.iter().cloned().fold(f64::INFINITY, f64::min);
-            for (slot, &d) in dm.iter().enumerate() {
+            delta_minus_into(marg, net, s, i, buf);
+            let dmin = buf.iter().cloned().fold(f64::INFINITY, f64::min);
+            for (slot, &d) in buf.iter().enumerate() {
                 let frac = phi.data[s][i][slot];
                 if frac > 0.0 {
                     worst = worst.max(frac * (d - dmin));
                 }
             }
             if i != net.tasks[s].dest && net.graph.out_degree(i) > 0 {
-                let dp = marg.delta_plus(net, s, i);
-                let pmin = dp.iter().cloned().fold(f64::INFINITY, f64::min);
-                for (slot, &d) in dp.iter().enumerate() {
+                delta_plus_into(marg, net, s, i, buf);
+                let pmin = buf.iter().cloned().fold(f64::INFINITY, f64::min);
+                for (slot, &d) in buf.iter().enumerate() {
                     let frac = phi.result[s][i][slot];
                     if frac > 0.0 {
                         worst = worst.max(frac * (d - pmin));
@@ -321,11 +534,29 @@ mod tests {
         phi.result[0][0][r2] = 1.0;
         // node 1 results to 3 (already from compute_at_dest_init), data too
         let (fs, m) = setup(&net, &phi);
-        assert!(fs.conservation_violations(&net, &phi).is_empty());
+        assert!(fs.is_conserved(&net, &phi));
+
+        // the flat `_into` form must reproduce the nested tables bitwise,
+        // so the finite-difference comparisons below cover both paths
+        let mut scratch = MarginalScratch::new();
+        compute_marginals_into(&net, &phi, &fs, &mut scratch).unwrap();
+        for s in 0..net.s() {
+            assert_eq!(scratch.dt_plus_task(s), m.dt_plus[s].as_slice());
+            assert_eq!(scratch.dt_r_task(s), m.dt_r[s].as_slice());
+            assert_eq!(scratch.h_plus_task(s), m.h_plus[s].as_slice());
+            assert_eq!(scratch.h_minus_task(s), m.h_minus[s].as_slice());
+        }
+        assert_eq!(scratch.d_link(), m.d_link.as_slice());
+        assert_eq!(scratch.c_node(), m.c_node.as_slice());
 
         let eps = 1e-6;
-        // data-plane slots of node 0
+        // data-plane slots of node 0, analytic δ⁻ through the flat view
+        let mut dm_flat = Vec::new();
+        delta_minus_into(&scratch, &net, 0, 0, &mut dm_flat);
         let analytic = m.dphi_minus(&net, &fs, 0, 0);
+        let flat_scaled: Vec<f64> =
+            dm_flat.iter().map(|d| fs.t_minus[0][0] * d).collect();
+        assert_eq!(flat_scaled, analytic);
         for slot in 0..analytic.len() {
             let mut bumped = phi.clone();
             bumped.data[0][0][slot] += eps;
@@ -339,8 +570,13 @@ mod tests {
                 numeric
             );
         }
-        // result-plane slots of node 1
+        // result-plane slots of node 1, again checked through the flat view
+        let mut dp_flat = Vec::new();
+        delta_plus_into(&scratch, &net, 0, 1, &mut dp_flat);
         let analytic = m.dphi_plus(&net, &fs, 0, 1);
+        let flat_scaled: Vec<f64> =
+            dp_flat.iter().map(|d| fs.t_plus[0][1] * d).collect();
+        assert_eq!(flat_scaled, analytic);
         for slot in 0..analytic.len() {
             let mut bumped = phi.clone();
             bumped.result[0][1][slot] += eps;

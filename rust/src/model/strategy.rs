@@ -116,7 +116,16 @@ impl Strategy {
     /// Per-task edge mask of the **data** plane: `active[e]` iff
     /// `φ⁻_{src(e), dst(e)}(s) > ε`.
     pub fn data_active_mask(&self, net: &Network, s: usize) -> Vec<bool> {
-        let mut mask = vec![false; net.e()];
+        let mut mask = Vec::new();
+        self.data_active_mask_into(net, s, &mut mask);
+        mask
+    }
+
+    /// Allocation-free form of [`Strategy::data_active_mask`]: writes the
+    /// mask into a caller-owned buffer (resized to `net.e()`).
+    pub fn data_active_mask_into(&self, net: &Network, s: usize, mask: &mut Vec<bool>) {
+        mask.clear();
+        mask.resize(net.e(), false);
         for i in 0..net.n() {
             for (k, &eid) in net.graph.out_edge_ids(i).iter().enumerate() {
                 if self.data[s][i][k + 1] > ACTIVE_EPS {
@@ -124,12 +133,19 @@ impl Strategy {
                 }
             }
         }
-        mask
     }
 
     /// Per-task edge mask of the **result** plane.
     pub fn result_active_mask(&self, net: &Network, s: usize) -> Vec<bool> {
-        let mut mask = vec![false; net.e()];
+        let mut mask = Vec::new();
+        self.result_active_mask_into(net, s, &mut mask);
+        mask
+    }
+
+    /// Allocation-free form of [`Strategy::result_active_mask`].
+    pub fn result_active_mask_into(&self, net: &Network, s: usize, mask: &mut Vec<bool>) {
+        mask.clear();
+        mask.resize(net.e(), false);
         for i in 0..net.n() {
             for (k, &eid) in net.graph.out_edge_ids(i).iter().enumerate() {
                 if self.result[s][i][k] > ACTIVE_EPS {
@@ -137,7 +153,6 @@ impl Strategy {
                 }
             }
         }
-        mask
     }
 
     /// Loop-freedom: no data loop and no result loop for any task (§IV).

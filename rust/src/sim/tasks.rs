@@ -58,7 +58,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::algo::Sgp;
+use crate::algo::{OptWorkspace, Sgp};
 use crate::model::cost::CostFn;
 use crate::model::network::Network;
 use crate::model::strategy::Strategy;
@@ -245,6 +245,10 @@ enum Ev {
 struct ReoptState {
     cfg: ReoptConfig,
     sgp: Sgp,
+    /// Persistent optimizer scratch arena: re-optimization ticks fire on
+    /// the hot simulation path, so the single-node updates reuse one
+    /// workspace instead of reallocating per tick.
+    ws: OptWorkspace,
     /// Round-robin node cursor — each tick updates one node's data and
     /// result rows for every task, the paper's asynchronous schedule.
     cursor: usize,
@@ -333,6 +337,7 @@ pub(crate) fn simulate_with(
             Some(ReoptState {
                 cfg: *rc,
                 sgp: Sgp::new(),
+                ws: OptWorkspace::new(),
                 cursor: 0,
                 rates: plan.epochs[0].net.input_rate.clone(),
                 window: vec![vec![0; n]; s],
@@ -662,10 +667,14 @@ impl Engine<'_> {
         r.cursor += 1;
         for task in 0..est.s() {
             for plane_result in [false, true] {
-                match r
-                    .sgp
-                    .update_single_node(&est, &mut self.phis[epoch], node, task, plane_result)
-                {
+                match r.sgp.update_single_node_ws(
+                    &est,
+                    &mut self.phis[epoch],
+                    node,
+                    task,
+                    plane_result,
+                    &mut r.ws,
+                ) {
                     Ok(_) => self.telemetry.reopt_updates += 1,
                     Err(_) => self.telemetry.reopt_skipped += 1,
                 }

@@ -1,0 +1,313 @@
+//! The workspace-arena determinism contract (PR 10).
+//!
+//! The allocation-free hot path (`step_ws`, `step_dense_ws`,
+//! `update_single_node_ws`, `compute_marginals_into`) must be **bitwise
+//! identical** to the legacy allocating entry points: same FP op order,
+//! only the storage changed. These tests pin that contract across
+//! scenarios and seeds, exercise one workspace reused across
+//! differently-shaped networks (grow and shrink), and — via a counting
+//! global allocator — certify that the steady-state sparse sweep performs
+//! zero heap allocations once warm.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use cecflow::algo::{Gp, OptWorkspace, Optimizer, Sgp};
+use cecflow::coordinator::{build_scenario_network, optimize, optimize_ws, RunConfig};
+use cecflow::model::flows::compute_flows;
+use cecflow::model::marginals::{compute_marginals, compute_marginals_into, MarginalScratch};
+use cecflow::model::network::Network;
+use cecflow::model::strategy::Strategy;
+use cecflow::runtime::NativeBackend;
+use cecflow::util::rng::Pcg;
+
+// ---- counting allocator -----------------------------------------------
+//
+// Thread-local so the count only sees this test thread (the harness runs
+// tests on sibling threads). Counts every alloc/realloc/alloc_zeroed;
+// frees are irrelevant to the contract.
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(p, l, n)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+// ---- helpers ----------------------------------------------------------
+
+/// Three differently-shaped scenarios (node/edge/task counts all differ)
+/// so a single workspace reused across them must both grow and shrink.
+const SCENARIOS: [&str; 3] = ["abilene-small", "connected-er", "fog"];
+
+fn nets(seed: u64) -> Vec<Network> {
+    SCENARIOS
+        .iter()
+        .map(|s| build_scenario_network(s, seed, 1.0).unwrap())
+        .collect()
+}
+
+fn assert_phi_eq(a: &Strategy, b: &Strategy, ctx: &str) {
+    assert_eq!(a.data.len(), b.data.len(), "{ctx}: task count");
+    for s in 0..a.data.len() {
+        for i in 0..a.data[s].len() {
+            for (x, y) in a.data[s][i].iter().zip(&b.data[s][i]) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: data[{s}][{i}]");
+            }
+            for (x, y) in a.result[s][i].iter().zip(&b.result[s][i]) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: result[{s}][{i}]");
+            }
+        }
+    }
+}
+
+// ---- marginals --------------------------------------------------------
+
+/// `compute_marginals_into` on one scratch reused across every scenario
+/// (grow + shrink) reproduces the nested tables bitwise.
+#[test]
+fn marginals_into_matches_nested_across_scenarios() {
+    let mut scratch = MarginalScratch::new();
+    for seed in [1u64, 7] {
+        // walk big → small → big so the reuse path shrinks and regrows
+        let mut all = nets(seed);
+        let rev: Vec<Network> = all.iter().rev().cloned().collect();
+        all.extend(rev);
+        for (k, net) in all.iter().enumerate() {
+            let phi = Strategy::local_compute_init(net);
+            let flows = compute_flows(net, &phi).unwrap();
+            let nested = compute_marginals(net, &phi, &flows).unwrap();
+            compute_marginals_into(net, &phi, &flows, &mut scratch).unwrap();
+            let flat = scratch.to_marginals();
+            let ctx = format!("seed {seed} net {k}");
+            assert_eq!(flat.d_link, nested.d_link, "{ctx}: d_link");
+            assert_eq!(flat.c_node, nested.c_node, "{ctx}: c_node");
+            assert_eq!(flat.dt_plus, nested.dt_plus, "{ctx}: dt_plus");
+            assert_eq!(flat.dt_r, nested.dt_r, "{ctx}: dt_r");
+            assert_eq!(flat.h_plus, nested.h_plus, "{ctx}: h_plus");
+            assert_eq!(flat.h_minus, nested.h_minus, "{ctx}: h_minus");
+        }
+    }
+}
+
+// ---- sparse sweep parity ----------------------------------------------
+
+/// `Sgp::step_ws` with one workspace persisted across iterations AND
+/// across differently-shaped networks matches the legacy allocating
+/// `step` trajectory bitwise: costs, residuals, retry/trust bookkeeping,
+/// and the final strategy.
+#[test]
+fn sparse_step_parity_across_scenarios_and_seeds() {
+    for seed in [1u64, 3, 11] {
+        let mut ws = OptWorkspace::new(); // shared across all scenarios
+        for net in &nets(seed) {
+            let phi0 = Strategy::local_compute_init(net);
+
+            let mut phi_legacy = phi0.clone();
+            let mut sgp_legacy = Sgp::new();
+            let mut phi_ws = phi0.clone();
+            let mut sgp_ws = Sgp::new();
+
+            for it in 0..15 {
+                let a = sgp_legacy.step(net, &mut phi_legacy).unwrap();
+                let b = sgp_ws.step_ws(net, &mut phi_ws, &mut ws).unwrap();
+                let ctx = format!("seed {seed} iter {it}");
+                assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits(), "{ctx}: cost");
+                assert_eq!(a.residual.to_bits(), b.residual.to_bits(), "{ctx}: residual");
+            }
+            assert_eq!(sgp_legacy.retries, sgp_ws.retries, "retry ladders diverged");
+            assert_phi_eq(&phi_legacy, &phi_ws, &format!("seed {seed}"));
+        }
+    }
+}
+
+/// Same contract for the GP baseline's workspace route.
+#[test]
+fn gp_step_parity() {
+    let net = build_scenario_network("abilene-small", 2, 1.0).unwrap();
+    let phi0 = Strategy::local_compute_init(&net);
+    let mut ws = OptWorkspace::new();
+    let mut phi_legacy = phi0.clone();
+    let mut gp_legacy = Gp::new(1.0);
+    let mut phi_ws = phi0;
+    let mut gp_ws = Gp::new(1.0);
+    for it in 0..15 {
+        let a = gp_legacy.step(&net, &mut phi_legacy).unwrap();
+        let b = gp_ws.step_ws(&net, &mut phi_ws, &mut ws).unwrap();
+        assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits(), "iter {it}: cost");
+        assert_eq!(a.residual.to_bits(), b.residual.to_bits(), "iter {it}: residual");
+    }
+    assert_phi_eq(&phi_legacy, &phi_ws, "gp");
+}
+
+/// The runner wrappers are the same contract one level up: a full
+/// `optimize` run (fresh throwaway workspace) equals `optimize_ws` with a
+/// pre-warmed, previously-used workspace.
+#[test]
+fn optimize_ws_matches_optimize() {
+    let net = build_scenario_network("connected-er", 5, 1.0).unwrap();
+    let phi0 = Strategy::local_compute_init(&net);
+    let cfg = RunConfig::quick();
+
+    let cold = optimize(&net, &mut Sgp::new(), &phi0, &cfg).unwrap();
+
+    // dirty the workspace on a different network first
+    let other = build_scenario_network("fog", 1, 1.0).unwrap();
+    let mut ws = OptWorkspace::new();
+    let _ = optimize_ws(
+        &other,
+        &mut Sgp::new(),
+        &Strategy::local_compute_init(&other),
+        &cfg,
+        &mut ws,
+    )
+    .unwrap();
+
+    let warm = optimize_ws(&net, &mut Sgp::new(), &phi0, &cfg, &mut ws).unwrap();
+    assert_eq!(cold.costs.len(), warm.costs.len(), "iteration counts");
+    for (k, (a, b)) in cold.costs.iter().zip(&warm.costs).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "iter {k}");
+    }
+    assert_phi_eq(&cold.phi, &warm.phi, "runner");
+}
+
+// ---- dense ladder parity ----------------------------------------------
+
+/// `step_dense_ws` with persistent pooled candidates matches the legacy
+/// `step_dense` bitwise through the native dense backend.
+#[test]
+fn dense_step_parity() {
+    for seed in [1u64, 4] {
+        let net = build_scenario_network("abilene-small", seed, 1.0).unwrap();
+        let phi0 = Strategy::local_compute_init(&net);
+        let mut ws = OptWorkspace::new();
+        let mut phi_legacy = phi0.clone();
+        let mut sgp_legacy = Sgp::new();
+        let mut phi_ws = phi0;
+        let mut sgp_ws = Sgp::new();
+        for it in 0..12 {
+            let a = sgp_legacy
+                .step_dense(&net, &mut phi_legacy, &NativeBackend)
+                .unwrap();
+            let b = sgp_ws
+                .step_dense_ws(&net, &mut phi_ws, &NativeBackend, &mut ws)
+                .unwrap();
+            let ctx = format!("seed {seed} iter {it}");
+            assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits(), "{ctx}: cost");
+            assert_eq!(a.residual.to_bits(), b.residual.to_bits(), "{ctx}: residual");
+        }
+        assert_eq!(sgp_legacy.rollbacks, sgp_ws.rollbacks, "rollback tallies");
+        assert_phi_eq(&phi_legacy, &phi_ws, &format!("dense seed {seed}"));
+    }
+}
+
+// ---- asynchronous single-block parity ----------------------------------
+
+/// `update_single_node_ws` under a randomized (node, task, plane)
+/// schedule matches the legacy allocating form bitwise, with the
+/// workspace carried across every update (the `sim::tasks` re-opt path).
+#[test]
+fn update_single_node_parity() {
+    for seed in [2u64, 9] {
+        let net = build_scenario_network("abilene-small", seed, 1.0).unwrap();
+        let phi0 = Strategy::local_compute_init(&net);
+        let mut ws = OptWorkspace::new();
+        let mut phi_legacy = phi0.clone();
+        let mut sgp_legacy = Sgp::new();
+        let mut phi_ws = phi0;
+        let mut sgp_ws = Sgp::new();
+        let mut rng = Pcg::new(seed);
+        for k in 0..200 {
+            let node = rng.below(net.n());
+            let task = rng.below(net.s());
+            let plane_result = rng.chance(0.5);
+            let a = sgp_legacy
+                .update_single_node(&net, &mut phi_legacy, node, task, plane_result)
+                .unwrap();
+            let b = sgp_ws
+                .update_single_node_ws(&net, &mut phi_ws, node, task, plane_result, &mut ws)
+                .unwrap();
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "seed {seed} update {k} (node {node}, task {task}, result {plane_result})"
+            );
+        }
+        assert_phi_eq(&phi_legacy, &phi_ws, &format!("async seed {seed}"));
+    }
+}
+
+// ---- the zero-allocation certificate -----------------------------------
+
+/// Steady-state `step_ws` performs zero heap allocations: after a
+/// warm-up sweep sizes every buffer (rows are saved per node, so one full
+/// Gauss–Seidel sweep touches the max row width), further sweeps must
+/// not allocate at all. This is the acceptance criterion of the arena
+/// design, checked mechanically rather than by code audit alone.
+#[test]
+fn steady_state_step_ws_is_allocation_free() {
+    let net = build_scenario_network("abilene-small", 1, 1.0).unwrap();
+    let phi0 = Strategy::local_compute_init(&net);
+    let mut sgp = Sgp::new();
+    let mut phi = phi0;
+    let mut ws = OptWorkspace::new();
+
+    // warm-up: three full sweeps (the first sizes the arena, the next two
+    // cover retry-ladder depths and acceptance bookkeeping)
+    for _ in 0..3 {
+        sgp.step_ws(&net, &mut phi, &mut ws).unwrap();
+    }
+
+    let before = allocs();
+    for _ in 0..5 {
+        sgp.step_ws(&net, &mut phi, &mut ws).unwrap();
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state sparse sweep allocated {} times",
+        after - before
+    );
+}
+
+/// The marginal broadcast alone is likewise allocation-free on a warm
+/// scratch.
+#[test]
+fn steady_state_marginals_into_is_allocation_free() {
+    let net = build_scenario_network("abilene-small", 1, 1.0).unwrap();
+    let phi = Strategy::local_compute_init(&net);
+    let flows = compute_flows(&net, &phi).unwrap();
+    let mut scratch = MarginalScratch::new();
+    compute_marginals_into(&net, &phi, &flows, &mut scratch).unwrap();
+
+    let before = allocs();
+    for _ in 0..10 {
+        compute_marginals_into(&net, &phi, &flows, &mut scratch).unwrap();
+    }
+    assert_eq!(allocs() - before, 0, "warm marginal broadcast allocated");
+}
